@@ -1,0 +1,58 @@
+//! End-to-end driver (the EXPERIMENTS.md headline run): proves all three
+//! layers compose on a real workload.
+//!
+//! 1. **Golden cross-check** — the cycle simulator's functional outputs
+//!    (Rust pipeline + DIMC tile executing the custom instruction stream)
+//!    against the AOT-compiled JAX/Pallas golden model executed through
+//!    PJRT (`artifacts/*.hlo.txt`, built once by `make artifacts`).
+//! 2. **Full ResNet-50 inference simulation** on both the DIMC-enhanced
+//!    and the baseline RVV core, layer by layer, reporting the paper's
+//!    metrics (Fig. 5 GOPS, Fig. 7 speedup/ANS) and the network totals.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example resnet50_e2e
+//! ```
+
+use dimc_rvv::coordinator::figures::resnet50_rows;
+use dimc_rvv::coordinator::verify;
+use dimc_rvv::metrics::report::summarize;
+
+fn main() {
+    // --- [1] three-layer composition proof ---
+    println!("[1/2] golden cross-check (simulator vs JAX/Pallas via PJRT)");
+    match verify::verify_all(&[1, 2, 3]) {
+        Ok(reports) => {
+            for r in &reports {
+                assert!(r.ok(), "{} mismatched {} of {} outputs", r.layer, r.mismatches, r.outputs);
+                println!("  {:<12} {:>4}/{:<4} outputs match ({} sim cycles)",
+                         r.layer, r.outputs - r.mismatches, r.outputs, r.sim_cycles);
+            }
+            println!("  all {} cross-checks passed", reports.len());
+        }
+        Err(e) => {
+            eprintln!("  SKIPPED ({e}) — run `make artifacts` for the full check");
+        }
+    }
+
+    // --- [2] full-network simulation ---
+    println!("\n[2/2] ResNet-50, all 53 conv layers + fc, both engines");
+    let rows = resnet50_rows().expect("simulation");
+    println!("{:<14} {:>8} {:>9} {:>8}", "layer", "GOPS", "speedup", "ANS");
+    for r in &rows {
+        println!("{:<14} {:>8.1} {:>8.1}x {:>7.1}x", r.name, r.gops, r.speedup, r.ans);
+    }
+    let s = summarize(&rows);
+    let dimc: u64 = rows.iter().map(|r| r.dimc_cycles).sum();
+    let base: u64 = rows.iter().map(|r| r.baseline_cycles).sum();
+    let ops: u64 = rows.iter().map(|r| r.ops).sum();
+    println!("\nnetwork totals @500 MHz:");
+    println!("  ops          : {:.2} G", ops as f64 / 1e9);
+    println!("  DIMC-RVV     : {:>13} cycles = {:>8.2} ms  ({:.1} GOPS sustained)",
+             dimc, dimc as f64 / 5e5, ops as f64 / (dimc as f64 / 5e8) / 1e9);
+    println!("  baseline RVV : {:>13} cycles = {:>8.2} ms", base, base as f64 / 5e5);
+    println!("  network speedup: {:.0}x", base as f64 / dimc as f64);
+    println!("\nheadline vs paper:");
+    println!("  peak GOPS    : {:>6.1}  (paper: 137)", s.peak_gops);
+    println!("  peak speedup : {:>5.0}x  (paper: 217x)", s.peak_speedup);
+    println!("  ANS          : up to {:.0}x (paper: >50x)", s.peak_ans);
+}

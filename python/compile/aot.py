@@ -1,0 +1,94 @@
+"""AOT entry point: lower the golden models to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (behind the Rust ``xla`` crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Artifacts (shapes match `rust/src/coordinator/verify.rs`):
+
+* ``conv_golden.hlo.txt``      — conv 2x2, 16->8 ch, 5x5 input, shift 4
+* ``gemm_golden.hlo.txt``      — fc 64 -> 10, shift 4
+* ``dimc_row_golden.hlo.txt``  — one DC.P row dot (256 lanes)
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (or just
+``make artifacts`` from the repo root — a no-op when up to date).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The quickstart verification layer: conv 16ich -> 8och, 2x2, on 5x5.
+CONV_SPEC = dict(h=5, w=5, ich=16, och=8, kh=2, kw=2, stride=1, pad=0, shift=4)
+# The FC verification layer.
+GEMM_SPEC = dict(k=64, och=10, shift=4)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_conv():
+    s = CONV_SPEC
+    x = jax.ShapeDtypeStruct((s["h"], s["w"], s["ich"]), jnp.int32)
+    w = jax.ShapeDtypeStruct((s["och"], s["kh"], s["kw"], s["ich"]), jnp.int32)
+
+    def fn(x, w):
+        return (model.conv_golden(x, w, stride=s["stride"], pad=s["pad"], shift=s["shift"]),)
+
+    return jax.jit(fn).lower(x, w)
+
+
+def lower_gemm():
+    s = GEMM_SPEC
+    x = jax.ShapeDtypeStruct((s["k"],), jnp.int32)
+    w = jax.ShapeDtypeStruct((s["och"], s["k"]), jnp.int32)
+
+    def fn(x, w):
+        return (model.gemm_golden(x, w, shift=s["shift"]),)
+
+    return jax.jit(fn).lower(x, w)
+
+
+def lower_row():
+    v = jax.ShapeDtypeStruct((256,), jnp.int32)
+    p = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(ibuf, row, psum):
+        return (model.row_golden(ibuf, row, psum),)
+
+    return jax.jit(fn).lower(v, v, p)
+
+
+ARTIFACTS = {
+    "conv_golden.hlo.txt": lower_conv,
+    "gemm_golden.hlo.txt": lower_gemm,
+    "dimc_row_golden.hlo.txt": lower_row,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lower in ARTIFACTS.items():
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>8} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Layer-1 Pallas kernel: the DIMC tile's MAC array as a TPU-style kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's compute
+hot-spot is an SRAM MAC array, not a GPU kernel, but the same mapping rules
+apply when expressing it for the MXU:
+
+* the 1024-bit DIMC row (256 x 4-bit operands) becomes a K-dimension block
+  of 256 lanes resident in VMEM — the software analogue of one row-tile;
+* the 32-row bank becomes the N-dimension block (<= 32 output channels per
+  group, exactly the DIMC kernel-capacity constraint);
+* the sequential per-row accumulation pipeline becomes the innermost grid
+  dimension, revisiting the output block with 24-bit wrapped accumulation
+  (DC.P partial-sum chaining);
+* DL.I sector loads become the BlockSpec HBM->VMEM schedule.
+
+The kernel MUST run with ``interpret=True`` on this CPU image: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+VMEM budget (estimated for a real TPU, DESIGN.md §Perf): one patch block
+(8 x 256 x 4B = 8 KiB) + one weight tile (256 x 32 x 4B = 32 KiB) + one
+output block (8 x 32 x 4B = 1 KiB) ~= 41 KiB, far below the ~16 MiB VMEM —
+the schedule is bandwidth-bound on HBM exactly like the silicon tile is on
+its 256-bit interface.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One DIMC row in 4-bit mode: 256 parallel MAC lanes.
+ROW_ELEMS = 256
+# The DIMC bank: 32 rows = 32 output channels per group.
+GROUP_ROWS = 32
+# Partial sums are 24-bit two's complement.
+ACC_BITS = 24
+
+_ACC_HALF = 1 << (ACC_BITS - 1)
+_ACC_MASK = (1 << ACC_BITS) - 1
+
+
+def wrap24(x: jax.Array) -> jax.Array:
+    """Wrap an int32 array into 24-bit two's complement (sign-extended)."""
+    return ((x + _ACC_HALF) & _ACC_MASK) - _ACC_HALF
+
+
+def _requant(acc, shift, relu, out_bits):
+    """The DC.F write-back stage: optional ReLU, scale, clamp."""
+    v = jnp.maximum(acc, 0) if relu else acc
+    v = v >> shift
+    if relu:
+        return jnp.clip(v, 0, (1 << out_bits) - 1)
+    return jnp.clip(v, -(1 << (out_bits - 1)), (1 << (out_bits - 1)) - 1)
+
+
+def _kernel(p_ref, w_ref, o_ref, *, tiles, shift, relu, out_bits, quantize):
+    t = pl.program_id(2)  # innermost: the DC.P row-tile chain
+
+    @pl.when(t == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = jnp.dot(
+        p_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] = wrap24(o_ref[...] + prod)
+
+    if quantize:
+
+        @pl.when(t == tiles - 1)
+        def _final():
+            o_ref[...] = _requant(o_ref[...], shift, relu, out_bits)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("shift", "relu", "out_bits", "quantize", "block_p")
+)
+def dimc_matmul(
+    patches: jax.Array,
+    weights: jax.Array,
+    *,
+    shift: int = 4,
+    relu: bool = True,
+    out_bits: int = 4,
+    quantize: bool = True,
+    block_p: int = 8,
+) -> jax.Array:
+    """DIMC-tile matmul: ``patches [P, K] @ weights [K, N]`` with 24-bit
+    wrapped per-row-tile accumulation and the DC.F ReLU/requant stage.
+
+    P must be a multiple of ``block_p``; K a multiple of 256 (row tiles);
+    N a multiple of 32 (row groups). Pad with zeros to reach these — zero
+    operands contribute nothing, exactly like the zero-padded DIMC rows.
+    Returns int32 [P, N] (quantized nibble values when ``quantize``).
+    """
+    p, k = patches.shape
+    k2, n = weights.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+    assert p % block_p == 0, f"P={p} not a multiple of {block_p}"
+    assert k % ROW_ELEMS == 0, f"K={k} not a multiple of {ROW_ELEMS}"
+    assert n % GROUP_ROWS == 0, f"N={n} not a multiple of {GROUP_ROWS}"
+    tiles = k // ROW_ELEMS
+    grid = (p // block_p, n // GROUP_ROWS, tiles)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel,
+            tiles=tiles,
+            shift=shift,
+            relu=relu,
+            out_bits=out_bits,
+            quantize=quantize,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, ROW_ELEMS), lambda i, g, t: (i, t)),
+            pl.BlockSpec((ROW_ELEMS, GROUP_ROWS), lambda i, g, t: (t, g)),
+        ],
+        out_specs=pl.BlockSpec((block_p, GROUP_ROWS), lambda i, g, t: (i, g)),
+        out_shape=jax.ShapeDtypeStruct((p, n), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(patches, weights)
+
+
+def dimc_row_dot(ibuf: jax.Array, row: jax.Array, psum_in: jax.Array) -> jax.Array:
+    """One DC.P: 256-lane dot of the input buffer against one row, folded
+    into the incoming partial sum with 24-bit wrap. Exported as the
+    microcheck artifact (`dimc_row_golden`)."""
+    d = jnp.dot(ibuf.astype(jnp.int32), row.astype(jnp.int32), preferred_element_type=jnp.int32)
+    return wrap24(psum_in + d)

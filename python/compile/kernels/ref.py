@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the DIMC MAC kernel — the CORE correctness signal.
+
+Implements the same semantics as ``dimc_mac`` with no Pallas: per-row-tile
+24-bit wrapped accumulation, then the DC.F ReLU + shift + clamp stage.
+pytest (`python/tests/test_kernel.py`) sweeps shapes and value ranges with
+hypothesis and asserts exact equality.
+"""
+
+import jax.numpy as jnp
+
+from .dimc_mac import ROW_ELEMS, wrap24
+
+
+def ref_requant(acc, shift, relu, out_bits):
+    v = jnp.maximum(acc, 0) if relu else acc
+    v = v >> shift
+    if relu:
+        return jnp.clip(v, 0, (1 << out_bits) - 1)
+    return jnp.clip(v, -(1 << (out_bits - 1)), (1 << (out_bits - 1)) - 1)
+
+
+def ref_dimc_matmul(patches, weights, *, shift=4, relu=True, out_bits=4, quantize=True):
+    """Reference for ``dimc_mac.dimc_matmul`` (same padding requirements)."""
+    p, k = patches.shape
+    _, n = weights.shape
+    assert k % ROW_ELEMS == 0
+    acc = jnp.zeros((p, n), jnp.int32)
+    for t in range(k // ROW_ELEMS):
+        sl = slice(t * ROW_ELEMS, (t + 1) * ROW_ELEMS)
+        prod = patches[:, sl].astype(jnp.int32) @ weights[sl, :].astype(jnp.int32)
+        acc = wrap24(acc + prod)
+    if quantize:
+        acc = ref_requant(acc, shift, relu, out_bits)
+    return acc
+
+
+def ref_row_dot(ibuf, row, psum_in):
+    """Reference for ``dimc_mac.dimc_row_dot``."""
+    return wrap24(psum_in + ibuf.astype(jnp.int32) @ row.astype(jnp.int32))

@@ -1,0 +1,84 @@
+"""Layer-2 JAX golden model: quantized conv / FC layers built on the L1
+DIMC kernel, AOT-lowered to HLO text and executed from the Rust runtime to
+cross-check the cycle simulator's functional outputs.
+
+The numeric contract matches the simulator exactly:
+
+* activations are unsigned ``precision``-bit values, weights signed;
+* accumulation wraps at 24 bits per row-tile (modular arithmetic makes the
+  final value independent of the zero-padded tile partition — the same
+  argument that lets the Rust mapper pad kernels to register boundaries);
+* DC.F write-back: ReLU, arithmetic shift, clamp to [0, 15].
+
+Everything here is build-time only — Python never runs on the simulation
+path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dimc_mac import GROUP_ROWS, ROW_ELEMS, dimc_matmul, dimc_row_dot
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, pad: int) -> jax.Array:
+    """Unfold ``x [H, W, C]`` into patches ``[OH*OW, KH*KW*C]``.
+
+    Shapes are static at trace time, so plain Python loops lower to a fixed
+    gather graph (fused by XLA into the surrounding matmul program).
+    """
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            sl = xp[ky : ky + oh * stride : stride, kx : kx + ow * stride : stride, :]
+            cols.append(sl.reshape(oh * ow, c))
+    # patch layout: (ky, kx) major, channel minor — the mapper's run order
+    return jnp.concatenate(cols, axis=1)
+
+
+def conv_golden(
+    x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0, shift: int = 4
+) -> jax.Array:
+    """Quantized convolution through the DIMC kernel.
+
+    ``x``: int32 [H, W, ICH] activations (unsigned 4-bit domain).
+    ``w``: int32 [OCH, KH, KW, ICH] weights (signed 4-bit domain).
+    Returns int32 [OH, OW, OCH] quantized outputs in [0, 15].
+    """
+    och, kh, kw, ich = w.shape
+    h, wdt, _ = x.shape
+    patches = im2col(x, kh, kw, stride, pad)  # [P, K]
+    p, k = patches.shape
+    # zero-pad to the kernel's granularity (rows / groups / patch blocks)
+    kp = _round_up(k, ROW_ELEMS)
+    np_ = _round_up(och, GROUP_ROWS)
+    pp = _round_up(p, 8)
+    patches = jnp.pad(patches, ((0, pp - p), (0, kp - k)))
+    wmat = jnp.pad(w.reshape(och, k).T, ((0, kp - k), (0, np_ - och)))
+    out = dimc_matmul(patches, wmat, shift=shift)
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wdt + 2 * pad - kw) // stride + 1
+    return out[:p, :och].reshape(oh, ow, och)
+
+
+def gemm_golden(x: jax.Array, w: jax.Array, *, shift: int = 4) -> jax.Array:
+    """Quantized fully-connected layer: ``x`` int32 [K], ``w`` int32
+    [OCH, K]; returns int32 [OCH]."""
+    och, k = w.shape
+    kp = _round_up(k, ROW_ELEMS)
+    np_ = _round_up(och, GROUP_ROWS)
+    patches = jnp.pad(x[None, :], ((0, 7), (0, kp - k)))
+    wmat = jnp.pad(w.T, ((0, kp - k), (0, np_ - och)))
+    return dimc_matmul(patches, wmat, shift=shift)[0, :och]
+
+
+def row_golden(ibuf: jax.Array, row: jax.Array, psum_in: jax.Array) -> jax.Array:
+    """One DC.P row dot (the microcheck artifact)."""
+    return dimc_row_dot(ibuf, row, psum_in)

@@ -1,0 +1,108 @@
+"""L1 correctness: the Pallas DIMC kernel against the pure-jnp oracle.
+
+hypothesis sweeps shapes (patch blocks, row tiles, row groups) and value
+ranges (int4 domain plus adversarial wide values that force 24-bit wrap);
+every case must match ``ref.py`` exactly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dimc_mac import (
+    GROUP_ROWS,
+    ROW_ELEMS,
+    dimc_matmul,
+    dimc_row_dot,
+    wrap24,
+)
+from compile.kernels.ref import ref_dimc_matmul, ref_requant, ref_row_dot
+
+
+def _rand(rng, shape, lo, hi):
+    return jnp.asarray(rng.integers(lo, hi, size=shape, dtype=np.int64), jnp.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    pb=st.integers(1, 3),  # patch blocks of 8
+    tiles=st.integers(1, 3),  # row tiles (K = 256 * tiles)
+    groups=st.integers(1, 2),  # row groups (N = 32 * groups)
+    shift=st.integers(0, 10),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_kernel_matches_ref_int4_domain(pb, tiles, groups, shift, seed):
+    rng = np.random.default_rng(seed)
+    p, k, n = 8 * pb, ROW_ELEMS * tiles, GROUP_ROWS * groups
+    patches = _rand(rng, (p, k), 0, 16)  # unsigned activations
+    weights = _rand(rng, (k, n), -8, 8)  # signed weights
+    got = dimc_matmul(patches, weights, shift=shift)
+    want = ref_dimc_matmul(patches, weights, shift=shift)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(jnp.min(got)) >= 0 and int(jnp.max(got)) <= 15
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_kernel_wraps_at_24_bits(tiles, relu, seed):
+    # Wide adversarial values force the accumulator through the wrap.
+    rng = np.random.default_rng(seed)
+    p, k, n = 8, ROW_ELEMS * tiles, GROUP_ROWS
+    patches = _rand(rng, (p, k), -3000, 3000)
+    weights = _rand(rng, (k, n), -3000, 3000)
+    got = dimc_matmul(patches, weights, shift=0, relu=relu, quantize=False)
+    want = ref_dimc_matmul(patches, weights, shift=0, relu=relu, quantize=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # wrapped psums stay inside the 24-bit domain
+    assert int(jnp.max(jnp.abs(got))) <= 1 << 23
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), psum=st.integers(-(1 << 23), (1 << 23) - 1))
+def test_row_dot_matches_ref(seed, psum):
+    rng = np.random.default_rng(seed)
+    ibuf = _rand(rng, (256,), 0, 16)
+    row = _rand(rng, (256,), -8, 8)
+    p = jnp.int32(psum)
+    got = dimc_row_dot(ibuf, row, p)
+    want = ref_row_dot(ibuf, row, p)
+    assert int(got) == int(want)
+
+
+def test_wrap24_fixed_points():
+    vals = jnp.array([0, 1, -1, (1 << 23) - 1, 1 << 23, -(1 << 23) - 1, 1 << 24], jnp.int32)
+    got = wrap24(vals)
+    want = jnp.array([0, 1, -1, (1 << 23) - 1, -(1 << 23), (1 << 23) - 1, 0], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_requant_corners():
+    acc = jnp.array([-100, -1, 0, 15, 16, 1 << 20], jnp.int32)
+    got = ref_requant(acc, 0, True, 4)
+    np.testing.assert_array_equal(np.asarray(got), [0, 0, 0, 15, 15, 15])
+    got = ref_requant(acc, 2, True, 4)
+    np.testing.assert_array_equal(np.asarray(got), [0, 0, 0, 3, 4, 15])
+
+
+def test_zero_padding_is_neutral():
+    # Padding K with zeros must not change results (the mapper relies on
+    # this when aligning kernels to row tiles).
+    rng = np.random.default_rng(0)
+    p = _rand(rng, (8, ROW_ELEMS), 0, 16)
+    w = _rand(rng, (ROW_ELEMS, GROUP_ROWS), -8, 8)
+    base = dimc_matmul(p, w, shift=3)
+    p2 = jnp.pad(p, ((0, 0), (0, ROW_ELEMS)))
+    w2 = jnp.pad(w, ((0, ROW_ELEMS), (0, 0)))
+    padded = dimc_matmul(p2, w2, shift=3)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(padded))
+
+
+@pytest.mark.parametrize("bad_k", [100, 257])
+def test_rejects_unaligned_k(bad_k):
+    with pytest.raises(AssertionError):
+        dimc_matmul(jnp.zeros((8, bad_k), jnp.int32), jnp.zeros((bad_k, 32), jnp.int32))

@@ -1,0 +1,93 @@
+//! Ablation studies for the modelling assumptions DESIGN.md calls out:
+//!
+//! 1. **Double issue** (paper assumption 1: "simulations did not consider
+//!    double-issue vector instruction execution, simplifying modeling at
+//!    the expense of capturing peak theoretical performance") — quantify
+//!    how much peak GOPS the single-issue assumption leaves on the table.
+//! 2. **External memory latency** (assumption 2: fixed-latency memory) —
+//!    sensitivity of both engines to the chosen constant.
+//! 3. **DIMC accumulation-pipeline depth** — sensitivity to the sense +
+//!    accumulate latency of the tile's compute lane.
+
+#[path = "harness.rs"]
+mod harness;
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::compiler::layer::LayerConfig;
+use dimc_rvv::coordinator::driver::{simulate_layer_with_arch, Engine};
+use dimc_rvv::dimc::Precision;
+
+fn layers() -> Vec<LayerConfig> {
+    vec![
+        LayerConfig::conv("res_3x3x256", 256, 256, 3, 3, 14, 14, 1, 1), // peak-class
+        LayerConfig::conv("res_1x1x512", 512, 128, 1, 1, 28, 28, 1, 0), // load-heavy
+        LayerConfig::conv("small_2x2x64", 64, 32, 2, 2, 16, 16, 1, 0),  // single tile
+    ]
+}
+
+fn gops(l: &LayerConfig, engine: Engine, arch: Arch) -> f64 {
+    simulate_layer_with_arch(l, engine, Precision::Int4, arch).unwrap().gops()
+}
+
+fn main() {
+    harness::bench("ablation/full-run", 2, || {
+        // --- 1. issue width ---
+        println!("\n[1] issue width (paper assumes single issue)");
+        println!("{:<14} {:>12} {:>12} {:>8}", "layer", "1-issue GOPS", "2-issue GOPS", "gain");
+        for l in layers() {
+            let g1 = gops(&l, Engine::Dimc, Arch::default());
+            let g2 = gops(&l, Engine::Dimc, Arch { issue_width: 2, ..Default::default() });
+            println!("{:<14} {:>12.1} {:>12.1} {:>7.1}%", l.name, g1, g2, 100.0 * (g2 / g1 - 1.0));
+            assert!(g2 >= g1, "dual issue cannot lose");
+        }
+
+        // --- 2. memory latency sensitivity ---
+        println!("\n[2] external memory latency (GOPS dimc / speedup)");
+        print!("{:<14}", "layer");
+        let lats = [2u64, 6, 12, 24];
+        for lat in lats {
+            print!(" {:>14}", format!("lat={lat}"));
+        }
+        println!();
+        for l in layers() {
+            print!("{:<14}", l.name);
+            let mut prev = f64::INFINITY;
+            for lat in lats {
+                let a = Arch { mem_load_latency: lat, ..Default::default() };
+                let d = gops(&l, Engine::Dimc, a);
+                let b = simulate_layer_with_arch(&l, Engine::Baseline, Precision::Int4, a)
+                    .unwrap()
+                    .cycles;
+                let dd = simulate_layer_with_arch(&l, Engine::Dimc, Precision::Int4, a)
+                    .unwrap()
+                    .cycles;
+                print!(" {:>7.1}/{:>5.0}x", d, b as f64 / dd as f64);
+                assert!(d <= prev * 1.001, "GOPS must not rise with slower memory");
+                prev = d;
+            }
+            println!();
+        }
+
+        // --- 3. DIMC pipeline depth ---
+        println!("\n[3] DIMC sense+accumulate latency (GOPS)");
+        print!("{:<14}", "layer");
+        let deps = [1u64, 3, 6, 12];
+        for d in deps {
+            print!(" {:>8}", format!("lat={d}"));
+        }
+        println!();
+        for l in layers() {
+            print!("{:<14}", l.name);
+            for dl in deps {
+                let a = Arch { dimc_compute_latency: dl, ..Default::default() };
+                print!(" {:>8.1}", gops(&l, Engine::Dimc, a));
+            }
+            println!();
+        }
+        println!(
+            "\nThe DC lane is pipelined (1 row/cycle): its latency barely moves\n\
+             throughput until it approaches the per-patch instruction count —\n\
+             the in-pipeline integration's key robustness property."
+        );
+    });
+}

@@ -1,0 +1,33 @@
+//! Regenerates **Fig. 6** — operation distribution (computing / loading /
+//! storing) per ResNet-50 layer.
+//!
+//! Paper reference: the DIMC spends the majority of execution on compute
+//! rather than data movement, validating the in-pipeline integration.
+
+#[path = "harness.rs"]
+mod harness;
+
+use dimc_rvv::coordinator::figures::resnet50_rows;
+
+fn main() {
+    let rows = harness::bench("fig6/op-distribution", 3, || resnet50_rows().unwrap());
+    println!("\nFig. 6 — operation distribution per ResNet-50 layer");
+    println!("{:<14} {:>9} {:>9} {:>9}", "layer", "compute", "load", "store");
+    let mut compute_majority = 0;
+    for r in &rows {
+        let (c, l, s) = r.dist;
+        println!("{:<14} {:>8.1}% {:>8.1}% {:>8.1}%", r.name, c * 100.0, l * 100.0, s * 100.0);
+        if c > 0.5 {
+            compute_majority += 1;
+        }
+    }
+    println!(
+        "\n{} of {} layers spend the majority of data-path instructions computing",
+        compute_majority,
+        rows.len()
+    );
+    assert!(
+        compute_majority * 2 > rows.len(),
+        "compute should dominate on most layers (paper Fig. 6)"
+    );
+}

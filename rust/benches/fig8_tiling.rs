@@ -1,0 +1,30 @@
+//! Regenerates **Fig. 8** — speedup degradation due to *tiling* when a
+//! kernel exceeds the 1024-bit single-row limit (OCH=32, KH=KW=2, ICH
+//! swept — the knee is at ICH=64 for 4-bit 2x2 kernels).
+//!
+//! Paper reference: a performance drop past the limit from serial tile
+//! loading + partial-sum chaining, while still far above the baseline.
+
+#[path = "harness.rs"]
+mod harness;
+
+use dimc_rvv::coordinator::figures::{fig8_ichs, fig8_layer, fig8_sweep};
+use dimc_rvv::dimc::Precision;
+
+fn main() {
+    let rows = harness::bench("fig8/tiling-sweep", 3, || fig8_sweep().unwrap());
+    println!("\nFig. 8 — tiling degradation (OCH=32, KH=KW=2)");
+    println!("{:<6} {:>6} {:>8} {:>9}", "ICH", "tiles", "GOPS", "speedup");
+    let ichs = fig8_ichs();
+    for (ich, r) in ichs.iter().zip(rows.iter()) {
+        let tiles = fig8_layer(*ich).tiles(Precision::Int4);
+        println!("{:<6} {:>6} {:>8.1} {:>8.1}x", ich, tiles, r.gops, r.speedup);
+    }
+    // Shape assertions: per-op efficiency drops across the 1024-bit knee
+    // (ICH=64 -> 80) and DIMC still beats the baseline everywhere.
+    let at64 = &rows[ichs.iter().position(|&i| i == 64).unwrap()];
+    let at80 = &rows[ichs.iter().position(|&i| i == 80).unwrap()];
+    assert!(at64.gops > at80.gops * 0.99,
+            "tiling knee missing: {} vs {}", at64.gops, at80.gops);
+    assert!(rows.iter().all(|r| r.speedup > 1.0), "DIMC must win everywhere (paper)");
+}

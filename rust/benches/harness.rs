@@ -1,0 +1,28 @@
+//! Minimal shared bench harness (criterion is not vendored in this
+//! offline image): measures wall-clock over repeated runs and prints
+//! mean ± spread, after printing the regenerated paper artefact itself.
+
+use std::time::Instant;
+
+/// Time `f` with one warmup and `iters` measured runs; prints stats.
+pub fn bench<T>(name: &str, iters: u32, mut f: impl FnMut() -> T) -> T {
+    let warm = f();
+    let mut times = Vec::with_capacity(iters as usize);
+    let mut last = warm;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        last = f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "bench {name:<28} {:>10.3} ms/iter  (min {:.3}, max {:.3}, n={})",
+        mean * 1e3,
+        min * 1e3,
+        max * 1e3,
+        iters
+    );
+    last
+}

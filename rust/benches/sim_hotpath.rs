@@ -1,0 +1,58 @@
+//! Performance bench for the simulator itself (EXPERIMENTS.md §Perf):
+//! simulated-instructions/second on the flat functional path and the
+//! trace-engine path, plus end-to-end figure regeneration times.
+
+#[path = "harness.rs"]
+mod harness;
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::compiler::layer::LayerConfig;
+use dimc_rvv::compiler::mapper::compile_dimc;
+use dimc_rvv::compiler::pack::{synth_acts, synth_wts};
+use dimc_rvv::coordinator::driver::{run_functional, simulate_layer, Engine};
+use dimc_rvv::dimc::Precision;
+use dimc_rvv::pipeline::core::Core;
+use dimc_rvv::pipeline::trace::trace_cycles;
+use std::time::Instant;
+
+fn main() {
+    // --- flat functional execution rate ---
+    let l = LayerConfig::conv("hot", 64, 32, 2, 2, 16, 16, 1, 0);
+    let acts = synth_acts(&l, Precision::Int4, 1);
+    let wts = synth_wts(&l, Precision::Int4, 2);
+    let t0 = Instant::now();
+    let run = run_functional(&l, Engine::Dimc, &acts, &wts, 4).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    let mips = run.stats.instret as f64 / dt / 1e6;
+    println!(
+        "flat functional: {} instrs in {:.1} ms = {:.1} M simulated instr/s",
+        run.stats.instret,
+        dt * 1e3,
+        mips
+    );
+
+    // --- trace-engine effective rate (extrapolated instructions/s) ---
+    let big = LayerConfig::conv("big", 256, 256, 3, 3, 14, 14, 1, 1);
+    let t0 = Instant::now();
+    let r = simulate_layer(&big, Engine::Dimc).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "trace engine:    {} instrs accounted in {:.1} ms = {:.0} M effective instr/s",
+        r.instret,
+        dt * 1e3,
+        r.instret as f64 / dt / 1e6
+    );
+
+    // --- micro: scoreboard-only block timing ---
+    let prog = compile_dimc(&l, Precision::Int4);
+    harness::bench("trace/one-layer", 10, || {
+        let mut core = Core::new(Arch::default());
+        core.dimc.cfg.precision = Precision::Int4;
+        core.timing_only = true;
+        trace_cycles(&mut core, &prog.rep_phases()).unwrap()
+    });
+
+    // --- end-to-end figure regeneration ---
+    harness::bench("e2e/fig8-sweep", 3, || dimc_rvv::coordinator::figures::fig8_sweep().unwrap());
+    harness::bench("e2e/fig9-sweep", 3, || dimc_rvv::coordinator::figures::fig9_sweep().unwrap());
+}

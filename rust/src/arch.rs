@@ -1,0 +1,126 @@
+//! Architectural parameters of the modelled system.
+//!
+//! The numbers mirror Section III/V of the paper: an industrial Zve32x
+//! vector core (VLEN = 64, ELEN = 32) clocked at 500 MHz, extended with the
+//! ISSCC'23 DIMC tile (32 rows x 1024 bits of 8T SRAM, a 1024-bit input
+//! buffer, 256 parallel 4-bit MACs per cycle, 24-bit accumulation).
+
+/// Vector register length in bits (`VLEN`). The paper's embedded profile.
+pub const VLEN: u32 = 64;
+/// Vector register length in bytes.
+pub const VLENB: usize = (VLEN / 8) as usize;
+/// Maximum element width in bits (`ELEN`, Zve32x).
+pub const ELEN: u32 = 32;
+/// Number of architectural vector registers.
+pub const NUM_VREGS: usize = 32;
+/// Number of scalar (x) registers.
+pub const NUM_XREGS: usize = 32;
+
+/// Core clock frequency in Hz (paper: 500 MHz).
+pub const CLOCK_HZ: f64 = 500e6;
+
+/// DIMC memory rows (each row typically holds one kernel / output channel).
+pub const DIMC_ROWS: usize = 32;
+/// Bits per DIMC memory row.
+pub const DIMC_ROW_BITS: usize = 1024;
+/// Bytes per DIMC memory row.
+pub const DIMC_ROW_BYTES: usize = DIMC_ROW_BITS / 8;
+/// Bits in the DIMC input buffer (equal to one row).
+pub const DIMC_IBUF_BITS: usize = 1024;
+/// The input buffer and each row are addressed in four 256-bit sectors.
+pub const DIMC_SECTORS: usize = 4;
+/// Bits per sector (the per-cycle transfer width of the DIMC interface).
+pub const DIMC_SECTOR_BITS: usize = DIMC_ROW_BITS / DIMC_SECTORS;
+/// Bytes per sector.
+pub const DIMC_SECTOR_BYTES: usize = DIMC_SECTOR_BITS / 8;
+/// Parallel MAC lanes in 4-bit mode (512 in 2-bit, 1024 in 1-bit mode).
+pub const DIMC_MACS_4B: usize = 256;
+/// Accumulator width in bits: partial sums are 24-bit two's complement.
+pub const DIMC_ACC_BITS: u32 = 24;
+
+/// Total DIMC weight memory in KiB (32 x 1024 bit = 4 KiB; the paper's
+/// Table I reports the tile with "4 KB" of compute memory).
+pub const DIMC_MEM_KIB: usize = DIMC_ROWS * DIMC_ROW_BITS / 8 / 1024;
+
+/// Bundle of timing parameters for the cycle-approximate model. All
+/// latencies are in core cycles. Defaults are calibrated per DESIGN.md §6.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arch {
+    /// Fixed external-memory access latency for loads (paper assumption 2:
+    /// fixed-latency external memory, no DMA, no cycle-accurate DRAM).
+    pub mem_load_latency: u64,
+    /// Store commit latency (buffered; rarely on the critical path).
+    pub mem_store_latency: u64,
+    /// Bus width between memory and the VLSU, in bytes per cycle.
+    pub mem_bus_bytes: u64,
+    /// Scalar ALU latency.
+    pub alu_latency: u64,
+    /// Scalar multiply latency.
+    pub mul_latency: u64,
+    /// Vector ALU latency for one register of work (LMUL>1 multiplies
+    /// occupancy, see `pipeline::latency`).
+    pub valu_latency: u64,
+    /// Taken-branch redirect penalty (pipeline flush).
+    pub branch_penalty: u64,
+    /// DIMC compute latency: RBL sense + MAC slice + accumulation pipeline.
+    /// Throughput stays one row result per cycle (the lane is pipelined).
+    pub dimc_compute_latency: u64,
+    /// DIMC load (DL.I / DL.M) latency for one 256-bit sector.
+    pub dimc_load_latency: u64,
+    /// Instructions issued per cycle. The paper's evaluation assumes a
+    /// single-issue front end (assumption 1: "simulations did not
+    /// consider double-issue vector instruction execution"); width 2 is
+    /// provided as the ablation quantifying that assumption
+    /// (`cargo bench --bench ablation`).
+    pub issue_width: u64,
+    /// Core clock in Hz.
+    pub clock_hz: f64,
+}
+
+impl Default for Arch {
+    fn default() -> Self {
+        Arch {
+            mem_load_latency: 6,
+            mem_store_latency: 1,
+            mem_bus_bytes: 8,
+            alu_latency: 1,
+            mul_latency: 3,
+            valu_latency: 2,
+            branch_penalty: 2,
+            dimc_compute_latency: 3,
+            dimc_load_latency: 1,
+            issue_width: 1,
+            clock_hz: CLOCK_HZ,
+        }
+    }
+}
+
+impl Arch {
+    /// Theoretical DIMC peak in GOPS at a given precision (1 MAC = 2 ops).
+    /// 4-bit: 256 MACs/cycle * 2 * 500 MHz = 256 GOPS.
+    pub fn dimc_peak_gops(&self, precision_bits: u32) -> f64 {
+        let lanes = DIMC_MACS_4B * (4 / precision_bits as usize);
+        lanes as f64 * 2.0 * self.clock_hz / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimc_geometry_matches_paper() {
+        assert_eq!(DIMC_MEM_KIB, 4); // Table I: 4 KB DIMC memory
+        assert_eq!(DIMC_ROWS * DIMC_ROW_BITS, 32 * 1024); // 32 Kib array
+        assert_eq!(DIMC_SECTOR_BITS, 256);
+        assert_eq!(VLENB, 8);
+    }
+
+    #[test]
+    fn peak_gops() {
+        let a = Arch::default();
+        assert_eq!(a.dimc_peak_gops(4), 256.0);
+        assert_eq!(a.dimc_peak_gops(2), 512.0);
+        assert_eq!(a.dimc_peak_gops(1), 1024.0);
+    }
+}

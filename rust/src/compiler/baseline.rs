@@ -1,0 +1,189 @@
+//! The baseline pure-RVV int8 code generator — the comparison point of
+//! every speedup number in the paper (Figs. 7–9).
+//!
+//! The baseline core has no DIMC: each output element is computed with the
+//! standard Zve32x integer idiom at the architecture's minimum 8-bit
+//! resolution (assumption 4): unit-stride `vle8` of 8-element activation /
+//! weight chunks, `vsext.vf4` widening to 32-bit lanes (exact int32
+//! accumulation, the usual int8-GEMM requirement), `vmacc.vv`, a final
+//! `vredsum`, and a branchless scalar ReLU + shift + clamp requantization
+//! before the `sb` store. As in the DIMC path, every patch is re-fetched
+//! from memory (assumption 3: no reuse).
+
+use super::layer::LayerConfig;
+use super::pack::{ich_pad8, k_pad8};
+use super::program::{Emitter, LayerProgram, MemLayout, PhaseKind, PhaseSpec};
+use crate::isa::{AluOp, Instr};
+
+/// Requantization shift applied by both paths (layer scale).
+pub const BASELINE_SHIFT: u8 = 6;
+
+#[derive(Debug, Clone, Copy)]
+struct Geom {
+    iwp: u32,
+    icp: u32,
+    run: u32,
+    kp: u32,
+    kh: u32,
+    och: u32,
+    ow: u32,
+    stride: u32,
+    shift: u8,
+    layout: MemLayout,
+}
+
+impl Geom {
+    fn new(l: &LayerConfig, shift: u8, layout: MemLayout) -> Self {
+        Geom {
+            iwp: l.iw + 2 * l.pad,
+            icp: ich_pad8(l),
+            run: l.kw * ich_pad8(l),
+            kp: k_pad8(l),
+            kh: l.kh,
+            och: l.och,
+            ow: l.ow(),
+            stride: l.stride,
+            shift,
+            layout,
+        }
+    }
+}
+
+/// Compile `l` for the baseline RVV path.
+pub fn compile_baseline(l: &LayerConfig) -> LayerProgram {
+    compile_baseline_with_shift(l, BASELINE_SHIFT)
+}
+
+/// As [`compile_baseline`] with an explicit requantization shift.
+pub fn compile_baseline_with_shift(l: &LayerConfig, shift: u8) -> LayerProgram {
+    let ihp = (l.ih + 2 * l.pad) as u64;
+    let iwp = (l.iw + 2 * l.pad) as u64;
+    let layout = MemLayout::compact(
+        ihp * iwp * ich_pad8(l) as u64,
+        l.och as u64 * k_pad8(l) as u64,
+        0,
+    );
+    let g = Geom::new(l, shift, layout);
+    let outputs = l.patches() * l.och as u64;
+    let phases = vec![PhaseSpec::new(
+        "outputs",
+        PhaseKind::Sweep,
+        outputs,
+        move |j| gen_output(&g, j),
+    )];
+    LayerProgram { phases, layout }
+}
+
+/// Body for output element `j` (patch-major, then output channel).
+fn gen_output(g: &Geom, j: u64) -> Vec<Instr> {
+    let pidx = (j / g.och as u64) as u32;
+    let oc = (j % g.och as u64) as u32;
+    let oy = pidx / g.ow;
+    let ox = pidx % g.ow;
+
+    let mut e = Emitter::new();
+    // zero the 8-lane int32 accumulator group v16..v19
+    e.vcfg(8, 32, 4);
+    e.push(Instr::VmvVI { vd: 16, imm: 0 });
+
+    for ky in 0..g.kh {
+        let act = g.layout.act_base + ((oy * g.stride + ky) * g.iwp + ox * g.stride) * g.icp;
+        let wt = g.layout.wt_base + oc * g.kp + ky * g.run;
+        e.li(5, act);
+        e.li(6, wt);
+        let chunks = g.run / 8;
+        for c in 0..chunks {
+            e.vcfg(8, 8, 1);
+            e.vle8(1, 5);
+            e.vle8(2, 6);
+            if c + 1 < chunks {
+                e.addi(5, 5, 8);
+                e.addi(6, 6, 8);
+            }
+            e.vcfg(8, 32, 4);
+            e.push(Instr::VsextVf4 { vd: 8, vs2: 1 });
+            e.push(Instr::VsextVf4 { vd: 12, vs2: 2 });
+            e.push(Instr::VmaccVV { vd: 16, vs1: 8, vs2: 12 });
+        }
+    }
+
+    // reduce: acc = sum(v16..v19)
+    e.vcfg(8, 32, 4);
+    e.push(Instr::VmvVI { vd: 20, imm: 0 });
+    e.push(Instr::VredsumVS { vd: 20, vs1: 20, vs2: 16 });
+    e.push(Instr::VmvXS { rd: 28, vs2: 20 });
+
+    // Branchless ReLU: x28 &= ~(x28 >> 31)
+    e.push(Instr::OpImm { op: AluOp::Sra, rd: 29, rs1: 28, imm: 31 });
+    e.push(Instr::OpImm { op: AluOp::Xor, rd: 29, rs1: 29, imm: -1 });
+    e.push(Instr::Op { op: AluOp::And, rd: 28, rs1: 28, rs2: 29 });
+    // scale
+    e.push(Instr::OpImm { op: AluOp::Sra, rd: 28, rs1: 28, imm: g.shift as i32 });
+    // Branchless clamp to 255: x28 = min(x28, 255)
+    //   x30 = 255; x31 = (255 < x28); mask = -x31;
+    //   x28 = x28 ^ ((x28 ^ 255) & mask)
+    e.push(Instr::OpImm { op: AluOp::Add, rd: 30, rs1: 0, imm: 255 });
+    e.push(Instr::Op { op: AluOp::Slt, rd: 31, rs1: 30, rs2: 28 });
+    e.push(Instr::Op { op: AluOp::Sub, rd: 31, rs1: 0, rs2: 31 });
+    e.push(Instr::Op { op: AluOp::Xor, rd: 29, rs1: 28, rs2: 30 });
+    e.push(Instr::Op { op: AluOp::And, rd: 29, rs1: 29, rs2: 31 });
+    e.push(Instr::Op { op: AluOp::Xor, rd: 28, rs1: 28, rs2: 29 });
+
+    // store the byte
+    e.li(6, g.layout.out_base + pidx * g.och + oc);
+    e.push(Instr::Sb { rs2: 28, rs1: 6, imm: 0 });
+    e.finish()
+}
+
+/// The baseline requantization reference: `clamp(relu(acc) >> shift, 0, 255)`.
+pub fn ref_requant_u8(acc: i32, shift: u8) -> u8 {
+    ((acc.max(0) >> shift).clamp(0, 255)) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::InstrClass;
+
+    #[test]
+    fn output_count_and_shape() {
+        let l = LayerConfig::conv("t", 16, 4, 3, 3, 6, 6, 1, 1);
+        let prog = compile_baseline(&l);
+        assert_eq!(prog.phases.len(), 1);
+        assert_eq!(prog.phases[0].trips, 36 * 4);
+        // 3 runs of 48 elems -> 18 chunks -> 18 vmacc per output
+        let body = prog.phases[0].body(0);
+        let maccs = body.iter().filter(|i| matches!(i, Instr::VmaccVV { .. })).count();
+        assert_eq!(maccs, 18);
+        // no DIMC instructions on the baseline, ever
+        assert!(body.iter().all(|i| !i.is_custom()));
+    }
+
+    #[test]
+    fn shape_invariant_across_outputs() {
+        let l = LayerConfig::conv("t", 8, 3, 2, 2, 5, 5, 1, 0);
+        let prog = compile_baseline(&l);
+        let b0 = prog.phases[0].body(0);
+        let bn = prog.phases[0].body(prog.phases[0].trips - 1);
+        assert_eq!(b0.len(), bn.len());
+        for (a, b) in b0.iter().zip(bn.iter()) {
+            assert_eq!(std::mem::discriminant(a), std::mem::discriminant(b));
+        }
+    }
+
+    #[test]
+    fn loads_are_vector_class() {
+        let l = LayerConfig::fc("t", 64, 10);
+        let prog = compile_baseline(&l);
+        let body = prog.phases[0].body(0);
+        let loads = body.iter().filter(|i| i.class() == InstrClass::VectorLoad).count();
+        assert_eq!(loads, 2 * 64 / 8); // acts + weights per 8-elem chunk
+    }
+
+    #[test]
+    fn requant_reference() {
+        assert_eq!(ref_requant_u8(-5, 6), 0);
+        assert_eq!(ref_requant_u8(64, 6), 1);
+        assert_eq!(ref_requant_u8(1 << 20, 6), 255);
+    }
+}

@@ -1,0 +1,204 @@
+//! Layer configurations: the workload unit of the paper's evaluation
+//! (convolutional and fully-connected layers — assumption 6 excludes
+//! pooling/elementwise, which perform identically on both architectures).
+
+use crate::arch::{DIMC_ROWS, DIMC_ROW_BITS};
+use crate::dimc::Precision;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    /// Fully-connected: modelled as a 1x1 convolution on a 1x1 feature map
+    /// with `ich` input features and `och` output features.
+    Fc,
+}
+
+/// One conv/FC layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerConfig {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input channels.
+    pub ich: u32,
+    /// Output channels (kernels).
+    pub och: u32,
+    /// Kernel height / width.
+    pub kh: u32,
+    pub kw: u32,
+    /// Input feature-map height / width (pre-padding).
+    pub ih: u32,
+    pub iw: u32,
+    pub stride: u32,
+    pub pad: u32,
+}
+
+impl LayerConfig {
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        ich: u32,
+        och: u32,
+        kh: u32,
+        kw: u32,
+        ih: u32,
+        iw: u32,
+        stride: u32,
+        pad: u32,
+    ) -> Self {
+        LayerConfig { name: name.into(), kind: LayerKind::Conv, ich, och, kh, kw, ih, iw, stride, pad }
+    }
+
+    pub fn fc(name: &str, in_features: u32, out_features: u32) -> Self {
+        LayerConfig {
+            name: name.into(),
+            kind: LayerKind::Fc,
+            ich: in_features,
+            och: out_features,
+            kh: 1,
+            kw: 1,
+            ih: 1,
+            iw: 1,
+            stride: 1,
+            pad: 0,
+        }
+    }
+
+    /// Output height.
+    pub fn oh(&self) -> u32 {
+        (self.ih + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    /// Output width.
+    pub fn ow(&self) -> u32 {
+        (self.iw + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Output positions (= patches swept).
+    pub fn patches(&self) -> u64 {
+        self.oh() as u64 * self.ow() as u64
+    }
+
+    /// Elements per kernel (per output channel): ICH * KH * KW.
+    pub fn k_elems(&self) -> u32 {
+        self.ich * self.kh * self.kw
+    }
+
+    /// MAC count of the layer (un-padded, the paper's op accounting).
+    pub fn macs(&self) -> u64 {
+        self.patches() * self.och as u64 * self.k_elems() as u64
+    }
+
+    /// Operations = 2 x MACs (multiply + accumulate), as in GOPS reporting.
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Channels padded so one (y, x) run is 64-bit register aligned in the
+    /// packed activation layout: `ich_pad * precision_bits ≡ 0 (mod 64)`.
+    pub fn ich_pad(&self, precision: Precision) -> u32 {
+        let align = 64 / precision.bits(); // elements per 64-bit register
+        self.ich.div_ceil(align) * align
+    }
+
+    /// Padded kernel length (what actually occupies DIMC rows).
+    pub fn k_pad(&self, precision: Precision) -> u32 {
+        self.ich_pad(precision) * self.kh * self.kw
+    }
+
+    /// Kernel footprint in bits after padding — the quantity the paper's
+    /// 1024-bit single-kernel constraint applies to.
+    pub fn kernel_bits(&self, precision: Precision) -> u32 {
+        self.k_pad(precision) * precision.bits()
+    }
+
+    /// Whether the kernel exceeds one DIMC row and must be *tiled*
+    /// (Fig. 8: serial tile passes with partial-sum chaining via DC.P).
+    pub fn needs_tiling(&self, precision: Precision) -> bool {
+        self.kernel_bits(precision) > DIMC_ROW_BITS as u32
+    }
+
+    /// Number of row-tiles per kernel.
+    pub fn tiles(&self, precision: Precision) -> u32 {
+        self.kernel_bits(precision).div_ceil(DIMC_ROW_BITS as u32)
+    }
+
+    /// Whether OCH exceeds the 32-kernel DIMC capacity and must be
+    /// *grouped* (Fig. 9: full kernel reload + re-sweep per group).
+    pub fn needs_grouping(&self) -> bool {
+        self.och > DIMC_ROWS as u32
+    }
+
+    /// Number of 32-kernel groups.
+    pub fn groups(&self) -> u32 {
+        self.och.div_ceil(DIMC_ROWS as u32)
+    }
+}
+
+impl std::fmt::Display for LayerConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            LayerKind::Conv => write!(
+                f,
+                "{}: conv {}x{}x{}->{} s{} p{} on {}x{}",
+                self.name, self.kh, self.kw, self.ich, self.och, self.stride, self.pad, self.ih,
+                self.iw
+            ),
+            LayerKind::Fc => write!(f, "{}: fc {}->{}", self.name, self.ich, self.och),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_conv_geometry() {
+        // ResNet-50 conv1: 7x7x3 -> 64, stride 2, pad 3, 224x224 input.
+        let l = LayerConfig::conv("conv1", 3, 64, 7, 7, 224, 224, 2, 3);
+        assert_eq!(l.oh(), 112);
+        assert_eq!(l.ow(), 112);
+        assert_eq!(l.macs(), 112 * 112 * 64 * 147);
+        assert_eq!(l.ich_pad(Precision::Int4), 16); // 3 -> 16 (64b align)
+        assert_eq!(l.k_pad(Precision::Int4), 784);
+        assert_eq!(l.tiles(Precision::Int4), 4); // 784*4 = 3136 bits
+        assert_eq!(l.groups(), 2);
+    }
+
+    #[test]
+    fn tiling_threshold_at_1024_bits() {
+        // 2x2 kernels (Fig. 8's sweep): ICH=64 -> exactly 1024 bits.
+        let at_limit = LayerConfig::conv("l", 64, 32, 2, 2, 16, 16, 1, 0);
+        assert!(!at_limit.needs_tiling(Precision::Int4));
+        assert_eq!(at_limit.tiles(Precision::Int4), 1);
+        let over = LayerConfig::conv("l", 80, 32, 2, 2, 16, 16, 1, 0);
+        assert!(over.needs_tiling(Precision::Int4));
+        assert_eq!(over.tiles(Precision::Int4), 2);
+    }
+
+    #[test]
+    fn grouping_threshold_at_32_kernels() {
+        let l = LayerConfig::conv("l", 32, 32, 2, 2, 16, 16, 1, 0);
+        assert!(!l.needs_grouping());
+        let l = LayerConfig::conv("l", 32, 33, 2, 2, 16, 16, 1, 0);
+        assert!(l.needs_grouping());
+        assert_eq!(l.groups(), 2);
+    }
+
+    #[test]
+    fn fc_as_1x1() {
+        let l = LayerConfig::fc("fc", 2048, 1000);
+        assert_eq!(l.patches(), 1);
+        assert_eq!(l.macs(), 2048 * 1000);
+        assert_eq!(l.tiles(Precision::Int4), 8);
+        assert_eq!(l.groups(), 32);
+    }
+
+    #[test]
+    fn precision_changes_padding() {
+        let l = LayerConfig::conv("l", 24, 8, 1, 1, 8, 8, 1, 0);
+        assert_eq!(l.ich_pad(Precision::Int4), 32); // align 16
+        assert_eq!(l.ich_pad(Precision::Int2), 32); // align 32
+        assert_eq!(l.ich_pad(Precision::Int1), 64); // align 64
+    }
+}

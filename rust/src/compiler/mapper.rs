@@ -1,0 +1,441 @@
+//! The DIMC code generator: lowers one conv/FC layer to the custom
+//! instruction stream of §V-A.
+//!
+//! Loop structure (matching the paper's mapping toolchain):
+//!
+//! ```text
+//! for g in 0..groups          # OCH > 32 -> grouping (Fig. 9)
+//!   for t in 0..tiles         # kernel > 1024 bit -> tiling (Fig. 8)
+//!     phase wt_load(g, t):    # DL.M all 4 sectors of each active row
+//!     phase sweep(g, t):      # per output position:
+//!       load the tile-t slice of the patch (vle8, m4/m1 chunks)
+//!       DL.I it into the input buffer sectors
+//!       per half-batch of 16 rows:
+//!         middle tiles: DC.P with psum chaining through memory
+//!         last tile:    DC.F (ReLU + requant + nibble pack) + vse8
+//! ```
+//!
+//! Key layout invariants (see [`super::pack`]): channels are padded so
+//! every patch *run* (one kernel row, `kw*ich_pad` elements) is whole-
+//! 64-bit-register aligned, tile boundaries land on register boundaries,
+//! and weight row images are zero-padded — so stale input-buffer bytes
+//! beyond the active slice always multiply against zero weights.
+
+use super::layer::LayerConfig;
+use super::pack::elems_per_tile;
+use super::program::{Emitter, LayerProgram, MemLayout, PhaseKind, PhaseSpec};
+use crate::arch::{DIMC_ROWS, DIMC_ROW_BYTES, DIMC_SECTOR_BYTES};
+use crate::dimc::Precision;
+use crate::isa::Instr;
+use std::sync::Arc;
+
+/// Precomputed geometry shared by the phase generators.
+#[derive(Debug, Clone, Copy)]
+struct Geom {
+    bits: u32,
+    ihp: u32,
+    iwp: u32,
+    ich_pad: u32,
+    /// Elements of one patch run (kernel row): kw * ich_pad.
+    run: u32,
+    k_pad: u32,
+    /// Elements per row-tile (256 @4b, 512 @2b, 1024 @1b).
+    ept: u32,
+    tiles: u32,
+    groups: u32,
+    och: u32,
+    och_pad: u32,
+    stride: u32,
+    ow: u32,
+    layout: MemLayout,
+}
+
+impl Geom {
+    fn new(l: &LayerConfig, p: Precision, layout: MemLayout) -> Self {
+        Geom {
+            bits: p.bits(),
+            ihp: l.ih + 2 * l.pad,
+            iwp: l.iw + 2 * l.pad,
+            ich_pad: l.ich_pad(p),
+            run: l.kw * l.ich_pad(p),
+            k_pad: l.k_pad(p),
+            ept: elems_per_tile(p),
+            tiles: l.tiles(p),
+            groups: l.groups(),
+            och: l.och,
+            och_pad: l.groups() * DIMC_ROWS as u32,
+            stride: l.stride,
+            ow: l.ow(),
+            layout,
+        }
+    }
+
+    /// Byte address of packed activation element index `e`.
+    #[inline]
+    fn act_addr(&self, e: u32) -> u32 {
+        self.layout.act_base + e * self.bits / 8
+    }
+
+    /// Byte address of the 128-byte weight row image (oc, tile).
+    #[inline]
+    fn wt_addr(&self, oc: u32, t: u32) -> u32 {
+        self.layout.wt_base + (oc * self.tiles + t) * DIMC_ROW_BYTES as u32
+    }
+
+    /// Byte address of the psum spill slot for (patch, half-batch).
+    #[inline]
+    fn psum_addr(&self, p: u64, h: u32) -> u32 {
+        self.layout.psum_base + (p as u32 * DIMC_ROWS as u32 + h * 16) * 4
+    }
+
+    /// Byte address of packed outputs for (patch, group, half-batch).
+    #[inline]
+    fn out_addr(&self, p: u64, g: u32, h: u32) -> u32 {
+        // nibble index / 2; och_pad is a multiple of 32 so this is exact.
+        self.layout.out_base + (p as u32 * self.och_pad + g * 32 + h * 16) * 4 / 8
+    }
+}
+
+/// Tracks the current vtype to avoid redundant `vsetivli` churn inside a
+/// body while still emitting one whenever the configuration changes.
+struct VCfg {
+    cur: Option<(u8, u16, u8)>,
+}
+
+impl VCfg {
+    fn new() -> Self {
+        VCfg { cur: None }
+    }
+    fn want(&mut self, e: &mut Emitter, avl: u8, sew: u16, lmul: u8) {
+        if self.cur != Some((avl, sew, lmul)) {
+            e.vcfg(avl, sew, lmul);
+            self.cur = Some((avl, sew, lmul));
+        }
+    }
+}
+
+/// Compile `l` for the DIMC path at precision `p`.
+pub fn compile_dimc(l: &LayerConfig, p: Precision) -> LayerProgram {
+    let ihp = (l.ih + 2 * l.pad) as u64;
+    let iwp = (l.iw + 2 * l.pad) as u64;
+    let layout = MemLayout::compact(
+        ihp * iwp * l.ich_pad(p) as u64 * p.bits() as u64 / 8,
+        (l.groups() * DIMC_ROWS as u32 * l.tiles(p)) as u64 * DIMC_ROW_BYTES as u64,
+        l.patches() * DIMC_ROWS as u64 * 4,
+    );
+    let g = Geom::new(l, p, layout);
+    let mut phases: Vec<PhaseSpec> = Vec::new();
+
+    // Setup: zero v6 (the DC partial-sum zero source).
+    phases.push(PhaseSpec::new("setup", PhaseKind::Setup, 1, |_| {
+        let mut e = Emitter::new();
+        e.vcfg(8, 8, 1);
+        e.push(Instr::VmvVI { vd: 6, imm: 0 });
+        e.finish()
+    }));
+
+    let patches = l.patches();
+    for grp in 0..g.groups {
+        let rows_g = (g.och - grp * DIMC_ROWS as u32).min(DIMC_ROWS as u32);
+        for t in 0..g.tiles {
+            // ---- weight load: one row image per trip ----
+            let gg = g;
+            phases.push(PhaseSpec::new(
+                format!("wt g{grp} t{t}"),
+                PhaseKind::WeightLoad,
+                rows_g as u64,
+                move |r| gen_wt_row(&gg, grp, t, r as u32),
+            ));
+            // ---- patch sweep ----
+            let gg = g;
+            let width = p.width_field();
+            phases.push(PhaseSpec::new(
+                format!("sweep g{grp} t{t}"),
+                PhaseKind::Sweep,
+                patches,
+                move |pidx| gen_patch(&gg, grp, t, pidx, rows_g, width),
+            ));
+        }
+    }
+
+    LayerProgram { phases, layout }
+}
+
+/// Weight-row body: load the 128-byte row image into v8..v23 and DL.M it
+/// into all four sectors of row `r`.
+fn gen_wt_row(g: &Geom, grp: u32, t: u32, r: u32) -> Vec<Instr> {
+    let oc = grp * DIMC_ROWS as u32 + r;
+    let mut e = Emitter::new();
+    e.li(5, g.wt_addr(oc, t));
+    e.vcfg(32, 8, 4); // 32 bytes per vle8 (LMUL=4)
+    for s in 0..4u8 {
+        e.vle8(8 + 4 * s, 5);
+        if s < 3 {
+            e.addi(5, 5, 32);
+        }
+    }
+    for s in 0..4u8 {
+        e.push(Instr::DlM {
+            nvec: 4,
+            mask: 0xf,
+            vs1: 8 + 4 * s,
+            width: 0,
+            sec: s,
+            m_row: r as u8,
+        });
+    }
+    e.finish()
+}
+
+/// Contiguous memory segments (element index, element count) covered by
+/// the tile-`t` slice of the patch at output position `pidx`.
+fn slice_segments(g: &Geom, t: u32, pidx: u64) -> Vec<(u32, u32)> {
+    let oy = (pidx / g.ow as u64) as u32;
+    let ox = (pidx % g.ow as u64) as u32;
+    let k0 = t * g.ept;
+    let k1 = g.k_pad.min((t + 1) * g.ept);
+    let mut segs = Vec::new();
+    let mut k = k0;
+    while k < k1 {
+        let ky = k / g.run;
+        let off = k % g.run;
+        let take = (g.run - off).min(k1 - k);
+        let y = oy * g.stride + ky;
+        debug_assert!(y < g.ihp, "patch row outside the padded feature map");
+        let x0 = ox * g.stride;
+        let e = (y * g.iwp + x0) * g.ich_pad + off;
+        segs.push((e, take));
+        k += take;
+    }
+    segs
+}
+
+/// Patch body for (group, tile, patch): slice load + DL.I + compute.
+fn gen_patch(g: &Geom, grp: u32, t: u32, pidx: u64, rows_g: u32, width: u8) -> Vec<Instr> {
+    let mut e = Emitter::new();
+    let mut cfg = VCfg::new();
+    let first = t == 0;
+    let last = t == g.tiles - 1;
+
+    // ---- 1. load the patch slice into v8.. (m4 then m1 chunks) ----
+    let mut reg: u8 = 8;
+    for (elem, count) in slice_segments(g, t, pidx) {
+        let mut addr = g.act_addr(elem);
+        let mut bytes = count * g.bits / 8;
+        debug_assert_eq!(bytes % 8, 0, "runs are register aligned");
+        e.li(5, addr);
+        while bytes >= 32 {
+            cfg.want(&mut e, 32, 8, 4);
+            e.vle8(reg, 5);
+            reg += 4;
+            bytes -= 32;
+            addr += 32;
+            if bytes > 0 {
+                e.addi(5, 5, 32);
+            }
+        }
+        while bytes >= 8 {
+            cfg.want(&mut e, 8, 8, 1);
+            e.vle8(reg, 5);
+            reg += 1;
+            bytes -= 8;
+            addr += 8;
+            if bytes > 0 {
+                e.addi(5, 5, 8);
+            }
+        }
+    }
+    let slice_regs = reg - 8;
+
+    // ---- 2. DL.I the slice into the input buffer sectors ----
+    let mut s = 0u8;
+    let mut left = slice_regs;
+    while left > 0 {
+        let nvec = left.min((DIMC_SECTOR_BYTES / 8) as u8);
+        e.push(Instr::DlI {
+            nvec,
+            mask: (1u16 << nvec) as u8 - 1,
+            vs1: 8 + 4 * s,
+            width: 0,
+            sec: s,
+        });
+        left -= nvec;
+        s += 1;
+    }
+
+    // ---- 3. compute per half-batch of 16 rows ----
+    let half_batches = rows_g.div_ceil(16);
+    for h in 0..half_batches {
+        let rows_h = (rows_g - h * 16).min(16);
+        // psums spread over min(rows_h, 8) registers (2 per register once
+        // rows_h > 8); each LMUL=4 access covers 4 registers.
+        let loads = rows_h.min(8).div_ceil(4);
+        if !first {
+            // reload chained partial sums
+            e.li(5, g.psum_addr(pidx, h));
+            cfg.want(&mut e, 8, 32, 4);
+            e.vle32(24, 5);
+            if loads > 1 {
+                e.addi(5, 5, 32);
+                e.vle32(28, 5);
+            }
+        }
+        for r in 0..rows_h {
+            let m_row = (h * 16 + r) as u8;
+            // psum register interleave: reg = 24 + r%8, half = r/8 — keeps
+            // consecutive DC results in distinct registers (no WB stalls).
+            let (pv, ph) = (24 + (r % 8) as u8, r / 8 == 1);
+            let (vs1, sh) = if first { (6u8, false) } else { (pv, ph) };
+            if last {
+                e.push(Instr::DcF {
+                    sh,
+                    dh: r / 8 == 1,
+                    m_row,
+                    vs1,
+                    width,
+                    bidx: (r % 8) as u8,
+                    vd: 1,
+                });
+            } else {
+                e.push(Instr::DcP { sh, dh: ph, m_row, vs1, width, vd: pv });
+            }
+        }
+        if last {
+            // v1 holds 16 nibble-packed results -> 8 bytes
+            e.li(6, g.out_addr(pidx, grp, h));
+            cfg.want(&mut e, 8, 8, 1);
+            e.vse8(1, 6);
+        } else {
+            e.li(6, g.psum_addr(pidx, h));
+            cfg.want(&mut e, 8, 32, 4);
+            e.vse32(24, 6);
+            if loads > 1 {
+                e.addi(6, 6, 32);
+                e.vse32(28, 6);
+            }
+        }
+    }
+    e.finish()
+}
+
+/// Convenience: compile with a shared Arc (used by the driver when the
+/// same layer is simulated under several engines).
+pub fn compile_dimc_arc(l: &LayerConfig, p: Precision) -> Arc<LayerProgram> {
+    Arc::new(compile_dimc(l, p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::InstrClass;
+
+    fn dc_count(prog: &LayerProgram) -> u64 {
+        prog.phases
+            .iter()
+            .map(|p| {
+                p.trips
+                    * p.body(0).iter().filter(|i| i.class() == InstrClass::DimcCompute).count()
+                        as u64
+            })
+            .sum()
+    }
+
+    #[test]
+    fn single_tile_layer_structure() {
+        // 1x1x64 -> 32: k_pad = 64 elems = 256 bits, one tile, one group.
+        let l = LayerConfig::conv("t", 64, 32, 1, 1, 8, 8, 1, 0);
+        let prog = compile_dimc(&l, Precision::Int4);
+        // setup + (wt + sweep) per (group=1, tile=1)
+        assert_eq!(prog.phases.len(), 3);
+        assert_eq!(prog.phases[1].trips, 32); // 32 rows
+        assert_eq!(prog.phases[2].trips, 64); // 8x8 patches
+        // Every patch issues exactly rows_g DC ops per tile.
+        assert_eq!(dc_count(&prog), 64 * 32);
+    }
+
+    #[test]
+    fn tiling_multiplies_sweeps() {
+        // 2x2x80 @4b -> 1280 elems... k_pad = 2*2*80 = 320 elems = 1280 bits -> 2 tiles.
+        let l = LayerConfig::conv("t", 80, 32, 2, 2, 9, 9, 1, 0);
+        let prog = compile_dimc(&l, Precision::Int4);
+        assert_eq!(l.tiles(Precision::Int4), 2);
+        // setup + 2 * (wt + sweep)
+        assert_eq!(prog.phases.len(), 5);
+        // DC ops: patches * rows * tiles
+        assert_eq!(dc_count(&prog), 64 * 32 * 2);
+    }
+
+    #[test]
+    fn grouping_multiplies_weight_loads() {
+        let l = LayerConfig::conv("t", 32, 96, 2, 2, 5, 5, 1, 0);
+        let prog = compile_dimc(&l, Precision::Int4);
+        assert_eq!(l.groups(), 3);
+        assert_eq!(prog.phases.len(), 1 + 3 * 2);
+        let wt_trips: u64 = prog
+            .phases
+            .iter()
+            .filter(|p| matches!(p.kind, PhaseKind::WeightLoad))
+            .map(|p| p.trips)
+            .sum();
+        assert_eq!(wt_trips, 96);
+    }
+
+    #[test]
+    fn bodies_are_shape_invariant_across_trips() {
+        let l = LayerConfig::conv("t", 16, 32, 3, 3, 12, 12, 1, 1);
+        let prog = compile_dimc(&l, Precision::Int4);
+        for ph in &prog.phases {
+            let b0 = ph.body(0);
+            for t in [1, ph.trips / 2, ph.trips - 1] {
+                let bt = ph.body(t);
+                assert_eq!(b0.len(), bt.len(), "phase {} trip {t}", ph.name);
+                for (a, b) in b0.iter().zip(bt.iter()) {
+                    // same opcode shape (ignore immediates)
+                    assert_eq!(
+                        std::mem::discriminant(a),
+                        std::mem::discriminant(b),
+                        "phase {}",
+                        ph.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_segments_respect_runs() {
+        // 3x3 kernel, ich_pad 16 -> run = 48 elems; k_pad = 144 (1 tile).
+        let l = LayerConfig::conv("t", 16, 8, 3, 3, 8, 8, 1, 0);
+        let g = Geom::new(&l, Precision::Int4, MemLayout::default());
+        let segs = slice_segments(&g, 0, 0);
+        assert_eq!(segs.len(), 3); // one per kernel row
+        assert!(segs.iter().all(|&(_, n)| n == 48));
+        // patch at ox=1 shifts by ich_pad*stride elements
+        let segs1 = slice_segments(&g, 0, 1);
+        assert_eq!(segs1[0].0 - segs[0].0, 16);
+    }
+
+    #[test]
+    fn tile_boundary_splits_runs_register_aligned() {
+        // 2x2x80: run = 160 elems, ept = 256 -> tile 0 = run0 + 96 of run1.
+        let l = LayerConfig::conv("t", 80, 32, 2, 2, 9, 9, 1, 0);
+        let g = Geom::new(&l, Precision::Int4, MemLayout::default());
+        let t0 = slice_segments(&g, 0, 0);
+        let t1 = slice_segments(&g, 1, 0);
+        assert_eq!(t0.iter().map(|s| s.1).sum::<u32>(), 256);
+        assert_eq!(t1.iter().map(|s| s.1).sum::<u32>(), 320 - 256);
+        for (e, n) in t0.iter().chain(t1.iter()) {
+            assert_eq!(e % 16, 0, "segment start register-aligned");
+            assert_eq!(n % 16, 0, "segment length register-aligned");
+        }
+    }
+
+    #[test]
+    fn odd_och_partial_batches() {
+        let l = LayerConfig::conv("t", 16, 20, 1, 1, 4, 4, 1, 0);
+        let prog = compile_dimc(&l, Precision::Int4);
+        assert_eq!(prog.phases[1].trips, 20); // only active rows loaded
+        // 20 rows -> half-batches of 16 + 4 -> 20 DC.F per patch
+        assert_eq!(dc_count(&prog), 16 * 20);
+    }
+}

@@ -1,0 +1,22 @@
+//! The layer-to-instruction-stream toolchain (paper §V-A):
+//!
+//! 1. load kernel weights into the DIMC memory (up to 32 kernels),
+//! 2. load one patch of feature data into the DIMC input buffer,
+//! 3. trigger MAC operations with the custom compute instructions,
+//! 4. slide the input window across the feature map and repeat 2–3,
+//! 5. reload kernels if needed (grouping / tiling) and iterate.
+//!
+//! [`mapper`] emits the DIMC-accelerated stream, [`baseline`] the pure-RVV
+//! int8 stream the paper compares against (baseline min resolution 8 bit,
+//! DIMC max 4 bit — assumption 4). [`pack`] holds the bit-exact tensor
+//! packing shared by the code generators, the functional driver and the
+//! golden-model cross-check.
+
+pub mod baseline;
+pub mod layer;
+pub mod mapper;
+pub mod pack;
+pub mod program;
+
+pub use layer::{LayerConfig, LayerKind};
+pub use program::LayerProgram;

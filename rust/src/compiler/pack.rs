@@ -1,0 +1,313 @@
+//! Bit-exact tensor packing for the generated memory layouts.
+//!
+//! These functions are the *single source of truth* for how the drivers
+//! place tensors and how the code generators address them:
+//!
+//! **DIMC path (4/2/1-bit packed):**
+//! * activations: padded NHWC, element `(y, x, c)` at sub-byte index
+//!   `(y*iwp + x)*ich_pad + c` (spatial zero-padding materialized,
+//!   channels padded to a 64-bit-register multiple so every patch run is
+//!   whole-register aligned);
+//! * weights: per output channel `oc` and row-tile `t`, one 128-byte DIMC
+//!   row image at `(oc*tiles + t)*128`, zero-padded past the kernel;
+//! * outputs: sub-byte index `(oy*ow + ox)*och_pad + oc` with
+//!   `och_pad = groups*32` (the DC.F nibble-packed write-back, two 4-bit
+//!   results per byte — §IV-A).
+//!
+//! **Baseline path (int8):** same structure, one byte per element,
+//! channels padded to 8.
+
+use super::layer::LayerConfig;
+use crate::arch::{DIMC_ROW_BYTES, DIMC_ROWS};
+use crate::dimc::mac::pack as pack_elem;
+use crate::dimc::Precision;
+
+/// Deterministic synthetic tensor generator (xorshift64*). Values span the
+/// full signed/unsigned range of `bits`.
+pub struct Lcg(pub u64);
+
+impl Lcg {
+    pub fn new(seed: u64) -> Self {
+        Lcg(seed.max(1))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Signed value in the two's-complement range of `bits`.
+    pub fn signed(&mut self, bits: u32) -> i8 {
+        (self.below(1 << bits) as i64 - (1 << (bits - 1))) as i8
+    }
+
+    /// Unsigned value in [0, 2^bits).
+    pub fn unsigned(&mut self, bits: u32) -> i8 {
+        self.below(1 << bits) as i8
+    }
+}
+
+/// Generate a dense activation tensor [ih][iw][ich] (unsigned, post-ReLU
+/// domain) for `l`.
+pub fn synth_acts(l: &LayerConfig, precision: Precision, seed: u64) -> Vec<i8> {
+    let mut r = Lcg::new(seed);
+    (0..(l.ih * l.iw * l.ich) as usize).map(|_| r.unsigned(precision.bits())).collect()
+}
+
+/// Generate dense weights [och][kh][kw][ich] (signed).
+pub fn synth_wts(l: &LayerConfig, precision: Precision, seed: u64) -> Vec<i8> {
+    let mut r = Lcg::new(seed ^ 0x5EED);
+    (0..(l.och * l.kh * l.kw * l.ich) as usize).map(|_| r.signed(precision.bits())).collect()
+}
+
+/// Sub-byte elements per DIMC row-tile at `p`.
+pub fn elems_per_tile(p: Precision) -> u32 {
+    (crate::arch::DIMC_ROW_BITS as u32) / p.bits()
+}
+
+// ---------------------------------------------------------------- DIMC --
+
+/// Pack activations for the DIMC path. `x` is dense [ih][iw][ich].
+pub fn pack_acts_dimc(l: &LayerConfig, p: Precision, x: &[i8]) -> Vec<u8> {
+    assert_eq!(x.len(), (l.ih * l.iw * l.ich) as usize);
+    let bits = p.bits();
+    let ihp = l.ih + 2 * l.pad;
+    let iwp = l.iw + 2 * l.pad;
+    let ich_pad = l.ich_pad(p);
+    let total = (ihp * iwp * ich_pad) as usize;
+    let mut out = vec![0u8; total * bits as usize / 8];
+    for y in 0..l.ih {
+        for xx in 0..l.iw {
+            for c in 0..l.ich {
+                let v = x[((y * l.iw + xx) * l.ich + c) as usize];
+                let idx = (((y + l.pad) * iwp + (xx + l.pad)) * ich_pad + c) as usize;
+                pack_elem(&mut out, idx, bits, v as u8);
+            }
+        }
+    }
+    out
+}
+
+/// Pack weights for the DIMC path: one 128-byte row image per
+/// (output channel, tile). `w` is dense [och][kh][kw][ich].
+pub fn pack_wts_dimc(l: &LayerConfig, p: Precision, w: &[i8]) -> Vec<u8> {
+    assert_eq!(w.len(), (l.och * l.kh * l.kw * l.ich) as usize);
+    let bits = p.bits();
+    let tiles = l.tiles(p);
+    let och_pad = l.groups() * DIMC_ROWS as u32;
+    let ept = elems_per_tile(p);
+    let ich_pad = l.ich_pad(p);
+    let mut out = vec![0u8; (och_pad * tiles) as usize * DIMC_ROW_BYTES];
+    for oc in 0..l.och {
+        for ky in 0..l.kh {
+            for kx in 0..l.kw {
+                for c in 0..l.ich {
+                    let v = w[(((oc * l.kh + ky) * l.kw + kx) * l.ich + c) as usize];
+                    // element index within the (padded) patch vector
+                    let k = (ky * l.kw + kx) * ich_pad + c;
+                    let t = k / ept;
+                    let off = k % ept;
+                    let chunk = ((oc * tiles + t) as usize) * DIMC_ROW_BYTES;
+                    pack_elem(&mut out[chunk..chunk + DIMC_ROW_BYTES], off as usize, bits, v as u8);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Unpack the DIMC output buffer into dense [oh][ow][och] (the quantized
+/// post-ReLU values in [0, 2^bits)).
+pub fn unpack_out_dimc(l: &LayerConfig, _p: Precision, bytes: &[u8]) -> Vec<u8> {
+    let och_pad = l.groups() * DIMC_ROWS as u32;
+    let mut out = Vec::with_capacity((l.patches() * l.och as u64) as usize);
+    for pidx in 0..l.patches() as u32 {
+        for oc in 0..l.och {
+            // DC.F packs at nibble granularity regardless of precision
+            // (sub-nibble results are zero-padded to 4 bits, §IV-A).
+            let idx = (pidx * och_pad + oc) as usize;
+            out.push(crate::dimc::mac::extract_unsigned(bytes, idx, 4) as u8);
+        }
+    }
+    out
+}
+
+/// Bytes the packed DIMC output occupies.
+pub fn out_bytes_dimc(l: &LayerConfig) -> usize {
+    let och_pad = l.groups() * DIMC_ROWS as u32;
+    (l.patches() as usize * och_pad as usize).div_ceil(2)
+}
+
+// ------------------------------------------------------------ baseline --
+
+/// Baseline channel padding (byte layout, 64-bit alignment of runs).
+pub fn ich_pad8(l: &LayerConfig) -> u32 {
+    l.ich.div_ceil(8) * 8
+}
+
+/// Baseline padded kernel length.
+pub fn k_pad8(l: &LayerConfig) -> u32 {
+    ich_pad8(l) * l.kh * l.kw
+}
+
+/// Pack activations for the baseline int8 path (padded NHWC bytes).
+pub fn pack_acts_int8(l: &LayerConfig, x: &[i8]) -> Vec<u8> {
+    assert_eq!(x.len(), (l.ih * l.iw * l.ich) as usize);
+    let ihp = l.ih + 2 * l.pad;
+    let iwp = l.iw + 2 * l.pad;
+    let icp = ich_pad8(l);
+    let mut out = vec![0u8; (ihp * iwp * icp) as usize];
+    for y in 0..l.ih {
+        for xx in 0..l.iw {
+            for c in 0..l.ich {
+                out[(((y + l.pad) * iwp + (xx + l.pad)) * icp + c) as usize] =
+                    x[((y * l.iw + xx) * l.ich + c) as usize] as u8;
+            }
+        }
+    }
+    out
+}
+
+/// Pack weights for the baseline path: `oc`-major, run-padded.
+pub fn pack_wts_int8(l: &LayerConfig, w: &[i8]) -> Vec<u8> {
+    assert_eq!(w.len(), (l.och * l.kh * l.kw * l.ich) as usize);
+    let icp = ich_pad8(l);
+    let kp = k_pad8(l);
+    let mut out = vec![0u8; (l.och * kp) as usize];
+    for oc in 0..l.och {
+        for ky in 0..l.kh {
+            for kx in 0..l.kw {
+                for c in 0..l.ich {
+                    out[(oc * kp + (ky * l.kw + kx) * icp + c) as usize] =
+                        w[(((oc * l.kh + ky) * l.kw + kx) * l.ich + c) as usize] as u8;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reference convolution in i32 (the pre-requantization accumulator) over
+/// the dense tensors — the oracle both paths are checked against.
+pub fn ref_conv_i32(l: &LayerConfig, x: &[i8], w: &[i8]) -> Vec<i32> {
+    let (oh, ow) = (l.oh(), l.ow());
+    let mut out = vec![0i32; (oh * ow * l.och) as usize];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for oc in 0..l.och {
+                let mut acc = 0i32;
+                for ky in 0..l.kh {
+                    for kx in 0..l.kw {
+                        let y = (oy * l.stride + ky) as i64 - l.pad as i64;
+                        let xx = (ox * l.stride + kx) as i64 - l.pad as i64;
+                        if y < 0 || xx < 0 || y >= l.ih as i64 || xx >= l.iw as i64 {
+                            continue;
+                        }
+                        for c in 0..l.ich {
+                            let a = x[((y as u32 * l.iw + xx as u32) * l.ich + c) as usize] as i32;
+                            let ww =
+                                w[(((oc * l.kh + ky) * l.kw + kx) * l.ich + c) as usize] as i32;
+                            acc += a * ww;
+                        }
+                    }
+                }
+                out[((oy * ow + ox) * l.och + oc) as usize] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// The shared requantization reference (matches `dimc::mac::requantize`
+/// with ReLU): `clamp(max(acc,0) >> shift, 0, 2^bits - 1)`.
+pub fn ref_requant(acc: i32, shift: u8, bits: u32) -> u8 {
+    ((acc.max(0) >> shift).clamp(0, (1 << bits) - 1)) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_layer() -> LayerConfig {
+        LayerConfig::conv("t", 3, 4, 2, 2, 4, 4, 1, 1)
+    }
+
+    #[test]
+    fn synth_is_deterministic_and_in_range() {
+        let l = small_layer();
+        let a = synth_acts(&l, Precision::Int4, 7);
+        let b = synth_acts(&l, Precision::Int4, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&v| (0..16).contains(&v)));
+        let w = synth_wts(&l, Precision::Int4, 7);
+        assert!(w.iter().all(|&v| (-8..8).contains(&v)));
+        assert_ne!(synth_acts(&l, Precision::Int4, 8), a);
+    }
+
+    #[test]
+    fn act_packing_places_padding() {
+        let l = small_layer(); // pad=1 -> ihp=iwp=6, ich_pad=16
+        let x: Vec<i8> = (0..48).map(|i| (i % 15) as i8).collect();
+        let packed = pack_acts_dimc(&l, Precision::Int4, &x);
+        assert_eq!(packed.len(), 6 * 6 * 16 / 2);
+        // (0,0) zero-padded ring
+        assert_eq!(packed[0], 0);
+        // element (y=0,x=0,c=0) of the dense tensor lands at padded (1,1):
+        let idx = (1 * 6 + 1) * 16;
+        assert_eq!(crate::dimc::mac::extract_unsigned(&packed, idx, 4), x[0] as u32);
+    }
+
+    #[test]
+    fn wt_packing_row_images() {
+        let l = small_layer();
+        let w = synth_wts(&l, Precision::Int4, 3);
+        let packed = pack_wts_dimc(&l, Precision::Int4, &w);
+        // och_pad = 32, tiles = 1 (k_pad = 2*2*16 = 64 elems = 256 bits)
+        assert_eq!(packed.len(), 32 * 128);
+        // oc=1, (ky=0,kx=0,c=0) -> k=0 -> chunk 1, offset 0
+        let v = crate::dimc::mac::extract_signed(&packed[128..256], 0, 4);
+        assert_eq!(v, w[(1 * 2 * 2 * 3) as usize] as i32);
+        // channels beyond ich are zero
+        let z = crate::dimc::mac::extract_unsigned(&packed[128..256], 3, 4);
+        assert_eq!(z, 0);
+    }
+
+    #[test]
+    fn ref_conv_identity_kernel() {
+        // 1x1 conv, och=ich=1, weight=2: output = 2*input.
+        let l = LayerConfig::conv("id", 1, 1, 1, 1, 3, 3, 1, 0);
+        let x: Vec<i8> = (1..=9).collect();
+        let w = vec![2i8];
+        let out = ref_conv_i32(&l, &x, &w);
+        assert_eq!(out, vec![2, 4, 6, 8, 10, 12, 14, 16, 18]);
+    }
+
+    #[test]
+    fn ref_conv_padding_contributes_zero() {
+        let l = LayerConfig::conv("p", 1, 1, 3, 3, 2, 2, 1, 1);
+        let x = vec![1i8, 1, 1, 1];
+        let w = vec![1i8; 9];
+        let out = ref_conv_i32(&l, &x, &w);
+        // center taps only: each output sees all four 1s exactly once
+        assert_eq!(out, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn requant_matches_dimc_mac() {
+        use crate::dimc::{mac, DimcConfig};
+        let cfg = DimcConfig { requant_shift: 3, relu: true, ..Default::default() };
+        for acc in [-100, -1, 0, 5, 63, 64, 1000] {
+            assert_eq!(ref_requant(acc, 3, 4), mac::requantize(acc, &cfg));
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Layer programs: phase-structured instruction streams.
+//!
+//! Each phase is a loop with `trips` iterations; `gen(t)` produces the
+//! straight-line body of trip `t`. All trips of one phase share the same
+//! opcode/register schedule — only `li`-materialized address constants
+//! differ — so the trace engine can time `gen(0)` and extrapolate
+//! (`pipeline::trace`), while the functional driver flattens every trip
+//! when bit-exact results are needed.
+
+use crate::isa::{AluOp, Instr, VType};
+use crate::pipeline::trace::Phase;
+
+/// Coarse phase role (used for naming/diagnostics; the paper's Fig. 6
+/// operation distribution is computed from per-instruction classes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// One-time setup (vector config, constants).
+    Setup,
+    /// Kernel-weight loading into DIMC memory.
+    WeightLoad,
+    /// Patch sweep: feature load + compute + write-back.
+    Sweep,
+}
+
+/// One loop of the layer program.
+pub struct PhaseSpec {
+    pub name: String,
+    pub kind: PhaseKind,
+    pub trips: u64,
+    gen: Box<dyn Fn(u64) -> Vec<Instr> + Send + Sync>,
+}
+
+impl PhaseSpec {
+    pub fn new(
+        name: impl Into<String>,
+        kind: PhaseKind,
+        trips: u64,
+        gen: impl Fn(u64) -> Vec<Instr> + Send + Sync + 'static,
+    ) -> Self {
+        PhaseSpec { name: name.into(), kind, trips, gen: Box::new(gen) }
+    }
+
+    /// Body of trip `t`.
+    pub fn body(&self, t: u64) -> Vec<Instr> {
+        (self.gen)(t)
+    }
+
+    /// Representative phase for the trace engine (body of trip 0).
+    pub fn rep(&self) -> Phase {
+        Phase::new(self.name.clone(), self.trips, self.body(0))
+    }
+}
+
+/// Memory map of a compiled layer (shared between the code generator, the
+/// functional driver that places tensors, and the result unpacker).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemLayout {
+    /// Packed activations (padded layout — see `pack`).
+    pub act_base: u32,
+    /// Packed kernel weights in the generator's row/tile order.
+    pub wt_base: u32,
+    /// Partial-sum spill area (tiled kernels only).
+    pub psum_base: u32,
+    /// Packed outputs.
+    pub out_base: u32,
+}
+
+impl Default for MemLayout {
+    fn default() -> Self {
+        // Small fixed windows for hand-written programs/tests.
+        MemLayout {
+            act_base: 0x0001_0000,
+            wt_base: 0x0010_0000,
+            psum_base: 0x0020_0000,
+            out_base: 0x0030_0000,
+        }
+    }
+}
+
+impl MemLayout {
+    /// Compact, per-layer layout: regions packed back-to-back (64-byte
+    /// aligned) so the simulated memory footprint tracks the actual
+    /// tensor sizes instead of fixed far-apart windows — the simulator's
+    /// backing store stays proportional to the layer.
+    pub fn compact(act_bytes: u64, wt_bytes: u64, psum_bytes: u64) -> Self {
+        let align = |x: u64| ((x + 63) / 64) * 64;
+        let act_base = 0x1000u64;
+        let wt_base = act_base + align(act_bytes);
+        let psum_base = wt_base + align(wt_bytes);
+        let out_base = psum_base + align(psum_bytes);
+        MemLayout {
+            act_base: act_base as u32,
+            wt_base: wt_base as u32,
+            psum_base: psum_base as u32,
+            out_base: out_base as u32,
+        }
+    }
+}
+
+/// A fully lowered layer: phases + memory map + static instruction count.
+pub struct LayerProgram {
+    pub phases: Vec<PhaseSpec>,
+    pub layout: MemLayout,
+}
+
+impl LayerProgram {
+    /// Trace-engine view (one representative body per phase).
+    pub fn rep_phases(&self) -> Vec<Phase> {
+        self.phases.iter().map(|p| p.rep()).collect()
+    }
+
+    /// Flatten every trip into one straight-line stream (functional mode).
+    /// Appends `Halt` so the result is directly runnable.
+    pub fn flatten(&self) -> Vec<Instr> {
+        let mut out = Vec::new();
+        for p in &self.phases {
+            for t in 0..p.trips {
+                out.extend(p.body(t));
+            }
+        }
+        out.push(Instr::Halt);
+        out
+    }
+
+    /// Total instruction count (without executing).
+    pub fn static_instrs(&self) -> u64 {
+        self.phases.iter().map(|p| p.trips * p.body(0).len() as u64).sum()
+    }
+}
+
+/// Straight-line code emitter with the fixed register conventions of the
+/// generators:
+///
+/// * `x5`, `x6` — address scratch (always materialized as `lui+addi` so
+///   every trip has an identical schedule regardless of the constant),
+/// * `x7` — walking pointer, `x28..x30` — scalar requant temps,
+/// * `v1..v7` — small scratch (`v6` = zero partial-sum source),
+/// * `v8..v23` — streaming data slice, `v24..v31` — psums / outputs.
+#[derive(Default)]
+pub struct Emitter {
+    pub code: Vec<Instr>,
+}
+
+impl Emitter {
+    pub fn new() -> Self {
+        Emitter { code: Vec::with_capacity(64) }
+    }
+
+    pub fn push(&mut self, i: Instr) -> &mut Self {
+        self.code.push(i);
+        self
+    }
+
+    /// Materialize a 32-bit constant into `rd`. ALWAYS two instructions
+    /// (`lui` + `addi`) so bodies stay trip-invariant in shape.
+    pub fn li(&mut self, rd: u8, val: u32) -> &mut Self {
+        let v = val as i32;
+        let lo = (v << 20) >> 20;
+        let hi = (v.wrapping_sub(lo)) >> 12;
+        self.push(Instr::Lui { rd, imm: hi & 0xfffff });
+        self.push(Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: lo });
+        self
+    }
+
+    /// `addi rd, rs1, imm` (imm must fit 12 bits).
+    pub fn addi(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self {
+        debug_assert!((-2048..2048).contains(&imm));
+        self.push(Instr::OpImm { op: AluOp::Add, rd, rs1, imm })
+    }
+
+    /// `vsetvli x0, x0-with-avl` — we emit the immediate form for clarity.
+    pub fn vcfg(&mut self, avl: u8, sew: u16, lmul: u8) -> &mut Self {
+        self.push(Instr::Vsetivli { rd: 0, uimm: avl, vtype: VType::new(sew, lmul) })
+    }
+
+    pub fn vle8(&mut self, vd: u8, rs1: u8) -> &mut Self {
+        self.push(Instr::Vle { eew: 8, vd, rs1 })
+    }
+
+    pub fn vse8(&mut self, vs3: u8, rs1: u8) -> &mut Self {
+        self.push(Instr::Vse { eew: 8, vs3, rs1 })
+    }
+
+    pub fn vle32(&mut self, vd: u8, rs1: u8) -> &mut Self {
+        self.push(Instr::Vle { eew: 32, vd, rs1 })
+    }
+
+    pub fn vse32(&mut self, vs3: u8, rs1: u8) -> &mut Self {
+        self.push(Instr::Vse { eew: 32, vs3, rs1 })
+    }
+
+    pub fn finish(self) -> Vec<Instr> {
+        self.code
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+
+    #[test]
+    fn li_is_always_two_instructions() {
+        for v in [0u32, 5, 0x7ff, 0x800, 0xffff_ffff, 0x1234_5678, 0x0010_0000] {
+            let mut e = Emitter::new();
+            e.li(5, v);
+            assert_eq!(e.code.len(), 2, "li {v:#x}");
+            // reconstruct
+            if let (Instr::Lui { imm: hi, .. }, Instr::OpImm { imm: lo, .. }) =
+                (e.code[0], e.code[1])
+            {
+                assert_eq!(((hi << 12) as u32).wrapping_add(lo as u32), v);
+            } else {
+                panic!("wrong expansion");
+            }
+        }
+    }
+
+    #[test]
+    fn phase_rep_uses_trip_zero() {
+        let p = PhaseSpec::new("p", PhaseKind::Sweep, 10, |t| {
+            let mut e = Emitter::new();
+            e.li(5, 0x1000 + t as u32 * 8);
+            e.finish()
+        });
+        assert_eq!(p.rep().trips, 10);
+        assert_eq!(p.rep().body, p.body(0));
+        assert_ne!(p.body(1), p.body(0)); // different constant
+        assert_eq!(p.body(1).len(), p.body(0).len()); // same shape
+    }
+
+    #[test]
+    fn flatten_appends_halt() {
+        let prog = LayerProgram {
+            phases: vec![PhaseSpec::new("a", PhaseKind::Setup, 3, |_| {
+                vec![Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 1, imm: 1 }]
+            })],
+            layout: MemLayout::default(),
+        };
+        let flat = prog.flatten();
+        assert_eq!(flat.len(), 4);
+        assert_eq!(*flat.last().unwrap(), Instr::Halt);
+        assert_eq!(prog.static_instrs(), 3);
+    }
+}

@@ -1,0 +1,286 @@
+//! The per-layer simulation driver.
+//!
+//! Two modes, mirroring the two jobs of the paper's simulator:
+//!
+//! * [`simulate_layer`] — timing: lower the layer, run the trace engine,
+//!   report cycles / GOPS / instruction-class distribution (Figs. 5–9);
+//! * [`run_functional`] — numerics: place real packed tensors in simulated
+//!   memory, flat-execute every instruction, and return the layer's
+//!   outputs for cross-checking against the JAX/Pallas golden model.
+
+use crate::arch::Arch;
+use crate::compiler::baseline::{compile_baseline_with_shift, ref_requant_u8, BASELINE_SHIFT};
+use crate::compiler::layer::LayerConfig;
+use crate::compiler::mapper::compile_dimc;
+use crate::compiler::pack;
+use crate::compiler::program::LayerProgram;
+use crate::dimc::{DimcConfig, Precision};
+use crate::pipeline::core::{Core, RunStats, SimError};
+use crate::pipeline::trace::trace_cycles;
+
+/// Which core executes the layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// DIMC-enhanced RVV core (custom instructions, 4-bit).
+    Dimc,
+    /// Baseline RVV core (pure Zve32x, 8-bit).
+    Baseline,
+}
+
+/// Timing result of one layer on one engine.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    pub name: String,
+    pub engine: Engine,
+    pub cycles: u64,
+    pub instret: u64,
+    pub ops: u64,
+    pub class_counts: [u64; 8],
+    pub clock_hz: f64,
+}
+
+impl LayerResult {
+    /// Achieved throughput in GOPS (ops counted un-padded, as the paper).
+    pub fn gops(&self) -> f64 {
+        self.ops as f64 / (self.cycles as f64 / self.clock_hz) / 1e9
+    }
+
+    /// Fraction of instructions in the classes (compute, load, store) —
+    /// the paper's Fig. 6 operation distribution.
+    pub fn distribution(&self) -> (f64, f64, f64) {
+        let c = &self.class_counts;
+        // compute: DIMC compute + vector ALU; load: vector load + DIMC
+        // load; store: vector store. Scalar/config excluded, as the
+        // paper's figure reports the data-path operations.
+        let compute = (c[2] + c[6]) as f64;
+        let load = (c[3] + c[5]) as f64;
+        let store = c[4] as f64;
+        let tot = (compute + load + store).max(1.0);
+        (compute / tot, load / tot, store / tot)
+    }
+}
+
+/// Compile `l` for `engine` at the default precision (Int4 / int8).
+pub fn compile(l: &LayerConfig, engine: Engine) -> LayerProgram {
+    match engine {
+        Engine::Dimc => compile_dimc(l, Precision::Int4),
+        Engine::Baseline => compile_baseline_with_shift(l, BASELINE_SHIFT),
+    }
+}
+
+fn fresh_core_with(arch: Arch, engine: Engine, precision: Precision) -> Core {
+    let mut core = Core::new(arch);
+    if engine == Engine::Dimc {
+        core.dimc.cfg = DimcConfig {
+            precision,
+            act_signed: false,
+            requant_shift: BASELINE_SHIFT,
+            relu: true,
+        };
+    }
+    core
+}
+
+fn fresh_core(engine: Engine, precision: Precision) -> Core {
+    fresh_core_with(Arch::default(), engine, precision)
+}
+
+/// Timing simulation (trace engine, data-free).
+pub fn simulate_layer(l: &LayerConfig, engine: Engine) -> Result<LayerResult, SimError> {
+    simulate_layer_at(l, engine, Precision::Int4)
+}
+
+/// Timing simulation at an explicit DIMC precision (2-/1-bit modes).
+pub fn simulate_layer_at(
+    l: &LayerConfig,
+    engine: Engine,
+    precision: Precision,
+) -> Result<LayerResult, SimError> {
+    simulate_layer_with_arch(l, engine, precision, Arch::default())
+}
+
+/// Timing simulation under an explicit architecture configuration —
+/// the entry point of the ablation studies (issue width, memory latency,
+/// DIMC pipeline depth).
+pub fn simulate_layer_with_arch(
+    l: &LayerConfig,
+    engine: Engine,
+    precision: Precision,
+    arch: Arch,
+) -> Result<LayerResult, SimError> {
+    let prog = match engine {
+        Engine::Dimc => compile_dimc(l, precision),
+        Engine::Baseline => compile_baseline_with_shift(l, BASELINE_SHIFT),
+    };
+    let mut core = fresh_core_with(arch, engine, precision);
+    core.timing_only = true; // data payload never steers mapper timing
+    let stats = trace_cycles(&mut core, &prog.rep_phases())?;
+    Ok(LayerResult {
+        name: l.name.clone(),
+        engine,
+        cycles: stats.cycles,
+        instret: stats.instret,
+        ops: l.ops(),
+        class_counts: stats.class_counts,
+        clock_hz: core.arch.clock_hz,
+    })
+}
+
+/// Functional output of one layer (plus run stats).
+pub struct FunctionalRun {
+    /// Dense per-(patch, output-channel) quantized outputs.
+    pub outputs: Vec<u8>,
+    pub stats: RunStats,
+}
+
+/// Flat-execute `l` on `engine` with dense activation/weight tensors
+/// (values already in the engine's numeric range). Returns the quantized
+/// outputs in dense [oh][ow][och] order.
+pub fn run_functional(
+    l: &LayerConfig,
+    engine: Engine,
+    acts: &[i8],
+    wts: &[i8],
+    shift: u8,
+) -> Result<FunctionalRun, SimError> {
+    let precision = Precision::Int4;
+    let mut core = fresh_core(engine, precision);
+    core.dimc.cfg.requant_shift = shift;
+    let prog = match engine {
+        Engine::Dimc => compile_dimc(l, precision),
+        Engine::Baseline => compile_baseline_with_shift(l, shift),
+    };
+    match engine {
+        Engine::Dimc => {
+            core.mem.write_direct(prog.layout.act_base, &pack::pack_acts_dimc(l, precision, acts));
+            core.mem.write_direct(prog.layout.wt_base, &pack::pack_wts_dimc(l, precision, wts));
+        }
+        Engine::Baseline => {
+            core.mem.write_direct(prog.layout.act_base, &pack::pack_acts_int8(l, acts));
+            core.mem.write_direct(prog.layout.wt_base, &pack::pack_wts_int8(l, wts));
+        }
+    }
+    let flat = prog.flatten();
+    let stats = core.run(&flat, u64::MAX)?;
+    let outputs = match engine {
+        Engine::Dimc => {
+            let bytes = core.mem.read_direct(prog.layout.out_base, pack::out_bytes_dimc(l));
+            pack::unpack_out_dimc(l, precision, &bytes)
+        }
+        Engine::Baseline => {
+            core.mem.read_direct(prog.layout.out_base, (l.patches() * l.och as u64) as usize)
+        }
+    };
+    Ok(FunctionalRun { outputs, stats })
+}
+
+/// Pure-Rust reference outputs for `engine` (the conv oracle + the
+/// engine's own requantization rule).
+pub fn reference_outputs(
+    l: &LayerConfig,
+    engine: Engine,
+    acts: &[i8],
+    wts: &[i8],
+    shift: u8,
+) -> Vec<u8> {
+    let accs = pack::ref_conv_i32(l, acts, wts);
+    match engine {
+        Engine::Dimc => accs.iter().map(|&a| pack::ref_requant(a, shift, 4)).collect(),
+        Engine::Baseline => accs.iter().map(|&a| ref_requant_u8(a, shift)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_layer(l: &LayerConfig, engine: Engine) {
+        let p = Precision::Int4;
+        let acts = pack::synth_acts(l, p, 0xA11CE + l.ich as u64);
+        let wts = pack::synth_wts(l, p, 0xB0B + l.och as u64);
+        let shift = 4;
+        let run = run_functional(l, engine, &acts, &wts, shift).unwrap();
+        let want = reference_outputs(l, engine, &acts, &wts, shift);
+        assert_eq!(run.outputs.len(), want.len(), "{l} {engine:?}");
+        assert_eq!(run.outputs, want, "{l} on {engine:?} mismatches the conv oracle");
+    }
+
+    #[test]
+    fn dimc_functional_single_tile() {
+        check_layer(&LayerConfig::conv("s1", 16, 8, 2, 2, 5, 5, 1, 0), Engine::Dimc);
+    }
+
+    #[test]
+    fn dimc_functional_full_group() {
+        check_layer(&LayerConfig::conv("s2", 32, 32, 1, 1, 4, 4, 1, 0), Engine::Dimc);
+    }
+
+    #[test]
+    fn dimc_functional_tiled() {
+        // k_pad = 2*2*80 = 320 elems -> 2 tiles: exercises DC.P chaining.
+        check_layer(&LayerConfig::conv("s3", 80, 8, 2, 2, 4, 4, 1, 0), Engine::Dimc);
+    }
+
+    #[test]
+    fn dimc_functional_grouped() {
+        // och = 48 -> 2 groups: exercises kernel reloading.
+        check_layer(&LayerConfig::conv("s4", 16, 48, 1, 1, 3, 3, 1, 0), Engine::Dimc);
+    }
+
+    #[test]
+    fn dimc_functional_strided_padded() {
+        check_layer(&LayerConfig::conv("s5", 8, 8, 3, 3, 7, 7, 2, 1), Engine::Dimc);
+    }
+
+    #[test]
+    fn dimc_functional_tiled_and_grouped() {
+        check_layer(&LayerConfig::conv("s6", 96, 40, 2, 2, 3, 3, 1, 0), Engine::Dimc);
+    }
+
+    #[test]
+    fn dimc_functional_fc() {
+        check_layer(&LayerConfig::fc("fc", 300, 40), Engine::Dimc);
+    }
+
+    #[test]
+    fn baseline_functional_conv() {
+        check_layer(&LayerConfig::conv("b1", 16, 8, 2, 2, 5, 5, 1, 0), Engine::Baseline);
+    }
+
+    #[test]
+    fn baseline_functional_padded() {
+        check_layer(&LayerConfig::conv("b2", 8, 4, 3, 3, 6, 6, 1, 1), Engine::Baseline);
+    }
+
+    #[test]
+    fn baseline_functional_fc() {
+        check_layer(&LayerConfig::fc("bfc", 64, 10), Engine::Baseline);
+    }
+
+    #[test]
+    fn timing_trace_matches_flat() {
+        // The trace engine's cycle count must equal flat execution.
+        let l = LayerConfig::conv("tt", 32, 32, 2, 2, 6, 6, 1, 0);
+        for engine in [Engine::Dimc, Engine::Baseline] {
+            let traced = simulate_layer(&l, engine).unwrap();
+            let prog = compile(&l, engine);
+            let mut core = fresh_core(engine, Precision::Int4);
+            let flat = prog.flatten();
+            let stats = core.run(&flat, u64::MAX).unwrap();
+            // flat has one extra Halt instruction
+            assert_eq!(traced.instret + 1, stats.instret, "{engine:?}");
+            let d = traced.cycles.abs_diff(stats.cycles);
+            assert!(d <= 2, "{engine:?}: trace {} vs flat {}", traced.cycles, stats.cycles);
+        }
+    }
+
+    #[test]
+    fn dimc_beats_baseline() {
+        let l = LayerConfig::conv("sp", 64, 64, 3, 3, 14, 14, 1, 1);
+        let d = simulate_layer(&l, Engine::Dimc).unwrap();
+        let b = simulate_layer(&l, Engine::Baseline).unwrap();
+        let speedup = b.cycles as f64 / d.cycles as f64;
+        assert!(speedup > 20.0, "speedup only {speedup:.1}x");
+        assert!(d.gops() > 10.0, "gops only {:.1}", d.gops());
+    }
+}

@@ -1,0 +1,11 @@
+//! Orchestration: run layers/networks through the simulator, compare the
+//! DIMC-enhanced core against the baseline, cross-check numerics against
+//! the AOT-compiled JAX/Pallas golden model, and regenerate the paper's
+//! figures and tables.
+
+pub mod cli;
+pub mod figures;
+pub mod driver;
+pub mod verify;
+
+pub use driver::{simulate_layer, Engine, LayerResult};

@@ -1,0 +1,118 @@
+//! End-to-end functional verification: the cycle simulator's outputs
+//! (L3: custom instructions through the pipeline + DIMC tile) against the
+//! AOT-compiled JAX/Pallas golden model executed via PJRT (L2 + L1).
+//!
+//! This is the three-layer composition proof: the same synthetic tensors
+//! flow through (a) the Rust instruction-level simulation and (b) the
+//! XLA-compiled Pallas kernel, and the quantized outputs must be
+//! bit-identical.
+
+use crate::compiler::layer::LayerConfig;
+use crate::compiler::pack::{synth_acts, synth_wts};
+use crate::coordinator::driver::{run_functional, Engine};
+use crate::dimc::Precision;
+use crate::runtime::Golden;
+use anyhow::{Context, Result};
+
+/// The layer shapes baked into the AOT artifacts (must match
+/// `python/compile/aot.py` CONV_SPEC / GEMM_SPEC).
+pub fn conv_artifact_layer() -> LayerConfig {
+    LayerConfig::conv("conv_golden", 16, 8, 2, 2, 5, 5, 1, 0)
+}
+
+pub fn gemm_artifact_layer() -> LayerConfig {
+    LayerConfig::fc("gemm_golden", 64, 10)
+}
+
+/// Shift baked into the artifacts.
+pub const ARTIFACT_SHIFT: u8 = 4;
+
+/// Outcome of one cross-check.
+#[derive(Debug)]
+pub struct VerifyReport {
+    pub layer: String,
+    pub outputs: usize,
+    pub mismatches: usize,
+    pub sim_cycles: u64,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.mismatches == 0
+    }
+}
+
+fn dense_i32(v: &[i8]) -> Vec<i32> {
+    v.iter().map(|&x| x as i32).collect()
+}
+
+/// Cross-check the conv artifact against the simulator.
+pub fn verify_conv(seed: u64) -> Result<VerifyReport> {
+    let l = conv_artifact_layer();
+    let acts = synth_acts(&l, Precision::Int4, seed);
+    let wts = synth_wts(&l, Precision::Int4, seed);
+
+    // (a) instruction-level simulation
+    let sim = run_functional(&l, Engine::Dimc, &acts, &wts, ARTIFACT_SHIFT)
+        .map_err(|e| anyhow::anyhow!("simulation failed: {e}"))?;
+
+    // (b) PJRT-executed JAX/Pallas golden model
+    let golden = Golden::load_artifact("conv_golden.hlo.txt")?;
+    let x = dense_i32(&acts);
+    let w = dense_i32(&wts);
+    let out = golden
+        .run_i32(&[
+            (&x, &[l.ih as i64, l.iw as i64, l.ich as i64]),
+            (&w, &[l.och as i64, l.kh as i64, l.kw as i64, l.ich as i64]),
+        ])
+        .context("executing conv golden")?;
+
+    let mismatches = sim
+        .outputs
+        .iter()
+        .zip(out.iter())
+        .filter(|(a, b)| **a as i32 != **b)
+        .count();
+    Ok(VerifyReport {
+        layer: l.name,
+        outputs: out.len(),
+        mismatches,
+        sim_cycles: sim.stats.cycles,
+    })
+}
+
+/// Cross-check the FC artifact against the simulator.
+pub fn verify_gemm(seed: u64) -> Result<VerifyReport> {
+    let l = gemm_artifact_layer();
+    let acts = synth_acts(&l, Precision::Int4, seed);
+    let wts = synth_wts(&l, Precision::Int4, seed);
+
+    let sim = run_functional(&l, Engine::Dimc, &acts, &wts, ARTIFACT_SHIFT)
+        .map_err(|e| anyhow::anyhow!("simulation failed: {e}"))?;
+
+    let golden = Golden::load_artifact("gemm_golden.hlo.txt")?;
+    let x = dense_i32(&acts);
+    let w = dense_i32(&wts);
+    let out = golden
+        .run_i32(&[(&x, &[l.ich as i64]), (&w, &[l.och as i64, l.ich as i64])])
+        .context("executing gemm golden")?;
+
+    let mismatches =
+        sim.outputs.iter().zip(out.iter()).filter(|(a, b)| **a as i32 != **b).count();
+    Ok(VerifyReport {
+        layer: l.name,
+        outputs: out.len(),
+        mismatches,
+        sim_cycles: sim.stats.cycles,
+    })
+}
+
+/// Run every golden cross-check with several seeds.
+pub fn verify_all(seeds: &[u64]) -> Result<Vec<VerifyReport>> {
+    let mut reports = Vec::new();
+    for &s in seeds {
+        reports.push(verify_conv(s)?);
+        reports.push(verify_gemm(s)?);
+    }
+    Ok(reports)
+}

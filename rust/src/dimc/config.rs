@@ -1,0 +1,96 @@
+//! DIMC tile configuration: compute precision and the write-back
+//! (ReLU + requantize) stage parameters.
+
+/// Compute precision of the MAC slices. The same hardware performs
+/// 256 x 4-bit, 512 x 2-bit or 1024 x 1-bit MACs per cycle (paper §III).
+///
+/// This maps one-to-one onto the 2-bit `width` field of the `DC.*`
+/// instructions (0 = Int4, 1 = Int2, 2 = Int1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    #[default]
+    Int4,
+    Int2,
+    Int1,
+}
+
+impl Precision {
+    /// Bits per operand element.
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Int4 => 4,
+            Precision::Int2 => 2,
+            Precision::Int1 => 1,
+        }
+    }
+
+    /// Parallel MAC lanes per compute (one full row / buffer width).
+    pub fn lanes(self) -> usize {
+        crate::arch::DIMC_ROW_BITS / self.bits() as usize
+    }
+
+    /// Encoding for the `width` instruction field.
+    pub fn width_field(self) -> u8 {
+        match self {
+            Precision::Int4 => 0,
+            Precision::Int2 => 1,
+            Precision::Int1 => 2,
+        }
+    }
+
+    /// Decode the `width` instruction field.
+    pub fn from_width_field(w: u8) -> Option<Self> {
+        match w {
+            0 => Some(Precision::Int4),
+            1 => Some(Precision::Int2),
+            2 => Some(Precision::Int1),
+            _ => None,
+        }
+    }
+}
+
+/// Static tile configuration.
+///
+/// The paper's tile exposes these knobs through memory-mapped configuration
+/// registers of the macro plus the `width` field of the compute
+/// instructions; the mapper fixes them per layer before emitting code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DimcConfig {
+    /// MAC precision (also carried redundantly in each `DC.*` `width`).
+    pub precision: Precision,
+    /// Whether input-buffer activations are treated as signed. Weights are
+    /// always signed. Post-ReLU activations are unsigned in the paper's
+    /// CNN flow (signed mode exists for first-layer / residual inputs).
+    pub act_signed: bool,
+    /// Arithmetic right-shift applied by the `DC.F` requantizer before
+    /// clamping (the layer's output scale).
+    pub requant_shift: u8,
+    /// Whether `DC.F` applies the optional ReLU stage before requantizing.
+    pub relu: bool,
+}
+
+impl Default for DimcConfig {
+    fn default() -> Self {
+        DimcConfig { precision: Precision::Int4, act_signed: false, requant_shift: 6, relu: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_match_paper() {
+        assert_eq!(Precision::Int4.lanes(), 256);
+        assert_eq!(Precision::Int2.lanes(), 512);
+        assert_eq!(Precision::Int1.lanes(), 1024);
+    }
+
+    #[test]
+    fn width_field_roundtrip() {
+        for p in [Precision::Int4, Precision::Int2, Precision::Int1] {
+            assert_eq!(Precision::from_width_field(p.width_field()), Some(p));
+        }
+        assert_eq!(Precision::from_width_field(3), None);
+    }
+}

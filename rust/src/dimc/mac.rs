@@ -1,0 +1,212 @@
+//! Bit-exact MAC-slice arithmetic: packed sub-byte element extraction,
+//! the row x input-buffer dot product, 24-bit accumulator wrap, and the
+//! ReLU + requantize write-back stage of `DC.F`.
+
+use super::config::DimcConfig;
+use crate::arch::{DIMC_ACC_BITS, DIMC_ROW_BYTES};
+
+/// Extract element `idx` (little-endian sub-byte order: element 0 is the
+/// least-significant field of byte 0) from a packed buffer, unsigned.
+#[inline]
+pub fn extract_unsigned(buf: &[u8], idx: usize, bits: u32) -> u32 {
+    debug_assert!(bits == 1 || bits == 2 || bits == 4 || bits == 8);
+    let per_byte = (8 / bits) as usize;
+    let byte = buf[idx / per_byte];
+    let shift = (idx % per_byte) as u32 * bits;
+    ((byte >> shift) as u32) & ((1u32 << bits) - 1)
+}
+
+/// Extract element `idx` as a signed value (two's complement in `bits`).
+#[inline]
+pub fn extract_signed(buf: &[u8], idx: usize, bits: u32) -> i32 {
+    let u = extract_unsigned(buf, idx, bits);
+    let sign = 1u32 << (bits - 1);
+    if u & sign != 0 {
+        (u as i32) - (1i32 << bits)
+    } else {
+        u as i32
+    }
+}
+
+/// Pack `val` (low `bits` bits) into element `idx` of `buf`.
+#[inline]
+pub fn pack(buf: &mut [u8], idx: usize, bits: u32, val: u8) {
+    let per_byte = (8 / bits) as usize;
+    let shift = (idx % per_byte) as u32 * bits;
+    let mask = (((1u32 << bits) - 1) << shift) as u8;
+    let b = &mut buf[idx / per_byte];
+    *b = (*b & !mask) | ((val << shift) & mask);
+}
+
+/// Wrap a wide accumulation into the 24-bit two's-complement partial-sum
+/// domain of the tile, returned sign-extended into an `i32`.
+#[inline]
+pub fn wrap24(acc: i64) -> i32 {
+    let m = 1i64 << DIMC_ACC_BITS;
+    let w = ((acc % m) + m) % m;
+    if w >= m / 2 {
+        (w - m) as i32
+    } else {
+        w as i32
+    }
+}
+
+/// The in-memory dot product of one 1024-bit row against the 1024-bit
+/// input buffer: all lanes of the configured precision in parallel
+/// (1 cycle through the MAC slices), reduced by the shared accumulation
+/// pipeline. Weights are signed; activations signed or unsigned per
+/// `cfg.act_signed`. The result is *not* yet wrapped — DC.P/DC.F wrap when
+/// folding in the incoming partial sum.
+pub fn row_dot(row: &[u8; DIMC_ROW_BYTES], ibuf: &[u8; DIMC_ROW_BYTES], cfg: &DimcConfig) -> i64 {
+    // Specialized byte-wise loop for the dominant 4-bit unsigned-act mode
+    // (EXPERIMENTS.md §Perf: ~4x over the generic per-lane extract path;
+    // the worst-case |sum| over 1024 1-bit lanes fits i32 comfortably).
+    use crate::dimc::Precision;
+    if cfg.precision == Precision::Int4 && !cfg.act_signed {
+        let mut acc = 0i32;
+        for (rb, ab) in row.iter().zip(ibuf.iter()) {
+            let w0 = ((rb & 0xf) as i32) - (((rb & 0x8) as i32) << 1);
+            let w1 = ((rb >> 4) as i32) - (((rb & 0x80) as i32) >> 3);
+            acc += w0 * ((ab & 0xf) as i32) + w1 * ((ab >> 4) as i32);
+        }
+        return acc as i64;
+    }
+    let bits = cfg.precision.bits();
+    let lanes = cfg.precision.lanes();
+    let mut acc = 0i64;
+    for i in 0..lanes {
+        let w = extract_signed(row, i, bits) as i64;
+        let a = if cfg.act_signed {
+            extract_signed(ibuf, i, bits) as i64
+        } else {
+            extract_unsigned(ibuf, i, bits) as i64
+        };
+        acc += w * a;
+    }
+    acc
+}
+
+/// The `DC.F` write-back stage: optional ReLU, arithmetic right shift by
+/// the configured requantization scale, then clamp to the unsigned output
+/// range of the precision (post-ReLU activations are unsigned; without
+/// ReLU the clamp is symmetric signed and the value is stored in
+/// two's-complement within the nibble).
+pub fn requantize(acc24: i32, cfg: &DimcConfig) -> u8 {
+    let bits = cfg.precision.bits();
+    let v = if cfg.relu { acc24.max(0) } else { acc24 };
+    let v = v >> cfg.requant_shift;
+    if cfg.relu {
+        let hi = (1i32 << bits) - 1;
+        v.clamp(0, hi) as u8
+    } else {
+        let hi = (1i32 << (bits - 1)) - 1;
+        let lo = -(1i32 << (bits - 1));
+        let c = v.clamp(lo, hi);
+        (c as u8) & ((1u16 << bits) as u8).wrapping_sub(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_pack_roundtrip_4b() {
+        let mut buf = [0u8; 4];
+        for (i, v) in [3u8, 15, 8, 0, 7, 9, 1, 14].iter().enumerate() {
+            pack(&mut buf, i, 4, *v);
+        }
+        for (i, v) in [3u32, 15, 8, 0, 7, 9, 1, 14].iter().enumerate() {
+            assert_eq!(extract_unsigned(&buf, i, 4), *v);
+        }
+        // signed views: 15 -> -1, 8 -> -8, 9 -> -7, 14 -> -2
+        assert_eq!(extract_signed(&buf, 1, 4), -1);
+        assert_eq!(extract_signed(&buf, 2, 4), -8);
+        assert_eq!(extract_signed(&buf, 5, 4), -7);
+        assert_eq!(extract_signed(&buf, 7, 4), -2);
+    }
+
+    #[test]
+    fn extract_2b_1b() {
+        let buf = [0b1101_0010u8];
+        assert_eq!(extract_unsigned(&buf, 0, 2), 0b10);
+        assert_eq!(extract_unsigned(&buf, 1, 2), 0b00);
+        assert_eq!(extract_unsigned(&buf, 2, 2), 0b01);
+        assert_eq!(extract_unsigned(&buf, 3, 2), 0b11);
+        assert_eq!(extract_signed(&buf, 3, 2), -1);
+        assert_eq!(extract_unsigned(&buf, 1, 1), 1);
+        assert_eq!(extract_unsigned(&buf, 2, 1), 0);
+        assert_eq!(extract_signed(&buf, 4, 1), -1); // bit 4 set -> -1 in 1b
+    }
+
+    #[test]
+    fn wrap24_behaviour() {
+        assert_eq!(wrap24(0), 0);
+        assert_eq!(wrap24(8_388_607), 8_388_607); // 2^23 - 1
+        assert_eq!(wrap24(8_388_608), -8_388_608); // 2^23 wraps negative
+        assert_eq!(wrap24(-8_388_609), 8_388_607);
+        assert_eq!(wrap24(1 << 24), 0);
+        assert_eq!(wrap24(-1), -1);
+    }
+
+    #[test]
+    fn row_dot_max_magnitude_fits_24b() {
+        // Worst case 4-bit signed x unsigned: 256 lanes * (-8 * 15) = -30720,
+        // comfortably inside the 24-bit accumulator (paper: 24-bit psums).
+        let row = [0x88u8; DIMC_ROW_BYTES]; // all -8
+        let ibuf = [0xffu8; DIMC_ROW_BYTES]; // all 15 (unsigned)
+        let cfg = DimcConfig::default();
+        let d = row_dot(&row, &ibuf, &cfg);
+        assert_eq!(d, -(8 * 15 * 256));
+        assert_eq!(wrap24(d), d as i32);
+    }
+
+    #[test]
+    fn row_dot_signed_acts() {
+        let mut row = [0u8; DIMC_ROW_BYTES];
+        let mut ibuf = [0u8; DIMC_ROW_BYTES];
+        pack(&mut row, 0, 4, 0b1111); // -1
+        pack(&mut ibuf, 0, 4, 0b1110); // -2 signed / 14 unsigned
+        let mut cfg = DimcConfig { act_signed: true, ..Default::default() };
+        assert_eq!(row_dot(&row, &ibuf, &cfg), 2);
+        cfg.act_signed = false;
+        assert_eq!(row_dot(&row, &ibuf, &cfg), -14);
+    }
+
+    #[test]
+    fn specialized_int4_path_matches_generic() {
+        // The byte-wise fast path must agree with per-lane extraction.
+        let mut r = crate::compiler::pack::Lcg::new(0xFA57);
+        let cfg = DimcConfig::default(); // Int4, unsigned acts
+        for _ in 0..50 {
+            let mut row = [0u8; DIMC_ROW_BYTES];
+            let mut ibuf = [0u8; DIMC_ROW_BYTES];
+            for i in 0..DIMC_ROW_BYTES {
+                row[i] = r.below(256) as u8;
+                ibuf[i] = r.below(256) as u8;
+            }
+            let mut generic = 0i64;
+            for i in 0..256 {
+                generic +=
+                    extract_signed(&row, i, 4) as i64 * extract_unsigned(&ibuf, i, 4) as i64;
+            }
+            assert_eq!(row_dot(&row, &ibuf, &cfg), generic);
+        }
+    }
+
+    #[test]
+    fn requantize_relu_path() {
+        let cfg = DimcConfig { requant_shift: 4, relu: true, ..Default::default() };
+        assert_eq!(requantize(-100, &cfg), 0); // ReLU kills negatives
+        assert_eq!(requantize(0x20, &cfg), 2);
+        assert_eq!(requantize(0x7fff, &cfg), 15); // clamps to 4-bit max
+    }
+
+    #[test]
+    fn requantize_no_relu_signed() {
+        let cfg = DimcConfig { requant_shift: 0, relu: false, ..Default::default() };
+        assert_eq!(requantize(-3, &cfg), 0b1101); // -3 in 4-bit two's complement
+        assert_eq!(requantize(100, &cfg), 7); // clamp to +7
+        assert_eq!(requantize(-100, &cfg), 0b1000); // clamp to -8
+    }
+}

@@ -1,0 +1,18 @@
+//! Bit-exact functional model of the DIMC tile (ISSCC'23 [9], Fig. 2 of the
+//! paper): 32 rows x 1024 bits of 8T 1R1W SRAM, a 1024-bit input buffer,
+//! and interleaved MAC slices performing 256 parallel 4-bit MACs per cycle
+//! (reconfigurable to 512 x 2-bit or 1024 x 1-bit), accumulating into
+//! 24-bit partial sums with an optional ReLU + requantize write-back stage.
+//!
+//! The timing of the tile (sense latency, one row-result per cycle through
+//! the shared accumulation pipeline, 256-bit/cycle load interface) lives in
+//! [`crate::pipeline::latency`]; this module is purely functional and is
+//! cross-checked against the JAX/Pallas golden model (`python/compile/
+//! kernels/dimc_mac.py`) through the PJRT runtime.
+
+pub mod config;
+pub mod mac;
+pub mod tile;
+
+pub use config::{DimcConfig, Precision};
+pub use tile::DimcTile;

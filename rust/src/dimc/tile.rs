@@ -1,0 +1,203 @@
+//! Architectural state of one DIMC tile and the semantics of the four
+//! custom instructions against it.
+
+use super::config::DimcConfig;
+use super::mac::{requantize, row_dot, wrap24};
+use crate::arch::{DIMC_ROWS, DIMC_ROW_BYTES, DIMC_SECTORS, DIMC_SECTOR_BYTES};
+
+/// Execution statistics of a tile (for utilization reporting, Fig. 6).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DimcStats {
+    /// Sector loads into the input buffer (DL.I).
+    pub ibuf_loads: u64,
+    /// Sector loads into the weight memory (DL.M).
+    pub mem_loads: u64,
+    /// Compute operations (DC.P + DC.F).
+    pub computes: u64,
+}
+
+/// One DIMC tile: 32 x 1024-bit weight rows + a 1024-bit input buffer.
+#[derive(Clone)]
+pub struct DimcTile {
+    mem: [[u8; DIMC_ROW_BYTES]; DIMC_ROWS],
+    ibuf: [u8; DIMC_ROW_BYTES],
+    pub cfg: DimcConfig,
+    pub stats: DimcStats,
+}
+
+impl Default for DimcTile {
+    fn default() -> Self {
+        Self::new(DimcConfig::default())
+    }
+}
+
+impl DimcTile {
+    pub fn new(cfg: DimcConfig) -> Self {
+        DimcTile {
+            mem: [[0u8; DIMC_ROW_BYTES]; DIMC_ROWS],
+            ibuf: [0u8; DIMC_ROW_BYTES],
+            cfg,
+            stats: DimcStats::default(),
+        }
+    }
+
+    /// Read-only view of a weight row (for tests / debugging).
+    pub fn row(&self, r: usize) -> &[u8; DIMC_ROW_BYTES] {
+        &self.mem[r]
+    }
+
+    /// Read-only view of the input buffer.
+    pub fn ibuf(&self) -> &[u8; DIMC_ROW_BYTES] {
+        &self.ibuf
+    }
+
+    /// `DL.I`: write up to `nvec` 64-bit register images (`data`, 8 bytes
+    /// each, already read from the VRF) into sector `sec` of the input
+    /// buffer. Register `k` lands at sector offset `8k`; bit `k` of `mask`
+    /// gates the write (the paper's valid-bit mask).
+    pub fn load_ibuf(&mut self, sec: u8, data: &[u8], nvec: u8, mask: u8) {
+        debug_assert!((sec as usize) < DIMC_SECTORS);
+        debug_assert_eq!(data.len(), nvec as usize * 8);
+        let base = sec as usize * DIMC_SECTOR_BYTES;
+        for k in 0..nvec as usize {
+            if mask >> k & 1 == 1 {
+                self.ibuf[base + 8 * k..base + 8 * (k + 1)]
+                    .copy_from_slice(&data[8 * k..8 * (k + 1)]);
+            }
+        }
+        self.stats.ibuf_loads += 1;
+    }
+
+    /// `DL.M`: as [`Self::load_ibuf`] but into sector `sec` of row `m_row`.
+    pub fn load_row(&mut self, m_row: u8, sec: u8, data: &[u8], nvec: u8, mask: u8) {
+        debug_assert!((m_row as usize) < DIMC_ROWS && (sec as usize) < DIMC_SECTORS);
+        debug_assert_eq!(data.len(), nvec as usize * 8);
+        let base = sec as usize * DIMC_SECTOR_BYTES;
+        let row = &mut self.mem[m_row as usize];
+        for k in 0..nvec as usize {
+            if mask >> k & 1 == 1 {
+                row[base + 8 * k..base + 8 * (k + 1)].copy_from_slice(&data[8 * k..8 * (k + 1)]);
+            }
+        }
+        self.stats.mem_loads += 1;
+    }
+
+    /// `DC.P`: in-memory MAC of the input buffer against row `m_row`,
+    /// folded into the incoming 24-bit partial sum. Returns the new 24-bit
+    /// partial sum, sign-extended (the caller pads it to 32 bits in the
+    /// VRF, per §IV-A).
+    pub fn compute_partial(&mut self, m_row: u8, psum_in: i32) -> i32 {
+        self.stats.computes += 1;
+        let d = row_dot(&self.mem[m_row as usize], &self.ibuf, &self.cfg);
+        wrap24(psum_in as i64 + d)
+    }
+
+    /// `DC.F`: as `DC.P` plus the ReLU + requantize write-back stage.
+    /// Returns the packed output element (low `precision.bits()` bits,
+    /// padded to a nibble by the caller when packing into the VRF).
+    pub fn compute_final(&mut self, m_row: u8, psum_in: i32) -> u8 {
+        self.stats.computes += 1;
+        let d = row_dot(&self.mem[m_row as usize], &self.ibuf, &self.cfg);
+        requantize(wrap24(psum_in as i64 + d), &self.cfg)
+    }
+
+    /// Zero all architectural state (memory-mapped mode reset).
+    pub fn reset(&mut self) {
+        self.mem = [[0u8; DIMC_ROW_BYTES]; DIMC_ROWS];
+        self.ibuf = [0u8; DIMC_ROW_BYTES];
+        self.stats = DimcStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dimc::mac::pack;
+
+    fn regs(vals: &[u64]) -> Vec<u8> {
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn dl_sector_placement() {
+        let mut t = DimcTile::default();
+        t.load_ibuf(2, &regs(&[0x1111, 0x2222, 0x3333, 0x4444]), 4, 0b1111);
+        // Sector 2 starts at byte 64.
+        assert_eq!(&t.ibuf()[64..66], &[0x11, 0x11]);
+        assert_eq!(&t.ibuf()[88..90], &[0x44, 0x44]);
+        assert_eq!(t.ibuf()[0], 0);
+        assert_eq!(t.stats.ibuf_loads, 1);
+    }
+
+    #[test]
+    fn dl_mask_gates_registers() {
+        let mut t = DimcTile::default();
+        t.load_ibuf(0, &regs(&[u64::MAX, u64::MAX]), 2, 0b01);
+        assert_eq!(t.ibuf()[0..8], [0xff; 8]);
+        assert_eq!(t.ibuf()[8..16], [0x00; 8]);
+    }
+
+    #[test]
+    fn dl_m_row_isolated() {
+        let mut t = DimcTile::default();
+        t.load_row(5, 0, &regs(&[0xdead_beef]), 1, 0b1);
+        assert_eq!(&t.row(5)[0..4], &[0xef, 0xbe, 0xad, 0xde]);
+        assert_eq!(t.row(4)[0], 0);
+        assert_eq!(t.row(6)[0], 0);
+    }
+
+    #[test]
+    fn dcp_accumulates_and_wraps() {
+        let mut t = DimcTile::default();
+        // row 0: element 0 = 3; ibuf: element 0 = 5 (unsigned acts)
+        let mut row = [0u8; DIMC_ROW_BYTES];
+        pack(&mut row, 0, 4, 3);
+        t.load_row(0, 0, &row[..8], 1, 1);
+        let mut ib = [0u8; 8];
+        pack(&mut ib, 0, 4, 5);
+        t.load_ibuf(0, &ib, 1, 1);
+        assert_eq!(t.compute_partial(0, 100), 115);
+        // Wrap: near the 24-bit boundary.
+        assert_eq!(t.compute_partial(0, 8_388_600), -8_388_601);
+        assert_eq!(t.stats.computes, 2);
+    }
+
+    #[test]
+    fn dcf_relu_requant() {
+        let cfg = DimcConfig { requant_shift: 0, ..Default::default() };
+        let mut t = DimcTile::new(cfg);
+        let mut row = [0u8; 8];
+        pack(&mut row, 0, 4, 0b1111); // weight -1
+        t.load_row(0, 0, &row, 1, 1);
+        let mut ib = [0u8; 8];
+        pack(&mut ib, 0, 4, 7);
+        t.load_ibuf(0, &ib, 1, 1);
+        // dot = -7, psum 0 -> ReLU -> 0
+        assert_eq!(t.compute_final(0, 0), 0);
+        // psum 10 -> 3 -> stays 3
+        assert_eq!(t.compute_final(0, 10), 3);
+        // psum large -> clamp 15
+        assert_eq!(t.compute_final(0, 1000), 15);
+    }
+
+    #[test]
+    fn full_row_dot_through_tile() {
+        // 256-lane dot with known pattern: w[i] = (i % 7) - 3, a[i] = i % 11.
+        let mut t = DimcTile::new(DimcConfig { requant_shift: 0, ..Default::default() });
+        let mut row = [0u8; DIMC_ROW_BYTES];
+        let mut ib = [0u8; DIMC_ROW_BYTES];
+        let mut expect = 0i64;
+        for i in 0..256 {
+            let w = (i % 7) as i32 - 3;
+            let a = (i % 11) as i32;
+            pack(&mut row, i, 4, (w & 0xf) as u8);
+            pack(&mut ib, i, 4, a as u8);
+            expect += (w * a) as i64;
+        }
+        for sec in 0..4 {
+            t.load_row(3, sec as u8, &row[sec * 32..(sec + 1) * 32], 4, 0xf);
+            t.load_ibuf(sec as u8, &ib[sec * 32..(sec + 1) * 32], 4, 0xf);
+        }
+        assert_eq!(t.compute_partial(3, 0) as i64, expect);
+    }
+}

@@ -1,0 +1,565 @@
+//! A small two-pass assembler for the modelled ISA.
+//!
+//! Supports labels (`loop:`), comments (`# ...` / `; ...`), the scalar and
+//! vector mnemonics produced by [`Instr`]'s `Display` impl, and the four
+//! custom DIMC mnemonics with keyword operands, e.g.:
+//!
+//! ```text
+//! dl.i  v8,  nvec=4, mask=0b1111, sec=0
+//! dl.m  v8,  nvec=4, mask=0b1111, sec=1, row=7
+//! dc.p  v4.0, v4.1, row=7, w=0
+//! dc.f  v4.0[3], v4.1, row=7, w=0
+//! li    x5, 1024          # pseudo: expands to lui+addi or addi
+//! ```
+
+use super::{AluOp, BranchCond, Instr, VType};
+use std::collections::HashMap;
+
+/// Assembly error with 1-based line number.
+#[derive(Debug)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for AsmError {}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, AsmError> {
+    Err(AsmError { line, msg: msg.into() })
+}
+
+fn parse_int(s: &str, line: usize) -> Result<i64, AsmError> {
+    let s = s.trim();
+    let (neg, s) = match s.strip_prefix('-') {
+        Some(rest) => (true, rest),
+        None => (false, s),
+    };
+    let v = if let Some(h) = s.strip_prefix("0x") {
+        i64::from_str_radix(h, 16)
+    } else if let Some(b) = s.strip_prefix("0b") {
+        i64::from_str_radix(b, 2)
+    } else {
+        s.parse()
+    };
+    match v {
+        Ok(v) => Ok(if neg { -v } else { v }),
+        Err(_) => err(line, format!("bad integer `{s}`")),
+    }
+}
+
+fn xreg(s: &str, line: usize) -> Result<u8, AsmError> {
+    let s = s.trim();
+    let named = [
+        ("zero", 0u8),
+        ("ra", 1),
+        ("sp", 2),
+        ("t0", 5),
+        ("t1", 6),
+        ("t2", 7),
+        ("a0", 10),
+        ("a1", 11),
+        ("a2", 12),
+        ("a3", 13),
+        ("a4", 14),
+        ("a5", 15),
+    ];
+    for (n, i) in named {
+        if s == n {
+            return Ok(i);
+        }
+    }
+    if let Some(n) = s.strip_prefix('x') {
+        if let Ok(v) = n.parse::<u8>() {
+            if v < 32 {
+                return Ok(v);
+            }
+        }
+    }
+    err(line, format!("bad x-register `{s}`"))
+}
+
+fn vreg(s: &str, line: usize) -> Result<u8, AsmError> {
+    if let Some(n) = s.trim().strip_prefix('v') {
+        if let Ok(v) = n.parse::<u8>() {
+            if v < 32 {
+                return Ok(v);
+            }
+        }
+    }
+    err(line, format!("bad v-register `{s}`"))
+}
+
+/// `v4.1` -> (vreg, half); `v4.0[3]` -> (vreg, half, nibble).
+fn vreg_half(s: &str, line: usize) -> Result<(u8, bool, Option<u8>), AsmError> {
+    let s = s.trim();
+    let (core, bidx) = match s.split_once('[') {
+        Some((c, rest)) => {
+            let idx = rest.strip_suffix(']').ok_or(AsmError {
+                line,
+                msg: format!("missing `]` in `{s}`"),
+            })?;
+            (c, Some(parse_int(idx, line)? as u8))
+        }
+        None => (s, None),
+    };
+    let (r, h) = core.split_once('.').ok_or(AsmError {
+        line,
+        msg: format!("expected vREG.half in `{s}`"),
+    })?;
+    Ok((vreg(r, line)?, parse_int(h, line)? != 0, bidx))
+}
+
+fn kwargs(ops: &[&str], line: usize) -> Result<HashMap<String, i64>, AsmError> {
+    let mut m = HashMap::new();
+    for o in ops {
+        let (k, v) = o.split_once('=').ok_or(AsmError {
+            line,
+            msg: format!("expected key=value, got `{o}`"),
+        })?;
+        m.insert(k.trim().to_string(), parse_int(v, line)?);
+    }
+    Ok(m)
+}
+
+/// `16(x7)` -> (imm, reg); also accepts `(x7)` as 0 offset.
+fn mem_operand(s: &str, line: usize) -> Result<(i32, u8), AsmError> {
+    let s = s.trim();
+    let open = s.find('(').ok_or(AsmError { line, msg: format!("expected imm(reg): `{s}`") })?;
+    let close = s.rfind(')').ok_or(AsmError { line, msg: format!("missing `)`: `{s}`") })?;
+    let imm = if open == 0 { 0 } else { parse_int(&s[..open], line)? as i32 };
+    Ok((imm, xreg(&s[open + 1..close], line)?))
+}
+
+fn parse_vtype(ops: &[&str], line: usize) -> Result<VType, AsmError> {
+    // e8,m4 style: passed through as two trailing operands
+    let mut sew = None;
+    let mut lmul = None;
+    for o in ops {
+        let o = o.trim();
+        if let Some(e) = o.strip_prefix('e') {
+            sew = Some(parse_int(e, line)? as u16);
+        } else if let Some(m) = o.strip_prefix('m') {
+            lmul = Some(parse_int(m, line)? as u8);
+        }
+    }
+    match (sew, lmul) {
+        (Some(s), Some(l)) if matches!(s, 8 | 16 | 32) && matches!(l, 1 | 2 | 4 | 8) => {
+            Ok(VType::new(s, l))
+        }
+        _ => err(line, "expected eSEW,mLMUL"),
+    }
+}
+
+/// Assemble a program. Returns the instruction sequence; labels resolve to
+/// byte offsets (4 bytes per instruction).
+pub fn assemble(src: &str) -> Result<Vec<Instr>, AsmError> {
+    // Pass 1: collect labels.
+    let mut labels: HashMap<String, i64> = HashMap::new();
+    let mut pc = 0i64;
+    let mut lines: Vec<(usize, String)> = Vec::new();
+    for (ln, raw) in src.lines().enumerate() {
+        let line = ln + 1;
+        let code = raw.split(['#', ';']).next().unwrap_or("").trim().to_string();
+        if code.is_empty() {
+            continue;
+        }
+        if let Some(label) = code.strip_suffix(':') {
+            labels.insert(label.trim().to_string(), pc);
+            continue;
+        }
+        // `li` with a large immediate expands to two instructions.
+        let big_li = code.starts_with("li ") && {
+            let v = code[3..].split(',').nth(1).map(|s| parse_int(s, line)).transpose()?;
+            v.map(|v| !(-2048..2048).contains(&v)).unwrap_or(false)
+        };
+        pc += if big_li { 8 } else { 4 };
+        lines.push((line, code));
+    }
+
+    // Pass 2: emit.
+    let mut out = Vec::new();
+    let mut pc = 0i64;
+    for (line, code) in &lines {
+        let line = *line;
+        let (mn, rest) = code.split_once(char::is_whitespace).unwrap_or((code.as_str(), ""));
+        let ops: Vec<&str> = rest.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+        let need = |n: usize| -> Result<(), AsmError> {
+            if ops.len() < n {
+                err(line, format!("`{mn}` needs {n} operands, got {}", ops.len()))
+            } else {
+                Ok(())
+            }
+        };
+        let branch_target = |s: &str| -> Result<i32, AsmError> {
+            if let Some(&t) = labels.get(s) {
+                Ok((t - pc) as i32)
+            } else {
+                Ok(parse_int(s, line)? as i32)
+            }
+        };
+        let emitted: Vec<Instr> = match mn {
+            "li" => {
+                need(2)?;
+                let rd = xreg(ops[0], line)?;
+                let v = parse_int(ops[1], line)? as i32;
+                if (-2048..2048).contains(&v) {
+                    vec![Instr::OpImm { op: AluOp::Add, rd, rs1: 0, imm: v }]
+                } else {
+                    // lui + addi with sign-adjustment of the low part.
+                    let lo = (v << 20) >> 20;
+                    let hi = (v.wrapping_sub(lo)) >> 12;
+                    vec![
+                        Instr::Lui { rd, imm: hi & 0xfffff },
+                        Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: lo },
+                    ]
+                }
+            }
+            "mv" => {
+                need(2)?;
+                vec![Instr::OpImm {
+                    op: AluOp::Add,
+                    rd: xreg(ops[0], line)?,
+                    rs1: xreg(ops[1], line)?,
+                    imm: 0,
+                }]
+            }
+            "nop" => vec![Instr::OpImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 0 }],
+            "addi" | "slli" | "srli" | "srai" | "andi" | "ori" | "xori" => {
+                need(3)?;
+                let op = match mn {
+                    "addi" => AluOp::Add,
+                    "slli" => AluOp::Sll,
+                    "srli" => AluOp::Srl,
+                    "srai" => AluOp::Sra,
+                    "andi" => AluOp::And,
+                    "ori" => AluOp::Or,
+                    _ => AluOp::Xor,
+                };
+                vec![Instr::OpImm {
+                    op,
+                    rd: xreg(ops[0], line)?,
+                    rs1: xreg(ops[1], line)?,
+                    imm: parse_int(ops[2], line)? as i32,
+                }]
+            }
+            "add" | "sub" | "mul" | "and" | "or" | "xor" | "sll" | "srl" | "sra" => {
+                need(3)?;
+                let op = match mn {
+                    "add" => AluOp::Add,
+                    "sub" => AluOp::Sub,
+                    "mul" => AluOp::Mul,
+                    "and" => AluOp::And,
+                    "or" => AluOp::Or,
+                    "xor" => AluOp::Xor,
+                    "sll" => AluOp::Sll,
+                    "srl" => AluOp::Srl,
+                    _ => AluOp::Sra,
+                };
+                vec![Instr::Op {
+                    op,
+                    rd: xreg(ops[0], line)?,
+                    rs1: xreg(ops[1], line)?,
+                    rs2: xreg(ops[2], line)?,
+                }]
+            }
+            "lw" | "lbu" => {
+                need(2)?;
+                let (imm, rs1) = mem_operand(ops[1], line)?;
+                let rd = xreg(ops[0], line)?;
+                vec![if mn == "lw" {
+                    Instr::Lw { rd, rs1, imm }
+                } else {
+                    Instr::Lbu { rd, rs1, imm }
+                }]
+            }
+            "sw" | "sb" => {
+                need(2)?;
+                let (imm, rs1) = mem_operand(ops[1], line)?;
+                let rs2 = xreg(ops[0], line)?;
+                vec![if mn == "sw" {
+                    Instr::Sw { rs2, rs1, imm }
+                } else {
+                    Instr::Sb { rs2, rs1, imm }
+                }]
+            }
+            "beq" | "bne" | "blt" | "bge" | "bltu" | "bgeu" => {
+                need(3)?;
+                let cond = match mn {
+                    "beq" => BranchCond::Eq,
+                    "bne" => BranchCond::Ne,
+                    "blt" => BranchCond::Lt,
+                    "bge" => BranchCond::Ge,
+                    "bltu" => BranchCond::Ltu,
+                    _ => BranchCond::Geu,
+                };
+                vec![Instr::Branch {
+                    cond,
+                    rs1: xreg(ops[0], line)?,
+                    rs2: xreg(ops[1], line)?,
+                    off: branch_target(ops[2])?,
+                }]
+            }
+            "jal" => {
+                need(1)?;
+                let (rd, tgt) =
+                    if ops.len() == 1 { (0u8, ops[0]) } else { (xreg(ops[0], line)?, ops[1]) };
+                vec![Instr::Jal { rd, off: branch_target(tgt)? }]
+            }
+            "ecall" | "halt" => vec![Instr::Halt],
+            "vsetvli" => {
+                need(3)?;
+                vec![Instr::Vsetvli {
+                    rd: xreg(ops[0], line)?,
+                    rs1: xreg(ops[1], line)?,
+                    vtype: parse_vtype(&ops[2..], line)?,
+                }]
+            }
+            "vle8.v" | "vle16.v" | "vle32.v" => {
+                need(2)?;
+                let eew: u8 = mn[3..mn.len() - 2].parse().unwrap();
+                let (imm, rs1) = mem_operand(ops[1], line)?;
+                if imm != 0 {
+                    return err(line, "vector loads take (reg) with no offset");
+                }
+                vec![Instr::Vle { eew, vd: vreg(ops[0], line)?, rs1 }]
+            }
+            "vse8.v" | "vse16.v" | "vse32.v" => {
+                need(2)?;
+                let eew: u8 = mn[3..mn.len() - 2].parse().unwrap();
+                let (imm, rs1) = mem_operand(ops[1], line)?;
+                if imm != 0 {
+                    return err(line, "vector stores take (reg) with no offset");
+                }
+                vec![Instr::Vse { eew, vs3: vreg(ops[0], line)?, rs1 }]
+            }
+            "vadd.vv" => {
+                need(3)?;
+                vec![Instr::VaddVV {
+                    vd: vreg(ops[0], line)?,
+                    vs2: vreg(ops[1], line)?,
+                    vs1: vreg(ops[2], line)?,
+                }]
+            }
+            "vadd.vi" => {
+                need(3)?;
+                vec![Instr::VaddVI {
+                    vd: vreg(ops[0], line)?,
+                    vs2: vreg(ops[1], line)?,
+                    imm: parse_int(ops[2], line)? as i8,
+                }]
+            }
+            "vmacc.vv" => {
+                need(3)?;
+                vec![Instr::VmaccVV {
+                    vd: vreg(ops[0], line)?,
+                    vs1: vreg(ops[1], line)?,
+                    vs2: vreg(ops[2], line)?,
+                }]
+            }
+            "vredsum.vs" => {
+                need(3)?;
+                vec![Instr::VredsumVS {
+                    vd: vreg(ops[0], line)?,
+                    vs2: vreg(ops[1], line)?,
+                    vs1: vreg(ops[2], line)?,
+                }]
+            }
+            "vsext.vf4" => {
+                need(2)?;
+                vec![Instr::VsextVf4 { vd: vreg(ops[0], line)?, vs2: vreg(ops[1], line)? }]
+            }
+            "vmv.v.i" => {
+                need(2)?;
+                vec![Instr::VmvVI { vd: vreg(ops[0], line)?, imm: parse_int(ops[1], line)? as i8 }]
+            }
+            "vmv.v.x" => {
+                need(2)?;
+                vec![Instr::VmvVX { vd: vreg(ops[0], line)?, rs1: xreg(ops[1], line)? }]
+            }
+            "vmv.x.s" => {
+                need(2)?;
+                vec![Instr::VmvXS { rd: xreg(ops[0], line)?, vs2: vreg(ops[1], line)? }]
+            }
+            "vmax.vx" => {
+                need(3)?;
+                vec![Instr::VmaxVX {
+                    vd: vreg(ops[0], line)?,
+                    vs2: vreg(ops[1], line)?,
+                    rs1: xreg(ops[2], line)?,
+                }]
+            }
+            "dl.i" => {
+                need(2)?;
+                let vs1 = vreg(ops[0], line)?;
+                let kw = kwargs(&ops[1..], line)?;
+                vec![Instr::DlI {
+                    nvec: *kw.get("nvec").unwrap_or(&4) as u8,
+                    mask: *kw.get("mask").unwrap_or(&0xf) as u8,
+                    vs1,
+                    width: *kw.get("w").unwrap_or(&0) as u8,
+                    sec: *kw.get("sec").unwrap_or(&0) as u8,
+                }]
+            }
+            "dl.m" => {
+                need(2)?;
+                let vs1 = vreg(ops[0], line)?;
+                let kw = kwargs(&ops[1..], line)?;
+                vec![Instr::DlM {
+                    nvec: *kw.get("nvec").unwrap_or(&4) as u8,
+                    mask: *kw.get("mask").unwrap_or(&0xf) as u8,
+                    vs1,
+                    width: *kw.get("w").unwrap_or(&0) as u8,
+                    sec: *kw.get("sec").unwrap_or(&0) as u8,
+                    m_row: *kw.get("row").ok_or(AsmError {
+                        line,
+                        msg: "dl.m needs row=".into(),
+                    })? as u8,
+                }]
+            }
+            "dc.p" => {
+                need(3)?;
+                let (vd, dh, _) = vreg_half(ops[0], line)?;
+                let (vs1, sh, _) = vreg_half(ops[1], line)?;
+                let kw = kwargs(&ops[2..], line)?;
+                vec![Instr::DcP {
+                    sh,
+                    dh,
+                    m_row: *kw.get("row").ok_or(AsmError {
+                        line,
+                        msg: "dc.p needs row=".into(),
+                    })? as u8,
+                    vs1,
+                    width: *kw.get("w").unwrap_or(&0) as u8,
+                    vd,
+                }]
+            }
+            "dc.f" => {
+                need(3)?;
+                let (vd, dh, bidx) = vreg_half(ops[0], line)?;
+                let (vs1, sh, _) = vreg_half(ops[1], line)?;
+                let kw = kwargs(&ops[2..], line)?;
+                vec![Instr::DcF {
+                    sh,
+                    dh,
+                    m_row: *kw.get("row").ok_or(AsmError {
+                        line,
+                        msg: "dc.f needs row=".into(),
+                    })? as u8,
+                    vs1,
+                    width: *kw.get("w").unwrap_or(&0) as u8,
+                    bidx: bidx.unwrap_or(0),
+                    vd,
+                }]
+            }
+            _ => return err(line, format!("unknown mnemonic `{mn}`")),
+        };
+        pc += 4 * emitted.len() as i64;
+        out.extend(emitted);
+    }
+    Ok(out)
+}
+
+/// Disassemble a slice of instructions to text (one per line).
+pub fn disassemble(prog: &[Instr]) -> String {
+    prog.iter().map(|i| i.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_loop() {
+        let prog = assemble(
+            r"
+            # tiny accumulation loop
+            li   x5, 0
+            li   x6, 8
+        loop:
+            addi x5, x5, 1
+            bne  x5, x6, loop
+            ecall
+        ",
+        )
+        .unwrap();
+        assert_eq!(prog.len(), 5);
+        match prog[3] {
+            Instr::Branch { cond: BranchCond::Ne, off, .. } => assert_eq!(off, -4),
+            ref other => panic!("expected bne, got {other}"),
+        }
+    }
+
+    #[test]
+    fn assemble_custom() {
+        let prog = assemble(
+            r"
+            dl.i v8, nvec=4, mask=0b1111, sec=2
+            dl.m v12, nvec=2, mask=0b11, sec=0, row=7
+            dc.p v4.1, v4.0, row=7, w=0
+            dc.f v6.0[5], v4.1, row=8, w=0
+        ",
+        )
+        .unwrap();
+        assert_eq!(prog[0], Instr::DlI { nvec: 4, mask: 0xf, vs1: 8, width: 0, sec: 2 });
+        assert_eq!(
+            prog[1],
+            Instr::DlM { nvec: 2, mask: 0b11, vs1: 12, width: 0, sec: 0, m_row: 7 }
+        );
+        assert_eq!(prog[2], Instr::DcP { sh: false, dh: true, m_row: 7, vs1: 4, width: 0, vd: 4 });
+        assert_eq!(
+            prog[3],
+            Instr::DcF { sh: true, dh: false, m_row: 8, vs1: 4, width: 0, bidx: 5, vd: 6 }
+        );
+    }
+
+    #[test]
+    fn li_expansion() {
+        let prog = assemble("li x5, 0x12345\necall").unwrap();
+        assert_eq!(prog.len(), 3);
+        // Verify the lui+addi pair reconstructs the constant.
+        if let (Instr::Lui { imm: hi, .. }, Instr::OpImm { imm: lo, .. }) = (prog[0], prog[1]) {
+            assert_eq!((hi << 12).wrapping_add(lo), 0x12345);
+        } else {
+            panic!("expected lui+addi");
+        }
+    }
+
+    #[test]
+    fn labels_account_for_li_size() {
+        // A big li before the label must not skew branch offsets.
+        let prog = assemble(
+            r"
+            li x5, 100000
+            li x6, 1
+        loop:
+            addi x6, x6, 1
+            bne x6, x5, loop
+            ecall",
+        )
+        .unwrap();
+        match prog[4] {
+            Instr::Branch { off, .. } => assert_eq!(off, -4),
+            ref other => panic!("expected branch, got {other}"),
+        }
+    }
+
+    #[test]
+    fn vector_mnemonics() {
+        let prog = assemble(
+            r"
+            vsetvli x1, x2, e8, m4
+            vle8.v v8, (x10)
+            vsext.vf4 v16, v8
+            vmacc.vv v24, v16, v20
+            vse32.v v24, (x11)",
+        )
+        .unwrap();
+        assert_eq!(prog.len(), 5);
+        assert_eq!(prog[2], Instr::VsextVf4 { vd: 16, vs2: 8 });
+    }
+}

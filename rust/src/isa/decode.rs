@@ -1,0 +1,318 @@
+//! Instruction decoding — the exact inverse of [`super::encode`].
+//!
+//! Decoding is total over the words `encode` can produce and returns
+//! [`DecodeError`] for anything else, so `decode(encode(i)) == Ok(i)` is a
+//! property-tested invariant (see `rust/tests/prop_isa.rs`).
+
+use super::encode::*;
+use super::{AluOp, BranchCond, Instr, VType};
+
+/// Decoding failure, carrying the offending word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    UnknownOpcode(u32),
+    UnknownFunct(u32),
+    BadVType(u32),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::UnknownOpcode(w) => write!(f, "unknown opcode in {w:#010x}"),
+            DecodeError::UnknownFunct(w) => write!(f, "unknown funct fields in {w:#010x}"),
+            DecodeError::BadVType(w) => write!(f, "unsupported vtype in {w:#010x}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+#[inline]
+fn rd(w: u32) -> u8 {
+    ((w >> 7) & 0x1f) as u8
+}
+#[inline]
+fn rs1(w: u32) -> u8 {
+    ((w >> 15) & 0x1f) as u8
+}
+#[inline]
+fn rs2(w: u32) -> u8 {
+    ((w >> 20) & 0x1f) as u8
+}
+#[inline]
+fn funct3(w: u32) -> u32 {
+    (w >> 12) & 0x7
+}
+#[inline]
+fn funct7(w: u32) -> u32 {
+    w >> 25
+}
+#[inline]
+fn i_imm(w: u32) -> i32 {
+    (w as i32) >> 20
+}
+#[inline]
+fn s_imm(w: u32) -> i32 {
+    (((w as i32) >> 25) << 5) | (((w >> 7) & 0x1f) as i32)
+}
+#[inline]
+fn b_imm(w: u32) -> i32 {
+    let sign = (w as i32) >> 31; // bit 12 replicated
+    (sign << 12)
+        | ((((w >> 7) & 1) as i32) << 11)
+        | ((((w >> 25) & 0x3f) as i32) << 5)
+        | ((((w >> 8) & 0xf) as i32) << 1)
+}
+#[inline]
+fn j_imm(w: u32) -> i32 {
+    let sign = (w as i32) >> 31;
+    (sign << 20)
+        | ((((w >> 12) & 0xff) as i32) << 12)
+        | ((((w >> 20) & 1) as i32) << 11)
+        | ((((w >> 21) & 0x3ff) as i32) << 1)
+}
+/// Sign-extend a 5-bit field (vector simm5).
+#[inline]
+fn simm5(v: u32) -> i8 {
+    ((v as i8) << 3) >> 3
+}
+
+fn decode_eew(width: u32, w: u32) -> Result<u8, DecodeError> {
+    match width {
+        0b000 => Ok(8),
+        0b101 => Ok(16),
+        0b110 => Ok(32),
+        _ => Err(DecodeError::UnknownFunct(w)),
+    }
+}
+
+fn decode_opv(w: u32) -> Result<Instr, DecodeError> {
+    let f3 = funct3(w);
+    if f3 == 0b111 {
+        // vsetvli / vsetivli
+        return if w >> 30 == 0b11 {
+            let vt = VType::from_zimm((w >> 20) & 0x3ff).ok_or(DecodeError::BadVType(w))?;
+            Ok(Instr::Vsetivli { rd: rd(w), uimm: rs1(w), vtype: vt })
+        } else if w >> 31 == 0 {
+            let vt = VType::from_zimm((w >> 20) & 0x7ff).ok_or(DecodeError::BadVType(w))?;
+            Ok(Instr::Vsetvli { rd: rd(w), rs1: rs1(w), vtype: vt })
+        } else {
+            Err(DecodeError::UnknownFunct(w))
+        };
+    }
+    let funct6 = w >> 26;
+    let vd = rd(w);
+    let vs2 = rs2(w);
+    let src = rs1(w); // vs1 / rs1 / simm5 slot
+    match (funct6, f3) {
+        (0b000000, OPIVV) => Ok(Instr::VaddVV { vd, vs1: src, vs2 }),
+        (0b000000, OPIVX) => Ok(Instr::VaddVX { vd, rs1: src, vs2 }),
+        (0b000000, OPIVI) => Ok(Instr::VaddVI { vd, imm: simm5(src as u32), vs2 }),
+        (0b000010, OPIVV) => Ok(Instr::VsubVV { vd, vs1: src, vs2 }),
+        (0b100101, OPMVV) => Ok(Instr::VmulVV { vd, vs1: src, vs2 }),
+        (0b101101, OPMVV) => Ok(Instr::VmaccVV { vd, vs1: src, vs2 }),
+        (0b000000, OPMVV) => Ok(Instr::VredsumVS { vd, vs1: src, vs2 }),
+        (0b010111, OPIVI) => Ok(Instr::VmvVI { vd, imm: simm5(src as u32) }),
+        (0b010111, OPIVX) => Ok(Instr::VmvVX { vd, rs1: src }),
+        (0b010000, OPMVV) if src == 0 => Ok(Instr::VmvXS { rd: vd, vs2 }),
+        (0b010010, OPMVV) if src == 0b00101 => Ok(Instr::VsextVf4 { vd, vs2 }),
+        (0b000111, OPIVX) => Ok(Instr::VmaxVX { vd, rs1: src, vs2 }),
+        (0b000101, OPIVX) => Ok(Instr::VminVX { vd, rs1: src, vs2 }),
+        (0b101001, OPIVI) => Ok(Instr::VsraVI { vd, imm: src, vs2 }),
+        (0b100101, OPIVI) => Ok(Instr::VsllVI { vd, imm: src, vs2 }),
+        (0b101000, OPIVI) => Ok(Instr::VsrlVI { vd, imm: src, vs2 }),
+        (0b001001, OPIVI) => Ok(Instr::VandVI { vd, imm: simm5(src as u32), vs2 }),
+        (0b001001, OPIVV) => Ok(Instr::VandVV { vd, vs1: src, vs2 }),
+        (0b001010, OPIVV) => Ok(Instr::VorVV { vd, vs1: src, vs2 }),
+        (0b001011, OPIVV) => Ok(Instr::VxorVV { vd, vs1: src, vs2 }),
+        (0b001111, OPIVI) => Ok(Instr::VslidedownVI { vd, imm: src, vs2 }),
+        (0b001110, OPIVI) => Ok(Instr::VslideupVI { vd, imm: src, vs2 }),
+        _ => Err(DecodeError::UnknownFunct(w)),
+    }
+}
+
+fn decode_custom0(w: u32) -> Result<Instr, DecodeError> {
+    let f3 = funct3(w);
+    match f3 {
+        F3_DLI | F3_DLM => {
+            let nvec = ((w >> 30) & 0x3) as u8 + 1;
+            let mask = ((w >> 25) & 0xf) as u8;
+            let vs1 = rs2(w); // [24:20]
+            let width = ((w >> 18) & 0x3) as u8;
+            let sec = ((w >> 15) & 0x3) as u8;
+            if f3 == F3_DLI {
+                Ok(Instr::DlI { nvec, mask, vs1, width, sec })
+            } else {
+                Ok(Instr::DlM { nvec, mask, vs1, width, sec, m_row: rd(w) })
+            }
+        }
+        F3_DCP | F3_DCF => {
+            let sh = (w >> 31) == 1;
+            let dh = ((w >> 30) & 1) == 1;
+            let m_row = ((w >> 25) & 0x1f) as u8;
+            let vs1 = rs2(w);
+            let width = ((w >> 18) & 0x3) as u8;
+            let vd = rd(w);
+            if f3 == F3_DCP {
+                Ok(Instr::DcP { sh, dh, m_row, vs1, width, vd })
+            } else {
+                Ok(Instr::DcF { sh, dh, m_row, vs1, width, bidx: ((w >> 15) & 0x7) as u8, vd })
+            }
+        }
+        _ => Err(DecodeError::UnknownFunct(w)),
+    }
+}
+
+/// Decode a 32-bit machine word.
+pub fn decode(w: u32) -> Result<Instr, DecodeError> {
+    match w & 0x7f {
+        OPC_LUI => Ok(Instr::Lui { rd: rd(w), imm: (w >> 12) as i32 }),
+        OPC_AUIPC => Ok(Instr::Auipc { rd: rd(w), imm: (w >> 12) as i32 }),
+        OPC_OP_IMM => {
+            let op = match funct3(w) {
+                0b000 => AluOp::Add,
+                0b001 => AluOp::Sll,
+                0b010 => AluOp::Slt,
+                0b011 => AluOp::Sltu,
+                0b100 => AluOp::Xor,
+                0b101 => {
+                    if funct7(w) == 0b0100000 {
+                        AluOp::Sra
+                    } else {
+                        AluOp::Srl
+                    }
+                }
+                0b110 => AluOp::Or,
+                0b111 => AluOp::And,
+                _ => unreachable!(),
+            };
+            let imm = if matches!(op, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                (rs2(w)) as i32
+            } else {
+                i_imm(w)
+            };
+            Ok(Instr::OpImm { op, rd: rd(w), rs1: rs1(w), imm })
+        }
+        OPC_OP => {
+            let op = match (funct7(w), funct3(w)) {
+                (0b0000001, 0b000) => AluOp::Mul,
+                (0b0100000, 0b000) => AluOp::Sub,
+                (0b0000000, 0b000) => AluOp::Add,
+                (0b0000000, 0b001) => AluOp::Sll,
+                (0b0000000, 0b010) => AluOp::Slt,
+                (0b0000000, 0b011) => AluOp::Sltu,
+                (0b0000000, 0b100) => AluOp::Xor,
+                (0b0100000, 0b101) => AluOp::Sra,
+                (0b0000000, 0b101) => AluOp::Srl,
+                (0b0000000, 0b110) => AluOp::Or,
+                (0b0000000, 0b111) => AluOp::And,
+                _ => return Err(DecodeError::UnknownFunct(w)),
+            };
+            Ok(Instr::Op { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) })
+        }
+        OPC_LOAD => match funct3(w) {
+            0b010 => Ok(Instr::Lw { rd: rd(w), rs1: rs1(w), imm: i_imm(w) }),
+            0b100 => Ok(Instr::Lbu { rd: rd(w), rs1: rs1(w), imm: i_imm(w) }),
+            _ => Err(DecodeError::UnknownFunct(w)),
+        },
+        OPC_STORE => match funct3(w) {
+            0b010 => Ok(Instr::Sw { rs2: rs2(w), rs1: rs1(w), imm: s_imm(w) }),
+            0b000 => Ok(Instr::Sb { rs2: rs2(w), rs1: rs1(w), imm: s_imm(w) }),
+            _ => Err(DecodeError::UnknownFunct(w)),
+        },
+        OPC_BRANCH => {
+            let cond = match funct3(w) {
+                0b000 => BranchCond::Eq,
+                0b001 => BranchCond::Ne,
+                0b100 => BranchCond::Lt,
+                0b101 => BranchCond::Ge,
+                0b110 => BranchCond::Ltu,
+                0b111 => BranchCond::Geu,
+                _ => return Err(DecodeError::UnknownFunct(w)),
+            };
+            Ok(Instr::Branch { cond, rs1: rs1(w), rs2: rs2(w), off: b_imm(w) })
+        }
+        OPC_JAL => Ok(Instr::Jal { rd: rd(w), off: j_imm(w) }),
+        OPC_JALR => Ok(Instr::Jalr { rd: rd(w), rs1: rs1(w), imm: i_imm(w) }),
+        OPC_SYSTEM => Ok(Instr::Halt),
+        OPC_V => decode_opv(w),
+        OPC_VL => {
+            let eew = decode_eew(funct3(w), w)?;
+            match (w >> 26) & 0x3 {
+                0b00 => Ok(Instr::Vle { eew, vd: rd(w), rs1: rs1(w) }),
+                0b10 => Ok(Instr::Vlse { eew, vd: rd(w), rs1: rs1(w), rs2: rs2(w) }),
+                _ => Err(DecodeError::UnknownFunct(w)),
+            }
+        }
+        OPC_VS => {
+            let eew = decode_eew(funct3(w), w)?;
+            Ok(Instr::Vse { eew, vs3: rd(w), rs1: rs1(w) })
+        }
+        OPC_CUSTOM0 => decode_custom0(w),
+        _ => Err(DecodeError::UnknownOpcode(w)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::VType;
+
+    fn rt(i: Instr) {
+        assert_eq!(decode(encode(&i)), Ok(i), "round-trip failed for {i}");
+    }
+
+    #[test]
+    fn roundtrip_scalar() {
+        rt(Instr::Lui { rd: 5, imm: 0xfffff });
+        rt(Instr::Auipc { rd: 1, imm: 0x12345 });
+        rt(Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 2, imm: -2048 });
+        rt(Instr::OpImm { op: AluOp::Sll, rd: 1, rs1: 2, imm: 31 });
+        rt(Instr::OpImm { op: AluOp::Sra, rd: 1, rs1: 2, imm: 7 });
+        rt(Instr::Op { op: AluOp::Sub, rd: 3, rs1: 4, rs2: 5 });
+        rt(Instr::Op { op: AluOp::Mul, rd: 3, rs1: 4, rs2: 5 });
+        rt(Instr::Lw { rd: 6, rs1: 7, imm: -4 });
+        rt(Instr::Lbu { rd: 6, rs1: 7, imm: 2047 });
+        rt(Instr::Sw { rs2: 8, rs1: 9, imm: -2048 });
+        rt(Instr::Sb { rs2: 8, rs1: 9, imm: 100 });
+        rt(Instr::Branch { cond: BranchCond::Ne, rs1: 1, rs2: 2, off: -4096 });
+        rt(Instr::Branch { cond: BranchCond::Geu, rs1: 1, rs2: 2, off: 4094 });
+        rt(Instr::Jal { rd: 1, off: -1048576 });
+        rt(Instr::Jalr { rd: 1, rs1: 2, imm: 16 });
+        rt(Instr::Halt);
+    }
+
+    #[test]
+    fn roundtrip_vector() {
+        rt(Instr::Vsetvli { rd: 1, rs1: 2, vtype: VType::new(8, 4) });
+        rt(Instr::Vsetivli { rd: 1, uimm: 16, vtype: VType::new(32, 2) });
+        rt(Instr::Vle { eew: 8, vd: 3, rs1: 4 });
+        rt(Instr::Vle { eew: 32, vd: 3, rs1: 4 });
+        rt(Instr::Vse { eew: 16, vs3: 3, rs1: 4 });
+        rt(Instr::Vlse { eew: 8, vd: 3, rs1: 4, rs2: 5 });
+        rt(Instr::VaddVV { vd: 1, vs1: 2, vs2: 3 });
+        rt(Instr::VaddVI { vd: 1, imm: -16, vs2: 3 });
+        rt(Instr::VmaccVV { vd: 1, vs1: 2, vs2: 3 });
+        rt(Instr::VredsumVS { vd: 1, vs1: 2, vs2: 3 });
+        rt(Instr::VsextVf4 { vd: 4, vs2: 8 });
+        rt(Instr::VmvXS { rd: 10, vs2: 8 });
+        rt(Instr::VmaxVX { vd: 1, rs1: 0, vs2: 3 });
+        rt(Instr::VsraVI { vd: 1, imm: 31, vs2: 3 });
+        rt(Instr::VslidedownVI { vd: 1, imm: 4, vs2: 3 });
+    }
+
+    #[test]
+    fn roundtrip_custom() {
+        rt(Instr::DlI { nvec: 1, mask: 0x1, vs1: 31, width: 3, sec: 0 });
+        rt(Instr::DlI { nvec: 4, mask: 0xf, vs1: 0, width: 0, sec: 3 });
+        rt(Instr::DlM { nvec: 2, mask: 0b11, vs1: 16, width: 1, sec: 2, m_row: 31 });
+        rt(Instr::DcP { sh: true, dh: false, m_row: 17, vs1: 3, width: 0, vd: 29 });
+        rt(Instr::DcF { sh: false, dh: true, m_row: 31, vs1: 3, width: 2, bidx: 7, vd: 1 });
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(0xffff_ffff).is_err());
+        assert!(decode(0x0000_007f).is_err()); // unknown major opcode
+    }
+}

@@ -1,0 +1,326 @@
+//! Bit-level instruction encoding.
+//!
+//! Scalar and vector instructions use the standard RV32I/M and RVV 1.0
+//! encodings. The four custom DIMC instructions use the *custom-0* major
+//! opcode (0b000_1011) with the following normative field layout (Fig. 4 of
+//! the paper; the preprint's figure is partially garbled so this crate's
+//! layout is the reference):
+//!
+//! ```text
+//! DL.I : | nvec-1 [31:30] | 0 [29] | mask [28:25] | vs1 [24:20] |
+//!        | width [19:18] | 0 [17] | sec [16:15] | 000 [14:12] |
+//!        | 00000 [11:7] | 0001011 |
+//! DL.M : same, funct3 = 001, m_row in [11:7]
+//! DC.P : | sh [31] | dh [30] | m_row [29:25] | vs1 [24:20] |
+//!        | width [19:18] | 000 [17:15] | 010 [14:12] | vd [11:7] | 0001011 |
+//! DC.F : same, funct3 = 011, bidx (nibble index 0..7) in [17:15]
+//! ```
+//!
+//! `width` is the precision field: 0 = 4-bit, 1 = 2-bit, 2 = 1-bit for the
+//! compute instructions, and the reserved element-width hint for the loads.
+
+use super::{AluOp, BranchCond, Instr};
+
+pub const OPC_LUI: u32 = 0b0110111;
+pub const OPC_AUIPC: u32 = 0b0010111;
+pub const OPC_OP_IMM: u32 = 0b0010011;
+pub const OPC_OP: u32 = 0b0110011;
+pub const OPC_LOAD: u32 = 0b0000011;
+pub const OPC_STORE: u32 = 0b0100011;
+pub const OPC_BRANCH: u32 = 0b1100011;
+pub const OPC_JAL: u32 = 0b1101111;
+pub const OPC_JALR: u32 = 0b1100111;
+pub const OPC_SYSTEM: u32 = 0b1110011;
+pub const OPC_V: u32 = 0b1010111;
+pub const OPC_VL: u32 = 0b0000111;
+pub const OPC_VS: u32 = 0b0100111;
+/// RISC-V custom-0: reserved for non-standard extensions — the paper maps
+/// DL.I / DL.M / DC.P / DC.F here to avoid any conflict with RVV.
+pub const OPC_CUSTOM0: u32 = 0b0001011;
+
+pub const F3_DLI: u32 = 0b000;
+pub const F3_DLM: u32 = 0b001;
+pub const F3_DCP: u32 = 0b010;
+pub const F3_DCF: u32 = 0b011;
+
+// OP-V funct3 minor opcodes.
+pub const OPIVV: u32 = 0b000;
+pub const OPIVI: u32 = 0b011;
+pub const OPIVX: u32 = 0b100;
+pub const OPMVV: u32 = 0b010;
+
+#[inline]
+fn r_type(funct7: u32, rs2: u32, rs1: u32, funct3: u32, rd: u32, opc: u32) -> u32 {
+    (funct7 << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opc
+}
+
+#[inline]
+fn i_type(imm: i32, rs1: u32, funct3: u32, rd: u32, opc: u32) -> u32 {
+    (((imm as u32) & 0xfff) << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opc
+}
+
+#[inline]
+fn s_type(imm: i32, rs2: u32, rs1: u32, funct3: u32, opc: u32) -> u32 {
+    let imm = imm as u32;
+    ((imm >> 5 & 0x7f) << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | ((imm & 0x1f) << 7) | opc
+}
+
+#[inline]
+fn b_type(off: i32, rs2: u32, rs1: u32, funct3: u32) -> u32 {
+    let o = off as u32;
+    ((o >> 12 & 1) << 31)
+        | ((o >> 5 & 0x3f) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (funct3 << 12)
+        | ((o >> 1 & 0xf) << 8)
+        | ((o >> 11 & 1) << 7)
+        | OPC_BRANCH
+}
+
+#[inline]
+fn j_type(off: i32, rd: u32) -> u32 {
+    let o = off as u32;
+    ((o >> 20 & 1) << 31)
+        | ((o >> 1 & 0x3ff) << 21)
+        | ((o >> 11 & 1) << 20)
+        | ((o >> 12 & 0xff) << 12)
+        | (rd << 7)
+        | OPC_JAL
+}
+
+/// OP-V arithmetic: funct6 | vm=1 | vs2 | src | funct3 | vd | OPC_V.
+#[inline]
+fn v_arith(funct6: u32, vs2: u32, src: u32, funct3: u32, vd: u32) -> u32 {
+    (funct6 << 26) | (1 << 25) | (vs2 << 20) | (src << 15) | (funct3 << 12) | (vd << 7) | OPC_V
+}
+
+fn vl_width_bits(eew: u8) -> u32 {
+    match eew {
+        8 => 0b000,
+        16 => 0b101,
+        32 => 0b110,
+        _ => panic!("unsupported eew {eew}"),
+    }
+}
+
+fn alu_funct3(op: AluOp) -> u32 {
+    match op {
+        AluOp::Add | AluOp::Sub => 0b000,
+        AluOp::Sll => 0b001,
+        AluOp::Slt => 0b010,
+        AluOp::Sltu => 0b011,
+        AluOp::Xor => 0b100,
+        AluOp::Srl | AluOp::Sra => 0b101,
+        AluOp::Or => 0b110,
+        AluOp::And => 0b111,
+        AluOp::Mul => 0b000,
+    }
+}
+
+fn branch_funct3(c: BranchCond) -> u32 {
+    match c {
+        BranchCond::Eq => 0b000,
+        BranchCond::Ne => 0b001,
+        BranchCond::Lt => 0b100,
+        BranchCond::Ge => 0b101,
+        BranchCond::Ltu => 0b110,
+        BranchCond::Geu => 0b111,
+    }
+}
+
+/// Encode one instruction into its 32-bit machine word.
+pub fn encode(i: &Instr) -> u32 {
+    use Instr::*;
+    match *i {
+        Lui { rd, imm } => (((imm as u32) & 0xfffff) << 12) | ((rd as u32) << 7) | OPC_LUI,
+        Auipc { rd, imm } => (((imm as u32) & 0xfffff) << 12) | ((rd as u32) << 7) | OPC_AUIPC,
+        OpImm { op, rd, rs1, imm } => {
+            assert!(op != AluOp::Mul && op != AluOp::Sub, "no {op:?} immediate form");
+            match op {
+                AluOp::Sll | AluOp::Srl => {
+                    r_type(0, (imm as u32) & 0x1f, rs1 as u32, alu_funct3(op), rd as u32, OPC_OP_IMM)
+                }
+                AluOp::Sra => r_type(
+                    0b0100000,
+                    (imm as u32) & 0x1f,
+                    rs1 as u32,
+                    alu_funct3(op),
+                    rd as u32,
+                    OPC_OP_IMM,
+                ),
+                _ => i_type(imm, rs1 as u32, alu_funct3(op), rd as u32, OPC_OP_IMM),
+            }
+        }
+        Op { op, rd, rs1, rs2 } => {
+            let funct7 = match op {
+                AluOp::Sub | AluOp::Sra => 0b0100000,
+                AluOp::Mul => 0b0000001,
+                _ => 0,
+            };
+            r_type(funct7, rs2 as u32, rs1 as u32, alu_funct3(op), rd as u32, OPC_OP)
+        }
+        Lw { rd, rs1, imm } => i_type(imm, rs1 as u32, 0b010, rd as u32, OPC_LOAD),
+        Lbu { rd, rs1, imm } => i_type(imm, rs1 as u32, 0b100, rd as u32, OPC_LOAD),
+        Sw { rs2, rs1, imm } => s_type(imm, rs2 as u32, rs1 as u32, 0b010, OPC_STORE),
+        Sb { rs2, rs1, imm } => s_type(imm, rs2 as u32, rs1 as u32, 0b000, OPC_STORE),
+        Branch { cond, rs1, rs2, off } => b_type(off, rs2 as u32, rs1 as u32, branch_funct3(cond)),
+        Jal { rd, off } => j_type(off, rd as u32),
+        Jalr { rd, rs1, imm } => i_type(imm, rs1 as u32, 0b000, rd as u32, OPC_JALR),
+        Halt => OPC_SYSTEM, // ecall
+        Vsetvli { rd, rs1, vtype } => {
+            i_type(vtype.zimm() as i32, rs1 as u32, 0b111, rd as u32, OPC_V)
+        }
+        Vsetivli { rd, uimm, vtype } => {
+            (0b11 << 30)
+                | ((vtype.zimm() & 0x3ff) << 20)
+                | ((uimm as u32) << 15)
+                | (0b111 << 12)
+                | ((rd as u32) << 7)
+                | OPC_V
+        }
+        Vle { eew, vd, rs1 } => {
+            (1 << 25) | ((rs1 as u32) << 15) | (vl_width_bits(eew) << 12) | ((vd as u32) << 7) | OPC_VL
+        }
+        Vse { eew, vs3, rs1 } => {
+            (1 << 25) | ((rs1 as u32) << 15) | (vl_width_bits(eew) << 12) | ((vs3 as u32) << 7) | OPC_VS
+        }
+        Vlse { eew, vd, rs1, rs2 } => {
+            (0b10 << 26)
+                | (1 << 25)
+                | ((rs2 as u32) << 20)
+                | ((rs1 as u32) << 15)
+                | (vl_width_bits(eew) << 12)
+                | ((vd as u32) << 7)
+                | OPC_VL
+        }
+        VaddVV { vd, vs1, vs2 } => v_arith(0b000000, vs2 as u32, vs1 as u32, OPIVV, vd as u32),
+        VaddVX { vd, rs1, vs2 } => v_arith(0b000000, vs2 as u32, rs1 as u32, OPIVX, vd as u32),
+        VaddVI { vd, imm, vs2 } => {
+            v_arith(0b000000, vs2 as u32, (imm as u32) & 0x1f, OPIVI, vd as u32)
+        }
+        VsubVV { vd, vs1, vs2 } => v_arith(0b000010, vs2 as u32, vs1 as u32, OPIVV, vd as u32),
+        VmulVV { vd, vs1, vs2 } => v_arith(0b100101, vs2 as u32, vs1 as u32, OPMVV, vd as u32),
+        VmaccVV { vd, vs1, vs2 } => v_arith(0b101101, vs2 as u32, vs1 as u32, OPMVV, vd as u32),
+        VredsumVS { vd, vs1, vs2 } => v_arith(0b000000, vs2 as u32, vs1 as u32, OPMVV, vd as u32),
+        VmvVI { vd, imm } => v_arith(0b010111, 0, (imm as u32) & 0x1f, OPIVI, vd as u32),
+        VmvVX { vd, rs1 } => v_arith(0b010111, 0, rs1 as u32, OPIVX, vd as u32),
+        VmvXS { rd, vs2 } => v_arith(0b010000, vs2 as u32, 0b00000, OPMVV, rd as u32),
+        VsextVf4 { vd, vs2 } => v_arith(0b010010, vs2 as u32, 0b00101, OPMVV, vd as u32),
+        VmaxVX { vd, rs1, vs2 } => v_arith(0b000111, vs2 as u32, rs1 as u32, OPIVX, vd as u32),
+        VminVX { vd, rs1, vs2 } => v_arith(0b000101, vs2 as u32, rs1 as u32, OPIVX, vd as u32),
+        VsraVI { vd, imm, vs2 } => v_arith(0b101001, vs2 as u32, imm as u32, OPIVI, vd as u32),
+        VsllVI { vd, imm, vs2 } => v_arith(0b100101, vs2 as u32, imm as u32, OPIVI, vd as u32),
+        VsrlVI { vd, imm, vs2 } => v_arith(0b101000, vs2 as u32, imm as u32, OPIVI, vd as u32),
+        VandVI { vd, imm, vs2 } => {
+            v_arith(0b001001, vs2 as u32, (imm as u32) & 0x1f, OPIVI, vd as u32)
+        }
+        VandVV { vd, vs1, vs2 } => v_arith(0b001001, vs2 as u32, vs1 as u32, OPIVV, vd as u32),
+        VorVV { vd, vs1, vs2 } => v_arith(0b001010, vs2 as u32, vs1 as u32, OPIVV, vd as u32),
+        VxorVV { vd, vs1, vs2 } => v_arith(0b001011, vs2 as u32, vs1 as u32, OPIVV, vd as u32),
+        VslidedownVI { vd, imm, vs2 } => v_arith(0b001111, vs2 as u32, imm as u32, OPIVI, vd as u32),
+        VslideupVI { vd, imm, vs2 } => v_arith(0b001110, vs2 as u32, imm as u32, OPIVI, vd as u32),
+
+        DlI { nvec, mask, vs1, width, sec } => {
+            debug_assert!((1..=4).contains(&nvec) && mask < 16 && sec < 4 && width < 4);
+            ((nvec as u32 - 1) << 30)
+                | ((mask as u32) << 25)
+                | ((vs1 as u32) << 20)
+                | ((width as u32) << 18)
+                | ((sec as u32) << 15)
+                | (F3_DLI << 12)
+                | OPC_CUSTOM0
+        }
+        DlM { nvec, mask, vs1, width, sec, m_row } => {
+            debug_assert!((1..=4).contains(&nvec) && mask < 16 && sec < 4 && m_row < 32);
+            ((nvec as u32 - 1) << 30)
+                | ((mask as u32) << 25)
+                | ((vs1 as u32) << 20)
+                | ((width as u32) << 18)
+                | ((sec as u32) << 15)
+                | (F3_DLM << 12)
+                | ((m_row as u32) << 7)
+                | OPC_CUSTOM0
+        }
+        DcP { sh, dh, m_row, vs1, width, vd } => {
+            debug_assert!(m_row < 32 && width < 4);
+            ((sh as u32) << 31)
+                | ((dh as u32) << 30)
+                | ((m_row as u32) << 25)
+                | ((vs1 as u32) << 20)
+                | ((width as u32) << 18)
+                | (F3_DCP << 12)
+                | ((vd as u32) << 7)
+                | OPC_CUSTOM0
+        }
+        DcF { sh, dh, m_row, vs1, width, bidx, vd } => {
+            debug_assert!(m_row < 32 && width < 4 && bidx < 8);
+            ((sh as u32) << 31)
+                | ((dh as u32) << 30)
+                | ((m_row as u32) << 25)
+                | ((vs1 as u32) << 20)
+                | ((width as u32) << 18)
+                | ((bidx as u32) << 15)
+                | (F3_DCF << 12)
+                | ((vd as u32) << 7)
+                | OPC_CUSTOM0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::VType;
+
+    #[test]
+    fn custom0_opcode_is_reserved_space() {
+        // custom-0 must not collide with any standard major opcode we use.
+        for opc in [OPC_LUI, OPC_OP, OPC_OP_IMM, OPC_V, OPC_VL, OPC_VS, OPC_LOAD, OPC_STORE] {
+            assert_ne!(OPC_CUSTOM0, opc);
+        }
+        let w = encode(&Instr::DlI { nvec: 4, mask: 0xf, vs1: 8, width: 0, sec: 3 });
+        assert_eq!(w & 0x7f, OPC_CUSTOM0);
+    }
+
+    #[test]
+    fn dcf_fields_land_where_documented() {
+        let w = encode(&Instr::DcF {
+            sh: true,
+            dh: false,
+            m_row: 0b10101,
+            vs1: 0b00111,
+            width: 2,
+            bidx: 5,
+            vd: 0b11001,
+        });
+        assert_eq!(w >> 31, 1); // sh
+        assert_eq!((w >> 30) & 1, 0); // dh
+        assert_eq!((w >> 25) & 0x1f, 0b10101); // m_row
+        assert_eq!((w >> 20) & 0x1f, 0b00111); // vs1
+        assert_eq!((w >> 18) & 0x3, 2); // width (precision)
+        assert_eq!((w >> 15) & 0x7, 5); // bidx
+        assert_eq!((w >> 12) & 0x7, F3_DCF);
+        assert_eq!((w >> 7) & 0x1f, 0b11001); // vd
+    }
+
+    #[test]
+    fn standard_encodings_spot_checks() {
+        // addi x1, x2, -3  => 0xffd10093
+        assert_eq!(
+            encode(&Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 2, imm: -3 }),
+            0xffd1_0093
+        );
+        // add x3, x4, x5 => 0x005201b3
+        assert_eq!(encode(&Instr::Op { op: AluOp::Add, rd: 3, rs1: 4, rs2: 5 }), 0x0052_01b3);
+        // lw x6, 16(x7) => 0x0103a303
+        assert_eq!(encode(&Instr::Lw { rd: 6, rs1: 7, imm: 16 }), 0x0103_a303);
+        // ecall
+        assert_eq!(encode(&Instr::Halt), 0x0000_0073);
+        // vsetvli x1, x2, e32,m1 => zimm=0b010000
+        let w = encode(&Instr::Vsetvli { rd: 1, rs1: 2, vtype: VType::new(32, 1) });
+        assert_eq!(w & 0x7f, OPC_V);
+        assert_eq!((w >> 12) & 0x7, 0b111);
+        assert_eq!(w >> 20, 0b010000);
+    }
+}

@@ -1,0 +1,371 @@
+//! Instruction set: RV32IM scalar subset + Zve32x vector subset + the four
+//! custom DIMC instructions of the paper (Section IV).
+//!
+//! The custom instructions live in the RISC-V *custom-0* opcode space
+//! (0b0001011), exactly as the paper prescribes, with the bit-level layout
+//! of Fig. 4 (see [`encode`] for the field map — the figure in the preprint
+//! is partially garbled, so the precise bit positions used here are
+//! documented as the normative layout of this reproduction).
+//!
+//! * `DL.I`  — load 64..256 bits from `nvec` consecutive VRF registers
+//!   (valid-bit `mask`) into sector `sec` of the DIMC input buffer.
+//! * `DL.M`  — same, into sector `sec` of DIMC memory row `m_row`.
+//! * `DC.P`  — in-memory MAC of input buffer x row `m_row`; takes a 24-bit
+//!   partial sum from half `sh` of `vs1`, writes the new 24-bit partial sum
+//!   (padded to 32) to half `dh` of `vd`.
+//! * `DC.F`  — as `DC.P` plus ReLU + requantization to 4/2/1 bits; the
+//!   result nibble is packed into nibble `bidx` of half `dh` of `vd`.
+
+pub mod encode;
+pub mod decode;
+pub mod asm;
+
+use std::fmt;
+
+/// Scalar ALU operation (register-register and register-immediate forms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Srl,
+    Sra,
+    And,
+    Or,
+    Xor,
+    Slt,
+    Sltu,
+    /// M extension multiply (register-register form only).
+    Mul,
+}
+
+/// Branch comparison condition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BranchCond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+/// Vector type configuration established by `vsetvli`.
+///
+/// Only the integer Zve32x subset is modelled: SEW in {8, 16, 32} and
+/// integer LMUL in {1, 2, 4, 8}.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VType {
+    /// Selected element width in bits.
+    pub sew: u16,
+    /// Register group multiplier.
+    pub lmul: u8,
+}
+
+impl VType {
+    pub fn new(sew: u16, lmul: u8) -> Self {
+        debug_assert!(matches!(sew, 8 | 16 | 32));
+        debug_assert!(matches!(lmul, 1 | 2 | 4 | 8));
+        VType { sew, lmul }
+    }
+
+    /// VLMAX = LMUL * VLEN / SEW.
+    pub fn vlmax(&self) -> u32 {
+        self.lmul as u32 * crate::arch::VLEN / self.sew as u32
+    }
+
+    /// The 8-bit vtype immediate (vlmul[2:0], vsew[5:3]), tail/mask agnostic.
+    pub fn zimm(&self) -> u32 {
+        let vlmul = match self.lmul {
+            1 => 0b000,
+            2 => 0b001,
+            4 => 0b010,
+            8 => 0b011,
+            _ => unreachable!(),
+        };
+        let vsew = match self.sew {
+            8 => 0b000,
+            16 => 0b001,
+            32 => 0b010,
+            _ => unreachable!(),
+        };
+        vlmul | (vsew << 3)
+    }
+
+    pub fn from_zimm(zimm: u32) -> Option<Self> {
+        let lmul = match zimm & 0b111 {
+            0b000 => 1,
+            0b001 => 2,
+            0b010 => 4,
+            0b011 => 8,
+            _ => return None,
+        };
+        let sew = match (zimm >> 3) & 0b111 {
+            0b000 => 8,
+            0b001 => 16,
+            0b010 => 32,
+            _ => return None,
+        };
+        Some(VType { sew, lmul })
+    }
+}
+
+/// One decoded instruction. PC-relative offsets are in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Instr {
+    // ----- RV32I / M scalar subset -----
+    Lui { rd: u8, imm: i32 },
+    Auipc { rd: u8, imm: i32 },
+    /// Register-immediate ALU (`Mul` is invalid here).
+    OpImm { op: AluOp, rd: u8, rs1: u8, imm: i32 },
+    /// Register-register ALU.
+    Op { op: AluOp, rd: u8, rs1: u8, rs2: u8 },
+    Lw { rd: u8, rs1: u8, imm: i32 },
+    Lbu { rd: u8, rs1: u8, imm: i32 },
+    Sw { rs2: u8, rs1: u8, imm: i32 },
+    Sb { rs2: u8, rs1: u8, imm: i32 },
+    Branch { cond: BranchCond, rs1: u8, rs2: u8, off: i32 },
+    Jal { rd: u8, off: i32 },
+    Jalr { rd: u8, rs1: u8, imm: i32 },
+    /// `ecall` — terminates simulation (the trace's exit convention).
+    Halt,
+
+    // ----- Zve32x vector subset -----
+    Vsetvli { rd: u8, rs1: u8, vtype: VType },
+    /// `vsetivli` with a 5-bit immediate AVL.
+    Vsetivli { rd: u8, uimm: u8, vtype: VType },
+    /// Unit-stride load, `eew` in {8, 16, 32}.
+    Vle { eew: u8, vd: u8, rs1: u8 },
+    /// Unit-stride store.
+    Vse { eew: u8, vs3: u8, rs1: u8 },
+    /// Strided load (byte stride in `rs2`).
+    Vlse { eew: u8, vd: u8, rs1: u8, rs2: u8 },
+    VaddVV { vd: u8, vs1: u8, vs2: u8 },
+    VaddVX { vd: u8, rs1: u8, vs2: u8 },
+    VaddVI { vd: u8, imm: i8, vs2: u8 },
+    VsubVV { vd: u8, vs1: u8, vs2: u8 },
+    VmulVV { vd: u8, vs1: u8, vs2: u8 },
+    /// `vmacc.vv vd, vs1, vs2`: vd += vs1 * vs2.
+    VmaccVV { vd: u8, vs1: u8, vs2: u8 },
+    /// `vredsum.vs vd, vs2, vs1`: vd[0] = sum(vs2[*]) + vs1[0].
+    VredsumVS { vd: u8, vs1: u8, vs2: u8 },
+    VmvVI { vd: u8, imm: i8 },
+    VmvVX { vd: u8, rs1: u8 },
+    /// `vmv.x.s rd, vs2`: rd = vs2[0].
+    VmvXS { rd: u8, vs2: u8 },
+    /// Sign-extend quarter-width elements: SEW/4 -> SEW.
+    VsextVf4 { vd: u8, vs2: u8 },
+    VmaxVX { vd: u8, rs1: u8, vs2: u8 },
+    VminVX { vd: u8, rs1: u8, vs2: u8 },
+    VsraVI { vd: u8, imm: u8, vs2: u8 },
+    VsllVI { vd: u8, imm: u8, vs2: u8 },
+    VsrlVI { vd: u8, imm: u8, vs2: u8 },
+    VandVI { vd: u8, imm: i8, vs2: u8 },
+    VandVV { vd: u8, vs1: u8, vs2: u8 },
+    VorVV { vd: u8, vs1: u8, vs2: u8 },
+    VxorVV { vd: u8, vs1: u8, vs2: u8 },
+    VslidedownVI { vd: u8, imm: u8, vs2: u8 },
+    VslideupVI { vd: u8, imm: u8, vs2: u8 },
+
+    // ----- Custom DIMC instructions (custom-0) -----
+    /// DIMC Input-buffer Load: VRF[vs1 .. vs1+nvec) -> input buffer sector
+    /// `sec`. `mask` holds one valid bit per source register; `width` is
+    /// the reserved element-width hint field of Fig. 4 (unused by the
+    /// timing model, carried for encoding fidelity).
+    DlI { nvec: u8, mask: u8, vs1: u8, width: u8, sec: u8 },
+    /// DIMC Memory Load: as `DL.I` but into row `m_row`.
+    DlM { nvec: u8, mask: u8, vs1: u8, width: u8, sec: u8, m_row: u8 },
+    /// DIMC Compute & Partial-sum store.
+    DcP { sh: bool, dh: bool, m_row: u8, vs1: u8, width: u8, vd: u8 },
+    /// DIMC Compute & Final-sum store (ReLU + requantize + nibble pack).
+    DcF { sh: bool, dh: bool, m_row: u8, vs1: u8, width: u8, bidx: u8, vd: u8 },
+}
+
+/// Coarse instruction class, used for the paper's Fig. 6 operation
+/// distribution (computing / loading / storing) and for FU assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InstrClass {
+    Scalar,
+    Branch,
+    VectorAlu,
+    VectorLoad,
+    VectorStore,
+    DimcLoad,
+    DimcCompute,
+    VConfig,
+}
+
+impl Instr {
+    /// Classify for Fig.6 accounting and FU selection.
+    pub fn class(&self) -> InstrClass {
+        use Instr::*;
+        match self {
+            Lui { .. } | Auipc { .. } | OpImm { .. } | Op { .. } | Lw { .. } | Lbu { .. }
+            | Sw { .. } | Sb { .. } | Jalr { .. } | Halt => InstrClass::Scalar,
+            Branch { .. } | Jal { .. } => InstrClass::Branch,
+            Vsetvli { .. } | Vsetivli { .. } => InstrClass::VConfig,
+            Vle { .. } | Vlse { .. } => InstrClass::VectorLoad,
+            Vse { .. } => InstrClass::VectorStore,
+            DlI { .. } | DlM { .. } => InstrClass::DimcLoad,
+            DcP { .. } | DcF { .. } => InstrClass::DimcCompute,
+            _ => InstrClass::VectorAlu,
+        }
+    }
+
+    /// True for the four custom DIMC instructions.
+    pub fn is_custom(&self) -> bool {
+        matches!(
+            self.class(),
+            InstrClass::DimcLoad | InstrClass::DimcCompute
+        )
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use Instr::*;
+        match *self {
+            Lui { rd, imm } => write!(f, "lui x{rd}, {imm:#x}"),
+            Auipc { rd, imm } => write!(f, "auipc x{rd}, {imm:#x}"),
+            OpImm { op, rd, rs1, imm } => {
+                let m = match op {
+                    AluOp::Add => "addi",
+                    AluOp::Sll => "slli",
+                    AluOp::Srl => "srli",
+                    AluOp::Sra => "srai",
+                    AluOp::And => "andi",
+                    AluOp::Or => "ori",
+                    AluOp::Xor => "xori",
+                    AluOp::Slt => "slti",
+                    AluOp::Sltu => "sltiu",
+                    _ => "op?i",
+                };
+                write!(f, "{m} x{rd}, x{rs1}, {imm}")
+            }
+            Op { op, rd, rs1, rs2 } => {
+                let m = match op {
+                    AluOp::Add => "add",
+                    AluOp::Sub => "sub",
+                    AluOp::Sll => "sll",
+                    AluOp::Srl => "srl",
+                    AluOp::Sra => "sra",
+                    AluOp::And => "and",
+                    AluOp::Or => "or",
+                    AluOp::Xor => "xor",
+                    AluOp::Slt => "slt",
+                    AluOp::Sltu => "sltu",
+                    AluOp::Mul => "mul",
+                };
+                write!(f, "{m} x{rd}, x{rs1}, x{rs2}")
+            }
+            Lw { rd, rs1, imm } => write!(f, "lw x{rd}, {imm}(x{rs1})"),
+            Lbu { rd, rs1, imm } => write!(f, "lbu x{rd}, {imm}(x{rs1})"),
+            Sw { rs2, rs1, imm } => write!(f, "sw x{rs2}, {imm}(x{rs1})"),
+            Sb { rs2, rs1, imm } => write!(f, "sb x{rs2}, {imm}(x{rs1})"),
+            Branch { cond, rs1, rs2, off } => {
+                let m = match cond {
+                    BranchCond::Eq => "beq",
+                    BranchCond::Ne => "bne",
+                    BranchCond::Lt => "blt",
+                    BranchCond::Ge => "bge",
+                    BranchCond::Ltu => "bltu",
+                    BranchCond::Geu => "bgeu",
+                };
+                write!(f, "{m} x{rs1}, x{rs2}, {off}")
+            }
+            Jal { rd, off } => write!(f, "jal x{rd}, {off}"),
+            Jalr { rd, rs1, imm } => write!(f, "jalr x{rd}, {imm}(x{rs1})"),
+            Halt => write!(f, "ecall"),
+            Vsetvli { rd, rs1, vtype } => {
+                write!(f, "vsetvli x{rd}, x{rs1}, e{},m{}", vtype.sew, vtype.lmul)
+            }
+            Vsetivli { rd, uimm, vtype } => {
+                write!(f, "vsetivli x{rd}, {uimm}, e{},m{}", vtype.sew, vtype.lmul)
+            }
+            Vle { eew, vd, rs1 } => write!(f, "vle{eew}.v v{vd}, (x{rs1})"),
+            Vse { eew, vs3, rs1 } => write!(f, "vse{eew}.v v{vs3}, (x{rs1})"),
+            Vlse { eew, vd, rs1, rs2 } => write!(f, "vlse{eew}.v v{vd}, (x{rs1}), x{rs2}"),
+            VaddVV { vd, vs1, vs2 } => write!(f, "vadd.vv v{vd}, v{vs2}, v{vs1}"),
+            VaddVX { vd, rs1, vs2 } => write!(f, "vadd.vx v{vd}, v{vs2}, x{rs1}"),
+            VaddVI { vd, imm, vs2 } => write!(f, "vadd.vi v{vd}, v{vs2}, {imm}"),
+            VsubVV { vd, vs1, vs2 } => write!(f, "vsub.vv v{vd}, v{vs2}, v{vs1}"),
+            VmulVV { vd, vs1, vs2 } => write!(f, "vmul.vv v{vd}, v{vs2}, v{vs1}"),
+            VmaccVV { vd, vs1, vs2 } => write!(f, "vmacc.vv v{vd}, v{vs1}, v{vs2}"),
+            VredsumVS { vd, vs1, vs2 } => write!(f, "vredsum.vs v{vd}, v{vs2}, v{vs1}"),
+            VmvVI { vd, imm } => write!(f, "vmv.v.i v{vd}, {imm}"),
+            VmvVX { vd, rs1 } => write!(f, "vmv.v.x v{vd}, x{rs1}"),
+            VmvXS { rd, vs2 } => write!(f, "vmv.x.s x{rd}, v{vs2}"),
+            VsextVf4 { vd, vs2 } => write!(f, "vsext.vf4 v{vd}, v{vs2}"),
+            VmaxVX { vd, rs1, vs2 } => write!(f, "vmax.vx v{vd}, v{vs2}, x{rs1}"),
+            VminVX { vd, rs1, vs2 } => write!(f, "vmin.vx v{vd}, v{vs2}, x{rs1}"),
+            VsraVI { vd, imm, vs2 } => write!(f, "vsra.vi v{vd}, v{vs2}, {imm}"),
+            VsllVI { vd, imm, vs2 } => write!(f, "vsll.vi v{vd}, v{vs2}, {imm}"),
+            VsrlVI { vd, imm, vs2 } => write!(f, "vsrl.vi v{vd}, v{vs2}, {imm}"),
+            VandVI { vd, imm, vs2 } => write!(f, "vand.vi v{vd}, v{vs2}, {imm}"),
+            VandVV { vd, vs1, vs2 } => write!(f, "vand.vv v{vd}, v{vs2}, v{vs1}"),
+            VorVV { vd, vs1, vs2 } => write!(f, "vor.vv v{vd}, v{vs2}, v{vs1}"),
+            VxorVV { vd, vs1, vs2 } => write!(f, "vxor.vv v{vd}, v{vs2}, v{vs1}"),
+            VslidedownVI { vd, imm, vs2 } => write!(f, "vslidedown.vi v{vd}, v{vs2}, {imm}"),
+            VslideupVI { vd, imm, vs2 } => write!(f, "vslideup.vi v{vd}, v{vs2}, {imm}"),
+            DlI { nvec, mask, vs1, width, sec } => {
+                write!(f, "dl.i v{vs1}, nvec={nvec}, mask={mask:#06b}, w={width}, sec={sec}")
+            }
+            DlM { nvec, mask, vs1, width, sec, m_row } => write!(
+                f,
+                "dl.m v{vs1}, nvec={nvec}, mask={mask:#06b}, w={width}, sec={sec}, row={m_row}"
+            ),
+            DcP { sh, dh, m_row, vs1, width, vd } => write!(
+                f,
+                "dc.p v{vd}.{}, v{vs1}.{}, row={m_row}, w={width}",
+                dh as u8, sh as u8
+            ),
+            DcF { sh, dh, m_row, vs1, width, bidx, vd } => write!(
+                f,
+                "dc.f v{vd}.{}[{bidx}], v{vs1}.{}, row={m_row}, w={width}",
+                dh as u8, sh as u8
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vtype_roundtrip() {
+        for sew in [8u16, 16, 32] {
+            for lmul in [1u8, 2, 4, 8] {
+                let vt = VType::new(sew, lmul);
+                assert_eq!(VType::from_zimm(vt.zimm()), Some(vt));
+            }
+        }
+    }
+
+    #[test]
+    fn vlmax() {
+        assert_eq!(VType::new(8, 1).vlmax(), 8);
+        assert_eq!(VType::new(32, 4).vlmax(), 8);
+        assert_eq!(VType::new(8, 8).vlmax(), 64);
+        assert_eq!(VType::new(32, 1).vlmax(), 2);
+    }
+
+    #[test]
+    fn classes() {
+        assert_eq!(
+            Instr::DcF { sh: false, dh: true, m_row: 3, vs1: 1, width: 0, bidx: 2, vd: 9 }
+                .class(),
+            InstrClass::DimcCompute
+        );
+        assert_eq!(
+            Instr::DlI { nvec: 4, mask: 0xf, vs1: 0, width: 0, sec: 1 }.class(),
+            InstrClass::DimcLoad
+        );
+        assert!(Instr::DlI { nvec: 4, mask: 0xf, vs1: 0, width: 0, sec: 1 }.is_custom());
+        assert_eq!(Instr::Halt.class(), InstrClass::Scalar);
+        assert_eq!(
+            Instr::Vle { eew: 8, vd: 1, rs1: 2 }.class(),
+            InstrClass::VectorLoad
+        );
+    }
+}

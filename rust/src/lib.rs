@@ -1,0 +1,56 @@
+//! # dimc-rvv
+//!
+//! Production reproduction of *"In-Pipeline Integration of Digital
+//! In-Memory-Computing into RISC-V Vector Architecture to Accelerate Deep
+//! Learning"* (Spagnolo et al., CS.AR 2026).
+//!
+//! The paper extends an industrial Zve32x RISC-V vector core (VLEN=64,
+//! ELEN=32, 500 MHz) with a DIMC tile (ISSCC'23: 32 rows x 1024 bits,
+//! 1024-bit input buffer, 256 parallel 4-bit MACs/cycle) integrated in the
+//! execution stage as a parallel functional-unit lane, driven by four
+//! custom vector instructions (`DL.I`, `DL.M`, `DC.P`, `DC.F`).
+//!
+//! This crate provides:
+//!
+//! * [`isa`] — the instruction set: a Zve32x + RV32IM subset plus the four
+//!   custom DIMC instructions, with bit-level encode/decode (Fig. 4 of the
+//!   paper, custom-0 opcode space) and a small assembler.
+//! * [`dimc`] — a bit-exact functional + timing model of the DIMC tile.
+//! * [`pipeline`] — the cycle-approximate core simulator: in-order issue,
+//!   scoreboard hazards, per-FU structural conflicts, fixed-latency
+//!   external memory, and a loop-nest trace engine for large layers.
+//! * [`compiler`] — the layer-to-instruction-stream mapper (DIMC path with
+//!   tiling and grouping, and the baseline pure-RVV int8 path).
+//! * [`workloads`] — layer tables for ResNet-50/18, AlexNet, VGG16,
+//!   Inception-v1, DenseNet-121, EfficientNet-B0 and MobileNet-v1.
+//! * [`metrics`] — GOPS / speedup / area-normalized-speedup reporting and
+//!   the calibrated area model.
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas golden
+//!   models (HLO text under `artifacts/`), used to cross-check the
+//!   simulator's functional outputs.
+//! * [`coordinator`] — the driver that runs whole networks through the
+//!   simulator and regenerates every figure and table of the paper.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dimc_rvv::compiler::layer::LayerConfig;
+//! use dimc_rvv::coordinator::driver::{simulate_layer, Engine};
+//!
+//! // ResNet-50 conv2_x 1x1x64->64 layer on a 56x56 feature map.
+//! let layer = LayerConfig::conv("conv2_demo", 64, 64, 1, 1, 56, 56, 1, 0);
+//! let r = simulate_layer(&layer, Engine::Dimc).unwrap();
+//! println!("{} GOPS, {} cycles", r.gops(), r.cycles);
+//! ```
+
+pub mod arch;
+pub mod isa;
+pub mod dimc;
+pub mod pipeline;
+pub mod compiler;
+pub mod workloads;
+pub mod metrics;
+pub mod runtime;
+pub mod coordinator;
+
+pub use arch::Arch;

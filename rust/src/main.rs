@@ -1,0 +1,11 @@
+//! `repro` — the leader binary: regenerates every figure/table of the
+//! paper, runs the end-to-end ResNet-50 driver, and cross-checks the
+//! simulator against the AOT-compiled JAX/Pallas golden models.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dimc_rvv::coordinator::cli::main_with_args(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,75 @@
+//! Area model for the area-normalized speedup (ANS) metric:
+//!
+//! ```text
+//! ANS = Speedup * Area(baseline RVV) / Area(DIMC-RVV)
+//! ```
+//!
+//! The paper obtained areas from Cadence RTL synthesis on
+//! STMicroelectronics' P18 (18 nm FD-SOI) node but does not publish the
+//! absolute values. We therefore use an analytic model *calibrated to the
+//! ratio the paper's numbers imply*: raw speedups "exceeding 200x" map to
+//! ANS "well above 50x" (Fig. 7), giving Area(DIMC-RVV)/Area(baseline)
+//! ~= 4.1. The absolute mm² below are plausible published-literature
+//! figures for an embedded RVV core + a 4 KiB DIMC macro in 18 nm FD-SOI
+//! and are documented as calibrated estimates (DESIGN.md §2); only the
+//! ratio enters any reported metric.
+
+/// Synthesis-style area breakdown in mm² (18 nm FD-SOI class node).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaModel {
+    /// Baseline scalar + vector core (incl. VRF and VLSU).
+    pub baseline_core_mm2: f64,
+    /// The DIMC tile macro: 32 Kib of 8T bitcells + MAC slices + IO.
+    pub dimc_tile_mm2: f64,
+    /// Integration overhead: decode, hazard logic, the extra VRF ports and
+    /// the DIMC lane datapath (the "tightly-coupled" cost of §I).
+    pub integration_mm2: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            baseline_core_mm2: 0.38,
+            dimc_tile_mm2: 1.10,
+            integration_mm2: 0.08,
+        }
+    }
+}
+
+impl AreaModel {
+    /// Total area of the DIMC-enhanced core.
+    pub fn dimc_rvv_mm2(&self) -> f64 {
+        self.baseline_core_mm2 + self.dimc_tile_mm2 + self.integration_mm2
+    }
+
+    /// The ratio that enters ANS.
+    pub fn ratio(&self) -> f64 {
+        self.baseline_core_mm2 / self.dimc_rvv_mm2()
+    }
+
+    /// Area-normalized speedup.
+    pub fn ans(&self, speedup: f64) -> f64 {
+        speedup * self.ratio()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_to_paper_implied_ratio() {
+        // Fig. 7: >200x raw speedups with ANS "well above 50x" implies an
+        // area ratio near 4; the default model sits at ~4.1.
+        let m = AreaModel::default();
+        let r = m.dimc_rvv_mm2() / m.baseline_core_mm2;
+        assert!((3.5..4.5).contains(&r), "area ratio {r}");
+        assert!(m.ans(217.0) > 50.0);
+    }
+
+    #[test]
+    fn ans_scales_linearly() {
+        let m = AreaModel::default();
+        assert!((m.ans(100.0) * 2.0 - m.ans(200.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Performance metrics (paper §V-A): OPs/second, speedup, and
+//! area-normalized speedup, plus the table/figure formatting used by the
+//! reproduction benches.
+
+pub mod area;
+pub mod energy;
+pub mod report;
+pub mod scaling;
+
+pub use area::AreaModel;
+pub use energy::EnergyModel;
+pub use report::{fig_rows, LayerRow};

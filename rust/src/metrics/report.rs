@@ -1,0 +1,141 @@
+//! Figure/table row computation and text rendering.
+//!
+//! Every paper artefact reduces to per-layer rows of
+//! (GOPS, op distribution, speedup, ANS); the bench binaries print these
+//! with the same grouping the paper plots.
+
+use super::area::AreaModel;
+use crate::compiler::layer::LayerConfig;
+use crate::coordinator::driver::{simulate_layer, Engine, LayerResult};
+use crate::pipeline::core::SimError;
+
+/// One per-layer evaluation row (the union of Figs. 5, 6 and 7).
+#[derive(Debug, Clone)]
+pub struct LayerRow {
+    pub name: String,
+    pub ops: u64,
+    pub dimc_cycles: u64,
+    pub baseline_cycles: u64,
+    pub gops: f64,
+    /// (compute, load, store) fractions of data-path instructions.
+    pub dist: (f64, f64, f64),
+    pub speedup: f64,
+    pub ans: f64,
+}
+
+/// Simulate `layer` on both engines and fold into a row.
+pub fn layer_row(layer: &LayerConfig, area: &AreaModel) -> Result<LayerRow, SimError> {
+    let d = simulate_layer(layer, Engine::Dimc)?;
+    let b = simulate_layer(layer, Engine::Baseline)?;
+    Ok(fold_row(layer, &d, &b, area))
+}
+
+/// Fold two pre-computed results into a row (used when the caller already
+/// has the simulations, e.g. the benches).
+pub fn fold_row(
+    layer: &LayerConfig,
+    d: &LayerResult,
+    b: &LayerResult,
+    area: &AreaModel,
+) -> LayerRow {
+    let speedup = b.cycles as f64 / d.cycles as f64;
+    LayerRow {
+        name: layer.name.clone(),
+        ops: layer.ops(),
+        dimc_cycles: d.cycles,
+        baseline_cycles: b.cycles,
+        gops: d.gops(),
+        dist: d.distribution(),
+        speedup,
+        ans: area.ans(speedup),
+    }
+}
+
+/// Rows for a list of layers.
+pub fn fig_rows(layers: &[LayerConfig], area: &AreaModel) -> Result<Vec<LayerRow>, SimError> {
+    layers.iter().map(|l| layer_row(l, area)).collect()
+}
+
+/// Render rows as an aligned text table with the given columns.
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let line = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&line(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&line(r));
+        out.push('\n');
+    }
+    out
+}
+
+/// Summary statistics over a set of rows (peak/mean GOPS, speedup range) —
+/// the headline numbers of the abstract.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub peak_gops: f64,
+    pub mean_gops: f64,
+    pub peak_speedup: f64,
+    pub geomean_speedup: f64,
+    pub min_ans: f64,
+    pub peak_ans: f64,
+}
+
+pub fn summarize(rows: &[LayerRow]) -> Summary {
+    let n = rows.len().max(1) as f64;
+    Summary {
+        peak_gops: rows.iter().map(|r| r.gops).fold(0.0, f64::max),
+        mean_gops: rows.iter().map(|r| r.gops).sum::<f64>() / n,
+        peak_speedup: rows.iter().map(|r| r.speedup).fold(0.0, f64::max),
+        geomean_speedup: (rows.iter().map(|r| r.speedup.ln()).sum::<f64>() / n).exp(),
+        min_ans: rows.iter().map(|r| r.ans).fold(f64::INFINITY, f64::min),
+        peak_ans: rows.iter().map(|r| r.ans).fold(0.0, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_and_summary() {
+        let l = LayerConfig::conv("t", 32, 32, 2, 2, 8, 8, 1, 0);
+        let area = AreaModel::default();
+        let row = layer_row(&l, &area).unwrap();
+        assert!(row.speedup > 1.0);
+        assert!(row.ans < row.speedup);
+        assert!(row.gops > 0.0);
+        let (c, ld, st) = row.dist;
+        assert!((c + ld + st - 1.0).abs() < 1e-9);
+        let s = summarize(&[row.clone(), row]);
+        // geomean of two identical rows is the value itself (up to fp)
+        assert!((s.peak_speedup - s.geomean_speedup).abs() < 1e-9 * s.peak_speedup);
+    }
+
+    #[test]
+    fn table_rendering_aligns() {
+        let t = render_table(
+            "demo",
+            &["layer", "gops"],
+            &[vec!["a".into(), "1.0".into()], vec!["layer_b".into(), "123.4".into()]],
+        );
+        assert!(t.contains("== demo =="));
+        assert!(t.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,888 @@
+//! The core model: in-order, single-issue, scoreboarded execution that is
+//! simultaneously *functional* (architectural state is bit-exact, so
+//! results can be cross-checked against the JAX/Pallas golden model) and
+//! *cycle-approximate* (per-register ready times, per-FU busy times,
+//! taken-branch penalty — the granularity the paper's simulator models).
+
+use super::latency::{timing, VCtx, NUM_FUS};
+use super::mem::Mem;
+use super::vrf::{
+    group_regs, read_elem, read_elem_s, read_half, read_regs, write_elem, write_half,
+    write_half_nibble, VRegFile,
+};
+use crate::arch::{Arch, NUM_VREGS, VLENB};
+use crate::dimc::{DimcTile, Precision};
+use crate::isa::{AluOp, BranchCond, Instr, InstrClass, VType};
+
+/// Simulation failure.
+#[derive(Debug)]
+pub enum SimError {
+    /// PC ran off the end of the program without `Halt`.
+    PcOutOfRange(i64),
+    /// Instruction budget exhausted (runaway loop guard).
+    InstretLimit(u64),
+    /// Architecturally invalid operation (e.g. bad DIMC row).
+    Fault(String),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::PcOutOfRange(pc) => write!(f, "pc {pc} out of range (missing ecall?)"),
+            SimError::InstretLimit(n) => write!(f, "instruction limit {n} exhausted"),
+            SimError::Fault(m) => write!(f, "fault: {m}"),
+        }
+    }
+}
+impl std::error::Error for SimError {}
+
+/// Issue-side timing state. All times are absolute cycles.
+#[derive(Debug, Clone)]
+pub struct Scoreboard {
+    /// Cycle the previous instruction issued.
+    pub last_issue: u64,
+    /// Instructions already issued in `last_issue`'s cycle (multi-issue
+    /// front ends allow up to `Arch::issue_width` per cycle, in order).
+    pub issued_in_cycle: u64,
+    pub xreg_ready: [u64; 32],
+    pub vreg_ready: [u64; NUM_VREGS],
+    pub fu_free: [u64; NUM_FUS],
+    /// Cycle the DIMC architectural state (rows + input buffer) is
+    /// coherent: `DC.*` must issue at or after this; `DL.*` bump it.
+    pub dimc_state_ready: u64,
+    /// Cycle vector configuration (vl/vtype) is valid.
+    pub vcfg_ready: u64,
+    /// Completion time of the latest-finishing instruction so far.
+    pub max_completion: u64,
+}
+
+impl Default for Scoreboard {
+    fn default() -> Self {
+        Scoreboard {
+            last_issue: 0,
+            issued_in_cycle: u64::MAX, // force the first issue to advance
+            xreg_ready: [0; 32],
+            vreg_ready: [0; NUM_VREGS],
+            fu_free: [0; NUM_FUS],
+            dimc_state_ready: 0,
+            vcfg_ready: 0,
+            max_completion: 0,
+        }
+    }
+}
+
+impl Scoreboard {
+    /// Shift every absolute time by `delta` — used by the trace engine to
+    /// fast-forward through steady-state loop iterations (all scoreboard
+    /// state moves rigidly by the initiation interval per iteration).
+    pub fn shift(&mut self, delta: u64) {
+        self.last_issue += delta;
+        for t in self.xreg_ready.iter_mut() {
+            *t += delta;
+        }
+        for t in self.vreg_ready.iter_mut() {
+            *t += delta;
+        }
+        for t in self.fu_free.iter_mut() {
+            *t += delta;
+        }
+        self.dimc_state_ready += delta;
+        self.vcfg_ready += delta;
+        self.max_completion += delta;
+    }
+}
+
+/// One recorded instruction of a traced run (`Core::run_traced`).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEntry {
+    pub pc: i64,
+    pub instr: Instr,
+    /// Cycle the instruction issued.
+    pub issue: u64,
+    /// Cycle its result became architecturally visible.
+    pub complete: u64,
+}
+
+/// Aggregate statistics of a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RunStats {
+    pub cycles: u64,
+    pub instret: u64,
+    /// Instruction counts by class, indexed by `class_index`.
+    pub class_counts: [u64; 8],
+}
+
+/// Stable index for [`InstrClass`] used in `RunStats::class_counts`.
+pub fn class_index(c: InstrClass) -> usize {
+    match c {
+        InstrClass::Scalar => 0,
+        InstrClass::Branch => 1,
+        InstrClass::VectorAlu => 2,
+        InstrClass::VectorLoad => 3,
+        InstrClass::VectorStore => 4,
+        InstrClass::DimcLoad => 5,
+        InstrClass::DimcCompute => 6,
+        InstrClass::VConfig => 7,
+    }
+}
+
+/// The modelled core: architectural + timing state.
+#[derive(Clone)]
+pub struct Core {
+    pub arch: Arch,
+    pub xregs: [i32; 32],
+    pub vregs: VRegFile,
+    pub vl: u32,
+    pub vtype: VType,
+    pub mem: Mem,
+    pub dimc: DimcTile,
+    pub sb: Scoreboard,
+    pub stats: RunStats,
+    /// Timing-only mode (trace engine): skip the *data payload* of
+    /// vector/DIMC instructions — their latencies are data-independent,
+    /// so cycle counts are unchanged, but the 256-lane DC dot products
+    /// and vector byte shuffles are not simulated. Scalar state, branches
+    /// and vector configuration still execute (they can steer timing).
+    /// Only valid for straight-line generated programs whose control flow
+    /// never depends on vector results (the mapper's output).
+    pub timing_only: bool,
+}
+
+impl Core {
+    pub fn new(arch: Arch) -> Self {
+        Core {
+            arch,
+            xregs: [0; 32],
+            vregs: [[0; VLENB]; NUM_VREGS],
+            vl: 0,
+            vtype: VType::new(8, 1),
+            mem: Mem::new(),
+            dimc: DimcTile::default(),
+            sb: Scoreboard::default(),
+            stats: RunStats::default(),
+            timing_only: false,
+        }
+    }
+
+    #[inline]
+    fn vctx(&self) -> VCtx {
+        VCtx { vl: self.vl, sew: self.vtype.sew }
+    }
+
+    /// Register dependencies of `i`: (x sources, v source groups,
+    /// x dest, v dest group, reads/writes DIMC state).
+    #[allow(clippy::type_complexity)]
+    fn deps(
+        &self,
+        i: &Instr,
+    ) -> ([Option<u8>; 2], [(u8, u8); 3], Option<u8>, Option<(u8, u8)>, bool, bool) {
+        use Instr::*;
+        let g = group_regs(self.vl, self.vtype.sew) as u8;
+        let none_v: [(u8, u8); 3] = [(0, 0); 3];
+        match *i {
+            Lui { rd, .. } | Auipc { rd, .. } => ([None; 2], none_v, Some(rd), None, false, false),
+            OpImm { rd, rs1, .. } => ([Some(rs1), None], none_v, Some(rd), None, false, false),
+            Op { rd, rs1, rs2, .. } => {
+                ([Some(rs1), Some(rs2)], none_v, Some(rd), None, false, false)
+            }
+            Lw { rd, rs1, .. } | Lbu { rd, rs1, .. } => {
+                ([Some(rs1), None], none_v, Some(rd), None, false, false)
+            }
+            Sw { rs2, rs1, .. } | Sb { rs2, rs1, .. } => {
+                ([Some(rs1), Some(rs2)], none_v, None, None, false, false)
+            }
+            Branch { rs1, rs2, .. } => ([Some(rs1), Some(rs2)], none_v, None, None, false, false),
+            Jal { rd, .. } => ([None; 2], none_v, Some(rd), None, false, false),
+            Jalr { rd, rs1, .. } => ([Some(rs1), None], none_v, Some(rd), None, false, false),
+            Halt => ([None; 2], none_v, None, None, false, false),
+            Vsetvli { rd, rs1, .. } => ([Some(rs1), None], none_v, Some(rd), None, false, false),
+            Vsetivli { rd, .. } => ([None; 2], none_v, Some(rd), None, false, false),
+            Vle { eew, vd, rs1 } => {
+                let regs = group_regs(self.vl, eew as u16) as u8;
+                ([Some(rs1), None], none_v, None, Some((vd, regs)), false, false)
+            }
+            Vse { eew, vs3, rs1 } => {
+                let regs = group_regs(self.vl, eew as u16) as u8;
+                ([Some(rs1), None], [(vs3, regs), (0, 0), (0, 0)], None, None, false, false)
+            }
+            Vlse { eew, vd, rs1, rs2 } => {
+                let regs = group_regs(self.vl, eew as u16) as u8;
+                ([Some(rs1), Some(rs2)], none_v, None, Some((vd, regs)), false, false)
+            }
+            VaddVV { vd, vs1, vs2 }
+            | VsubVV { vd, vs1, vs2 }
+            | VmulVV { vd, vs1, vs2 }
+            | VandVV { vd, vs1, vs2 }
+            | VorVV { vd, vs1, vs2 }
+            | VxorVV { vd, vs1, vs2 } => {
+                ([None; 2], [(vs1, g), (vs2, g), (0, 0)], None, Some((vd, g)), false, false)
+            }
+            VmaccVV { vd, vs1, vs2 } => {
+                ([None; 2], [(vs1, g), (vs2, g), (vd, g)], None, Some((vd, g)), false, false)
+            }
+            VredsumVS { vd, vs1, vs2 } => {
+                ([None; 2], [(vs1, 1), (vs2, g), (0, 0)], None, Some((vd, 1)), false, false)
+            }
+            VaddVX { vd, rs1, vs2 }
+            | VmaxVX { vd, rs1, vs2 }
+            | VminVX { vd, rs1, vs2 } => {
+                ([Some(rs1), None], [(vs2, g), (0, 0), (0, 0)], None, Some((vd, g)), false, false)
+            }
+            VaddVI { vd, vs2, .. }
+            | VsraVI { vd, vs2, .. }
+            | VsllVI { vd, vs2, .. }
+            | VsrlVI { vd, vs2, .. }
+            | VandVI { vd, vs2, .. }
+            | VslidedownVI { vd, vs2, .. }
+            | VslideupVI { vd, vs2, .. } => {
+                ([None; 2], [(vs2, g), (0, 0), (0, 0)], None, Some((vd, g)), false, false)
+            }
+            VmvVI { vd, .. } => ([None; 2], none_v, None, Some((vd, g)), false, false),
+            VmvVX { vd, rs1 } => {
+                ([Some(rs1), None], none_v, None, Some((vd, g)), false, false)
+            }
+            VmvXS { rd, vs2 } => {
+                ([None; 2], [(vs2, 1), (0, 0), (0, 0)], Some(rd), None, false, false)
+            }
+            VsextVf4 { vd, vs2 } => {
+                let src_regs = group_regs(self.vl, self.vtype.sew / 4) as u8;
+                ([None; 2], [(vs2, src_regs.max(1)), (0, 0), (0, 0)], None, Some((vd, g)), false, false)
+            }
+            DlI { vs1, nvec, .. } | DlM { vs1, nvec, .. } => {
+                ([None; 2], [(vs1, nvec), (0, 0), (0, 0)], None, None, false, true)
+            }
+            // DC.* read the tile state and the psum half of vs1. They do
+            // NOT stall on vd: half/nibble insertion happens in the DIMC
+            // accumulation pipeline's write-back stage, so back-to-back
+            // DC results destined for the same register merge there (the
+            // paper's "one result per cycle" sequential write-back).
+            DcP { vs1, vd, .. } => {
+                ([None; 2], [(vs1, 1), (0, 0), (0, 0)], None, Some((vd, 1)), true, false)
+            }
+            DcF { vs1, vd, .. } => {
+                ([None; 2], [(vs1, 1), (0, 0), (0, 0)], None, Some((vd, 1)), true, false)
+            }
+        }
+    }
+
+    /// Issue `i` on the scoreboard; returns its issue cycle.
+    fn issue(&mut self, i: &Instr, taken_branch: bool) -> u64 {
+        let t = timing(i, &self.arch, &self.vctx());
+        let (xsrc, vsrc, xdst, vdst, reads_dimc, writes_dimc) = self.deps(i);
+
+        // In-order front end, up to `issue_width` instructions per cycle.
+        let mut at = if self.sb.issued_in_cycle < self.arch.issue_width {
+            self.sb.last_issue
+        } else {
+            self.sb.last_issue + 1
+        };
+        for r in xsrc.into_iter().flatten() {
+            at = at.max(self.sb.xreg_ready[r as usize]);
+        }
+        for (base, n) in vsrc {
+            for k in 0..n {
+                at = at.max(self.sb.vreg_ready[(base as usize + k as usize) % NUM_VREGS]);
+            }
+        }
+        // Vector instructions wait for a valid vector configuration.
+        if !matches!(
+            i.class(),
+            InstrClass::Scalar | InstrClass::Branch | InstrClass::VConfig
+        ) {
+            at = at.max(self.sb.vcfg_ready);
+        }
+        if reads_dimc {
+            at = at.max(self.sb.dimc_state_ready);
+        }
+        at = at.max(self.sb.fu_free[t.fu.index()]);
+
+        let done = at + t.latency;
+        self.sb.fu_free[t.fu.index()] = at + t.occupy;
+        if let Some(rd) = xdst {
+            if rd != 0 {
+                self.sb.xreg_ready[rd as usize] = self.sb.xreg_ready[rd as usize].max(done);
+            }
+        }
+        if let Some((base, n)) = vdst {
+            for k in 0..n {
+                let r = (base as usize + k as usize) % NUM_VREGS;
+                self.sb.vreg_ready[r] = self.sb.vreg_ready[r].max(done);
+            }
+        }
+        if writes_dimc {
+            self.sb.dimc_state_ready = self.sb.dimc_state_ready.max(done);
+        }
+        if matches!(i.class(), InstrClass::VConfig) {
+            self.sb.vcfg_ready = self.sb.vcfg_ready.max(done);
+        }
+        self.sb.max_completion = self.sb.max_completion.max(done);
+        if taken_branch {
+            // redirect: nothing else issues until the penalty elapses
+            self.sb.last_issue = at + self.arch.branch_penalty;
+            self.sb.issued_in_cycle = u64::MAX;
+        } else if at == self.sb.last_issue {
+            self.sb.issued_in_cycle += 1;
+        } else {
+            self.sb.last_issue = at;
+            self.sb.issued_in_cycle = 1;
+        }
+        at
+    }
+
+    /// Execute `i` functionally. Returns `Some(new_pc_index)` on taken
+    /// control flow, `None` otherwise; `Err` only on faults.
+    fn exec(&mut self, i: &Instr, pc: i64) -> Result<Option<i64>, SimError> {
+        use Instr::*;
+        if self.timing_only
+            && !matches!(
+                i.class(),
+                InstrClass::Scalar | InstrClass::Branch | InstrClass::VConfig
+            )
+        {
+            // Data payload skipped; latencies are data-independent.
+            if let DcP { width, .. } | DcF { width, .. } = *i {
+                self.check_width(width)?;
+            }
+            return Ok(None);
+        }
+        let x = |r: u8, regs: &[i32; 32]| if r == 0 { 0 } else { regs[r as usize] };
+        match *i {
+            Lui { rd, imm } => {
+                if rd != 0 {
+                    self.xregs[rd as usize] = imm << 12;
+                }
+            }
+            Auipc { rd, imm } => {
+                if rd != 0 {
+                    self.xregs[rd as usize] = (imm << 12).wrapping_add((pc * 4) as i32);
+                }
+            }
+            OpImm { op, rd, rs1, imm } => {
+                let a = x(rs1, &self.xregs);
+                let r = alu(op, a, imm);
+                if rd != 0 {
+                    self.xregs[rd as usize] = r;
+                }
+            }
+            Op { op, rd, rs1, rs2 } => {
+                let r = alu(op, x(rs1, &self.xregs), x(rs2, &self.xregs));
+                if rd != 0 {
+                    self.xregs[rd as usize] = r;
+                }
+            }
+            Lw { rd, rs1, imm } => {
+                let addr = (x(rs1, &self.xregs).wrapping_add(imm)) as u32;
+                let v = self.mem.load_u32(addr) as i32;
+                if rd != 0 {
+                    self.xregs[rd as usize] = v;
+                }
+            }
+            Lbu { rd, rs1, imm } => {
+                let addr = (x(rs1, &self.xregs).wrapping_add(imm)) as u32;
+                let v = self.mem.load_u8(addr) as i32;
+                if rd != 0 {
+                    self.xregs[rd as usize] = v;
+                }
+            }
+            Sw { rs2, rs1, imm } => {
+                let addr = (x(rs1, &self.xregs).wrapping_add(imm)) as u32;
+                self.mem.store_u32(addr, x(rs2, &self.xregs) as u32);
+            }
+            Sb { rs2, rs1, imm } => {
+                let addr = (x(rs1, &self.xregs).wrapping_add(imm)) as u32;
+                self.mem.store_u8(addr, x(rs2, &self.xregs) as u8);
+            }
+            Branch { cond, rs1, rs2, off } => {
+                let a = x(rs1, &self.xregs);
+                let b = x(rs2, &self.xregs);
+                let taken = match cond {
+                    BranchCond::Eq => a == b,
+                    BranchCond::Ne => a != b,
+                    BranchCond::Lt => a < b,
+                    BranchCond::Ge => a >= b,
+                    BranchCond::Ltu => (a as u32) < (b as u32),
+                    BranchCond::Geu => (a as u32) >= (b as u32),
+                };
+                if taken {
+                    return Ok(Some(pc + (off / 4) as i64));
+                }
+            }
+            Jal { rd, off } => {
+                if rd != 0 {
+                    self.xregs[rd as usize] = ((pc + 1) * 4) as i32;
+                }
+                return Ok(Some(pc + (off / 4) as i64));
+            }
+            Jalr { rd, rs1, imm } => {
+                let target = x(rs1, &self.xregs).wrapping_add(imm);
+                if rd != 0 {
+                    self.xregs[rd as usize] = ((pc + 1) * 4) as i32;
+                }
+                return Ok(Some((target / 4) as i64));
+            }
+            Halt => unreachable!("Halt handled by run loop"),
+            Vsetvli { rd, rs1, vtype } => {
+                let avl = if rs1 == 0 { vtype.vlmax() } else { x(rs1, &self.xregs) as u32 };
+                self.vtype = vtype;
+                self.vl = avl.min(vtype.vlmax());
+                if rd != 0 {
+                    self.xregs[rd as usize] = self.vl as i32;
+                }
+            }
+            Vsetivli { rd, uimm, vtype } => {
+                self.vtype = vtype;
+                self.vl = (uimm as u32).min(vtype.vlmax());
+                if rd != 0 {
+                    self.xregs[rd as usize] = self.vl as i32;
+                }
+            }
+            Vle { eew, vd, rs1 } => {
+                let addr = x(rs1, &self.xregs) as u32;
+                let bytes = self.vl as usize * eew as usize / 8;
+                debug_assert!(bytes <= 64); // VLEN=64, LMUL<=8
+                let mut buf = [0u8; 64];
+                self.mem.load_bytes(addr, &mut buf[..bytes]);
+                for (k, b) in buf[..bytes].iter().enumerate() {
+                    let reg = vd as usize + k / VLENB;
+                    self.vregs[reg % NUM_VREGS][k % VLENB] = *b;
+                }
+            }
+            Vse { eew, vs3, rs1 } => {
+                let addr = x(rs1, &self.xregs) as u32;
+                let bytes = self.vl as usize * eew as usize / 8;
+                debug_assert!(bytes <= 64);
+                let mut buf = [0u8; 64];
+                for (k, b) in buf[..bytes].iter_mut().enumerate() {
+                    let reg = vs3 as usize + k / VLENB;
+                    *b = self.vregs[reg % NUM_VREGS][k % VLENB];
+                }
+                self.mem.store_bytes(addr, &buf[..bytes]);
+            }
+            Vlse { eew, vd, rs1, rs2 } => {
+                let base = x(rs1, &self.xregs) as u32;
+                let stride = x(rs2, &self.xregs) as u32;
+                let esz = eew as usize / 8;
+                for e in 0..self.vl as usize {
+                    let mut eb = [0u8; 4];
+                    self.mem.load_bytes(base.wrapping_add(e as u32 * stride), &mut eb[..esz]);
+                    let val = u32::from_le_bytes(eb);
+                    write_elem(&mut self.vregs, vd, e, eew as u16, val);
+                }
+            }
+            VaddVV { vd, vs1, vs2 } => self.vv(vd, vs1, vs2, |a, b| a.wrapping_add(b)),
+            VsubVV { vd, vs1, vs2 } => self.vv(vd, vs1, vs2, |a, b| b.wrapping_sub(a)),
+            VmulVV { vd, vs1, vs2 } => self.vv(vd, vs1, vs2, |a, b| a.wrapping_mul(b)),
+            VandVV { vd, vs1, vs2 } => self.vv(vd, vs1, vs2, |a, b| a & b),
+            VorVV { vd, vs1, vs2 } => self.vv(vd, vs1, vs2, |a, b| a | b),
+            VxorVV { vd, vs1, vs2 } => self.vv(vd, vs1, vs2, |a, b| a ^ b),
+            VmaccVV { vd, vs1, vs2 } => {
+                let sew = self.vtype.sew;
+                for e in 0..self.vl as usize {
+                    let a = read_elem_s(&self.vregs, vs1, e, sew);
+                    let b = read_elem_s(&self.vregs, vs2, e, sew);
+                    let c = read_elem_s(&self.vregs, vd, e, sew);
+                    write_elem(&mut self.vregs, vd, e, sew, c.wrapping_add(a.wrapping_mul(b)) as u32);
+                }
+            }
+            VredsumVS { vd, vs1, vs2 } => {
+                let sew = self.vtype.sew;
+                let mut acc = read_elem_s(&self.vregs, vs1, 0, sew);
+                for e in 0..self.vl as usize {
+                    acc = acc.wrapping_add(read_elem_s(&self.vregs, vs2, e, sew));
+                }
+                write_elem(&mut self.vregs, vd, 0, sew, acc as u32);
+            }
+            VaddVX { vd, rs1, vs2 } => {
+                let s = x(rs1, &self.xregs);
+                self.vx(vd, vs2, |b| b.wrapping_add(s))
+            }
+            VmaxVX { vd, rs1, vs2 } => {
+                let s = x(rs1, &self.xregs);
+                self.vx(vd, vs2, |b| b.max(s))
+            }
+            VminVX { vd, rs1, vs2 } => {
+                let s = x(rs1, &self.xregs);
+                self.vx(vd, vs2, |b| b.min(s))
+            }
+            VaddVI { vd, imm, vs2 } => self.vx(vd, vs2, |b| b.wrapping_add(imm as i32)),
+            VandVI { vd, imm, vs2 } => self.vx(vd, vs2, |b| b & imm as i32),
+            VsraVI { vd, imm, vs2 } => self.vx(vd, vs2, |b| b >> (imm as u32)),
+            VsllVI { vd, imm, vs2 } => self.vx(vd, vs2, |b| ((b as u32) << imm as u32) as i32),
+            VsrlVI { vd, imm, vs2 } => {
+                let sew = self.vtype.sew;
+                for e in 0..self.vl as usize {
+                    let b = read_elem(&self.vregs, vs2, e, sew);
+                    write_elem(&mut self.vregs, vd, e, sew, b >> imm as u32);
+                }
+            }
+            VmvVI { vd, imm } => {
+                let sew = self.vtype.sew;
+                for e in 0..self.vl as usize {
+                    write_elem(&mut self.vregs, vd, e, sew, imm as i32 as u32);
+                }
+            }
+            VmvVX { vd, rs1 } => {
+                let s = x(rs1, &self.xregs) as u32;
+                let sew = self.vtype.sew;
+                for e in 0..self.vl as usize {
+                    write_elem(&mut self.vregs, vd, e, sew, s);
+                }
+            }
+            VmvXS { rd, vs2 } => {
+                let v = read_elem_s(&self.vregs, vs2, 0, self.vtype.sew);
+                if rd != 0 {
+                    self.xregs[rd as usize] = v;
+                }
+            }
+            VsextVf4 { vd, vs2 } => {
+                let sew = self.vtype.sew;
+                let src_sew = sew / 4;
+                debug_assert!(self.vl <= 64);
+                let mut vals = [0i32; 64];
+                for e in 0..self.vl as usize {
+                    vals[e] = read_elem_s(&self.vregs, vs2, e, src_sew);
+                }
+                for (e, v) in vals[..self.vl as usize].iter().enumerate() {
+                    write_elem(&mut self.vregs, vd, e, sew, *v as u32);
+                }
+            }
+            VslidedownVI { vd, imm, vs2 } => {
+                let sew = self.vtype.sew;
+                let mut vals = [0u32; 64];
+                for (e, v) in vals[..self.vl as usize].iter_mut().enumerate() {
+                    let s = e + imm as usize;
+                    if s < self.vl as usize {
+                        *v = read_elem(&self.vregs, vs2, s, sew);
+                    }
+                }
+                for (e, v) in vals[..self.vl as usize].iter().enumerate() {
+                    write_elem(&mut self.vregs, vd, e, sew, *v);
+                }
+            }
+            VslideupVI { vd, imm, vs2 } => {
+                let sew = self.vtype.sew;
+                let mut vals = [0u32; 64];
+                let lo = (imm as usize).min(self.vl as usize);
+                for e in lo..self.vl as usize {
+                    vals[e] = read_elem(&self.vregs, vs2, e - imm as usize, sew);
+                }
+                for e in lo..self.vl as usize {
+                    write_elem(&mut self.vregs, vd, e, sew, vals[e]);
+                }
+            }
+            DlI { nvec, mask, vs1, width: _, sec } => {
+                let mut data = [0u8; 32];
+                read_regs(&self.vregs, vs1, nvec, &mut data);
+                self.dimc.load_ibuf(sec, &data[..nvec as usize * 8], nvec, mask);
+            }
+            DlM { nvec, mask, vs1, width: _, sec, m_row } => {
+                let mut data = [0u8; 32];
+                read_regs(&self.vregs, vs1, nvec, &mut data);
+                self.dimc.load_row(m_row, sec, &data[..nvec as usize * 8], nvec, mask);
+            }
+            DcP { sh, dh, m_row, vs1, width, vd } => {
+                self.check_width(width)?;
+                let psum = read_half(&self.vregs, vs1, sh) as i32;
+                let out = self.dimc.compute_partial(m_row, psum);
+                write_half(&mut self.vregs, vd, dh, out as u32);
+            }
+            DcF { sh, dh, m_row, vs1, width, bidx, vd } => {
+                self.check_width(width)?;
+                let psum = read_half(&self.vregs, vs1, sh) as i32;
+                let nib = self.dimc.compute_final(m_row, psum);
+                write_half_nibble(&mut self.vregs, vd, dh, bidx, nib);
+            }
+        }
+        Ok(None)
+    }
+
+    fn check_width(&self, width: u8) -> Result<(), SimError> {
+        match Precision::from_width_field(width) {
+            Some(p) if p == self.dimc.cfg.precision => Ok(()),
+            Some(p) => Err(SimError::Fault(format!(
+                "DC width field {p:?} disagrees with tile config {:?}",
+                self.dimc.cfg.precision
+            ))),
+            None => Err(SimError::Fault(format!("bad DC width field {width}"))),
+        }
+    }
+
+    #[inline]
+    fn vv(&mut self, vd: u8, vs1: u8, vs2: u8, f: impl Fn(i32, i32) -> i32) {
+        let sew = self.vtype.sew;
+        for e in 0..self.vl as usize {
+            let a = read_elem_s(&self.vregs, vs1, e, sew);
+            let b = read_elem_s(&self.vregs, vs2, e, sew);
+            write_elem(&mut self.vregs, vd, e, sew, f(a, b) as u32);
+        }
+    }
+
+    #[inline]
+    fn vx(&mut self, vd: u8, vs2: u8, f: impl Fn(i32) -> i32) {
+        let sew = self.vtype.sew;
+        for e in 0..self.vl as usize {
+            let b = read_elem_s(&self.vregs, vs2, e, sew);
+            write_elem(&mut self.vregs, vd, e, sew, f(b) as u32);
+        }
+    }
+
+    /// Run `prog` from index 0 until `Halt`, a fault, or `max_instret`.
+    pub fn run(&mut self, prog: &[Instr], max_instret: u64) -> Result<RunStats, SimError> {
+        let start_instret = self.stats.instret;
+        let mut pc: i64 = 0;
+        loop {
+            if pc < 0 || pc as usize >= prog.len() {
+                return Err(SimError::PcOutOfRange(pc));
+            }
+            let i = prog[pc as usize];
+            if matches!(i, Instr::Halt) {
+                self.issue(&i, false);
+                self.stats.instret += 1;
+                self.stats.class_counts[class_index(i.class())] += 1;
+                break;
+            }
+            if self.stats.instret - start_instret >= max_instret {
+                return Err(SimError::InstretLimit(max_instret));
+            }
+            // Execute first (branch direction feeds the issue penalty).
+            let ctrl = self.exec(&i, pc)?;
+            self.issue(&i, ctrl.is_some());
+            self.stats.instret += 1;
+            self.stats.class_counts[class_index(i.class())] += 1;
+            pc = ctrl.unwrap_or(pc + 1);
+        }
+        self.stats.cycles = self.sb.max_completion;
+        Ok(self.stats)
+    }
+
+    /// Run `prog` like [`Self::run`] but record per-instruction issue and
+    /// completion cycles — the debugging view of the pipeline (used by
+    /// `repro trace`).
+    pub fn run_traced(
+        &mut self,
+        prog: &[Instr],
+        max_instret: u64,
+    ) -> Result<(RunStats, Vec<TraceEntry>), SimError> {
+        let start_instret = self.stats.instret;
+        let mut entries = Vec::new();
+        let mut pc: i64 = 0;
+        loop {
+            if pc < 0 || pc as usize >= prog.len() {
+                return Err(SimError::PcOutOfRange(pc));
+            }
+            let i = prog[pc as usize];
+            if self.stats.instret - start_instret >= max_instret {
+                return Err(SimError::InstretLimit(max_instret));
+            }
+            let halt = matches!(i, Instr::Halt);
+            let ctrl = if halt { None } else { self.exec(&i, pc)? };
+            let lat = timing(&i, &self.arch, &self.vctx()).latency;
+            let at = self.issue(&i, ctrl.is_some());
+            entries.push(TraceEntry { pc, instr: i, issue: at, complete: at + lat });
+            self.stats.instret += 1;
+            self.stats.class_counts[class_index(i.class())] += 1;
+            if halt {
+                break;
+            }
+            pc = ctrl.unwrap_or(pc + 1);
+        }
+        self.stats.cycles = self.sb.max_completion;
+        Ok((self.stats, entries))
+    }
+
+    /// Run a straight-line block (no control flow, no `Halt` needed) —
+    /// the primitive of the trace engine.
+    pub fn run_block(&mut self, block: &[Instr]) -> Result<(), SimError> {
+        for i in block {
+            debug_assert!(
+                !matches!(i.class(), InstrClass::Branch),
+                "trace blocks must be straight-line"
+            );
+            self.exec(i, 0)?;
+            self.issue(i, false);
+            self.stats.instret += 1;
+            self.stats.class_counts[class_index(i.class())] += 1;
+        }
+        self.stats.cycles = self.sb.max_completion;
+        Ok(())
+    }
+}
+
+#[inline]
+fn alu(op: AluOp, a: i32, b: i32) -> i32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => ((a as u32) << (b as u32 & 31)) as i32,
+        AluOp::Srl => ((a as u32) >> (b as u32 & 31)) as i32,
+        AluOp::Sra => a >> (b as u32 & 31),
+        AluOp::And => a & b,
+        AluOp::Or => a | b,
+        AluOp::Xor => a ^ b,
+        AluOp::Slt => (a < b) as i32,
+        AluOp::Sltu => ((a as u32) < (b as u32)) as i32,
+        AluOp::Mul => a.wrapping_mul(b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+
+    fn run_asm(src: &str) -> Core {
+        let prog = assemble(src).unwrap();
+        let mut core = Core::new(Arch::default());
+        core.run(&prog, 1_000_000).unwrap();
+        core
+    }
+
+    #[test]
+    fn scalar_loop_counts_and_cycles() {
+        let c = run_asm(
+            r"
+            li x5, 0
+            li x6, 10
+        loop:
+            addi x5, x5, 1
+            bne x5, x6, loop
+            ecall",
+        );
+        assert_eq!(c.xregs[5], 10);
+        // 2 setup + 10*(addi+bne) + ecall = 23 instructions
+        assert_eq!(c.stats.instret, 23);
+        // Each taken bne adds the 2-cycle redirect penalty: >= 23 + 9*2.
+        assert!(c.stats.cycles >= 41, "cycles = {}", c.stats.cycles);
+    }
+
+    #[test]
+    fn raw_hazard_stalls() {
+        // Dependent chain through a load must wait mem_load_latency.
+        let c = run_asm(
+            r"
+            li x5, 64
+            sw x5, 0(x0)
+            lw x6, 0(x0)
+            addi x7, x6, 1
+            ecall",
+        );
+        assert_eq!(c.xregs[6], 64);
+        assert_eq!(c.xregs[7], 65);
+        // addi issues >= lw issue + 6.
+        assert!(c.stats.cycles >= 10, "cycles = {}", c.stats.cycles);
+    }
+
+    #[test]
+    fn vector_add_functional() {
+        let mut core = Core::new(Arch::default());
+        core.mem.write_direct(0x100, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        core.mem.write_direct(0x200, &[10, 20, 30, 40, 50, 60, 70, 80]);
+        let prog = assemble(
+            r"
+            li x5, 8
+            vsetvli x0, x5, e8, m1
+            li x10, 0x100
+            li x11, 0x200
+            li x12, 0x300
+            vle8.v v1, (x10)
+            vle8.v v2, (x11)
+            vadd.vv v3, v1, v2
+            vse8.v v3, (x12)
+            ecall",
+        )
+        .unwrap();
+        core.run(&prog, 10_000).unwrap();
+        assert_eq!(core.mem.read_direct(0x300, 8), vec![11, 22, 33, 44, 55, 66, 77, 88]);
+    }
+
+    #[test]
+    fn vsext_vmacc_vredsum_pipeline() {
+        // int8 -> int32 sign-extended MAC, the baseline kernel's core.
+        let mut core = Core::new(Arch::default());
+        core.mem.write_direct(0x100, &[1u8, 2, 0xff, 4, 5, 6, 7, 8]); // acts (-1 at [2])
+        core.mem.write_direct(0x200, &[2u8, 2, 2, 2, 2, 2, 2, 0xfe]); // wts (-2 at [7])
+        let prog = assemble(
+            r"
+            li x5, 8
+            vsetvli x0, x5, e8, m1
+            li x10, 0x100
+            li x11, 0x200
+            vle8.v v1, (x10)
+            vle8.v v2, (x11)
+            vsetvli x0, x5, e32, m4
+            vsext.vf4 v8, v1
+            vsext.vf4 v12, v2
+            vmv.v.i v16, 0
+            vmacc.vv v16, v8, v12
+            vmv.v.i v20, 0
+            vredsum.vs v20, v16, v20
+            vmv.x.s x20, v20
+            ecall",
+        )
+        .unwrap();
+        core.run(&prog, 10_000).unwrap();
+        // dot = 2*(1+2-1+4+5+6+7) - 2*8 = 2*24 - 16 = 32
+        assert_eq!(core.xregs[20], 32);
+    }
+
+    #[test]
+    fn dimc_roundtrip_through_pipeline() {
+        // Load weights + acts via DL, compute via DC.P, read psum back.
+        let mut core = Core::new(Arch::default());
+        // acts: 16 nibbles = 8 bytes; values 1..=8 packed twice per byte
+        let acts: Vec<u8> = (0..8).map(|i| ((2 * i + 2) << 4 | (2 * i + 1)) as u8).collect();
+        // weights: nibble pattern w=1 everywhere (0x11)
+        core.mem.write_direct(0x100, &acts);
+        core.mem.write_direct(0x200, &[0x11u8; 8]);
+        let prog = assemble(
+            r"
+            li x5, 8
+            vsetvli x0, x5, e8, m1
+            li x10, 0x100
+            li x11, 0x200
+            vle8.v v1, (x10)
+            vle8.v v2, (x11)
+            dl.i v1, nvec=1, mask=0b1, sec=0
+            dl.m v2, nvec=1, mask=0b1, sec=0, row=3
+            vmv.v.i v6, 0
+            dc.p v8.0, v6.0, row=3, w=0
+            vmv.x.s x20, v8
+            ecall",
+        )
+        .unwrap();
+        core.run(&prog, 10_000).unwrap();
+        // act nibbles are 1..15 then 0 (16 wraps out of the 4-bit range),
+        // all weights are 1 -> psum = sum(1..=15).
+        let expect: i32 = (1..=15).sum();
+        // low half of v8 holds the psum
+        assert_eq!(read_half(&core.vregs, 8, false) as i32, expect);
+    }
+
+    #[test]
+    fn dimc_lane_overlaps_with_vector_alu() {
+        // A DC.P stream and an independent vadd stream should overlap:
+        // total cycles must be far less than the serial sum.
+        let mut core = Core::new(Arch::default());
+        let mut src = String::from("li x5, 8\nvsetvli x0, x5, e8, m1\nvmv.v.i v1, 1\nvmv.v.i v2, 2\nvmv.v.i v6, 0\n");
+        for _ in 0..32 {
+            src.push_str("dc.p v8.0, v6.0, row=0, w=0\n");
+            src.push_str("vadd.vv v3, v1, v2\n");
+        }
+        src.push_str("ecall");
+        let prog = assemble(&src).unwrap();
+        core.run(&prog, 10_000).unwrap();
+        // 64 instructions + setup; with perfect overlap the DIMC lane and
+        // VALU each see ~32 busy cycles -> total ~70, not ~100+.
+        assert!(core.stats.cycles < 90, "cycles = {}", core.stats.cycles);
+    }
+
+    #[test]
+    fn instret_limit_guards_runaway() {
+        let prog = assemble("loop:\njal x0, loop\necall").unwrap();
+        let mut core = Core::new(Arch::default());
+        match core.run(&prog, 100) {
+            Err(SimError::InstretLimit(100)) => {}
+            other => panic!("expected limit, got {other:?}"),
+        }
+    }
+}

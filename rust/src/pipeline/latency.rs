@@ -1,0 +1,186 @@
+//! Per-instruction timing: functional-unit assignment, FU occupancy
+//! (structural-hazard window) and result latency (RAW-hazard window).
+//!
+//! The tables implement the paper's modelling assumptions: single issue,
+//! fixed-latency external memory, a 64-bit memory bus into the VLSU,
+//! per-register-of-work occupancy for LMUL > 1 vector operations, a
+//! 256-bit/cycle DIMC load port and a pipelined DIMC compute lane that
+//! produces one row result per cycle after a short sense+accumulate
+//! latency.
+
+use super::vrf::group_regs;
+use crate::arch::Arch;
+use crate::isa::Instr;
+
+/// Functional units of the execution stage (Fig. 3: the DIMC tile sits as
+/// a parallel execution lane next to the scalar ALU, VALU and VLSU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fu {
+    /// Scalar ALU (also sequences branches and vsetvl*).
+    Alu,
+    /// Load/store unit, shared scalar + vector memory port.
+    Lsu,
+    /// Vector arithmetic unit.
+    VAlu,
+    /// The DIMC lane (custom instructions only).
+    Dimc,
+}
+
+pub const NUM_FUS: usize = 4;
+
+impl Fu {
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Fu::Alu => 0,
+            Fu::Lsu => 1,
+            Fu::VAlu => 2,
+            Fu::Dimc => 3,
+        }
+    }
+}
+
+/// Vector configuration context the timing of an instruction depends on.
+#[derive(Debug, Clone, Copy)]
+pub struct VCtx {
+    pub vl: u32,
+    pub sew: u16,
+}
+
+/// Issue/commit timing of one instruction.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub fu: Fu,
+    /// Cycles the FU stays busy (next instruction on the same FU waits).
+    pub occupy: u64,
+    /// Cycles from issue until the destination register is ready.
+    pub latency: u64,
+}
+
+#[inline]
+fn div_ceil(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+/// Compute the timing of `i` under `arch` with the current vtype context.
+pub fn timing(i: &Instr, arch: &Arch, v: &VCtx) -> Timing {
+    use Instr::*;
+    match *i {
+        // --- scalar ---
+        Lui { .. } | Auipc { .. } | OpImm { .. } => {
+            Timing { fu: Fu::Alu, occupy: 1, latency: arch.alu_latency }
+        }
+        Op { op, .. } => Timing {
+            fu: Fu::Alu,
+            occupy: 1,
+            latency: if op == crate::isa::AluOp::Mul { arch.mul_latency } else { arch.alu_latency },
+        },
+        Lw { .. } | Lbu { .. } => {
+            Timing { fu: Fu::Lsu, occupy: 1, latency: arch.mem_load_latency }
+        }
+        Sw { .. } | Sb { .. } => {
+            Timing { fu: Fu::Lsu, occupy: 1, latency: arch.mem_store_latency }
+        }
+        Branch { .. } | Jal { .. } | Jalr { .. } | Halt => {
+            Timing { fu: Fu::Alu, occupy: 1, latency: 1 }
+        }
+        // --- vector config ---
+        Vsetvli { .. } | Vsetivli { .. } => Timing { fu: Fu::Alu, occupy: 1, latency: 1 },
+        // --- vector memory ---
+        Vle { eew, .. } => {
+            let bytes = v.vl as u64 * eew as u64 / 8;
+            let bus = div_ceil(bytes.max(1), arch.mem_bus_bytes);
+            Timing { fu: Fu::Lsu, occupy: bus, latency: arch.mem_load_latency + bus - 1 }
+        }
+        Vse { eew, .. } => {
+            let bytes = v.vl as u64 * eew as u64 / 8;
+            let bus = div_ceil(bytes.max(1), arch.mem_bus_bytes);
+            Timing { fu: Fu::Lsu, occupy: bus, latency: arch.mem_store_latency + bus - 1 }
+        }
+        // Strided loads gather one element per cycle.
+        Vlse { .. } => Timing {
+            fu: Fu::Lsu,
+            occupy: v.vl.max(1) as u64,
+            latency: arch.mem_load_latency + v.vl.max(1) as u64 - 1,
+        },
+        // --- vector arithmetic: occupancy scales with registers of work ---
+        VredsumVS { .. } => {
+            let regs = group_regs(v.vl, v.sew) as u64;
+            // reduction tree adds log-depth on top of the element sweep
+            Timing { fu: Fu::VAlu, occupy: regs, latency: arch.valu_latency + regs + 2 }
+        }
+        VsextVf4 { .. } | VaddVV { .. } | VaddVX { .. } | VaddVI { .. } | VsubVV { .. }
+        | VmulVV { .. } | VmaccVV { .. } | VmvVI { .. } | VmvVX { .. } | VmvXS { .. }
+        | VmaxVX { .. } | VminVX { .. } | VsraVI { .. } | VsllVI { .. } | VsrlVI { .. }
+        | VandVI { .. } | VandVV { .. } | VorVV { .. } | VxorVV { .. }
+        | VslidedownVI { .. } | VslideupVI { .. } => {
+            let regs = group_regs(v.vl, v.sew) as u64;
+            Timing { fu: Fu::VAlu, occupy: regs, latency: arch.valu_latency + regs - 1 }
+        }
+        // --- DIMC lane ---
+        // DL.*: the tile's 256-bit/cycle interface moves up to 4 VRF
+        // registers per cycle.
+        DlI { .. } | DlM { .. } => {
+            Timing { fu: Fu::Dimc, occupy: arch.dimc_load_latency, latency: arch.dimc_load_latency }
+        }
+        // DC.*: fully pipelined, one row result per cycle; the result
+        // reaches the VRF after the sense + accumulate pipeline.
+        DcP { .. } | DcF { .. } => {
+            Timing { fu: Fu::Dimc, occupy: 1, latency: arch.dimc_compute_latency }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::AluOp;
+
+    const V8: VCtx = VCtx { vl: 8, sew: 8 };
+
+    #[test]
+    fn vle_bus_cycles() {
+        let a = Arch::default();
+        // vl=8 e8 = 8 bytes = 1 bus cycle
+        let t = timing(&Instr::Vle { eew: 8, vd: 0, rs1: 1 }, &a, &V8);
+        assert_eq!(t.occupy, 1);
+        assert_eq!(t.latency, a.mem_load_latency);
+        // vl=8 e32 = 32 bytes = 4 bus cycles
+        let t = timing(&Instr::Vle { eew: 32, vd: 0, rs1: 1 }, &a, &VCtx { vl: 8, sew: 32 });
+        assert_eq!(t.occupy, 4);
+        assert_eq!(t.latency, a.mem_load_latency + 3);
+    }
+
+    #[test]
+    fn lmul_scales_valu_occupancy() {
+        let a = Arch::default();
+        // 8 elements of e32 span 4 regs at VLEN=64
+        let t =
+            timing(&Instr::VmaccVV { vd: 0, vs1: 4, vs2: 8 }, &a, &VCtx { vl: 8, sew: 32 });
+        assert_eq!(t.occupy, 4);
+        // 8 elements of e8 fit one reg
+        let t = timing(&Instr::VmaccVV { vd: 0, vs1: 4, vs2: 8 }, &a, &V8);
+        assert_eq!(t.occupy, 1);
+    }
+
+    #[test]
+    fn dimc_lane_is_pipelined() {
+        let a = Arch::default();
+        let t = timing(
+            &Instr::DcP { sh: false, dh: false, m_row: 0, vs1: 0, width: 0, vd: 1 },
+            &a,
+            &V8,
+        );
+        assert_eq!(t.occupy, 1); // 1 row result per cycle
+        assert_eq!(t.latency, a.dimc_compute_latency);
+        let t = timing(&Instr::DlI { nvec: 4, mask: 0xf, vs1: 0, width: 0, sec: 0 }, &a, &V8);
+        assert_eq!(t.occupy, a.dimc_load_latency);
+    }
+
+    #[test]
+    fn scalar_latencies() {
+        let a = Arch::default();
+        assert_eq!(timing(&Instr::Op { op: AluOp::Mul, rd: 1, rs1: 2, rs2: 3 }, &a, &V8).latency, 3);
+        assert_eq!(timing(&Instr::Lw { rd: 1, rs1: 2, imm: 0 }, &a, &V8).latency, 6);
+    }
+}

@@ -1,0 +1,122 @@
+//! Flat byte-addressed external memory with fixed access latency
+//! (paper assumption 2: "a fixed-latency external memory is assumed" —
+//! no DMA, no cycle-accurate DRAM model).
+
+/// Sparse-ish flat memory: grows on demand, zero-initialised.
+#[derive(Clone, Default)]
+pub struct Mem {
+    data: Vec<u8>,
+    /// Total bytes read (traffic accounting).
+    pub bytes_loaded: u64,
+    /// Total bytes written.
+    pub bytes_stored: u64,
+}
+
+impl Mem {
+    pub fn new() -> Self {
+        Mem::default()
+    }
+
+    /// Create with a pre-sized backing store (avoids grow in hot loops).
+    pub fn with_capacity(bytes: usize) -> Self {
+        Mem { data: vec![0; bytes], bytes_loaded: 0, bytes_stored: 0 }
+    }
+
+    #[inline]
+    fn ensure(&mut self, end: usize) {
+        if self.data.len() < end {
+            self.data.resize(end.next_power_of_two().max(4096), 0);
+        }
+    }
+
+    #[inline]
+    pub fn load_u8(&mut self, addr: u32) -> u8 {
+        self.ensure(addr as usize + 1);
+        self.bytes_loaded += 1;
+        self.data[addr as usize]
+    }
+
+    #[inline]
+    pub fn load_u32(&mut self, addr: u32) -> u32 {
+        self.ensure(addr as usize + 4);
+        self.bytes_loaded += 4;
+        u32::from_le_bytes(self.data[addr as usize..addr as usize + 4].try_into().unwrap())
+    }
+
+    #[inline]
+    pub fn store_u8(&mut self, addr: u32, v: u8) {
+        self.ensure(addr as usize + 1);
+        self.bytes_stored += 1;
+        self.data[addr as usize] = v;
+    }
+
+    #[inline]
+    pub fn store_u32(&mut self, addr: u32, v: u32) {
+        self.ensure(addr as usize + 4);
+        self.bytes_stored += 4;
+        self.data[addr as usize..addr as usize + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Bulk read used by vector loads.
+    #[inline]
+    pub fn load_bytes(&mut self, addr: u32, out: &mut [u8]) {
+        self.ensure(addr as usize + out.len());
+        self.bytes_loaded += out.len() as u64;
+        out.copy_from_slice(&self.data[addr as usize..addr as usize + out.len()]);
+    }
+
+    /// Bulk write used by vector stores.
+    #[inline]
+    pub fn store_bytes(&mut self, addr: u32, src: &[u8]) {
+        self.ensure(addr as usize + src.len());
+        self.bytes_stored += src.len() as u64;
+        self.data[addr as usize..addr as usize + src.len()].copy_from_slice(src);
+    }
+
+    /// Direct (non-simulated) initialisation — used by drivers to place
+    /// feature maps / weights without counting simulated traffic.
+    pub fn write_direct(&mut self, addr: u32, src: &[u8]) {
+        self.ensure(addr as usize + src.len());
+        self.data[addr as usize..addr as usize + src.len()].copy_from_slice(src);
+    }
+
+    /// Direct read-back for result checking.
+    pub fn read_direct(&mut self, addr: u32, len: usize) -> Vec<u8> {
+        self.ensure(addr as usize + len);
+        self.data[addr as usize..addr as usize + len].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_roundtrip() {
+        let mut m = Mem::new();
+        m.store_u32(100, 0xdead_beef);
+        assert_eq!(m.load_u32(100), 0xdead_beef);
+        assert_eq!(m.load_u8(100), 0xef);
+        assert_eq!(m.load_u8(103), 0xde);
+    }
+
+    #[test]
+    fn zero_initialised_and_growing() {
+        let mut m = Mem::new();
+        assert_eq!(m.load_u32(1 << 20), 0);
+        m.store_u8((1 << 22) + 3, 7);
+        assert_eq!(m.load_u8((1 << 22) + 3), 7);
+    }
+
+    #[test]
+    fn traffic_accounting_excludes_direct() {
+        let mut m = Mem::new();
+        m.write_direct(0, &[1, 2, 3, 4]);
+        assert_eq!(m.bytes_loaded, 0);
+        assert_eq!(m.bytes_stored, 0);
+        let mut buf = [0u8; 4];
+        m.load_bytes(0, &mut buf);
+        assert_eq!(buf, [1, 2, 3, 4]);
+        assert_eq!(m.bytes_loaded, 4);
+    }
+}

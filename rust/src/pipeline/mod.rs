@@ -1,0 +1,33 @@
+//! The cycle-approximate core model (paper §V-A).
+//!
+//! The simulator mirrors the modelling granularity the paper describes for
+//! its (confidential) industrial tool:
+//!
+//! * **instruction latencies** — per-class latency and FU occupancy tables
+//!   in [`latency`], including vector loads/stores, vector arithmetic and
+//!   the custom DIMC instructions;
+//! * **pipeline stalls and flow control** — in-order single issue (paper
+//!   assumption: no double issue), RAW hazards through per-register
+//!   ready-times, structural hazards through per-FU busy-times, and a
+//!   taken-branch redirect penalty, all in [`core`];
+//! * **custom DIMC instruction timing** — the DIMC lane issues in parallel
+//!   with the standard vector FUs; `DL.*` occupy its 256-bit/cycle load
+//!   port, `DC.*` are pipelined one row-result per cycle with a small
+//!   sense + accumulate latency;
+//! * **fixed-latency external memory** (paper assumption 2) in [`mem`].
+//!
+//! Large layers are timed by the [`trace`] engine: each straight-line loop
+//! body is run on the scoreboard until its initiation interval stabilizes
+//! and the total is extrapolated — bit-identical to flat execution for the
+//! mapper's periodic bodies (property-tested) at a tiny fraction of the
+//! cost.
+
+pub mod core;
+pub mod latency;
+pub mod mem;
+pub mod trace;
+pub mod vrf;
+
+pub use self::core::{Core, RunStats};
+pub use self::mem::Mem;
+pub use self::trace::{trace_cycles, TraceResult};

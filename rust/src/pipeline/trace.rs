@@ -1,0 +1,206 @@
+//! Loop-nest trace engine.
+//!
+//! Full ResNet-50 layers execute hundreds of millions of MACs; flat
+//! functional simulation of every instruction is wasteful when the mapper
+//! emits *periodic* straight-line loop bodies (the same register schedule
+//! every trip, only `li`-materialized addresses differ — which cannot
+//! change timing). The engine runs each body on the scoreboard until its
+//! initiation interval (II) stabilizes, then fast-forwards the scoreboard
+//! rigidly by `II * remaining_trips`. For periodic bodies this is
+//! *bit-identical* to flat execution (property-tested in
+//! `rust/tests/prop_timing.rs`) at O(body) instead of O(body * trips).
+//!
+//! Functional results are only meaningful for the trips actually executed;
+//! use flat mode (`Core::run`) when numerics matter (small layers,
+//! golden-model cross-checks).
+
+use super::core::{class_index, Core, RunStats, SimError};
+use crate::isa::Instr;
+
+/// One phase of a layer program: a straight-line body repeated `trips`
+/// times. `body` is the representative body (trip 0); all trips must share
+/// its opcode/register schedule for the extrapolation to be exact.
+#[derive(Clone)]
+pub struct Phase {
+    pub name: String,
+    pub trips: u64,
+    pub body: Vec<Instr>,
+}
+
+impl Phase {
+    pub fn new(name: impl Into<String>, trips: u64, body: Vec<Instr>) -> Self {
+        Phase { name: name.into(), trips, body }
+    }
+
+    /// Total instructions this phase contributes.
+    pub fn instrs(&self) -> u64 {
+        self.trips * self.body.len() as u64
+    }
+}
+
+/// Result of a traced run.
+pub type TraceResult = RunStats;
+
+/// Consecutive equal IIs required before declaring period-1 steady state.
+const STEADY_CONFIRM: usize = 3;
+/// Window for periodic steady-state detection: IIs repeating with any
+/// period dividing this (1, 2, 4, 8) are extrapolated *exactly* in whole
+/// periods. Scoreboard interactions between FUs of different occupancy
+/// commonly settle into period-2/4 limit cycles rather than a constant II.
+const PATTERN: usize = 8;
+/// Give up after this many trips and extrapolate with the window mean
+/// (cycle-approximate fallback; not triggered by the mapper's shapes).
+const STEADY_WINDOW: u64 = 96;
+
+/// Run `phases` on `core`, extrapolating through steady-state iterations.
+pub fn trace_cycles(core: &mut Core, phases: &[Phase]) -> Result<TraceResult, SimError> {
+    for ph in phases {
+        run_phase(core, ph)?;
+    }
+    core.stats.cycles = core.sb.max_completion;
+    Ok(core.stats)
+}
+
+fn run_phase(core: &mut Core, ph: &Phase) -> Result<(), SimError> {
+    let mut prev_issue = core.sb.last_issue;
+    let mut recent: Vec<u64> = Vec::with_capacity(2 * PATTERN);
+    let mut t = 0u64;
+    while t < ph.trips {
+        core.run_block(&ph.body)?;
+        t += 1;
+        let ii = core.sb.last_issue - prev_issue;
+        prev_issue = core.sb.last_issue;
+        recent.push(ii);
+        if recent.len() > 2 * PATTERN {
+            recent.remove(0);
+        }
+        let remaining = ph.trips - t;
+        if remaining == 0 {
+            break;
+        }
+        // Fast path: constant II.
+        let n = recent.len();
+        if n >= STEADY_CONFIRM && recent[n - STEADY_CONFIRM..].iter().all(|&x| x == ii) {
+            skip(core, ph, remaining, remaining * ii);
+            return Ok(());
+        }
+        // Periodic path: the last PATTERN IIs repeat the previous PATTERN
+        // (period divides PATTERN) -> extrapolate whole periods exactly,
+        // then run the remainder live to stay phase-aligned.
+        if n == 2 * PATTERN && (0..PATTERN).all(|i| recent[i] == recent[i + PATTERN]) {
+            let chunk: u64 = recent[PATTERN..].iter().sum();
+            let full = remaining / PATTERN as u64;
+            skip(core, ph, full * PATTERN as u64, full * chunk);
+            for _ in 0..(remaining % PATTERN as u64) {
+                core.run_block(&ph.body)?;
+            }
+            return Ok(());
+        }
+        // Fallback: approximate with the window mean.
+        if t >= STEADY_WINDOW {
+            let avg = (recent.iter().sum::<u64>() / recent.len() as u64).max(1);
+            skip(core, ph, remaining, remaining * avg);
+            return Ok(());
+        }
+    }
+    Ok(())
+}
+
+/// Fast-forward `trips` iterations advancing the clock by `delta` total.
+fn skip(core: &mut Core, ph: &Phase, trips: u64, delta: u64) {
+    core.sb.shift(delta);
+    for i in &ph.body {
+        core.stats.class_counts[class_index(i.class())] += trips;
+    }
+    core.stats.instret += trips * ph.body.len() as u64;
+}
+
+/// Flat-execute the same phases (every trip, functionally) — the reference
+/// the trace engine is validated against, and the mode used when the
+/// numeric results matter.
+pub fn flat_cycles(core: &mut Core, phases: &[Phase]) -> Result<TraceResult, SimError> {
+    for ph in phases {
+        for _ in 0..ph.trips {
+            core.run_block(&ph.body)?;
+        }
+    }
+    core.stats.cycles = core.sb.max_completion;
+    Ok(core.stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+    use crate::isa::asm::assemble;
+
+    fn body(src: &str) -> Vec<Instr> {
+        assemble(src).unwrap()
+    }
+
+    fn compare(phases: &[Phase]) {
+        let mut ct = Core::new(Arch::default());
+        let mut cf = Core::new(Arch::default());
+        let rt = trace_cycles(&mut ct, phases).unwrap();
+        let rf = flat_cycles(&mut cf, phases).unwrap();
+        assert_eq!(rt.cycles, rf.cycles, "trace vs flat cycle mismatch");
+        assert_eq!(rt.instret, rf.instret);
+        assert_eq!(rt.class_counts, rf.class_counts);
+    }
+
+    #[test]
+    fn trace_matches_flat_scalar_body() {
+        let phases = [Phase::new(
+            "alu",
+            1000,
+            body("addi x5, x5, 1\naddi x6, x6, 2\nmul x7, x5, x6"),
+        )];
+        compare(&phases);
+    }
+
+    #[test]
+    fn trace_matches_flat_dimc_body() {
+        let setup = Phase::new(
+            "setup",
+            1,
+            body("li x5, 8\nvsetvli x0, x5, e8, m1\nvmv.v.i v1, 3\nvmv.v.i v6, 0"),
+        );
+        let inner = Phase::new(
+            "compute",
+            500,
+            body(
+                "dl.i v1, nvec=1, mask=0b1, sec=0\n\
+                 dc.p v8.0, v6.0, row=0, w=0\n\
+                 dc.p v8.1, v6.0, row=1, w=0",
+            ),
+        );
+        compare(&[setup, inner]);
+    }
+
+    #[test]
+    fn trace_matches_flat_mixed_mem_body() {
+        let setup = Phase::new("setup", 1, body("li x5, 8\nvsetvli x0, x5, e8, m1\nli x10, 4096"));
+        let inner = Phase::new(
+            "stream",
+            300,
+            body("vle8.v v1, (x10)\nvle8.v v2, (x10)\nvadd.vv v3, v1, v2\nvse8.v v3, (x10)"),
+        );
+        compare(&[setup, inner]);
+    }
+
+    #[test]
+    fn trace_is_fast_for_huge_trip_counts() {
+        // 100M trips must finish instantly (extrapolated).
+        let ph = Phase::new("huge", 100_000_000, body("addi x5, x5, 1"));
+        let mut c = Core::new(Arch::default());
+        let r = trace_cycles(&mut c, &[ph]).unwrap();
+        assert_eq!(r.instret, 100_000_000);
+        assert!(r.cycles >= 100_000_000);
+    }
+
+    #[test]
+    fn phase_instr_accounting() {
+        let ph = Phase::new("p", 7, body("addi x1, x1, 1\naddi x2, x2, 1"));
+        assert_eq!(ph.instrs(), 14);
+    }
+}

@@ -1,0 +1,143 @@
+//! Vector register file helpers: element-indexed access across register
+//! groups (LMUL > 1), with VLEN = 64 / ELEN = 32 (Zve32x).
+//!
+//! Element `i` of a group based at `vreg` with element width `sew` lives in
+//! architectural register `vreg + (i * sew) / VLEN` at byte offset
+//! `(i * sew / 8) % VLENB` — standard RVV register-group layout.
+
+use crate::arch::{NUM_VREGS, VLENB};
+
+pub type VRegFile = [[u8; VLENB]; NUM_VREGS];
+
+/// Read element `idx` (width `sew` bits) from group `vreg`, zero-extended.
+#[inline]
+pub fn read_elem(v: &VRegFile, vreg: u8, idx: usize, sew: u16) -> u32 {
+    let byte = idx * sew as usize / 8;
+    let reg = vreg as usize + byte / VLENB;
+    let off = byte % VLENB;
+    debug_assert!(reg < NUM_VREGS, "register group overflows the VRF");
+    match sew {
+        8 => v[reg][off] as u32,
+        16 => u16::from_le_bytes(v[reg][off..off + 2].try_into().unwrap()) as u32,
+        32 => u32::from_le_bytes(v[reg][off..off + 4].try_into().unwrap()),
+        _ => panic!("unsupported sew {sew}"),
+    }
+}
+
+/// Read element `idx` sign-extended to i32.
+#[inline]
+pub fn read_elem_s(v: &VRegFile, vreg: u8, idx: usize, sew: u16) -> i32 {
+    let u = read_elem(v, vreg, idx, sew);
+    match sew {
+        8 => u as u8 as i8 as i32,
+        16 => u as u16 as i16 as i32,
+        32 => u as i32,
+        _ => unreachable!(),
+    }
+}
+
+/// Write the low `sew` bits of `val` to element `idx` of group `vreg`.
+#[inline]
+pub fn write_elem(v: &mut VRegFile, vreg: u8, idx: usize, sew: u16, val: u32) {
+    let byte = idx * sew as usize / 8;
+    let reg = vreg as usize + byte / VLENB;
+    let off = byte % VLENB;
+    debug_assert!(reg < NUM_VREGS, "register group overflows the VRF");
+    match sew {
+        8 => v[reg][off] = val as u8,
+        16 => v[reg][off..off + 2].copy_from_slice(&(val as u16).to_le_bytes()),
+        32 => v[reg][off..off + 4].copy_from_slice(&val.to_le_bytes()),
+        _ => panic!("unsupported sew {sew}"),
+    }
+}
+
+/// Number of architectural registers a group of `vl` elements of width
+/// `sew` spans (>= 1).
+#[inline]
+pub fn group_regs(vl: u32, sew: u16) -> usize {
+    (((vl as usize * sew as usize) + (VLENB * 8) - 1) / (VLENB * 8)).max(1)
+}
+
+/// Raw byte view of `n` consecutive registers starting at `vreg` into a
+/// caller buffer (used by the DIMC `DL.*` port, which reads whole
+/// registers; allocation-free for the simulation hot path).
+pub fn read_regs(v: &VRegFile, vreg: u8, n: u8, out: &mut [u8]) {
+    debug_assert!(out.len() >= n as usize * VLENB);
+    for k in 0..n as usize {
+        out[k * VLENB..(k + 1) * VLENB].copy_from_slice(&v[(vreg as usize + k) % NUM_VREGS]);
+    }
+}
+
+/// 32-bit *half* view of a VLEN=64 register: half 0 = bytes [0,4),
+/// half 1 = bytes [4,8). Used by `DC.P` / `DC.F` (`sh`, `dh` selectors).
+#[inline]
+pub fn read_half(v: &VRegFile, vreg: u8, half: bool) -> u32 {
+    let off = if half { 4 } else { 0 };
+    u32::from_le_bytes(v[vreg as usize][off..off + 4].try_into().unwrap())
+}
+
+/// Write a 32-bit half (see [`read_half`]).
+#[inline]
+pub fn write_half(v: &mut VRegFile, vreg: u8, half: bool, val: u32) {
+    let off = if half { 4 } else { 0 };
+    v[vreg as usize][off..off + 4].copy_from_slice(&val.to_le_bytes());
+}
+
+/// Write nibble `bidx` (0..7) of the 32-bit half `half` of `vreg`
+/// (the `DC.F` packed write-back: two 4-bit results per byte, §IV-A).
+#[inline]
+pub fn write_half_nibble(v: &mut VRegFile, vreg: u8, half: bool, bidx: u8, nibble: u8) {
+    let base = if half { 4usize } else { 0 };
+    let byte = base + (bidx / 2) as usize;
+    let shift = (bidx % 2) * 4;
+    let b = &mut v[vreg as usize][byte];
+    *b = (*b & !(0xf << shift)) | ((nibble & 0xf) << shift);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_addressing_across_group() {
+        let mut v: VRegFile = [[0; VLENB]; NUM_VREGS];
+        // SEW=32, elements 0..4 span regs 8..10 (2 per reg at VLEN=64).
+        for i in 0..4 {
+            write_elem(&mut v, 8, i, 32, 0x1000 + i as u32);
+        }
+        assert_eq!(read_elem(&v, 8, 0, 32), 0x1000);
+        assert_eq!(read_elem(&v, 8, 1, 32), 0x1001);
+        assert_eq!(read_elem(&v, 9, 0, 32), 0x1002); // group spill
+        assert_eq!(read_elem(&v, 8, 3, 32), 0x1003);
+    }
+
+    #[test]
+    fn signed_reads() {
+        let mut v: VRegFile = [[0; VLENB]; NUM_VREGS];
+        write_elem(&mut v, 0, 3, 8, 0xfe);
+        assert_eq!(read_elem_s(&v, 0, 3, 8), -2);
+        write_elem(&mut v, 0, 1, 16, 0x8000);
+        assert_eq!(read_elem_s(&v, 0, 1, 16), -32768);
+    }
+
+    #[test]
+    fn group_reg_math() {
+        assert_eq!(group_regs(8, 8), 1);
+        assert_eq!(group_regs(8, 32), 4);
+        assert_eq!(group_regs(1, 8), 1);
+        assert_eq!(group_regs(64, 8), 8);
+    }
+
+    #[test]
+    fn halves_and_nibbles() {
+        let mut v: VRegFile = [[0; VLENB]; NUM_VREGS];
+        write_half(&mut v, 4, true, 0xaabbccdd);
+        assert_eq!(read_half(&v, 4, true), 0xaabbccdd);
+        assert_eq!(read_half(&v, 4, false), 0);
+        write_half_nibble(&mut v, 4, false, 5, 0x9);
+        // nibble 5 = high nibble of byte 2 of half 0
+        assert_eq!(v[4][2], 0x90);
+        write_half_nibble(&mut v, 4, false, 4, 0x3);
+        assert_eq!(v[4][2], 0x93);
+    }
+}

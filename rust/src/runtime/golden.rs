@@ -1,0 +1,100 @@
+//! HLO-text loader + executor on the PJRT CPU client (`xla` crate).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects
+//! (`proto.id() <= INT_MAX`); `HloModuleProto::from_text_file` reassigns
+//! ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Locate `artifacts/` relative to the crate root (works from tests,
+/// benches and the installed binary run inside the repo).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("DIMC_RVV_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// One compiled golden model.
+pub struct Golden {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Golden {
+    /// Load an HLO-text artifact and compile it on the PJRT CPU client.
+    pub fn load(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text at {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling golden model")?;
+        Ok(Golden { exe })
+    }
+
+    /// Load a named artifact from the default artifacts directory.
+    pub fn load_artifact(name: &str) -> Result<Self> {
+        let p = artifacts_dir().join(name);
+        anyhow::ensure!(
+            p.exists(),
+            "artifact {} missing — run `make artifacts` first",
+            p.display()
+        );
+        Self::load(&p)
+    }
+
+    /// Execute with int32 inputs of the given shapes; returns the first
+    /// (tupled) output flattened to a Vec<i32>.
+    pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<i32>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = if shape.is_empty() {
+                xla::Literal::from(data[0])
+            } else {
+                xla::Literal::vec1(data).reshape(shape)?
+            };
+            lits.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // jax lowering uses return_tuple=True -> unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("dimc_row_golden.hlo.txt").exists()
+    }
+
+    #[test]
+    fn row_golden_executes() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let g = Golden::load_artifact("dimc_row_golden.hlo.txt").unwrap();
+        // ibuf = 1s, row = 2s, psum = 5 -> 256*2 + 5 = 517
+        let ibuf = vec![1i32; 256];
+        let row = vec![2i32; 256];
+        let out = g.run_i32(&[(&ibuf, &[256]), (&row, &[256]), (&[5], &[])]).unwrap();
+        assert_eq!(out, vec![517]);
+    }
+
+    #[test]
+    fn row_golden_wraps_24_bits() {
+        if !have_artifacts() {
+            return;
+        }
+        let g = Golden::load_artifact("dimc_row_golden.hlo.txt").unwrap();
+        // dot = 256 * 2048 * 16 = 2^23 exactly -> wraps to -2^23
+        let ibuf = vec![2048i32; 256];
+        let row = vec![16i32; 256];
+        let out = g.run_i32(&[(&ibuf, &[256]), (&row, &[256]), (&[0], &[])]).unwrap();
+        assert_eq!(out, vec![-(1 << 23)]);
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas golden
+//! models (`artifacts/*.hlo.txt`) from Rust. Python never runs here —
+//! the artifacts are produced once by `make artifacts`.
+
+pub mod golden;
+
+pub use golden::{artifacts_dir, Golden};

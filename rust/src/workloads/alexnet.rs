@@ -1,0 +1,41 @@
+//! AlexNet (Krizhevsky et al., NeurIPS 2012) — single-tower variant
+//! (channel counts of the two-GPU original merged, as is conventional).
+
+use crate::compiler::layer::LayerConfig;
+
+/// The 5 conv + 3 FC layers of AlexNet.
+pub fn alexnet() -> Vec<LayerConfig> {
+    vec![
+        LayerConfig::conv("alex_conv1", 3, 96, 11, 11, 227, 227, 4, 0),
+        LayerConfig::conv("alex_conv2", 96, 256, 5, 5, 27, 27, 1, 2),
+        LayerConfig::conv("alex_conv3", 256, 384, 3, 3, 13, 13, 1, 1),
+        LayerConfig::conv("alex_conv4", 384, 384, 3, 3, 13, 13, 1, 1),
+        LayerConfig::conv("alex_conv5", 384, 256, 3, 3, 13, 13, 1, 1),
+        LayerConfig::fc("alex_fc6", 9216, 4096),
+        LayerConfig::fc("alex_fc7", 4096, 4096),
+        LayerConfig::fc("alex_fc8", 4096, 1000),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_macs_match_published() {
+        // Single-tower AlexNet conv MACs ~ 1.07 G (the merged-channel
+        // variant; the original two-GPU model halves most of these).
+        let total: u64 = alexnet()
+            .iter()
+            .filter(|l| matches!(l.kind, crate::compiler::layer::LayerKind::Conv))
+            .map(|l| l.macs())
+            .sum();
+        let g = total as f64 / 1e9;
+        assert!((0.9..1.2).contains(&g), "got {g} GMACs");
+    }
+
+    #[test]
+    fn conv1_output_is_55() {
+        assert_eq!(alexnet()[0].oh(), 55);
+    }
+}

@@ -1,0 +1,78 @@
+//! DenseNet-121 (Huang et al., CVPR 2017): growth rate k = 32, bottleneck
+//! (BN-ReLU-1x1(4k)-BN-ReLU-3x3(k)) layers, 0.5 compression transitions.
+
+use crate::compiler::layer::LayerConfig;
+
+/// All conv layers + classifier FC of DenseNet-121.
+pub fn densenet121() -> Vec<LayerConfig> {
+    const K: u32 = 32;
+    let mut v = vec![LayerConfig::conv("dn_conv0", 3, 64, 7, 7, 224, 224, 2, 3)];
+    let blocks: [(u32, u32); 4] = [(6, 56), (12, 28), (24, 14), (16, 7)];
+    let mut ch = 64u32;
+    for (bi, (layers, sz)) in blocks.into_iter().enumerate() {
+        for li in 0..layers {
+            v.push(LayerConfig::conv(
+                &format!("dn_b{}_l{}_1x1", bi + 1, li + 1),
+                ch,
+                4 * K,
+                1,
+                1,
+                sz,
+                sz,
+                1,
+                0,
+            ));
+            v.push(LayerConfig::conv(
+                &format!("dn_b{}_l{}_3x3", bi + 1, li + 1),
+                4 * K,
+                K,
+                3,
+                3,
+                sz,
+                sz,
+                1,
+                1,
+            ));
+            ch += K;
+        }
+        if bi < 3 {
+            // transition: 1x1 compression to ch/2 then 2x2 avgpool
+            v.push(LayerConfig::conv(
+                &format!("dn_t{}", bi + 1),
+                ch,
+                ch / 2,
+                1,
+                1,
+                sz,
+                sz,
+                1,
+                0,
+            ));
+            ch /= 2;
+        }
+    }
+    v.push(LayerConfig::fc("dn_fc", ch, 1000));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_arithmetic() {
+        let l = densenet121();
+        // final dense block ends at 512 + 16*32 = 1024 features
+        let fc = l.last().unwrap();
+        assert_eq!(fc.ich, 1024);
+        // 1 stem + 2*58 dense convs + 3 transitions + fc
+        assert_eq!(l.len(), 1 + 2 * (6 + 12 + 24 + 16) + 3 + 1);
+    }
+
+    #[test]
+    fn macs_about_2_8g() {
+        let total: u64 = densenet121().iter().map(|l| l.macs()).sum();
+        let g = total as f64 / 1e9;
+        assert!((2.5..3.1).contains(&g), "got {g} GMACs");
+    }
+}

@@ -1,0 +1,104 @@
+//! EfficientNet-B0 / B1 (Tan & Le, ICML 2019): stem, MBConv expand /
+//! project pointwise convolutions, head and classifier.
+//!
+//! Depthwise and squeeze-excite layers are excluded for the same
+//! single-tile reason as MobileNet (see `mobilenet.rs`); the pointwise
+//! stack dominates the MAC count.
+
+use crate::compiler::layer::LayerConfig;
+
+/// (expansion, kernel, out_ch, repeats_b0, stride, input_size_b0)
+const B0_BLOCKS: [(u32, u32, u32, u32, u32, u32); 7] = [
+    (1, 3, 16, 1, 1, 112),
+    (6, 3, 24, 2, 2, 112),
+    (6, 5, 40, 2, 2, 56),
+    (6, 3, 80, 3, 2, 28),
+    (6, 5, 112, 3, 1, 14),
+    (6, 5, 192, 4, 2, 14),
+    (6, 3, 320, 1, 1, 7),
+];
+
+fn round_repeats(r: u32, depth_pct: u32) -> u32 {
+    (r * depth_pct).div_ceil(100)
+}
+
+/// EfficientNet at a given depth multiplier (percent) and resolution —
+/// B0 = (100, 224), B1 = (110, 240).
+pub fn efficientnet(name: &str, depth_pct: u32, res: u32) -> Vec<LayerConfig> {
+    let mut v = vec![LayerConfig::conv(&format!("{name}_stem"), 3, 32, 3, 3, res, res, 2, 1)];
+    let mut ich = 32u32;
+    for (bi, (exp, _k, oc, r, stride, sz_b0)) in B0_BLOCKS.into_iter().enumerate() {
+        let reps = round_repeats(r, depth_pct);
+        for j in 0..reps {
+            // input spatial: scaled by resolution; stride applies on the
+            // first repeat
+            let sz_in = (sz_b0 * res / 224).max(1);
+            let sz = if j == 0 { sz_in } else { (sz_in / stride).max(1) };
+            if exp != 1 {
+                v.push(LayerConfig::conv(
+                    &format!("{name}_b{}r{}_exp", bi + 1, j + 1),
+                    ich,
+                    ich * exp,
+                    1,
+                    1,
+                    sz,
+                    sz,
+                    1,
+                    0,
+                ));
+            }
+            let mid = ich * exp;
+            let out_sz = if j == 0 { (sz / stride).max(1) } else { sz };
+            v.push(LayerConfig::conv(
+                &format!("{name}_b{}r{}_proj", bi + 1, j + 1),
+                mid,
+                oc,
+                1,
+                1,
+                out_sz,
+                out_sz,
+                1,
+                0,
+            ));
+            ich = oc;
+        }
+    }
+    let head_sz = (7 * res / 224).max(1);
+    v.push(LayerConfig::conv(&format!("{name}_head"), 320, 1280, 1, 1, head_sz, head_sz, 1, 0));
+    v.push(LayerConfig::fc(&format!("{name}_fc"), 1280, 1000));
+    v
+}
+
+pub fn efficientnet_b0() -> Vec<LayerConfig> {
+    efficientnet("enb0", 100, 224)
+}
+
+pub fn efficientnet_b1() -> Vec<LayerConfig> {
+    efficientnet("enb1", 110, 240)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b0_block_count() {
+        // 16 MBConv blocks -> 15 expand + 16 project + stem + head + fc
+        let l = efficientnet_b0();
+        assert_eq!(l.len(), 1 + 15 + 16 + 1 + 1);
+    }
+
+    #[test]
+    fn b1_is_deeper() {
+        assert!(efficientnet_b1().len() > efficientnet_b0().len());
+    }
+
+    #[test]
+    fn channel_chain() {
+        let l = efficientnet_b0();
+        // head takes the last block's 320 channels
+        let head = l.iter().find(|x| x.name.ends_with("head")).unwrap();
+        assert_eq!(head.ich, 320);
+        assert_eq!(head.och, 1280);
+    }
+}

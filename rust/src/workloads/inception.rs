@@ -1,0 +1,75 @@
+//! Inception-v1 / GoogLeNet (Szegedy et al., CVPR 2015): the stem and all
+//! nine inception modules' conv branches (1x1, 3x3-reduce, 3x3,
+//! 5x5-reduce, 5x5, pool-proj).
+
+use crate::compiler::layer::LayerConfig;
+
+struct Module {
+    name: &'static str,
+    ich: u32,
+    sz: u32,
+    /// (#1x1, #3x3red, #3x3, #5x5red, #5x5, poolproj)
+    ch: (u32, u32, u32, u32, u32, u32),
+}
+
+const MODULES: &[Module] = &[
+    Module { name: "3a", ich: 192, sz: 28, ch: (64, 96, 128, 16, 32, 32) },
+    Module { name: "3b", ich: 256, sz: 28, ch: (128, 128, 192, 32, 96, 64) },
+    Module { name: "4a", ich: 480, sz: 14, ch: (192, 96, 208, 16, 48, 64) },
+    Module { name: "4b", ich: 512, sz: 14, ch: (160, 112, 224, 24, 64, 64) },
+    Module { name: "4c", ich: 512, sz: 14, ch: (128, 128, 256, 24, 64, 64) },
+    Module { name: "4d", ich: 512, sz: 14, ch: (112, 144, 288, 32, 64, 64) },
+    Module { name: "4e", ich: 528, sz: 14, ch: (256, 160, 320, 32, 128, 128) },
+    Module { name: "5a", ich: 832, sz: 7, ch: (256, 160, 320, 32, 128, 128) },
+    Module { name: "5b", ich: 832, sz: 7, ch: (384, 192, 384, 48, 128, 128) },
+];
+
+/// All conv layers + the classifier FC of GoogLeNet.
+pub fn inception_v1() -> Vec<LayerConfig> {
+    let mut v = vec![
+        LayerConfig::conv("gn_conv1", 3, 64, 7, 7, 224, 224, 2, 3),
+        LayerConfig::conv("gn_conv2_red", 64, 64, 1, 1, 56, 56, 1, 0),
+        LayerConfig::conv("gn_conv2", 64, 192, 3, 3, 56, 56, 1, 1),
+    ];
+    for m in MODULES {
+        let (c1, r3, c3, r5, c5, pp) = m.ch;
+        let n = m.name;
+        let s = m.sz;
+        v.push(LayerConfig::conv(&format!("gn_{n}_1x1"), m.ich, c1, 1, 1, s, s, 1, 0));
+        v.push(LayerConfig::conv(&format!("gn_{n}_3x3r"), m.ich, r3, 1, 1, s, s, 1, 0));
+        v.push(LayerConfig::conv(&format!("gn_{n}_3x3"), r3, c3, 3, 3, s, s, 1, 1));
+        v.push(LayerConfig::conv(&format!("gn_{n}_5x5r"), m.ich, r5, 1, 1, s, s, 1, 0));
+        v.push(LayerConfig::conv(&format!("gn_{n}_5x5"), r5, c5, 5, 5, s, s, 1, 2));
+        v.push(LayerConfig::conv(&format!("gn_{n}_pp"), m.ich, pp, 1, 1, s, s, 1, 0));
+    }
+    v.push(LayerConfig::fc("gn_fc", 1024, 1000));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_output_channels_chain() {
+        // each module's branch outputs sum to the next module's ich
+        let sums: Vec<u32> =
+            MODULES.iter().map(|m| m.ch.0 + m.ch.2 + m.ch.4 + m.ch.5).collect();
+        assert_eq!(sums[0], MODULES[1].ich); // 3a -> 3b: 256
+        assert_eq!(sums[1], 480); // 3b -> 4a
+        assert_eq!(sums[6], MODULES[7].ich); // 4e -> 5a: 832
+        assert_eq!(sums[8], 1024); // 5b -> avgpool/fc
+    }
+
+    #[test]
+    fn macs_about_1_5g() {
+        let total: u64 = inception_v1().iter().map(|l| l.macs()).sum();
+        let g = total as f64 / 1e9;
+        assert!((1.3..1.7).contains(&g), "got {g} GMACs");
+    }
+
+    #[test]
+    fn layer_count() {
+        assert_eq!(inception_v1().len(), 3 + 9 * 6 + 1);
+    }
+}

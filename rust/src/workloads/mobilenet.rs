@@ -1,0 +1,84 @@
+//! MobileNet-v1 (Howard et al., 2017) with the paper's width-multiplier /
+//! resolution variants.
+//!
+//! Depthwise layers are excluded from the accelerated-layer tables: the
+//! single-tile DIMC shares one input buffer across its 32 rows, so
+//! depthwise channels (one input channel per kernel) expose no row
+//! parallelism — like pooling, they execute identically on both cores
+//! (extension of paper assumption 6, documented in DESIGN.md). The
+//! pointwise (1x1) convolutions carry ~95% of MobileNet's MACs.
+
+use crate::compiler::layer::LayerConfig;
+
+fn scale(ch: u32, alpha_pct: u32) -> u32 {
+    ((ch * alpha_pct) / 100).max(8)
+}
+
+/// Standard + pointwise conv layers and the FC of MobileNet-v1 at the
+/// given width multiplier (percent) and input resolution.
+pub fn mobilenet_v1(alpha_pct: u32, res: u32) -> Vec<LayerConfig> {
+    let a = |c| scale(c, alpha_pct);
+    let tag = format!("mbv1_{alpha_pct}_{res}");
+    let s = |d: u32| res * d / 224; // feature-map size at /d downsampling
+    let mut v = vec![LayerConfig::conv(&format!("{tag}_conv1"), 3, a(32), 3, 3, res, res, 2, 1)];
+    // (in, out, spatial/224 numerator)
+    let pw: [(u32, u32, u32); 13] = [
+        (32, 64, 112),
+        (64, 128, 56),
+        (128, 128, 56),
+        (128, 256, 28),
+        (256, 256, 28),
+        (256, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 1024, 7),
+        (1024, 1024, 7),
+    ];
+    for (i, (ic, oc, sz)) in pw.into_iter().enumerate() {
+        let m = s(sz).max(1);
+        v.push(LayerConfig::conv(&format!("{tag}_pw{}", i + 1), a(ic), a(oc), 1, 1, m, m, 1, 0));
+    }
+    v.push(LayerConfig::fc(&format!("{tag}_fc"), a(1024), 1000));
+    v
+}
+
+/// The paper-style variant sweep: three width multipliers x two input
+/// resolutions (all published MobileNet-v1 configurations).
+pub fn mobilenet_variants() -> Vec<Vec<LayerConfig>> {
+    let mut out = Vec::new();
+    for alpha in [100, 75, 50] {
+        for res in [224, 192] {
+            out.push(mobilenet_v1(alpha, res));
+        }
+    }
+    out.push(mobilenet_v1(25, 224)); // the published 0.25x point
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_width_macs() {
+        // pointwise + stem ~ 0.53 GMACs of MobileNet-v1's 0.57 total.
+        let total: u64 = mobilenet_v1(100, 224).iter().map(|l| l.macs()).sum();
+        let g = total as f64 / 1e9;
+        assert!((0.45..0.6).contains(&g), "got {g} GMACs");
+    }
+
+    #[test]
+    fn width_multiplier_scales_channels() {
+        let half = mobilenet_v1(50, 224);
+        assert_eq!(half[1].ich, 16);
+        assert_eq!(half[1].och, 32);
+    }
+
+    #[test]
+    fn variant_count() {
+        assert_eq!(mobilenet_variants().len(), 7);
+    }
+}

@@ -1,0 +1,19 @@
+//! Workload zoo: the conv/FC layer tables of the models the paper
+//! evaluates (§V-B uses ResNet-50; §V-D sweeps >450 conv layers from
+//! AlexNet, VGG16, ResNet, Inception, DenseNet, EfficientNet and
+//! MobileNet). Shapes are transcribed from the original papers; only
+//! shapes enter the timing results (weights are synthetic).
+//!
+//! Pooling / elementwise layers are intentionally absent (paper
+//! assumption 6: they run identically on both cores).
+
+pub mod alexnet;
+pub mod densenet;
+pub mod efficientnet;
+pub mod inception;
+pub mod mobilenet;
+pub mod resnet;
+pub mod vgg;
+pub mod zoo;
+
+pub use zoo::{all_models, model_by_name, Model};

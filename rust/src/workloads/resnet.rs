@@ -1,0 +1,162 @@
+//! ResNet-50 and ResNet-18 (He et al., CVPR 2016) conv/FC layers — the
+//! paper's primary benchmark (Figs. 5–7 report every ResNet-50 layer).
+//!
+//! Layer naming follows the paper's stage convention: `convN_x` blocks
+//! with bottleneck `a`/`b`/`c` (1x1 / 3x3 / 1x1) plus the projection
+//! shortcut `d` on the first block of each stage. Repeated blocks within a
+//! stage have identical shapes; [`resnet50_unique`] lists each distinct
+//! shape once (with its repeat count) while [`resnet50`] expands all 53
+//! conv layers + fc.
+
+use crate::compiler::layer::LayerConfig;
+
+/// A layer plus how many times its shape repeats in the network.
+#[derive(Debug, Clone)]
+pub struct Counted {
+    pub layer: LayerConfig,
+    pub count: u32,
+}
+
+fn c(name: &str, ich: u32, och: u32, k: u32, ih: u32, s: u32, p: u32, count: u32) -> Counted {
+    Counted { layer: LayerConfig::conv(name, ich, och, k, k, ih, ih, s, p), count }
+}
+
+/// The distinct conv/FC shapes of ResNet-50 with their multiplicities
+/// (bottleneck v1, 224x224 input).
+pub fn resnet50_unique() -> Vec<Counted> {
+    let mut v = vec![
+        c("conv1", 3, 64, 7, 224, 2, 3, 1),
+        // conv2_x: 3 bottlenecks on 56x56
+        c("conv2_a1", 64, 64, 1, 56, 1, 0, 1),   // first block 1x1 reduce
+        c("conv2_b", 64, 64, 3, 56, 1, 1, 3),    // 3x3 in every block
+        c("conv2_c", 64, 256, 1, 56, 1, 0, 3),   // 1x1 expand
+        c("conv2_d", 64, 256, 1, 56, 1, 0, 1),   // projection shortcut
+        c("conv2_a", 256, 64, 1, 56, 1, 0, 2),   // later blocks reduce
+        // conv3_x: 4 bottlenecks on 28x28 (stride-2 entry)
+        c("conv3_a1", 256, 128, 1, 56, 1, 0, 1),
+        c("conv3_b1", 128, 128, 3, 56, 2, 1, 1), // stride-2 3x3
+        c("conv3_d", 256, 512, 1, 56, 2, 0, 1),  // strided projection
+        c("conv3_c", 128, 512, 1, 28, 1, 0, 4),
+        c("conv3_a", 512, 128, 1, 28, 1, 0, 3),
+        c("conv3_b", 128, 128, 3, 28, 1, 1, 3),
+        // conv4_x: 6 bottlenecks on 14x14
+        c("conv4_a1", 512, 256, 1, 28, 1, 0, 1),
+        c("conv4_b1", 256, 256, 3, 28, 2, 1, 1),
+        c("conv4_d", 512, 1024, 1, 28, 2, 0, 1),
+        c("conv4_c", 256, 1024, 1, 14, 1, 0, 6),
+        c("conv4_a", 1024, 256, 1, 14, 1, 0, 5),
+        c("conv4_b", 256, 256, 3, 14, 1, 1, 5),
+        // conv5_x: 3 bottlenecks on 7x7
+        c("conv5_a1", 1024, 512, 1, 14, 1, 0, 1),
+        c("conv5_b1", 512, 512, 3, 14, 2, 1, 1),
+        c("conv5_d", 1024, 2048, 1, 14, 2, 0, 1),
+        c("conv5_c", 512, 2048, 1, 7, 1, 0, 3),
+        c("conv5_a", 2048, 512, 1, 7, 1, 0, 2),
+        c("conv5_b", 512, 512, 3, 7, 1, 1, 2),
+    ];
+    v.push(Counted { layer: LayerConfig::fc("fc1000", 2048, 1000), count: 1 });
+    v
+}
+
+/// All 53 conv layers + the FC layer of ResNet-50, expanded in network
+/// order of their shapes.
+pub fn resnet50() -> Vec<LayerConfig> {
+    let mut out = Vec::new();
+    for Counted { layer, count } in resnet50_unique() {
+        for i in 0..count {
+            let mut l = layer.clone();
+            if count > 1 {
+                l.name = format!("{}#{}", layer.name, i + 1);
+            }
+            out.push(l);
+        }
+    }
+    out
+}
+
+/// ResNet-18 (basic blocks), used by the model-zoo sweep.
+pub fn resnet18() -> Vec<LayerConfig> {
+    let mut v = vec![LayerConfig::conv("r18_conv1", 3, 64, 7, 7, 224, 224, 2, 3)];
+    let stages: [(u32, u32, u32); 4] = [(64, 56, 2), (128, 28, 2), (256, 14, 2), (512, 7, 2)];
+    let mut prev = 64;
+    for (ch, size, blocks) in stages {
+        for b in 0..blocks {
+            let (icin, s, insz) =
+                if b == 0 && ch != 64 { (prev, 2, size * 2) } else { (ch, 1, size) };
+            v.push(LayerConfig::conv(
+                &format!("r18_c{ch}_b{b}_1"),
+                icin,
+                ch,
+                3,
+                3,
+                insz,
+                insz,
+                s,
+                1,
+            ));
+            v.push(LayerConfig::conv(&format!("r18_c{ch}_b{b}_2"), ch, ch, 3, 3, size, size, 1, 1));
+            if b == 0 && ch != 64 {
+                v.push(LayerConfig::conv(
+                    &format!("r18_c{ch}_proj"),
+                    prev,
+                    ch,
+                    1,
+                    1,
+                    size * 2,
+                    size * 2,
+                    2,
+                    0,
+                ));
+            }
+        }
+        prev = ch;
+    }
+    v.push(LayerConfig::fc("r18_fc", 512, 1000));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_has_53_convs_plus_fc() {
+        let layers = resnet50();
+        let convs = layers
+            .iter()
+            .filter(|l| matches!(l.kind, crate::compiler::layer::LayerKind::Conv))
+            .count();
+        assert_eq!(convs, 53, "ResNet-50 has 53 conv layers");
+        assert_eq!(layers.len(), 54);
+    }
+
+    #[test]
+    fn resnet50_total_macs_about_4_1g() {
+        // Published figure: ~4.1 GMACs for 224x224 bottleneck ResNet-50
+        // (conv + fc, no pooling).
+        let total: u64 = resnet50().iter().map(|l| l.macs()).sum();
+        let gmacs = total as f64 / 1e9;
+        assert!((3.7..4.3).contains(&gmacs), "got {gmacs} GMACs");
+    }
+
+    #[test]
+    fn spatial_chains_are_consistent() {
+        // every stage entry halves the feature map
+        let l = resnet50();
+        let conv1 = &l[0];
+        assert_eq!(conv1.oh(), 112);
+        for layer in &l {
+            assert!(layer.oh() > 0 && layer.ow() > 0);
+        }
+    }
+
+    #[test]
+    fn resnet18_shape_count() {
+        let l = resnet18();
+        // 1 stem + 16 block convs + 3 projections + fc = 21
+        assert_eq!(l.len(), 21);
+        let total: u64 = l.iter().map(|x| x.macs()).sum();
+        let gmacs = total as f64 / 1e9;
+        assert!((1.6..2.0).contains(&gmacs), "got {gmacs} GMACs");
+    }
+}

@@ -1,0 +1,54 @@
+//! VGG16 (Simonyan & Zisserman, ICLR 2015), configuration D.
+
+use crate::compiler::layer::LayerConfig;
+
+/// The 13 conv + 3 FC layers of VGG16.
+pub fn vgg16() -> Vec<LayerConfig> {
+    let blocks: [(u32, u32, u32, u32); 5] = [
+        // (in_ch, out_ch, convs, spatial)
+        (3, 64, 2, 224),
+        (64, 128, 2, 112),
+        (128, 256, 3, 56),
+        (256, 512, 3, 28),
+        (512, 512, 3, 14),
+    ];
+    let mut v = Vec::new();
+    for (bi, (ic, oc, n, sz)) in blocks.into_iter().enumerate() {
+        for j in 0..n {
+            let ich = if j == 0 { ic } else { oc };
+            v.push(LayerConfig::conv(
+                &format!("vgg_conv{}_{}", bi + 1, j + 1),
+                ich,
+                oc,
+                3,
+                3,
+                sz,
+                sz,
+                1,
+                1,
+            ));
+        }
+    }
+    v.push(LayerConfig::fc("vgg_fc6", 25088, 4096));
+    v.push(LayerConfig::fc("vgg_fc7", 4096, 4096));
+    v.push(LayerConfig::fc("vgg_fc8", 4096, 1000));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_macs_match_published() {
+        // ~15.3 GMACs conv + ~0.12 G fc.
+        let total: u64 = vgg16().iter().map(|l| l.macs()).sum();
+        let g = total as f64 / 1e9;
+        assert!((15.0..15.8).contains(&g), "got {g} GMACs");
+    }
+
+    #[test]
+    fn layer_count() {
+        assert_eq!(vgg16().len(), 16);
+    }
+}

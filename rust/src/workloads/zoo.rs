@@ -1,0 +1,86 @@
+//! The >450-layer model zoo of the paper's §V-D flexibility analysis.
+
+use super::{alexnet, densenet, efficientnet, inception, mobilenet, resnet, vgg};
+use crate::compiler::layer::LayerConfig;
+
+/// A named model: an ordered list of accelerated (conv/FC) layers.
+pub struct Model {
+    pub name: &'static str,
+    pub layers: Vec<LayerConfig>,
+}
+
+/// Every model family of the paper's §V-D sweep (AlexNet, VGG16, ResNet,
+/// Inception, DenseNet, EfficientNet, MobileNet), including the published
+/// MobileNet width/resolution variants, totalling >450 layer
+/// configurations.
+pub fn all_models() -> Vec<Model> {
+    let mut models = vec![
+        Model { name: "alexnet", layers: alexnet::alexnet() },
+        Model { name: "vgg16", layers: vgg::vgg16() },
+        Model { name: "resnet18", layers: resnet::resnet18() },
+        Model { name: "resnet50", layers: resnet::resnet50() },
+        Model { name: "inception-v1", layers: inception::inception_v1() },
+        Model { name: "densenet121", layers: densenet::densenet121() },
+        Model { name: "efficientnet-b0", layers: efficientnet::efficientnet_b0() },
+        Model { name: "efficientnet-b1", layers: efficientnet::efficientnet_b1() },
+    ];
+    let names =
+        ["mobilenet-100-224", "mobilenet-100-192", "mobilenet-75-224", "mobilenet-75-192",
+         "mobilenet-50-224", "mobilenet-50-192", "mobilenet-25-224"];
+    for (layers, name) in mobilenet::mobilenet_variants().into_iter().zip(names) {
+        models.push(Model { name, layers });
+    }
+    models
+}
+
+/// Look a model up by name (CLI entry point).
+pub fn model_by_name(name: &str) -> Option<Model> {
+    all_models().into_iter().find(|m| m.name == name)
+}
+
+/// All zoo layers flattened (the paper's "over 450 convolutional layers").
+pub fn all_layers() -> Vec<LayerConfig> {
+    all_models().into_iter().flat_map(|m| m.layers).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dimc::Precision;
+
+    #[test]
+    fn zoo_exceeds_450_layers() {
+        let n = all_layers().len();
+        assert!(n > 450, "zoo has only {n} layers");
+    }
+
+    #[test]
+    fn zoo_covers_tiling_and_grouping() {
+        let layers = all_layers();
+        let tiled = layers.iter().filter(|l| l.needs_tiling(Precision::Int4)).count();
+        let grouped = layers.iter().filter(|l| l.needs_grouping()).count();
+        let plain = layers
+            .iter()
+            .filter(|l| !l.needs_tiling(Precision::Int4) && !l.needs_grouping())
+            .count();
+        assert!(tiled > 50, "only {tiled} tiled layers");
+        assert!(grouped > 50, "only {grouped} grouped layers");
+        assert!(plain > 20, "only {plain} in-limit layers");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(model_by_name("resnet50").is_some());
+        assert!(model_by_name("mobilenet-50-192").is_some());
+        assert!(model_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn every_layer_is_well_formed() {
+        for l in all_layers() {
+            assert!(l.oh() > 0 && l.ow() > 0, "{l}");
+            assert!(l.macs() > 0, "{l}");
+            assert!(l.ich > 0 && l.och > 0, "{l}");
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Three-layer composition tests: the Rust simulator (L3) against the
+//! AOT-compiled JAX/Pallas golden models (L2+L1) executed via PJRT.
+//!
+//! Requires `make artifacts`; each test skips with a notice when the
+//! artifacts are absent (CI runs `make test`, which builds them first).
+
+use dimc_rvv::coordinator::verify::{
+    conv_artifact_layer, gemm_artifact_layer, verify_all, verify_conv, verify_gemm,
+};
+use dimc_rvv::runtime::{artifacts_dir, Golden};
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("conv_golden.hlo.txt").exists();
+    if !ok {
+        eprintln!("skipping golden test: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn conv_sim_matches_pallas_golden() {
+    if !have_artifacts() {
+        return;
+    }
+    let r = verify_conv(0xAB).unwrap();
+    assert!(r.ok(), "{} of {} outputs mismatched", r.mismatches, r.outputs);
+    assert_eq!(r.outputs as u64, conv_artifact_layer().patches() * 8);
+}
+
+#[test]
+fn gemm_sim_matches_pallas_golden() {
+    if !have_artifacts() {
+        return;
+    }
+    let r = verify_gemm(0xCD).unwrap();
+    assert!(r.ok(), "{} of {} outputs mismatched", r.mismatches, r.outputs);
+    assert_eq!(r.outputs as u64, gemm_artifact_layer().och as u64);
+}
+
+#[test]
+fn golden_checks_hold_across_seeds() {
+    if !have_artifacts() {
+        return;
+    }
+    let reports = verify_all(&[1, 2, 3, 4, 5]).unwrap();
+    assert_eq!(reports.len(), 10);
+    for r in reports {
+        assert!(r.ok(), "{}: {} mismatches", r.layer, r.mismatches);
+    }
+}
+
+#[test]
+fn row_golden_agrees_with_rust_tile() {
+    if !have_artifacts() {
+        return;
+    }
+    // Drive the SAME data through (a) the PJRT-compiled Pallas row-dot and
+    // (b) the Rust DimcTile, including a 24-bit wrap case.
+    use dimc_rvv::compiler::pack::Lcg;
+    use dimc_rvv::dimc::{mac::pack, DimcConfig, DimcTile};
+
+    let g = Golden::load_artifact("dimc_row_golden.hlo.txt").unwrap();
+    let mut r = Lcg::new(0x314);
+    for psum_seed in [0i32, 1000, -8_000_000, 8_388_607] {
+        let acts: Vec<i32> = (0..256).map(|_| r.below(16) as i32).collect();
+        let wts: Vec<i32> = (0..256).map(|_| r.below(16) as i32 - 8).collect();
+        let want =
+            g.run_i32(&[(&acts, &[256]), (&wts, &[256]), (&[psum_seed], &[])]).unwrap()[0];
+
+        let mut tile = DimcTile::new(DimcConfig::default());
+        let mut row = [0u8; 128];
+        let mut buf = [0u8; 128];
+        for i in 0..256 {
+            pack(&mut row, i, 4, (wts[i] & 0xf) as u8);
+            pack(&mut buf, i, 4, acts[i] as u8);
+        }
+        for s in 0..4u8 {
+            tile.load_row(0, s, &row[s as usize * 32..(s as usize + 1) * 32], 4, 0xf);
+            tile.load_ibuf(s, &buf[s as usize * 32..(s as usize + 1) * 32], 4, 0xf);
+        }
+        let got = tile.compute_partial(0, psum_seed);
+        assert_eq!(got, want, "psum {psum_seed}");
+    }
+}

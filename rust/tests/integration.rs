@@ -1,0 +1,177 @@
+//! Cross-module integration tests: multi-layer networks chained through
+//! the functional simulator, the figure sweeps' shapes, zoo spot checks,
+//! and the CLI surface.
+
+use dimc_rvv::compiler::layer::LayerConfig;
+use dimc_rvv::compiler::pack::{synth_wts, Lcg};
+use dimc_rvv::coordinator::driver::{
+    reference_outputs, run_functional, simulate_layer, Engine,
+};
+use dimc_rvv::coordinator::figures;
+use dimc_rvv::dimc::Precision;
+use dimc_rvv::metrics::area::AreaModel;
+use dimc_rvv::metrics::report::layer_row;
+use dimc_rvv::workloads::resnet;
+
+/// Chain a small CNN end-to-end through the DIMC engine: each layer's
+/// quantized outputs (already 4-bit post-ReLU) feed the next layer's
+/// activations — exactly how the real device would run inference.
+#[test]
+fn three_layer_cnn_chains_functionally() {
+    let l1 = LayerConfig::conv("c1", 3, 16, 3, 3, 8, 8, 1, 1); // 8x8x16
+    let l2 = LayerConfig::conv("c2", 16, 48, 2, 2, 8, 8, 2, 0); // 4x4x48 (grouped)
+    let l3 = LayerConfig::fc("c3", 4 * 4 * 48, 10);
+
+    let mut r = Lcg::new(0xCAFE);
+    let mut acts: Vec<i8> = (0..(8 * 8 * 3)).map(|_| r.unsigned(4)).collect();
+    for l in [&l1, &l2, &l3] {
+        let wts = synth_wts(l, Precision::Int4, 0xBEEF ^ l.och as u64);
+        let run = run_functional(l, Engine::Dimc, &acts, &wts, 4).unwrap();
+        let want = reference_outputs(l, Engine::Dimc, &acts, &wts, 4);
+        assert_eq!(run.outputs, want, "layer {} broke the chain", l.name);
+        // quantized outputs become next-layer activations
+        acts = run.outputs.iter().map(|&v| v as i8).collect();
+    }
+    assert_eq!(acts.len(), 10);
+}
+
+#[test]
+fn fig8_tiling_knee_sits_at_1024_bits() {
+    // 2x2 @4b kernels: ICH = 64 is the last single-tile point.
+    assert_eq!(figures::fig8_layer(64).tiles(Precision::Int4), 1);
+    assert_eq!(figures::fig8_layer(80).tiles(Precision::Int4), 2);
+    // per-op throughput drops across the knee
+    let area = AreaModel::default();
+    let r64 = layer_row(&figures::fig8_layer(64), &area).unwrap();
+    let r80 = layer_row(&figures::fig8_layer(80), &area).unwrap();
+    assert!(
+        r64.gops > r80.gops,
+        "no tiling degradation: {} vs {}",
+        r64.gops,
+        r80.gops
+    );
+    // but the DIMC still wins by a wide margin (paper: "still maintains a
+    // strong advantage")
+    assert!(r80.speedup > 10.0);
+}
+
+#[test]
+fn fig9_grouping_steps_at_32_kernels() {
+    assert_eq!(figures::fig9_layer(32).groups(), 1);
+    assert_eq!(figures::fig9_layer(33).groups(), 2);
+    let area = AreaModel::default();
+    // partially filled groups waste rows: GOPS(48) < GOPS(64) with 2 groups
+    let r48 = layer_row(&figures::fig9_layer(48), &area).unwrap();
+    let r64 = layer_row(&figures::fig9_layer(64), &area).unwrap();
+    assert!(r64.gops > r48.gops, "full groups must be more efficient");
+}
+
+#[test]
+fn resnet50_first_and_peak_layers() {
+    // conv1 (7x7x3) has tiny channel depth -> heavily padded, low GOPS;
+    // the 3x3x512 conv5 layers approach peak.
+    let layers = resnet::resnet50();
+    let area = AreaModel::default();
+    let conv1 = layer_row(&layers[0], &area).unwrap();
+    let conv5b = layers.iter().find(|l| l.name.starts_with("conv5_b")).unwrap();
+    let r5 = layer_row(conv5b, &area).unwrap();
+    assert!(r5.gops > conv1.gops, "deep layers must beat conv1 in utilization");
+    assert!(r5.gops > 60.0, "conv5_b should approach peak, got {:.1}", r5.gops);
+    assert!(r5.speedup > 100.0, "conv5_b speedup {:.1}", r5.speedup);
+}
+
+#[test]
+fn zoo_spot_checks_dimc_always_wins() {
+    use dimc_rvv::workloads::zoo::all_models;
+    // one representative layer per model family (full sweep is the bench)
+    for m in all_models().iter().take(8) {
+        let l = &m.layers[m.layers.len() / 2];
+        let d = simulate_layer(l, Engine::Dimc).unwrap();
+        let b = simulate_layer(l, Engine::Baseline).unwrap();
+        assert!(
+            b.cycles > d.cycles,
+            "{}: DIMC must outperform baseline on {}",
+            m.name,
+            l
+        );
+    }
+}
+
+#[test]
+fn precision_modes_trade_tiles_for_lanes() {
+    use dimc_rvv::coordinator::driver::simulate_layer_at;
+    let l = LayerConfig::conv("p", 128, 32, 3, 3, 14, 14, 1, 1);
+    let r4 = simulate_layer_at(&l, Engine::Dimc, Precision::Int4).unwrap();
+    let r2 = simulate_layer_at(&l, Engine::Dimc, Precision::Int2).unwrap();
+    let r1 = simulate_layer_at(&l, Engine::Dimc, Precision::Int1).unwrap();
+    // halving precision halves the tile count -> fewer cycles
+    assert!(r2.cycles < r4.cycles);
+    assert!(r1.cycles < r2.cycles);
+}
+
+#[test]
+fn cli_simulate_smoke() {
+    let args: Vec<String> =
+        ["simulate", "--ich", "16", "--och", "8", "--ih", "6", "--iw", "6", "--kh", "2",
+         "--kw", "2", "--pad", "0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    dimc_rvv::coordinator::cli::main_with_args(&args).unwrap();
+}
+
+#[test]
+fn traced_run_matches_plain_run() {
+    use dimc_rvv::arch::Arch;
+    use dimc_rvv::isa::asm::assemble;
+    use dimc_rvv::pipeline::core::Core;
+    let prog = assemble(
+        r"
+        li x5, 0
+        li x6, 20
+    loop:
+        addi x5, x5, 1
+        bne x5, x6, loop
+        ecall",
+    )
+    .unwrap();
+    let mut plain = Core::new(Arch::default());
+    let s1 = plain.run(&prog, 10_000).unwrap();
+    let mut traced = Core::new(Arch::default());
+    let (s2, entries) = traced.run_traced(&prog, 10_000).unwrap();
+    assert_eq!(s1.cycles, s2.cycles);
+    assert_eq!(s1.instret, s2.instret);
+    assert_eq!(entries.len() as u64, s2.instret);
+    // issues are monotone non-decreasing and completion >= issue
+    for w in entries.windows(2) {
+        assert!(w[1].issue >= w[0].issue);
+    }
+    assert!(entries.iter().all(|e| e.complete >= e.issue));
+}
+
+#[test]
+fn cli_rejects_unknown_command() {
+    let args = vec!["frobnicate".to_string()];
+    assert!(dimc_rvv::coordinator::cli::main_with_args(&args).is_err());
+}
+
+#[test]
+fn baseline_never_emits_custom_instructions() {
+    use dimc_rvv::compiler::baseline::compile_baseline;
+    for l in resnet::resnet50().iter().take(5) {
+        let prog = compile_baseline(l);
+        for ph in &prog.phases {
+            assert!(ph.body(0).iter().all(|i| !i.is_custom()), "{}", l.name);
+        }
+    }
+}
+
+#[test]
+fn dimc_stream_is_dominated_by_dc_ops_on_big_kernels() {
+    // Fig. 6's thesis: compute dominates when kernels fill the tile.
+    let l = LayerConfig::conv("dom", 256, 32, 3, 3, 14, 14, 1, 1);
+    let d = simulate_layer(&l, Engine::Dimc).unwrap();
+    let (compute, load, store) = d.distribution();
+    assert!(compute > 0.5, "compute fraction only {compute:.2}");
+    assert!(compute > load && compute > store);
+}

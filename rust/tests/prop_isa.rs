@@ -1,0 +1,173 @@
+//! Property tests for the ISA layer (std-only harness — proptest is not
+//! vendored offline; `Lcg` gives deterministic, seed-reported cases).
+//!
+//! Invariants:
+//! * `decode(encode(i)) == i` for every constructible instruction;
+//! * `decode` is total (never panics) over arbitrary 32-bit words;
+//! * custom instructions always land in (and only in) custom-0.
+
+use dimc_rvv::compiler::pack::Lcg;
+use dimc_rvv::isa::decode::decode;
+use dimc_rvv::isa::encode::{encode, OPC_CUSTOM0};
+use dimc_rvv::isa::{AluOp, BranchCond, Instr, VType};
+
+const CASES: u64 = 20_000;
+
+fn reg(r: &mut Lcg) -> u8 {
+    r.below(32) as u8
+}
+
+fn imm12(r: &mut Lcg) -> i32 {
+    r.below(4096) as i32 - 2048
+}
+
+fn vtype(r: &mut Lcg) -> VType {
+    let sew = [8u16, 16, 32][r.below(3) as usize];
+    let lmul = [1u8, 2, 4, 8][r.below(4) as usize];
+    VType::new(sew, lmul)
+}
+
+fn random_instr(r: &mut Lcg) -> Instr {
+    let alu_imm = [AluOp::Add, AluOp::Sll, AluOp::Srl, AluOp::Sra, AluOp::And, AluOp::Or,
+                   AluOp::Xor, AluOp::Slt, AluOp::Sltu];
+    let alu_rr = [AluOp::Add, AluOp::Sub, AluOp::Mul, AluOp::Sll, AluOp::Srl, AluOp::Sra,
+                  AluOp::And, AluOp::Or, AluOp::Xor, AluOp::Slt, AluOp::Sltu];
+    let conds = [BranchCond::Eq, BranchCond::Ne, BranchCond::Lt, BranchCond::Ge,
+                 BranchCond::Ltu, BranchCond::Geu];
+    let eews = [8u8, 16, 32];
+    match r.below(32) {
+        0 => Instr::Lui { rd: reg(r), imm: r.below(1 << 20) as i32 },
+        1 => Instr::Auipc { rd: reg(r), imm: r.below(1 << 20) as i32 },
+        2 => {
+            let op = alu_imm[r.below(alu_imm.len() as u64) as usize];
+            let imm = if matches!(op, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                r.below(32) as i32
+            } else {
+                imm12(r)
+            };
+            Instr::OpImm { op, rd: reg(r), rs1: reg(r), imm }
+        }
+        3 => Instr::Op {
+            op: alu_rr[r.below(alu_rr.len() as u64) as usize],
+            rd: reg(r),
+            rs1: reg(r),
+            rs2: reg(r),
+        },
+        4 => Instr::Lw { rd: reg(r), rs1: reg(r), imm: imm12(r) },
+        5 => Instr::Lbu { rd: reg(r), rs1: reg(r), imm: imm12(r) },
+        6 => Instr::Sw { rs2: reg(r), rs1: reg(r), imm: imm12(r) },
+        7 => Instr::Sb { rs2: reg(r), rs1: reg(r), imm: imm12(r) },
+        8 => Instr::Branch {
+            cond: conds[r.below(6) as usize],
+            rs1: reg(r),
+            rs2: reg(r),
+            off: (r.below(4096) as i32 - 2048) * 2,
+        },
+        9 => Instr::Jal { rd: reg(r), off: (r.below(1 << 20) as i32 - (1 << 19)) * 2 },
+        10 => Instr::Jalr { rd: reg(r), rs1: reg(r), imm: imm12(r) },
+        11 => Instr::Halt,
+        12 => Instr::Vsetvli { rd: reg(r), rs1: reg(r), vtype: vtype(r) },
+        13 => Instr::Vsetivli { rd: reg(r), uimm: r.below(32) as u8, vtype: vtype(r) },
+        14 => Instr::Vle { eew: eews[r.below(3) as usize], vd: reg(r), rs1: reg(r) },
+        15 => Instr::Vse { eew: eews[r.below(3) as usize], vs3: reg(r), rs1: reg(r) },
+        16 => Instr::Vlse {
+            eew: eews[r.below(3) as usize],
+            vd: reg(r),
+            rs1: reg(r),
+            rs2: reg(r),
+        },
+        17 => Instr::VaddVV { vd: reg(r), vs1: reg(r), vs2: reg(r) },
+        18 => Instr::VaddVX { vd: reg(r), rs1: reg(r), vs2: reg(r) },
+        19 => Instr::VaddVI { vd: reg(r), imm: r.below(32) as i8 - 16, vs2: reg(r) },
+        20 => Instr::VmaccVV { vd: reg(r), vs1: reg(r), vs2: reg(r) },
+        21 => Instr::VredsumVS { vd: reg(r), vs1: reg(r), vs2: reg(r) },
+        22 => Instr::VsextVf4 { vd: reg(r), vs2: reg(r) },
+        23 => Instr::VmvXS { rd: reg(r), vs2: reg(r) },
+        24 => Instr::VmaxVX { vd: reg(r), rs1: reg(r), vs2: reg(r) },
+        25 => Instr::VsraVI { vd: reg(r), imm: r.below(32) as u8, vs2: reg(r) },
+        26 => Instr::VslidedownVI { vd: reg(r), imm: r.below(32) as u8, vs2: reg(r) },
+        27 => Instr::VmvVI { vd: reg(r), imm: r.below(32) as i8 - 16 },
+        28 => Instr::DlI {
+            nvec: r.below(4) as u8 + 1,
+            mask: r.below(16) as u8,
+            vs1: reg(r),
+            width: r.below(4) as u8,
+            sec: r.below(4) as u8,
+        },
+        29 => Instr::DlM {
+            nvec: r.below(4) as u8 + 1,
+            mask: r.below(16) as u8,
+            vs1: reg(r),
+            width: r.below(4) as u8,
+            sec: r.below(4) as u8,
+            m_row: r.below(32) as u8,
+        },
+        30 => Instr::DcP {
+            sh: r.below(2) == 1,
+            dh: r.below(2) == 1,
+            m_row: r.below(32) as u8,
+            vs1: reg(r),
+            width: r.below(4) as u8,
+            vd: reg(r),
+        },
+        _ => Instr::DcF {
+            sh: r.below(2) == 1,
+            dh: r.below(2) == 1,
+            m_row: r.below(32) as u8,
+            vs1: reg(r),
+            width: r.below(4) as u8,
+            bidx: r.below(8) as u8,
+            vd: reg(r),
+        },
+    }
+}
+
+#[test]
+fn encode_decode_roundtrip() {
+    let mut r = Lcg::new(0xC0DEC);
+    for case in 0..CASES {
+        let i = random_instr(&mut r);
+        let w = encode(&i);
+        assert_eq!(decode(w), Ok(i), "case {case}: {i} -> {w:#010x}");
+    }
+}
+
+#[test]
+fn decode_is_total_over_random_words() {
+    let mut r = Lcg::new(0xDEC0DE);
+    for _ in 0..CASES {
+        let w = r.next_u64() as u32;
+        let _ = decode(w); // must not panic; Err is fine
+    }
+}
+
+#[test]
+fn custom_instrs_use_custom0_exclusively() {
+    let mut r = Lcg::new(0xC5);
+    for _ in 0..CASES {
+        let i = random_instr(&mut r);
+        let w = encode(&i);
+        assert_eq!(i.is_custom(), w & 0x7f == OPC_CUSTOM0, "{i}");
+    }
+}
+
+#[test]
+fn display_roundtrips_through_assembler_for_asm_subset() {
+    // The assembler must reproduce what it can parse of Display output.
+    use dimc_rvv::isa::asm::assemble;
+    let cases = [
+        "addi x1, x2, -7",
+        "add x3, x4, x5",
+        "mul x3, x4, x5",
+        "lw x6, 16(x7)",
+        "sw x6, -4(x7)",
+        "vadd.vv v1, v2, v3",
+        "vmacc.vv v1, v2, v3",
+        "vsext.vf4 v4, v8",
+    ];
+    for src in cases {
+        let p1 = assemble(src).unwrap();
+        let p2 = assemble(&p1[0].to_string()).unwrap();
+        assert_eq!(p1, p2, "{src}");
+    }
+}

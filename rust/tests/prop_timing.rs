@@ -1,0 +1,112 @@
+//! Timing-model properties:
+//!
+//! * the trace engine's extrapolated cycle counts are *bit-identical* to
+//!   flat execution for random periodic straight-line bodies (the shapes
+//!   the mapper emits);
+//! * cycle counts are monotone: more trips never costs fewer cycles;
+//! * scoreboard sanity: cycles >= instructions (single issue).
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::compiler::pack::Lcg;
+use dimc_rvv::isa::{AluOp, Instr, VType};
+use dimc_rvv::pipeline::core::Core;
+use dimc_rvv::pipeline::trace::{flat_cycles, trace_cycles, Phase};
+
+/// A random straight-line body drawn from the mapper's instruction
+/// repertoire (loads/stores hit a fixed scratch page; registers chosen
+/// from small pools to create realistic hazard chains).
+fn random_body(r: &mut Lcg) -> Vec<Instr> {
+    let n = 3 + r.below(12) as usize;
+    let mut body = vec![
+        // fixed prologue mirrors the mapper: config + address materialize
+        Instr::Vsetivli { rd: 0, uimm: 8, vtype: VType::new(8, 1) },
+        Instr::Lui { rd: 5, imm: 1 },
+        Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 5, imm: 0 },
+    ];
+    for _ in 0..n {
+        let x = (5 + r.below(3)) as u8;
+        let v = (8 + r.below(4)) as u8;
+        body.push(match r.below(8) {
+            0 => Instr::OpImm { op: AluOp::Add, rd: x, rs1: x, imm: 8 },
+            1 => Instr::Op { op: AluOp::Mul, rd: 6, rs1: 5, rs2: 5 },
+            2 => Instr::Vle { eew: 8, vd: v, rs1: 5 },
+            3 => Instr::Vse { eew: 8, vs3: v, rs1: 5 },
+            4 => Instr::VaddVV { vd: v, vs1: 8, vs2: 9 },
+            5 => Instr::DlI { nvec: 1, mask: 1, vs1: v, width: 0, sec: 0 },
+            6 => Instr::DcP { sh: false, dh: false, m_row: 0, vs1: 6, width: 0, vd: 24 },
+            _ => Instr::VmvVI { vd: v, imm: 1 },
+        });
+    }
+    body
+}
+
+fn random_phases(r: &mut Lcg) -> Vec<Phase> {
+    let n = 1 + r.below(3) as usize;
+    (0..n)
+        .map(|i| Phase::new(format!("p{i}"), 1 + r.below(200), random_body(r)))
+        .collect()
+}
+
+#[test]
+fn trace_equals_flat_on_random_periodic_bodies() {
+    let mut r = Lcg::new(0x71ACE);
+    for case in 0..40 {
+        let phases = random_phases(&mut r);
+        let mut ct = Core::new(Arch::default());
+        let mut cf = Core::new(Arch::default());
+        let rt = trace_cycles(&mut ct, &phases).unwrap();
+        let rf = flat_cycles(&mut cf, &phases).unwrap();
+        assert_eq!(rt.cycles, rf.cycles, "case {case}: trace != flat");
+        assert_eq!(rt.instret, rf.instret, "case {case}");
+        assert_eq!(rt.class_counts, rf.class_counts, "case {case}");
+    }
+}
+
+#[test]
+fn more_trips_never_cost_less() {
+    let mut r = Lcg::new(0x107);
+    for _ in 0..10 {
+        let body = random_body(&mut r);
+        let mut prev = 0;
+        for trips in [1u64, 2, 10, 100, 1000] {
+            let mut c = Core::new(Arch::default());
+            let res =
+                trace_cycles(&mut c, &[Phase::new("p", trips, body.clone())]).unwrap();
+            assert!(res.cycles >= prev, "cycles decreased with more trips");
+            prev = res.cycles;
+        }
+    }
+}
+
+#[test]
+fn single_issue_lower_bound() {
+    let mut r = Lcg::new(0xB0);
+    for _ in 0..10 {
+        let phases = random_phases(&mut r);
+        let mut c = Core::new(Arch::default());
+        let res = trace_cycles(&mut c, &phases).unwrap();
+        assert!(
+            res.cycles >= res.instret,
+            "single-issue core cannot beat 1 instr/cycle ({} < {})",
+            res.cycles,
+            res.instret
+        );
+    }
+}
+
+#[test]
+fn arch_knobs_move_cycles_in_the_right_direction() {
+    // Longer memory latency must not make anything faster.
+    let mut r = Lcg::new(0x99);
+    let body = random_body(&mut r);
+    let phases = [Phase::new("p", 50, body)];
+    let fast = {
+        let mut c = Core::new(Arch { mem_load_latency: 2, ..Default::default() });
+        trace_cycles(&mut c, &phases).unwrap().cycles
+    };
+    let slow = {
+        let mut c = Core::new(Arch { mem_load_latency: 20, ..Default::default() });
+        trace_cycles(&mut c, &phases).unwrap().cycles
+    };
+    assert!(slow >= fast, "higher memory latency got faster: {slow} < {fast}");
+}
