@@ -1,0 +1,45 @@
+//! Regenerates the **cluster scaling figure** — ResNet-50 throughput,
+//! speedup and parallel efficiency on 1/2/4/8 DIMC-enhanced cores — and
+//! times the full sweep (every point is a complete cluster simulation
+//! driving one single-core pipeline model per shard).
+//!
+//! The paper's single tile peaks at 137 GOPS; the cluster model shows how
+//! far output-channel-group sharding carries that number before the
+//! shared bus and group-poor layers flatten the curve.
+
+#[path = "harness.rs"]
+mod harness;
+
+use dimc_rvv::cluster::scaling::{is_monotone, render};
+use dimc_rvv::coordinator::driver::{simulate_layer, Engine};
+use dimc_rvv::coordinator::figures::{cluster_core_counts, cluster_scaling_points};
+use dimc_rvv::workloads::resnet;
+
+fn main() {
+    let points =
+        harness::bench("cluster/resnet50-1-2-4-8", 3, || cluster_scaling_points().unwrap());
+
+    println!();
+    println!("{}", render("resnet50 cluster scaling (simulated)", &points));
+
+    let single: u64 = resnet::resnet50()
+        .iter()
+        .map(|l| simulate_layer(l, Engine::Dimc).unwrap().cycles)
+        .sum();
+    assert_eq!(
+        points[0].cycles, single,
+        "1-core cluster must reproduce the single-core simulator exactly"
+    );
+    assert!(is_monotone(&points), "throughput regressed with more cores");
+    assert_eq!(points.len(), cluster_core_counts().len());
+
+    let last = points.last().unwrap();
+    println!(
+        "{} cores: {:.1} GOPS, {:.2}x speedup, {:.0}% parallel efficiency",
+        last.cores,
+        last.gops,
+        last.speedup,
+        last.efficiency * 100.0
+    );
+    assert!(last.speedup > 1.5, "8-core speedup collapsed: {:.2}x", last.speedup);
+}

@@ -75,6 +75,18 @@ pub struct Arch {
     pub issue_width: u64,
     /// Core clock in Hz.
     pub clock_hz: f64,
+    /// Scale-out knob (`cluster` module): bandwidth of the shared
+    /// interconnect between the cluster's cores and external memory, in
+    /// bytes per cycle. Each core keeps its private `mem_bus_bytes` port
+    /// into the VLSU; when several cores stream concurrently their
+    /// aggregate demand contends for this shared bus. A single-core
+    /// cluster never contends (the knob is inert at N = 1).
+    pub cluster_bus_bytes: u64,
+    /// Scale-out knob (`cluster` module): base cost in cycles of one
+    /// cluster-wide barrier. The model charges `cluster_barrier_cycles *
+    /// ceil(log2(active_cores))` per synchronization point (tree
+    /// barrier), and nothing at all for a single active core.
+    pub cluster_barrier_cycles: u64,
 }
 
 impl Default for Arch {
@@ -91,6 +103,11 @@ impl Default for Arch {
             dimc_load_latency: 1,
             issue_width: 1,
             clock_hz: CLOCK_HZ,
+            // Shared scale-out bus: 4x one core's private port, so a
+            // 4-core cluster streams at full rate and an 8-core cluster
+            // starts to contend on load-heavy layers.
+            cluster_bus_bytes: 32,
+            cluster_barrier_cycles: 32,
         }
     }
 }

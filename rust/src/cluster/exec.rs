@@ -1,0 +1,382 @@
+//! The cluster execution engine.
+//!
+//! Timing: every shard of a [`ShardPlan`] is lowered and simulated by the
+//! unmodified single-core pipeline (`coordinator::driver::
+//! simulate_layer_with_arch` — compile, trace, scoreboard), then the
+//! per-shard cycle counts are reduced under the cluster model:
+//!
+//! ```text
+//! layer_cycles(plan) = max_i(shard_cycles_i)            # cores run concurrently
+//!                    + contention(active, sum_i bytes_i, max_i cycles_i)
+//!                    + barrier(active)
+//! ```
+//!
+//! The engine evaluates every useful degree of parallelism `k <= cores`
+//! and keeps the fastest — a static scheduler never forced to over-shard
+//! a layer whose barrier/contention cost would exceed the parallel gain.
+//! Because the candidate set for N cores contains the candidate set for
+//! N-1, cluster throughput is monotonically non-decreasing in N by
+//! construction, and the k = 1 candidate makes a 1-core cluster exactly
+//! reproduce the single-core simulator's cycle count.
+//!
+//! Functional: [`run_functional_cluster`] runs every shard through the
+//! bit-exact single-core functional driver on its slice of the tensors
+//! and stitches the outputs back into the parent layer's dense
+//! `[oh][ow][och]` order — the result must equal single-core
+//! [`run_functional`] byte for byte.
+
+use super::shard::{ShardPlan, ShardStrategy};
+use super::topology::ClusterTopology;
+use crate::arch::{Arch, DIMC_ROWS, DIMC_ROW_BYTES};
+use crate::compiler::layer::{LayerConfig, LayerKind};
+use crate::compiler::pack::elems_per_tile;
+use crate::coordinator::driver::{run_functional, simulate_layer_with_arch, Engine};
+use crate::dimc::Precision;
+use crate::pipeline::core::SimError;
+use std::collections::{HashMap, HashSet};
+
+/// Cluster-level timing result for one layer.
+#[derive(Debug, Clone)]
+pub struct ClusterLayerResult {
+    pub name: String,
+    /// Cores the chosen plan actually used.
+    pub cores_used: u32,
+    pub strategy: ShardStrategy,
+    /// Cluster cycles: slowest shard + contention + barrier.
+    pub cycles: u64,
+    pub max_shard_cycles: u64,
+    pub contention_cycles: u64,
+    pub barrier_cycles: u64,
+    /// Aggregate external-memory traffic of all shards, in bytes.
+    pub mem_bytes: u64,
+    pub ops: u64,
+    pub clock_hz: f64,
+}
+
+impl ClusterLayerResult {
+    /// Achieved cluster throughput in GOPS.
+    pub fn gops(&self) -> f64 {
+        self.ops as f64 / (self.cycles as f64 / self.clock_hz) / 1e9
+    }
+}
+
+/// Geometry key for the shard-simulation cache (name-insensitive: two
+/// shards with identical shapes share one simulation).
+type SimKey = (u8, u32, u32, u32, u32, u32, u32, u32, u32);
+
+fn sim_key(l: &LayerConfig) -> SimKey {
+    let kind = match l.kind {
+        LayerKind::Conv => 0u8,
+        LayerKind::Fc => 1u8,
+    };
+    (kind, l.ich, l.och, l.kh, l.kw, l.ih, l.iw, l.stride, l.pad)
+}
+
+/// The cluster simulator: an [`Arch`], a precision, and a cache of shard
+/// simulations keyed by geometry. One instance can schedule many layers,
+/// models and topologies; balanced shard plans hit the cache heavily
+/// (each plan has at most two distinct shard shapes).
+pub struct ClusterSim {
+    pub arch: Arch,
+    pub precision: Precision,
+    cache: HashMap<SimKey, (u64, u64)>, // -> (cycles, mem bytes)
+}
+
+impl ClusterSim {
+    pub fn new(arch: Arch, precision: Precision) -> Self {
+        ClusterSim { arch, precision, cache: HashMap::new() }
+    }
+
+    /// Simulate one (sub-)layer on a single DIMC core: cycles + memory
+    /// traffic, memoized by geometry.
+    pub fn shard_sim(&mut self, l: &LayerConfig) -> Result<(u64, u64), SimError> {
+        let key = sim_key(l);
+        if let Some(&hit) = self.cache.get(&key) {
+            return Ok(hit);
+        }
+        let r = simulate_layer_with_arch(l, Engine::Dimc, self.precision, self.arch)?;
+        let v = (r.cycles, layer_mem_bytes(l, self.precision));
+        self.cache.insert(key, v);
+        Ok(v)
+    }
+
+    /// Evaluate one concrete plan under `topo`.
+    pub fn eval_plan(
+        &mut self,
+        topo: &ClusterTopology,
+        plan: &ShardPlan,
+    ) -> Result<ClusterLayerResult, SimError> {
+        let mut max_cycles = 0u64;
+        let mut total_bytes = 0u64;
+        for s in &plan.shards {
+            let (c, b) = self.shard_sim(&s.layer)?;
+            max_cycles = max_cycles.max(c);
+            total_bytes += b;
+        }
+        let active = plan.active_cores();
+        let contention = topo.contention(active, total_bytes, max_cycles);
+        let barrier = topo.barrier(active);
+        Ok(ClusterLayerResult {
+            name: plan.parent.name.clone(),
+            cores_used: active,
+            strategy: plan.strategy,
+            cycles: max_cycles + contention + barrier,
+            max_shard_cycles: max_cycles,
+            contention_cycles: contention,
+            barrier_cycles: barrier,
+            mem_bytes: total_bytes,
+            ops: plan.parent.ops(),
+            clock_hz: self.arch.clock_hz,
+        })
+    }
+
+    /// Best cluster execution of `l` on `topo`: tries every distinct
+    /// degree of parallelism up to `topo.cores` and keeps the fastest.
+    pub fn simulate_layer_cluster(
+        &mut self,
+        l: &LayerConfig,
+        topo: &ClusterTopology,
+    ) -> Result<ClusterLayerResult, SimError> {
+        let mut tried: HashSet<u32> = HashSet::new();
+        let mut best: Option<ClusterLayerResult> = None;
+        for k in 1..=topo.cores {
+            let plan = ShardPlan::plan(l, k);
+            if !tried.insert(plan.active_cores()) {
+                continue; // same degree of parallelism already evaluated
+            }
+            let cand = self.eval_plan(topo, &plan)?;
+            if best.as_ref().map_or(true, |b| cand.cycles < b.cycles) {
+                best = Some(cand);
+            }
+        }
+        Ok(best.expect("topology has at least one core"))
+    }
+}
+
+/// Exact external-memory traffic (bytes moved over the VLSU port) of one
+/// DIMC-path layer, mirroring the mapper's emitted loads/stores
+/// (`compiler::mapper`): per-(group, tile) weight row images, the
+/// per-patch activation slice, psum spill/reload for chained tiles, and
+/// the nibble-packed output write-back. `DL.*`/`DC.*` traffic is
+/// VRF-internal and does not touch the bus.
+pub fn layer_mem_bytes(l: &LayerConfig, p: Precision) -> u64 {
+    let bits = p.bits() as u64;
+    let patches = l.patches();
+    let tiles = l.tiles(p) as u64;
+    let groups = l.groups() as u64;
+    let k_pad = l.k_pad(p) as u64;
+    let ept = elems_per_tile(p) as u64;
+    let rows = DIMC_ROWS as u64;
+
+    // Weight row images: one 128-byte image per (active row, tile).
+    let mut bytes = l.och as u64 * tiles * DIMC_ROW_BYTES as u64;
+
+    for g in 0..groups {
+        let rows_g = (l.och as u64 - g * rows).min(rows);
+        let half_batches = rows_g.div_ceil(16);
+        // Per-patch psum spill / output bytes across the half-batches.
+        let mut psum = 0u64;
+        let mut outb = 0u64;
+        for h in 0..half_batches {
+            let rows_h = (rows_g - h * 16).min(16);
+            // e32/m4 accesses: 32 bytes per register-quad of psums.
+            psum += rows_h.min(8).div_ceil(4) * 32;
+            // final tile stores 16 nibble-packed results = 8 bytes.
+            outb += 8;
+        }
+        for t in 0..tiles {
+            let slice = (k_pad - t * ept).min(ept) * bits / 8;
+            let first = t == 0;
+            let last = t == tiles - 1;
+            let mut per_patch = slice;
+            if !first {
+                per_patch += psum; // reload chained partial sums
+            }
+            per_patch += if last { outb } else { psum }; // write-back
+            bytes += per_patch * patches;
+        }
+    }
+    bytes
+}
+
+/// Run `l` functionally on the cluster: shard, execute every shard
+/// through the bit-exact single-core driver on its tensor slice, and
+/// stitch the outputs into the parent's dense `[oh][ow][och]` order.
+///
+/// `acts` is the parent's dense `[ih][iw][ich]` activation tensor and
+/// `wts` its dense `[och][kh][kw][ich]` weights, exactly as
+/// [`run_functional`] takes them. The result is bit-identical to the
+/// single-core run by construction *and* by test.
+pub fn run_functional_cluster(
+    l: &LayerConfig,
+    topo: &ClusterTopology,
+    acts: &[i8],
+    wts: &[i8],
+    shift: u8,
+) -> Result<Vec<u8>, SimError> {
+    let plan = ShardPlan::plan(l, topo.cores);
+    match plan.strategy {
+        ShardStrategy::OutputChannels => stitch_channel_shards(l, &plan, acts, wts, shift),
+        ShardStrategy::Rows => stitch_row_shards(l, &plan, acts, wts, shift),
+    }
+}
+
+fn stitch_channel_shards(
+    l: &LayerConfig,
+    plan: &ShardPlan,
+    acts: &[i8],
+    wts: &[i8],
+    shift: u8,
+) -> Result<Vec<u8>, SimError> {
+    let k = (l.kh * l.kw * l.ich) as usize; // weights per output channel
+    let patches = l.patches() as usize;
+    let och = l.och as usize;
+    let mut out = vec![0u8; patches * och];
+    for s in &plan.shards {
+        let (lo, hi) = (s.och_range.0 as usize, s.och_range.1 as usize);
+        let shard_wts = &wts[lo * k..hi * k];
+        let run = run_functional(&s.layer, Engine::Dimc, acts, shard_wts, shift)?;
+        let span = hi - lo;
+        debug_assert_eq!(run.outputs.len(), patches * span);
+        for p in 0..patches {
+            out[p * och + lo..p * och + hi]
+                .copy_from_slice(&run.outputs[p * span..(p + 1) * span]);
+        }
+    }
+    Ok(out)
+}
+
+fn stitch_row_shards(
+    l: &LayerConfig,
+    plan: &ShardPlan,
+    acts: &[i8],
+    wts: &[i8],
+    shift: u8,
+) -> Result<Vec<u8>, SimError> {
+    // Materialize the zero-padded activation tensor once; each shard's
+    // input band is then a contiguous row slice (its layer has pad = 0).
+    let ihp = (l.ih + 2 * l.pad) as usize;
+    let iwp = (l.iw + 2 * l.pad) as usize;
+    let ich = l.ich as usize;
+    let mut padded = vec![0i8; ihp * iwp * ich];
+    for y in 0..l.ih as usize {
+        let src = y * l.iw as usize * ich;
+        let dst = ((y + l.pad as usize) * iwp + l.pad as usize) * ich;
+        let row = l.iw as usize * ich;
+        padded[dst..dst + row].copy_from_slice(&acts[src..src + row]);
+    }
+
+    let mut out = Vec::with_capacity((l.patches() * l.och as u64) as usize);
+    for s in &plan.shards {
+        let y0 = (s.row_range.0 * l.stride) as usize;
+        let band_rows = s.layer.ih as usize;
+        debug_assert!(y0 + band_rows <= ihp);
+        let band = &padded[y0 * iwp * ich..(y0 + band_rows) * iwp * ich];
+        let run = run_functional(&s.layer, Engine::Dimc, band, wts, shift)?;
+        debug_assert_eq!(
+            run.outputs.len() as u64,
+            (s.row_range.1 - s.row_range.0) as u64 * l.ow() as u64 * l.och as u64
+        );
+        out.extend_from_slice(&run.outputs);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::pack::{synth_acts, synth_wts};
+    use crate::coordinator::driver::simulate_layer;
+
+    fn topo(cores: u32) -> ClusterTopology {
+        ClusterTopology::from_arch(cores, &Arch::default())
+    }
+
+    #[test]
+    fn one_core_cluster_matches_single_core_cycles_exactly() {
+        let layers = [
+            LayerConfig::conv("a", 64, 256, 3, 3, 14, 14, 1, 1),
+            LayerConfig::conv("b", 3, 64, 7, 7, 56, 56, 2, 3),
+            LayerConfig::fc("c", 2048, 1000),
+        ];
+        let mut sim = ClusterSim::new(Arch::default(), Precision::Int4);
+        for l in &layers {
+            let single = simulate_layer(l, Engine::Dimc).unwrap();
+            let clustered = sim.simulate_layer_cluster(l, &topo(1)).unwrap();
+            assert_eq!(clustered.cycles, single.cycles, "{}", l.name);
+            assert_eq!(clustered.cores_used, 1);
+            assert_eq!(clustered.contention_cycles, 0);
+            assert_eq!(clustered.barrier_cycles, 0);
+        }
+    }
+
+    #[test]
+    fn grouped_layer_speeds_up_and_stays_monotone() {
+        let l = LayerConfig::conv("m", 256, 256, 3, 3, 14, 14, 1, 1); // 8 groups
+        let mut sim = ClusterSim::new(Arch::default(), Precision::Int4);
+        let mut prev = u64::MAX;
+        for n in [1u32, 2, 4, 8] {
+            let r = sim.simulate_layer_cluster(&l, &topo(n)).unwrap();
+            assert!(r.cycles <= prev, "N={n} regressed: {} > {prev}", r.cycles);
+            prev = r.cycles;
+        }
+        let r8 = sim.simulate_layer_cluster(&l, &topo(8)).unwrap();
+        let r1 = sim.simulate_layer_cluster(&l, &topo(1)).unwrap();
+        assert!(
+            (r1.cycles as f64) / (r8.cycles as f64) > 2.0,
+            "8 cores only {:.2}x faster",
+            r1.cycles as f64 / r8.cycles as f64
+        );
+    }
+
+    #[test]
+    fn channel_sharded_functional_is_bit_identical() {
+        let l = LayerConfig::conv("f", 16, 96, 2, 2, 6, 6, 1, 0); // 3 groups
+        let acts = synth_acts(&l, Precision::Int4, 0xC0FFEE);
+        let wts = synth_wts(&l, Precision::Int4, 0xC0FFEE);
+        let single = run_functional(&l, Engine::Dimc, &acts, &wts, 4).unwrap().outputs;
+        for n in [2u32, 3, 4] {
+            let clustered = run_functional_cluster(&l, &topo(n), &acts, &wts, 4).unwrap();
+            assert_eq!(clustered, single, "N={n}");
+        }
+    }
+
+    #[test]
+    fn row_sharded_functional_is_bit_identical() {
+        // 1 group, 7 output rows, padding + stride exercised.
+        let l = LayerConfig::conv("r", 8, 16, 3, 3, 13, 13, 2, 1);
+        assert_eq!(ShardPlan::plan(&l, 4).strategy, ShardStrategy::Rows);
+        let acts = synth_acts(&l, Precision::Int4, 0xF00D);
+        let wts = synth_wts(&l, Precision::Int4, 0xF00D);
+        let single = run_functional(&l, Engine::Dimc, &acts, &wts, 4).unwrap().outputs;
+        for n in [2u32, 4, 7] {
+            let clustered = run_functional_cluster(&l, &topo(n), &acts, &wts, 4).unwrap();
+            assert_eq!(clustered, single, "N={n}");
+        }
+    }
+
+    #[test]
+    fn mem_bytes_scale_with_layer_size() {
+        let small = LayerConfig::conv("s", 16, 32, 1, 1, 4, 4, 1, 0);
+        let big = LayerConfig::conv("b", 64, 256, 3, 3, 14, 14, 1, 1);
+        let bs = layer_mem_bytes(&small, Precision::Int4);
+        let bb = layer_mem_bytes(&big, Precision::Int4);
+        assert!(bs > 0);
+        assert!(bb > 100 * bs, "big layer traffic {bb} vs small {bs}");
+        // weight images alone: och * tiles * 128 bytes is a lower bound
+        assert!(bb >= 256 * big.tiles(Precision::Int4) as u64 * 128);
+    }
+
+    #[test]
+    fn contention_kicks_in_on_a_narrow_bus() {
+        let l = LayerConfig::conv("c", 256, 256, 3, 3, 14, 14, 1, 1);
+        let mut narrow = Arch::default();
+        narrow.cluster_bus_bytes = 1; // starve the shared bus
+        let mut sim_n = ClusterSim::new(narrow, Precision::Int4);
+        let t = ClusterTopology::from_arch(8, &narrow);
+        let r = sim_n.simulate_layer_cluster(&l, &t).unwrap();
+        // even starved, never worse than single-core (k = 1 candidate)
+        let single = simulate_layer(&l, Engine::Dimc).unwrap();
+        assert!(r.cycles <= single.cycles);
+    }
+}

@@ -1,0 +1,48 @@
+//! Multi-core DIMC scale-out: N DIMC-enhanced vector cores executing one
+//! network cooperatively.
+//!
+//! The paper evaluates a single DIMC tile inside a single vector pipeline
+//! and frames the design as "a scalable and efficient solution"; this
+//! module builds the scale-out story on top of the single-core simulator,
+//! following the cluster organizations of the related work (Garofalo et
+//! al., arXiv:2201.01089 — eight IMC-coupled cores sharding DNN layers;
+//! Caon et al., arXiv:2406.14263 — multi-unit near-memory scaling):
+//!
+//! * [`topology`] — the cluster description: core count, shared-bus
+//!   contention model and barrier-synchronization cost (knobs on
+//!   [`crate::arch::Arch`]);
+//! * [`shard`] — the static partitioner: splits one
+//!   [`crate::compiler::layer::LayerConfig`] across cores by
+//!   output-channel *group* (each core's DIMC tile holds a disjoint
+//!   32-kernel group set), falling back to output-row sharding for
+//!   group-poor layers;
+//! * [`exec`] — the execution engine: drives one existing
+//!   [`crate::pipeline::Core`] simulation per shard and reduces the
+//!   per-shard cycle counts under the contention + barrier model. Also
+//!   hosts the bit-exact functional cluster driver whose stitched outputs
+//!   must equal single-core
+//!   [`crate::coordinator::driver::run_functional`] exactly;
+//! * [`sched`] — the static network scheduler: layer-parallel sharding
+//!   (every layer split across all cores, barrier per layer) and
+//!   image-parallel batching (B images pipelined across cores), picking
+//!   whichever is faster for the requested (cores, batch);
+//! * [`scaling`] — speedup-vs-N / efficiency-vs-N curves rendered through
+//!   [`crate::metrics::report`].
+//!
+//! Invariants (enforced by `rust/tests/prop_cluster.rs` and the module
+//! tests): a 1-core cluster reproduces single-core cycle counts exactly;
+//! shards are disjoint and cover the layer; sharded functional outputs
+//! are bit-identical to the single-core driver; cluster throughput is
+//! monotonically non-decreasing in the core count.
+
+pub mod topology;
+pub mod shard;
+pub mod exec;
+pub mod sched;
+pub mod scaling;
+
+pub use exec::{run_functional_cluster, ClusterLayerResult, ClusterSim};
+pub use sched::{ClusterMode, NetworkSchedule};
+pub use scaling::{scaling_curve, ScalingPoint};
+pub use shard::{Shard, ShardPlan, ShardStrategy};
+pub use topology::ClusterTopology;

@@ -1,0 +1,146 @@
+//! Scale-out scaling curves: throughput, speedup and parallel efficiency
+//! versus core count, rendered through the shared `metrics::report`
+//! table formatter (this is the cluster counterpart of the single-core
+//! `metrics::scaling` projection — here every point is *simulated*, not
+//! projected).
+
+use super::exec::ClusterSim;
+use super::sched::ClusterMode;
+use super::topology::ClusterTopology;
+use crate::arch::Arch;
+use crate::compiler::layer::LayerConfig;
+use crate::dimc::Precision;
+use crate::metrics::report::render_table;
+use crate::pipeline::core::SimError;
+
+/// One point of a scaling curve.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalingPoint {
+    pub cores: u32,
+    pub batch: u32,
+    pub mode: ClusterMode,
+    pub cycles: u64,
+    pub ops: u64,
+    pub gops: f64,
+    /// Speedup versus the 1-core schedule of the same batch.
+    pub speedup: f64,
+    /// Parallel efficiency: `speedup / cores`.
+    pub efficiency: f64,
+    /// Core clock the point was simulated at (drives the ms column).
+    pub clock_hz: f64,
+}
+
+impl ScalingPoint {
+    /// Batch latency in milliseconds at the simulated clock.
+    pub fn ms(&self) -> f64 {
+        self.cycles as f64 / self.clock_hz * 1e3
+    }
+}
+
+/// Simulate `layers` with batch size `batch` on every core count in
+/// `core_counts` and fold the results into a curve. All points share one
+/// shard-simulation cache, so the sweep costs little more than its
+/// largest point.
+pub fn scaling_curve(
+    model: &str,
+    layers: &[LayerConfig],
+    arch: Arch,
+    core_counts: &[u32],
+    batch: u32,
+) -> Result<Vec<ScalingPoint>, SimError> {
+    let mut sim = ClusterSim::new(arch, Precision::Int4);
+    scaling_curve_with(&mut sim, model, layers, core_counts, batch)
+}
+
+/// As [`scaling_curve`], reusing the caller's [`ClusterSim`] (and its warm
+/// shard-simulation cache).
+pub fn scaling_curve_with(
+    sim: &mut ClusterSim,
+    model: &str,
+    layers: &[LayerConfig],
+    core_counts: &[u32],
+    batch: u32,
+) -> Result<Vec<ScalingPoint>, SimError> {
+    let arch = sim.arch;
+    let base = sim.schedule(model, layers, &ClusterTopology::from_arch(1, &arch), batch)?;
+    let mut points = Vec::with_capacity(core_counts.len());
+    for &n in core_counts {
+        let s = sim.schedule(model, layers, &ClusterTopology::from_arch(n, &arch), batch)?;
+        let speedup = base.cycles as f64 / s.cycles as f64;
+        points.push(ScalingPoint {
+            cores: n.max(1),
+            batch,
+            mode: s.mode,
+            cycles: s.cycles,
+            ops: s.ops,
+            gops: s.gops(),
+            speedup,
+            efficiency: speedup / n.max(1) as f64,
+            clock_hz: s.clock_hz,
+        });
+    }
+    Ok(points)
+}
+
+/// Whether throughput never decreases as cores grow (points must be
+/// ordered by ascending core count).
+pub fn is_monotone(points: &[ScalingPoint]) -> bool {
+    points.windows(2).all(|w| w[1].gops >= w[0].gops - 1e-9)
+}
+
+/// Render a curve as an aligned text table.
+pub fn render(title: &str, points: &[ScalingPoint]) -> String {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{}", p.cores),
+                format!("{}", p.batch),
+                p.mode.as_str().to_string(),
+                format!("{}", p.cycles),
+                format!("{:.2}", p.ms()),
+                format!("{:.1}", p.gops),
+                format!("{:.2}x", p.speedup),
+                format!("{:.0}%", p.efficiency * 100.0),
+            ]
+        })
+        .collect();
+    render_table(
+        title,
+        &["cores", "batch", "mode", "cycles", "ms", "GOPS", "speedup", "eff"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> Vec<LayerConfig> {
+        vec![
+            LayerConfig::conv("a", 64, 128, 3, 3, 14, 14, 1, 1),
+            LayerConfig::conv("b", 128, 128, 1, 1, 14, 14, 1, 0),
+        ]
+    }
+
+    #[test]
+    fn curve_is_monotone_and_anchored_at_one() {
+        let pts = scaling_curve("net", &net(), Arch::default(), &[1, 2, 4, 8], 1).unwrap();
+        assert_eq!(pts.len(), 4);
+        assert!((pts[0].speedup - 1.0).abs() < 1e-12, "N=1 speedup must be 1.0");
+        assert!((pts[0].efficiency - 1.0).abs() < 1e-12);
+        assert!(is_monotone(&pts));
+        assert!(pts[3].speedup > 1.5, "8 cores only {:.2}x", pts[3].speedup);
+        for p in &pts {
+            assert!(p.efficiency <= 1.0 + 1e-9, "superlinear N={}", p.cores);
+        }
+    }
+
+    #[test]
+    fn rendered_table_has_all_points() {
+        let pts = scaling_curve("net", &net(), Arch::default(), &[1, 2], 1).unwrap();
+        let t = render("demo scaling", &pts);
+        assert!(t.contains("== demo scaling =="));
+        assert!(t.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,211 @@
+//! The static network scheduler: map a whole model (an ordered list of
+//! layers) and a batch of B images onto an N-core cluster.
+//!
+//! Two execution modes are evaluated and the faster one is chosen:
+//!
+//! * **layer-parallel** — every layer is sharded across the cluster
+//!   ([`ClusterSim::simulate_layer_cluster`]) with a barrier between
+//!   layers; a batch runs image after image. Best for B small and layers
+//!   with plenty of kernel groups.
+//! * **image-parallel** — each core runs the *whole* network on its own
+//!   image; B images drain in waves of up to N. No inter-core data
+//!   dependencies, one barrier per wave, but the concurrent full-network
+//!   streams share the cluster bus. Best for B >= N with enough bus.
+//!
+//! Both candidates are minimized over the usable degrees of parallelism,
+//! so the schedule is monotonically non-decreasing in throughput as cores
+//! are added — adding hardware can only help or be ignored.
+
+use super::exec::{ClusterLayerResult, ClusterSim};
+use super::topology::ClusterTopology;
+use crate::compiler::layer::LayerConfig;
+use crate::pipeline::core::SimError;
+
+/// Which execution mode the scheduler picked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterMode {
+    /// Shard every layer across the cores, barrier between layers.
+    LayerParallel,
+    /// One image per core, batch drains in waves.
+    ImageParallel,
+}
+
+impl ClusterMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ClusterMode::LayerParallel => "layer-parallel",
+            ClusterMode::ImageParallel => "image-parallel",
+        }
+    }
+}
+
+/// A scheduled network execution on a cluster.
+#[derive(Debug, Clone)]
+pub struct NetworkSchedule {
+    pub model: String,
+    pub cores: u32,
+    pub batch: u32,
+    pub mode: ClusterMode,
+    /// Per-layer cluster results of the layer-parallel candidate (the
+    /// per-layer view stays meaningful even when image-parallel wins: it
+    /// is the shard plan a single image would use).
+    pub layers: Vec<ClusterLayerResult>,
+    /// Total cluster cycles for the whole batch under `mode`.
+    pub cycles: u64,
+    /// Total operations of the whole batch.
+    pub ops: u64,
+    pub clock_hz: f64,
+}
+
+impl NetworkSchedule {
+    /// Batch throughput in GOPS.
+    pub fn gops(&self) -> f64 {
+        self.ops as f64 / (self.cycles as f64 / self.clock_hz) / 1e9
+    }
+
+    /// Batch latency in milliseconds.
+    pub fn ms(&self) -> f64 {
+        self.cycles as f64 / self.clock_hz * 1e3
+    }
+}
+
+impl ClusterSim {
+    /// Schedule `layers` (one image's network) with batch size `batch` on
+    /// `topo`, choosing the faster of layer-parallel sharding and
+    /// image-parallel batching.
+    pub fn schedule(
+        &mut self,
+        model: &str,
+        layers: &[LayerConfig],
+        topo: &ClusterTopology,
+        batch: u32,
+    ) -> Result<NetworkSchedule, SimError> {
+        let batch = batch.max(1);
+
+        // --- layer-parallel candidate ---
+        let mut per_layer = Vec::with_capacity(layers.len());
+        let mut lp_image_cycles = 0u64;
+        let mut image_ops = 0u64;
+        for l in layers {
+            let r = self.simulate_layer_cluster(l, topo)?;
+            lp_image_cycles += r.cycles;
+            image_ops += r.ops;
+            per_layer.push(r);
+        }
+        let lp_cycles = lp_image_cycles * batch as u64;
+
+        // --- image-parallel candidate: single-core network per image ---
+        let mut net_cycles = 0u64;
+        let mut net_bytes = 0u64;
+        for l in layers {
+            let (c, b) = self.shard_sim(l)?;
+            net_cycles += c;
+            net_bytes += b;
+        }
+        let mut ip_cycles = u64::MAX;
+        for k in 1..=topo.cores.min(batch) {
+            let full_waves = (batch / k) as u64;
+            let rem = batch % k;
+            let wave = |n: u32| -> u64 {
+                net_cycles
+                    + topo.contention(n, n as u64 * net_bytes, net_cycles)
+                    + topo.barrier(n)
+            };
+            let mut total = full_waves * wave(k);
+            if rem > 0 {
+                total += wave(rem);
+            }
+            ip_cycles = ip_cycles.min(total);
+        }
+
+        let (mode, cycles) = if ip_cycles < lp_cycles {
+            (ClusterMode::ImageParallel, ip_cycles)
+        } else {
+            (ClusterMode::LayerParallel, lp_cycles)
+        };
+        Ok(NetworkSchedule {
+            model: model.to_string(),
+            cores: topo.cores,
+            batch,
+            mode,
+            layers: per_layer,
+            cycles,
+            ops: image_ops * batch as u64,
+            clock_hz: self.arch.clock_hz,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+    use crate::coordinator::driver::{simulate_layer, Engine};
+    use crate::dimc::Precision;
+
+    fn tiny_net() -> Vec<LayerConfig> {
+        vec![
+            LayerConfig::conv("l1", 16, 64, 3, 3, 8, 8, 1, 1),
+            LayerConfig::conv("l2", 64, 64, 1, 1, 8, 8, 1, 0),
+            LayerConfig::fc("l3", 8 * 8 * 64, 10),
+        ]
+    }
+
+    fn topo(cores: u32) -> ClusterTopology {
+        ClusterTopology::from_arch(cores, &Arch::default())
+    }
+
+    #[test]
+    fn one_core_schedule_is_the_sum_of_single_core_layers() {
+        let net = tiny_net();
+        let want: u64 =
+            net.iter().map(|l| simulate_layer(l, Engine::Dimc).unwrap().cycles).sum();
+        let mut sim = ClusterSim::new(Arch::default(), Precision::Int4);
+        let s = sim.schedule("tiny", &net, &topo(1), 1).unwrap();
+        assert_eq!(s.cycles, want);
+        assert_eq!(s.mode, ClusterMode::LayerParallel);
+        assert_eq!(s.ops, net.iter().map(|l| l.ops()).sum::<u64>());
+    }
+
+    #[test]
+    fn throughput_is_monotone_in_cores() {
+        let net = tiny_net();
+        let mut sim = ClusterSim::new(Arch::default(), Precision::Int4);
+        for batch in [1u32, 4] {
+            let mut prev = u64::MAX;
+            for n in [1u32, 2, 4, 8] {
+                let s = sim.schedule("tiny", &net, &topo(n), batch).unwrap();
+                assert!(
+                    s.cycles <= prev,
+                    "batch {batch}: N={n} regressed {} > {prev}",
+                    s.cycles
+                );
+                prev = s.cycles;
+            }
+        }
+    }
+
+    #[test]
+    fn batching_prefers_image_parallel_when_it_wins() {
+        // A group-poor network shards badly; with B = N images the
+        // image-parallel schedule approaches N-fold throughput.
+        let net = vec![LayerConfig::conv("np", 16, 16, 3, 3, 8, 8, 1, 1)];
+        let mut sim = ClusterSim::new(Arch::default(), Precision::Int4);
+        let s1 = sim.schedule("np", &net, &topo(1), 4).unwrap();
+        let s4 = sim.schedule("np", &net, &topo(4), 4).unwrap();
+        assert!(s4.cycles < s1.cycles);
+        let speedup = s1.cycles as f64 / s4.cycles as f64;
+        assert!(speedup > 1.5, "batched speedup only {speedup:.2}x");
+    }
+
+    #[test]
+    fn batch_multiplies_ops_not_image_cycles_at_one_core() {
+        let net = tiny_net();
+        let mut sim = ClusterSim::new(Arch::default(), Precision::Int4);
+        let s1 = sim.schedule("tiny", &net, &topo(1), 1).unwrap();
+        let s3 = sim.schedule("tiny", &net, &topo(1), 3).unwrap();
+        assert_eq!(s3.cycles, 3 * s1.cycles);
+        assert_eq!(s3.ops, 3 * s1.ops);
+        assert!((s3.gops() - s1.gops()).abs() < 1e-9);
+    }
+}

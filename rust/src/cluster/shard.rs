@@ -1,0 +1,260 @@
+//! The static layer partitioner: split one layer across N cores so that
+//! every shard is itself a well-formed [`LayerConfig`] the existing
+//! single-core compiler + simulator can run unmodified.
+//!
+//! Two strategies, chosen by the layer's available parallelism:
+//!
+//! * **Output-channel sharding** (primary): each core's DIMC tile holds a
+//!   disjoint set of 32-kernel *groups*. Shard boundaries land on group
+//!   boundaries so no core's tile is fragmented; every core sweeps every
+//!   patch but computes only its channel span. Weight traffic splits N
+//!   ways; activation traffic is replicated per core (each core reads the
+//!   full patch stream) — the shared-bus model charges exactly that.
+//! * **Output-row sharding** (fallback for group-poor layers, e.g.
+//!   depthwise-narrow or already-grouped-out layers with `och <= 32`):
+//!   each core computes a contiguous band of output rows over *all*
+//!   channels. The shard layer re-expresses the parent with explicit
+//!   padding (`pad = 0`, pre-padded input geometry) so a row band is a
+//!   plain slice of the padded activation tensor; weights are replicated
+//!   per core.
+//!
+//! Invariants (property-tested in `rust/tests/prop_cluster.rs`): shards
+//! are disjoint, cover all output channels and rows, and per-shard
+//! [`LayerConfig::ops`] sums exactly to the parent's.
+
+use crate::arch::DIMC_ROWS;
+use crate::compiler::layer::LayerConfig;
+
+/// How a plan splits its parent layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Disjoint output-channel (kernel-group) spans per core.
+    OutputChannels,
+    /// Disjoint output-row bands per core (channels replicated).
+    Rows,
+}
+
+/// One core's slice of a layer.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// Index of the core this shard is assigned to.
+    pub core: u32,
+    /// The sub-layer this core runs through the unmodified single-core
+    /// compiler + simulator.
+    pub layer: LayerConfig,
+    /// Output channels `[lo, hi)` of the *parent* layer this shard covers.
+    pub och_range: (u32, u32),
+    /// Output rows `[lo, hi)` of the *parent* layer this shard covers.
+    pub row_range: (u32, u32),
+}
+
+/// A partitioning of one layer over the cluster.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub parent: LayerConfig,
+    pub strategy: ShardStrategy,
+    pub shards: Vec<Shard>,
+}
+
+impl ShardPlan {
+    /// Partition `l` over up to `cores` cores. The plan may use fewer
+    /// cores than requested when the layer has less parallelism than the
+    /// cluster (e.g. a single-group FC layer yields one shard).
+    pub fn plan(l: &LayerConfig, cores: u32) -> ShardPlan {
+        let cores = cores.max(1);
+        let groups = l.groups();
+        let oh = l.oh();
+        if cores == 1 {
+            return Self::single(l);
+        }
+        if groups >= cores {
+            by_channels(l, cores)
+        } else if oh >= cores {
+            by_rows(l, cores)
+        } else if groups >= oh {
+            if groups > 1 {
+                by_channels(l, groups)
+            } else {
+                Self::single(l)
+            }
+        } else {
+            // oh > groups and 2 <= oh < cores
+            by_rows(l, oh)
+        }
+    }
+
+    /// The degenerate one-shard plan: the shard *is* the parent layer, so
+    /// a 1-core cluster simulates the identical instruction stream.
+    fn single(l: &LayerConfig) -> ShardPlan {
+        ShardPlan {
+            parent: l.clone(),
+            strategy: ShardStrategy::OutputChannels,
+            shards: vec![Shard {
+                core: 0,
+                layer: l.clone(),
+                och_range: (0, l.och),
+                row_range: (0, l.oh()),
+            }],
+        }
+    }
+
+    /// Cores the plan actually uses (`<=` the requested count).
+    pub fn active_cores(&self) -> u32 {
+        self.shards.len() as u32
+    }
+
+    /// Sum of per-shard operation counts — must equal the parent's
+    /// [`LayerConfig::ops`] for any valid plan.
+    pub fn ops_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.layer.ops()).sum()
+    }
+}
+
+/// Split output channels on 32-kernel group boundaries, `n <= l.groups()`.
+fn by_channels(l: &LayerConfig, n: u32) -> ShardPlan {
+    let groups = l.groups();
+    debug_assert!(n >= 1 && n <= groups);
+    let base = groups / n;
+    let rem = groups % n;
+    let rows = DIMC_ROWS as u32;
+    let mut shards = Vec::with_capacity(n as usize);
+    let mut g0 = 0u32;
+    for i in 0..n {
+        let gs = base + u32::from(i < rem);
+        let lo = g0 * rows;
+        let hi = l.och.min((g0 + gs) * rows);
+        let mut sl = l.clone();
+        sl.name = format!("{}.c{i}", l.name);
+        sl.och = hi - lo;
+        shards.push(Shard { core: i, layer: sl, och_range: (lo, hi), row_range: (0, l.oh()) });
+        g0 += gs;
+    }
+    ShardPlan { parent: l.clone(), strategy: ShardStrategy::OutputChannels, shards }
+}
+
+/// Split output rows into contiguous bands, `2 <= n <= l.oh()`. Each shard
+/// layer uses `pad = 0` with pre-padded input geometry so its activation
+/// band is a contiguous row slice of the parent's padded tensor.
+fn by_rows(l: &LayerConfig, n: u32) -> ShardPlan {
+    let oh = l.oh();
+    debug_assert!(n >= 2 && n <= oh);
+    let base = oh / n;
+    let rem = oh % n;
+    let iwp = l.iw + 2 * l.pad;
+    let mut shards = Vec::with_capacity(n as usize);
+    let mut r0 = 0u32;
+    for i in 0..n {
+        let rows = base + u32::from(i < rem);
+        let r1 = r0 + rows;
+        let mut sl = l.clone();
+        sl.name = format!("{}.r{i}", l.name);
+        sl.pad = 0;
+        sl.iw = iwp;
+        // Input rows feeding output rows [r0, r1): a contiguous band of
+        // (rows-1)*stride + kh padded rows starting at r0*stride.
+        sl.ih = (rows - 1) * l.stride + l.kh;
+        shards.push(Shard { core: i, layer: sl, och_range: (0, l.och), row_range: (r0, r1) });
+        r0 = r1;
+    }
+    ShardPlan { parent: l.clone(), strategy: ShardStrategy::Rows, shards }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouped_layer_shards_by_channels() {
+        // och = 256 -> 8 groups
+        let l = LayerConfig::conv("t", 64, 256, 3, 3, 14, 14, 1, 1);
+        let p = ShardPlan::plan(&l, 4);
+        assert_eq!(p.strategy, ShardStrategy::OutputChannels);
+        assert_eq!(p.active_cores(), 4);
+        assert_eq!(p.ops_total(), l.ops());
+        // contiguous cover of [0, och)
+        let mut at = 0;
+        for s in &p.shards {
+            assert_eq!(s.och_range.0, at);
+            assert_eq!(s.layer.och, s.och_range.1 - s.och_range.0);
+            assert_eq!(s.layer.och % 32, 0, "group-aligned");
+            at = s.och_range.1;
+        }
+        assert_eq!(at, l.och);
+    }
+
+    #[test]
+    fn uneven_groups_stay_balanced() {
+        // och = 96 -> 3 groups over 2 cores -> 2 + 1 groups
+        let l = LayerConfig::conv("t", 32, 96, 2, 2, 8, 8, 1, 0);
+        let p = ShardPlan::plan(&l, 2);
+        assert_eq!(p.shards[0].layer.och, 64);
+        assert_eq!(p.shards[1].layer.och, 32);
+        assert_eq!(p.ops_total(), l.ops());
+    }
+
+    #[test]
+    fn ragged_last_group_keeps_true_channel_count() {
+        // och = 40 -> 2 groups (32 + 8) over 2 cores
+        let l = LayerConfig::conv("t", 16, 40, 1, 1, 6, 6, 1, 0);
+        let p = ShardPlan::plan(&l, 2);
+        assert_eq!(p.shards[0].layer.och, 32);
+        assert_eq!(p.shards[1].layer.och, 8);
+        assert_eq!(p.ops_total(), l.ops());
+    }
+
+    #[test]
+    fn group_poor_layer_falls_back_to_rows() {
+        // och = 16 -> 1 group; oh = 8 -> row bands
+        let l = LayerConfig::conv("t", 16, 16, 3, 3, 8, 8, 1, 1);
+        let p = ShardPlan::plan(&l, 4);
+        assert_eq!(p.strategy, ShardStrategy::Rows);
+        assert_eq!(p.active_cores(), 4);
+        assert_eq!(p.ops_total(), l.ops());
+        let mut at = 0;
+        for s in &p.shards {
+            assert_eq!(s.row_range.0, at);
+            assert_eq!(s.layer.oh(), s.row_range.1 - s.row_range.0);
+            assert_eq!(s.layer.ow(), l.ow());
+            assert_eq!(s.layer.och, l.och);
+            at = s.row_range.1;
+        }
+        assert_eq!(at, l.oh());
+    }
+
+    #[test]
+    fn strided_row_bands_compute_their_rows() {
+        let l = LayerConfig::conv("t", 8, 8, 3, 3, 11, 11, 2, 1); // oh = 6
+        let p = ShardPlan::plan(&l, 3);
+        assert_eq!(p.strategy, ShardStrategy::Rows);
+        for s in &p.shards {
+            assert_eq!(s.layer.oh(), 2);
+            assert_eq!(s.layer.stride, l.stride);
+        }
+        assert_eq!(p.ops_total(), l.ops());
+    }
+
+    #[test]
+    fn fc_with_few_groups_caps_active_cores() {
+        let l = LayerConfig::fc("fc", 512, 64); // 2 groups, oh = 1
+        let p = ShardPlan::plan(&l, 8);
+        assert_eq!(p.strategy, ShardStrategy::OutputChannels);
+        assert_eq!(p.active_cores(), 2);
+        assert_eq!(p.ops_total(), l.ops());
+    }
+
+    #[test]
+    fn no_parallelism_yields_one_shard() {
+        let l = LayerConfig::fc("fc", 64, 10); // 1 group, oh = 1
+        let p = ShardPlan::plan(&l, 8);
+        assert_eq!(p.active_cores(), 1);
+        assert_eq!(p.shards[0].layer, l);
+    }
+
+    #[test]
+    fn one_core_plan_is_the_parent_layer() {
+        let l = LayerConfig::conv("t", 64, 256, 3, 3, 14, 14, 1, 1);
+        let p = ShardPlan::plan(&l, 1);
+        assert_eq!(p.active_cores(), 1);
+        assert_eq!(p.shards[0].layer, l);
+    }
+}

@@ -1,0 +1,112 @@
+//! Cluster topology: core count plus the two costs that distinguish a
+//! cluster from N independent cores — the shared memory interconnect and
+//! barrier synchronization.
+//!
+//! The model is deliberately first-order, matching the granularity of the
+//! paper's single-core simulator (fixed-latency memory, no DMA):
+//!
+//! * **contention** — every core keeps its private `mem_bus_bytes`-wide
+//!   port into its VLSU, but all ports drain through one shared bus of
+//!   `bus_bytes_per_cycle`. Over an execution window of `span` cycles the
+//!   bus moves at most `bus_bytes_per_cycle * span`; any excess aggregate
+//!   traffic serializes and extends the window.
+//! * **barrier** — a tree barrier across the active cores costs
+//!   `barrier_cycles * ceil(log2(active))`.
+//!
+//! Both costs are identically zero for a single active core, which is what
+//! makes a 1-core cluster bit-identical (in cycles) to the single-core
+//! simulator — the correctness anchor of the whole subsystem.
+
+use crate::arch::Arch;
+
+/// Static description of the cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterTopology {
+    /// Number of DIMC-enhanced cores available.
+    pub cores: u32,
+    /// Shared-bus bandwidth in bytes per core cycle.
+    pub bus_bytes_per_cycle: u64,
+    /// Base cost of one barrier stage (see [`ClusterTopology::barrier`]).
+    pub barrier_cycles: u64,
+}
+
+impl ClusterTopology {
+    /// Topology with `cores` cores and the default [`Arch`] knobs.
+    pub fn new(cores: u32) -> Self {
+        Self::from_arch(cores, &Arch::default())
+    }
+
+    /// Topology with `cores` cores, taking the shared-bus and barrier
+    /// parameters from `arch` (`cluster_bus_bytes`,
+    /// `cluster_barrier_cycles`).
+    pub fn from_arch(cores: u32, arch: &Arch) -> Self {
+        ClusterTopology {
+            cores: cores.max(1),
+            bus_bytes_per_cycle: arch.cluster_bus_bytes.max(1),
+            barrier_cycles: arch.cluster_barrier_cycles,
+        }
+    }
+
+    /// Cycles one cluster-wide barrier costs with `active` participating
+    /// cores: a log-depth combining tree, free when nobody waits.
+    pub fn barrier(&self, active: u32) -> u64 {
+        if active <= 1 {
+            return 0;
+        }
+        let depth = (u32::BITS - (active - 1).leading_zeros()) as u64; // ceil(log2)
+        self.barrier_cycles * depth
+    }
+
+    /// Extra serialization cycles when `active` cores move `total_bytes`
+    /// of memory traffic during an execution window of `span` cycles.
+    pub fn contention(&self, active: u32, total_bytes: u64, span: u64) -> u64 {
+        if active <= 1 {
+            return 0;
+        }
+        let bus = self.bus_bytes_per_cycle.max(1);
+        let capacity = bus.saturating_mul(span);
+        total_bytes.saturating_sub(capacity).div_ceil(bus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_core_pays_nothing() {
+        let t = ClusterTopology::new(1);
+        assert_eq!(t.barrier(1), 0);
+        assert_eq!(t.contention(1, u64::MAX, 1), 0);
+    }
+
+    #[test]
+    fn barrier_grows_log2() {
+        let t = ClusterTopology::new(8);
+        let b = t.barrier_cycles;
+        assert_eq!(t.barrier(2), b);
+        assert_eq!(t.barrier(3), 2 * b);
+        assert_eq!(t.barrier(4), 2 * b);
+        assert_eq!(t.barrier(8), 3 * b);
+    }
+
+    #[test]
+    fn contention_charges_only_the_excess() {
+        let t = ClusterTopology { cores: 4, bus_bytes_per_cycle: 10, barrier_cycles: 0 };
+        // window capacity = 10 * 100 = 1000 bytes
+        assert_eq!(t.contention(4, 1000, 100), 0);
+        assert_eq!(t.contention(4, 1005, 100), 1); // ceil(5/10)
+        assert_eq!(t.contention(4, 2000, 100), 100);
+    }
+
+    #[test]
+    fn from_arch_picks_up_the_knobs() {
+        let mut a = Arch::default();
+        a.cluster_bus_bytes = 7;
+        a.cluster_barrier_cycles = 3;
+        let t = ClusterTopology::from_arch(0, &a);
+        assert_eq!(t.cores, 1); // clamped
+        assert_eq!(t.bus_bytes_per_cycle, 7);
+        assert_eq!(t.barrier_cycles, 3);
+    }
+}

@@ -34,6 +34,9 @@ pub fn usage() -> &'static str {
                --pad N --fc] one custom layer on both engines\n\
      energy    model-based energy estimate over ResNet-50 (future work §V)\n\
      tiles     multi-tile scaling projection (future work §III/§VI)\n\
+     cluster   [--cores N] [--batch B] [--model NAME] multi-core DIMC\n\
+               scale-out: shard/batch NAME (default resnet50) over 1..N\n\
+               cores (default 8) and report the scaling curve\n\
      asm       <file.s> assemble and run on the DIMC-enhanced core\n\
      trace     <file.s> run with a cycle-annotated pipeline trace"
 }
@@ -87,6 +90,7 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
         "simulate" => simulate(&flags),
         "energy" => energy(),
         "tiles" => tiles(),
+        "cluster" => cluster(&flags),
         "asm" => asm(args.get(1).map(String::as_str)),
         "trace" => trace(args.get(1).map(String::as_str)),
         "help" | "--help" | "-h" => {
@@ -395,6 +399,92 @@ fn tiles() -> Result<()> {
              totals[3], totals[0] as f64 / totals[3] as f64);
     println!("the shared in-order front end caps multi-tile gains — the paper's\n\
               single-tile focus on control efficiency is the right foundation");
+    Ok(())
+}
+
+fn cluster(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::arch::Arch;
+    use crate::cluster::exec::{run_functional_cluster, ClusterSim};
+    use crate::cluster::scaling::{is_monotone, render, scaling_curve_with};
+    use crate::cluster::topology::ClusterTopology;
+    use crate::compiler::pack::{synth_acts, synth_wts};
+    use crate::coordinator::driver::run_functional;
+    use crate::dimc::Precision;
+    use crate::workloads::zoo;
+
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("resnet50");
+    let Some(model) = zoo::model_by_name(model_name) else {
+        let names: Vec<&str> = zoo::all_models().iter().map(|m| m.name).collect();
+        bail!("unknown model `{model_name}`; available: {}", names.join(", "));
+    };
+    let cores = flag_u32(flags, "cores", 8)?.max(1);
+    let batch = flag_u32(flags, "batch", 1)?.max(1);
+    let arch = Arch::default();
+
+    // Sweep the powers of two up to the requested core count.
+    let mut ns = Vec::new();
+    let mut n = 1;
+    while n < cores {
+        ns.push(n);
+        n *= 2;
+    }
+    ns.push(cores);
+
+    println!(
+        "cluster scale-out: {} x {} DIMC-enhanced cores, batch {} \
+         (shared bus {} B/cyc, barrier {} cyc)",
+        model.name, cores, batch, arch.cluster_bus_bytes, arch.cluster_barrier_cycles
+    );
+    // One simulator for the whole subcommand: the sweep, the per-layer
+    // view and the cross-checks all share its shard-simulation cache.
+    let mut sim = ClusterSim::new(arch, Precision::Int4);
+    let points = scaling_curve_with(&mut sim, model.name, &model.layers, &ns, batch)
+        .map_err(sim_err)?;
+    println!("{}", render(&format!("{} cluster scaling", model.name), &points));
+
+    // Per-layer shard plan at the full core count (one image's view).
+    let topo = ClusterTopology::from_arch(cores, &arch);
+    let full = sim.schedule(model.name, &model.layers, &topo, batch).map_err(sim_err)?;
+    let sharded = full.layers.iter().filter(|r| r.cores_used > 1).count();
+    println!(
+        "mode: {} | {} of {} layers sharded across >1 core | batch latency {:.2} ms",
+        full.mode.as_str(),
+        sharded,
+        full.layers.len(),
+        full.ms()
+    );
+
+    // --- correctness cross-checks ---
+    // (a) a 1-core cluster must reproduce single-core cycles exactly
+    let single: u64 = model
+        .layers
+        .iter()
+        .map(|l| simulate_layer(l, Engine::Dimc).map(|r| r.cycles))
+        .sum::<std::result::Result<u64, _>>()
+        .map_err(sim_err)?;
+    let one = sim
+        .schedule(model.name, &model.layers, &ClusterTopology::from_arch(1, &arch), 1)
+        .map_err(sim_err)?;
+    anyhow::ensure!(
+        one.cycles == single,
+        "1-core cluster diverged: {} vs single-core {}",
+        one.cycles,
+        single
+    );
+    println!("check: 1-core cluster == single-core simulator ({single} cycles) OK");
+
+    // (b) sharded functional outputs must be bit-identical to single-core
+    let probe = LayerConfig::conv("probe", 16, 96, 2, 2, 6, 6, 1, 0);
+    let acts = synth_acts(&probe, Precision::Int4, 0xD1AC);
+    let wts = synth_wts(&probe, Precision::Int4, 0xD1AC);
+    let want = run_functional(&probe, Engine::Dimc, &acts, &wts, 4).map_err(sim_err)?.outputs;
+    let got = run_functional_cluster(&probe, &topo, &acts, &wts, 4).map_err(sim_err)?;
+    anyhow::ensure!(got == want, "sharded functional outputs diverged on {probe}");
+    println!("check: sharded functional outputs bit-identical ({} outputs) OK", want.len());
+
+    // (c) the curve must never lose throughput as cores are added
+    anyhow::ensure!(is_monotone(&points), "scaling curve lost throughput with more cores");
+    println!("check: throughput monotonically non-decreasing over {ns:?} cores OK");
     Ok(())
 }
 

@@ -1,6 +1,8 @@
 //! The paper's figures and tables as data (shared by the CLI and the
 //! bench binaries — each bench regenerates exactly one artefact).
 
+use crate::arch::Arch;
+use crate::cluster::scaling::{scaling_curve, ScalingPoint};
 use crate::compiler::layer::LayerConfig;
 use crate::coordinator::driver::{simulate_layer, Engine};
 use crate::metrics::area::AreaModel;
@@ -131,6 +133,19 @@ pub fn table1_this_work() -> Result<(Table1Row, f64), SimError> {
         },
         peak,
     ))
+}
+
+/// The cluster core counts of the scale-out figure.
+pub fn cluster_core_counts() -> Vec<u32> {
+    vec![1, 2, 4, 8]
+}
+
+/// Scale-out scaling figure: ResNet-50 simulated on 1/2/4/8 DIMC-enhanced
+/// cores (layer-parallel sharding, batch 1). Every point is a full
+/// cluster simulation, not a projection; throughput is monotonically
+/// non-decreasing in the core count by scheduler construction.
+pub fn cluster_scaling_points() -> Result<Vec<ScalingPoint>, SimError> {
+    scaling_curve("resnet50", &resnet::resnet50(), Arch::default(), &cluster_core_counts(), 1)
 }
 
 /// §V-D zoo summary per model.

@@ -30,6 +30,15 @@
 //!   simulator's functional outputs.
 //! * [`coordinator`] — the driver that runs whole networks through the
 //!   simulator and regenerates every figure and table of the paper.
+//! * [`cluster`] — the scale-out subsystem: N DIMC-enhanced cores
+//!   executing one network cooperatively. A static partitioner shards
+//!   layers by output-channel group (row-band fallback for group-poor
+//!   layers), a scheduler picks between layer-parallel sharding and
+//!   image-parallel batching, and an execution engine drives one
+//!   [`pipeline::core::Core`] simulation per shard, reducing the results
+//!   under a shared-bus contention + barrier model into cluster-level
+//!   cycles and speedup/efficiency-vs-N scaling curves
+//!   (`repro cluster --cores 8 --batch 1 --model resnet50`).
 //!
 //! ## Quickstart
 //!
@@ -52,5 +61,6 @@ pub mod workloads;
 pub mod metrics;
 pub mod runtime;
 pub mod coordinator;
+pub mod cluster;
 
 pub use arch::Arch;

@@ -1,0 +1,75 @@
+//! End-to-end cluster coverage: every model in the workload zoo must
+//! schedule and simulate on 1, 2, 4 and 8 cores, with throughput
+//! monotonically non-decreasing in the core count.
+//!
+//! One `ClusterSim` (one shard-simulation cache) is shared across all
+//! models and core counts — balanced shard plans produce at most two
+//! distinct shard shapes per plan and the zoo repeats shapes heavily, so
+//! the sweep stays tractable.
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::cluster::exec::ClusterSim;
+use dimc_rvv::cluster::sched::ClusterMode;
+use dimc_rvv::cluster::topology::ClusterTopology;
+use dimc_rvv::dimc::Precision;
+use dimc_rvv::workloads::zoo::all_models;
+
+#[test]
+fn every_zoo_model_runs_on_1_2_4_8_cores() {
+    let arch = Arch::default();
+    let mut sim = ClusterSim::new(arch, Precision::Int4);
+    for m in all_models() {
+        let mut prev_cycles = u64::MAX;
+        let mut one_core_cycles = 0u64;
+        for n in [1u32, 2, 4, 8] {
+            let topo = ClusterTopology::from_arch(n, &arch);
+            let s = sim
+                .schedule(m.name, &m.layers, &topo, 1)
+                .unwrap_or_else(|e| panic!("{} on {n} cores failed: {e}", m.name));
+            assert!(s.cycles > 0, "{} on {n} cores", m.name);
+            assert_eq!(s.layers.len(), m.layers.len(), "{} on {n} cores", m.name);
+            assert_eq!(
+                s.ops,
+                m.layers.iter().map(|l| l.ops()).sum::<u64>(),
+                "{} on {n} cores",
+                m.name
+            );
+            // more cores must never cost cycles (monotone throughput)
+            assert!(
+                s.cycles <= prev_cycles,
+                "{}: N={n} regressed to {} from {}",
+                m.name,
+                s.cycles,
+                prev_cycles
+            );
+            prev_cycles = s.cycles;
+            if n == 1 {
+                one_core_cycles = s.cycles;
+                assert_eq!(s.mode, ClusterMode::LayerParallel);
+            }
+        }
+        // 8 cores must actually help on every real network (each zoo
+        // model has grouped or tall layers somewhere).
+        assert!(
+            prev_cycles < one_core_cycles,
+            "{}: no scale-out benefit at 8 cores",
+            m.name
+        );
+    }
+}
+
+#[test]
+fn batched_inference_scales_on_a_zoo_model() {
+    let arch = Arch::default();
+    let mut sim = ClusterSim::new(arch, Precision::Int4);
+    let m = all_models().into_iter().find(|m| m.name == "resnet18").unwrap();
+    let b1 = sim
+        .schedule(m.name, &m.layers, &ClusterTopology::from_arch(1, &arch), 8)
+        .unwrap();
+    let b8 = sim
+        .schedule(m.name, &m.layers, &ClusterTopology::from_arch(8, &arch), 8)
+        .unwrap();
+    assert_eq!(b1.ops, b8.ops);
+    let speedup = b1.cycles as f64 / b8.cycles as f64;
+    assert!(speedup > 2.0, "batch-8 on 8 cores only {speedup:.2}x faster");
+}

@@ -10,6 +10,13 @@ use dimc_rvv::coordinator::verify::{
 use dimc_rvv::runtime::{artifacts_dir, Golden};
 
 fn have_artifacts() -> bool {
+    if !cfg!(feature = "pjrt") {
+        eprintln!(
+            "skipping golden test: PJRT backend not built \
+             (vendor the `xla` crate, then build with --features pjrt; see rust/Cargo.toml)"
+        );
+        return false;
+    }
     let ok = artifacts_dir().join("conv_golden.hlo.txt").exists();
     if !ok {
         eprintln!("skipping golden test: run `make artifacts` first");

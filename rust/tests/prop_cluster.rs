@@ -1,0 +1,161 @@
+//! Property tests for the cluster shard partitioner and execution engine:
+//! for *random* layer shapes and core counts,
+//!
+//! * shards are disjoint, cover every output channel (and every output
+//!   row under the row fallback), and per-shard `ops()` sums exactly to
+//!   the parent layer's `ops()`;
+//! * a 1-core cluster reproduces the single-core simulator's cycle count
+//!   exactly;
+//! * sharded functional outputs are bit-identical to the single-core
+//!   functional driver.
+//!
+//! Deterministic Lcg-driven generation, same style as `prop_mapper.rs`
+//! (proptest is not vendored in this offline image).
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::cluster::exec::{run_functional_cluster, ClusterSim};
+use dimc_rvv::cluster::shard::{ShardPlan, ShardStrategy};
+use dimc_rvv::cluster::topology::ClusterTopology;
+use dimc_rvv::compiler::layer::LayerConfig;
+use dimc_rvv::compiler::pack::{synth_acts, synth_wts, Lcg};
+use dimc_rvv::coordinator::driver::{run_functional, simulate_layer, Engine};
+use dimc_rvv::dimc::Precision;
+
+fn random_layer(r: &mut Lcg, tag: u64) -> LayerConfig {
+    let kh = 1 + r.below(3) as u32;
+    let kw = 1 + r.below(3) as u32;
+    let stride = 1 + r.below(2) as u32;
+    let pad = r.below(2) as u32;
+    let ih = (kh + stride + r.below(6) as u32).max(kh + 1);
+    let iw = (kw + stride + r.below(6) as u32).max(kw + 1);
+    // spans the grouping threshold (och > 32) and the row fallback
+    let ich = 1 + r.below(64) as u32;
+    let och = 1 + r.below(96) as u32;
+    LayerConfig::conv(&format!("pc{tag}"), ich, och, kh, kw, ih, iw, stride, pad)
+}
+
+#[test]
+fn shards_are_disjoint_and_cover_the_layer() {
+    let mut r = Lcg::new(0x5AD5);
+    for tag in 0..200u64 {
+        let l = random_layer(&mut r, tag);
+        let cores = 1 + r.below(9) as u32;
+        let plan = ShardPlan::plan(&l, cores);
+
+        assert!(plan.active_cores() >= 1, "{l} cores={cores}");
+        assert!(plan.active_cores() <= cores, "{l} cores={cores}");
+        assert_eq!(plan.ops_total(), l.ops(), "{l} cores={cores}: ops must sum");
+
+        match plan.strategy {
+            ShardStrategy::OutputChannels => {
+                // contiguous, disjoint channel spans covering [0, och)
+                let mut at = 0u32;
+                for s in &plan.shards {
+                    assert_eq!(s.och_range.0, at, "{l} cores={cores}");
+                    assert!(s.och_range.1 > s.och_range.0, "{l}: empty shard");
+                    assert_eq!(s.layer.och, s.och_range.1 - s.och_range.0);
+                    // every shard sees every output position
+                    assert_eq!(s.layer.patches(), l.patches(), "{l}");
+                    assert_eq!(s.row_range, (0, l.oh()));
+                    at = s.och_range.1;
+                }
+                assert_eq!(at, l.och, "{l} cores={cores}: channels not covered");
+            }
+            ShardStrategy::Rows => {
+                // contiguous, disjoint row bands covering [0, oh), with
+                // every shard covering all output channels
+                let mut at = 0u32;
+                for s in &plan.shards {
+                    assert_eq!(s.row_range.0, at, "{l} cores={cores}");
+                    assert!(s.row_range.1 > s.row_range.0, "{l}: empty band");
+                    assert_eq!(s.layer.oh(), s.row_range.1 - s.row_range.0);
+                    assert_eq!(s.layer.ow(), l.ow(), "{l}");
+                    assert_eq!(s.och_range, (0, l.och));
+                    assert_eq!(s.layer.och, l.och);
+                    at = s.row_range.1;
+                }
+                assert_eq!(at, l.oh(), "{l} cores={cores}: rows not covered");
+            }
+        }
+    }
+}
+
+#[test]
+fn one_core_cluster_cycles_match_single_core() {
+    let mut r = Lcg::new(0x1C0DE);
+    let mut sim = ClusterSim::new(Arch::default(), Precision::Int4);
+    let topo = ClusterTopology::from_arch(1, &Arch::default());
+    for tag in 0..8u64 {
+        let l = random_layer(&mut r, tag);
+        let single = simulate_layer(&l, Engine::Dimc).unwrap();
+        let clustered = sim.simulate_layer_cluster(&l, &topo).unwrap();
+        assert_eq!(clustered.cycles, single.cycles, "{l}");
+        assert_eq!(clustered.cores_used, 1, "{l}");
+    }
+}
+
+#[test]
+fn sharded_functional_outputs_are_bit_identical() {
+    let mut r = Lcg::new(0xFAB);
+    let arch = Arch::default();
+    for tag in 0..12u64 {
+        let l = random_layer(&mut r, tag);
+        let cores = 2 + r.below(3) as u32; // 2..=4
+        let acts = synth_acts(&l, Precision::Int4, 0xA0 + tag);
+        let wts = synth_wts(&l, Precision::Int4, 0xB0 + tag);
+        let shift = 3 + r.below(3) as u8;
+        let single = run_functional(&l, Engine::Dimc, &acts, &wts, shift).unwrap().outputs;
+        let topo = ClusterTopology::from_arch(cores, &arch);
+        let clustered = run_functional_cluster(&l, &topo, &acts, &wts, shift).unwrap();
+        assert_eq!(clustered, single, "{l} on {cores} cores");
+    }
+}
+
+#[test]
+fn row_fallback_functional_outputs_are_bit_identical() {
+    // Force the row strategy: och <= 32 (one group), oh >= cores.
+    let mut r = Lcg::new(0xA50);
+    let arch = Arch::default();
+    for (tag, (stride, pad)) in [(1u32, 0u32), (1, 1), (2, 0), (2, 1)].iter().enumerate() {
+        let l = LayerConfig::conv(
+            &format!("rf{tag}"),
+            1 + r.below(24) as u32,
+            1 + r.below(32) as u32,
+            3,
+            3,
+            11,
+            11,
+            *stride,
+            *pad,
+        );
+        let cores = 2 + r.below(3) as u32;
+        let plan = ShardPlan::plan(&l, cores);
+        assert_eq!(plan.strategy, ShardStrategy::Rows, "{l}");
+        let acts = synth_acts(&l, Precision::Int4, 0x10 + tag as u64);
+        let wts = synth_wts(&l, Precision::Int4, 0x20 + tag as u64);
+        let single = run_functional(&l, Engine::Dimc, &acts, &wts, 4).unwrap().outputs;
+        let topo = ClusterTopology::from_arch(cores, &arch);
+        let clustered = run_functional_cluster(&l, &topo, &acts, &wts, 4).unwrap();
+        assert_eq!(clustered, single, "{l} on {cores} cores");
+    }
+}
+
+#[test]
+fn cluster_never_slower_than_single_core() {
+    let mut r = Lcg::new(0xBEEF);
+    let arch = Arch::default();
+    let mut sim = ClusterSim::new(arch, Precision::Int4);
+    for tag in 0..8u64 {
+        let l = random_layer(&mut r, tag);
+        let cores = 2 + r.below(7) as u32;
+        let single = simulate_layer(&l, Engine::Dimc).unwrap();
+        let clustered =
+            sim.simulate_layer_cluster(&l, &ClusterTopology::from_arch(cores, &arch)).unwrap();
+        assert!(
+            clustered.cycles <= single.cycles,
+            "{l} on {cores} cores: {} > single {}",
+            clustered.cycles,
+            single.cycles
+        );
+    }
+}

@@ -1,0 +1,178 @@
+//! Minimal, dependency-free drop-in for the `anyhow` crate.
+//!
+//! The build image is fully offline (no crates.io registry), so the real
+//! `anyhow` cannot be fetched. This vendored shim implements exactly the
+//! subset the `dimc_rvv` crate uses — `Error`, `Result`, the `anyhow!` /
+//! `bail!` / `ensure!` macros and the `Context` extension trait — with the
+//! same observable behaviour:
+//!
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole context chain, outermost first, separated by `": "`.
+//! * Any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?`.
+//!
+//! Swap this for the real crate by replacing the `[patch]`-free path
+//! dependency in `rust/Cargo.toml` once a registry is available.
+
+use std::fmt;
+
+/// A type-erased error: a cause-first chain of messages.
+pub struct Error {
+    /// `chain[0]` is the root cause; later entries are contexts.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.push(context.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut it = self.chain.iter().rev();
+        let top = it.next().map(String::as_str).unwrap_or("unknown error");
+        write!(f, "{top}")?;
+        if f.alternate() {
+            for cause in it {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut it = self.chain.iter().rev();
+        let top = it.next().map(String::as_str).unwrap_or("unknown error");
+        write!(f, "{top}")?;
+        let causes: Vec<&String> = it.collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`, which is
+// what makes this blanket conversion coherent (mirrors the real anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().with_context(|| format!("bad number `{s}`"))?;
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("17").unwrap(), 17);
+        let e = parse("nope").unwrap_err();
+        assert!(e.to_string().contains("bad number"));
+        // alternate form prints the full chain, outermost first
+        let full = format!("{e:#}");
+        assert!(full.starts_with("bad number `nope`: "), "{full}");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {}", flag);
+            bail!("reached the end")
+        }
+        assert!(f(false).unwrap_err().to_string().contains("flag was false"));
+        assert!(f(true).unwrap_err().to_string().contains("reached the end"));
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+    }
+}
