@@ -1,0 +1,45 @@
+//! Regenerates the **serving load-vs-latency figure** — ResNet-50 served
+//! on a 4-core DIMC cluster with greedy dynamic batching, offered load
+//! climbing a ladder of fractions of the batch-mode roofline — and times
+//! the full sweep (every rung is a complete discrete-event serving
+//! simulation whose batch service times come from the cluster scheduler).
+//!
+//! This is the production-facing counterpart of `cluster_scaling`: where
+//! that bench asks "how fast can N cores run one network", this one asks
+//! "what tail latency do users see at a given request rate".
+
+#[path = "harness.rs"]
+mod harness;
+
+use dimc_rvv::coordinator::figures::serve_latency_points;
+use dimc_rvv::serve::sweep::render;
+
+fn main() {
+    let points =
+        harness::bench("serve/resnet50-load-ladder", 3, || serve_latency_points().unwrap());
+
+    println!();
+    println!(
+        "{}",
+        render("resnet50 serving: load vs latency (4 cores, max batch 8)", &points)
+    );
+
+    let first = points.first().unwrap();
+    let last = points.last().unwrap();
+    assert!(
+        last.p99_ms >= first.p99_ms,
+        "tail latency must not shrink as load grows past saturation"
+    );
+    assert!(
+        last.achieved_rps <= last.offered_rps,
+        "achieved throughput cannot exceed offered load"
+    );
+    assert!(
+        first.mean_queue_depth < last.mean_queue_depth,
+        "queueing must build as the offered load climbs"
+    );
+    println!(
+        "knee: {:.0} req/s offered -> {:.0} achieved, p99 {:.2} ms at the top rung",
+        last.offered_rps, last.achieved_rps, last.p99_ms
+    );
+}

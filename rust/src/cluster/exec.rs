@@ -38,18 +38,25 @@ use std::collections::{HashMap, HashSet};
 /// Cluster-level timing result for one layer.
 #[derive(Debug, Clone)]
 pub struct ClusterLayerResult {
+    /// The parent layer's name.
     pub name: String,
     /// Cores the chosen plan actually used.
     pub cores_used: u32,
+    /// How the chosen plan split the layer.
     pub strategy: ShardStrategy,
     /// Cluster cycles: slowest shard + contention + barrier.
     pub cycles: u64,
+    /// Cycles of the slowest shard (the concurrent-execution floor).
     pub max_shard_cycles: u64,
+    /// Extra cycles lost to shared-bus serialization.
     pub contention_cycles: u64,
+    /// Cycles spent in the end-of-layer barrier.
     pub barrier_cycles: u64,
     /// Aggregate external-memory traffic of all shards, in bytes.
     pub mem_bytes: u64,
+    /// The parent layer's operation count (2 x MACs).
     pub ops: u64,
+    /// Core clock the result was simulated at, in Hz.
     pub clock_hz: f64,
 }
 
@@ -77,7 +84,9 @@ fn sim_key(l: &LayerConfig) -> SimKey {
 /// models and topologies; balanced shard plans hit the cache heavily
 /// (each plan has at most two distinct shard shapes).
 pub struct ClusterSim {
+    /// Timing knobs every shard simulation (and the bus model) uses.
     pub arch: Arch,
+    /// Operand precision of the DIMC path.
     pub precision: Precision,
     cache: HashMap<SimKey, (u64, u64)>, // -> (cycles, mem bytes)
 }

@@ -16,11 +16,17 @@ use crate::pipeline::core::SimError;
 /// One point of a scaling curve.
 #[derive(Debug, Clone, Copy)]
 pub struct ScalingPoint {
+    /// Core count of this point.
     pub cores: u32,
+    /// Batch size the point was simulated with.
     pub batch: u32,
+    /// Execution mode the scheduler picked at this core count.
     pub mode: ClusterMode,
+    /// Total cluster cycles for the batch.
     pub cycles: u64,
+    /// Total operations of the batch.
     pub ops: u64,
+    /// Achieved throughput in GOPS.
     pub gops: f64,
     /// Speedup versus the 1-core schedule of the same batch.
     pub speedup: f64,

@@ -31,6 +31,7 @@ pub enum ClusterMode {
 }
 
 impl ClusterMode {
+    /// The mode's display name (`layer-parallel` / `image-parallel`).
     pub fn as_str(&self) -> &'static str {
         match self {
             ClusterMode::LayerParallel => "layer-parallel",
@@ -42,9 +43,13 @@ impl ClusterMode {
 /// A scheduled network execution on a cluster.
 #[derive(Debug, Clone)]
 pub struct NetworkSchedule {
+    /// Name of the scheduled model.
     pub model: String,
+    /// Cores the schedule was built for.
     pub cores: u32,
+    /// Images in the scheduled batch.
     pub batch: u32,
+    /// The faster of the two candidate execution modes.
     pub mode: ClusterMode,
     /// Per-layer cluster results of the layer-parallel candidate (the
     /// per-layer view stays meaningful even when image-parallel wins: it
@@ -54,7 +59,11 @@ pub struct NetworkSchedule {
     pub cycles: u64,
     /// Total operations of the whole batch.
     pub ops: u64,
+    /// Core clock the schedule was simulated at, in Hz.
     pub clock_hz: f64,
+    /// Cores per full image-parallel wave (the `k` the scheduler chose);
+    /// 0 when the layer-parallel mode won.
+    pub wave: u32,
 }
 
 impl NetworkSchedule {
@@ -66,6 +75,39 @@ impl NetworkSchedule {
     /// Batch latency in milliseconds.
     pub fn ms(&self) -> f64 {
         self.cycles as f64 / self.clock_hz * 1e3
+    }
+
+    /// Average number of cores the schedule keeps busy while executing —
+    /// the per-formed-batch utilization figure the serving tier
+    /// ([`crate::serve`]) charges against cluster capacity. Image-parallel
+    /// batches occupy one core per in-flight image, wave by wave (waves
+    /// cost approximately the same network time, so they are weighted
+    /// equally — the partial final wave counts its true width);
+    /// layer-parallel batches occupy each layer's chosen shard count,
+    /// cycle-weighted.
+    pub fn avg_cores_used(&self) -> f64 {
+        match self.mode {
+            ClusterMode::ImageParallel => {
+                let batch = self.batch.max(1);
+                let k = self.wave.clamp(1, batch);
+                let full_waves = (batch / k) as u64;
+                let rem = (batch % k) as u64;
+                let waves = full_waves + u64::from(rem > 0);
+                (full_waves * k as u64 + rem) as f64 / waves as f64
+            }
+            ClusterMode::LayerParallel => {
+                let total: u64 = self.layers.iter().map(|l| l.cycles).sum();
+                if total == 0 {
+                    1.0
+                } else {
+                    self.layers
+                        .iter()
+                        .map(|l| l.cores_used as f64 * l.cycles as f64)
+                        .sum::<f64>()
+                        / total as f64
+                }
+            }
+        }
     }
 }
 
@@ -103,6 +145,7 @@ impl ClusterSim {
             net_bytes += b;
         }
         let mut ip_cycles = u64::MAX;
+        let mut ip_wave = 1u32;
         for k in 1..=topo.cores.min(batch) {
             let full_waves = (batch / k) as u64;
             let rem = batch % k;
@@ -115,13 +158,16 @@ impl ClusterSim {
             if rem > 0 {
                 total += wave(rem);
             }
-            ip_cycles = ip_cycles.min(total);
+            if total < ip_cycles {
+                ip_cycles = total;
+                ip_wave = k;
+            }
         }
 
-        let (mode, cycles) = if ip_cycles < lp_cycles {
-            (ClusterMode::ImageParallel, ip_cycles)
+        let (mode, cycles, wave) = if ip_cycles < lp_cycles {
+            (ClusterMode::ImageParallel, ip_cycles, ip_wave)
         } else {
-            (ClusterMode::LayerParallel, lp_cycles)
+            (ClusterMode::LayerParallel, lp_cycles, 0)
         };
         Ok(NetworkSchedule {
             model: model.to_string(),
@@ -132,6 +178,7 @@ impl ClusterSim {
             cycles,
             ops: image_ops * batch as u64,
             clock_hz: self.arch.clock_hz,
+            wave,
         })
     }
 }
@@ -196,6 +243,26 @@ mod tests {
         assert!(s4.cycles < s1.cycles);
         let speedup = s1.cycles as f64 / s4.cycles as f64;
         assert!(speedup > 1.5, "batched speedup only {speedup:.2}x");
+    }
+
+    #[test]
+    fn avg_cores_used_accounts_for_partial_waves() {
+        // batch 5 in waves of 4: one wave of 4 + one of 1 -> 2.5 cores.
+        let s = NetworkSchedule {
+            model: "w".into(),
+            cores: 4,
+            batch: 5,
+            mode: ClusterMode::ImageParallel,
+            layers: Vec::new(),
+            cycles: 1,
+            ops: 1,
+            clock_hz: 500e6,
+            wave: 4,
+        };
+        assert!((s.avg_cores_used() - 2.5).abs() < 1e-12);
+        // An empty layer-parallel schedule degrades to one core.
+        let lp = NetworkSchedule { mode: ClusterMode::LayerParallel, wave: 0, ..s };
+        assert!((lp.avg_cores_used() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -51,8 +51,11 @@ pub struct Shard {
 /// A partitioning of one layer over the cluster.
 #[derive(Debug, Clone)]
 pub struct ShardPlan {
+    /// The unsplit layer the plan covers.
     pub parent: LayerConfig,
+    /// How the plan splits its parent.
     pub strategy: ShardStrategy,
+    /// One shard per active core, in parent-coverage order.
     pub shards: Vec<Shard>,
 }
 

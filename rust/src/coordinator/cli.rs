@@ -37,6 +37,13 @@ pub fn usage() -> &'static str {
      cluster   [--cores N] [--batch B] [--model NAME] multi-core DIMC\n\
                scale-out: shard/batch NAME (default resnet50) over 1..N\n\
                cores (default 8) and report the scaling curve\n\
+     serve     [--cores N] [--rps R] [--trace uniform|bursty|ramp]\n\
+               [--model NAME | --mix a=0.5,b=0.5] [--requests N]\n\
+               [--max-batch B] [--max-wait CYC] [--seed S] [--sweep]\n\
+               request-driven batched serving: drain a seeded arrival\n\
+               trace through the dynamic batcher on an N-core cluster and\n\
+               report throughput, p50/p95/p99 latency, queue depth and\n\
+               tile utilization (--sweep adds the load-vs-latency curve)\n\
      asm       <file.s> assemble and run on the DIMC-enhanced core\n\
      trace     <file.s> run with a cycle-annotated pipeline trace"
 }
@@ -61,7 +68,12 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     m
 }
 
-fn flag_u32(m: &HashMap<String, String>, k: &str, default: u32) -> Result<u32> {
+/// `--k value` parsed as `T`, or `default` when the flag is absent. The
+/// value type is inferred from `default` (u32 core counts, f64 rates…).
+fn flag<T: std::str::FromStr>(m: &HashMap<String, String>, k: &str, default: T) -> Result<T>
+where
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
     match m.get(k) {
         None => Ok(default),
         Some(v) => v.parse().with_context(|| format!("bad --{k} value `{v}`")),
@@ -84,13 +96,14 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
         "zoo" => zoo(),
         "resnet50" => resnet50(),
         "verify" => {
-            let n = flag_u32(&flags, "seeds", 3)? as u64;
+            let n = flag(&flags, "seeds", 3u32)? as u64;
             run_verify((0..n).map(|i| 0xD1AC + i).collect())
         }
         "simulate" => simulate(&flags),
         "energy" => energy(),
         "tiles" => tiles(),
         "cluster" => cluster(&flags),
+        "serve" => serve(&flags),
         "asm" => asm(args.get(1).map(String::as_str)),
         "trace" => trace(args.get(1).map(String::as_str)),
         "help" | "--help" | "-h" => {
@@ -103,6 +116,18 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
 
 fn sim_err(e: crate::pipeline::core::SimError) -> anyhow::Error {
     anyhow::anyhow!("simulation failed: {e}")
+}
+
+/// Look a zoo model up by name, failing with the list of valid names.
+fn lookup_model(name: &str) -> Result<crate::workloads::Model> {
+    use crate::workloads::zoo;
+    match zoo::model_by_name(name) {
+        Some(m) => Ok(m),
+        None => {
+            let names: Vec<&str> = zoo::all_models().iter().map(|m| m.name).collect();
+            bail!("unknown model `{name}`; available: {}", names.join(", "))
+        }
+    }
 }
 
 fn fig5() -> Result<()> {
@@ -320,18 +345,18 @@ fn run_verify(seeds: Vec<u64>) -> Result<()> {
 
 fn simulate(flags: &HashMap<String, String>) -> Result<()> {
     let l = if flags.contains_key("fc") {
-        LayerConfig::fc("custom", flag_u32(flags, "ich", 256)?, flag_u32(flags, "och", 64)?)
+        LayerConfig::fc("custom", flag(flags, "ich", 256u32)?, flag(flags, "och", 64u32)?)
     } else {
         LayerConfig::conv(
             "custom",
-            flag_u32(flags, "ich", 64)?,
-            flag_u32(flags, "och", 32)?,
-            flag_u32(flags, "kh", 3)?,
-            flag_u32(flags, "kw", 3)?,
-            flag_u32(flags, "ih", 28)?,
-            flag_u32(flags, "iw", 28)?,
-            flag_u32(flags, "stride", 1)?,
-            flag_u32(flags, "pad", 1)?,
+            flag(flags, "ich", 64u32)?,
+            flag(flags, "och", 32u32)?,
+            flag(flags, "kh", 3u32)?,
+            flag(flags, "kw", 3u32)?,
+            flag(flags, "ih", 28u32)?,
+            flag(flags, "iw", 28u32)?,
+            flag(flags, "stride", 1u32)?,
+            flag(flags, "pad", 1u32)?,
         )
     };
     println!("{l}");
@@ -410,15 +435,11 @@ fn cluster(flags: &HashMap<String, String>) -> Result<()> {
     use crate::compiler::pack::{synth_acts, synth_wts};
     use crate::coordinator::driver::run_functional;
     use crate::dimc::Precision;
-    use crate::workloads::zoo;
 
     let model_name = flags.get("model").map(String::as_str).unwrap_or("resnet50");
-    let Some(model) = zoo::model_by_name(model_name) else {
-        let names: Vec<&str> = zoo::all_models().iter().map(|m| m.name).collect();
-        bail!("unknown model `{model_name}`; available: {}", names.join(", "));
-    };
-    let cores = flag_u32(flags, "cores", 8)?.max(1);
-    let batch = flag_u32(flags, "batch", 1)?.max(1);
+    let model = lookup_model(model_name)?;
+    let cores = flag(flags, "cores", 8u32)?.max(1);
+    let batch = flag(flags, "batch", 1u32)?.max(1);
     let arch = Arch::default();
 
     // Sweep the powers of two up to the requested core count.
@@ -485,6 +506,140 @@ fn cluster(flags: &HashMap<String, String>) -> Result<()> {
     // (c) the curve must never lose throughput as cores are added
     anyhow::ensure!(is_monotone(&points), "scaling curve lost throughput with more cores");
     println!("check: throughput monotonically non-decreasing over {ns:?} cores OK");
+    Ok(())
+}
+
+fn serve(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::arch::Arch;
+    use crate::dimc::Precision;
+    use crate::serve::sweep::{load_sweep, render, rps_ladder};
+    use crate::serve::{BatchPolicy, Server, TraceConfig, TraceShape, Workload};
+    use std::collections::HashSet;
+
+    let cores = flag(flags, "cores", 4u32)?.max(1);
+    let rps = flag(flags, "rps", 1000.0f64)?;
+    anyhow::ensure!(rps.is_finite() && rps > 0.0, "--rps must be positive and finite");
+    let requests = flag(flags, "requests", 512u32)?.max(1) as usize;
+    let max_batch = flag(flags, "max-batch", 8u32)?.max(1);
+    let max_wait = flag(flags, "max-wait", 0u64)?;
+    // The report prints the seed in hex, so accept it back in hex too.
+    let seed = match flags.get("seed") {
+        None => 0xD1ACu64,
+        Some(v) => {
+            let (digits, radix) = match v.strip_prefix("0x") {
+                Some(hex) => (hex, 16),
+                None => (v.as_str(), 10),
+            };
+            u64::from_str_radix(digits, radix)
+                .with_context(|| format!("bad --seed value `{v}`"))?
+        }
+    };
+    let trace_name = flags.get("trace").map(String::as_str).unwrap_or("uniform");
+    let Some(shape) = TraceShape::parse(trace_name) else {
+        bail!("unknown trace `{trace_name}`; expected uniform, bursty or ramp");
+    };
+
+    // The served model set: --mix name=weight,... or a single --model.
+    let mut workloads: Vec<Workload> = Vec::new();
+    if let Some(mix) = flags.get("mix") {
+        for part in mix.split(',').filter(|p| !p.is_empty()) {
+            let Some((name, w)) = part.split_once('=') else {
+                bail!("bad --mix entry `{part}`; expected name=weight");
+            };
+            let weight: f64 =
+                w.parse().with_context(|| format!("bad weight in --mix entry `{part}`"))?;
+            anyhow::ensure!(
+                weight.is_finite() && weight > 0.0,
+                "--mix weight for `{name}` must be positive and finite"
+            );
+            let model = lookup_model(name)?;
+            workloads.push(Workload { name: name.to_string(), layers: model.layers, weight });
+        }
+        anyhow::ensure!(!workloads.is_empty(), "--mix named no models");
+    } else {
+        let name = flags.get("model").map(String::as_str).unwrap_or("resnet50");
+        workloads.push(Workload::new(name, lookup_model(name)?.layers));
+    }
+
+    let arch = Arch::default();
+    let policy = BatchPolicy { max_batch, max_wait_cycles: max_wait };
+    let mut server = Server::new(arch, Precision::Int4, cores);
+
+    println!(
+        "serving: {} on {} DIMC-enhanced cores | trace {} @ {:.0} req/s, {} requests \
+         | batch window: max {} / wait {} cyc | seed 0x{seed:X}",
+        workloads
+            .iter()
+            .map(|w| w.name.as_str())
+            .collect::<Vec<_>>()
+            .join("+"),
+        cores,
+        shape.as_str(),
+        rps,
+        requests,
+        max_batch,
+        max_wait
+    );
+    for i in 0..workloads.len() {
+        let floor = server.unbatched_latency(&workloads, i).map_err(sim_err)?;
+        let roof = server.batch_roofline(&workloads, i, max_batch).map_err(sim_err)?;
+        println!(
+            "  {}: unbatched latency {:.3} ms | batch-{} roofline {:.0} inf/s",
+            workloads[i].name,
+            floor as f64 / arch.clock_hz * 1e3,
+            max_batch,
+            roof
+        );
+    }
+
+    let trace = TraceConfig { rps, requests, shape, seed };
+    let report = server.serve_trace(&workloads, policy, &trace).map_err(sim_err)?;
+    println!("\n{}", report.render());
+
+    // --- correctness cross-checks ---
+    // (a) conservation: every generated request completed exactly once
+    let ids: HashSet<u64> = report.completed.iter().map(|r| r.id).collect();
+    anyhow::ensure!(
+        report.completed.len() == requests && ids.len() == requests,
+        "request conservation violated: {} completions, {} distinct ids, {} requests",
+        report.completed.len(),
+        ids.len(),
+        requests
+    );
+    println!("check: all {requests} requests completed exactly once OK");
+    // (b) no batch exceeded the window and causality held throughout
+    anyhow::ensure!(
+        report.batches.iter().all(|b| b.size >= 1 && b.size <= max_batch),
+        "batch size left the configured window"
+    );
+    anyhow::ensure!(
+        report.completed.iter().all(|r| r.arrival <= r.dispatched && r.dispatched < r.completed),
+        "per-request cycle accounting lost causality"
+    );
+    println!("check: batch sizes within window, per-request causality OK");
+
+    if flags.contains_key("sweep") {
+        // Anchor the ladder to the traffic-weighted roofline of the whole
+        // mix, not any single model's.
+        let roof = server.mix_roofline(&workloads, max_batch).map_err(sim_err)?;
+        let points = load_sweep(
+            &mut server,
+            &workloads,
+            policy,
+            shape,
+            seed,
+            requests,
+            &rps_ladder(roof),
+        )
+        .map_err(sim_err)?;
+        println!(
+            "\n{}",
+            render(
+                &format!("load vs latency ({} ladder around the roofline)", shape.as_str()),
+                &points
+            )
+        );
+    }
     Ok(())
 }
 

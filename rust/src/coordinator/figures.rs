@@ -148,6 +148,30 @@ pub fn cluster_scaling_points() -> Result<Vec<ScalingPoint>, SimError> {
     scaling_curve("resnet50", &resnet::resnet50(), Arch::default(), &cluster_core_counts(), 1)
 }
 
+/// Serving load-vs-latency figure: ResNet-50 served on a 4-core cluster
+/// with greedy dynamic batching (max batch 8), offered load climbing a
+/// ladder of fractions of the batch-mode roofline. Every point is a full
+/// discrete-event serving simulation with a fixed seed, so the figure is
+/// reproducible bit-for-bit.
+pub fn serve_latency_points() -> Result<Vec<crate::serve::LoadPoint>, SimError> {
+    use crate::dimc::Precision;
+    use crate::serve::{load_sweep, rps_ladder, BatchPolicy, Server, TraceShape, Workload};
+
+    let workloads = vec![Workload::new("resnet50", resnet::resnet50())];
+    let policy = BatchPolicy { max_batch: 8, max_wait_cycles: 0 };
+    let mut server = Server::new(Arch::default(), Precision::Int4, 4);
+    let roofline = server.batch_roofline(&workloads, 0, policy.max_batch)?;
+    load_sweep(
+        &mut server,
+        &workloads,
+        policy,
+        TraceShape::Uniform,
+        0xD1AC,
+        256,
+        &rps_ladder(roofline),
+    )
+}
+
 /// §V-D zoo summary per model.
 pub struct ZooSummary {
     pub model: &'static str,

@@ -11,6 +11,34 @@
 //! dc.f  v4.0[3], v4.1, row=7, w=0
 //! li    x5, 1024          # pseudo: expands to lui+addi or addi
 //! ```
+//!
+//! Assembled programs run directly on the DIMC-enhanced core model — the
+//! snippet below performs the paper's whole load/compute/write-back
+//! motif: a kernel row image into DIMC memory (`dl.m`), an activation
+//! patch into the input buffer (`dl.i`), and one in-memory MAC with
+//! ReLU + requantization packing the result nibble (`dc.f`):
+//!
+//! ```
+//! use dimc_rvv::arch::Arch;
+//! use dimc_rvv::isa::asm::assemble;
+//! use dimc_rvv::pipeline::Core;
+//!
+//! let prog = assemble(
+//!     "
+//!     dl.m v8,  nvec=4, mask=0b1111, sec=0, row=3   # kernel -> DIMC row 3
+//!     dl.i v12, nvec=4, mask=0b1111, sec=0          # patch  -> input buffer
+//!     dc.f v4.0[0], v4.1, row=3, w=0                # MAC + ReLU + requant
+//!     ecall
+//!     ",
+//! )
+//! .unwrap();
+//! assert_eq!(prog.len(), 4);
+//!
+//! let mut core = Core::new(Arch::default());
+//! let stats = core.run(&prog, 10_000).unwrap();
+//! assert_eq!(stats.instret, 4, "all four instructions retired");
+//! assert!(stats.cycles >= 4, "a {}-cycle run is too good to be true", stats.cycles);
+//! ```
 
 use super::{AluOp, BranchCond, Instr, VType};
 use std::collections::HashMap;

@@ -39,6 +39,18 @@
 //!   under a shared-bus contention + barrier model into cluster-level
 //!   cycles and speedup/efficiency-vs-N scaling curves
 //!   (`repro cluster --cores 8 --batch 1 --model resnet50`).
+//! * [`serve`] — the serving tier: a deterministic discrete-event
+//!   simulator of request-driven batched inference on the cluster.
+//!   Seeded arrival traces (uniform / bursty / diurnal-ramp over any
+//!   model mix) flow through a dynamic batcher (max-batch + max-wait
+//!   window) into the cluster scheduler, with exact per-request cycle
+//!   accounting and throughput / p50-p95-p99 latency / queue-depth /
+//!   tile-utilization reporting
+//!   (`repro serve --cores 4 --rps 1000 --trace bursty --model resnet50`).
+//!
+//! A top-to-bottom walkthrough of how these layers fit together — with
+//! the custom-instruction encodings and a "which module do I touch"
+//! table — lives in `docs/ARCHITECTURE.md` at the repository root.
 //!
 //! ## Quickstart
 //!
@@ -62,5 +74,6 @@ pub mod metrics;
 pub mod runtime;
 pub mod coordinator;
 pub mod cluster;
+pub mod serve;
 
 pub use arch::Arch;

@@ -12,14 +12,21 @@ use crate::pipeline::core::SimError;
 /// One per-layer evaluation row (the union of Figs. 5, 6 and 7).
 #[derive(Debug, Clone)]
 pub struct LayerRow {
+    /// Layer name (from its [`LayerConfig`]).
     pub name: String,
+    /// Operation count (2 x MACs).
     pub ops: u64,
+    /// Simulated cycles on the DIMC-enhanced core.
     pub dimc_cycles: u64,
+    /// Simulated cycles on the baseline pure-RVV core.
     pub baseline_cycles: u64,
+    /// Achieved DIMC throughput in GOPS.
     pub gops: f64,
     /// (compute, load, store) fractions of data-path instructions.
     pub dist: (f64, f64, f64),
+    /// Baseline cycles / DIMC cycles.
     pub speedup: f64,
+    /// Area-normalized speedup (see [`AreaModel::ans`]).
     pub ans: f64,
 }
 
@@ -89,14 +96,21 @@ pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> Strin
 /// the headline numbers of the abstract.
 #[derive(Debug, Clone, Copy)]
 pub struct Summary {
+    /// Best per-layer GOPS (the paper's headline 137).
     pub peak_gops: f64,
+    /// Arithmetic-mean GOPS across the rows.
     pub mean_gops: f64,
+    /// Best per-layer speedup (the paper's headline 217x).
     pub peak_speedup: f64,
+    /// Geometric-mean speedup across the rows.
     pub geomean_speedup: f64,
+    /// Worst per-layer area-normalized speedup.
     pub min_ans: f64,
+    /// Best per-layer area-normalized speedup.
     pub peak_ans: f64,
 }
 
+/// Fold rows into the headline summary statistics.
 pub fn summarize(rows: &[LayerRow]) -> Summary {
     let n = rows.len().max(1) as f64;
     Summary {

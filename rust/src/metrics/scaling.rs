@@ -29,13 +29,17 @@ use crate::isa::InstrClass;
 /// Projected performance of an N-tile configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct TileProjection {
+    /// Number of DIMC tiles projected.
     pub tiles: u32,
+    /// Projected layer cycles.
     pub cycles: u64,
+    /// Projected throughput in GOPS.
     pub gops: f64,
     /// Which resource bounds the projection.
     pub bound: Bound,
 }
 
+/// The resource that caps an N-tile projection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Bound {
     /// The single in-order front end (issue bandwidth).

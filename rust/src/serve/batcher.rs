@@ -1,0 +1,175 @@
+//! The dynamic batcher: per-model FIFO queues plus the dispatch window
+//! policy.
+//!
+//! A batch of requests for the *same* model becomes eligible for dispatch
+//! when either
+//!
+//! * the queue holds [`BatchPolicy::max_batch`] requests (a full batch), or
+//! * the model's oldest queued request has waited
+//!   [`BatchPolicy::max_wait_cycles`] cycles (the window expired).
+//!
+//! With `max_wait_cycles = 0` the batcher is *greedy*: a request on an
+//! idle server dispatches the cycle it arrives, so zero-load latency is
+//! exactly the unbatched cluster latency (property-tested in
+//! `rust/tests/prop_serve.rs`). Under load, batches still form naturally
+//! from the backlog that accumulates while the cluster is busy. A non-zero
+//! window additionally *holds* a sub-full batch to trade latency for
+//! throughput, exactly like production serving systems.
+
+use super::request::Request;
+use std::collections::VecDeque;
+
+/// The two knobs of the dynamic batching window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Largest batch ever dispatched (also the roofline batch size).
+    pub max_batch: u32,
+    /// Longest a request may head its queue before dispatch is forced.
+    pub max_wait_cycles: u64,
+}
+
+impl Default for BatchPolicy {
+    /// Greedy default: batches of up to 8 with no artificial hold.
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait_cycles: 0 }
+    }
+}
+
+/// Per-model FIFO queues implementing the window policy. Purely
+/// mechanical — time is whatever the discrete-event engine says it is.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queues: Vec<VecDeque<Request>>,
+}
+
+impl Batcher {
+    /// An empty batcher for `models` served models.
+    pub fn new(policy: BatchPolicy, models: usize) -> Self {
+        Batcher { policy, queues: (0..models).map(|_| VecDeque::new()).collect() }
+    }
+
+    /// Admit one request to its model's queue.
+    pub fn enqueue(&mut self, r: Request) {
+        self.queues[r.model].push_back(r);
+    }
+
+    /// Total queued requests across all models.
+    pub fn depth(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Whether a model's queue is dispatch-eligible at `now`.
+    fn eligible(&self, model: usize, now: u64) -> bool {
+        let q = &self.queues[model];
+        match q.front() {
+            None => false,
+            Some(head) => {
+                q.len() as u32 >= self.policy.max_batch
+                    || now >= head.arrival.saturating_add(self.policy.max_wait_cycles)
+            }
+        }
+    }
+
+    /// The model to dispatch at `now`, if any: among all eligible queues,
+    /// the one whose head request is oldest (FIFO across models; ties
+    /// break toward the lower model index).
+    pub fn ready(&self, now: u64) -> Option<usize> {
+        (0..self.queues.len())
+            .filter(|&m| self.eligible(m, now))
+            .min_by_key(|&m| self.queues[m].front().map(|r| r.arrival).unwrap_or(u64::MAX))
+    }
+
+    /// The earliest cycle at which some queue becomes dispatch-eligible,
+    /// assuming no further arrivals; `None` when every queue is empty.
+    /// A full queue is eligible immediately (returns 0).
+    pub fn ready_at(&self) -> Option<u64> {
+        self.queues
+            .iter()
+            .filter_map(|q| {
+                q.front().map(|head| {
+                    if q.len() as u32 >= self.policy.max_batch {
+                        0
+                    } else {
+                        head.arrival.saturating_add(self.policy.max_wait_cycles)
+                    }
+                })
+            })
+            .min()
+    }
+
+    /// The model whose head request is oldest, regardless of window
+    /// eligibility — the flush target when no further event can ever
+    /// make a queue eligible (see the engine's end-of-trace flush).
+    pub fn oldest_head(&self) -> Option<usize> {
+        (0..self.queues.len())
+            .filter(|&m| !self.queues[m].is_empty())
+            .min_by_key(|&m| self.queues[m].front().map(|r| r.arrival).unwrap_or(u64::MAX))
+    }
+
+    /// Remove and return up to `max_batch` oldest requests of `model`.
+    pub fn take_batch(&mut self, model: usize) -> Vec<Request> {
+        let q = &mut self.queues[model];
+        let n = (q.len() as u32).min(self.policy.max_batch) as usize;
+        q.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: usize, arrival: u64) -> Request {
+        Request { id, model, arrival }
+    }
+
+    #[test]
+    fn full_batch_is_immediately_ready() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait_cycles: 1000 }, 1);
+        b.enqueue(req(0, 0, 10));
+        assert_eq!(b.ready(10), None, "sub-full batch must hold for the window");
+        assert_eq!(b.ready_at(), Some(1010));
+        b.enqueue(req(1, 0, 20));
+        assert_eq!(b.ready(20), Some(0), "full batch dispatches at once");
+        assert_eq!(b.ready_at(), Some(0));
+        let batch = b.take_batch(0);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].id, 0, "FIFO order");
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn window_expiry_forces_dispatch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_cycles: 100 }, 1);
+        b.enqueue(req(0, 0, 50));
+        assert_eq!(b.ready(149), None);
+        assert_eq!(b.ready(150), Some(0));
+    }
+
+    #[test]
+    fn greedy_policy_dispatches_at_arrival() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_cycles: 0 }, 1);
+        b.enqueue(req(0, 0, 7));
+        assert_eq!(b.ready(7), Some(0));
+    }
+
+    #[test]
+    fn oldest_head_wins_across_models() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_cycles: 0 }, 2);
+        b.enqueue(req(0, 1, 5));
+        b.enqueue(req(1, 0, 9));
+        assert_eq!(b.ready(9), Some(1), "model 1's head arrived first");
+        b.take_batch(1);
+        assert_eq!(b.ready(9), Some(0));
+    }
+
+    #[test]
+    fn take_batch_caps_at_max_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait_cycles: 0 }, 1);
+        for i in 0..5 {
+            b.enqueue(req(i, 0, i));
+        }
+        assert_eq!(b.take_batch(0).len(), 3);
+        assert_eq!(b.depth(), 2);
+    }
+}

@@ -1,0 +1,420 @@
+//! The discrete-event serving engine: one N-core DIMC cluster draining a
+//! request trace through the dynamic batcher.
+//!
+//! The cluster is modelled as a single serial batch executor (the
+//! [`cluster::sched`](crate::cluster::sched) scheduler already uses every
+//! core *inside* a batch, via image-parallel waves or layer-parallel
+//! sharding, so serving-level concurrency comes from batching, not from
+//! splitting the cluster). The event loop holds three event sources —
+//! next arrival, server-free, batch-window expiry — and always advances
+//! to the earliest one:
+//!
+//! 1. admit every arrival due at the current cycle into the batcher;
+//! 2. if the cluster is idle and the batcher has an eligible batch
+//!    (full, or its window expired), dispatch it: service time is the
+//!    cluster scheduler's cycle count for that `(model, batch)` pair,
+//!    memoized so each pair is simulated once per server;
+//! 3. otherwise advance time, integrating queue depth as it goes.
+//!
+//! Per-request accounting is exact: a request's latency is
+//! `completed - arrival` where `completed` is its batch's finish cycle.
+//! The engine is fully deterministic — identical config and seed produce
+//! an identical [`ServeReport`].
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::request::{self, Request, TraceConfig, TraceShape};
+use super::stats::{BatchRecord, CompletedRequest, ServeReport};
+use crate::arch::Arch;
+use crate::cluster::exec::ClusterSim;
+use crate::cluster::topology::ClusterTopology;
+use crate::compiler::layer::LayerConfig;
+use crate::dimc::Precision;
+use crate::pipeline::core::SimError;
+use std::collections::HashMap;
+
+/// One servable model: a named layer list plus its share of the traffic
+/// mix (weights are relative; they need not sum to 1).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Model name (zoo name or ad-hoc label).
+    pub name: String,
+    /// The model's accelerated layers, in execution order.
+    pub layers: Vec<LayerConfig>,
+    /// Relative traffic weight of this model in the request mix.
+    pub weight: f64,
+}
+
+impl Workload {
+    /// A workload with weight 1 (the single-model case).
+    pub fn new(name: &str, layers: Vec<LayerConfig>) -> Self {
+        Workload { name: name.to_string(), layers, weight: 1.0 }
+    }
+}
+
+/// The serving server: an N-core cluster simulator plus a memo of batch
+/// service times. One server can drain many traces; the `(model, batch)`
+/// service cache and the underlying shard-simulation cache stay warm
+/// across runs. The cache is keyed by *model index*, so one `Server`
+/// serves one workload set — create a fresh server for a different set.
+pub struct Server {
+    /// The cluster simulator (owns the per-geometry shard cache).
+    pub sim: ClusterSim,
+    /// The cluster the server schedules batches onto.
+    pub topo: ClusterTopology,
+    /// `(model index, batch size) -> (service cycles, avg busy cores)`.
+    cache: HashMap<(usize, u32), (u64, f64)>,
+}
+
+impl Server {
+    /// A server over `cores` DIMC-enhanced cores with `arch`'s cluster
+    /// knobs (shared bus, barrier cost).
+    pub fn new(arch: Arch, precision: Precision, cores: u32) -> Self {
+        Server {
+            sim: ClusterSim::new(arch, precision),
+            topo: ClusterTopology::from_arch(cores, &arch),
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Cluster service time for a batch of `batch` images of
+    /// `workloads[model]`, plus the average number of cores the batch
+    /// keeps busy. Memoized per `(model, batch)`.
+    pub fn service_time(
+        &mut self,
+        workloads: &[Workload],
+        model: usize,
+        batch: u32,
+    ) -> Result<(u64, f64), SimError> {
+        let key = (model, batch);
+        if let Some(&hit) = self.cache.get(&key) {
+            return Ok(hit);
+        }
+        let w = &workloads[model];
+        let s = self.sim.schedule(&w.name, &w.layers, &self.topo, batch)?;
+        let v = (s.cycles, s.avg_cores_used());
+        self.cache.insert(key, v);
+        Ok(v)
+    }
+
+    /// Latency of a single unbatched inference of `workloads[model]` on
+    /// this cluster — the zero-load latency floor.
+    pub fn unbatched_latency(
+        &mut self,
+        workloads: &[Workload],
+        model: usize,
+    ) -> Result<u64, SimError> {
+        Ok(self.service_time(workloads, model, 1)?.0)
+    }
+
+    /// The batch-mode roofline in inferences per second: the best
+    /// sustained rate of back-to-back batches of any size up to
+    /// `max_batch`. Achieved serving throughput saturates here.
+    pub fn batch_roofline(
+        &mut self,
+        workloads: &[Workload],
+        model: usize,
+        max_batch: u32,
+    ) -> Result<f64, SimError> {
+        let mut best = 0.0f64;
+        for b in 1..=max_batch.max(1) {
+            let (cycles, _) = self.service_time(workloads, model, b)?;
+            best = best.max(b as f64 * self.sim.arch.clock_hz / cycles.max(1) as f64);
+        }
+        Ok(best)
+    }
+
+    /// The mix-wide roofline in inferences per second: the weighted
+    /// harmonic mean of the per-model batch rooflines under the traffic
+    /// shares (each model's share of requests consumes capacity at that
+    /// model's rate). Equals [`Server::batch_roofline`] for a single
+    /// workload; this is the saturation anchor for mixed traffic.
+    pub fn mix_roofline(
+        &mut self,
+        workloads: &[Workload],
+        max_batch: u32,
+    ) -> Result<f64, SimError> {
+        let total: f64 = workloads.iter().map(|w| w.weight).sum();
+        let mut inv = 0.0;
+        for m in 0..workloads.len() {
+            let share = workloads[m].weight / total.max(1e-12);
+            inv += share / self.batch_roofline(workloads, m, max_batch)?.max(1e-12);
+        }
+        Ok(1.0 / inv.max(1e-300))
+    }
+
+    /// Generate a trace from `trace` over the workloads' mix weights and
+    /// drain it (see [`Server::serve_arrivals`]).
+    pub fn serve_trace(
+        &mut self,
+        workloads: &[Workload],
+        policy: BatchPolicy,
+        trace: &TraceConfig,
+    ) -> Result<ServeReport, SimError> {
+        let weights: Vec<f64> = workloads.iter().map(|w| w.weight).collect();
+        let arrivals = request::generate(trace, &weights, self.sim.arch.clock_hz);
+        self.serve_arrivals(workloads, policy, &arrivals, trace.shape, trace.seed)
+    }
+
+    /// Drain an explicit, time-ordered arrival list through the dynamic
+    /// batcher and the cluster, with exact per-request cycle accounting.
+    ///
+    /// Invariants (property-tested in `rust/tests/prop_serve.rs`): every
+    /// request completes exactly once; with `max_wait_cycles = 0` an
+    /// uncontended request's latency equals the unbatched cluster
+    /// latency; under overload, throughput saturates at the batch-mode
+    /// roofline.
+    pub fn serve_arrivals(
+        &mut self,
+        workloads: &[Workload],
+        policy: BatchPolicy,
+        arrivals: &[Request],
+        shape: TraceShape,
+        seed: u64,
+    ) -> Result<ServeReport, SimError> {
+        debug_assert!(arrivals.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let n = arrivals.len();
+        let clock_hz = self.sim.arch.clock_hz;
+        let model_names: Vec<String> = workloads.iter().map(|w| w.name.clone()).collect();
+        let cores = self.topo.cores;
+
+        let offered_rps = if n >= 2 {
+            let span = (arrivals[n - 1].arrival - arrivals[0].arrival).max(1);
+            (n - 1) as f64 * clock_hz / span as f64
+        } else {
+            0.0
+        };
+
+        let mut batcher = Batcher::new(policy, workloads.len());
+        let mut completed: Vec<CompletedRequest> = Vec::with_capacity(n);
+        let mut batches: Vec<BatchRecord> = Vec::new();
+        let mut next_arrival = 0usize;
+        let mut busy_until: Option<u64> = None;
+        let mut now = arrivals.first().map(|r| r.arrival).unwrap_or(0);
+        let mut depth_area = 0u128;
+        let mut max_depth = 0usize;
+        let mut busy_cycles = 0u64;
+        let mut tile_core_cycles = 0.0f64;
+
+        while completed.len() < n {
+            // 1. Admit every arrival due now.
+            while next_arrival < n && arrivals[next_arrival].arrival <= now {
+                batcher.enqueue(arrivals[next_arrival].clone());
+                next_arrival += 1;
+            }
+            max_depth = max_depth.max(batcher.depth());
+
+            // 2. Free the cluster if its batch just finished.
+            if busy_until.is_some_and(|t| now >= t) {
+                busy_until = None;
+            }
+
+            // 3. Dispatch the eligible batch with the oldest head, if any.
+            // When nothing is eligible but nothing else can ever happen
+            // (no arrivals left, cluster idle, every pending window
+            // unreachable — e.g. an effectively infinite wait), flush the
+            // oldest queue instead: conservation is an API guarantee.
+            if busy_until.is_none() {
+                let stalled = next_arrival >= n
+                    && batcher.ready_at().is_some_and(|t| t == u64::MAX);
+                let eligible = batcher
+                    .ready(now)
+                    .or_else(|| if stalled { batcher.oldest_head() } else { None });
+                if let Some(model) = eligible {
+                    let reqs = batcher.take_batch(model);
+                    let size = reqs.len() as u32;
+                    let (service, cores_used) = self.service_time(workloads, model, size)?;
+                    let done = now + service;
+                    busy_until = Some(done);
+                    busy_cycles += service;
+                    tile_core_cycles += service as f64 * cores_used;
+                    for r in reqs {
+                        completed.push(CompletedRequest {
+                            id: r.id,
+                            model,
+                            arrival: r.arrival,
+                            dispatched: now,
+                            completed: done,
+                        });
+                    }
+                    batches.push(BatchRecord {
+                        model,
+                        size,
+                        dispatched: now,
+                        service_cycles: service,
+                        cores_used,
+                    });
+                    continue; // re-evaluate at the same cycle
+                }
+            }
+
+            // 4. Advance to the earliest pending event.
+            let mut next = u64::MAX;
+            if next_arrival < n {
+                next = next.min(arrivals[next_arrival].arrival);
+            }
+            if let Some(t) = busy_until {
+                next = next.min(t);
+            } else if let Some(t) = batcher.ready_at() {
+                // The idle branch only runs when nothing is eligible at
+                // `now`, so the window expiry is strictly in the future.
+                next = next.min(t.max(now + 1));
+            }
+            if next == u64::MAX {
+                break; // nothing left to do (all requests drained)
+            }
+            depth_area += batcher.depth() as u128 * (next - now) as u128;
+            now = next;
+        }
+
+        let first_arrival = arrivals.first().map(|r| r.arrival).unwrap_or(0);
+        let last_completion =
+            completed.iter().map(|r| r.completed).max().unwrap_or(first_arrival);
+        let span_cycles = last_completion - first_arrival;
+        Ok(ServeReport {
+            model_names,
+            cores,
+            policy,
+            shape,
+            seed,
+            clock_hz,
+            completed,
+            batches,
+            span_cycles,
+            busy_cycles,
+            tile_core_cycles,
+            mean_queue_depth: depth_area as f64 / span_cycles.max(1) as f64,
+            max_queue_depth: max_depth,
+            offered_rps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_zoo() -> Vec<Workload> {
+        vec![
+            Workload::new(
+                "tiny-a",
+                vec![
+                    LayerConfig::conv("a1", 16, 64, 3, 3, 8, 8, 1, 1),
+                    LayerConfig::fc("a2", 8 * 8 * 64, 10),
+                ],
+            ),
+            Workload::new("tiny-b", vec![LayerConfig::conv("b1", 16, 16, 3, 3, 8, 8, 1, 1)]),
+        ]
+    }
+
+    fn server(cores: u32) -> Server {
+        Server::new(Arch::default(), Precision::Int4, cores)
+    }
+
+    #[test]
+    fn single_request_latency_is_the_unbatched_cluster_latency() {
+        let zoo = tiny_zoo();
+        let mut srv = server(4);
+        let svc = srv.unbatched_latency(&zoo, 0).unwrap();
+        let arrivals = vec![Request { id: 0, model: 0, arrival: 123 }];
+        let policy = BatchPolicy { max_batch: 8, max_wait_cycles: 0 };
+        let rep =
+            srv.serve_arrivals(&zoo, policy, &arrivals, TraceShape::Uniform, 1).unwrap();
+        assert_eq!(rep.completed.len(), 1);
+        assert_eq!(rep.completed[0].latency(), svc);
+        assert_eq!(rep.completed[0].queue_wait(), 0);
+        assert_eq!(rep.busy_cycles, svc);
+    }
+
+    #[test]
+    fn wait_window_adds_exactly_the_hold_time_at_zero_load() {
+        let zoo = tiny_zoo();
+        let mut srv = server(2);
+        let svc = srv.unbatched_latency(&zoo, 1).unwrap();
+        let arrivals = vec![Request { id: 0, model: 1, arrival: 50 }];
+        let policy = BatchPolicy { max_batch: 8, max_wait_cycles: 777 };
+        let rep =
+            srv.serve_arrivals(&zoo, policy, &arrivals, TraceShape::Uniform, 1).unwrap();
+        assert_eq!(rep.completed[0].latency(), svc + 777);
+        assert_eq!(rep.completed[0].queue_wait(), 777);
+    }
+
+    #[test]
+    fn backlog_forms_batches_while_the_cluster_is_busy() {
+        let zoo = tiny_zoo();
+        let mut srv = server(2);
+        let svc = srv.unbatched_latency(&zoo, 0).unwrap();
+        // Burst of 5: the first dispatches alone, the rest accumulate into
+        // one batch while the cluster is busy.
+        let arrivals: Vec<Request> =
+            (0..5).map(|i| Request { id: i, model: 0, arrival: 10 + i }).collect();
+        let policy = BatchPolicy { max_batch: 8, max_wait_cycles: 0 };
+        let rep =
+            srv.serve_arrivals(&zoo, policy, &arrivals, TraceShape::Uniform, 1).unwrap();
+        assert_eq!(rep.completed.len(), 5);
+        assert_eq!(rep.batches.len(), 2);
+        assert_eq!(rep.batches[0].size, 1);
+        assert_eq!(rep.batches[1].size, 4);
+        assert_eq!(rep.batches[1].dispatched, 10 + svc);
+    }
+
+    #[test]
+    fn infinite_wait_window_still_flushes_every_request() {
+        let zoo = tiny_zoo();
+        let mut srv = server(2);
+        let policy = BatchPolicy { max_batch: 8, max_wait_cycles: u64::MAX };
+        let arrivals = vec![
+            Request { id: 0, model: 0, arrival: 10 },
+            Request { id: 1, model: 0, arrival: 20 },
+        ];
+        let rep =
+            srv.serve_arrivals(&zoo, policy, &arrivals, TraceShape::Uniform, 1).unwrap();
+        assert_eq!(rep.completed.len(), 2, "conservation must survive an infinite window");
+        assert_eq!(rep.batches.len(), 1);
+        assert_eq!(rep.batches[0].size, 2);
+        assert_eq!(rep.batches[0].dispatched, 20, "flushed once the arrivals ran dry");
+    }
+
+    #[test]
+    fn empty_trace_produces_an_empty_report() {
+        let zoo = tiny_zoo();
+        let mut srv = server(2);
+        let rep = srv
+            .serve_arrivals(&zoo, BatchPolicy::default(), &[], TraceShape::Uniform, 1)
+            .unwrap();
+        assert!(rep.completed.is_empty());
+        assert_eq!(rep.span_cycles, 0);
+        assert_eq!(rep.achieved_rps(), 0.0);
+    }
+
+    #[test]
+    fn roofline_dominates_every_single_batch_rate() {
+        let zoo = tiny_zoo();
+        let mut srv = server(4);
+        let roof = srv.batch_roofline(&zoo, 0, 8).unwrap();
+        for b in 1..=8u32 {
+            let (c, _) = srv.service_time(&zoo, 0, b).unwrap();
+            let rate = b as f64 * srv.sim.arch.clock_hz / c as f64;
+            assert!(rate <= roof + 1e-6, "batch {b} rate {rate} above roofline {roof}");
+        }
+        // batching must beat unbatched serving
+        let (c1, _) = srv.service_time(&zoo, 0, 1).unwrap();
+        assert!(roof > srv.sim.arch.clock_hz / c1 as f64 * 1.01);
+    }
+
+    #[test]
+    fn mix_roofline_interpolates_between_the_models() {
+        let zoo = tiny_zoo();
+        let mut srv = server(4);
+        let ra = srv.batch_roofline(&zoo, 0, 4).unwrap();
+        let rb = srv.batch_roofline(&zoo, 1, 4).unwrap();
+        let mix = srv.mix_roofline(&zoo, 4).unwrap();
+        assert!(
+            mix >= ra.min(rb) * 0.999 && mix <= ra.max(rb) * 1.001,
+            "mix roofline {mix:.0} outside [{ra:.0}, {rb:.0}]"
+        );
+        // A single-model set degenerates to that model's own roofline.
+        let solo = vec![zoo[0].clone()];
+        let m = server(4).mix_roofline(&solo, 4).unwrap();
+        assert!((m - ra).abs() < 1e-9 * ra.max(1.0));
+    }
+}

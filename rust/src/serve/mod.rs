@@ -1,0 +1,60 @@
+//! Request-driven batched inference serving on top of the DIMC cluster.
+//!
+//! The paper stops at sustained single-stream throughput and PR 1's
+//! [`cluster`](crate::cluster) module scales that to N cores — but a
+//! production deployment ("serves heavy traffic from millions of users",
+//! per ROADMAP.md) is driven by *requests*: they arrive stochastically,
+//! queue, get batched, and are judged by tail latency, not just GOPS.
+//! This module is that serving tier, as a deterministic discrete-event
+//! simulation:
+//!
+//! * [`request`] — seeded arrival-trace generation (uniform, bursty and
+//!   diurnal-ramp shapes over any model mix) with a deterministic Lcg, so
+//!   every run is reproducible;
+//! * [`batcher`] — the dynamic batcher: per-model FIFO queues dispatching
+//!   on batch-full or window-expiry (`max_batch`, `max_wait_cycles`);
+//! * [`engine`] — the event loop: an N-core cluster drains batches
+//!   (service times come from the cluster scheduler and are memoized per
+//!   `(model, batch)`), with exact per-request cycle accounting;
+//! * [`stats`] — the metrics sink: throughput, p50/p95/p99 latency, queue
+//!   depth and DIMC-tile utilization;
+//! * [`sweep`] — the load-vs-latency curve (`repro serve` /
+//!   `cargo bench --bench serve_latency`).
+//!
+//! Invariants (property-tested in `rust/tests/prop_serve.rs`): every
+//! admitted request completes exactly once; with a zero wait window an
+//! uncontended request's latency equals the unbatched cluster latency;
+//! under overload, achieved throughput saturates at the cluster's
+//! batch-mode roofline and never exceeds it.
+//!
+//! ```
+//! use dimc_rvv::arch::Arch;
+//! use dimc_rvv::compiler::layer::LayerConfig;
+//! use dimc_rvv::dimc::Precision;
+//! use dimc_rvv::serve::{BatchPolicy, Server, TraceConfig, TraceShape, Workload};
+//!
+//! // Serve a tiny one-layer model on a 2-core cluster at 2000 req/s.
+//! let zoo = vec![Workload::new(
+//!     "tiny",
+//!     vec![LayerConfig::conv("t1", 16, 64, 3, 3, 8, 8, 1, 1)],
+//! )];
+//! let mut server = Server::new(Arch::default(), Precision::Int4, 2);
+//! let trace = TraceConfig { rps: 2000.0, requests: 64, shape: TraceShape::Uniform, seed: 0xD1AC };
+//! let report = server
+//!     .serve_trace(&zoo, BatchPolicy { max_batch: 4, max_wait_cycles: 0 }, &trace)
+//!     .unwrap();
+//! assert_eq!(report.completed.len(), 64); // conservation
+//! assert!(report.latency_ms(99.0) >= report.latency_ms(50.0));
+//! ```
+
+pub mod request;
+pub mod batcher;
+pub mod engine;
+pub mod stats;
+pub mod sweep;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{Server, Workload};
+pub use request::{Request, TraceConfig, TraceShape};
+pub use stats::{BatchRecord, CompletedRequest, ServeReport};
+pub use sweep::{load_sweep, rps_ladder, LoadPoint};

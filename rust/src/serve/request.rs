@@ -1,0 +1,221 @@
+//! Deterministic request generation: seeded arrival traces over a model
+//! mix.
+//!
+//! A trace is a finite, time-ordered list of [`Request`]s. Arrival gaps
+//! are exponentially distributed (Poisson traffic) around the configured
+//! mean rate, drawn from the repo's deterministic
+//! [`Lcg`](crate::compiler::pack::Lcg) so a `(shape, seed, rps, n)`
+//! quadruple always produces the identical trace — the serving simulator
+//! never touches a wall clock. Three shapes model the traffic patterns a
+//! production deployment sees:
+//!
+//! * [`TraceShape::Uniform`] — steady Poisson arrivals at the mean rate;
+//! * [`TraceShape::Bursty`] — alternating on/off phases (4x the mean rate
+//!   inside a burst, 4/7 of it between bursts) with the same long-run mean;
+//! * [`TraceShape::Ramp`] — a diurnal ramp: the instantaneous rate climbs
+//!   linearly from 0.5x to 1.5x of the mean across the trace.
+
+use crate::compiler::pack::Lcg;
+
+/// Requests per burst phase of the [`TraceShape::Bursty`] trace.
+pub const BURST_LEN: u64 = 16;
+
+/// The shape of an arrival trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceShape {
+    /// Steady Poisson arrivals at the configured mean rate.
+    Uniform,
+    /// On/off phases: 4x the mean rate for [`BURST_LEN`] requests, then a
+    /// slow phase that restores the long-run mean.
+    Bursty,
+    /// Diurnal ramp: instantaneous rate grows linearly from 0.5x to 1.5x
+    /// of the mean over the trace.
+    Ramp,
+}
+
+impl TraceShape {
+    /// Parse a CLI trace name (`uniform` / `bursty` / `ramp`).
+    pub fn parse(s: &str) -> Option<TraceShape> {
+        match s {
+            "uniform" => Some(TraceShape::Uniform),
+            "bursty" => Some(TraceShape::Bursty),
+            "ramp" => Some(TraceShape::Ramp),
+            _ => None,
+        }
+    }
+
+    /// The canonical CLI name of the shape.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceShape::Uniform => "uniform",
+            TraceShape::Bursty => "bursty",
+            TraceShape::Ramp => "ramp",
+        }
+    }
+}
+
+/// One inference request: which model it wants and when it arrived.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Unique, dense id (`0..n` in arrival order).
+    pub id: u64,
+    /// Index into the served workload set.
+    pub model: usize,
+    /// Arrival time in core cycles.
+    pub arrival: u64,
+}
+
+/// Parameters of one generated trace. The clock that converts the rate
+/// to cycles is *not* part of the config — the server supplies its own
+/// [`Arch`](crate::arch::Arch) clock, so arrivals and service times can
+/// never desynchronize.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Mean offered load in requests per second.
+    pub rps: f64,
+    /// Number of requests to generate.
+    pub requests: usize,
+    /// Arrival pattern.
+    pub shape: TraceShape,
+    /// Lcg seed; the same seed always reproduces the same trace.
+    pub seed: u64,
+}
+
+/// Exponential gap with the given mean, in cycles (>= 1).
+fn exp_gap(r: &mut Lcg, mean_cycles: f64) -> u64 {
+    // 53 uniform bits -> u in [0, 1); -ln(1 - u) is Exp(1).
+    let u = (r.next_u64() >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0);
+    (mean_cycles * -(1.0 - u).ln()).round().max(1.0) as u64
+}
+
+/// Weighted model draw over (already validated) non-negative weights.
+fn pick_model(r: &mut Lcg, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    let u = (r.next_u64() >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0);
+    let mut acc = 0.0;
+    for (i, w) in weights.iter().enumerate() {
+        acc += w / total;
+        if u < acc {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// Generate a time-ordered trace of `cfg.requests` requests whose model is
+/// drawn per-request from `weights` (one non-negative weight per served
+/// model; they need not sum to 1). `clock_hz` converts the configured
+/// rate to cycles.
+pub fn generate(cfg: &TraceConfig, weights: &[f64], clock_hz: f64) -> Vec<Request> {
+    assert!(!weights.is_empty(), "need at least one served model");
+    assert!(weights.iter().all(|w| *w >= 0.0) && weights.iter().sum::<f64>() > 0.0);
+    let mean = clock_hz / cfg.rps.max(1e-9); // mean gap in cycles
+    let n = cfg.requests;
+    let mut r = Lcg::new(cfg.seed);
+    let mut out = Vec::with_capacity(n);
+    let mut at = 0u64;
+    for i in 0..n as u64 {
+        let gap_mean = match cfg.shape {
+            TraceShape::Uniform => mean,
+            TraceShape::Bursty => {
+                // Alternate burst (4x rate) and lull (4/7 rate) phases of
+                // BURST_LEN requests each; the phase means average to 1.
+                if (i / BURST_LEN) % 2 == 0 {
+                    mean / 4.0
+                } else {
+                    mean * 7.0 / 4.0
+                }
+            }
+            TraceShape::Ramp => {
+                let frac = if n > 1 { i as f64 / (n - 1) as f64 } else { 0.5 };
+                mean / (0.5 + frac) // instantaneous rate 0.5x..1.5x
+            }
+        };
+        // Saturate rather than wrap so absurdly low rates still yield a
+        // sorted (if degenerate) trace.
+        at = at.saturating_add(exp_gap(&mut r, gap_mean));
+        out.push(Request { id: i, model: pick_model(&mut r, weights), arrival: at });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CLOCK_HZ: f64 = 500e6;
+
+    fn cfg(shape: TraceShape) -> TraceConfig {
+        TraceConfig { rps: 1000.0, requests: 400, shape, seed: 0x5EED }
+    }
+
+    #[test]
+    fn traces_are_deterministic_and_ordered() {
+        for shape in [TraceShape::Uniform, TraceShape::Bursty, TraceShape::Ramp] {
+            let a = generate(&cfg(shape), &[1.0], CLOCK_HZ);
+            let b = generate(&cfg(shape), &[1.0], CLOCK_HZ);
+            assert_eq!(a.len(), 400);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival, y.arrival);
+                assert_eq!(x.model, y.model);
+            }
+            assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival), "unsorted");
+            assert!(a.windows(2).all(|w| w[0].id + 1 == w[1].id), "ids not dense");
+        }
+    }
+
+    #[test]
+    fn mean_rate_is_close_to_configured() {
+        for shape in [TraceShape::Uniform, TraceShape::Bursty] {
+            let c = cfg(shape);
+            let t = generate(&c, &[1.0], CLOCK_HZ);
+            let span = (t.last().unwrap().arrival - t[0].arrival) as f64 / CLOCK_HZ;
+            let rate = (t.len() - 1) as f64 / span;
+            assert!(
+                (rate / c.rps - 1.0).abs() < 0.25,
+                "{}: empirical {rate:.0} vs configured {:.0}",
+                shape.as_str(),
+                c.rps
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_uniform() {
+        // Compare the p95/p50 gap ratio: bursts create many short gaps and
+        // a few very long ones.
+        let spread = |shape| {
+            let t = generate(&cfg(shape), &[1.0], CLOCK_HZ);
+            let mut gaps: Vec<u64> =
+                t.windows(2).map(|w| w[1].arrival - w[0].arrival).collect();
+            gaps.sort_unstable();
+            gaps[gaps.len() * 95 / 100] as f64 / gaps[gaps.len() / 2].max(1) as f64
+        };
+        assert!(spread(TraceShape::Bursty) > spread(TraceShape::Uniform));
+    }
+
+    #[test]
+    fn ramp_accelerates() {
+        let t = generate(&cfg(TraceShape::Ramp), &[1.0], CLOCK_HZ);
+        let half = t.len() / 2;
+        let first = t[half].arrival - t[0].arrival;
+        let second = t.last().unwrap().arrival - t[half].arrival;
+        assert!(second < first, "ramp second half {second} not faster than first {first}");
+    }
+
+    #[test]
+    fn mix_draws_every_model_roughly_in_proportion() {
+        let t = generate(&cfg(TraceShape::Uniform), &[3.0, 1.0], CLOCK_HZ);
+        let m0 = t.iter().filter(|r| r.model == 0).count() as f64;
+        let frac = m0 / t.len() as f64;
+        assert!((0.6..0.9).contains(&frac), "model 0 drew {frac:.2} of traffic");
+    }
+
+    #[test]
+    fn trace_shape_round_trips_through_parse() {
+        for shape in [TraceShape::Uniform, TraceShape::Bursty, TraceShape::Ramp] {
+            assert_eq!(TraceShape::parse(shape.as_str()), Some(shape));
+        }
+        assert_eq!(TraceShape::parse("nope"), None);
+    }
+}

@@ -1,0 +1,200 @@
+//! The serving metrics sink: per-request records folded into the numbers
+//! an operator actually watches — throughput, tail latency, queue depth
+//! and DIMC-tile utilization.
+
+use super::batcher::BatchPolicy;
+use super::request::TraceShape;
+
+/// One request's full lifecycle, recorded at dispatch time.
+#[derive(Debug, Clone)]
+pub struct CompletedRequest {
+    /// The request's trace id.
+    pub id: u64,
+    /// Served model index.
+    pub model: usize,
+    /// Arrival cycle.
+    pub arrival: u64,
+    /// Cycle the batch containing this request started executing.
+    pub dispatched: u64,
+    /// Cycle the batch (and therefore this request) finished.
+    pub completed: u64,
+}
+
+impl CompletedRequest {
+    /// End-to-end latency in cycles (queueing + batching + service).
+    pub fn latency(&self) -> u64 {
+        self.completed - self.arrival
+    }
+
+    /// Cycles spent queued before the batch started executing.
+    pub fn queue_wait(&self) -> u64 {
+        self.dispatched - self.arrival
+    }
+}
+
+/// One dispatched batch.
+#[derive(Debug, Clone)]
+pub struct BatchRecord {
+    /// Served model index.
+    pub model: usize,
+    /// Requests in the batch (1..=max_batch).
+    pub size: u32,
+    /// Cycle the batch started executing on the cluster.
+    pub dispatched: u64,
+    /// Cluster cycles the batch occupied the cluster for.
+    pub service_cycles: u64,
+    /// Average DIMC cores the batch kept busy while executing.
+    pub cores_used: f64,
+}
+
+/// Everything one serving simulation produced.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Names of the served models (indexed by `model` fields).
+    pub model_names: Vec<String>,
+    /// Cluster cores the server ran on.
+    pub cores: u32,
+    /// The dynamic-batching policy in force.
+    pub policy: BatchPolicy,
+    /// Arrival-trace shape.
+    pub shape: TraceShape,
+    /// Trace seed (reproduces the run bit-for-bit).
+    pub seed: u64,
+    /// Core clock in Hz.
+    pub clock_hz: f64,
+    /// Every request, in dispatch order. Length equals the trace length —
+    /// the conservation property.
+    pub completed: Vec<CompletedRequest>,
+    /// Every dispatched batch, in dispatch order.
+    pub batches: Vec<BatchRecord>,
+    /// First arrival to last completion, in cycles (the measurement span).
+    pub span_cycles: u64,
+    /// Cycles the cluster was executing some batch.
+    pub busy_cycles: u64,
+    /// Integral of busy-core count over time (core-cycles of tile work).
+    pub tile_core_cycles: f64,
+    /// Time-weighted mean queue depth over the span.
+    pub mean_queue_depth: f64,
+    /// Peak instantaneous queue depth.
+    pub max_queue_depth: usize,
+    /// Empirical offered load in requests per second (from the arrivals).
+    pub offered_rps: f64,
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (`p` in 0..=100).
+pub fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+impl ServeReport {
+    /// All request latencies in cycles, ascending.
+    pub fn latencies_sorted(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.completed.iter().map(|r| r.latency()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Convert cycles to milliseconds at the report's clock.
+    pub fn ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.clock_hz * 1e3
+    }
+
+    /// The `p`-th latency percentile in milliseconds.
+    pub fn latency_ms(&self, p: f64) -> f64 {
+        self.ms(percentile(&self.latencies_sorted(), p))
+    }
+
+    /// Mean latency in milliseconds.
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.completed.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.completed.iter().map(|r| r.latency()).sum();
+        self.ms(total) / self.completed.len() as f64
+    }
+
+    /// Achieved throughput in inferences per second over the span.
+    pub fn achieved_rps(&self) -> f64 {
+        self.completed.len() as f64 / (self.span_cycles.max(1) as f64 / self.clock_hz)
+    }
+
+    /// Fraction of the span the cluster was executing a batch.
+    pub fn utilization(&self) -> f64 {
+        self.busy_cycles as f64 / self.span_cycles.max(1) as f64
+    }
+
+    /// Fraction of total DIMC-tile capacity (cores x span) that did work.
+    pub fn tile_utilization(&self) -> f64 {
+        self.tile_core_cycles / (self.cores.max(1) as f64 * self.span_cycles.max(1) as f64)
+    }
+
+    /// Mean dispatched batch size.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches.is_empty() {
+            return 0.0;
+        }
+        self.batches.iter().map(|b| b.size as u64).sum::<u64>() as f64
+            / self.batches.len() as f64
+    }
+
+    /// Render the operator summary block.
+    pub fn render(&self) -> String {
+        let lat = self.latencies_sorted();
+        format!(
+            "== serving report ==\n\
+             models: {} | trace {} seed 0x{:X} | {} cores | max batch {} | max wait {} cyc\n\
+             requests: {} | offered {:.1} req/s | achieved {:.1} req/s\n\
+             latency: p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms | max {:.3} ms\n\
+             queue:   mean depth {:.2} | peak depth {} | {} batches (mean size {:.2})\n\
+             cluster: busy {:.1}% | DIMC-tile utilization {:.1}%",
+            self.model_names.join(","),
+            self.shape.as_str(),
+            self.seed,
+            self.cores,
+            self.policy.max_batch,
+            self.policy.max_wait_cycles,
+            self.completed.len(),
+            self.offered_rps,
+            self.achieved_rps(),
+            self.ms(percentile(&lat, 50.0)),
+            self.ms(percentile(&lat, 95.0)),
+            self.ms(percentile(&lat, 99.0)),
+            self.mean_latency_ms(),
+            self.ms(lat.last().copied().unwrap_or(0)),
+            self.mean_queue_depth,
+            self.max_queue_depth,
+            self.batches.len(),
+            self.mean_batch_size(),
+            self.utilization() * 100.0,
+            self.tile_utilization() * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 50.0), 50);
+        assert_eq!(percentile(&v, 95.0), 95);
+        assert_eq!(percentile(&v, 99.0), 99);
+        assert_eq!(percentile(&v, 100.0), 100);
+        assert_eq!(percentile(&[7], 99.0), 7);
+        assert_eq!(percentile(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn request_accounting_identities() {
+        let r = CompletedRequest { id: 0, model: 0, arrival: 10, dispatched: 25, completed: 40 };
+        assert_eq!(r.latency(), 30);
+        assert_eq!(r.queue_wait(), 15);
+        assert_eq!(r.latency(), r.queue_wait() + 15);
+    }
+}

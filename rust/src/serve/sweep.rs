@@ -1,0 +1,166 @@
+//! The load-vs-latency sweep: the serving counterpart of the cluster
+//! scaling curve. Offered load climbs a ladder of fractions of the
+//! batch-mode roofline; each rung is one full serving simulation, and the
+//! folded points show the classic saturation picture — flat latency at
+//! low load, a knee near the roofline, and queueing blow-up past it.
+
+use super::batcher::BatchPolicy;
+use super::engine::{Server, Workload};
+use super::request::{TraceConfig, TraceShape};
+use super::stats::percentile;
+use crate::metrics::report::render_table;
+use crate::pipeline::core::SimError;
+
+/// One rung of the load ladder, folded from a full [`Server::serve_trace`]
+/// run.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadPoint {
+    /// Configured offered load for this rung, in requests per second.
+    pub offered_rps: f64,
+    /// Achieved throughput over the run's span.
+    pub achieved_rps: f64,
+    /// Median latency in milliseconds.
+    pub p50_ms: f64,
+    /// 95th-percentile latency in milliseconds.
+    pub p95_ms: f64,
+    /// 99th-percentile (tail) latency in milliseconds.
+    pub p99_ms: f64,
+    /// Mean latency in milliseconds.
+    pub mean_ms: f64,
+    /// Fraction of the span the cluster was executing.
+    pub utilization: f64,
+    /// Fraction of aggregate DIMC-tile capacity doing useful work.
+    pub tile_utilization: f64,
+    /// Time-weighted mean queue depth.
+    pub mean_queue_depth: f64,
+    /// Mean dispatched batch size.
+    pub mean_batch: f64,
+}
+
+/// The default ladder: fractions of the roofline spanning comfortable
+/// load to 25% past saturation.
+pub fn rps_ladder(roofline_rps: f64) -> Vec<f64> {
+    [0.1, 0.25, 0.5, 0.75, 0.9, 1.05, 1.25].iter().map(|f| f * roofline_rps).collect()
+}
+
+/// Run one serving simulation per rung of `ladder` (same trace shape,
+/// seed, request count and batching policy throughout) and fold each into
+/// a [`LoadPoint`]. The server's service-time caches stay warm across
+/// rungs, so the sweep costs little more than its slowest rung.
+pub fn load_sweep(
+    server: &mut Server,
+    workloads: &[Workload],
+    policy: BatchPolicy,
+    shape: TraceShape,
+    seed: u64,
+    requests: usize,
+    ladder: &[f64],
+) -> Result<Vec<LoadPoint>, SimError> {
+    let mut points = Vec::with_capacity(ladder.len());
+    for &rps in ladder {
+        let trace = TraceConfig { rps, requests, shape, seed };
+        let rep = server.serve_trace(workloads, policy, &trace)?;
+        let lat = rep.latencies_sorted(); // sort once, read three ranks
+        points.push(LoadPoint {
+            offered_rps: rps,
+            achieved_rps: rep.achieved_rps(),
+            p50_ms: rep.ms(percentile(&lat, 50.0)),
+            p95_ms: rep.ms(percentile(&lat, 95.0)),
+            p99_ms: rep.ms(percentile(&lat, 99.0)),
+            mean_ms: rep.mean_latency_ms(),
+            utilization: rep.utilization(),
+            tile_utilization: rep.tile_utilization(),
+            mean_queue_depth: rep.mean_queue_depth,
+            mean_batch: rep.mean_batch_size(),
+        });
+    }
+    Ok(points)
+}
+
+/// Render a sweep as an aligned text table.
+pub fn render(title: &str, points: &[LoadPoint]) -> String {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{:.0}", p.offered_rps),
+                format!("{:.0}", p.achieved_rps),
+                format!("{:.3}", p.p50_ms),
+                format!("{:.3}", p.p95_ms),
+                format!("{:.3}", p.p99_ms),
+                format!("{:.2}", p.mean_queue_depth),
+                format!("{:.2}", p.mean_batch),
+                format!("{:.0}%", p.utilization * 100.0),
+                format!("{:.0}%", p.tile_utilization * 100.0),
+            ]
+        })
+        .collect();
+    render_table(
+        title,
+        &["offered r/s", "achieved r/s", "p50 ms", "p95 ms", "p99 ms", "depth", "batch",
+          "busy", "tile util"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+    use crate::compiler::layer::LayerConfig;
+    use crate::dimc::Precision;
+
+    fn tiny() -> Vec<Workload> {
+        vec![Workload::new(
+            "tiny",
+            vec![LayerConfig::conv("t1", 16, 64, 3, 3, 8, 8, 1, 1)],
+        )]
+    }
+
+    #[test]
+    fn sweep_shows_saturation() {
+        let zoo = tiny();
+        let mut srv = Server::new(Arch::default(), Precision::Int4, 4);
+        let policy = BatchPolicy { max_batch: 4, max_wait_cycles: 0 };
+        let roof = srv.batch_roofline(&zoo, 0, policy.max_batch).unwrap();
+        let pts = load_sweep(
+            &mut srv,
+            &zoo,
+            policy,
+            TraceShape::Uniform,
+            0xA11CE,
+            300,
+            &rps_ladder(roof),
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 7);
+        // Low load: negligible queueing, latency near the service floor.
+        assert!(pts[0].mean_queue_depth < 0.5, "idle rung queued {:.2}", pts[0].mean_queue_depth);
+        // Past the roofline the system saturates: achieved < offered and
+        // the tail inflates well beyond the low-load tail.
+        let last = pts.last().unwrap();
+        assert!(last.achieved_rps < last.offered_rps * 0.98);
+        assert!(last.achieved_rps <= roof * 1.02, "achieved above roofline");
+        assert!(last.p99_ms > pts[0].p99_ms, "tail latency did not grow with load");
+        assert!(last.mean_batch > pts[0].mean_batch, "batches did not grow with load");
+    }
+
+    #[test]
+    fn render_has_all_rungs() {
+        let zoo = tiny();
+        let mut srv = Server::new(Arch::default(), Precision::Int4, 2);
+        let pts = load_sweep(
+            &mut srv,
+            &zoo,
+            BatchPolicy::default(),
+            TraceShape::Bursty,
+            7,
+            80,
+            &[500.0, 5000.0],
+        )
+        .unwrap();
+        let t = render("demo serve", &pts);
+        assert!(t.contains("== demo serve =="));
+        assert!(t.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,211 @@
+//! Property tests for the serving tier (`dimc_rvv::serve`):
+//!
+//! * **conservation** — every request of a generated trace completes
+//!   exactly once, with causal per-request cycle accounting, for every
+//!   trace shape and a multi-model mix;
+//! * **zero-load latency** — with a zero wait window, an uncontended
+//!   request's latency is *exactly* the unbatched cluster latency;
+//! * **saturation** — under overload the achieved throughput converges to
+//!   the cluster's batch-mode roofline and never exceeds it;
+//! * **determinism** — identical config and seed reproduce the identical
+//!   report.
+//!
+//! Deterministic Lcg-driven generation, same style as `prop_cluster.rs`
+//! (proptest is not vendored in this offline image).
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::compiler::layer::LayerConfig;
+use dimc_rvv::dimc::Precision;
+use dimc_rvv::serve::request::generate;
+use dimc_rvv::serve::{
+    BatchPolicy, Request, Server, TraceConfig, TraceShape, Workload,
+};
+use std::collections::HashSet;
+
+fn tiny_zoo() -> Vec<Workload> {
+    vec![
+        Workload {
+            name: "tiny-a".to_string(),
+            layers: vec![
+                LayerConfig::conv("a1", 16, 64, 3, 3, 8, 8, 1, 1),
+                LayerConfig::conv("a2", 64, 64, 1, 1, 8, 8, 1, 0),
+            ],
+            weight: 3.0,
+        },
+        Workload {
+            name: "tiny-b".to_string(),
+            layers: vec![LayerConfig::conv("b1", 16, 16, 3, 3, 8, 8, 1, 1)],
+            weight: 1.0,
+        },
+    ]
+}
+
+fn server(cores: u32) -> Server {
+    Server::new(Arch::default(), Precision::Int4, cores)
+}
+
+#[test]
+fn every_admitted_request_completes_exactly_once() {
+    let zoo = tiny_zoo();
+    let weights: Vec<f64> = zoo.iter().map(|w| w.weight).collect();
+    let mut srv = server(4);
+    let policy = BatchPolicy { max_batch: 8, max_wait_cycles: 500 };
+    // Load the server near its roofline so real queueing and batching
+    // happen, for every trace shape.
+    let roof = srv.batch_roofline(&zoo, 0, policy.max_batch).unwrap();
+    for shape in [TraceShape::Uniform, TraceShape::Bursty, TraceShape::Ramp] {
+        let trace = TraceConfig { rps: roof * 0.8, requests: 300, shape, seed: 0xC0 };
+        let rep = srv.serve_trace(&zoo, policy, &trace).unwrap();
+
+        // Exactly the generated request set completed, each id once.
+        let arrivals = generate(&trace, &weights, Arch::default().clock_hz);
+        let want: HashSet<(u64, usize)> = arrivals.iter().map(|r| (r.id, r.model)).collect();
+        let got: HashSet<(u64, usize)> =
+            rep.completed.iter().map(|r| (r.id, r.model)).collect();
+        assert_eq!(rep.completed.len(), 300, "{}", shape.as_str());
+        assert_eq!(got, want, "{}: completed set != admitted set", shape.as_str());
+
+        // Causal accounting and batch-window discipline.
+        for r in &rep.completed {
+            assert!(r.arrival <= r.dispatched, "{}: dispatched before arrival", shape.as_str());
+            assert!(r.dispatched < r.completed, "{}: zero-length service", shape.as_str());
+        }
+        let batched: u64 = rep.batches.iter().map(|b| b.size as u64).sum();
+        assert_eq!(batched, 300, "{}: batch sizes must sum to the trace", shape.as_str());
+        assert!(
+            rep.batches.iter().all(|b| b.size >= 1 && b.size <= policy.max_batch),
+            "{}: batch left the window",
+            shape.as_str()
+        );
+    }
+}
+
+#[test]
+fn zero_load_latency_is_exactly_the_unbatched_cluster_latency() {
+    let zoo = tiny_zoo();
+    for cores in [1u32, 2, 4] {
+        let mut srv = server(cores);
+        let policy = BatchPolicy { max_batch: 8, max_wait_cycles: 0 };
+        for model in 0..zoo.len() {
+            let svc = srv.unbatched_latency(&zoo, model).unwrap();
+            // Requests spaced 10 service times apart never queue.
+            let arrivals: Vec<Request> = (0..4)
+                .map(|i| Request { id: i, model, arrival: 100 + i * 10 * svc })
+                .collect();
+            let rep = srv
+                .serve_arrivals(&zoo, policy, &arrivals, TraceShape::Uniform, 0)
+                .unwrap();
+            assert_eq!(rep.completed.len(), 4);
+            for r in &rep.completed {
+                assert_eq!(
+                    r.latency(),
+                    svc,
+                    "cores={cores} model={model}: zero-load latency must equal the \
+                     unbatched cluster latency"
+                );
+                assert_eq!(r.queue_wait(), 0);
+            }
+            assert!(rep.batches.iter().all(|b| b.size == 1));
+        }
+    }
+}
+
+#[test]
+fn wait_window_fills_a_batch_then_dispatches_on_the_filling_arrival() {
+    let zoo = tiny_zoo();
+    let mut srv = server(2);
+    let policy = BatchPolicy { max_batch: 2, max_wait_cycles: 1_000_000 };
+    // Two requests 100 cycles apart: the window holds the first until the
+    // second fills the batch, which dispatches immediately.
+    let arrivals = vec![
+        Request { id: 0, model: 1, arrival: 1000 },
+        Request { id: 1, model: 1, arrival: 1100 },
+    ];
+    let rep = srv.serve_arrivals(&zoo, policy, &arrivals, TraceShape::Uniform, 0).unwrap();
+    let (svc2, _) = srv.service_time(&zoo, 1, 2).unwrap();
+    assert_eq!(rep.batches.len(), 1);
+    assert_eq!(rep.batches[0].size, 2);
+    assert_eq!(rep.batches[0].dispatched, 1100, "batch-full dispatch is immediate");
+    assert_eq!(rep.completed[0].latency(), 100 + svc2);
+    assert_eq!(rep.completed[1].latency(), svc2);
+}
+
+#[test]
+fn overload_throughput_saturates_at_the_batch_roofline() {
+    let zoo = tiny_zoo();
+    let mut srv = server(4);
+    let max_batch = 4u32;
+    let policy = BatchPolicy { max_batch, max_wait_cycles: 1_000_000 };
+    let roof = srv.batch_roofline(&zoo, 0, max_batch).unwrap();
+    let (svc, _) = srv.service_time(&zoo, 0, max_batch).unwrap();
+    let full_batch_rate = max_batch as f64 * srv.sim.arch.clock_hz / svc as f64;
+
+    // 64 requests back-to-back (1 cycle apart): pure overload, every
+    // dispatch is a full batch.
+    let n = 64u64;
+    let arrivals: Vec<Request> =
+        (0..n).map(|i| Request { id: i, model: 0, arrival: i }).collect();
+    let rep = srv.serve_arrivals(&zoo, policy, &arrivals, TraceShape::Uniform, 0).unwrap();
+    assert_eq!(rep.completed.len() as u64, n);
+    assert!(
+        rep.batches.iter().all(|b| b.size == max_batch),
+        "under overload every dispatch must be a full batch"
+    );
+
+    let achieved = rep.achieved_rps();
+    assert!(
+        achieved <= roof * 1.001,
+        "achieved {achieved:.0} req/s exceeded the roofline {roof:.0}"
+    );
+    assert!(
+        achieved >= full_batch_rate * 0.98,
+        "achieved {achieved:.0} req/s fell short of the full-batch rate \
+         {full_batch_rate:.0} (roofline {roof:.0})"
+    );
+    // Saturated server: the cluster never idles between batches.
+    assert!(rep.utilization() > 0.99, "utilization {:.3} under overload", rep.utilization());
+}
+
+#[test]
+fn identical_seed_reproduces_the_identical_report() {
+    let zoo = tiny_zoo();
+    let policy = BatchPolicy { max_batch: 8, max_wait_cycles: 200 };
+    let trace =
+        TraceConfig { rps: 50_000.0, requests: 200, shape: TraceShape::Bursty, seed: 0xFEED };
+    // Two independent servers (cold caches) must agree bit-for-bit.
+    let a = server(4).serve_trace(&zoo, policy, &trace).unwrap();
+    let b = server(4).serve_trace(&zoo, policy, &trace).unwrap();
+    assert_eq!(a.completed.len(), b.completed.len());
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!((x.id, x.model, x.arrival, x.dispatched, x.completed),
+                   (y.id, y.model, y.arrival, y.dispatched, y.completed));
+    }
+    assert_eq!(a.batches.len(), b.batches.len());
+    assert_eq!(a.span_cycles, b.span_cycles);
+
+    // A different seed produces a different trace.
+    let other = TraceConfig { seed: 0xBEEF, ..trace };
+    let c = server(4).serve_trace(&zoo, policy, &other).unwrap();
+    assert!(
+        a.completed.iter().zip(&c.completed).any(|(x, y)| x.arrival != y.arrival),
+        "different seeds produced identical arrivals"
+    );
+}
+
+#[test]
+fn tail_latency_grows_with_offered_load() {
+    let zoo = tiny_zoo();
+    let mut srv = server(4);
+    let policy = BatchPolicy { max_batch: 8, max_wait_cycles: 0 };
+    let roof = srv.batch_roofline(&zoo, 0, policy.max_batch).unwrap();
+    let p99_at = |srv: &mut Server, rps: f64| {
+        let trace = TraceConfig { rps, requests: 300, shape: TraceShape::Uniform, seed: 0x10AD };
+        srv.serve_trace(&zoo, policy, &trace).unwrap().latency_ms(99.0)
+    };
+    let calm = p99_at(&mut srv, roof * 0.05);
+    let slammed = p99_at(&mut srv, roof * 1.3);
+    assert!(
+        slammed > calm,
+        "p99 at 1.3x roofline ({slammed:.3} ms) not above p99 at 0.05x ({calm:.3} ms)"
+    );
+}
