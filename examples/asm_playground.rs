@@ -34,7 +34,8 @@ fn main() {
     for i in &prog {
         let word = encode(i);
         assert_eq!(decode(word).unwrap(), *i, "encode/decode must round-trip");
-        println!("{word:#010x}  {:<40} {:?}", i.to_string(), i.class());
+        let disasm = i.to_string();
+        println!("{word:#010x}  {disasm:<40} {:?}", i.class());
     }
 
     // place data: acts nibbles 1..=8 twice, weights all 2

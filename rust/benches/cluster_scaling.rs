@@ -6,32 +6,46 @@
 //! The paper's single tile peaks at 137 GOPS; the cluster model shows how
 //! far output-channel-group sharding carries that number before the
 //! shared bus and group-poor layers flatten the curve.
+//!
+//! The whole bench drives the simulator through the `sim::Session`
+//! façade: the sweep via `Session::scaling_curve`, the single-core
+//! anchor via a 1-core session's `RunSpec::Network` report.
 
 #[path = "harness.rs"]
 mod harness;
 
 use dimc_rvv::cluster::scaling::{is_monotone, render};
-use dimc_rvv::coordinator::driver::{simulate_layer, Engine};
-use dimc_rvv::coordinator::figures::{cluster_core_counts, cluster_scaling_points};
-use dimc_rvv::workloads::resnet;
+use dimc_rvv::coordinator::figures::cluster_core_counts;
+use dimc_rvv::sim::{RunSpec, Session};
 
 fn main() {
-    let points =
-        harness::bench("cluster/resnet50-1-2-4-8", 3, || cluster_scaling_points().unwrap());
+    let core_counts = cluster_core_counts();
+    let points = harness::bench("cluster/resnet50-1-2-4-8", 3, || {
+        Session::builder()
+            .model("resnet50")
+            .cores(*core_counts.last().unwrap())
+            .build()
+            .unwrap()
+            .scaling_curve(&core_counts)
+            .unwrap()
+    });
 
     println!();
     println!("{}", render("resnet50 cluster scaling (simulated)", &points));
 
-    let single: u64 = resnet::resnet50()
-        .iter()
-        .map(|l| simulate_layer(l, Engine::Dimc).unwrap().cycles)
-        .sum();
+    let single = Session::builder()
+        .model("resnet50")
+        .build()
+        .unwrap()
+        .run(&RunSpec::Network)
+        .unwrap()
+        .cycles;
     assert_eq!(
         points[0].cycles, single,
         "1-core cluster must reproduce the single-core simulator exactly"
     );
     assert!(is_monotone(&points), "throughput regressed with more cores");
-    assert_eq!(points.len(), cluster_core_counts().len());
+    assert_eq!(points.len(), core_counts.len());
 
     let last = points.last().unwrap();
     println!(

@@ -7,16 +7,32 @@
 //! This is the production-facing counterpart of `cluster_scaling`: where
 //! that bench asks "how fast can N cores run one network", this one asks
 //! "what tail latency do users see at a given request rate".
+//!
+//! The whole bench drives the simulator through the `sim::Session`
+//! façade: roofline via `Session::batch_roofline`, the ladder via
+//! `Session::load_sweep`.
 
 #[path = "harness.rs"]
 mod harness;
 
-use dimc_rvv::coordinator::figures::serve_latency_points;
 use dimc_rvv::serve::sweep::render;
+use dimc_rvv::serve::rps_ladder;
+use dimc_rvv::sim::Session;
 
 fn main() {
-    let points =
-        harness::bench("serve/resnet50-load-ladder", 3, || serve_latency_points().unwrap());
+    let points = harness::bench("serve/resnet50-load-ladder", 3, || {
+        let mut session = Session::builder()
+            .model("resnet50")
+            .cores(4)
+            .rps(1000.0) // placeholder rate; the ladder sets each rung's rate
+            .requests(256)
+            .max_batch(8)
+            .seed(0xD1AC)
+            .build()
+            .unwrap();
+        let roofline = session.batch_roofline(0).unwrap();
+        session.load_sweep(&rps_ladder(roofline)).unwrap()
+    });
 
     println!();
     println!(

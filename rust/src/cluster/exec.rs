@@ -154,7 +154,7 @@ impl ClusterSim {
                 continue; // same degree of parallelism already evaluated
             }
             let cand = self.eval_plan(topo, &plan)?;
-            if best.as_ref().map_or(true, |b| cand.cycles < b.cycles) {
+            if best.as_ref().map(|b| cand.cycles < b.cycles).unwrap_or(true) {
                 best = Some(cand);
             }
         }
@@ -379,8 +379,8 @@ mod tests {
     #[test]
     fn contention_kicks_in_on_a_narrow_bus() {
         let l = LayerConfig::conv("c", 256, 256, 3, 3, 14, 14, 1, 1);
-        let mut narrow = Arch::default();
-        narrow.cluster_bus_bytes = 1; // starve the shared bus
+        // starve the shared bus
+        let narrow = Arch { cluster_bus_bytes: 1, ..Arch::default() };
         let mut sim_n = ClusterSim::new(narrow, Precision::Int4);
         let t = ClusterTopology::from_arch(8, &narrow);
         let r = sim_n.simulate_layer_cluster(&l, &t).unwrap();

@@ -116,7 +116,7 @@ impl ShardPlan {
 /// Split output channels on 32-kernel group boundaries, `n <= l.groups()`.
 fn by_channels(l: &LayerConfig, n: u32) -> ShardPlan {
     let groups = l.groups();
-    debug_assert!(n >= 1 && n <= groups);
+    debug_assert!((1..=groups).contains(&n));
     let base = groups / n;
     let rem = groups % n;
     let rows = DIMC_ROWS as u32;
@@ -140,7 +140,7 @@ fn by_channels(l: &LayerConfig, n: u32) -> ShardPlan {
 /// band is a contiguous row slice of the parent's padded tensor.
 fn by_rows(l: &LayerConfig, n: u32) -> ShardPlan {
     let oh = l.oh();
-    debug_assert!(n >= 2 && n <= oh);
+    debug_assert!((2..=oh).contains(&n));
     let base = oh / n;
     let rem = oh % n;
     let iwp = l.iw + 2 * l.pad;

@@ -101,9 +101,7 @@ mod tests {
 
     #[test]
     fn from_arch_picks_up_the_knobs() {
-        let mut a = Arch::default();
-        a.cluster_bus_bytes = 7;
-        a.cluster_barrier_cycles = 3;
+        let a = Arch { cluster_bus_bytes: 7, cluster_barrier_cycles: 3, ..Arch::default() };
         let t = ClusterTopology::from_arch(0, &a);
         assert_eq!(t.cores, 1); // clamped
         assert_eq!(t.bus_bytes_per_cycle, 7);

@@ -9,12 +9,21 @@
 //! repro simulate --ich .. --och .. [--kh ..] ...    # one custom layer
 //! repro asm <file.s>                                # assemble + run
 //! ```
+//!
+//! Every simulation subcommand drives the simulator exclusively through
+//! the [`sim::Session`](crate::sim::Session) façade, and every
+//! subcommand accepts `--json` to emit the unified
+//! [`RunReport`](crate::sim::RunReport) (or an array/object of them) to
+//! stdout instead of the human tables.
 
 use crate::compiler::layer::LayerConfig;
-use crate::coordinator::driver::{simulate_layer, Engine};
+use crate::coordinator::driver::LayerResult;
 use crate::coordinator::{figures, verify};
-use crate::metrics::area::AreaModel;
-use crate::metrics::report::{layer_row, render_table, summarize};
+use crate::metrics::report::{render_table, summarize};
+use crate::sim::{
+    write_load_point, write_scaling_point, Engine, JsonBuilder, LayerReportRow, RunCheck,
+    RunReport, RunSpec, Session,
+};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
@@ -45,7 +54,10 @@ pub fn usage() -> &'static str {
                report throughput, p50/p95/p99 latency, queue depth and\n\
                tile utilization (--sweep adds the load-vs-latency curve)\n\
      asm       <file.s> assemble and run on the DIMC-enhanced core\n\
-     trace     <file.s> run with a cycle-annotated pipeline trace"
+     trace     <file.s> run with a cycle-annotated pipeline trace\n\
+     \n\
+     every subcommand accepts --json: emit the unified RunReport (or an\n\
+     array/object of reports) as JSON to stdout instead of the tables"
 }
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -86,26 +98,37 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
         return Ok(());
     };
     let flags = parse_flags(&args[1..]);
+    let json = flags.contains_key("json");
     match cmd.as_str() {
-        "fig5" => fig5(),
-        "fig6" => fig6(),
-        "fig7" => fig7(),
-        "fig8" => fig8(),
-        "fig9" => fig9(),
-        "table1" => table1(),
-        "zoo" => zoo(),
-        "resnet50" => resnet50(),
+        "fig5" => fig5(json),
+        "fig6" => fig6(json),
+        "fig7" => fig7(json),
+        "fig8" => fig8(json),
+        "fig9" => fig9(json),
+        "table1" => table1(json),
+        "zoo" => zoo(json),
+        "resnet50" => resnet50(json),
         "verify" => {
             let n = flag(&flags, "seeds", 3u32)? as u64;
-            run_verify((0..n).map(|i| 0xD1AC + i).collect())
+            let reports = verify::verify_all(&(0..n).map(|i| 0xD1AC + i).collect::<Vec<_>>())?;
+            if json {
+                println!("{}", verify_json(&reports));
+            } else {
+                print_verify(&reports);
+            }
+            anyhow::ensure!(reports.iter().all(|r| r.ok()), "golden cross-check FAILED");
+            if !json {
+                println!("  all {} cross-checks passed", reports.len());
+            }
+            Ok(())
         }
-        "simulate" => simulate(&flags),
-        "energy" => energy(),
-        "tiles" => tiles(),
-        "cluster" => cluster(&flags),
-        "serve" => serve(&flags),
-        "asm" => asm(args.get(1).map(String::as_str)),
-        "trace" => trace(args.get(1).map(String::as_str)),
+        "simulate" => simulate(&flags, json),
+        "energy" => energy(json),
+        "tiles" => tiles(json),
+        "cluster" => cluster(&flags, json),
+        "serve" => serve(&flags, json),
+        "asm" => asm(args.get(1).map(String::as_str), json),
+        "trace" => trace(args.get(1).map(String::as_str), json),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())
@@ -114,24 +137,44 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
     }
 }
 
-fn sim_err(e: crate::pipeline::core::SimError) -> anyhow::Error {
-    anyhow::anyhow!("simulation failed: {e}")
+/// Print a JSON array of façade reports.
+fn print_reports_json(reports: &[RunReport]) {
+    let mut j = JsonBuilder::new();
+    j.begin_arr();
+    for r in reports {
+        r.write_json(&mut j);
+    }
+    j.end_arr();
+    println!("{}", j.finish());
 }
 
-/// Look a zoo model up by name, failing with the list of valid names.
-fn lookup_model(name: &str) -> Result<crate::workloads::Model> {
-    use crate::workloads::zoo;
-    match zoo::model_by_name(name) {
-        Some(m) => Ok(m),
-        None => {
-            let names: Vec<&str> = zoo::all_models().iter().map(|m| m.name).collect();
-            bail!("unknown model `{name}`; available: {}", names.join(", "))
-        }
+/// Rebuild a legacy [`LayerResult`] from a façade row (the energy and
+/// multi-tile models consume per-class instruction counts).
+fn as_layer_result(row: &LayerReportRow, engine: Engine, clock_hz: f64) -> LayerResult {
+    LayerResult {
+        name: row.name.clone(),
+        engine,
+        cycles: row.cycles,
+        instret: row.instret.unwrap_or(0),
+        ops: row.ops,
+        class_counts: row.class_counts.unwrap_or([0; 8]),
+        clock_hz,
     }
 }
 
-fn fig5() -> Result<()> {
-    let rows = figures::resnet50_rows().map_err(sim_err)?;
+fn print_checks(checks: &[RunCheck]) {
+    for c in checks {
+        println!("check: {} {}", c.detail, if c.ok { "OK" } else { "FAIL" });
+    }
+}
+
+fn fig5(json: bool) -> Result<()> {
+    let report = figures::resnet50_report()?;
+    if json {
+        println!("{}", report.to_json());
+        return Ok(());
+    }
+    let rows = figures::rows_from(&report);
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {
@@ -153,8 +196,13 @@ fn fig5() -> Result<()> {
     Ok(())
 }
 
-fn fig6() -> Result<()> {
-    let rows = figures::resnet50_rows().map_err(sim_err)?;
+fn fig6(json: bool) -> Result<()> {
+    let report = figures::resnet50_report()?;
+    if json {
+        println!("{}", report.to_json());
+        return Ok(());
+    }
+    let rows = figures::rows_from(&report);
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {
@@ -175,8 +223,13 @@ fn fig6() -> Result<()> {
     Ok(())
 }
 
-fn fig7() -> Result<()> {
-    let rows = figures::resnet50_rows().map_err(sim_err)?;
+fn fig7(json: bool) -> Result<()> {
+    let report = figures::resnet50_report()?;
+    if json {
+        println!("{}", report.to_json());
+        return Ok(());
+    }
+    let rows = figures::rows_from(&report);
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {
@@ -202,12 +255,17 @@ fn fig7() -> Result<()> {
     Ok(())
 }
 
-fn fig8() -> Result<()> {
-    let rows = figures::fig8_sweep().map_err(sim_err)?;
+fn fig8(json: bool) -> Result<()> {
+    let reports = figures::fig8_reports()?;
+    if json {
+        print_reports_json(&reports);
+        return Ok(());
+    }
     let table: Vec<Vec<String>> = figures::fig8_ichs()
         .iter()
-        .zip(rows.iter())
-        .map(|(ich, r)| {
+        .zip(reports.iter())
+        .map(|(ich, rep)| {
+            let r = figures::row_from(&rep.layers[0]);
             let tiles = figures::fig8_layer(*ich).tiles(crate::dimc::Precision::Int4);
             vec![
                 format!("{ich}"),
@@ -225,12 +283,17 @@ fn fig8() -> Result<()> {
     Ok(())
 }
 
-fn fig9() -> Result<()> {
-    let rows = figures::fig9_sweep().map_err(sim_err)?;
+fn fig9(json: bool) -> Result<()> {
+    let reports = figures::fig9_reports()?;
+    if json {
+        print_reports_json(&reports);
+        return Ok(());
+    }
     let table: Vec<Vec<String>> = figures::fig9_ochs()
         .iter()
-        .zip(rows.iter())
-        .map(|(och, r)| {
+        .zip(reports.iter())
+        .map(|(och, rep)| {
+            let r = figures::row_from(&rep.layers[0]);
             let groups = figures::fig9_layer(*och).groups();
             vec![
                 format!("{och}"),
@@ -248,10 +311,33 @@ fn fig9() -> Result<()> {
     Ok(())
 }
 
-fn table1() -> Result<()> {
-    let (ours, peak) = figures::table1_this_work().map_err(sim_err)?;
+fn table1(json: bool) -> Result<()> {
+    let (ours, peak) = figures::table1_this_work()?;
     let mut rows = figures::table1_published();
     rows.push(ours);
+    if json {
+        let mut j = JsonBuilder::new();
+        j.begin_obj();
+        j.field_f64("measured_peak_gops", peak);
+        j.key("rows");
+        j.begin_arr();
+        for r in &rows {
+            j.begin_obj();
+            j.field_str("design", r.name);
+            j.field_str("core", r.core);
+            j.field_str("integration", r.integration);
+            j.field_str("memory", r.memory);
+            j.field_str("mem_size", r.mem_size);
+            j.field_str("freq_mhz", r.freq_mhz);
+            j.field_str("reported", r.reported);
+            j.field_opt_f64("norm_gops", r.norm_gops);
+            j.end_obj();
+        }
+        j.end_arr();
+        j.end_obj();
+        println!("{}", j.finish());
+        return Ok(());
+    }
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {
@@ -277,8 +363,13 @@ fn table1() -> Result<()> {
     Ok(())
 }
 
-fn zoo() -> Result<()> {
-    let sums = figures::zoo_sweep().map_err(sim_err)?;
+fn zoo(json: bool) -> Result<()> {
+    let reports = figures::zoo_reports()?;
+    if json {
+        print_reports_json(&reports);
+        return Ok(());
+    }
+    let sums = figures::zoo_summaries(&reports);
     let total: usize = sums.iter().map(|s| s.layers).sum();
     let table: Vec<Vec<String>> = sums
         .iter()
@@ -303,32 +394,48 @@ fn zoo() -> Result<()> {
     Ok(())
 }
 
-fn resnet50() -> Result<()> {
-    println!("[1/3] golden cross-check (simulator vs JAX/Pallas via PJRT)...");
-    run_verify(vec![0xD1AC, 0xD1AD])?;
-    println!("\n[2/3] full ResNet-50 simulation on both engines...");
-    let rows = figures::resnet50_rows().map_err(sim_err)?;
+fn resnet50(json: bool) -> Result<()> {
+    if !json {
+        println!("[1/3] golden cross-check (simulator vs JAX/Pallas via PJRT)...");
+    }
+    let golden = verify::verify_all(&[0xD1AC, 0xD1AD])?;
+    if !json {
+        print_verify(&golden);
+    }
+    anyhow::ensure!(golden.iter().all(|r| r.ok()), "golden cross-check FAILED");
+
+    if !json {
+        println!("\n[2/3] full ResNet-50 simulation on both engines...");
+    }
+    let mut session = Session::builder().model("resnet50").build()?;
+    let mut report = session.run(&RunSpec::Network)?;
+    report.checks.extend(session.verify()?);
+    anyhow::ensure!(report.checks_ok(), "façade functional cross-checks FAILED");
+    if json {
+        println!("{}", report.to_json());
+        return Ok(());
+    }
+
+    let rows = figures::rows_from(&report);
     let s = summarize(&rows);
-    let total_dimc: u64 = rows.iter().map(|r| r.dimc_cycles).sum();
+    let total_dimc = report.cycles;
     let total_base: u64 = rows.iter().map(|r| r.baseline_cycles).sum();
-    let ops: u64 = rows.iter().map(|r| r.ops).sum();
     println!("  layers: {}", rows.len());
-    println!("  total ops: {:.2} G", ops as f64 / 1e9);
+    println!("  total ops: {:.2} G", report.ops as f64 / 1e9);
     println!("  DIMC-RVV:    {total_dimc} cycles = {:.2} ms @500 MHz  ({:.1} GOPS net)",
-             total_dimc as f64 / 5e5, ops as f64 / (total_dimc as f64 / 5e8) / 1e9);
+             report.ms(), report.gops);
     println!("  baseline:    {total_base} cycles = {:.2} ms @500 MHz",
              total_base as f64 / 5e5);
     println!("\n[3/3] headline metrics vs paper:");
     println!("  peak GOPS      : {:.1}   (paper: 137)", s.peak_gops);
     println!("  peak speedup   : {:.0}x  (paper: 217x)", s.peak_speedup);
-    println!("  network speedup: {:.0}x", total_base as f64 / total_dimc as f64);
+    println!("  network speedup: {:.0}x", report.speedup.unwrap_or(1.0));
     println!("  ANS            : {:.0}x..{:.0}x (paper: >50x)", s.min_ans, s.peak_ans);
     Ok(())
 }
 
-fn run_verify(seeds: Vec<u64>) -> Result<()> {
-    let reports = verify::verify_all(&seeds)?;
-    for r in &reports {
+fn print_verify(reports: &[verify::VerifyReport]) {
+    for r in reports {
         println!(
             "  {}: {}/{} outputs match (sim {} cycles) {}",
             r.layer,
@@ -338,12 +445,25 @@ fn run_verify(seeds: Vec<u64>) -> Result<()> {
             if r.ok() { "OK" } else { "FAIL" }
         );
     }
-    anyhow::ensure!(reports.iter().all(|r| r.ok()), "golden cross-check FAILED");
-    println!("  all {} cross-checks passed", reports.len());
-    Ok(())
 }
 
-fn simulate(flags: &HashMap<String, String>) -> Result<()> {
+fn verify_json(reports: &[verify::VerifyReport]) -> String {
+    let mut j = JsonBuilder::new();
+    j.begin_arr();
+    for r in reports {
+        j.begin_obj();
+        j.field_str("layer", &r.layer);
+        j.field_u64("outputs", r.outputs as u64);
+        j.field_u64("mismatches", r.mismatches as u64);
+        j.field_u64("sim_cycles", r.sim_cycles);
+        j.field_bool("ok", r.ok());
+        j.end_obj();
+    }
+    j.end_arr();
+    j.finish()
+}
+
+fn simulate(flags: &HashMap<String, String>, json: bool) -> Result<()> {
     let l = if flags.contains_key("fc") {
         LayerConfig::fc("custom", flag(flags, "ich", 256u32)?, flag(flags, "och", 64u32)?)
     } else {
@@ -359,39 +479,74 @@ fn simulate(flags: &HashMap<String, String>) -> Result<()> {
             flag(flags, "pad", 1u32)?,
         )
     };
+    let mut session = Session::builder().build()?;
+    let report = session.run(&RunSpec::Layer(l.clone()))?;
+    if json {
+        println!("{}", report.to_json());
+        return Ok(());
+    }
     println!("{l}");
-    let row = layer_row(&l, &AreaModel::default()).map_err(sim_err)?;
-    let (c, ld, st) = row.dist;
-    println!("  DIMC:     {} cycles, {:.1} GOPS", row.dimc_cycles, row.gops);
-    println!("  baseline: {} cycles", row.baseline_cycles);
-    println!("  speedup:  {:.1}x   ANS: {:.1}x", row.speedup, row.ans);
+    let row = &report.layers[0];
+    let (c, ld, st) = row.dist.unwrap_or((0.0, 0.0, 0.0));
+    println!("  DIMC:     {} cycles, {:.1} GOPS", row.cycles, row.gops);
+    println!("  baseline: {} cycles", row.baseline_cycles.unwrap_or(0));
+    println!("  speedup:  {:.1}x   ANS: {:.1}x",
+             row.speedup.unwrap_or(1.0), row.ans.unwrap_or(0.0));
     println!("  dist:     {:.0}% compute / {:.0}% load / {:.0}% store",
              c * 100.0, ld * 100.0, st * 100.0);
-    let d = simulate_layer(&l, Engine::Dimc).map_err(sim_err)?;
-    println!("  instrs:   {} (DIMC path)", d.instret);
+    println!("  instrs:   {} (DIMC path)", row.instret.unwrap_or(0));
     Ok(())
 }
 
-fn energy() -> Result<()> {
+fn energy(json: bool) -> Result<()> {
     use crate::metrics::energy::EnergyModel;
     use crate::workloads::resnet::resnet50;
     let m = EnergyModel::default();
-    println!("model-based energy estimate (paper future work; see metrics/energy.rs)");
-    println!("{:<14} {:>12} {:>12} {:>14} {:>14}", "layer", "DIMC uJ", "base uJ",
-             "DIMC TOPS/W", "base TOPS/W");
+    let mut dimc = Session::builder().build()?;
+    let mut base = Session::builder().engine(Engine::Baseline).build()?;
+    if !json {
+        println!("model-based energy estimate (paper future work; see metrics/energy.rs)");
+        println!("{:<14} {:>12} {:>12} {:>14} {:>14}", "layer", "DIMC uJ", "base uJ",
+                 "DIMC TOPS/W", "base TOPS/W");
+    }
     let mut d_tot = 0.0;
     let mut b_tot = 0.0;
     let mut ops = 0u64;
+    let mut j = JsonBuilder::new();
+    j.begin_obj();
+    j.key("layers");
+    j.begin_arr();
     for l in resnet50() {
-        let d = simulate_layer(&l, Engine::Dimc).map_err(sim_err)?;
-        let b = simulate_layer(&l, Engine::Baseline).map_err(sim_err)?;
-        let ed = m.estimate(&d);
-        let eb = m.estimate(&b);
+        let rd = dimc.run(&RunSpec::Layer(l.clone()))?;
+        let rb = base.run(&RunSpec::Layer(l.clone()))?;
+        let ed = m.estimate(&as_layer_result(&rd.layers[0], Engine::Dimc, rd.clock_hz));
+        let eb = m.estimate(&as_layer_result(&rb.layers[0], Engine::Baseline, rb.clock_hz));
         d_tot += ed.total_uj;
         b_tot += eb.total_uj;
         ops += l.ops();
-        println!("{:<14} {:>12.2} {:>12.2} {:>14.1} {:>14.2}",
-                 l.name, ed.total_uj, eb.total_uj, ed.tops_per_watt, eb.tops_per_watt);
+        if json {
+            j.begin_obj();
+            j.field_str("layer", &l.name);
+            j.field_f64("dimc_uj", ed.total_uj);
+            j.field_f64("baseline_uj", eb.total_uj);
+            j.field_f64("dimc_tops_per_watt", ed.tops_per_watt);
+            j.field_f64("baseline_tops_per_watt", eb.tops_per_watt);
+            j.end_obj();
+        } else {
+            println!("{:<14} {:>12.2} {:>12.2} {:>14.1} {:>14.2}",
+                     l.name, ed.total_uj, eb.total_uj, ed.tops_per_watt, eb.tops_per_watt);
+        }
+    }
+    if json {
+        j.end_arr();
+        j.field_f64("dimc_total_uj", d_tot);
+        j.field_f64("baseline_total_uj", b_tot);
+        j.field_f64("energy_ratio", b_tot / d_tot);
+        j.field_f64("dimc_tops_per_watt", ops as f64 / (d_tot * 1e-6) / 1e12);
+        j.field_f64("baseline_tops_per_watt", ops as f64 / (b_tot * 1e-6) / 1e12);
+        j.end_obj();
+        println!("{}", j.finish());
+        return Ok(());
     }
     println!("\nResNet-50 inference: DIMC {d_tot:.0} uJ vs baseline {b_tot:.0} uJ \
               ({:.0}x less energy)", b_tot / d_tot);
@@ -400,23 +555,58 @@ fn energy() -> Result<()> {
     Ok(())
 }
 
-fn tiles() -> Result<()> {
+fn tiles(json: bool) -> Result<()> {
     use crate::metrics::scaling::project;
     use crate::workloads::resnet::resnet50;
-    println!("multi-tile scaling projection (paper future work; metrics/scaling.rs)");
-    println!("{:<14} {:>7} {:>9} {:>9} {:>9} {:>9}", "layer", "groups",
-             "N=1", "N=2", "N=4", "N=8");
+    let mut session = Session::builder().build()?;
+    if !json {
+        println!("multi-tile scaling projection (paper future work; metrics/scaling.rs)");
+        println!("{:<14} {:>7} {:>9} {:>9} {:>9} {:>9}", "layer", "groups",
+                 "N=1", "N=2", "N=4", "N=8");
+    }
     let mut totals = [0u64; 4];
+    let mut j = JsonBuilder::new();
+    j.begin_obj();
+    j.key("layers");
+    j.begin_arr();
     for l in resnet50() {
-        let r = simulate_layer(&l, Engine::Dimc).map_err(sim_err)?;
+        let rep = session.run(&RunSpec::Layer(l.clone()))?;
+        let r = as_layer_result(&rep.layers[0], Engine::Dimc, rep.clock_hz);
         let mut cells = Vec::new();
+        let mut gops = Vec::new();
         for (i, n) in [1u32, 2, 4, 8].iter().enumerate() {
             let p = project(&l, &r, *n);
             totals[i] += p.cycles;
+            gops.push(p.gops);
             cells.push(format!("{:.1}", p.gops));
         }
-        println!("{:<14} {:>7} {:>9} {:>9} {:>9} {:>9}",
-                 l.name, l.groups(), cells[0], cells[1], cells[2], cells[3]);
+        if json {
+            j.begin_obj();
+            j.field_str("layer", &l.name);
+            j.field_u64("groups", l.groups() as u64);
+            j.key("gops");
+            j.begin_arr();
+            for g in gops {
+                j.num_f64(g);
+            }
+            j.end_arr();
+            j.end_obj();
+        } else {
+            println!("{:<14} {:>7} {:>9} {:>9} {:>9} {:>9}",
+                     l.name, l.groups(), cells[0], cells[1], cells[2], cells[3]);
+        }
+    }
+    if json {
+        j.end_arr();
+        j.key("network_cycles");
+        j.begin_arr();
+        for t in totals {
+            j.num_u64(t);
+        }
+        j.end_arr();
+        j.end_obj();
+        println!("{}", j.finish());
+        return Ok(());
     }
     println!("\nnetwork cycles: N=1 {} | N=2 {} ({:.2}x) | N=4 {} ({:.2}x) | N=8 {} ({:.2}x)",
              totals[0], totals[1], totals[0] as f64 / totals[1] as f64,
@@ -427,20 +617,15 @@ fn tiles() -> Result<()> {
     Ok(())
 }
 
-fn cluster(flags: &HashMap<String, String>) -> Result<()> {
-    use crate::arch::Arch;
-    use crate::cluster::exec::{run_functional_cluster, ClusterSim};
-    use crate::cluster::scaling::{is_monotone, render, scaling_curve_with};
-    use crate::cluster::topology::ClusterTopology;
-    use crate::compiler::pack::{synth_acts, synth_wts};
-    use crate::coordinator::driver::run_functional;
-    use crate::dimc::Precision;
+fn cluster(flags: &HashMap<String, String>, json: bool) -> Result<()> {
+    use crate::cluster::scaling::{is_monotone, render};
 
     let model_name = flags.get("model").map(String::as_str).unwrap_or("resnet50");
-    let model = lookup_model(model_name)?;
     let cores = flag(flags, "cores", 8u32)?.max(1);
     let batch = flag(flags, "batch", 1u32)?.max(1);
-    let arch = Arch::default();
+    let mut session =
+        Session::builder().model(model_name).cores(cores).batch(batch).build()?;
+    let arch = session.config().arch;
 
     // Sweep the powers of two up to the requested core count.
     let mut ns = Vec::new();
@@ -451,74 +636,59 @@ fn cluster(flags: &HashMap<String, String>) -> Result<()> {
     }
     ns.push(cores);
 
-    println!(
-        "cluster scale-out: {} x {} DIMC-enhanced cores, batch {} \
-         (shared bus {} B/cyc, barrier {} cyc)",
-        model.name, cores, batch, arch.cluster_bus_bytes, arch.cluster_barrier_cycles
-    );
-    // One simulator for the whole subcommand: the sweep, the per-layer
-    // view and the cross-checks all share its shard-simulation cache.
-    let mut sim = ClusterSim::new(arch, Precision::Int4);
-    let points = scaling_curve_with(&mut sim, model.name, &model.layers, &ns, batch)
-        .map_err(sim_err)?;
-    println!("{}", render(&format!("{} cluster scaling", model.name), &points));
+    if !json {
+        println!(
+            "cluster scale-out: {} x {} DIMC-enhanced cores, batch {} \
+             (shared bus {} B/cyc, barrier {} cyc)",
+            model_name, cores, batch, arch.cluster_bus_bytes, arch.cluster_barrier_cycles
+        );
+    }
+    // One session for the whole subcommand: the sweep, the per-layer view
+    // and the cross-checks all share its shard-simulation cache.
+    let points = session.scaling_curve(&ns)?;
+    let mut report = session.run(&RunSpec::Network)?;
+    report.checks.extend(session.verify()?);
+    report.checks.push(RunCheck {
+        name: "cluster:monotone-throughput".to_string(),
+        ok: is_monotone(&points),
+        detail: format!("throughput monotonically non-decreasing over {ns:?} cores"),
+    });
 
-    // Per-layer shard plan at the full core count (one image's view).
-    let topo = ClusterTopology::from_arch(cores, &arch);
-    let full = sim.schedule(model.name, &model.layers, &topo, batch).map_err(sim_err)?;
-    let sharded = full.layers.iter().filter(|r| r.cores_used > 1).count();
-    println!(
-        "mode: {} | {} of {} layers sharded across >1 core | batch latency {:.2} ms",
-        full.mode.as_str(),
-        sharded,
-        full.layers.len(),
-        full.ms()
-    );
-
-    // --- correctness cross-checks ---
-    // (a) a 1-core cluster must reproduce single-core cycles exactly
-    let single: u64 = model
-        .layers
-        .iter()
-        .map(|l| simulate_layer(l, Engine::Dimc).map(|r| r.cycles))
-        .sum::<std::result::Result<u64, _>>()
-        .map_err(sim_err)?;
-    let one = sim
-        .schedule(model.name, &model.layers, &ClusterTopology::from_arch(1, &arch), 1)
-        .map_err(sim_err)?;
-    anyhow::ensure!(
-        one.cycles == single,
-        "1-core cluster diverged: {} vs single-core {}",
-        one.cycles,
-        single
-    );
-    println!("check: 1-core cluster == single-core simulator ({single} cycles) OK");
-
-    // (b) sharded functional outputs must be bit-identical to single-core
-    let probe = LayerConfig::conv("probe", 16, 96, 2, 2, 6, 6, 1, 0);
-    let acts = synth_acts(&probe, Precision::Int4, 0xD1AC);
-    let wts = synth_wts(&probe, Precision::Int4, 0xD1AC);
-    let want = run_functional(&probe, Engine::Dimc, &acts, &wts, 4).map_err(sim_err)?.outputs;
-    let got = run_functional_cluster(&probe, &topo, &acts, &wts, 4).map_err(sim_err)?;
-    anyhow::ensure!(got == want, "sharded functional outputs diverged on {probe}");
-    println!("check: sharded functional outputs bit-identical ({} outputs) OK", want.len());
-
-    // (c) the curve must never lose throughput as cores are added
-    anyhow::ensure!(is_monotone(&points), "scaling curve lost throughput with more cores");
-    println!("check: throughput monotonically non-decreasing over {ns:?} cores OK");
+    if json {
+        let mut j = JsonBuilder::new();
+        j.begin_obj();
+        j.key("report");
+        report.write_json(&mut j);
+        j.key("scaling");
+        j.begin_arr();
+        for p in &points {
+            write_scaling_point(&mut j, p);
+        }
+        j.end_arr();
+        j.end_obj();
+        println!("{}", j.finish());
+    } else {
+        println!("{}", render(&format!("{model_name} cluster scaling"), &points));
+        let sharded = report.layers.iter().filter(|r| r.cores_used > 1).count();
+        println!(
+            "mode: {} | {} of {} layers sharded across >1 core | batch latency {:.2} ms",
+            report.mode.unwrap_or("-"),
+            sharded,
+            report.layers.len(),
+            report.ms()
+        );
+        print_checks(&report.checks);
+    }
+    anyhow::ensure!(report.checks_ok(), "cluster cross-checks FAILED");
     Ok(())
 }
 
-fn serve(flags: &HashMap<String, String>) -> Result<()> {
-    use crate::arch::Arch;
-    use crate::dimc::Precision;
-    use crate::serve::sweep::{load_sweep, render, rps_ladder};
-    use crate::serve::{BatchPolicy, Server, TraceConfig, TraceShape, Workload};
-    use std::collections::HashSet;
+fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
+    use crate::serve::sweep::{render as render_sweep, rps_ladder};
+    use crate::serve::TraceShape;
 
     let cores = flag(flags, "cores", 4u32)?.max(1);
     let rps = flag(flags, "rps", 1000.0f64)?;
-    anyhow::ensure!(rps.is_finite() && rps > 0.0, "--rps must be positive and finite");
     let requests = flag(flags, "requests", 512u32)?.max(1) as usize;
     let max_batch = flag(flags, "max-batch", 8u32)?.max(1);
     let max_wait = flag(flags, "max-wait", 0u64)?;
@@ -540,137 +710,188 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     };
 
     // The served model set: --mix name=weight,... or a single --model.
-    let mut workloads: Vec<Workload> = Vec::new();
+    let mut builder = Session::builder()
+        .cores(cores)
+        .rps(rps)
+        .requests(requests)
+        .max_batch(max_batch)
+        .max_wait_cycles(max_wait)
+        .seed(seed)
+        .trace(shape);
     if let Some(mix) = flags.get("mix") {
+        let mut entries = 0usize;
         for part in mix.split(',').filter(|p| !p.is_empty()) {
             let Some((name, w)) = part.split_once('=') else {
                 bail!("bad --mix entry `{part}`; expected name=weight");
             };
             let weight: f64 =
                 w.parse().with_context(|| format!("bad weight in --mix entry `{part}`"))?;
-            anyhow::ensure!(
-                weight.is_finite() && weight > 0.0,
-                "--mix weight for `{name}` must be positive and finite"
-            );
-            let model = lookup_model(name)?;
-            workloads.push(Workload { name: name.to_string(), layers: model.layers, weight });
+            builder = builder.model_weighted(name, weight);
+            entries += 1;
         }
-        anyhow::ensure!(!workloads.is_empty(), "--mix named no models");
+        anyhow::ensure!(entries > 0, "--mix named no models");
     } else {
-        let name = flags.get("model").map(String::as_str).unwrap_or("resnet50");
-        workloads.push(Workload::new(name, lookup_model(name)?.layers));
+        builder = builder.model(flags.get("model").map(String::as_str).unwrap_or("resnet50"));
     }
+    let mut session = builder.build()?;
+    let models: Vec<String> =
+        session.config().workloads.iter().map(|w| w.name.clone()).collect();
+    let clock_hz = session.config().arch.clock_hz;
 
-    let arch = Arch::default();
-    let policy = BatchPolicy { max_batch, max_wait_cycles: max_wait };
-    let mut server = Server::new(arch, Precision::Int4, cores);
-
-    println!(
-        "serving: {} on {} DIMC-enhanced cores | trace {} @ {:.0} req/s, {} requests \
-         | batch window: max {} / wait {} cyc | seed 0x{seed:X}",
-        workloads
-            .iter()
-            .map(|w| w.name.as_str())
-            .collect::<Vec<_>>()
-            .join("+"),
-        cores,
-        shape.as_str(),
-        rps,
-        requests,
-        max_batch,
-        max_wait
-    );
-    for i in 0..workloads.len() {
-        let floor = server.unbatched_latency(&workloads, i).map_err(sim_err)?;
-        let roof = server.batch_roofline(&workloads, i, max_batch).map_err(sim_err)?;
+    if !json {
         println!(
-            "  {}: unbatched latency {:.3} ms | batch-{} roofline {:.0} inf/s",
-            workloads[i].name,
-            floor as f64 / arch.clock_hz * 1e3,
+            "serving: {} on {} DIMC-enhanced cores | trace {} @ {:.0} req/s, {} requests \
+             | batch window: max {} / wait {} cyc | seed 0x{seed:X}",
+            models.join("+"),
+            cores,
+            shape.as_str(),
+            rps,
+            requests,
             max_batch,
-            roof
+            max_wait
         );
+        for (i, name) in models.iter().enumerate() {
+            let floor = session.unbatched_latency(i)?;
+            let roof = session.batch_roofline(i)?;
+            println!(
+                "  {}: unbatched latency {:.3} ms | batch-{} roofline {:.0} inf/s",
+                name,
+                floor as f64 / clock_hz * 1e3,
+                max_batch,
+                roof
+            );
+        }
     }
 
-    let trace = TraceConfig { rps, requests, shape, seed };
-    let report = server.serve_trace(&workloads, policy, &trace).map_err(sim_err)?;
-    println!("\n{}", report.render());
-
-    // --- correctness cross-checks ---
-    // (a) conservation: every generated request completed exactly once
-    let ids: HashSet<u64> = report.completed.iter().map(|r| r.id).collect();
-    anyhow::ensure!(
-        report.completed.len() == requests && ids.len() == requests,
-        "request conservation violated: {} completions, {} distinct ids, {} requests",
-        report.completed.len(),
-        ids.len(),
-        requests
-    );
-    println!("check: all {requests} requests completed exactly once OK");
-    // (b) no batch exceeded the window and causality held throughout
-    anyhow::ensure!(
-        report.batches.iter().all(|b| b.size >= 1 && b.size <= max_batch),
-        "batch size left the configured window"
-    );
-    anyhow::ensure!(
-        report.completed.iter().all(|r| r.arrival <= r.dispatched && r.dispatched < r.completed),
-        "per-request cycle accounting lost causality"
-    );
-    println!("check: batch sizes within window, per-request causality OK");
-
-    if flags.contains_key("sweep") {
+    let report = session.run(&RunSpec::Serve)?;
+    let sweep_points = if flags.contains_key("sweep") {
         // Anchor the ladder to the traffic-weighted roofline of the whole
         // mix, not any single model's.
-        let roof = server.mix_roofline(&workloads, max_batch).map_err(sim_err)?;
-        let points = load_sweep(
-            &mut server,
-            &workloads,
-            policy,
-            shape,
-            seed,
-            requests,
-            &rps_ladder(roof),
-        )
-        .map_err(sim_err)?;
+        let roof = session.mix_roofline()?;
+        Some(session.load_sweep(&rps_ladder(roof))?)
+    } else {
+        None
+    };
+
+    if json {
+        let mut j = JsonBuilder::new();
+        j.begin_obj();
+        j.key("report");
+        report.write_json(&mut j);
+        j.key("sweep");
+        match &sweep_points {
+            Some(points) => {
+                j.begin_arr();
+                for p in points {
+                    write_load_point(&mut j, p);
+                }
+                j.end_arr();
+            }
+            None => j.null(),
+        }
+        j.end_obj();
+        println!("{}", j.finish());
+    } else {
+        let (Some(lat), Some(ss)) = (&report.latency, &report.serve) else {
+            bail!("serving report incomplete");
+        };
+        println!("\n== serving report ==");
         println!(
-            "\n{}",
-            render(
-                &format!("load vs latency ({} ladder around the roofline)", shape.as_str()),
-                &points
-            )
+            "models: {} | trace {} seed 0x{:X} | {} cores | max batch {} | max wait {} cyc",
+            report.model, ss.shape, ss.seed, report.cores, ss.max_batch, ss.max_wait_cycles
         );
+        println!(
+            "requests: {} | offered {:.1} req/s | achieved {:.1} req/s",
+            ss.requests, ss.offered_rps, ss.achieved_rps
+        );
+        println!(
+            "latency: p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms | max {:.3} ms",
+            lat.p50_ms, lat.p95_ms, lat.p99_ms, lat.mean_ms, lat.max_ms
+        );
+        println!(
+            "queue:   mean depth {:.2} | peak depth {} | {} batches (mean size {:.2})",
+            ss.mean_queue_depth, ss.max_queue_depth, ss.batches, ss.mean_batch_size
+        );
+        println!(
+            "cluster: busy {:.1}% | DIMC-tile utilization {:.1}%",
+            report.utilization.unwrap_or(0.0) * 100.0,
+            ss.tile_utilization * 100.0
+        );
+        print_checks(&report.checks);
+        if let Some(points) = &sweep_points {
+            println!(
+                "\n{}",
+                render_sweep(
+                    &format!("load vs latency ({} ladder around the roofline)", shape.as_str()),
+                    points
+                )
+            );
+        }
     }
+    anyhow::ensure!(report.checks_ok(), "serving cross-checks FAILED");
     Ok(())
 }
 
-fn asm(path: Option<&str>) -> Result<()> {
+fn asm(path: Option<&str>, json: bool) -> Result<()> {
     let Some(path) = path else { bail!("usage: repro asm <file.s>") };
     let src = std::fs::read_to_string(path)?;
     let prog = crate::isa::asm::assemble(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
-    println!("assembled {} instructions", prog.len());
     let mut core = crate::pipeline::core::Core::new(crate::arch::Arch::default());
-    let stats = core.run(&prog, 100_000_000).map_err(sim_err)?;
+    let stats = core.run(&prog, 100_000_000).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if json {
+        let mut j = JsonBuilder::new();
+        j.begin_obj();
+        j.field_str("file", path);
+        j.field_u64("instructions", prog.len() as u64);
+        j.field_u64("instret", stats.instret);
+        j.field_u64("cycles", stats.cycles);
+        j.end_obj();
+        println!("{}", j.finish());
+        return Ok(());
+    }
+    println!("assembled {} instructions", prog.len());
     println!("halted after {} instructions, {} cycles", stats.instret, stats.cycles);
     println!("x registers: {:?}", &core.xregs[1..16]);
     Ok(())
 }
 
-fn trace(path: Option<&str>) -> Result<()> {
+fn trace(path: Option<&str>, json: bool) -> Result<()> {
     let Some(path) = path else { bail!("usage: repro trace <file.s>") };
     let src = std::fs::read_to_string(path)?;
     let prog = crate::isa::asm::assemble(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut core = crate::pipeline::core::Core::new(crate::arch::Arch::default());
-    let (stats, entries) = core.run_traced(&prog, 10_000).map_err(sim_err)?;
+    let (stats, entries) = core.run_traced(&prog, 10_000).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if json {
+        let mut j = JsonBuilder::new();
+        j.begin_obj();
+        j.field_u64("instret", stats.instret);
+        j.field_u64("cycles", stats.cycles);
+        j.key("entries");
+        j.begin_arr();
+        for e in &entries {
+            j.begin_obj();
+            j.field_u64("pc", (e.pc * 4).max(0) as u64);
+            j.field_u64("issue", e.issue);
+            j.field_u64("complete", e.complete);
+            j.field_str("instr", &e.instr.to_string());
+            j.end_obj();
+        }
+        j.end_arr();
+        j.end_obj();
+        println!("{}", j.finish());
+        return Ok(());
+    }
     println!("{:>5} {:>7} {:>9}  {:<44} {}", "pc", "issue", "complete", "instruction", "stall");
     let mut prev_issue = 0u64;
     for e in &entries {
         let stall = e.issue.saturating_sub(prev_issue + 1);
+        let instr = e.instr.to_string();
         println!(
             "{:>5} {:>7} {:>9}  {:<44} {}",
             e.pc * 4,
             e.issue,
             e.complete,
-            e.instr.to_string(),
+            instr,
             if stall > 0 { format!("+{stall}") } else { String::new() }
         );
         prev_issue = e.issue;

@@ -7,6 +7,13 @@
 //! * [`run_functional`] — numerics: place real packed tensors in simulated
 //!   memory, flat-execute every instruction, and return the layer's
 //!   outputs for cross-checking against the JAX/Pallas golden model.
+//!
+//! **Deprecated as a public entry point.** These free functions are the
+//! implementation the [`sim::SingleCore`](crate::sim::SingleCore)
+//! backend wraps; frontends should build a
+//! [`sim::Session`](crate::sim::Session) instead and execute typed
+//! [`RunSpec`](crate::sim::RunSpec) requests. The functions stay
+//! re-exported (and green) for one release as thin shims.
 
 use crate::arch::Arch;
 use crate::compiler::baseline::{compile_baseline_with_shift, ref_requant_u8, BASELINE_SHIFT};
@@ -18,14 +25,10 @@ use crate::dimc::{DimcConfig, Precision};
 use crate::pipeline::core::{Core, RunStats, SimError};
 use crate::pipeline::trace::trace_cycles;
 
-/// Which core executes the layer.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Engine {
-    /// DIMC-enhanced RVV core (custom instructions, 4-bit).
-    Dimc,
-    /// Baseline RVV core (pure Zve32x, 8-bit).
-    Baseline,
-}
+/// Which core executes the layer. The enum moved to
+/// [`crate::sim::Engine`] (the façade owns engine selection); this
+/// re-export keeps the historical path working.
+pub use crate::sim::Engine;
 
 /// Timing result of one layer on one engine.
 #[derive(Debug, Clone)]
@@ -86,6 +89,9 @@ fn fresh_core(engine: Engine, precision: Precision) -> Core {
 }
 
 /// Timing simulation (trace engine, data-free).
+///
+/// Deprecated shim: prefer `Session::run(&RunSpec::Layer(..))` on a
+/// [`sim::Session`](crate::sim::Session).
 pub fn simulate_layer(l: &LayerConfig, engine: Engine) -> Result<LayerResult, SimError> {
     simulate_layer_at(l, engine, Precision::Int4)
 }
@@ -136,6 +142,9 @@ pub struct FunctionalRun {
 /// Flat-execute `l` on `engine` with dense activation/weight tensors
 /// (values already in the engine's numeric range). Returns the quantized
 /// outputs in dense [oh][ow][och] order.
+///
+/// Deprecated shim: prefer `Session::run(&RunSpec::Functional { .. })`
+/// or [`Session::verify`](crate::sim::Session::verify).
 pub fn run_functional(
     l: &LayerConfig,
     engine: Engine,

@@ -1,18 +1,49 @@
 //! The paper's figures and tables as data (shared by the CLI and the
 //! bench binaries — each bench regenerates exactly one artefact).
+//!
+//! Every generator here drives the simulator exclusively through the
+//! [`sim::Session`](crate::sim::Session) façade: the `*_report(s)`
+//! functions return the unified [`RunReport`] (what `repro --json`
+//! emits), and the legacy `*_rows`/`*_sweep` functions fold those
+//! reports into [`LayerRow`]s for the text tables and benches.
 
-use crate::arch::Arch;
-use crate::cluster::scaling::{scaling_curve, ScalingPoint};
+use crate::cluster::scaling::ScalingPoint;
 use crate::compiler::layer::LayerConfig;
-use crate::coordinator::driver::{simulate_layer, Engine};
-use crate::metrics::area::AreaModel;
-use crate::metrics::report::{fig_rows, layer_row, LayerRow};
-use crate::pipeline::core::SimError;
-use crate::workloads::{resnet, zoo};
+use crate::metrics::report::LayerRow;
+use crate::serve::{rps_ladder, LoadPoint};
+use crate::sim::{LayerReportRow, RunReport, RunSpec, Session, SessionError};
+use crate::workloads::zoo;
+
+/// Fold one façade row into the legacy figure row (missing comparison
+/// fields degrade to neutral values — they are always present on the
+/// single-core DIMC path the figures use).
+pub fn row_from(r: &LayerReportRow) -> LayerRow {
+    LayerRow {
+        name: r.name.clone(),
+        ops: r.ops,
+        dimc_cycles: r.cycles,
+        baseline_cycles: r.baseline_cycles.unwrap_or(0),
+        gops: r.gops,
+        dist: r.dist.unwrap_or((0.0, 0.0, 0.0)),
+        speedup: r.speedup.unwrap_or(1.0),
+        ans: r.ans.unwrap_or(0.0),
+    }
+}
+
+/// Fold every row of a report (convenience for the CLI tables).
+pub fn rows_from(report: &RunReport) -> Vec<LayerRow> {
+    report.layers.iter().map(row_from).collect()
+}
+
+/// The full ResNet-50 network on the single-core session — the unified
+/// report behind Figs. 5/6/7 and Table I.
+pub fn resnet50_report() -> Result<RunReport, SessionError> {
+    Session::builder().model("resnet50").build()?.run(&RunSpec::Network)
+}
 
 /// Figs. 5/6/7 operate on every ResNet-50 layer.
-pub fn resnet50_rows() -> Result<Vec<LayerRow>, SimError> {
-    fig_rows(&resnet::resnet50(), &AreaModel::default())
+pub fn resnet50_rows() -> Result<Vec<LayerRow>, SessionError> {
+    Ok(rows_from(&resnet50_report()?))
 }
 
 /// Fig. 8 sweep: speedup degradation due to **tiling**. Kernel OCH = 32,
@@ -26,9 +57,17 @@ pub fn fig8_layer(ich: u32) -> LayerConfig {
     LayerConfig::conv(&format!("tile_ich{ich}"), ich, 32, 2, 2, 16, 16, 1, 0)
 }
 
-pub fn fig8_sweep() -> Result<Vec<LayerRow>, SimError> {
-    let area = AreaModel::default();
-    fig8_ichs().into_iter().map(|ich| layer_row(&fig8_layer(ich), &area)).collect()
+/// One façade report per Fig. 8 sweep point.
+pub fn fig8_reports() -> Result<Vec<RunReport>, SessionError> {
+    let mut session = Session::builder().build()?;
+    fig8_ichs()
+        .into_iter()
+        .map(|ich| session.run(&RunSpec::Layer(fig8_layer(ich))))
+        .collect()
+}
+
+pub fn fig8_sweep() -> Result<Vec<LayerRow>, SessionError> {
+    Ok(fig8_reports()?.iter().map(|r| row_from(&r.layers[0])).collect())
 }
 
 /// Fig. 9 sweep: speedup degradation due to **grouping**. ICH = 32,
@@ -41,9 +80,17 @@ pub fn fig9_layer(och: u32) -> LayerConfig {
     LayerConfig::conv(&format!("group_och{och}"), 32, och, 2, 2, 16, 16, 1, 0)
 }
 
-pub fn fig9_sweep() -> Result<Vec<LayerRow>, SimError> {
-    let area = AreaModel::default();
-    fig9_ochs().into_iter().map(|och| layer_row(&fig9_layer(och), &area)).collect()
+/// One façade report per Fig. 9 sweep point.
+pub fn fig9_reports() -> Result<Vec<RunReport>, SessionError> {
+    let mut session = Session::builder().build()?;
+    fig9_ochs()
+        .into_iter()
+        .map(|och| session.run(&RunSpec::Layer(fig9_layer(och))))
+        .collect()
+}
+
+pub fn fig9_sweep() -> Result<Vec<LayerRow>, SessionError> {
+    Ok(fig9_reports()?.iter().map(|r| row_from(&r.layers[0])).collect())
 }
 
 /// One row of Table I (IMC-integrated RISC-V architecture comparison).
@@ -117,9 +164,9 @@ pub fn table1_published() -> Vec<Table1Row> {
 }
 
 /// Our measured row: peak GOPS over ResNet-50 (the paper reports 137).
-pub fn table1_this_work() -> Result<(Table1Row, f64), SimError> {
-    let rows = resnet50_rows()?;
-    let peak = rows.iter().map(|r| r.gops).fold(0.0, f64::max);
+pub fn table1_this_work() -> Result<(Table1Row, f64), SessionError> {
+    let report = resnet50_report()?;
+    let peak = report.layers.iter().map(|r| r.gops).fold(0.0, f64::max);
     Ok((
         Table1Row {
             name: "This Work",
@@ -144,8 +191,12 @@ pub fn cluster_core_counts() -> Vec<u32> {
 /// cores (layer-parallel sharding, batch 1). Every point is a full
 /// cluster simulation, not a projection; throughput is monotonically
 /// non-decreasing in the core count by scheduler construction.
-pub fn cluster_scaling_points() -> Result<Vec<ScalingPoint>, SimError> {
-    scaling_curve("resnet50", &resnet::resnet50(), Arch::default(), &cluster_core_counts(), 1)
+pub fn cluster_scaling_points() -> Result<Vec<ScalingPoint>, SessionError> {
+    Session::builder()
+        .model("resnet50")
+        .cores(8)
+        .build()?
+        .scaling_curve(&cluster_core_counts())
 }
 
 /// Serving load-vs-latency figure: ResNet-50 served on a 4-core cluster
@@ -153,23 +204,17 @@ pub fn cluster_scaling_points() -> Result<Vec<ScalingPoint>, SimError> {
 /// ladder of fractions of the batch-mode roofline. Every point is a full
 /// discrete-event serving simulation with a fixed seed, so the figure is
 /// reproducible bit-for-bit.
-pub fn serve_latency_points() -> Result<Vec<crate::serve::LoadPoint>, SimError> {
-    use crate::dimc::Precision;
-    use crate::serve::{load_sweep, rps_ladder, BatchPolicy, Server, TraceShape, Workload};
-
-    let workloads = vec![Workload::new("resnet50", resnet::resnet50())];
-    let policy = BatchPolicy { max_batch: 8, max_wait_cycles: 0 };
-    let mut server = Server::new(Arch::default(), Precision::Int4, 4);
-    let roofline = server.batch_roofline(&workloads, 0, policy.max_batch)?;
-    load_sweep(
-        &mut server,
-        &workloads,
-        policy,
-        TraceShape::Uniform,
-        0xD1AC,
-        256,
-        &rps_ladder(roofline),
-    )
+pub fn serve_latency_points() -> Result<Vec<LoadPoint>, SessionError> {
+    let mut session = Session::builder()
+        .model("resnet50")
+        .cores(4)
+        .rps(1000.0) // placeholder rate; the ladder sets each rung's rate
+        .requests(256)
+        .max_batch(8)
+        .seed(0xD1AC)
+        .build()?;
+    let roofline = session.batch_roofline(0)?;
+    session.load_sweep(&rps_ladder(roofline))
 }
 
 /// §V-D zoo summary per model.
@@ -182,33 +227,36 @@ pub struct ZooSummary {
     pub dimc_wins: usize,
 }
 
-pub fn zoo_sweep() -> Result<Vec<ZooSummary>, SimError> {
-    let mut out = Vec::new();
-    for m in zoo::all_models() {
-        let mut speedups = Vec::new();
-        let mut peak = 0.0f64;
-        let mut wins = 0;
-        for l in &m.layers {
-            let d = simulate_layer(l, Engine::Dimc)?;
-            let b = simulate_layer(l, Engine::Baseline)?;
-            let s = b.cycles as f64 / d.cycles as f64;
-            if s > 1.0 {
-                wins += 1;
+/// One façade network report per zoo model.
+pub fn zoo_reports() -> Result<Vec<RunReport>, SessionError> {
+    zoo::all_models()
+        .iter()
+        .map(|m| Session::builder().model(m.name).build()?.run(&RunSpec::Network))
+        .collect()
+}
+
+/// Fold per-model network reports (from [`zoo_reports`], in zoo order)
+/// into the §V-D summary table.
+pub fn zoo_summaries(reports: &[RunReport]) -> Vec<ZooSummary> {
+    zoo::all_models()
+        .iter()
+        .zip(reports)
+        .map(|(m, report)| {
+            let speedups: Vec<f64> =
+                report.layers.iter().map(|r| r.speedup.unwrap_or(1.0)).collect();
+            let n = speedups.len().max(1) as f64;
+            ZooSummary {
+                model: m.name,
+                layers: report.layers.len(),
+                geomean_speedup: (speedups.iter().map(|s| s.ln()).sum::<f64>() / n).exp(),
+                min_speedup: speedups.iter().copied().fold(f64::INFINITY, f64::min),
+                peak_gops: report.layers.iter().map(|r| r.gops).fold(0.0, f64::max),
+                dimc_wins: speedups.iter().filter(|&&s| s > 1.0).count(),
             }
-            peak = peak.max(d.gops());
-            speedups.push(s);
-        }
-        let geo =
-            (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp();
-        let min = speedups.iter().copied().fold(f64::INFINITY, f64::min);
-        out.push(ZooSummary {
-            model: m.name,
-            layers: m.layers.len(),
-            geomean_speedup: geo,
-            min_speedup: min,
-            peak_gops: peak,
-            dimc_wins: wins,
-        });
-    }
-    Ok(out)
+        })
+        .collect()
+}
+
+pub fn zoo_sweep() -> Result<Vec<ZooSummary>, SessionError> {
+    Ok(zoo_summaries(&zoo_reports()?))
 }

@@ -47,6 +47,14 @@
 //!   accounting and throughput / p50-p95-p99 latency / queue-depth /
 //!   tile-utilization reporting
 //!   (`repro serve --cores 4 --rps 1000 --trace bursty --model resnet50`).
+//! * [`sim`] — the unified execution façade over all of the above: a
+//!   validated [`sim::Session`] built via [`sim::SessionBuilder`]
+//!   executes typed [`sim::RunSpec`] requests (layer, network,
+//!   functional cross-check, serve) against a [`sim::Backend`]
+//!   (single-core / cluster / serving), always returning one
+//!   JSON-serializable [`sim::RunReport`]. This is the entry point the
+//!   CLI, the figure generators, the benches and new code use; the older
+//!   per-tier entry functions remain as thin deprecated shims.
 //!
 //! A top-to-bottom walkthrough of how these layers fit together — with
 //! the custom-instruction encodings and a "which module do I touch"
@@ -54,15 +62,27 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! use dimc_rvv::compiler::layer::LayerConfig;
-//! use dimc_rvv::coordinator::driver::{simulate_layer, Engine};
-//!
-//! // ResNet-50 conv2_x 1x1x64->64 layer on a 56x56 feature map.
-//! let layer = LayerConfig::conv("conv2_demo", 64, 64, 1, 1, 56, 56, 1, 0);
-//! let r = simulate_layer(&layer, Engine::Dimc).unwrap();
-//! println!("{} GOPS, {} cycles", r.gops(), r.cycles);
 //! ```
+//! use dimc_rvv::compiler::layer::LayerConfig;
+//! use dimc_rvv::sim::{RunSpec, Session};
+//!
+//! // Build a session once (validation happens here)...
+//! let mut session = Session::builder().build().unwrap();
+//!
+//! // ...then execute typed requests against it. A ResNet-50-style
+//! // 1x1x64->64 layer on a 56x56 feature map, on the DIMC engine:
+//! let layer = LayerConfig::conv("conv2_demo", 64, 64, 1, 1, 56, 56, 1, 0);
+//! let report = session.run(&RunSpec::Layer(layer)).unwrap();
+//! println!("{:.1} GOPS, {} cycles", report.gops, report.cycles);
+//! println!("{}", report.to_json()); // machine-readable, serde-free
+//!
+//! // Bad configurations fail at build time with a typed error:
+//! assert!(Session::builder().cores(0).build().is_err());
+//! ```
+//!
+//! The legacy entry points (`coordinator::driver::simulate_layer`,
+//! `cluster::exec::ClusterSim`, `serve::engine::Server`) remain public
+//! as deprecated shims for one release; see their module docs.
 
 pub mod arch;
 pub mod isa;
@@ -75,5 +95,6 @@ pub mod runtime;
 pub mod coordinator;
 pub mod cluster;
 pub mod serve;
+pub mod sim;
 
 pub use arch::Arch;

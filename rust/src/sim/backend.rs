@@ -1,0 +1,507 @@
+//! The [`Backend`] trait and its three implementations — the seam between
+//! the typed [`Session`](crate::sim::Session) API and the execution
+//! engines that predate it:
+//!
+//! * [`SingleCore`] wraps the per-layer drivers in
+//!   [`coordinator::driver`](crate::coordinator::driver) (timing on both
+//!   engines, functional bit-exact execution);
+//! * [`Cluster`] wraps [`cluster::exec`](crate::cluster::exec) /
+//!   [`cluster::sched`](crate::cluster::sched) (sharded multi-core
+//!   schedules, warm shard-simulation cache);
+//! * [`Serving`] wraps [`serve::engine`](crate::serve::engine) (the
+//!   discrete-event serving simulator, warm service-time cache).
+//!
+//! A future backend (an NMC tile model, an analog-IMC tile, a remote
+//! device) implements [`Backend`] and registers in
+//! [`Session`](crate::sim::Session)'s dispatch — frontends never change.
+
+use super::report::{LatencyStats, LayerReportRow, RunCheck, RunReport, ServeStats};
+use super::session::{RunSpec, SessionConfig, SessionError};
+use super::Engine;
+use crate::cluster::exec::{run_functional_cluster, ClusterSim};
+use crate::cluster::sched::NetworkSchedule;
+use crate::cluster::topology::ClusterTopology;
+use crate::compiler::layer::LayerConfig;
+use crate::compiler::pack::{synth_acts, synth_wts};
+use crate::coordinator::driver::{reference_outputs, run_functional, simulate_layer_with_arch};
+use crate::dimc::Precision;
+use crate::metrics::area::AreaModel;
+use crate::serve::stats::percentile;
+use crate::serve::{Server, TraceConfig};
+use std::collections::HashSet;
+
+/// An execution engine the [`Session`](crate::sim::Session) façade can
+/// dispatch typed requests to. Implementations own whatever simulator
+/// state they need (caches stay warm across requests on one session).
+pub trait Backend {
+    /// Stable backend tag used in reports and JSON
+    /// (`single-core` / `cluster` / `serving`).
+    fn name(&self) -> &'static str;
+
+    /// Execute `spec` under the session's configuration, folding the
+    /// result into the unified [`RunReport`].
+    fn run(&mut self, cfg: &SessionConfig, spec: &RunSpec) -> Result<RunReport, SessionError>;
+}
+
+/// Blank report skeleton shared by every backend.
+fn base_report(backend: &'static str, cfg: &SessionConfig, model: String) -> RunReport {
+    RunReport {
+        backend,
+        model,
+        engine: cfg.engine,
+        precision_bits: cfg.precision.bits(),
+        cores: cfg.cores,
+        batch: cfg.batch,
+        clock_hz: cfg.arch.clock_hz,
+        cycles: 0,
+        ops: 0,
+        gops: 0.0,
+        speedup: None,
+        mode: None,
+        utilization: None,
+        layers: Vec::new(),
+        latency: None,
+        serve: None,
+        checks: Vec::new(),
+    }
+}
+
+fn gops_of(ops: u64, cycles: u64, clock_hz: f64) -> f64 {
+    if cycles == 0 {
+        return 0.0;
+    }
+    ops as f64 / (cycles as f64 / clock_hz) / 1e9
+}
+
+/// Functional execution is pinned to Int4 (the legacy driver's packing
+/// path); reject other precisions up front.
+fn require_int4_functional(cfg: &SessionConfig) -> Result<(), SessionError> {
+    if cfg.precision != Precision::Int4 {
+        return Err(SessionError::Unsupported(
+            "functional execution supports Int4 only (the packing path of the \
+             legacy driver)"
+                .to_string(),
+        ));
+    }
+    Ok(())
+}
+
+/// Synthesize in-range tensors and the reference outputs for a
+/// functional run; shared by the single-core and cluster paths.
+fn functional_inputs(
+    l: &LayerConfig,
+    engine: Engine,
+    seed: u64,
+    shift: u8,
+) -> (Vec<i8>, Vec<i8>, Vec<u8>) {
+    let acts = synth_acts(l, Precision::Int4, seed);
+    let wts = synth_wts(l, Precision::Int4, seed);
+    let want = reference_outputs(l, engine, &acts, &wts, shift);
+    (acts, wts, want)
+}
+
+fn oracle_check(l: &LayerConfig, got: &[u8], want: &[u8]) -> RunCheck {
+    let mismatches = got.iter().zip(want.iter()).filter(|(a, b)| a != b).count()
+        + got.len().abs_diff(want.len());
+    RunCheck {
+        name: format!("functional:{}", l.name),
+        ok: mismatches == 0,
+        detail: format!(
+            "{}/{} outputs match the conv oracle on {l}",
+            want.len() - mismatches.min(want.len()),
+            want.len()
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------
+// single-core
+// ---------------------------------------------------------------------
+
+/// The single-core backend: one DIMC-enhanced (or baseline) vector core,
+/// driven through the legacy per-layer simulation entry points.
+#[derive(Debug)]
+pub struct SingleCore {
+    area: AreaModel,
+}
+
+impl SingleCore {
+    pub fn new() -> Self {
+        SingleCore { area: AreaModel::default() }
+    }
+
+    /// Simulate one layer on the session's engine; on the DIMC engine the
+    /// baseline comparison runs too, filling speedup/ANS.
+    fn layer_row(
+        &self,
+        cfg: &SessionConfig,
+        l: &LayerConfig,
+    ) -> Result<LayerReportRow, SessionError> {
+        let primary = simulate_layer_with_arch(l, cfg.engine, cfg.precision, cfg.arch)?;
+        let (baseline_cycles, speedup, ans) = if cfg.engine == Engine::Dimc {
+            let b = simulate_layer_with_arch(l, Engine::Baseline, cfg.precision, cfg.arch)?;
+            let s = b.cycles as f64 / primary.cycles as f64;
+            (Some(b.cycles), Some(s), Some(self.area.ans(s)))
+        } else {
+            (None, None, None)
+        };
+        Ok(LayerReportRow {
+            name: l.name.clone(),
+            ops: l.ops(),
+            cycles: primary.cycles,
+            baseline_cycles,
+            gops: primary.gops(),
+            dist: Some(primary.distribution()),
+            speedup,
+            ans,
+            cores_used: 1,
+            instret: Some(primary.instret),
+            class_counts: Some(primary.class_counts),
+        })
+    }
+
+    fn run_layer(&self, cfg: &SessionConfig, l: &LayerConfig) -> Result<RunReport, SessionError> {
+        let row = self.layer_row(cfg, l)?;
+        let mut rep = base_report(self.name(), cfg, l.name.clone());
+        rep.cycles = row.cycles;
+        rep.ops = row.ops;
+        rep.gops = row.gops;
+        rep.speedup = row.speedup;
+        rep.layers = vec![row];
+        Ok(rep)
+    }
+
+    fn run_network(&self, cfg: &SessionConfig) -> Result<RunReport, SessionError> {
+        let w = cfg.first_workload()?;
+        let mut rows = Vec::with_capacity(w.layers.len());
+        let (mut cycles, mut base_cycles, mut ops) = (0u64, 0u64, 0u64);
+        let mut have_baseline = true;
+        for l in &w.layers {
+            let row = self.layer_row(cfg, l)?;
+            cycles += row.cycles;
+            ops += row.ops;
+            match row.baseline_cycles {
+                Some(b) => base_cycles += b,
+                None => have_baseline = false,
+            }
+            rows.push(row);
+        }
+        let mut rep = base_report(self.name(), cfg, w.name.clone());
+        rep.cycles = cycles;
+        rep.ops = ops;
+        rep.gops = gops_of(ops, cycles, cfg.arch.clock_hz);
+        rep.speedup = if have_baseline && cycles > 0 {
+            Some(base_cycles as f64 / cycles as f64)
+        } else {
+            None
+        };
+        rep.layers = rows;
+        Ok(rep)
+    }
+
+    fn run_functional_spec(
+        &self,
+        cfg: &SessionConfig,
+        l: &LayerConfig,
+        seed: u64,
+        shift: u8,
+    ) -> Result<RunReport, SessionError> {
+        require_int4_functional(cfg)?;
+        let (acts, wts, want) = functional_inputs(l, cfg.engine, seed, shift);
+        let run = run_functional(l, cfg.engine, &acts, &wts, shift)?;
+        let mut rep = base_report(self.name(), cfg, l.name.clone());
+        rep.cycles = run.stats.cycles;
+        rep.ops = l.ops();
+        rep.gops = gops_of(rep.ops, rep.cycles, cfg.arch.clock_hz);
+        rep.checks.push(oracle_check(l, &run.outputs, &want));
+        Ok(rep)
+    }
+}
+
+impl Default for SingleCore {
+    fn default() -> Self {
+        SingleCore::new()
+    }
+}
+
+impl Backend for SingleCore {
+    fn name(&self) -> &'static str {
+        "single-core"
+    }
+
+    fn run(&mut self, cfg: &SessionConfig, spec: &RunSpec) -> Result<RunReport, SessionError> {
+        match spec {
+            RunSpec::Layer(l) => self.run_layer(cfg, l),
+            RunSpec::Network => self.run_network(cfg),
+            RunSpec::Functional { layer, seed, shift } => {
+                self.run_functional_spec(cfg, layer, *seed, *shift)
+            }
+            RunSpec::Serve => Err(SessionError::Unsupported(
+                "the single-core backend does not serve request traces; configure \
+                 .rps(...) so the session routes RunSpec::Serve to the serving backend"
+                    .to_string(),
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// cluster
+// ---------------------------------------------------------------------
+
+/// The cluster backend: N DIMC-enhanced cores behind the shard
+/// partitioner, bus/barrier model and network scheduler. Owns the
+/// geometry-keyed shard-simulation cache, which stays warm across every
+/// request of the session.
+pub struct Cluster {
+    pub(crate) sim: ClusterSim,
+    topo: ClusterTopology,
+}
+
+impl Cluster {
+    pub fn new(cfg: &SessionConfig) -> Self {
+        Cluster {
+            sim: ClusterSim::new(cfg.arch, cfg.precision),
+            topo: ClusterTopology::from_arch(cfg.cores, &cfg.arch),
+        }
+    }
+
+    /// Schedule the session's model at an explicit core count and batch —
+    /// the raw entry the scaling curve and the verify anchors use.
+    pub(crate) fn schedule_at(
+        &mut self,
+        cfg: &SessionConfig,
+        cores: u32,
+        batch: u32,
+    ) -> Result<NetworkSchedule, SessionError> {
+        let w = cfg.first_workload()?;
+        let topo = ClusterTopology::from_arch(cores, &cfg.arch);
+        Ok(self.sim.schedule(&w.name, &w.layers, &topo, batch)?)
+    }
+
+    fn run_layer(
+        &mut self,
+        cfg: &SessionConfig,
+        l: &LayerConfig,
+    ) -> Result<RunReport, SessionError> {
+        let r = self.sim.simulate_layer_cluster(l, &self.topo)?;
+        let mut rep = base_report(self.name(), cfg, l.name.clone());
+        rep.batch = 1; // a layer spec simulates one image regardless of session batch
+        rep.cycles = r.cycles;
+        rep.ops = r.ops;
+        rep.gops = r.gops();
+        rep.utilization = Some(r.cores_used as f64 / self.topo.cores.max(1) as f64);
+        rep.layers = vec![LayerReportRow {
+            name: r.name.clone(),
+            ops: r.ops,
+            cycles: r.cycles,
+            baseline_cycles: None,
+            gops: r.gops(),
+            dist: None,
+            speedup: None,
+            ans: None,
+            cores_used: r.cores_used,
+            instret: None,
+            class_counts: None,
+        }];
+        Ok(rep)
+    }
+
+    fn run_network(&mut self, cfg: &SessionConfig) -> Result<RunReport, SessionError> {
+        let w = cfg.first_workload()?;
+        let s = self.sim.schedule(&w.name, &w.layers, &self.topo, cfg.batch)?;
+        let mut rep = base_report(self.name(), cfg, w.name.clone());
+        rep.cycles = s.cycles;
+        rep.ops = s.ops;
+        rep.gops = s.gops();
+        rep.mode = Some(s.mode.as_str());
+        rep.utilization = Some(s.avg_cores_used() / self.topo.cores.max(1) as f64);
+        rep.layers = s
+            .layers
+            .iter()
+            .map(|r| LayerReportRow {
+                name: r.name.clone(),
+                ops: r.ops,
+                cycles: r.cycles,
+                baseline_cycles: None,
+                gops: r.gops(),
+                dist: None,
+                speedup: None,
+                ans: None,
+                cores_used: r.cores_used,
+                instret: None,
+                class_counts: None,
+            })
+            .collect();
+        Ok(rep)
+    }
+
+    fn run_functional_spec(
+        &mut self,
+        cfg: &SessionConfig,
+        l: &LayerConfig,
+        seed: u64,
+        shift: u8,
+    ) -> Result<RunReport, SessionError> {
+        require_int4_functional(cfg)?;
+        // The cluster's functional driver is DIMC-only (the builder
+        // rejects baseline cluster sessions, so cfg.engine is Dimc here).
+        let (acts, wts, want) = functional_inputs(l, Engine::Dimc, seed, shift);
+        let single = run_functional(l, Engine::Dimc, &acts, &wts, shift)?;
+        let stitched = run_functional_cluster(l, &self.topo, &acts, &wts, shift)?;
+        let mut rep = base_report(self.name(), cfg, l.name.clone());
+        rep.batch = 1; // functional specs execute one image
+        rep.cycles = single.stats.cycles;
+        rep.ops = l.ops();
+        rep.gops = gops_of(rep.ops, rep.cycles, cfg.arch.clock_hz);
+        rep.checks.push(oracle_check(l, &single.outputs, &want));
+        rep.checks.push(RunCheck {
+            name: format!("cluster-functional:{}", l.name),
+            ok: stitched == single.outputs,
+            detail: format!(
+                "sharded outputs {} single-core on {l} across {} cores ({} outputs)",
+                if stitched == single.outputs { "bit-identical to" } else { "DIVERGED from" },
+                self.topo.cores,
+                single.outputs.len()
+            ),
+        });
+        Ok(rep)
+    }
+}
+
+impl Backend for Cluster {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn run(&mut self, cfg: &SessionConfig, spec: &RunSpec) -> Result<RunReport, SessionError> {
+        match spec {
+            RunSpec::Layer(l) => self.run_layer(cfg, l),
+            RunSpec::Network => self.run_network(cfg),
+            RunSpec::Functional { layer, seed, shift } => {
+                self.run_functional_spec(cfg, layer, *seed, *shift)
+            }
+            RunSpec::Serve => Err(SessionError::Unsupported(
+                "the cluster backend does not serve request traces; configure \
+                 .rps(...) so the session routes RunSpec::Serve to the serving backend"
+                    .to_string(),
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// serving
+// ---------------------------------------------------------------------
+
+/// The serving backend: the discrete-event request-driven simulator atop
+/// the cluster scheduler. Owns the `(model, batch)` service-time cache.
+pub struct Serving {
+    pub(crate) server: Server,
+}
+
+impl Serving {
+    pub fn new(cfg: &SessionConfig) -> Self {
+        Serving { server: Server::new(cfg.arch, cfg.precision, cfg.cores) }
+    }
+
+    fn run_serve(&mut self, cfg: &SessionConfig) -> Result<RunReport, SessionError> {
+        let sc = cfg.serve.ok_or_else(|| {
+            SessionError::Unsupported(
+                "RunSpec::Serve needs a serving configuration; set .rps(...) on the \
+                 builder"
+                    .to_string(),
+            )
+        })?;
+        let trace =
+            TraceConfig { rps: sc.rps, requests: sc.requests, shape: sc.shape, seed: sc.seed };
+        let report = self.server.serve_trace(&cfg.workloads, sc.policy, &trace)?;
+
+        // Per-request ops: each completion accounts its model's full
+        // network, so GOPS is true useful throughput over the span.
+        let per_model_ops: Vec<u64> = cfg
+            .workloads
+            .iter()
+            .map(|w| w.layers.iter().map(|l| l.ops()).sum())
+            .collect();
+        let ops: u64 = report.completed.iter().map(|r| per_model_ops[r.model]).sum();
+
+        let lat = report.latencies_sorted();
+        let names: Vec<&str> = cfg.workloads.iter().map(|w| w.name.as_str()).collect();
+        let mut rep = base_report(self.name(), cfg, names.join("+"));
+        rep.cycles = report.span_cycles;
+        rep.ops = ops;
+        rep.gops = gops_of(ops, report.span_cycles.max(1), cfg.arch.clock_hz);
+        rep.utilization = Some(report.utilization());
+        rep.latency = Some(LatencyStats {
+            p50_ms: report.ms(percentile(&lat, 50.0)),
+            p95_ms: report.ms(percentile(&lat, 95.0)),
+            p99_ms: report.ms(percentile(&lat, 99.0)),
+            mean_ms: report.mean_latency_ms(),
+            max_ms: report.ms(lat.last().copied().unwrap_or(0)),
+        });
+        rep.serve = Some(ServeStats {
+            shape: sc.shape.as_str(),
+            seed: sc.seed,
+            requests: sc.requests,
+            offered_rps: report.offered_rps,
+            achieved_rps: report.achieved_rps(),
+            mean_queue_depth: report.mean_queue_depth,
+            max_queue_depth: report.max_queue_depth,
+            batches: report.batches.len(),
+            mean_batch_size: report.mean_batch_size(),
+            max_batch: sc.policy.max_batch,
+            max_wait_cycles: sc.policy.max_wait_cycles,
+            tile_utilization: report.tile_utilization(),
+        });
+
+        // Built-in cross-checks: conservation, causality, batch window.
+        let ids: HashSet<u64> = report.completed.iter().map(|r| r.id).collect();
+        let conserved =
+            report.completed.len() == sc.requests && ids.len() == sc.requests;
+        rep.checks.push(RunCheck {
+            name: "serve:conservation".to_string(),
+            ok: conserved,
+            detail: format!(
+                "{} completions, {} distinct ids for {} requests",
+                report.completed.len(),
+                ids.len(),
+                sc.requests
+            ),
+        });
+        let causal = report
+            .completed
+            .iter()
+            .all(|r| r.arrival <= r.dispatched && r.dispatched < r.completed);
+        rep.checks.push(RunCheck {
+            name: "serve:causality".to_string(),
+            ok: causal,
+            detail: "per-request arrival <= dispatch < completion".to_string(),
+        });
+        let windowed = report
+            .batches
+            .iter()
+            .all(|b| (1..=sc.policy.max_batch).contains(&b.size));
+        rep.checks.push(RunCheck {
+            name: "serve:batch-window".to_string(),
+            ok: windowed,
+            detail: format!("every batch within 1..={}", sc.policy.max_batch),
+        });
+        Ok(rep)
+    }
+}
+
+impl Backend for Serving {
+    fn name(&self) -> &'static str {
+        "serving"
+    }
+
+    fn run(&mut self, cfg: &SessionConfig, spec: &RunSpec) -> Result<RunReport, SessionError> {
+        match spec {
+            RunSpec::Serve => self.run_serve(cfg),
+            other => Err(SessionError::Unsupported(format!(
+                "the serving backend only executes RunSpec::Serve (got {other:?})"
+            ))),
+        }
+    }
+}

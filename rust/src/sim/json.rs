@@ -1,0 +1,260 @@
+//! A tiny hand-rolled JSON writer.
+//!
+//! The build image is fully offline (no crates.io registry), so `serde`
+//! cannot be a dependency; [`RunReport`](crate::sim::RunReport) and the
+//! CLI's `--json` mode serialize through this writer instead. It is a
+//! push-based builder: callers open objects/arrays, emit keys and values,
+//! and the builder tracks comma placement and string escaping. Numbers
+//! use Rust's shortest-round-trip `Display` form (valid JSON); non-finite
+//! floats degrade to `null`.
+//!
+//! ```
+//! use dimc_rvv::sim::json::JsonBuilder;
+//!
+//! let mut j = JsonBuilder::new();
+//! j.begin_obj();
+//! j.field_str("name", "conv1");
+//! j.field_u64("cycles", 42);
+//! j.key("gops");
+//! j.num_f64(17.5);
+//! j.end_obj();
+//! assert_eq!(j.finish(), r#"{"name":"conv1","cycles":42,"gops":17.5}"#);
+//! ```
+
+/// Append `s` to `out` as the *contents* of a JSON string (no quotes),
+/// escaping quotes, backslashes and control characters.
+pub fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Incremental JSON document builder (see the module docs for a usage
+/// example). Callers are responsible for balancing `begin_*`/`end_*`
+/// calls; the builder only manages separators and escaping.
+#[derive(Debug)]
+pub struct JsonBuilder {
+    out: String,
+    /// One "is the next element the first?" flag per open container.
+    first: Vec<bool>,
+    /// Set between a `key()` and its value (suppresses the comma).
+    after_key: bool,
+}
+
+impl JsonBuilder {
+    pub fn new() -> Self {
+        JsonBuilder { out: String::new(), first: vec![true], after_key: false }
+    }
+
+    /// Emit the separator a new element needs in the current container.
+    fn sep(&mut self) {
+        if self.after_key {
+            self.after_key = false;
+            return;
+        }
+        if let Some(f) = self.first.last_mut() {
+            if *f {
+                *f = false;
+            } else {
+                self.out.push(',');
+            }
+        }
+    }
+
+    fn push_string(&mut self, s: &str) {
+        self.out.push('"');
+        escape_into(&mut self.out, s);
+        self.out.push('"');
+    }
+
+    /// Open an object (`{`).
+    pub fn begin_obj(&mut self) {
+        self.sep();
+        self.out.push('{');
+        self.first.push(true);
+    }
+
+    /// Close the innermost object (`}`).
+    pub fn end_obj(&mut self) {
+        self.out.push('}');
+        self.first.pop();
+    }
+
+    /// Open an array (`[`).
+    pub fn begin_arr(&mut self) {
+        self.sep();
+        self.out.push('[');
+        self.first.push(true);
+    }
+
+    /// Close the innermost array (`]`).
+    pub fn end_arr(&mut self) {
+        self.out.push(']');
+        self.first.pop();
+    }
+
+    /// Emit an object key; the next emitted value binds to it.
+    pub fn key(&mut self, k: &str) {
+        self.sep();
+        self.push_string(k);
+        self.out.push(':');
+        self.after_key = true;
+    }
+
+    /// Emit a string value.
+    pub fn str_val(&mut self, v: &str) {
+        self.sep();
+        self.push_string(v);
+    }
+
+    /// Emit an unsigned integer value.
+    pub fn num_u64(&mut self, v: u64) {
+        self.sep();
+        self.out.push_str(&v.to_string());
+    }
+
+    /// Emit a float value (`null` when not finite — JSON has no NaN/inf).
+    pub fn num_f64(&mut self, v: f64) {
+        self.sep();
+        if v.is_finite() {
+            self.out.push_str(&v.to_string());
+        } else {
+            self.out.push_str("null");
+        }
+    }
+
+    /// Emit a boolean value.
+    pub fn boolean(&mut self, v: bool) {
+        self.sep();
+        self.out.push_str(if v { "true" } else { "false" });
+    }
+
+    /// Emit `null`.
+    pub fn null(&mut self) {
+        self.sep();
+        self.out.push_str("null");
+    }
+
+    /// `"k": "v"` in one call.
+    pub fn field_str(&mut self, k: &str, v: &str) {
+        self.key(k);
+        self.str_val(v);
+    }
+
+    /// `"k": v` for unsigned integers.
+    pub fn field_u64(&mut self, k: &str, v: u64) {
+        self.key(k);
+        self.num_u64(v);
+    }
+
+    /// `"k": v` for floats.
+    pub fn field_f64(&mut self, k: &str, v: f64) {
+        self.key(k);
+        self.num_f64(v);
+    }
+
+    /// `"k": v` for booleans.
+    pub fn field_bool(&mut self, k: &str, v: bool) {
+        self.key(k);
+        self.boolean(v);
+    }
+
+    /// `"k": v-or-null` for optional unsigned integers.
+    pub fn field_opt_u64(&mut self, k: &str, v: Option<u64>) {
+        self.key(k);
+        match v {
+            Some(v) => self.num_u64(v),
+            None => self.null(),
+        }
+    }
+
+    /// `"k": v-or-null` for optional floats.
+    pub fn field_opt_f64(&mut self, k: &str, v: Option<f64>) {
+        self.key(k);
+        match v {
+            Some(v) => self.num_f64(v),
+            None => self.null(),
+        }
+    }
+
+    /// `"k": v-or-null` for optional strings.
+    pub fn field_opt_str(&mut self, k: &str, v: Option<&str>) {
+        self.key(k);
+        match v {
+            Some(v) => self.str_val(v),
+            None => self.null(),
+        }
+    }
+
+    /// Consume the builder and return the document.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+impl Default for JsonBuilder {
+    fn default() -> Self {
+        JsonBuilder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_objects_and_arrays_place_commas_correctly() {
+        let mut j = JsonBuilder::new();
+        j.begin_obj();
+        j.field_str("a", "x");
+        j.key("list");
+        j.begin_arr();
+        j.num_u64(1);
+        j.num_u64(2);
+        j.begin_obj();
+        j.field_bool("ok", true);
+        j.end_obj();
+        j.end_arr();
+        j.field_opt_f64("none", None);
+        j.end_obj();
+        assert_eq!(j.finish(), r#"{"a":"x","list":[1,2,{"ok":true}],"none":null}"#);
+    }
+
+    #[test]
+    fn strings_are_escaped() {
+        let mut j = JsonBuilder::new();
+        j.str_val("a\"b\\c\nd\u{1}");
+        assert_eq!(j.finish(), r#""a\"b\\c\nd\u0001""#);
+    }
+
+    #[test]
+    fn non_finite_floats_become_null() {
+        let mut j = JsonBuilder::new();
+        j.begin_arr();
+        j.num_f64(f64::NAN);
+        j.num_f64(f64::INFINITY);
+        j.num_f64(2.5);
+        j.end_arr();
+        assert_eq!(j.finish(), "[null,null,2.5]");
+    }
+
+    #[test]
+    fn top_level_array_of_scalars() {
+        let mut j = JsonBuilder::new();
+        j.begin_arr();
+        j.str_val("a");
+        j.str_val("b");
+        j.end_arr();
+        assert_eq!(j.finish(), r#"["a","b"]"#);
+    }
+}

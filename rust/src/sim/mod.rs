@@ -1,0 +1,84 @@
+//! The unified simulation façade: one typed [`Session`] API in front of
+//! every execution path the crate grew — single-core layer/network
+//! simulation ([`coordinator::driver`](crate::coordinator::driver)),
+//! multi-core cluster scale-out ([`cluster`](crate::cluster)) and
+//! request-driven serving ([`serve`](crate::serve)).
+//!
+//! Before this module, each tier exposed its own entry API with its own
+//! argument conventions and result structs; every frontend (the `repro`
+//! CLI, the figure generators, the benches, the tests) had to know all
+//! three. Now they build a [`Session`] once — validation happens at
+//! build time, with typed [`SessionError`]s — and execute typed
+//! [`RunSpec`] requests against a [`Backend`] chosen by the
+//! configuration. Every backend returns the same [`RunReport`], which is
+//! JSON-serializable without serde via the in-tree [`json`] writer
+//! (`repro <cmd> --json` on the CLI).
+//!
+//! | request | `cores = 1, batch = 1` | `cores > 1 or batch > 1` |
+//! |---|---|---|
+//! | [`RunSpec::Layer`] / [`RunSpec::Network`] / [`RunSpec::Functional`] | [`SingleCore`] | [`Cluster`] |
+//! | [`RunSpec::Serve`] (needs `.rps(...)`) | [`Serving`] | [`Serving`] |
+//!
+//! The legacy free functions (`coordinator::driver::simulate_layer*`,
+//! `cluster::exec::ClusterSim`, `serve::engine::Server`) remain public as
+//! thin deprecated shims — the backends wrap them — but new code should
+//! come through the façade, and a future backend (e.g. an NMC or
+//! analog-IMC tile model) only has to implement [`Backend`].
+//!
+//! Build a session, run a network, print the unified report:
+//!
+//! ```
+//! use dimc_rvv::compiler::layer::LayerConfig;
+//! use dimc_rvv::sim::{RunSpec, Session};
+//!
+//! let mut session = Session::builder()
+//!     .layers("tiny", vec![
+//!         LayerConfig::conv("t1", 16, 64, 3, 3, 8, 8, 1, 1),
+//!         LayerConfig::fc("t2", 8 * 8 * 64, 10),
+//!     ])
+//!     .cores(2)
+//!     .build()
+//!     .unwrap();
+//!
+//! let report = session.run(&RunSpec::Network).unwrap();
+//! assert_eq!(report.backend, "cluster");
+//! assert!(report.gops > 0.0);
+//! println!("{}", report.to_json());
+//!
+//! // Builder validation fails early, with a typed error:
+//! assert!(Session::builder().model("not-a-model").build().is_err());
+//! ```
+
+pub mod backend;
+pub mod json;
+pub mod report;
+pub mod session;
+
+pub use backend::{Backend, Cluster, Serving, SingleCore};
+pub use json::JsonBuilder;
+pub use report::{
+    write_load_point, write_scaling_point, LatencyStats, LayerReportRow, RunCheck, RunReport,
+    ServeStats,
+};
+pub use session::{RunSpec, ServeConfig, Session, SessionBuilder, SessionConfig, SessionError};
+
+/// Which core executes a layer. Lives here since the façade owns engine
+/// selection; re-exported at the historical
+/// `coordinator::driver::Engine` path for compatibility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// DIMC-enhanced RVV core (custom instructions, 4-bit).
+    Dimc,
+    /// Baseline RVV core (pure Zve32x, 8-bit).
+    Baseline,
+}
+
+impl Engine {
+    /// Canonical lower-case name (`dimc` / `baseline`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Engine::Dimc => "dimc",
+            Engine::Baseline => "baseline",
+        }
+    }
+}

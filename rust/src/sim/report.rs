@@ -1,0 +1,297 @@
+//! The unified result type every [`Backend`](crate::sim::Backend)
+//! returns: one flat, JSON-serializable report whatever executed —
+//! a single layer, a whole network, a cluster schedule or a serving
+//! trace. Fields that only some backends produce are `Option`s; the
+//! `backend` tag says which execution path filled the report in.
+
+use super::json::JsonBuilder;
+use super::Engine;
+use crate::cluster::scaling::ScalingPoint;
+use crate::serve::LoadPoint;
+
+/// One per-layer row of a [`RunReport`].
+///
+/// Single-core runs on the DIMC engine fill every field (both engines are
+/// simulated, so speedup/ANS are known); cluster runs fill the
+/// cluster-relevant subset (`cores_used`, no baseline comparison).
+#[derive(Debug, Clone)]
+pub struct LayerReportRow {
+    /// Layer name (from its `LayerConfig`).
+    pub name: String,
+    /// Operation count (2 x MACs).
+    pub ops: u64,
+    /// Simulated cycles on the report's primary engine.
+    pub cycles: u64,
+    /// Simulated cycles on the baseline RVV core, when the run computed
+    /// the comparison (single-core DIMC runs only).
+    pub baseline_cycles: Option<u64>,
+    /// Achieved throughput in GOPS on the primary engine.
+    pub gops: f64,
+    /// (compute, load, store) fractions of data-path instructions
+    /// (single-core runs only).
+    pub dist: Option<(f64, f64, f64)>,
+    /// Baseline cycles / primary cycles, when the comparison ran.
+    pub speedup: Option<f64>,
+    /// Area-normalized speedup, when the comparison ran.
+    pub ans: Option<f64>,
+    /// Cores the layer actually occupied (1 on the single-core backend).
+    pub cores_used: u32,
+    /// Instructions retired on the primary engine (single-core runs).
+    pub instret: Option<u64>,
+    /// Per-class instruction counts on the primary engine (single-core
+    /// runs; feeds the energy model). Not serialized to JSON.
+    pub class_counts: Option<[u64; 8]>,
+}
+
+impl LayerReportRow {
+    fn write_json(&self, j: &mut JsonBuilder) {
+        j.begin_obj();
+        j.field_str("name", &self.name);
+        j.field_u64("ops", self.ops);
+        j.field_u64("cycles", self.cycles);
+        j.field_opt_u64("baseline_cycles", self.baseline_cycles);
+        j.field_f64("gops", self.gops);
+        j.key("dist");
+        match self.dist {
+            Some((c, l, s)) => {
+                j.begin_arr();
+                j.num_f64(c);
+                j.num_f64(l);
+                j.num_f64(s);
+                j.end_arr();
+            }
+            None => j.null(),
+        }
+        j.field_opt_f64("speedup", self.speedup);
+        j.field_opt_f64("ans", self.ans);
+        j.field_u64("cores_used", self.cores_used as u64);
+        j.field_opt_u64("instret", self.instret);
+        j.end_obj();
+    }
+}
+
+/// Latency percentiles of a serving run, in milliseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyStats {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencyStats {
+    fn write_json(&self, j: &mut JsonBuilder) {
+        j.begin_obj();
+        j.field_f64("p50_ms", self.p50_ms);
+        j.field_f64("p95_ms", self.p95_ms);
+        j.field_f64("p99_ms", self.p99_ms);
+        j.field_f64("mean_ms", self.mean_ms);
+        j.field_f64("max_ms", self.max_ms);
+        j.end_obj();
+    }
+}
+
+/// Serving-specific aggregates of a [`RunReport`].
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Arrival-trace shape name (`uniform` / `bursty` / `ramp`).
+    pub shape: &'static str,
+    /// Trace seed (reproduces the run bit-for-bit).
+    pub seed: u64,
+    /// Requests in the trace.
+    pub requests: usize,
+    /// Empirical offered load in requests per second.
+    pub offered_rps: f64,
+    /// Achieved throughput over the span.
+    pub achieved_rps: f64,
+    /// Time-weighted mean queue depth.
+    pub mean_queue_depth: f64,
+    /// Peak instantaneous queue depth.
+    pub max_queue_depth: usize,
+    /// Dispatched batch count.
+    pub batches: usize,
+    /// Mean dispatched batch size.
+    pub mean_batch_size: f64,
+    /// Batching-window knob: largest batch ever dispatched.
+    pub max_batch: u32,
+    /// Batching-window knob: longest hold before forced dispatch.
+    pub max_wait_cycles: u64,
+    /// Fraction of aggregate DIMC-tile capacity that did work.
+    pub tile_utilization: f64,
+}
+
+impl ServeStats {
+    fn write_json(&self, j: &mut JsonBuilder) {
+        j.begin_obj();
+        j.field_str("shape", self.shape);
+        j.field_u64("seed", self.seed);
+        j.field_u64("requests", self.requests as u64);
+        j.field_f64("offered_rps", self.offered_rps);
+        j.field_f64("achieved_rps", self.achieved_rps);
+        j.field_f64("mean_queue_depth", self.mean_queue_depth);
+        j.field_u64("max_queue_depth", self.max_queue_depth as u64);
+        j.field_u64("batches", self.batches as u64);
+        j.field_f64("mean_batch_size", self.mean_batch_size);
+        j.field_u64("max_batch", self.max_batch as u64);
+        j.field_u64("max_wait_cycles", self.max_wait_cycles);
+        j.field_f64("tile_utilization", self.tile_utilization);
+        j.end_obj();
+    }
+}
+
+/// One built-in correctness cross-check a backend ran alongside the
+/// simulation (bit-identity, conservation, causality, ...).
+#[derive(Debug, Clone)]
+pub struct RunCheck {
+    /// Stable check identifier (e.g. `functional:probe_grouped`).
+    pub name: String,
+    /// Whether the check held.
+    pub ok: bool,
+    /// Human-readable outcome.
+    pub detail: String,
+}
+
+impl RunCheck {
+    fn write_json(&self, j: &mut JsonBuilder) {
+        j.begin_obj();
+        j.field_str("name", &self.name);
+        j.field_bool("ok", self.ok);
+        j.field_str("detail", &self.detail);
+        j.end_obj();
+    }
+}
+
+/// The unified execution report — what every backend returns and what
+/// `repro --json` emits.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Which backend produced the report
+    /// (`single-core` / `cluster` / `serving`).
+    pub backend: &'static str,
+    /// Model (or layer) the report describes; serving joins the mix with
+    /// `+`.
+    pub model: String,
+    /// Primary engine the run simulated.
+    pub engine: Engine,
+    /// DIMC operand precision in bits.
+    pub precision_bits: u32,
+    /// Cores the session was configured with.
+    pub cores: u32,
+    /// Batch size the session was configured with.
+    pub batch: u32,
+    /// Core clock in Hz.
+    pub clock_hz: f64,
+    /// Total cycles: the layer/network/batch time, or the serving span.
+    pub cycles: u64,
+    /// Total operations accounted (2 x MACs).
+    pub ops: u64,
+    /// Achieved throughput in GOPS over `cycles`.
+    pub gops: f64,
+    /// Whole-run baseline/primary speedup, when the comparison ran.
+    pub speedup: Option<f64>,
+    /// Cluster execution mode (`layer-parallel` / `image-parallel`).
+    pub mode: Option<&'static str>,
+    /// Utilization: busy-core fraction (cluster) or busy-span fraction
+    /// (serving).
+    pub utilization: Option<f64>,
+    /// Per-layer rows, where the run has a per-layer view.
+    pub layers: Vec<LayerReportRow>,
+    /// Latency percentiles (serving runs).
+    pub latency: Option<LatencyStats>,
+    /// Serving aggregates (serving runs).
+    pub serve: Option<ServeStats>,
+    /// Built-in correctness cross-checks the backend ran.
+    pub checks: Vec<RunCheck>,
+}
+
+impl RunReport {
+    /// Report duration in milliseconds at the simulated clock.
+    pub fn ms(&self) -> f64 {
+        self.cycles as f64 / self.clock_hz * 1e3
+    }
+
+    /// Whether every built-in cross-check held.
+    pub fn checks_ok(&self) -> bool {
+        self.checks.iter().all(|c| c.ok)
+    }
+
+    /// Serialize into an in-progress JSON document (one object).
+    pub fn write_json(&self, j: &mut JsonBuilder) {
+        j.begin_obj();
+        j.field_str("backend", self.backend);
+        j.field_str("model", &self.model);
+        j.field_str("engine", self.engine.as_str());
+        j.field_u64("precision_bits", self.precision_bits as u64);
+        j.field_u64("cores", self.cores as u64);
+        j.field_u64("batch", self.batch as u64);
+        j.field_f64("clock_hz", self.clock_hz);
+        j.field_u64("cycles", self.cycles);
+        j.field_f64("ms", self.ms());
+        j.field_u64("ops", self.ops);
+        j.field_f64("gops", self.gops);
+        j.field_opt_f64("speedup", self.speedup);
+        j.field_opt_str("mode", self.mode);
+        j.field_opt_f64("utilization", self.utilization);
+        j.key("layers");
+        j.begin_arr();
+        for row in &self.layers {
+            row.write_json(j);
+        }
+        j.end_arr();
+        j.key("latency");
+        match &self.latency {
+            Some(l) => l.write_json(j),
+            None => j.null(),
+        }
+        j.key("serve");
+        match &self.serve {
+            Some(s) => s.write_json(j),
+            None => j.null(),
+        }
+        j.key("checks");
+        j.begin_arr();
+        for c in &self.checks {
+            c.write_json(j);
+        }
+        j.end_arr();
+        j.end_obj();
+    }
+
+    /// Serialize the whole report as one JSON object.
+    pub fn to_json(&self) -> String {
+        let mut j = JsonBuilder::new();
+        self.write_json(&mut j);
+        j.finish()
+    }
+}
+
+/// Serialize one cluster scaling point (for `repro cluster --json`).
+pub fn write_scaling_point(j: &mut JsonBuilder, p: &ScalingPoint) {
+    j.begin_obj();
+    j.field_u64("cores", p.cores as u64);
+    j.field_u64("batch", p.batch as u64);
+    j.field_str("mode", p.mode.as_str());
+    j.field_u64("cycles", p.cycles);
+    j.field_f64("ms", p.ms());
+    j.field_f64("gops", p.gops);
+    j.field_f64("speedup", p.speedup);
+    j.field_f64("efficiency", p.efficiency);
+    j.end_obj();
+}
+
+/// Serialize one serving load-ladder rung (for `repro serve --json`).
+pub fn write_load_point(j: &mut JsonBuilder, p: &LoadPoint) {
+    j.begin_obj();
+    j.field_f64("offered_rps", p.offered_rps);
+    j.field_f64("achieved_rps", p.achieved_rps);
+    j.field_f64("p50_ms", p.p50_ms);
+    j.field_f64("p95_ms", p.p95_ms);
+    j.field_f64("p99_ms", p.p99_ms);
+    j.field_f64("mean_ms", p.mean_ms);
+    j.field_f64("utilization", p.utilization);
+    j.field_f64("tile_utilization", p.tile_utilization);
+    j.field_f64("mean_queue_depth", p.mean_queue_depth);
+    j.field_f64("mean_batch", p.mean_batch);
+    j.end_obj();
+}

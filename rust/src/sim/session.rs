@@ -1,0 +1,615 @@
+//! The [`Session`] façade: one typed, validated entry point for every
+//! kind of execution the crate supports.
+//!
+//! A session is built once ([`Session::builder`] → [`SessionBuilder`] →
+//! [`SessionBuilder::build`], which validates the whole configuration and
+//! fails early with a [`SessionError`]), then executes any number of
+//! typed [`RunSpec`] requests. The session routes each request to the
+//! right [`Backend`] — single-core, cluster or serving — and every
+//! backend keeps its simulation caches warm across requests.
+
+use super::backend::{Backend, Cluster, Serving, SingleCore};
+use super::report::{RunCheck, RunReport};
+use super::Engine;
+use crate::arch::Arch;
+use crate::cluster::scaling::{scaling_curve_with, ScalingPoint};
+use crate::compiler::layer::LayerConfig;
+use crate::coordinator::driver::simulate_layer_with_arch;
+use crate::dimc::Precision;
+use crate::pipeline::core::SimError;
+use crate::serve::{BatchPolicy, LoadPoint, TraceShape, Workload};
+use crate::workloads::zoo;
+
+/// Everything that can go wrong building or driving a [`Session`].
+#[derive(Debug)]
+pub enum SessionError {
+    /// The builder's configuration is invalid (caught at build time).
+    Invalid(String),
+    /// The configuration cannot execute this request.
+    Unsupported(String),
+    /// The underlying simulator failed.
+    Sim(SimError),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Invalid(m) => write!(f, "invalid session configuration: {m}"),
+            SessionError::Unsupported(m) => write!(f, "unsupported request: {m}"),
+            SessionError::Sim(e) => write!(f, "simulation failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+impl From<SimError> for SessionError {
+    fn from(e: SimError) -> Self {
+        SessionError::Sim(e)
+    }
+}
+
+/// A typed execution request against a [`Session`].
+#[derive(Debug, Clone)]
+pub enum RunSpec {
+    /// Timing-simulate one layer (cluster-sharded when the session has
+    /// more than one core).
+    Layer(LayerConfig),
+    /// Timing-simulate the session's configured model end to end
+    /// (single-core per-layer rows at one core, a cluster schedule
+    /// otherwise).
+    Network,
+    /// Functionally execute one layer with seeded synthetic tensors and
+    /// cross-check the outputs bit-for-bit against the pure-Rust conv
+    /// oracle (and, on a cluster, against the single-core driver).
+    Functional {
+        /// The layer to execute.
+        layer: LayerConfig,
+        /// Seed for the synthetic activation/weight tensors.
+        seed: u64,
+        /// Requantization shift applied to the accumulators.
+        shift: u8,
+    },
+    /// Drain the configured request trace through the serving tier
+    /// (needs `.rps(...)` on the builder).
+    Serve,
+}
+
+/// The serving slice of a session's configuration (present iff
+/// `.rps(...)` was set on the builder).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Mean offered load in requests per second.
+    pub rps: f64,
+    /// Requests in the generated trace.
+    pub requests: usize,
+    /// Arrival-trace shape.
+    pub shape: TraceShape,
+    /// Trace seed.
+    pub seed: u64,
+    /// Dynamic-batching window.
+    pub policy: BatchPolicy,
+}
+
+/// A validated session configuration (what [`SessionBuilder::build`]
+/// produces; read-only thereafter).
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Timing knobs every backend simulates under.
+    pub arch: Arch,
+    /// DIMC operand precision.
+    pub precision: Precision,
+    /// Primary engine (`Dimc` or `Baseline`; clusters are DIMC-only).
+    pub engine: Engine,
+    /// Cores the session schedules onto (1 = single-core backend).
+    pub cores: u32,
+    /// Images per batch for network runs.
+    pub batch: u32,
+    /// The configured model set: network runs use the first entry,
+    /// serving draws the request mix over all of them.
+    pub workloads: Vec<Workload>,
+    /// Serving parameters, when the session serves traffic.
+    pub serve: Option<ServeConfig>,
+}
+
+impl SessionConfig {
+    /// The model network/scaling requests operate on.
+    pub(crate) fn first_workload(&self) -> Result<&Workload, SessionError> {
+        self.workloads.first().ok_or_else(|| {
+            SessionError::Unsupported(
+                "this request needs a configured model: set .model(\"...\"), \
+                 .layers(...) or .workload(...) on the builder"
+                    .to_string(),
+            )
+        })
+    }
+}
+
+/// How a model joins the session's workload set.
+#[derive(Debug, Clone)]
+enum WorkloadSpec {
+    /// A zoo model by (case-insensitive) name, with a traffic weight.
+    Zoo(String, f64),
+    /// An explicit layer list.
+    Custom(Workload),
+}
+
+/// Fluent constructor for [`Session`]; every knob has a sensible default
+/// and [`SessionBuilder::build`] validates the combination.
+///
+/// ```
+/// use dimc_rvv::sim::Session;
+///
+/// // 0 cores is caught at build time, not at run time.
+/// assert!(Session::builder().cores(0).build().is_err());
+/// ```
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    arch: Arch,
+    precision: Precision,
+    engine: Engine,
+    cores: u32,
+    batch: u32,
+    workloads: Vec<WorkloadSpec>,
+    rps: Option<f64>,
+    requests: Option<usize>,
+    shape: Option<TraceShape>,
+    seed: Option<u64>,
+    max_batch: Option<u32>,
+    max_wait: Option<u64>,
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        SessionBuilder {
+            arch: Arch::default(),
+            precision: Precision::Int4,
+            engine: Engine::Dimc,
+            cores: 1,
+            batch: 1,
+            workloads: Vec::new(),
+            rps: None,
+            requests: None,
+            shape: None,
+            seed: None,
+            max_batch: None,
+            max_wait: None,
+        }
+    }
+
+    /// Override the architectural timing knobs (default: [`Arch::default`]).
+    pub fn arch(mut self, arch: Arch) -> Self {
+        self.arch = arch;
+        self
+    }
+
+    /// DIMC operand precision (default: `Int4`).
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    /// Primary engine (default: [`Engine::Dimc`]).
+    pub fn engine(mut self, e: Engine) -> Self {
+        self.engine = e;
+        self
+    }
+
+    /// Cores to schedule onto (default: 1; must be >= 1).
+    pub fn cores(mut self, n: u32) -> Self {
+        self.cores = n;
+        self
+    }
+
+    /// Images per batch for network runs (default: 1; must be >= 1).
+    pub fn batch(mut self, b: u32) -> Self {
+        self.batch = b;
+        self
+    }
+
+    /// Add a zoo model by name (case-insensitive), traffic weight 1.
+    pub fn model(self, name: &str) -> Self {
+        self.model_weighted(name, 1.0)
+    }
+
+    /// Add a zoo model by name with an explicit traffic weight.
+    pub fn model_weighted(mut self, name: &str, weight: f64) -> Self {
+        self.workloads.push(WorkloadSpec::Zoo(name.to_string(), weight));
+        self
+    }
+
+    /// Add an explicit workload (custom layer list + weight).
+    pub fn workload(mut self, w: Workload) -> Self {
+        self.workloads.push(WorkloadSpec::Custom(w));
+        self
+    }
+
+    /// Add a custom named network from a layer list (weight 1).
+    pub fn layers(self, name: &str, layers: Vec<LayerConfig>) -> Self {
+        self.workload(Workload::new(name, layers))
+    }
+
+    /// Serve traffic at this mean request rate (enables [`RunSpec::Serve`]).
+    pub fn rps(mut self, rps: f64) -> Self {
+        self.rps = Some(rps);
+        self
+    }
+
+    /// Requests in the generated serving trace (default: 512).
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = Some(n);
+        self
+    }
+
+    /// Arrival-trace shape (default: uniform Poisson).
+    pub fn trace(mut self, shape: TraceShape) -> Self {
+        self.shape = Some(shape);
+        self
+    }
+
+    /// Serving trace seed (default: `0xD1AC`).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Largest batch the dynamic batcher dispatches (default: 8).
+    pub fn max_batch(mut self, n: u32) -> Self {
+        self.max_batch = Some(n);
+        self
+    }
+
+    /// Longest a request may head its queue before forced dispatch
+    /// (default: 0 — greedy batching).
+    pub fn max_wait_cycles(mut self, cycles: u64) -> Self {
+        self.max_wait = Some(cycles);
+        self
+    }
+
+    /// Validate the configuration and produce a [`Session`]. Every
+    /// invalid combination fails here, not at run time.
+    pub fn build(self) -> Result<Session, SessionError> {
+        if self.cores == 0 {
+            return Err(SessionError::Invalid("cores must be >= 1 (got 0)".to_string()));
+        }
+        if self.batch == 0 {
+            return Err(SessionError::Invalid("batch must be >= 1 (got 0)".to_string()));
+        }
+
+        let serve_intent = self.rps.is_some()
+            || self.requests.is_some()
+            || self.shape.is_some()
+            || self.seed.is_some()
+            || self.max_batch.is_some()
+            || self.max_wait.is_some();
+
+        if self.engine == Engine::Baseline && (self.cores > 1 || self.batch > 1) {
+            return Err(SessionError::Invalid(
+                "the cluster schedules the DIMC engine only; baseline sessions must \
+                 stay at cores = 1, batch = 1"
+                    .to_string(),
+            ));
+        }
+        if self.engine == Engine::Baseline && serve_intent {
+            return Err(SessionError::Invalid(
+                "the serving tier runs on the DIMC cluster; baseline sessions cannot \
+                 serve traffic"
+                    .to_string(),
+            ));
+        }
+
+        let mut workloads = Vec::with_capacity(self.workloads.len());
+        for spec in self.workloads {
+            match spec {
+                WorkloadSpec::Zoo(name, weight) => {
+                    let weight_ok = weight.is_finite() && weight > 0.0;
+                    if !weight_ok {
+                        return Err(SessionError::Invalid(format!(
+                            "traffic weight for `{name}` must be positive and finite \
+                             (got {weight})"
+                        )));
+                    }
+                    let m = zoo::lookup(&name)
+                        .map_err(|e| SessionError::Invalid(e.to_string()))?;
+                    // Store the canonical zoo name, not the user's casing,
+                    // so reports and mix entries stay consistent.
+                    workloads.push(Workload {
+                        name: m.name.to_string(),
+                        layers: m.layers,
+                        weight,
+                    });
+                }
+                WorkloadSpec::Custom(w) => {
+                    let weight_ok = w.weight.is_finite() && w.weight > 0.0;
+                    if !weight_ok {
+                        return Err(SessionError::Invalid(format!(
+                            "traffic weight for `{}` must be positive and finite \
+                             (got {})",
+                            w.name, w.weight
+                        )));
+                    }
+                    if w.layers.is_empty() {
+                        return Err(SessionError::Invalid(format!(
+                            "workload `{}` has no layers",
+                            w.name
+                        )));
+                    }
+                    workloads.push(w);
+                }
+            }
+        }
+
+        let serve = if serve_intent {
+            let Some(rps) = self.rps else {
+                return Err(SessionError::Invalid(
+                    "serving parameters were set without a request rate; call \
+                     .rps(...) to configure serving"
+                        .to_string(),
+                ));
+            };
+            let rps_ok = rps.is_finite() && rps > 0.0;
+            if !rps_ok {
+                return Err(SessionError::Invalid(format!(
+                    "rps must be positive and finite (got {rps})"
+                )));
+            }
+            let requests = self.requests.unwrap_or(512);
+            if requests == 0 {
+                return Err(SessionError::Invalid("requests must be >= 1 (got 0)".to_string()));
+            }
+            let max_batch = self.max_batch.unwrap_or(8);
+            if max_batch == 0 {
+                return Err(SessionError::Invalid("max_batch must be >= 1 (got 0)".to_string()));
+            }
+            if workloads.is_empty() {
+                return Err(SessionError::Invalid(
+                    "serving needs at least one model: set .model(\"...\") or \
+                     .workload(...)"
+                        .to_string(),
+                ));
+            }
+            Some(ServeConfig {
+                rps,
+                requests,
+                shape: self.shape.unwrap_or(TraceShape::Uniform),
+                seed: self.seed.unwrap_or(0xD1AC),
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait_cycles: self.max_wait.unwrap_or(0),
+                },
+            })
+        } else {
+            None
+        };
+
+        Ok(Session {
+            cfg: SessionConfig {
+                arch: self.arch,
+                precision: self.precision,
+                engine: self.engine,
+                cores: self.cores,
+                batch: self.batch,
+                workloads,
+                serve,
+            },
+            single: SingleCore::new(),
+            cluster: None,
+            serving: None,
+        })
+    }
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder::new()
+    }
+}
+
+/// The unified execution façade: a validated configuration plus lazily
+/// constructed backends whose simulation caches persist across requests.
+pub struct Session {
+    cfg: SessionConfig,
+    single: SingleCore,
+    cluster: Option<Cluster>,
+    serving: Option<Serving>,
+}
+
+impl Session {
+    /// Start configuring a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// The session's validated configuration.
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    /// Execute one typed request, routed to the backend the configuration
+    /// selects: `Serve` goes to the serving backend; everything else goes
+    /// to the cluster backend when `cores > 1 || batch > 1`, the
+    /// single-core backend otherwise.
+    pub fn run(&mut self, spec: &RunSpec) -> Result<RunReport, SessionError> {
+        let Session { cfg, single, cluster, serving } = self;
+        match spec {
+            RunSpec::Serve => {
+                if cfg.serve.is_none() {
+                    return Err(SessionError::Unsupported(
+                        "RunSpec::Serve needs a serving configuration; set .rps(...) \
+                         on the builder"
+                            .to_string(),
+                    ));
+                }
+                serving.get_or_insert_with(|| Serving::new(cfg)).run(cfg, spec)
+            }
+            _ if cfg.cores > 1 || cfg.batch > 1 => {
+                cluster.get_or_insert_with(|| Cluster::new(cfg)).run(cfg, spec)
+            }
+            _ => single.run(cfg, spec),
+        }
+    }
+
+    /// Run the functional bit-identity cross-checks on demand: small
+    /// probe layers (tiled, grouped, FC) execute functionally on the
+    /// configured engine and must match the pure-Rust conv oracle
+    /// bit-for-bit; on a cluster the sharded outputs must additionally
+    /// equal the single-core driver's, and a 1-core schedule of the
+    /// configured model must reproduce single-core cycle counts exactly.
+    pub fn verify(&mut self) -> Result<Vec<RunCheck>, SessionError> {
+        let probes = [
+            LayerConfig::conv("vprobe_tiled", 80, 8, 2, 2, 4, 4, 1, 0),
+            LayerConfig::conv("vprobe_grouped", 16, 96, 2, 2, 6, 6, 1, 0),
+            LayerConfig::fc("vprobe_fc", 300, 40),
+        ];
+        let mut checks = Vec::new();
+        for layer in probes {
+            let rep = self.run(&RunSpec::Functional { layer, seed: 0xD1AC, shift: 4 })?;
+            checks.extend(rep.checks);
+        }
+
+        if self.cfg.cores > 1 && !self.cfg.workloads.is_empty() {
+            let single: u64 = {
+                let w = &self.cfg.workloads[0];
+                let mut sum = 0u64;
+                for l in &w.layers {
+                    sum += simulate_layer_with_arch(
+                        l,
+                        Engine::Dimc,
+                        self.cfg.precision,
+                        self.cfg.arch,
+                    )?
+                    .cycles;
+                }
+                sum
+            };
+            let Session { cfg, cluster, .. } = self;
+            let one = cluster
+                .get_or_insert_with(|| Cluster::new(cfg))
+                .schedule_at(cfg, 1, 1)?;
+            checks.push(RunCheck {
+                name: "cluster:one-core-exact".to_string(),
+                ok: one.cycles == single,
+                detail: format!(
+                    "1-core cluster schedule {} vs single-core simulator {single} cycles",
+                    one.cycles
+                ),
+            });
+        }
+        Ok(checks)
+    }
+
+    /// Simulate the configured model on every core count in
+    /// `core_counts` (at the session's batch size) and fold the points
+    /// into a scaling curve. All points share the cluster backend's warm
+    /// shard-simulation cache.
+    pub fn scaling_curve(
+        &mut self,
+        core_counts: &[u32],
+    ) -> Result<Vec<ScalingPoint>, SessionError> {
+        let Session { cfg, cluster, .. } = self;
+        let w = cfg.first_workload()?;
+        let b = cluster.get_or_insert_with(|| Cluster::new(cfg));
+        Ok(scaling_curve_with(&mut b.sim, &w.name, &w.layers, core_counts, cfg.batch)?)
+    }
+
+    /// Latency of a single unbatched inference of workload `model` on
+    /// the serving cluster — the zero-load latency floor, in cycles.
+    pub fn unbatched_latency(&mut self, model: usize) -> Result<u64, SessionError> {
+        let (server, cfg, _) = self.serving_parts(model)?;
+        Ok(server.server.unbatched_latency(&cfg.workloads, model)?)
+    }
+
+    /// The batch-mode roofline of workload `model` in inferences per
+    /// second, at the configured `max_batch`.
+    pub fn batch_roofline(&mut self, model: usize) -> Result<f64, SessionError> {
+        let (server, cfg, sc) = self.serving_parts(model)?;
+        Ok(server.server.batch_roofline(&cfg.workloads, model, sc.policy.max_batch)?)
+    }
+
+    /// The traffic-weighted roofline of the whole configured mix.
+    pub fn mix_roofline(&mut self) -> Result<f64, SessionError> {
+        let (server, cfg, sc) = self.serving_parts(0)?;
+        Ok(server.server.mix_roofline(&cfg.workloads, sc.policy.max_batch)?)
+    }
+
+    /// Run one full serving simulation per rung of `ladder` (requests per
+    /// second) and fold each into a load/latency point. The serving
+    /// backend's service-time caches stay warm across rungs.
+    pub fn load_sweep(&mut self, ladder: &[f64]) -> Result<Vec<LoadPoint>, SessionError> {
+        let Session { cfg, serving, .. } = self;
+        let sc = Self::serve_config(cfg)?;
+        let b = serving.get_or_insert_with(|| Serving::new(cfg));
+        Ok(crate::serve::sweep::load_sweep(
+            &mut b.server,
+            &cfg.workloads,
+            sc.policy,
+            sc.shape,
+            sc.seed,
+            sc.requests,
+            ladder,
+        )?)
+    }
+
+    fn serve_config(cfg: &SessionConfig) -> Result<ServeConfig, SessionError> {
+        cfg.serve.ok_or_else(|| {
+            SessionError::Unsupported(
+                "this request needs a serving configuration; set .rps(...) on the \
+                 builder"
+                    .to_string(),
+            )
+        })
+    }
+
+    /// Borrow the serving backend (created on first use) together with
+    /// the config, guarding the workload index.
+    fn serving_parts(
+        &mut self,
+        model: usize,
+    ) -> Result<(&mut Serving, &SessionConfig, ServeConfig), SessionError> {
+        let Session { cfg, serving, .. } = self;
+        let sc = Self::serve_config(cfg)?;
+        if model >= cfg.workloads.len() {
+            return Err(SessionError::Unsupported(format!(
+                "workload index {model} out of range ({} configured)",
+                cfg.workloads.len()
+            )));
+        }
+        let b = serving.get_or_insert_with(|| Serving::new(cfg));
+        Ok((b, cfg, sc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_build_a_single_core_session() {
+        let s = Session::builder().build().unwrap();
+        assert_eq!(s.config().cores, 1);
+        assert_eq!(s.config().batch, 1);
+        assert_eq!(s.config().engine, Engine::Dimc);
+        assert!(s.config().serve.is_none());
+        assert!(s.config().workloads.is_empty());
+    }
+
+    #[test]
+    fn serve_defaults_fill_in_when_rps_is_set() {
+        let s = Session::builder()
+            .layers("t", vec![LayerConfig::fc("f", 64, 10)])
+            .rps(100.0)
+            .build()
+            .unwrap();
+        let sc = s.config().serve.unwrap();
+        assert_eq!(sc.requests, 512);
+        assert_eq!(sc.policy.max_batch, 8);
+        assert_eq!(sc.policy.max_wait_cycles, 0);
+        assert_eq!(sc.shape, TraceShape::Uniform);
+    }
+
+    #[test]
+    fn empty_custom_workload_is_rejected() {
+        let e = Session::builder().layers("empty", Vec::new()).build().unwrap_err();
+        assert!(matches!(e, SessionError::Invalid(_)), "{e}");
+    }
+}

@@ -16,4 +16,4 @@ pub mod resnet;
 pub mod vgg;
 pub mod zoo;
 
-pub use zoo::{all_models, model_by_name, Model};
+pub use zoo::{all_models, lookup, model_by_name, Model, UnknownModel};

@@ -33,7 +33,42 @@ pub fn all_models() -> Vec<Model> {
     models
 }
 
-/// Look a model up by name (CLI entry point).
+/// Error returned by [`lookup`] for an unknown model name; its `Display`
+/// lists every valid name, so frontends can surface it verbatim.
+#[derive(Debug, Clone)]
+pub struct UnknownModel {
+    /// The name that failed to resolve.
+    pub requested: String,
+    /// Every valid zoo model name.
+    pub valid: Vec<&'static str>,
+}
+
+impl std::fmt::Display for UnknownModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown model `{}`; valid models: {}", self.requested, self.valid.join(", "))
+    }
+}
+
+impl std::error::Error for UnknownModel {}
+
+/// Look a model up by name, case-insensitively. On failure the error
+/// lists every valid name (the CLI and
+/// [`sim::SessionBuilder`](crate::sim::SessionBuilder) surface it
+/// directly).
+pub fn lookup(name: &str) -> Result<Model, UnknownModel> {
+    all_models()
+        .into_iter()
+        .find(|m| m.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| UnknownModel {
+            requested: name.to_string(),
+            valid: all_models().iter().map(|m| m.name).collect(),
+        })
+}
+
+/// Look a model up by exact name.
+///
+/// Deprecated shim: prefer [`lookup`], which matches case-insensitively
+/// and reports the valid names on failure.
 pub fn model_by_name(name: &str) -> Option<Model> {
     all_models().into_iter().find(|m| m.name == name)
 }
@@ -73,6 +108,17 @@ mod tests {
         assert!(model_by_name("resnet50").is_some());
         assert!(model_by_name("mobilenet-50-192").is_some());
         assert!(model_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive_and_errors_list_valid_names() {
+        assert_eq!(lookup("ResNet50").unwrap().name, "resnet50");
+        assert_eq!(lookup("MOBILENET-50-192").unwrap().name, "mobilenet-50-192");
+        let e = lookup("nope").unwrap_err();
+        assert_eq!(e.requested, "nope");
+        let msg = e.to_string();
+        assert!(msg.contains("unknown model `nope`"), "{msg}");
+        assert!(msg.contains("resnet50") && msg.contains("vgg16"), "{msg}");
     }
 
     #[test]

@@ -150,9 +150,32 @@ fn traced_run_matches_plain_run() {
 }
 
 #[test]
+fn cli_simulate_json_smoke() {
+    let args: Vec<String> =
+        ["simulate", "--ich", "16", "--och", "8", "--ih", "6", "--iw", "6", "--kh", "2",
+         "--kw", "2", "--pad", "0", "--json"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    dimc_rvv::coordinator::cli::main_with_args(&args).unwrap();
+}
+
+#[test]
 fn cli_rejects_unknown_command() {
     let args = vec!["frobnicate".to_string()];
     assert!(dimc_rvv::coordinator::cli::main_with_args(&args).is_err());
+}
+
+#[test]
+fn cli_rejects_unknown_model_listing_valid_names() {
+    let args: Vec<String> = ["cluster", "--cores", "2", "--model", "nope"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let e = dimc_rvv::coordinator::cli::main_with_args(&args).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("unknown model `nope`"), "{msg}");
+    assert!(msg.contains("resnet50"), "must list valid models: {msg}");
 }
 
 #[test]

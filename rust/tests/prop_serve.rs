@@ -73,7 +73,7 @@ fn every_admitted_request_completes_exactly_once() {
         let batched: u64 = rep.batches.iter().map(|b| b.size as u64).sum();
         assert_eq!(batched, 300, "{}: batch sizes must sum to the trace", shape.as_str());
         assert!(
-            rep.batches.iter().all(|b| b.size >= 1 && b.size <= policy.max_batch),
+            rep.batches.iter().all(|b| (1..=policy.max_batch).contains(&b.size)),
             "{}: batch left the window",
             shape.as_str()
         );

@@ -1,0 +1,408 @@
+//! Tests for the `sim::Session` façade:
+//!
+//! * **builder validation** — every bad configuration (0 cores, 0 batch,
+//!   unknown model, serving knobs without a rate, non-positive rates,
+//!   baseline clusters) fails at build time with a typed error;
+//! * **equivalence** — on a fixed spec matrix the façade reports
+//!   bit/cycle-identical numbers to the legacy entry points it wraps
+//!   (`simulate_layer` / `ClusterSim::schedule` / `Server::serve_trace`);
+//! * **checks** — the functional cross-checks and the `verify()` anchors
+//!   all hold, and the JSON serialization is structurally well-formed.
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::cluster::exec::ClusterSim;
+use dimc_rvv::cluster::scaling::scaling_curve;
+use dimc_rvv::cluster::topology::ClusterTopology;
+use dimc_rvv::compiler::layer::LayerConfig;
+use dimc_rvv::coordinator::driver::simulate_layer;
+use dimc_rvv::dimc::Precision;
+use dimc_rvv::serve::{BatchPolicy, Server, TraceConfig, TraceShape, Workload};
+use dimc_rvv::sim::{Engine, RunSpec, Session, SessionError};
+
+/// The fixed spec matrix the equivalence tests run over: plain,
+/// tiled, grouped, strided/padded and FC layers.
+fn spec_matrix() -> Vec<LayerConfig> {
+    vec![
+        LayerConfig::conv("m_plain", 16, 8, 2, 2, 6, 6, 1, 0),
+        LayerConfig::conv("m_tiled", 96, 8, 2, 2, 5, 5, 1, 0),
+        LayerConfig::conv("m_grouped", 16, 96, 2, 2, 6, 6, 1, 0),
+        LayerConfig::conv("m_strided", 8, 16, 3, 3, 11, 11, 2, 1),
+        LayerConfig::fc("m_fc", 300, 40),
+    ]
+}
+
+fn tiny_net() -> Vec<LayerConfig> {
+    vec![
+        LayerConfig::conv("t1", 16, 64, 3, 3, 8, 8, 1, 1),
+        LayerConfig::conv("t2", 64, 64, 1, 1, 8, 8, 1, 0),
+        LayerConfig::fc("t3", 8 * 8 * 64, 10),
+    ]
+}
+
+// ------------------------------------------------------------------
+// builder validation
+// ------------------------------------------------------------------
+
+#[test]
+fn builder_rejects_zero_cores() {
+    let e = Session::builder().cores(0).build().unwrap_err();
+    assert!(matches!(e, SessionError::Invalid(_)), "{e}");
+    assert!(e.to_string().contains("cores"), "{e}");
+}
+
+#[test]
+fn builder_rejects_zero_batch() {
+    let e = Session::builder().batch(0).build().unwrap_err();
+    assert!(matches!(e, SessionError::Invalid(_)), "{e}");
+    assert!(e.to_string().contains("batch"), "{e}");
+}
+
+#[test]
+fn builder_rejects_unknown_model_listing_valid_names() {
+    let e = Session::builder().model("resnet-9000").build().unwrap_err();
+    assert!(matches!(e, SessionError::Invalid(_)), "{e}");
+    let msg = e.to_string();
+    assert!(msg.contains("unknown model `resnet-9000`"), "{msg}");
+    assert!(msg.contains("resnet50"), "error must list the valid names: {msg}");
+}
+
+#[test]
+fn builder_accepts_case_insensitive_model_names() {
+    let s = Session::builder().model("ReSNet50").build().unwrap();
+    assert_eq!(s.config().workloads.len(), 1);
+    assert_eq!(s.config().workloads[0].name, "resnet50", "name must canonicalize");
+}
+
+#[test]
+fn builder_rejects_serve_knobs_without_rps() {
+    let e = Session::builder()
+        .model("resnet18")
+        .trace(TraceShape::Bursty)
+        .build()
+        .unwrap_err();
+    assert!(matches!(e, SessionError::Invalid(_)), "{e}");
+    assert!(e.to_string().contains("rps"), "{e}");
+
+    let e = Session::builder().model("resnet18").max_batch(4).build().unwrap_err();
+    assert!(e.to_string().contains("rps"), "{e}");
+}
+
+#[test]
+fn builder_rejects_bad_rates_and_weights() {
+    for rps in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+        let e = Session::builder().model("resnet18").rps(rps).build().unwrap_err();
+        assert!(matches!(e, SessionError::Invalid(_)), "rps {rps}: {e}");
+    }
+    let e = Session::builder().model_weighted("resnet18", 0.0).build().unwrap_err();
+    assert!(e.to_string().contains("weight"), "{e}");
+}
+
+#[test]
+fn builder_rejects_baseline_clusters_and_baseline_serving() {
+    let e = Session::builder().engine(Engine::Baseline).cores(4).build().unwrap_err();
+    assert!(matches!(e, SessionError::Invalid(_)), "{e}");
+    let e = Session::builder()
+        .engine(Engine::Baseline)
+        .model("resnet18")
+        .rps(100.0)
+        .build()
+        .unwrap_err();
+    assert!(matches!(e, SessionError::Invalid(_)), "{e}");
+}
+
+#[test]
+fn serve_spec_without_serving_config_is_unsupported_at_run() {
+    let mut s = Session::builder().layers("t", tiny_net()).build().unwrap();
+    let e = s.run(&RunSpec::Serve).unwrap_err();
+    assert!(matches!(e, SessionError::Unsupported(_)), "{e}");
+}
+
+#[test]
+fn network_without_a_model_is_unsupported_at_run() {
+    let mut s = Session::builder().build().unwrap();
+    let e = s.run(&RunSpec::Network).unwrap_err();
+    assert!(matches!(e, SessionError::Unsupported(_)), "{e}");
+}
+
+// ------------------------------------------------------------------
+// equivalence: single-core
+// ------------------------------------------------------------------
+
+#[test]
+fn layer_reports_match_legacy_single_core_exactly() {
+    let mut session = Session::builder().build().unwrap();
+    for l in spec_matrix() {
+        let legacy_d = simulate_layer(&l, Engine::Dimc).unwrap();
+        let legacy_b = simulate_layer(&l, Engine::Baseline).unwrap();
+        let rep = session.run(&RunSpec::Layer(l.clone())).unwrap();
+        assert_eq!(rep.backend, "single-core");
+        assert_eq!(rep.cycles, legacy_d.cycles, "{l}");
+        let row = &rep.layers[0];
+        assert_eq!(row.cycles, legacy_d.cycles, "{l}");
+        assert_eq!(row.baseline_cycles, Some(legacy_b.cycles), "{l}");
+        assert_eq!(row.instret, Some(legacy_d.instret), "{l}");
+        assert_eq!(row.ops, l.ops(), "{l}");
+        assert!((row.gops - legacy_d.gops()).abs() < 1e-12, "{l}");
+        let want = legacy_b.cycles as f64 / legacy_d.cycles as f64;
+        assert!((row.speedup.unwrap() - want).abs() < 1e-12, "{l}");
+    }
+}
+
+#[test]
+fn network_report_is_the_sum_of_legacy_layer_simulations() {
+    let net = tiny_net();
+    let want_d: u64 =
+        net.iter().map(|l| simulate_layer(l, Engine::Dimc).unwrap().cycles).sum();
+    let want_b: u64 =
+        net.iter().map(|l| simulate_layer(l, Engine::Baseline).unwrap().cycles).sum();
+    let mut session = Session::builder().layers("tiny", net.clone()).build().unwrap();
+    let rep = session.run(&RunSpec::Network).unwrap();
+    assert_eq!(rep.backend, "single-core");
+    assert_eq!(rep.cycles, want_d);
+    assert_eq!(rep.ops, net.iter().map(|l| l.ops()).sum::<u64>());
+    assert_eq!(rep.layers.len(), net.len());
+    let speedup = rep.speedup.unwrap();
+    assert!((speedup - want_b as f64 / want_d as f64).abs() < 1e-12);
+}
+
+#[test]
+fn baseline_engine_sessions_report_baseline_numbers() {
+    let l = LayerConfig::conv("b", 16, 8, 2, 2, 6, 6, 1, 0);
+    let legacy = simulate_layer(&l, Engine::Baseline).unwrap();
+    let mut session = Session::builder().engine(Engine::Baseline).build().unwrap();
+    let rep = session.run(&RunSpec::Layer(l)).unwrap();
+    assert_eq!(rep.cycles, legacy.cycles);
+    assert_eq!(rep.layers[0].baseline_cycles, None, "no self-comparison");
+    assert_eq!(rep.layers[0].speedup, None);
+}
+
+// ------------------------------------------------------------------
+// equivalence: cluster
+// ------------------------------------------------------------------
+
+#[test]
+fn cluster_network_report_matches_legacy_schedule_exactly() {
+    let net = tiny_net();
+    let arch = Arch::default();
+    for (cores, batch) in [(2u32, 1u32), (4, 1), (4, 4)] {
+        let mut legacy = ClusterSim::new(arch, Precision::Int4);
+        let want = legacy
+            .schedule("tiny", &net, &ClusterTopology::from_arch(cores, &arch), batch)
+            .unwrap();
+        let mut session = Session::builder()
+            .layers("tiny", net.clone())
+            .cores(cores)
+            .batch(batch)
+            .build()
+            .unwrap();
+        let rep = session.run(&RunSpec::Network).unwrap();
+        assert_eq!(rep.backend, "cluster", "cores={cores} batch={batch}");
+        assert_eq!(rep.cycles, want.cycles, "cores={cores} batch={batch}");
+        assert_eq!(rep.ops, want.ops, "cores={cores} batch={batch}");
+        assert_eq!(rep.mode, Some(want.mode.as_str()), "cores={cores} batch={batch}");
+        assert_eq!(rep.layers.len(), want.layers.len());
+        for (row, lr) in rep.layers.iter().zip(&want.layers) {
+            assert_eq!(row.cycles, lr.cycles);
+            assert_eq!(row.cores_used, lr.cores_used);
+        }
+    }
+}
+
+#[test]
+fn scaling_curve_matches_the_legacy_sweep_exactly() {
+    let net = tiny_net();
+    let counts = [1u32, 2, 4];
+    let want = scaling_curve("tiny", &net, Arch::default(), &counts, 1).unwrap();
+    let mut session =
+        Session::builder().layers("tiny", net).cores(4).build().unwrap();
+    let got = session.scaling_curve(&counts).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.cycles, w.cycles, "N={}", w.cores);
+        assert_eq!(g.mode, w.mode, "N={}", w.cores);
+        assert!((g.speedup - w.speedup).abs() < 1e-12, "N={}", w.cores);
+    }
+}
+
+#[test]
+fn one_core_cluster_session_reproduces_single_core_cycles() {
+    // cores=1 with batch>1 still routes through the cluster backend;
+    // a batch of B at one core costs exactly B single-core networks.
+    let net = tiny_net();
+    let single: u64 =
+        net.iter().map(|l| simulate_layer(l, Engine::Dimc).unwrap().cycles).sum();
+    let mut session =
+        Session::builder().layers("tiny", net).batch(3).build().unwrap();
+    let rep = session.run(&RunSpec::Network).unwrap();
+    assert_eq!(rep.backend, "cluster");
+    assert_eq!(rep.cycles, 3 * single);
+}
+
+// ------------------------------------------------------------------
+// equivalence: serving
+// ------------------------------------------------------------------
+
+#[test]
+fn serve_report_matches_the_legacy_server_exactly() {
+    let zoo = vec![
+        Workload::new("tiny-a", tiny_net()),
+        Workload::new("tiny-b", vec![LayerConfig::conv("b1", 16, 16, 3, 3, 8, 8, 1, 1)]),
+    ];
+    let (cores, rps, requests, seed) = (2u32, 40_000.0f64, 120usize, 0xFEEDu64);
+    let policy = BatchPolicy { max_batch: 4, max_wait_cycles: 100 };
+    let trace = TraceConfig { rps, requests, shape: TraceShape::Bursty, seed };
+    let mut legacy = Server::new(Arch::default(), Precision::Int4, cores);
+    let want = legacy.serve_trace(&zoo, policy, &trace).unwrap();
+
+    let mut session = Session::builder()
+        .workload(zoo[0].clone())
+        .workload(zoo[1].clone())
+        .cores(cores)
+        .rps(rps)
+        .requests(requests)
+        .trace(TraceShape::Bursty)
+        .seed(seed)
+        .max_batch(policy.max_batch)
+        .max_wait_cycles(policy.max_wait_cycles)
+        .build()
+        .unwrap();
+    let rep = session.run(&RunSpec::Serve).unwrap();
+
+    assert_eq!(rep.backend, "serving");
+    assert_eq!(rep.cycles, want.span_cycles);
+    let ss = rep.serve.as_ref().unwrap();
+    assert_eq!(ss.requests, requests);
+    assert!((ss.achieved_rps - want.achieved_rps()).abs() < 1e-9);
+    assert!((ss.mean_queue_depth - want.mean_queue_depth).abs() < 1e-12);
+    assert_eq!(ss.max_queue_depth, want.max_queue_depth);
+    assert_eq!(ss.batches, want.batches.len());
+    let lat = rep.latency.as_ref().unwrap();
+    assert!((lat.p50_ms - want.latency_ms(50.0)).abs() < 1e-12);
+    assert!((lat.p95_ms - want.latency_ms(95.0)).abs() < 1e-12);
+    assert!((lat.p99_ms - want.latency_ms(99.0)).abs() < 1e-12);
+    assert!((rep.utilization.unwrap() - want.utilization()).abs() < 1e-12);
+    assert!(rep.checks_ok(), "serving cross-checks failed: {:?}", rep.checks);
+}
+
+#[test]
+fn serve_reports_are_deterministic_per_seed() {
+    let build = || {
+        Session::builder()
+            .layers("tiny", tiny_net())
+            .cores(2)
+            .rps(30_000.0)
+            .requests(80)
+            .seed(7)
+            .build()
+            .unwrap()
+    };
+    let a = build().run(&RunSpec::Serve).unwrap();
+    let b = build().run(&RunSpec::Serve).unwrap();
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.to_json(), b.to_json(), "identical seeds must reproduce bit-identically");
+}
+
+// ------------------------------------------------------------------
+// functional cross-checks + verify hook
+// ------------------------------------------------------------------
+
+#[test]
+fn functional_spec_passes_on_single_core_and_cluster() {
+    let layer = LayerConfig::conv("f", 16, 48, 2, 2, 6, 6, 1, 0);
+    let mut single = Session::builder().build().unwrap();
+    let rep = single
+        .run(&RunSpec::Functional { layer: layer.clone(), seed: 0xA11CE, shift: 4 })
+        .unwrap();
+    assert_eq!(rep.checks.len(), 1);
+    assert!(rep.checks_ok(), "{:?}", rep.checks);
+
+    let mut clustered = Session::builder().cores(3).build().unwrap();
+    let rep = clustered
+        .run(&RunSpec::Functional { layer, seed: 0xA11CE, shift: 4 })
+        .unwrap();
+    assert_eq!(rep.backend, "cluster");
+    assert_eq!(rep.checks.len(), 2, "oracle + stitching checks");
+    assert!(rep.checks_ok(), "{:?}", rep.checks);
+}
+
+#[test]
+fn verify_hook_passes_on_every_backend_shape() {
+    let mut single = Session::builder().build().unwrap();
+    let checks = single.verify().unwrap();
+    assert!(!checks.is_empty());
+    assert!(checks.iter().all(|c| c.ok), "{checks:?}");
+
+    let mut clustered =
+        Session::builder().layers("tiny", tiny_net()).cores(4).build().unwrap();
+    let checks = clustered.verify().unwrap();
+    assert!(
+        checks.iter().any(|c| c.name == "cluster:one-core-exact"),
+        "cluster verify must anchor to the single-core simulator: {checks:?}"
+    );
+    assert!(checks.iter().all(|c| c.ok), "{checks:?}");
+}
+
+// ------------------------------------------------------------------
+// report serialization + Engine re-export
+// ------------------------------------------------------------------
+
+/// Structural JSON well-formedness: balanced braces/brackets outside
+/// strings and no bare NaN/inf tokens (a full parser is out of scope).
+fn assert_wellformed_json(s: &str) {
+    let (mut depth, mut in_str, mut escaped) = (0i64, false, false);
+    for c in s.chars() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' | '[' => depth += 1,
+            '}' | ']' => depth -= 1,
+            _ => {}
+        }
+        assert!(depth >= 0, "unbalanced close in {s}");
+    }
+    assert_eq!(depth, 0, "unbalanced JSON: {s}");
+    assert!(!in_str, "unterminated string in {s}");
+    assert!(!s.contains("NaN") && !s.contains("inf"), "non-JSON number in {s}");
+}
+
+#[test]
+fn run_reports_serialize_to_wellformed_json() {
+    let mut single = Session::builder().layers("tiny", tiny_net()).build().unwrap();
+    let json = single.run(&RunSpec::Network).unwrap().to_json();
+    assert_wellformed_json(&json);
+    assert!(json.starts_with('{') && json.ends_with('}'));
+    assert!(json.contains(r#""backend":"single-core""#), "{json}");
+    assert!(json.contains(r#""model":"tiny""#), "{json}");
+    assert!(json.contains(r#""layers":[{"#), "{json}");
+
+    let mut serve = Session::builder()
+        .layers("tiny", tiny_net())
+        .cores(2)
+        .rps(10_000.0)
+        .requests(40)
+        .build()
+        .unwrap();
+    let json = serve.run(&RunSpec::Serve).unwrap().to_json();
+    assert_wellformed_json(&json);
+    assert!(json.contains(r#""backend":"serving""#), "{json}");
+    assert!(json.contains(r#""latency":{"#), "{json}");
+    assert!(json.contains(r#""checks":[{"#), "{json}");
+}
+
+#[test]
+fn engine_reexport_keeps_the_historical_path_working() {
+    // The enum moved to sim::Engine; the driver path must stay usable
+    // and refer to the same type.
+    let e: dimc_rvv::coordinator::driver::Engine = dimc_rvv::sim::Engine::Dimc;
+    assert_eq!(e, Engine::Dimc);
+    assert_eq!(e.as_str(), "dimc");
+}
