@@ -24,8 +24,13 @@ fn main() {
         Ok(reports) => {
             for r in &reports {
                 assert!(r.ok(), "{} mismatched {} of {} outputs", r.layer, r.mismatches, r.outputs);
-                println!("  {:<12} {:>4}/{:<4} outputs match ({} sim cycles)",
-                         r.layer, r.outputs - r.mismatches, r.outputs, r.sim_cycles);
+                println!(
+                    "  {:<12} {:>4}/{:<4} outputs match ({} sim cycles)",
+                    r.layer,
+                    r.outputs - r.mismatches,
+                    r.outputs,
+                    r.sim_cycles
+                );
             }
             println!("  all {} cross-checks passed", reports.len());
         }
@@ -47,8 +52,12 @@ fn main() {
     let ops: u64 = rows.iter().map(|r| r.ops).sum();
     println!("\nnetwork totals @500 MHz:");
     println!("  ops          : {:.2} G", ops as f64 / 1e9);
-    println!("  DIMC-RVV     : {:>13} cycles = {:>8.2} ms  ({:.1} GOPS sustained)",
-             dimc, dimc as f64 / 5e5, ops as f64 / (dimc as f64 / 5e8) / 1e9);
+    println!(
+        "  DIMC-RVV     : {:>13} cycles = {:>8.2} ms  ({:.1} GOPS sustained)",
+        dimc,
+        dimc as f64 / 5e5,
+        ops as f64 / (dimc as f64 / 5e8) / 1e9
+    );
     println!("  baseline RVV : {:>13} cycles = {:>8.2} ms", base, base as f64 / 5e5);
     println!("  network speedup: {:.0}x", base as f64 / dimc as f64);
     println!("\nheadline vs paper:");

@@ -20,7 +20,10 @@ fn main() {
         println!("{:<14} {:>14} {:>12} {:>8.1}", r.name, r.ops, r.dimc_cycles, r.gops);
     }
     let s = summarize(&rows);
-    println!("\npeak = {:.1} GOPS (paper: 137) | mean = {:.1} GOPS | theoretical = 256",
-             s.peak_gops, s.mean_gops);
+    println!(
+        "\npeak = {:.1} GOPS (paper: 137) | mean = {:.1} GOPS | theoretical = 256",
+        s.peak_gops,
+        s.mean_gops
+    );
     assert!(s.peak_gops > 80.0, "peak GOPS collapsed: {}", s.peak_gops);
 }

@@ -13,15 +13,31 @@ use dimc_rvv::metrics::report::summarize;
 fn main() {
     let rows = harness::bench("fig7/speedup+ans", 2, || resnet50_rows().unwrap());
     println!("\nFig. 7 — speedup & ANS per ResNet-50 layer");
-    println!("{:<14} {:>14} {:>12} {:>9} {:>8}", "layer", "base cycles", "dimc cycles",
-             "speedup", "ANS");
+    println!(
+        "{:<14} {:>14} {:>12} {:>9} {:>8}",
+        "layer",
+        "base cycles",
+        "dimc cycles",
+        "speedup",
+        "ANS"
+    );
     for r in &rows {
-        println!("{:<14} {:>14} {:>12} {:>8.1}x {:>7.1}x",
-                 r.name, r.baseline_cycles, r.dimc_cycles, r.speedup, r.ans);
+        println!(
+            "{:<14} {:>14} {:>12} {:>8.1}x {:>7.1}x",
+            r.name,
+            r.baseline_cycles,
+            r.dimc_cycles,
+            r.speedup,
+            r.ans
+        );
     }
     let s = summarize(&rows);
-    println!("\npeak speedup = {:.0}x (paper: 217x) | geomean = {:.0}x | ANS peak = {:.0}x (paper: >50x)",
-             s.peak_speedup, s.geomean_speedup, s.peak_ans);
+    println!(
+        "\npeak speedup = {:.0}x (paper: 217x) | geomean = {:.0}x | ANS = {:.0}x (paper: >50x)",
+        s.peak_speedup,
+        s.geomean_speedup,
+        s.peak_ans
+    );
     assert!(s.peak_speedup > 100.0, "speedup shape lost: {:.0}x", s.peak_speedup);
     assert!(s.peak_ans > 25.0, "ANS shape lost: {:.0}x", s.peak_ans);
 }

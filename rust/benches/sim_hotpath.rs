@@ -1,6 +1,11 @@
 //! Performance bench for the simulator itself (EXPERIMENTS.md §Perf):
 //! simulated-instructions/second on the flat functional path and the
 //! trace-engine path, plus end-to-end figure regeneration times.
+//!
+//! `--short` (or `DIMC_BENCH_SHORT=1`) runs every section once with
+//! minimal repetitions — the CI perf-guard mode: it cannot rank
+//! optimizations, but it fails loudly if the bench harness or any hot
+//! path it exercises rots.
 
 #[path = "harness.rs"]
 mod harness;
@@ -16,6 +21,10 @@ use dimc_rvv::pipeline::trace::trace_cycles;
 use std::time::Instant;
 
 fn main() {
+    let short = std::env::args().any(|a| a == "--short")
+        || std::env::var("DIMC_BENCH_SHORT").is_ok_and(|v| v != "0");
+    let reps = |full: u32| if short { 1 } else { full };
+
     // --- flat functional execution rate ---
     let l = LayerConfig::conv("hot", 64, 32, 2, 2, 16, 16, 1, 0);
     let acts = synth_acts(&l, Precision::Int4, 1);
@@ -43,9 +52,21 @@ fn main() {
         r.instret as f64 / dt / 1e6
     );
 
+    // --- trace-engine rate on the transformer hot path (K-tiled GEMM) ---
+    let gemm = LayerConfig::gemm_fused("ffn1", 197, 3072, 768, true, true);
+    let t0 = Instant::now();
+    let r = simulate_layer(&gemm, Engine::Dimc).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "trace gemm:      {} instrs accounted in {:.1} ms = {:.0} M effective instr/s",
+        r.instret,
+        dt * 1e3,
+        r.instret as f64 / dt / 1e6
+    );
+
     // --- micro: scoreboard-only block timing ---
     let prog = compile_dimc(&l, Precision::Int4);
-    harness::bench("trace/one-layer", 10, || {
+    harness::bench("trace/one-layer", reps(10), || {
         let mut core = Core::new(Arch::default());
         core.dimc.cfg.precision = Precision::Int4;
         core.timing_only = true;
@@ -53,6 +74,12 @@ fn main() {
     });
 
     // --- end-to-end figure regeneration ---
-    harness::bench("e2e/fig8-sweep", 3, || dimc_rvv::coordinator::figures::fig8_sweep().unwrap());
-    harness::bench("e2e/fig9-sweep", 3, || dimc_rvv::coordinator::figures::fig9_sweep().unwrap());
+    harness::bench("e2e/fig8-sweep", reps(3), || {
+        dimc_rvv::coordinator::figures::fig8_sweep().unwrap()
+    });
+    if !short {
+        harness::bench("e2e/fig9-sweep", 3, || {
+            dimc_rvv::coordinator::figures::fig9_sweep().unwrap()
+        });
+    }
 }

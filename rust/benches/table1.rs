@@ -30,7 +30,7 @@ fn main() {
         );
     }
     println!("\nThis work measured peak: {peak:.1} GOPS @INT4/500MHz (paper: 137)");
-    println!("(CIMR-V's normalized TOPS reflect its 512 KB many-macro die, not a single 4 KB tile)");
+    println!("(CIMR-V's normalized TOPS reflect its 512 KB many-macro die, not one 4 KB tile)");
     // Shape: we beat the only other tightly-coupled vector design (Vecim).
     assert!(peak > 63.6, "must exceed Vecim's normalized 63.6 GOPS (Table I shape)");
 }

@@ -1,0 +1,47 @@
+//! Transformer-vs-CNN utilization figure: regenerates the per-workload
+//! comparison behind `repro transformers` — single-core GOPS (and its
+//! fraction of the 256-GOPS Int4 tile peak), baseline speedup, and the
+//! busy-core fraction of a 4-core cluster schedule, for two CNN and two
+//! transformer zoo models.
+
+#[path = "harness.rs"]
+mod harness;
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::coordinator::figures::transformer_cnn_utilization;
+
+fn main() {
+    let points = harness::bench("transformers/utilization", 1, || {
+        transformer_cnn_utilization().unwrap()
+    });
+    let peak = Arch::default().dimc_peak_gops(4);
+    println!("\ntransformer vs CNN — DIMC utilization (Int4 tile peak {peak:.0} GOPS)");
+    println!(
+        "{:<18} {:<11} {:>8} {:>8} {:>9} {:>12}",
+        "model",
+        "family",
+        "GOPS",
+        "of peak",
+        "speedup",
+        "4-core util"
+    );
+    for p in &points {
+        println!(
+            "{:<18} {:<11} {:>8.1} {:>7.1}% {:>8.1}x {:>11.1}%",
+            p.model,
+            p.family,
+            p.gops,
+            p.peak_frac * 100.0,
+            p.speedup,
+            p.cluster_utilization * 100.0
+        );
+    }
+    // Shape assertions: both families present, every model does real work
+    // and beats the baseline.
+    assert!(points.iter().any(|p| p.family == "transformer"));
+    assert!(points.iter().any(|p| p.family == "cnn"));
+    for p in &points {
+        assert!(p.gops > 0.0 && p.peak_frac > 0.0, "{} idle", p.model);
+        assert!(p.speedup > 1.0, "{} lost to the baseline", p.model);
+    }
+}

@@ -75,6 +75,9 @@ fn sim_key(l: &LayerConfig) -> SimKey {
     let kind = match l.kind {
         LayerKind::Conv => 0u8,
         LayerKind::Fc => 1u8,
+        // Fusion flags do not steer the instruction stream, but keep the
+        // keys distinct so the cache never has to reason about that.
+        LayerKind::Gemm { bias, relu } => 2u8 | (u8::from(bias) << 2) | (u8::from(relu) << 3),
     };
     (kind, l.ich, l.och, l.kh, l.kw, l.ih, l.iw, l.stride, l.pad)
 }

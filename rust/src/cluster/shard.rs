@@ -18,9 +18,19 @@
 //!   plain slice of the padded activation tensor; weights are replicated
 //!   per core.
 //!
+//! GEMM layers use the same two strategies under matrix names: the
+//! output-channel splitter *is* the **N-column partitioner** (a GEMM's N
+//! output columns are its output channels, so shard boundaries land on
+//! 32-column kernel groups), and the row fallback splits the **M
+//! dimension** (a GEMM's output rows are its patch rows, and with
+//! `iw = 1, kh = 1` a row band is a plain row slice of the `M x K`
+//! activation matrix).
+//!
 //! Invariants (property-tested in `rust/tests/prop_cluster.rs`): shards
-//! are disjoint, cover all output channels and rows, and per-shard
-//! [`LayerConfig::ops`] sums exactly to the parent's.
+//! are disjoint, cover all output channels and rows, are never empty
+//! (degenerate shapes — one output row, one kernel group — yield *fewer
+//! shards*, never zero-work ones), and per-shard [`LayerConfig::ops`]
+//! sums exactly to the parent's.
 
 use crate::arch::DIMC_ROWS;
 use crate::compiler::layer::LayerConfig;
@@ -113,10 +123,12 @@ impl ShardPlan {
     }
 }
 
-/// Split output channels on 32-kernel group boundaries, `n <= l.groups()`.
+/// Split output channels (a GEMM's N columns) on 32-kernel group
+/// boundaries. Requests beyond the group count clamp down — a caller can
+/// never obtain a shard owning zero groups.
 fn by_channels(l: &LayerConfig, n: u32) -> ShardPlan {
     let groups = l.groups();
-    debug_assert!((1..=groups).contains(&n));
+    let n = n.clamp(1, groups);
     let base = groups / n;
     let rem = groups % n;
     let rows = DIMC_ROWS as u32;
@@ -135,12 +147,18 @@ fn by_channels(l: &LayerConfig, n: u32) -> ShardPlan {
     ShardPlan { parent: l.clone(), strategy: ShardStrategy::OutputChannels, shards }
 }
 
-/// Split output rows into contiguous bands, `2 <= n <= l.oh()`. Each shard
-/// layer uses `pad = 0` with pre-padded input geometry so its activation
-/// band is a contiguous row slice of the parent's padded tensor.
+/// Split output rows (a GEMM's M dimension) into contiguous bands. Each
+/// shard layer uses `pad = 0` with pre-padded input geometry so its
+/// activation band is a contiguous row slice of the parent's padded
+/// tensor. Requests beyond the row count clamp down (more cores than
+/// rows yields one single-row shard per row, never an empty band), and a
+/// one-row layer degenerates to the single-shard plan.
 fn by_rows(l: &LayerConfig, n: u32) -> ShardPlan {
     let oh = l.oh();
-    debug_assert!((2..=oh).contains(&n));
+    let n = n.min(oh);
+    if n < 2 {
+        return ShardPlan::single(l);
+    }
     let base = oh / n;
     let rem = oh % n;
     let iwp = l.iw + 2 * l.pad;
@@ -251,6 +269,62 @@ mod tests {
         let p = ShardPlan::plan(&l, 8);
         assert_eq!(p.active_cores(), 1);
         assert_eq!(p.shards[0].layer, l);
+    }
+
+    #[test]
+    fn gemm_shards_by_n_columns_on_group_boundaries() {
+        // N = 3072 -> 96 column groups: the channel splitter is the
+        // N-column partitioner.
+        let l = LayerConfig::gemm_fused("ffn1", 197, 3072, 768, true, true);
+        let p = ShardPlan::plan(&l, 8);
+        assert_eq!(p.strategy, ShardStrategy::OutputChannels);
+        assert_eq!(p.active_cores(), 8);
+        assert_eq!(p.ops_total(), l.ops(), "bias ops split with the columns");
+        for s in &p.shards {
+            assert!(s.layer.is_gemm(), "shards stay GEMMs");
+            assert_eq!(s.layer.och % 32, 0, "column spans are group-aligned");
+            assert_eq!(s.layer.gemm_m(), l.gemm_m());
+            assert_eq!(s.layer.gemm_k(), l.gemm_k());
+        }
+    }
+
+    #[test]
+    fn group_poor_gemm_falls_back_to_m_rows() {
+        // N = 32 -> one group; M = 197 rows shard instead.
+        let l = LayerConfig::gemm("ctx", 197, 32, 197);
+        let p = ShardPlan::plan(&l, 4);
+        assert_eq!(p.strategy, ShardStrategy::Rows);
+        assert_eq!(p.active_cores(), 4);
+        assert_eq!(p.ops_total(), l.ops());
+        let m_total: u32 = p.shards.iter().map(|s| s.layer.gemm_m()).sum();
+        assert_eq!(m_total, 197);
+    }
+
+    #[test]
+    fn degenerate_shapes_yield_fewer_shards_never_empty_ones() {
+        // One row, one group: single-shard plan on any cluster.
+        let one_row = LayerConfig::gemm("cls", 1, 16, 512);
+        // One row, several groups: column shards despite oh = 1.
+        let wide_row = LayerConfig::gemm("wide", 1, 96, 64);
+        // Two rows, one group: row shards capped at the row count.
+        let two_rows = LayerConfig::conv("tr", 8, 16, 3, 3, 4, 4, 1, 0);
+        assert_eq!(two_rows.oh(), 2);
+        for l in [&one_row, &wide_row, &two_rows] {
+            for cores in 1..=12u32 {
+                let p = ShardPlan::plan(l, cores);
+                assert!(p.active_cores() >= 1, "{l} cores={cores}");
+                assert!(p.active_cores() <= cores.max(1), "{l} cores={cores}");
+                assert_eq!(p.ops_total(), l.ops(), "{l} cores={cores}");
+                for s in &p.shards {
+                    assert!(s.layer.macs() > 0, "{l} cores={cores}: empty shard");
+                    assert!(s.och_range.1 > s.och_range.0, "{l} cores={cores}");
+                    assert!(s.row_range.1 > s.row_range.0, "{l} cores={cores}");
+                }
+            }
+        }
+        assert_eq!(ShardPlan::plan(&one_row, 8).active_cores(), 1);
+        assert_eq!(ShardPlan::plan(&wide_row, 8).active_cores(), 3);
+        assert_eq!(ShardPlan::plan(&two_rows, 8).active_cores(), 2);
     }
 
     #[test]

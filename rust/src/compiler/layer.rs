@@ -1,6 +1,8 @@
 //! Layer configurations: the workload unit of the paper's evaluation
-//! (convolutional and fully-connected layers — assumption 6 excludes
-//! pooling/elementwise, which perform identically on both architectures).
+//! (convolutional, fully-connected and dense-GEMM layers — assumption 6
+//! excludes pooling/elementwise, which perform identically on both
+//! architectures; softmax/layernorm between transformer GEMMs fall under
+//! the same assumption).
 
 use crate::arch::{DIMC_ROWS, DIMC_ROW_BITS};
 use crate::dimc::Precision;
@@ -11,9 +13,26 @@ pub enum LayerKind {
     /// Fully-connected: modelled as a 1x1 convolution on a 1x1 feature map
     /// with `ich` input features and `och` output features.
     Fc,
+    /// Dense matrix multiply `[M x K] x [K x N]` — the primitive of
+    /// transformer inference (QKV/output projections, per-head attention
+    /// score and context matmuls, FFN layers). Mapped onto the DIMC tile
+    /// as a 1x1 convolution over an `M x 1` feature map with `K` input
+    /// channels and `N` output channels, so K-dim weight tiling (Fig. 8)
+    /// and N-dim kernel grouping (Fig. 9) fall out of the existing
+    /// mapper unchanged.
+    Gemm {
+        /// A fused bias add rides the write-back; it is charged in
+        /// [`LayerConfig::ops`] (one add per output element) but emits no
+        /// extra DIMC instructions.
+        bias: bool,
+        /// A fused activation maps onto the ReLU already wired into the
+        /// DC.F requantization epilogue; tracked for op-accounting /
+        /// reporting symmetry (it is free either way).
+        relu: bool,
+    },
 }
 
-/// One conv/FC layer.
+/// One conv/FC/GEMM layer.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerConfig {
     pub name: String,
@@ -45,7 +64,44 @@ impl LayerConfig {
         stride: u32,
         pad: u32,
     ) -> Self {
-        LayerConfig { name: name.into(), kind: LayerKind::Conv, ich, och, kh, kw, ih, iw, stride, pad }
+        LayerConfig {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            ich,
+            och,
+            kh,
+            kw,
+            ih,
+            iw,
+            stride,
+            pad,
+        }
+    }
+
+    /// Dense GEMM `[m x k] x [k x n]` with no fused epilogue. The `m`
+    /// output rows become the patch sweep (`ih = m, iw = 1`), the `k`
+    /// reduction dimension becomes the input channels (K-dim weight
+    /// tiling) and the `n` output columns become the output channels
+    /// (N-dim kernel grouping).
+    pub fn gemm(name: &str, m: u32, n: u32, k: u32) -> Self {
+        Self::gemm_fused(name, m, n, k, false, false)
+    }
+
+    /// Dense GEMM with fused bias-add / activation flags (see
+    /// [`LayerKind::Gemm`] for how each flag is modelled).
+    pub fn gemm_fused(name: &str, m: u32, n: u32, k: u32, bias: bool, relu: bool) -> Self {
+        LayerConfig {
+            name: name.into(),
+            kind: LayerKind::Gemm { bias, relu },
+            ich: k,
+            och: n,
+            kh: 1,
+            kw: 1,
+            ih: m,
+            iw: 1,
+            stride: 1,
+            pad: 0,
+        }
     }
 
     pub fn fc(name: &str, in_features: u32, out_features: u32) -> Self {
@@ -61,6 +117,27 @@ impl LayerConfig {
             stride: 1,
             pad: 0,
         }
+    }
+
+    /// Whether this layer is a dense GEMM.
+    pub fn is_gemm(&self) -> bool {
+        matches!(self.kind, LayerKind::Gemm { .. })
+    }
+
+    /// GEMM output rows `M` (the patch sweep). Meaningful for any layer
+    /// (`patches()` collapses to it when `ow == 1`).
+    pub fn gemm_m(&self) -> u32 {
+        self.oh() * self.ow()
+    }
+
+    /// GEMM output columns `N` (the output channels).
+    pub fn gemm_n(&self) -> u32 {
+        self.och
+    }
+
+    /// GEMM reduction depth `K` (the input channels).
+    pub fn gemm_k(&self) -> u32 {
+        self.k_elems()
     }
 
     /// Output height.
@@ -88,9 +165,17 @@ impl LayerConfig {
         self.patches() * self.och as u64 * self.k_elems() as u64
     }
 
-    /// Operations = 2 x MACs (multiply + accumulate), as in GOPS reporting.
+    /// Operations = 2 x MACs (multiply + accumulate), as in GOPS
+    /// reporting, plus one add per output element when a GEMM fuses a
+    /// bias. The bias term is linear in both `M` (rows) and `N`
+    /// (columns), so per-shard `ops()` still sums exactly to the
+    /// parent's under both cluster sharding strategies.
     pub fn ops(&self) -> u64 {
-        2 * self.macs()
+        let bias_ops = match self.kind {
+            LayerKind::Gemm { bias: true, .. } => self.patches() * self.och as u64,
+            _ => 0,
+        };
+        2 * self.macs() + bias_ops
     }
 
     /// Channels padded so one (y, x) run is 64-bit register aligned in the
@@ -140,10 +225,27 @@ impl std::fmt::Display for LayerConfig {
             LayerKind::Conv => write!(
                 f,
                 "{}: conv {}x{}x{}->{} s{} p{} on {}x{}",
-                self.name, self.kh, self.kw, self.ich, self.och, self.stride, self.pad, self.ih,
+                self.name,
+                self.kh,
+                self.kw,
+                self.ich,
+                self.och,
+                self.stride,
+                self.pad,
+                self.ih,
                 self.iw
             ),
             LayerKind::Fc => write!(f, "{}: fc {}->{}", self.name, self.ich, self.och),
+            LayerKind::Gemm { bias, relu } => write!(
+                f,
+                "{}: gemm {}x{}x{}{}{}",
+                self.name,
+                self.gemm_m(),
+                self.gemm_n(),
+                self.gemm_k(),
+                if bias { " +bias" } else { "" },
+                if relu { " +relu" } else { "" }
+            ),
         }
     }
 }
@@ -192,6 +294,42 @@ mod tests {
         assert_eq!(l.macs(), 2048 * 1000);
         assert_eq!(l.tiles(Precision::Int4), 8);
         assert_eq!(l.groups(), 32);
+    }
+
+    #[test]
+    fn gemm_geometry_maps_onto_conv_machinery() {
+        // ViT-Base FFN1: 197x3072x768.
+        let l = LayerConfig::gemm_fused("ffn1", 197, 3072, 768, true, true);
+        assert!(l.is_gemm());
+        assert_eq!((l.gemm_m(), l.gemm_n(), l.gemm_k()), (197, 3072, 768));
+        assert_eq!(l.patches(), 197); // M rows = the patch sweep
+        assert_eq!(l.macs(), 197 * 3072 * 768);
+        // K-dim weight tiling: 768 elems @4b = 3072 bits -> 3 row-tiles.
+        assert_eq!(l.tiles(Precision::Int4), 3);
+        // N-dim kernel grouping: 3072 / 32 = 96 groups.
+        assert_eq!(l.groups(), 96);
+    }
+
+    #[test]
+    fn gemm_bias_charges_one_add_per_output() {
+        let plain = LayerConfig::gemm("g", 8, 64, 128);
+        let biased = LayerConfig::gemm_fused("g", 8, 64, 128, true, false);
+        assert_eq!(plain.ops(), 2 * plain.macs());
+        assert_eq!(biased.ops(), 2 * biased.macs() + 8 * 64);
+        // The fused activation is free (it maps onto DC.F's ReLU).
+        let relu = LayerConfig::gemm_fused("g", 8, 64, 128, false, true);
+        assert_eq!(relu.ops(), plain.ops());
+    }
+
+    #[test]
+    fn gemm_k_padding_follows_precision_alignment() {
+        let l = LayerConfig::gemm("g", 4, 64, 197);
+        assert_eq!(l.ich_pad(Precision::Int4), 208); // 197 -> 16-elem align
+        assert_eq!(l.k_pad(Precision::Int4), 208);
+        assert!(!l.needs_tiling(Precision::Int4)); // 832 bits < 1024
+        assert_eq!(l.to_string(), "g: gemm 4x64x197");
+        let f = LayerConfig::gemm_fused("g", 4, 64, 197, true, true);
+        assert_eq!(f.to_string(), "g: gemm 4x64x197 +bias +relu");
     }
 
     #[test]

@@ -1,5 +1,14 @@
-//! The DIMC code generator: lowers one conv/FC layer to the custom
+//! The DIMC code generator: lowers one conv/FC/GEMM layer to the custom
 //! instruction stream of §V-A.
+//!
+//! A [`LayerKind::Gemm`](super::layer::LayerKind::Gemm) needs no special
+//! casing here: its `[M x K] x [K x N]` geometry arrives as a 1x1 kernel
+//! on an `M x 1` feature map, so the K reduction dimension tiles across
+//! DIMC rows exactly like an oversized kernel (Fig. 8), the N output
+//! columns group across the 32 kernel rows exactly like output channels
+//! (Fig. 9), and each of the M row sweeps loads one *contiguous*
+//! register-aligned slice of the activation matrix (`kw = 1` means a
+//! patch run is the whole padded K vector).
 //!
 //! Loop structure (matching the paper's mapping toolchain):
 //!
@@ -427,6 +436,37 @@ mod tests {
         for (e, n) in t0.iter().chain(t1.iter()) {
             assert_eq!(e % 16, 0, "segment start register-aligned");
             assert_eq!(n % 16, 0, "segment length register-aligned");
+        }
+    }
+
+    #[test]
+    fn gemm_lowers_as_k_tiled_n_grouped_row_sweep() {
+        // 13x96x320 @4b: k_pad = 320 elems = 1280 bits -> 2 tiles,
+        // 96 columns -> 3 groups, 13 rows -> 13 patches.
+        let l = LayerConfig::gemm("g", 13, 96, 320);
+        let prog = compile_dimc(&l, Precision::Int4);
+        assert_eq!(prog.phases.len(), 1 + 3 * 2 * 2); // setup + (wt+sweep) per (g, t)
+        let sweeps: Vec<_> =
+            prog.phases.iter().filter(|p| matches!(p.kind, PhaseKind::Sweep)).collect();
+        assert!(sweeps.iter().all(|p| p.trips == 13), "every sweep visits all M rows");
+        // DC ops: M rows x N columns x tiles.
+        assert_eq!(dc_count(&prog), 13 * 96 * 2);
+    }
+
+    #[test]
+    fn gemm_row_slices_are_contiguous_per_tile() {
+        // kw = 1 -> run = ich_pad = k_pad: each tile slice of a GEMM row
+        // is exactly one contiguous register-aligned memory segment.
+        let l = LayerConfig::gemm("g", 5, 32, 320);
+        let g = Geom::new(&l, Precision::Int4, MemLayout::default());
+        for t in 0..l.tiles(Precision::Int4) {
+            for m in 0..5u64 {
+                let segs = slice_segments(&g, t, m);
+                assert_eq!(segs.len(), 1, "tile {t} row {m}");
+                let (e, n) = segs[0];
+                assert_eq!(e % 16, 0);
+                assert_eq!(n % 16, 0);
+            }
         }
     }
 

@@ -16,6 +16,11 @@
 //!
 //! **Baseline path (int8):** same structure, one byte per element,
 //! channels padded to 8.
+//!
+//! GEMM layers need no dedicated packers: their dense `[ih][iw][ich]`
+//! activation layout with `ih = M, iw = 1, ich = K` *is* the row-major
+//! `M x K` matrix, and `[och][kh][kw][ich]` weights with a 1x1 kernel are
+//! the row-major `N x K` (pre-transposed) weight matrix.
 
 use super::layer::LayerConfig;
 use crate::arch::{DIMC_ROW_BYTES, DIMC_ROWS};
@@ -228,6 +233,15 @@ pub fn ref_conv_i32(l: &LayerConfig, x: &[i8], w: &[i8]) -> Vec<i32> {
     out
 }
 
+/// Reference GEMM in i32: `x` is row-major `[m][k]`, `w` row-major
+/// `[n][k]`, result row-major `[m][n]`. A GEMM layer *is* a 1x1 conv on
+/// an `m x 1` map, so this simply delegates to the conv oracle — kept as
+/// a named entry point so transformer tests read as matrix algebra.
+pub fn ref_gemm_i32(l: &LayerConfig, x: &[i8], w: &[i8]) -> Vec<i32> {
+    debug_assert!(l.is_gemm(), "{l} is not a GEMM layer");
+    ref_conv_i32(l, x, w)
+}
+
 /// The shared requantization reference (matches `dimc::mac::requantize`
 /// with ReLU): `clamp(max(acc,0) >> shift, 0, 2^bits - 1)`.
 pub fn ref_requant(acc: i32, shift: u8, bits: u32) -> u8 {
@@ -300,6 +314,16 @@ mod tests {
         let out = ref_conv_i32(&l, &x, &w);
         // center taps only: each output sees all four 1s exactly once
         assert_eq!(out, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn ref_gemm_is_plain_matrix_algebra() {
+        // 2x3 @ 3x2 (k = 3): hand-checkable dot products.
+        let l = LayerConfig::gemm("g", 2, 2, 3);
+        let x = vec![1i8, 2, 3, 4, 5, 6]; // [[1 2 3], [4 5 6]]
+        let w = vec![1i8, 0, 1, 0, 1, 0]; // rows n0=[1 0 1], n1=[0 1 0]
+        let out = ref_gemm_i32(&l, &x, &w);
+        assert_eq!(out, vec![4, 2, 10, 5]);
     }
 
     #[test]

@@ -40,7 +40,12 @@ pub fn usage() -> &'static str {
      resnet50  end-to-end: golden verify + full-network simulation\n\
      verify    [--seeds N] simulator vs JAX/Pallas golden (PJRT)\n\
      simulate  --ich N --och N [--kh N --kw N --ih N --iw N --stride N\n\
-               --pad N --fc] one custom layer on both engines\n\
+               --pad N --fc] one custom layer on both engines; or\n\
+               --gemm --m N --n N --k N [--bias] [--relu] one dense GEMM\n\
+     transformers  transformer-vs-CNN utilization figure: per-model GOPS,\n\
+               fraction of the 256-GOPS Int4 peak, baseline speedup and\n\
+               4-core cluster utilization (resnet50, mobilenet, vit-b16,\n\
+               mobilebert)\n\
      energy    model-based energy estimate over ResNet-50 (future work §V)\n\
      tiles     multi-tile scaling projection (future work §III/§VI)\n\
      cluster   [--cores N] [--batch B] [--model NAME] multi-core DIMC\n\
@@ -123,6 +128,7 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
             Ok(())
         }
         "simulate" => simulate(&flags, json),
+        "transformers" => transformers(json),
         "energy" => energy(json),
         "tiles" => tiles(json),
         "cluster" => cluster(&flags, json),
@@ -188,8 +194,11 @@ fn fig5(json: bool) -> Result<()> {
         .collect();
     println!(
         "{}",
-        render_table("Fig. 5 — GOPS per ResNet-50 layer (DIMC-RVV @500 MHz)",
-                     &["layer", "ops", "cycles", "GOPS"], &table)
+        render_table(
+            "Fig. 5 — GOPS per ResNet-50 layer (DIMC-RVV @500 MHz)",
+            &["layer", "ops", "cycles", "GOPS"],
+            &table,
+        )
     );
     let s = summarize(&rows);
     println!("peak = {:.1} GOPS (paper: 137), mean = {:.1} GOPS", s.peak_gops, s.mean_gops);
@@ -217,8 +226,11 @@ fn fig6(json: bool) -> Result<()> {
         .collect();
     println!(
         "{}",
-        render_table("Fig. 6 — operation distribution per ResNet-50 layer",
-                     &["layer", "compute", "load", "store"], &table)
+        render_table(
+            "Fig. 6 — operation distribution per ResNet-50 layer",
+            &["layer", "compute", "load", "store"],
+            &table,
+        )
     );
     Ok(())
 }
@@ -244,13 +256,19 @@ fn fig7(json: bool) -> Result<()> {
         .collect();
     println!(
         "{}",
-        render_table("Fig. 7 — speedup & area-normalized speedup per ResNet-50 layer",
-                     &["layer", "base cyc", "dimc cyc", "speedup", "ANS"], &table)
+        render_table(
+            "Fig. 7 — speedup & area-normalized speedup per ResNet-50 layer",
+            &["layer", "base cyc", "dimc cyc", "speedup", "ANS"],
+            &table,
+        )
     );
     let s = summarize(&rows);
     println!(
-        "peak speedup = {:.0}x (paper: 217x), geomean = {:.0}x, ANS range = {:.0}x..{:.0}x (paper: >50x)",
-        s.peak_speedup, s.geomean_speedup, s.min_ans, s.peak_ans
+        "peak speedup = {:.0}x (paper: 217x), geomean = {:.0}x, ANS = {:.0}x..{:.0}x (paper: >50x)",
+        s.peak_speedup,
+        s.geomean_speedup,
+        s.min_ans,
+        s.peak_ans
     );
     Ok(())
 }
@@ -277,8 +295,11 @@ fn fig8(json: bool) -> Result<()> {
         .collect();
     println!(
         "{}",
-        render_table("Fig. 8 — speedup degradation due to tiling (OCH=32, KH=KW=2)",
-                     &["ICH", "tiles", "GOPS", "speedup"], &table)
+        render_table(
+            "Fig. 8 — speedup degradation due to tiling (OCH=32, KH=KW=2)",
+            &["ICH", "tiles", "GOPS", "speedup"],
+            &table,
+        )
     );
     Ok(())
 }
@@ -305,8 +326,11 @@ fn fig9(json: bool) -> Result<()> {
         .collect();
     println!(
         "{}",
-        render_table("Fig. 9 — speedup degradation due to grouping (ICH=32, KH=KW=2)",
-                     &["OCH", "groups", "GOPS", "speedup"], &table)
+        render_table(
+            "Fig. 9 — speedup degradation due to grouping (ICH=32, KH=KW=2)",
+            &["OCH", "groups", "GOPS", "speedup"],
+            &table,
+        )
     );
     Ok(())
 }
@@ -355,9 +379,20 @@ fn table1(json: bool) -> Result<()> {
         .collect();
     println!(
         "{}",
-        render_table("Table I — IMC-integrated RISC-V architectures",
-                     &["design", "core", "integration", "memory", "size", "MHz",
-                       "reported", "norm GOPS @INT4/500MHz"], &table)
+        render_table(
+            "Table I — IMC-integrated RISC-V architectures",
+            &[
+                "design",
+                "core",
+                "integration",
+                "memory",
+                "size",
+                "MHz",
+                "reported",
+                "norm GOPS @INT4/500MHz",
+            ],
+            &table,
+        )
     );
     println!("this work measured peak: {peak:.1} GOPS (paper: 137 GOPS)");
     Ok(())
@@ -386,9 +421,11 @@ fn zoo(json: bool) -> Result<()> {
         .collect();
     println!(
         "{}",
-        render_table("§V-D — model-zoo flexibility sweep",
-                     &["model", "layers", "geomean", "min speedup", "peak GOPS", "DIMC wins"],
-                     &table)
+        render_table(
+            "§V-D — model-zoo flexibility sweep",
+            &["model", "layers", "geomean", "min speedup", "peak GOPS", "DIMC wins"],
+            &table,
+        )
     );
     println!("total layer configurations: {total} (paper: >450)");
     Ok(())
@@ -422,10 +459,12 @@ fn resnet50(json: bool) -> Result<()> {
     let total_base: u64 = rows.iter().map(|r| r.baseline_cycles).sum();
     println!("  layers: {}", rows.len());
     println!("  total ops: {:.2} G", report.ops as f64 / 1e9);
-    println!("  DIMC-RVV:    {total_dimc} cycles = {:.2} ms @500 MHz  ({:.1} GOPS net)",
-             report.ms(), report.gops);
-    println!("  baseline:    {total_base} cycles = {:.2} ms @500 MHz",
-             total_base as f64 / 5e5);
+    println!(
+        "  DIMC-RVV:    {total_dimc} cycles = {:.2} ms @500 MHz  ({:.1} GOPS net)",
+        report.ms(),
+        report.gops
+    );
+    println!("  baseline:    {total_base} cycles = {:.2} ms @500 MHz", total_base as f64 / 5e5);
     println!("\n[3/3] headline metrics vs paper:");
     println!("  peak GOPS      : {:.1}   (paper: 137)", s.peak_gops);
     println!("  peak speedup   : {:.0}x  (paper: 217x)", s.peak_speedup);
@@ -464,7 +503,16 @@ fn verify_json(reports: &[verify::VerifyReport]) -> String {
 }
 
 fn simulate(flags: &HashMap<String, String>, json: bool) -> Result<()> {
-    let l = if flags.contains_key("fc") {
+    let l = if flags.contains_key("gemm") {
+        LayerConfig::gemm_fused(
+            "custom",
+            flag(flags, "m", 64u32)?,
+            flag(flags, "n", 64u32)?,
+            flag(flags, "k", 256u32)?,
+            flags.contains_key("bias"),
+            flags.contains_key("relu"),
+        )
+    } else if flags.contains_key("fc") {
         LayerConfig::fc("custom", flag(flags, "ich", 256u32)?, flag(flags, "och", 64u32)?)
     } else {
         LayerConfig::conv(
@@ -490,11 +538,67 @@ fn simulate(flags: &HashMap<String, String>, json: bool) -> Result<()> {
     let (c, ld, st) = row.dist.unwrap_or((0.0, 0.0, 0.0));
     println!("  DIMC:     {} cycles, {:.1} GOPS", row.cycles, row.gops);
     println!("  baseline: {} cycles", row.baseline_cycles.unwrap_or(0));
-    println!("  speedup:  {:.1}x   ANS: {:.1}x",
-             row.speedup.unwrap_or(1.0), row.ans.unwrap_or(0.0));
-    println!("  dist:     {:.0}% compute / {:.0}% load / {:.0}% store",
-             c * 100.0, ld * 100.0, st * 100.0);
+    println!(
+        "  speedup:  {:.1}x   ANS: {:.1}x",
+        row.speedup.unwrap_or(1.0),
+        row.ans.unwrap_or(0.0)
+    );
+    println!(
+        "  dist:     {:.0}% compute / {:.0}% load / {:.0}% store",
+        c * 100.0,
+        ld * 100.0,
+        st * 100.0
+    );
     println!("  instrs:   {} (DIMC path)", row.instret.unwrap_or(0));
+    Ok(())
+}
+
+fn transformers(json: bool) -> Result<()> {
+    let points = figures::transformer_cnn_utilization()?;
+    let peak = crate::arch::Arch::default().dimc_peak_gops(4);
+    if json {
+        let mut j = JsonBuilder::new();
+        j.begin_obj();
+        j.field_f64("peak_gops", peak);
+        j.key("models");
+        j.begin_arr();
+        for p in &points {
+            j.begin_obj();
+            j.field_str("model", p.model);
+            j.field_str("family", p.family);
+            j.field_f64("gops", p.gops);
+            j.field_f64("peak_frac", p.peak_frac);
+            j.field_f64("cluster_utilization", p.cluster_utilization);
+            j.field_f64("speedup", p.speedup);
+            j.end_obj();
+        }
+        j.end_arr();
+        j.end_obj();
+        println!("{}", j.finish());
+        return Ok(());
+    }
+    let table: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.model.to_string(),
+                p.family.to_string(),
+                format!("{:.1}", p.gops),
+                format!("{:.1}%", p.peak_frac * 100.0),
+                format!("{:.1}x", p.speedup),
+                format!("{:.1}%", p.cluster_utilization * 100.0),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "transformer vs CNN — DIMC utilization per workload class",
+            &["model", "family", "GOPS", "of peak", "speedup", "4-core util"],
+            &table,
+        )
+    );
+    println!("Int4 tile peak: {peak:.0} GOPS; GEMM-dominated transformers keep the array fuller");
     Ok(())
 }
 
@@ -506,8 +610,14 @@ fn energy(json: bool) -> Result<()> {
     let mut base = Session::builder().engine(Engine::Baseline).build()?;
     if !json {
         println!("model-based energy estimate (paper future work; see metrics/energy.rs)");
-        println!("{:<14} {:>12} {:>12} {:>14} {:>14}", "layer", "DIMC uJ", "base uJ",
-                 "DIMC TOPS/W", "base TOPS/W");
+        println!(
+            "{:<14} {:>12} {:>12} {:>14} {:>14}",
+            "layer",
+            "DIMC uJ",
+            "base uJ",
+            "DIMC TOPS/W",
+            "base TOPS/W"
+        );
     }
     let mut d_tot = 0.0;
     let mut b_tot = 0.0;
@@ -533,8 +643,14 @@ fn energy(json: bool) -> Result<()> {
             j.field_f64("baseline_tops_per_watt", eb.tops_per_watt);
             j.end_obj();
         } else {
-            println!("{:<14} {:>12.2} {:>12.2} {:>14.1} {:>14.2}",
-                     l.name, ed.total_uj, eb.total_uj, ed.tops_per_watt, eb.tops_per_watt);
+            println!(
+                "{:<14} {:>12.2} {:>12.2} {:>14.1} {:>14.2}",
+                l.name,
+                ed.total_uj,
+                eb.total_uj,
+                ed.tops_per_watt,
+                eb.tops_per_watt
+            );
         }
     }
     if json {
@@ -548,10 +664,16 @@ fn energy(json: bool) -> Result<()> {
         println!("{}", j.finish());
         return Ok(());
     }
-    println!("\nResNet-50 inference: DIMC {d_tot:.0} uJ vs baseline {b_tot:.0} uJ \
-              ({:.0}x less energy)", b_tot / d_tot);
-    println!("net efficiency: DIMC {:.1} TOPS/W, baseline {:.2} TOPS/W",
-             ops as f64 / (d_tot * 1e-6) / 1e12, ops as f64 / (b_tot * 1e-6) / 1e12);
+    println!(
+        "\nResNet-50 inference: DIMC {d_tot:.0} uJ vs baseline {b_tot:.0} uJ \
+         ({:.0}x less energy)",
+        b_tot / d_tot
+    );
+    println!(
+        "net efficiency: DIMC {:.1} TOPS/W, baseline {:.2} TOPS/W",
+        ops as f64 / (d_tot * 1e-6) / 1e12,
+        ops as f64 / (b_tot * 1e-6) / 1e12
+    );
     Ok(())
 }
 
@@ -561,8 +683,15 @@ fn tiles(json: bool) -> Result<()> {
     let mut session = Session::builder().build()?;
     if !json {
         println!("multi-tile scaling projection (paper future work; metrics/scaling.rs)");
-        println!("{:<14} {:>7} {:>9} {:>9} {:>9} {:>9}", "layer", "groups",
-                 "N=1", "N=2", "N=4", "N=8");
+        println!(
+            "{:<14} {:>7} {:>9} {:>9} {:>9} {:>9}",
+            "layer",
+            "groups",
+            "N=1",
+            "N=2",
+            "N=4",
+            "N=8"
+        );
     }
     let mut totals = [0u64; 4];
     let mut j = JsonBuilder::new();
@@ -592,8 +721,15 @@ fn tiles(json: bool) -> Result<()> {
             j.end_arr();
             j.end_obj();
         } else {
-            println!("{:<14} {:>7} {:>9} {:>9} {:>9} {:>9}",
-                     l.name, l.groups(), cells[0], cells[1], cells[2], cells[3]);
+            println!(
+                "{:<14} {:>7} {:>9} {:>9} {:>9} {:>9}",
+                l.name,
+                l.groups(),
+                cells[0],
+                cells[1],
+                cells[2],
+                cells[3]
+            );
         }
     }
     if json {
@@ -608,12 +744,20 @@ fn tiles(json: bool) -> Result<()> {
         println!("{}", j.finish());
         return Ok(());
     }
-    println!("\nnetwork cycles: N=1 {} | N=2 {} ({:.2}x) | N=4 {} ({:.2}x) | N=8 {} ({:.2}x)",
-             totals[0], totals[1], totals[0] as f64 / totals[1] as f64,
-             totals[2], totals[0] as f64 / totals[2] as f64,
-             totals[3], totals[0] as f64 / totals[3] as f64);
-    println!("the shared in-order front end caps multi-tile gains — the paper's\n\
-              single-tile focus on control efficiency is the right foundation");
+    println!(
+        "\nnetwork cycles: N=1 {} | N=2 {} ({:.2}x) | N=4 {} ({:.2}x) | N=8 {} ({:.2}x)",
+        totals[0],
+        totals[1],
+        totals[0] as f64 / totals[1] as f64,
+        totals[2],
+        totals[0] as f64 / totals[2] as f64,
+        totals[3],
+        totals[0] as f64 / totals[3] as f64
+    );
+    println!(
+        "the shared in-order front end caps multi-tile gains — the paper's\n\
+         single-tile focus on control efficiency is the right foundation"
+    );
     Ok(())
 }
 
@@ -623,8 +767,7 @@ fn cluster(flags: &HashMap<String, String>, json: bool) -> Result<()> {
     let model_name = flags.get("model").map(String::as_str).unwrap_or("resnet50");
     let cores = flag(flags, "cores", 8u32)?.max(1);
     let batch = flag(flags, "batch", 1u32)?.max(1);
-    let mut session =
-        Session::builder().model(model_name).cores(cores).batch(batch).build()?;
+    let mut session = Session::builder().model(model_name).cores(cores).batch(batch).build()?;
     let arch = session.config().arch;
 
     // Sweep the powers of two up to the requested core count.
@@ -640,7 +783,11 @@ fn cluster(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         println!(
             "cluster scale-out: {} x {} DIMC-enhanced cores, batch {} \
              (shared bus {} B/cyc, barrier {} cyc)",
-            model_name, cores, batch, arch.cluster_bus_bytes, arch.cluster_barrier_cycles
+            model_name,
+            cores,
+            batch,
+            arch.cluster_bus_bytes,
+            arch.cluster_barrier_cycles
         );
     }
     // One session for the whole subcommand: the sweep, the per-layer view
@@ -798,19 +945,33 @@ fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         println!("\n== serving report ==");
         println!(
             "models: {} | trace {} seed 0x{:X} | {} cores | max batch {} | max wait {} cyc",
-            report.model, ss.shape, ss.seed, report.cores, ss.max_batch, ss.max_wait_cycles
+            report.model,
+            ss.shape,
+            ss.seed,
+            report.cores,
+            ss.max_batch,
+            ss.max_wait_cycles
         );
         println!(
             "requests: {} | offered {:.1} req/s | achieved {:.1} req/s",
-            ss.requests, ss.offered_rps, ss.achieved_rps
+            ss.requests,
+            ss.offered_rps,
+            ss.achieved_rps
         );
         println!(
             "latency: p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms | max {:.3} ms",
-            lat.p50_ms, lat.p95_ms, lat.p99_ms, lat.mean_ms, lat.max_ms
+            lat.p50_ms,
+            lat.p95_ms,
+            lat.p99_ms,
+            lat.mean_ms,
+            lat.max_ms
         );
         println!(
             "queue:   mean depth {:.2} | peak depth {} | {} batches (mean size {:.2})",
-            ss.mean_queue_depth, ss.max_queue_depth, ss.batches, ss.mean_batch_size
+            ss.mean_queue_depth,
+            ss.max_queue_depth,
+            ss.batches,
+            ss.mean_batch_size
         );
         println!(
             "cluster: busy {:.1}% | DIMC-tile utilization {:.1}%",
@@ -896,7 +1057,11 @@ fn trace(path: Option<&str>, json: bool) -> Result<()> {
         );
         prev_issue = e.issue;
     }
-    println!("\n{} instructions, {} cycles (IPC {:.2})",
-             stats.instret, stats.cycles, stats.instret as f64 / stats.cycles as f64);
+    println!(
+        "\n{} instructions, {} cycles (IPC {:.2})",
+        stats.instret,
+        stats.cycles,
+        stats.instret as f64 / stats.cycles as f64
+    );
     Ok(())
 }

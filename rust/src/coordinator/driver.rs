@@ -252,6 +252,17 @@ mod tests {
     }
 
     #[test]
+    fn dimc_functional_gemm_tiled_and_grouped() {
+        // M = 6 row sweeps, K = 300 -> 2 row-tiles, N = 40 -> 2 groups.
+        check_layer(&LayerConfig::gemm("gemm", 6, 40, 300), Engine::Dimc);
+    }
+
+    #[test]
+    fn baseline_functional_gemm() {
+        check_layer(&LayerConfig::gemm_fused("bgemm", 5, 12, 64, true, false), Engine::Baseline);
+    }
+
+    #[test]
     fn baseline_functional_conv() {
         check_layer(&LayerConfig::conv("b1", 16, 8, 2, 2, 5, 5, 1, 0), Engine::Baseline);
     }

@@ -217,6 +217,60 @@ pub fn serve_latency_points() -> Result<Vec<LoadPoint>, SessionError> {
     session.load_sweep(&rps_ladder(roofline))
 }
 
+/// One model of the transformer-vs-CNN utilization figure.
+#[derive(Debug, Clone)]
+pub struct UtilizationPoint {
+    /// Zoo model name.
+    pub model: &'static str,
+    /// Workload family tag (`cnn` / `transformer`).
+    pub family: &'static str,
+    /// Single-core network throughput in GOPS.
+    pub gops: f64,
+    /// `gops` as a fraction of the DIMC tile's Int4 peak — how well the
+    /// workload keeps the 256-MAC array fed.
+    pub peak_frac: f64,
+    /// Busy-core fraction of a 4-core cluster schedule.
+    pub cluster_utilization: f64,
+    /// Whole-network speedup over the baseline RVV core.
+    pub speedup: f64,
+}
+
+/// The model set of the transformer-vs-CNN figure: two CNN and two
+/// transformer representatives from the zoo.
+pub fn transformer_cnn_models() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("resnet50", "cnn"),
+        ("mobilenet-100-224", "cnn"),
+        ("vit-b16", "transformer"),
+        ("mobilebert", "transformer"),
+    ]
+}
+
+/// Transformer-vs-CNN utilization figure: for each representative model,
+/// the single-core GOPS (and its fraction of the Int4 peak), the
+/// baseline speedup, and the busy-core fraction of a 4-core cluster
+/// schedule. GEMM-dominated transformers keep the tile array fuller than
+/// early-CNN layers with shallow channel depth.
+pub fn transformer_cnn_utilization() -> Result<Vec<UtilizationPoint>, SessionError> {
+    transformer_cnn_models()
+        .into_iter()
+        .map(|(model, family)| {
+            let rep = Session::builder().model(model).build()?.run(&RunSpec::Network)?;
+            let mut clustered = Session::builder().model(model).cores(4).build()?;
+            let cluster = clustered.run(&RunSpec::Network)?;
+            let peak = crate::arch::Arch::default().dimc_peak_gops(4);
+            Ok(UtilizationPoint {
+                model,
+                family,
+                gops: rep.gops,
+                peak_frac: rep.gops / peak,
+                cluster_utilization: cluster.utilization.unwrap_or(0.0),
+                speedup: rep.speedup.unwrap_or(1.0),
+            })
+        })
+        .collect()
+}
+
 /// §V-D zoo summary per model.
 pub struct ZooSummary {
     pub model: &'static str,
@@ -259,4 +313,26 @@ pub fn zoo_summaries(reports: &[RunReport]) -> Vec<ZooSummary> {
 
 pub fn zoo_sweep() -> Result<Vec<ZooSummary>, SessionError> {
     Ok(zoo_summaries(&zoo_reports()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_frac_normalizes_against_the_arch_peak() {
+        // The figure's denominator is Arch::dimc_peak_gops(4) = 256 GOPS
+        // at the default 500 MHz clock.
+        assert!((crate::arch::Arch::default().dimc_peak_gops(4) - 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transformer_figure_names_resolve_and_cover_both_families() {
+        let models = transformer_cnn_models();
+        assert!(models.iter().any(|(_, f)| *f == "cnn"));
+        assert!(models.iter().any(|(_, f)| *f == "transformer"));
+        for (name, _) in models {
+            assert!(crate::workloads::zoo::lookup(name).is_ok(), "{name}");
+        }
+    }
 }

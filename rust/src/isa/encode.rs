@@ -62,7 +62,12 @@ fn i_type(imm: i32, rs1: u32, funct3: u32, rd: u32, opc: u32) -> u32 {
 #[inline]
 fn s_type(imm: i32, rs2: u32, rs1: u32, funct3: u32, opc: u32) -> u32 {
     let imm = imm as u32;
-    ((imm >> 5 & 0x7f) << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | ((imm & 0x1f) << 7) | opc
+    ((imm >> 5 & 0x7f) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (funct3 << 12)
+        | ((imm & 0x1f) << 7)
+        | opc
 }
 
 #[inline]
@@ -138,9 +143,14 @@ pub fn encode(i: &Instr) -> u32 {
         OpImm { op, rd, rs1, imm } => {
             assert!(op != AluOp::Mul && op != AluOp::Sub, "no {op:?} immediate form");
             match op {
-                AluOp::Sll | AluOp::Srl => {
-                    r_type(0, (imm as u32) & 0x1f, rs1 as u32, alu_funct3(op), rd as u32, OPC_OP_IMM)
-                }
+                AluOp::Sll | AluOp::Srl => r_type(
+                    0,
+                    (imm as u32) & 0x1f,
+                    rs1 as u32,
+                    alu_funct3(op),
+                    rd as u32,
+                    OPC_OP_IMM,
+                ),
                 AluOp::Sra => r_type(
                     0b0100000,
                     (imm as u32) & 0x1f,
@@ -180,10 +190,18 @@ pub fn encode(i: &Instr) -> u32 {
                 | OPC_V
         }
         Vle { eew, vd, rs1 } => {
-            (1 << 25) | ((rs1 as u32) << 15) | (vl_width_bits(eew) << 12) | ((vd as u32) << 7) | OPC_VL
+            (1 << 25)
+                | ((rs1 as u32) << 15)
+                | (vl_width_bits(eew) << 12)
+                | ((vd as u32) << 7)
+                | OPC_VL
         }
         Vse { eew, vs3, rs1 } => {
-            (1 << 25) | ((rs1 as u32) << 15) | (vl_width_bits(eew) << 12) | ((vs3 as u32) << 7) | OPC_VS
+            (1 << 25)
+                | ((rs1 as u32) << 15)
+                | (vl_width_bits(eew) << 12)
+                | ((vs3 as u32) << 7)
+                | OPC_VS
         }
         Vlse { eew, vd, rs1, rs2 } => {
             (0b10 << 26)
@@ -218,7 +236,9 @@ pub fn encode(i: &Instr) -> u32 {
         VandVV { vd, vs1, vs2 } => v_arith(0b001001, vs2 as u32, vs1 as u32, OPIVV, vd as u32),
         VorVV { vd, vs1, vs2 } => v_arith(0b001010, vs2 as u32, vs1 as u32, OPIVV, vd as u32),
         VxorVV { vd, vs1, vs2 } => v_arith(0b001011, vs2 as u32, vs1 as u32, OPIVV, vd as u32),
-        VslidedownVI { vd, imm, vs2 } => v_arith(0b001111, vs2 as u32, imm as u32, OPIVI, vd as u32),
+        VslidedownVI { vd, imm, vs2 } => {
+            v_arith(0b001111, vs2 as u32, imm as u32, OPIVI, vd as u32)
+        }
         VslideupVI { vd, imm, vs2 } => v_arith(0b001110, vs2 as u32, imm as u32, OPIVI, vd as u32),
 
         DlI { nvec, mask, vs1, width, sec } => {

@@ -20,9 +20,14 @@
 //!   scoreboard hazards, per-FU structural conflicts, fixed-latency
 //!   external memory, and a loop-nest trace engine for large layers.
 //! * [`compiler`] — the layer-to-instruction-stream mapper (DIMC path with
-//!   tiling and grouping, and the baseline pure-RVV int8 path).
+//!   tiling and grouping, and the baseline pure-RVV int8 path). Layers are
+//!   conv, FC or dense GEMM (`LayerConfig::gemm`) — the transformer
+//!   primitive, mapped as K-dim weight tiling + N-dim kernel grouping.
 //! * [`workloads`] — layer tables for ResNet-50/18, AlexNet, VGG16,
-//!   Inception-v1, DenseNet-121, EfficientNet-B0 and MobileNet-v1.
+//!   Inception-v1, DenseNet-121, EfficientNet-B0 and MobileNet-v1, plus
+//!   the transformer workloads `vit-b16` (ViT-Base/16) and `mobilebert`
+//!   (a MobileBERT-class encoder), whose attention blocks are short
+//!   sequences of GEMM layers.
 //! * [`metrics`] — GOPS / speedup / area-normalized-speedup reporting and
 //!   the calibrated area model.
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas golden

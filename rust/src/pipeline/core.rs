@@ -246,7 +246,14 @@ impl Core {
             }
             VsextVf4 { vd, vs2 } => {
                 let src_regs = group_regs(self.vl, self.vtype.sew / 4) as u8;
-                ([None; 2], [(vs2, src_regs.max(1)), (0, 0), (0, 0)], None, Some((vd, g)), false, false)
+                (
+                    [None; 2],
+                    [(vs2, src_regs.max(1)), (0, 0), (0, 0)],
+                    None,
+                    Some((vd, g)),
+                    false,
+                    false,
+                )
             }
             DlI { vs1, nvec, .. } | DlM { vs1, nvec, .. } => {
                 ([None; 2], [(vs1, nvec), (0, 0), (0, 0)], None, None, false, true)
@@ -481,7 +488,8 @@ impl Core {
                     let a = read_elem_s(&self.vregs, vs1, e, sew);
                     let b = read_elem_s(&self.vregs, vs2, e, sew);
                     let c = read_elem_s(&self.vregs, vd, e, sew);
-                    write_elem(&mut self.vregs, vd, e, sew, c.wrapping_add(a.wrapping_mul(b)) as u32);
+                    let acc = c.wrapping_add(a.wrapping_mul(b));
+                    write_elem(&mut self.vregs, vd, e, sew, acc as u32);
                 }
             }
             VredsumVS { vd, vs1, vs2 } => {
@@ -863,7 +871,9 @@ mod tests {
         // A DC.P stream and an independent vadd stream should overlap:
         // total cycles must be far less than the serial sum.
         let mut core = Core::new(Arch::default());
-        let mut src = String::from("li x5, 8\nvsetvli x0, x5, e8, m1\nvmv.v.i v1, 1\nvmv.v.i v2, 2\nvmv.v.i v6, 0\n");
+        let mut src = String::from(
+            "li x5, 8\nvsetvli x0, x5, e8, m1\nvmv.v.i v1, 1\nvmv.v.i v2, 2\nvmv.v.i v6, 0\n",
+        );
         for _ in 0..32 {
             src.push_str("dc.p v8.0, v6.0, row=0, w=0\n");
             src.push_str("vadd.vv v3, v1, v2\n");

@@ -180,7 +180,8 @@ mod tests {
     #[test]
     fn scalar_latencies() {
         let a = Arch::default();
-        assert_eq!(timing(&Instr::Op { op: AluOp::Mul, rd: 1, rs1: 2, rs2: 3 }, &a, &V8).latency, 3);
+        let mul = Instr::Op { op: AluOp::Mul, rd: 1, rs1: 2, rs2: 3 };
+        assert_eq!(timing(&mul, &a, &V8).latency, 3);
         assert_eq!(timing(&Instr::Lw { rd: 1, rs1: 2, imm: 0 }, &a, &V8).latency, 6);
     }
 }

@@ -97,8 +97,17 @@ pub fn render(title: &str, points: &[LoadPoint]) -> String {
         .collect();
     render_table(
         title,
-        &["offered r/s", "achieved r/s", "p50 ms", "p95 ms", "p99 ms", "depth", "batch",
-          "busy", "tile util"],
+        &[
+            "offered r/s",
+            "achieved r/s",
+            "p50 ms",
+            "p95 ms",
+            "p99 ms",
+            "depth",
+            "batch",
+            "busy",
+            "tile util",
+        ],
         &rows,
     )
 }

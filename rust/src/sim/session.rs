@@ -450,7 +450,8 @@ impl Session {
     }
 
     /// Run the functional bit-identity cross-checks on demand: small
-    /// probe layers (tiled, grouped, FC) execute functionally on the
+    /// probe layers (tiled, grouped, FC, and a K-tiled + N-grouped GEMM
+    /// covering the transformer layer class) execute functionally on the
     /// configured engine and must match the pure-Rust conv oracle
     /// bit-for-bit; on a cluster the sharded outputs must additionally
     /// equal the single-core driver's, and a 1-core schedule of the
@@ -460,6 +461,9 @@ impl Session {
             LayerConfig::conv("vprobe_tiled", 80, 8, 2, 2, 4, 4, 1, 0),
             LayerConfig::conv("vprobe_grouped", 16, 96, 2, 2, 6, 6, 1, 0),
             LayerConfig::fc("vprobe_fc", 300, 40),
+            // 2 K-tiles, 2 N-groups, 6 M rows: on clusters of 3+ cores
+            // this shards by M rows, on 2 by N columns.
+            LayerConfig::gemm("vprobe_gemm", 6, 40, 300),
         ];
         let mut checks = Vec::new();
         for layer in probes {

@@ -1,0 +1,99 @@
+//! A MobileBERT-class encoder (Sun et al., ACL 2020) as a GEMM layer
+//! table — the zoo's edge-sized transformer workload.
+//!
+//! MobileBERT keeps BERT's 24-block depth but squeezes each block through
+//! a 128-wide bottleneck: an input projection down from the 512-wide body
+//! stream, narrow 4-head attention, a *stack* of four small FFNs, and an
+//! output projection back up. Every matmul is one
+//! [`LayerKind::Gemm`](crate::compiler::layer::LayerKind::Gemm) layer, as
+//! in [`super::vit`]; softmax/layernorm/residuals run on the vector core
+//! (paper assumption 6). Sequence length 128, trigram token embedding
+//! (3 x 128 = 384) projected into the 512-wide body, and a 2-way
+//! sentence-level classifier on the pooled token.
+
+use super::vit::attention_layers;
+use crate::compiler::layer::LayerConfig;
+
+const SEQ: u32 = 128;
+const BODY: u32 = 512;
+const BOTTLENECK: u32 = 128;
+const HEADS: u32 = 4;
+const FFN_STACK: u32 = 4;
+
+/// One bottlenecked MobileBERT block.
+fn block(prefix: &str) -> Vec<LayerConfig> {
+    let mut v = vec![LayerConfig::gemm_fused(
+        &format!("{prefix}.bneck_in"),
+        SEQ,
+        BOTTLENECK,
+        BODY,
+        true,
+        false,
+    )];
+    v.extend(attention_layers(prefix, SEQ, BOTTLENECK, HEADS, BOTTLENECK / HEADS, BOTTLENECK));
+    for j in 0..FFN_STACK {
+        v.push(LayerConfig::gemm_fused(
+            &format!("{prefix}.ffn{j}a"),
+            SEQ,
+            BODY,
+            BOTTLENECK,
+            true,
+            true,
+        ));
+        v.push(LayerConfig::gemm_fused(
+            &format!("{prefix}.ffn{j}b"),
+            SEQ,
+            BOTTLENECK,
+            BODY,
+            true,
+            false,
+        ));
+    }
+    v.push(LayerConfig::gemm_fused(
+        &format!("{prefix}.bneck_out"),
+        SEQ,
+        BODY,
+        BOTTLENECK,
+        true,
+        false,
+    ));
+    v
+}
+
+/// All accelerated layers of the MobileBERT-class encoder in network
+/// order: embedding projection, 24 bottleneck blocks, classifier.
+pub fn mobilebert() -> Vec<LayerConfig> {
+    let mut v = vec![LayerConfig::gemm_fused("embed", SEQ, BODY, 3 * BOTTLENECK, true, false)];
+    for i in 0..24 {
+        v.extend(block(&format!("b{i}")));
+    }
+    v.push(LayerConfig::gemm_fused("classifier", 1, 2, BODY, true, false));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilebert_shape_budget() {
+        let layers = mobilebert();
+        // embed + 24 * (bneck_in + 10 attention + 8 ffn + bneck_out) + cls
+        assert_eq!(layers.len(), 2 + 24 * 20);
+        assert!(layers.iter().all(|l| l.is_gemm()), "the encoder is GEMM-only");
+        // MobileBERT runs ~2-3 GMACs of matmul at seq 128.
+        let gmacs = layers.iter().map(|l| l.macs()).sum::<u64>() as f64 / 1e9;
+        assert!((1.5..4.0).contains(&gmacs), "mobilebert at {gmacs:.2} GMACs");
+    }
+
+    #[test]
+    fn blocks_are_bottlenecked() {
+        let layers = mobilebert();
+        let bneck_in = layers.iter().find(|l| l.name == "b0.bneck_in").unwrap();
+        assert_eq!((bneck_in.gemm_n(), bneck_in.gemm_k()), (BOTTLENECK, BODY));
+        let score = layers.iter().find(|l| l.name == "b0.h0.score").unwrap();
+        assert_eq!(score.gemm_k(), BOTTLENECK / HEADS);
+        let ffn = layers.iter().find(|l| l.name == "b0.ffn3b").unwrap();
+        assert_eq!((ffn.gemm_n(), ffn.gemm_k()), (BOTTLENECK, BODY));
+    }
+}

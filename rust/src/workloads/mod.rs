@@ -1,19 +1,24 @@
-//! Workload zoo: the conv/FC layer tables of the models the paper
+//! Workload zoo: the conv/FC/GEMM layer tables of the models the paper
 //! evaluates (§V-B uses ResNet-50; §V-D sweeps >450 conv layers from
 //! AlexNet, VGG16, ResNet, Inception, DenseNet, EfficientNet and
-//! MobileNet). Shapes are transcribed from the original papers; only
-//! shapes enter the timing results (weights are synthetic).
+//! MobileNet) plus the transformer workloads the DIMC tile's GEMM
+//! mapping unlocks (ViT-Base/16, a MobileBERT-class encoder). Shapes are
+//! transcribed from the original papers; only shapes enter the timing
+//! results (weights are synthetic).
 //!
 //! Pooling / elementwise layers are intentionally absent (paper
-//! assumption 6: they run identically on both cores).
+//! assumption 6: they run identically on both cores); transformer
+//! softmax/layernorm/residuals are excluded under the same assumption.
 
 pub mod alexnet;
+pub mod bert;
 pub mod densenet;
 pub mod efficientnet;
 pub mod inception;
 pub mod mobilenet;
 pub mod resnet;
 pub mod vgg;
+pub mod vit;
 pub mod zoo;
 
 pub use zoo::{all_models, lookup, model_by_name, Model, UnknownModel};

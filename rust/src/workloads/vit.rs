@@ -1,0 +1,116 @@
+//! ViT-Base/16 (Dosovitskiy et al., ICLR 2021) as a GEMM layer table —
+//! the zoo's first transformer workload.
+//!
+//! The DIMC tile is a matrix-multiply engine, so an encoder block needs
+//! no machinery above the layer level: every matmul of the block is one
+//! [`LayerKind::Gemm`](crate::compiler::layer::LayerKind::Gemm) layer and
+//! attention is a short *sequence* of them — QKV projection, per-head
+//! score matmul (`Q K^T`), per-head context matmul (`softmax(S) V`),
+//! output projection, then the two FFN GEMMs. Softmax, layernorm and the
+//! residual adds run on the vector core and are excluded exactly like
+//! pooling/elementwise in the CNN tables (paper assumption 6); GELU is
+//! modelled as the fused DC.F activation.
+//!
+//! ViT-Base/16 at 224x224: a 16x16/s16 conv patch embedding (14x14 = 196
+//! patches + class token = 197 tokens), hidden 768, 12 heads of 64, MLP
+//! 3072, 12 blocks, and the 1000-way classification head on the class
+//! token.
+
+use crate::compiler::layer::LayerConfig;
+
+/// The multi-head self-attention sub-block as a GEMM sequence, shared by
+/// every transformer table in the zoo: fused QKV projection, `heads` x
+/// (score + context) matmuls, and the output projection back to
+/// `out_dim`.
+pub fn attention_layers(
+    prefix: &str,
+    tokens: u32,
+    model_dim: u32,
+    heads: u32,
+    head_dim: u32,
+    out_dim: u32,
+) -> Vec<LayerConfig> {
+    let mut v = Vec::with_capacity(2 + 2 * heads as usize);
+    v.push(LayerConfig::gemm_fused(
+        &format!("{prefix}.qkv"),
+        tokens,
+        3 * heads * head_dim,
+        model_dim,
+        true,
+        false,
+    ));
+    for h in 0..heads {
+        // S = Q K^T: [tokens x head_dim] x [head_dim x tokens].
+        v.push(LayerConfig::gemm(&format!("{prefix}.h{h}.score"), tokens, tokens, head_dim));
+        // C = softmax(S) V: [tokens x tokens] x [tokens x head_dim].
+        v.push(LayerConfig::gemm(&format!("{prefix}.h{h}.ctx"), tokens, head_dim, tokens));
+    }
+    v.push(LayerConfig::gemm_fused(
+        &format!("{prefix}.proj"),
+        tokens,
+        out_dim,
+        heads * head_dim,
+        true,
+        false,
+    ));
+    v
+}
+
+/// One pre-norm ViT encoder block: attention + 2-layer MLP.
+fn encoder_block(prefix: &str, tokens: u32, hidden: u32, heads: u32, mlp: u32) -> Vec<LayerConfig> {
+    let mut v = attention_layers(prefix, tokens, hidden, heads, hidden / heads, hidden);
+    v.push(LayerConfig::gemm_fused(&format!("{prefix}.ffn1"), tokens, mlp, hidden, true, true));
+    v.push(LayerConfig::gemm_fused(&format!("{prefix}.ffn2"), tokens, hidden, mlp, true, false));
+    v
+}
+
+/// All accelerated layers of ViT-Base/16 in network order: patch
+/// embedding conv, 12 encoder blocks, classification head.
+pub fn vit_b16() -> Vec<LayerConfig> {
+    const TOKENS: u32 = 197; // 14x14 patches + class token
+    const HIDDEN: u32 = 768;
+    const HEADS: u32 = 12;
+    const MLP: u32 = 3072;
+    let mut v = vec![LayerConfig::conv("patch_embed", 3, HIDDEN, 16, 16, 224, 224, 16, 0)];
+    for i in 0..12 {
+        v.extend(encoder_block(&format!("b{i}"), TOKENS, HIDDEN, HEADS, MLP));
+    }
+    v.push(LayerConfig::gemm_fused("head", 1, 1000, HIDDEN, true, false));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vit_b16_shape_budget() {
+        let layers = vit_b16();
+        // conv + 12 * (qkv + 24 head matmuls + proj + 2 ffn) + head
+        assert_eq!(layers.len(), 2 + 12 * 28);
+        assert!(layers[0].name == "patch_embed" && !layers[0].is_gemm());
+        assert!(layers[1..].iter().all(|l| l.is_gemm()), "encoder is GEMM-only");
+        // ViT-Base is ~17.5 GMACs at 224x224 (patch conv + encoder).
+        let gmacs = layers.iter().map(|l| l.macs()).sum::<u64>() as f64 / 1e9;
+        assert!((16.0..19.0).contains(&gmacs), "vit-b16 at {gmacs:.2} GMACs");
+    }
+
+    #[test]
+    fn attention_is_a_pure_gemm_sequence() {
+        let attn = attention_layers("a", 197, 768, 12, 64, 768);
+        assert_eq!(attn.len(), 2 + 24);
+        // Score matmul reduces over head_dim, context over tokens.
+        let score = attn.iter().find(|l| l.name == "a.h0.score").unwrap();
+        assert_eq!((score.gemm_m(), score.gemm_n(), score.gemm_k()), (197, 197, 64));
+        let ctx = attn.iter().find(|l| l.name == "a.h0.ctx").unwrap();
+        assert_eq!((ctx.gemm_m(), ctx.gemm_n(), ctx.gemm_k()), (197, 64, 197));
+    }
+
+    #[test]
+    fn patch_embedding_produces_the_token_grid() {
+        let l = &vit_b16()[0];
+        assert_eq!(l.oh(), 14);
+        assert_eq!(l.ow(), 14);
+        assert_eq!(l.och, 768);
+    }
+}

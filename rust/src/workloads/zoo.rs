@@ -1,6 +1,8 @@
-//! The >450-layer model zoo of the paper's §V-D flexibility analysis.
+//! The >450-layer model zoo of the paper's §V-D flexibility analysis,
+//! extended with the transformer workloads (ViT-Base/16 and a
+//! MobileBERT-class encoder) the GEMM layer class unlocks.
 
-use super::{alexnet, densenet, efficientnet, inception, mobilenet, resnet, vgg};
+use super::{alexnet, bert, densenet, efficientnet, inception, mobilenet, resnet, vgg, vit};
 use crate::compiler::layer::LayerConfig;
 
 /// A named model: an ordered list of accelerated (conv/FC) layers.
@@ -24,12 +26,20 @@ pub fn all_models() -> Vec<Model> {
         Model { name: "efficientnet-b0", layers: efficientnet::efficientnet_b0() },
         Model { name: "efficientnet-b1", layers: efficientnet::efficientnet_b1() },
     ];
-    let names =
-        ["mobilenet-100-224", "mobilenet-100-192", "mobilenet-75-224", "mobilenet-75-192",
-         "mobilenet-50-224", "mobilenet-50-192", "mobilenet-25-224"];
+    let names = [
+        "mobilenet-100-224",
+        "mobilenet-100-192",
+        "mobilenet-75-224",
+        "mobilenet-75-192",
+        "mobilenet-50-224",
+        "mobilenet-50-192",
+        "mobilenet-25-224",
+    ];
     for (layers, name) in mobilenet::mobilenet_variants().into_iter().zip(names) {
         models.push(Model { name, layers });
     }
+    models.push(Model { name: "vit-b16", layers: vit::vit_b16() });
+    models.push(Model { name: "mobilebert", layers: bert::mobilebert() });
     models
 }
 
@@ -51,18 +61,28 @@ impl std::fmt::Display for UnknownModel {
 
 impl std::error::Error for UnknownModel {}
 
-/// Look a model up by name, case-insensitively. On failure the error
-/// lists every valid name (the CLI and
-/// [`sim::SessionBuilder`](crate::sim::SessionBuilder) surface it
+/// Canonical comparison form of a model name: ASCII-lowercased with `_`
+/// folded into `-`, so `ViT_B16` resolves to `vit-b16`.
+fn canon(name: &str) -> String {
+    name.chars()
+        .map(|c| if c == '_' { '-' } else { c.to_ascii_lowercase() })
+        .collect()
+}
+
+/// Look a model up by name, case-insensitively and treating `-`/`_` as
+/// interchangeable. On failure the error lists every valid name (the CLI
+/// and [`sim::SessionBuilder`](crate::sim::SessionBuilder) surface it
 /// directly).
 pub fn lookup(name: &str) -> Result<Model, UnknownModel> {
-    all_models()
-        .into_iter()
-        .find(|m| m.name.eq_ignore_ascii_case(name))
-        .ok_or_else(|| UnknownModel {
+    let want = canon(name);
+    let mut models = all_models();
+    match models.iter().position(|m| canon(m.name) == want) {
+        Some(i) => Ok(models.swap_remove(i)),
+        None => Err(UnknownModel {
             requested: name.to_string(),
-            valid: all_models().iter().map(|m| m.name).collect(),
-        })
+            valid: models.iter().map(|m| m.name).collect(),
+        }),
+    }
 }
 
 /// Look a model up by exact name.
@@ -111,9 +131,23 @@ mod tests {
     }
 
     #[test]
+    fn zoo_covers_the_transformer_workloads() {
+        let names: Vec<&str> = all_models().iter().map(|m| m.name).collect();
+        assert!(names.contains(&"vit-b16"), "{names:?}");
+        assert!(names.contains(&"mobilebert"), "{names:?}");
+        let gemms = all_layers().iter().filter(|l| l.is_gemm()).count();
+        assert!(gemms > 400, "only {gemms} GEMM layers in the zoo");
+    }
+
+    #[test]
     fn lookup_is_case_insensitive_and_errors_list_valid_names() {
         assert_eq!(lookup("ResNet50").unwrap().name, "resnet50");
         assert_eq!(lookup("MOBILENET-50-192").unwrap().name, "mobilenet-50-192");
+        // `-` and `_` are interchangeable: the acceptance spelling
+        // `vit_b16` resolves to the canonical dashed zoo name.
+        assert_eq!(lookup("vit_b16").unwrap().name, "vit-b16");
+        assert_eq!(lookup("ViT-B16").unwrap().name, "vit-b16");
+        assert_eq!(lookup("MobileBERT").unwrap().name, "mobilebert");
         let e = lookup("nope").unwrap_err();
         assert_eq!(e.requested, "nope");
         let msg = e.to_string();

@@ -8,9 +8,12 @@
 //! the sweep stays tractable.
 
 use dimc_rvv::arch::Arch;
-use dimc_rvv::cluster::exec::ClusterSim;
+use dimc_rvv::cluster::exec::{run_functional_cluster, ClusterSim};
 use dimc_rvv::cluster::sched::ClusterMode;
 use dimc_rvv::cluster::topology::ClusterTopology;
+use dimc_rvv::compiler::layer::LayerConfig;
+use dimc_rvv::compiler::pack::{synth_acts, synth_wts};
+use dimc_rvv::coordinator::driver::{run_functional, Engine};
 use dimc_rvv::dimc::Precision;
 use dimc_rvv::workloads::zoo::all_models;
 
@@ -55,6 +58,50 @@ fn every_zoo_model_runs_on_1_2_4_8_cores() {
             "{}: no scale-out benefit at 8 cores",
             m.name
         );
+    }
+}
+
+/// The zoo sweep above covers the transformer models' 1/2/4/8-core
+/// monotonicity implicitly; this pins it explicitly so a zoo reshuffle
+/// can never silently drop them.
+#[test]
+fn transformer_models_are_in_the_zoo_sweep_and_scale() {
+    let arch = Arch::default();
+    let mut sim = ClusterSim::new(arch, Precision::Int4);
+    for name in ["vit-b16", "mobilebert"] {
+        let m = all_models().into_iter().find(|m| m.name == name).unwrap();
+        let mut prev = u64::MAX;
+        for n in [1u32, 2, 4, 8] {
+            let topo = ClusterTopology::from_arch(n, &arch);
+            let s = sim.schedule(m.name, &m.layers, &topo, 1).unwrap();
+            assert!(s.cycles <= prev, "{name}: N={n} regressed");
+            prev = s.cycles;
+        }
+    }
+}
+
+/// Functional bit-identity for the attention GEMM shapes, downscaled so
+/// flat execution stays fast: a QKV projection, a score matmul and a
+/// context matmul shard across the cluster and must stitch back to the
+/// single-core outputs byte for byte.
+#[test]
+fn attention_gemm_shards_are_functionally_bit_identical() {
+    let arch = Arch::default();
+    let layers = [
+        LayerConfig::gemm_fused("qkv", 9, 96, 64, true, false), // N-cols <=3 cores, M-rows after
+        LayerConfig::gemm("score", 9, 9, 16),                   // M-row shards
+        LayerConfig::gemm("ctx", 9, 16, 9),                     // M-row shards
+        LayerConfig::gemm_fused("ffn", 6, 64, 300, true, true), // K-tiled (2 tiles)
+    ];
+    for (i, l) in layers.iter().enumerate() {
+        let acts = synth_acts(l, Precision::Int4, 0x71A + i as u64);
+        let wts = synth_wts(l, Precision::Int4, 0x71B + i as u64);
+        let single = run_functional(l, Engine::Dimc, &acts, &wts, 4).unwrap().outputs;
+        for n in [2u32, 3, 4, 8] {
+            let topo = ClusterTopology::from_arch(n, &arch);
+            let stitched = run_functional_cluster(l, &topo, &acts, &wts, 4).unwrap();
+            assert_eq!(stitched, single, "{l} on {n} cores");
+        }
     }
 }
 

@@ -111,12 +111,13 @@ fn precision_modes_trade_tiles_for_lanes() {
 
 #[test]
 fn cli_simulate_smoke() {
-    let args: Vec<String> =
-        ["simulate", "--ich", "16", "--och", "8", "--ih", "6", "--iw", "6", "--kh", "2",
-         "--kw", "2", "--pad", "0"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+    let args: Vec<String> = [
+        "simulate", "--ich", "16", "--och", "8", "--ih", "6", "--iw", "6", "--kh", "2", "--kw",
+        "2", "--pad", "0",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
     dimc_rvv::coordinator::cli::main_with_args(&args).unwrap();
 }
 
@@ -151,12 +152,25 @@ fn traced_run_matches_plain_run() {
 
 #[test]
 fn cli_simulate_json_smoke() {
-    let args: Vec<String> =
-        ["simulate", "--ich", "16", "--och", "8", "--ih", "6", "--iw", "6", "--kh", "2",
-         "--kw", "2", "--pad", "0", "--json"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+    let args: Vec<String> = [
+        "simulate", "--ich", "16", "--och", "8", "--ih", "6", "--iw", "6", "--kh", "2", "--kw",
+        "2", "--pad", "0", "--json",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    dimc_rvv::coordinator::cli::main_with_args(&args).unwrap();
+}
+
+#[test]
+fn cli_simulate_gemm_smoke() {
+    // A K-tiled, N-grouped GEMM through the CLI on both engines.
+    let args: Vec<String> = [
+        "simulate", "--gemm", "--m", "5", "--n", "40", "--k", "300", "--bias", "--json",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
     dimc_rvv::coordinator::cli::main_with_args(&args).unwrap();
 }
 

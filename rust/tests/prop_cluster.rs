@@ -80,6 +80,68 @@ fn shards_are_disjoint_and_cover_the_layer() {
     }
 }
 
+fn random_gemm(r: &mut Lcg, tag: u64) -> LayerConfig {
+    // Spans the grouping threshold (n > 32), the K-tiling threshold
+    // (k > 256 elems @4b) and the one-row / one-group degenerate corners.
+    let m = 1 + r.below(24) as u32;
+    let n = 1 + r.below(96) as u32;
+    let k = 1 + r.below(400) as u32;
+    LayerConfig::gemm_fused(&format!("pg{tag}"), m, n, k, r.below(2) == 0, r.below(2) == 0)
+}
+
+#[test]
+fn gemm_shards_are_disjoint_cover_the_matrix_and_sum_ops() {
+    let mut r = Lcg::new(0x6E33);
+    for tag in 0..200u64 {
+        let l = random_gemm(&mut r, tag);
+        let cores = 1 + r.below(9) as u32;
+        let plan = ShardPlan::plan(&l, cores);
+        assert!((1..=cores.max(1)).contains(&plan.active_cores()), "{l} cores={cores}");
+        assert_eq!(plan.ops_total(), l.ops(), "{l} cores={cores}: bias ops must split");
+        let mut n_cov = 0u32;
+        let mut m_cov = 0u32;
+        for s in &plan.shards {
+            assert!(s.layer.is_gemm(), "{l}: shard changed kind");
+            assert!(s.layer.macs() > 0, "{l} cores={cores}: empty shard");
+            match plan.strategy {
+                ShardStrategy::OutputChannels => {
+                    assert_eq!(s.layer.gemm_m(), l.gemm_m(), "{l}");
+                    n_cov += s.layer.gemm_n();
+                }
+                ShardStrategy::Rows => {
+                    assert_eq!(s.layer.gemm_n(), l.gemm_n(), "{l}");
+                    m_cov += s.layer.gemm_m();
+                }
+            }
+            assert_eq!(s.layer.gemm_k(), l.gemm_k(), "{l}: K never splits");
+        }
+        match plan.strategy {
+            ShardStrategy::OutputChannels => assert_eq!(n_cov, l.gemm_n(), "{l}"),
+            ShardStrategy::Rows => assert_eq!(m_cov, l.gemm_m(), "{l}"),
+        }
+    }
+}
+
+#[test]
+fn sharded_gemm_functional_outputs_are_bit_identical() {
+    let mut r = Lcg::new(0x6EFA);
+    let arch = Arch::default();
+    for tag in 0..10u64 {
+        // Small shapes: flat functional execution visits every MAC.
+        let m = 1 + r.below(10) as u32;
+        let n = 1 + r.below(80) as u32;
+        let k = 1 + r.below(320) as u32;
+        let l = LayerConfig::gemm(&format!("fg{tag}"), m, n, k);
+        let cores = 2 + r.below(4) as u32;
+        let acts = synth_acts(&l, Precision::Int4, 0xC0 + tag);
+        let wts = synth_wts(&l, Precision::Int4, 0xD0 + tag);
+        let single = run_functional(&l, Engine::Dimc, &acts, &wts, 4).unwrap().outputs;
+        let topo = ClusterTopology::from_arch(cores, &arch);
+        let clustered = run_functional_cluster(&l, &topo, &acts, &wts, 4).unwrap();
+        assert_eq!(clustered, single, "{l} on {cores} cores");
+    }
+}
+
 #[test]
 fn one_core_cluster_cycles_match_single_core() {
     let mut r = Lcg::new(0x1C0DE);

@@ -28,12 +28,38 @@ fn vtype(r: &mut Lcg) -> VType {
 }
 
 fn random_instr(r: &mut Lcg) -> Instr {
-    let alu_imm = [AluOp::Add, AluOp::Sll, AluOp::Srl, AluOp::Sra, AluOp::And, AluOp::Or,
-                   AluOp::Xor, AluOp::Slt, AluOp::Sltu];
-    let alu_rr = [AluOp::Add, AluOp::Sub, AluOp::Mul, AluOp::Sll, AluOp::Srl, AluOp::Sra,
-                  AluOp::And, AluOp::Or, AluOp::Xor, AluOp::Slt, AluOp::Sltu];
-    let conds = [BranchCond::Eq, BranchCond::Ne, BranchCond::Lt, BranchCond::Ge,
-                 BranchCond::Ltu, BranchCond::Geu];
+    let alu_imm = [
+        AluOp::Add,
+        AluOp::Sll,
+        AluOp::Srl,
+        AluOp::Sra,
+        AluOp::And,
+        AluOp::Or,
+        AluOp::Xor,
+        AluOp::Slt,
+        AluOp::Sltu,
+    ];
+    let alu_rr = [
+        AluOp::Add,
+        AluOp::Sub,
+        AluOp::Mul,
+        AluOp::Sll,
+        AluOp::Srl,
+        AluOp::Sra,
+        AluOp::And,
+        AluOp::Or,
+        AluOp::Xor,
+        AluOp::Slt,
+        AluOp::Sltu,
+    ];
+    let conds = [
+        BranchCond::Eq,
+        BranchCond::Ne,
+        BranchCond::Lt,
+        BranchCond::Ge,
+        BranchCond::Ltu,
+        BranchCond::Geu,
+    ];
     let eews = [8u8, 16, 32];
     match r.below(32) {
         0 => Instr::Lui { rd: reg(r), imm: r.below(1 << 20) as i32 },

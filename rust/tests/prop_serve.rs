@@ -80,6 +80,44 @@ fn every_admitted_request_completes_exactly_once() {
     }
 }
 
+/// Mixed CNN + transformer traffic: a resnet18/vit-b16 mix drains with
+/// exact conservation and causal accounting, and both models actually
+/// draw traffic (the serving tier must price transformer service times
+/// through the same cluster scheduler as CNNs).
+#[test]
+fn mixed_cnn_vit_traffic_conserves_requests() {
+    let zoo: Vec<Workload> = [("resnet18", 0.6), ("vit-b16", 0.4)]
+        .iter()
+        .map(|(name, w)| {
+            let m = dimc_rvv::workloads::zoo::lookup(name).unwrap();
+            Workload { name: m.name.to_string(), layers: m.layers, weight: *w }
+        })
+        .collect();
+    let weights: Vec<f64> = zoo.iter().map(|w| w.weight).collect();
+    let mut srv = server(2);
+    let policy = BatchPolicy { max_batch: 4, max_wait_cycles: 0 };
+    let roof = srv.mix_roofline(&zoo, policy.max_batch).unwrap();
+    let trace =
+        TraceConfig { rps: roof * 0.7, requests: 60, shape: TraceShape::Bursty, seed: 0x717 };
+    let rep = srv.serve_trace(&zoo, policy, &trace).unwrap();
+
+    let arrivals = generate(&trace, &weights, Arch::default().clock_hz);
+    let want: HashSet<(u64, usize)> = arrivals.iter().map(|r| (r.id, r.model)).collect();
+    let got: HashSet<(u64, usize)> = rep.completed.iter().map(|r| (r.id, r.model)).collect();
+    assert_eq!(rep.completed.len(), 60, "conservation");
+    assert_eq!(got, want, "completed set != admitted set");
+    for r in &rep.completed {
+        assert!(r.arrival <= r.dispatched && r.dispatched < r.completed, "causality");
+    }
+    // Both families saw traffic, and the transformer costs more per
+    // inference than the small CNN.
+    let vit = rep.completed.iter().filter(|r| r.model == 1).count();
+    assert!(vit > 0 && vit < 60, "mix degenerated: {vit}/60 vit requests");
+    let svc_cnn = srv.unbatched_latency(&zoo, 0).unwrap();
+    let svc_vit = srv.unbatched_latency(&zoo, 1).unwrap();
+    assert!(svc_vit > svc_cnn, "vit ({svc_vit}) should outweigh resnet18 ({svc_cnn})");
+}
+
 #[test]
 fn zero_load_latency_is_exactly_the_unbatched_cluster_latency() {
     let zoo = tiny_zoo();
@@ -177,8 +215,10 @@ fn identical_seed_reproduces_the_identical_report() {
     let b = server(4).serve_trace(&zoo, policy, &trace).unwrap();
     assert_eq!(a.completed.len(), b.completed.len());
     for (x, y) in a.completed.iter().zip(&b.completed) {
-        assert_eq!((x.id, x.model, x.arrival, x.dispatched, x.completed),
-                   (y.id, y.model, y.arrival, y.dispatched, y.completed));
+        assert_eq!(
+            (x.id, x.model, x.arrival, x.dispatched, x.completed),
+            (y.id, y.model, y.arrival, y.dispatched, y.completed)
+        );
     }
     assert_eq!(a.batches.len(), b.batches.len());
     assert_eq!(a.span_cycles, b.span_cycles);

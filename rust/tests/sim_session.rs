@@ -343,6 +343,72 @@ fn verify_hook_passes_on_every_backend_shape() {
 }
 
 // ------------------------------------------------------------------
+// transformer workloads end-to-end (acceptance: vit_b16 + mobilebert
+// through SingleCore, Cluster and Serving)
+// ------------------------------------------------------------------
+
+/// Single-core backend: the full transformer networks simulate with
+/// per-layer rows and GOPS, and the DIMC engine beats the baseline.
+#[test]
+fn transformers_run_end_to_end_on_the_single_core_backend() {
+    for name in ["vit_b16", "mobilebert"] {
+        let mut s = Session::builder().model(name).build().unwrap();
+        let rep = s.run(&RunSpec::Network).unwrap();
+        assert_eq!(rep.backend, "single-core", "{name}");
+        let want_layers = dimc_rvv::workloads::zoo::lookup(name).unwrap().layers.len();
+        assert_eq!(rep.layers.len(), want_layers, "{name}");
+        assert!(rep.cycles > 0 && rep.gops > 0.0, "{name}");
+        assert!(rep.speedup.unwrap() > 1.0, "{name} lost to the baseline");
+        for row in &rep.layers {
+            assert!(row.cycles > 0 && row.gops > 0.0, "{name}/{}", row.name);
+        }
+    }
+}
+
+/// Cluster backend: scheduling succeeds at 4 cores, the 1-core anchor in
+/// `verify()` proves 1-core cluster cycles exactly equal single-core
+/// cycles, and the functional probes (including the GEMM probe) are
+/// bit-identical to the single-core driver.
+#[test]
+fn transformers_run_end_to_end_on_the_cluster_backend() {
+    for name in ["vit_b16", "mobilebert"] {
+        let mut s = Session::builder().model(name).cores(4).build().unwrap();
+        let rep = s.run(&RunSpec::Network).unwrap();
+        assert_eq!(rep.backend, "cluster", "{name}");
+        assert!(rep.cycles > 0, "{name}");
+        assert!(rep.layers.iter().any(|r| r.cores_used > 1), "{name} never sharded");
+        let checks = s.verify().unwrap();
+        assert!(checks.iter().any(|c| c.name == "cluster:one-core-exact"), "{name}");
+        assert!(
+            checks.iter().any(|c| c.name.contains("vprobe_gemm")),
+            "{name}: GEMM probe missing from {checks:?}"
+        );
+        assert!(checks.iter().all(|c| c.ok), "{name}: {checks:?}");
+    }
+}
+
+/// Serving backend: transformer request traffic drains with conservation
+/// and a complete latency report.
+#[test]
+fn transformers_run_end_to_end_on_the_serving_backend() {
+    for name in ["vit_b16", "mobilebert"] {
+        let mut s = Session::builder()
+            .model(name)
+            .cores(2)
+            .rps(500.0)
+            .requests(24)
+            .seed(0x7F0)
+            .build()
+            .unwrap();
+        let rep = s.run(&RunSpec::Serve).unwrap();
+        assert_eq!(rep.backend, "serving", "{name}");
+        assert!(rep.checks_ok(), "{name}: {:?}", rep.checks);
+        assert_eq!(rep.serve.as_ref().unwrap().requests, 24, "{name}");
+        assert!(rep.latency.as_ref().unwrap().p99_ms > 0.0, "{name}");
+    }
+}
+
+// ------------------------------------------------------------------
 // report serialization + Engine re-export
 // ------------------------------------------------------------------
 
