@@ -1,0 +1,97 @@
+//! Interpreter-vs-analytic wall-clock on the zoo cluster scaling sweep
+//! — the perf trajectory of the Plan IR refactor.
+//!
+//! Runs the `repro cluster`-style sweep (every zoo model scheduled on
+//! 1/2/4/8 cores, batch 1) once per timing backend, asserts the two are
+//! **bit-for-bit cycle-exact** on every point, and records the
+//! wall-clock numbers in `BENCH_5.json` at the repository root so
+//! future PRs have a perf baseline to compare against.
+//!
+//! `--short` (or `DIMC_BENCH_SHORT=1`) sweeps a 3-model subset —
+//! faster, still writes the artifact (tagged `"short": true`).
+
+use dimc_rvv::sim::{JsonBuilder, Session, Timing};
+use dimc_rvv::workloads::zoo;
+use std::time::Instant;
+
+const CORE_COUNTS: [u32; 4] = [1, 2, 4, 8];
+
+/// Run the full sweep under one timing backend: per-model cluster
+/// scaling curves over [`CORE_COUNTS`], fresh sessions (cold caches) so
+/// the comparison is honest. Returns (seconds, per-model cycle points).
+fn sweep(models: &[&str], timing: Timing) -> (f64, Vec<(String, Vec<u64>)>) {
+    let t0 = Instant::now();
+    let mut points = Vec::with_capacity(models.len());
+    for m in models {
+        let mut session = Session::builder()
+            .model(m)
+            .cores(*CORE_COUNTS.last().unwrap())
+            .timing(timing)
+            .build()
+            .unwrap();
+        let curve = session.scaling_curve(&CORE_COUNTS).unwrap();
+        points.push((m.to_string(), curve.iter().map(|p| p.cycles).collect()));
+    }
+    (t0.elapsed().as_secs_f64(), points)
+}
+
+fn main() {
+    let short = std::env::args().any(|a| a == "--short")
+        || std::env::var("DIMC_BENCH_SHORT").is_ok_and(|v| v != "0");
+    let all = zoo::all_models();
+    let models: Vec<&str> = if short {
+        vec!["resnet18", "mobilenet-25-224", "vit-b16"]
+    } else {
+        all.iter().map(|m| m.name).collect()
+    };
+
+    println!(
+        "timing backends: {} models x cores {:?}, batch 1{}",
+        models.len(),
+        CORE_COUNTS,
+        if short { " (short)" } else { "" }
+    );
+    let (analytic_s, a_points) = sweep(&models, Timing::Analytic);
+    println!("  analytic:    {:>8.3} s", analytic_s);
+    let (interp_s, i_points) = sweep(&models, Timing::Interpreter);
+    println!("  interpreter: {:>8.3} s", interp_s);
+
+    assert_eq!(
+        a_points, i_points,
+        "timing backends disagree on the cluster scaling sweep"
+    );
+    let speedup = interp_s / analytic_s.max(1e-9);
+    println!("  speedup:     {speedup:>8.1}x (cycle-exact on every point)");
+
+    let mut j = JsonBuilder::new();
+    j.begin_obj();
+    j.field_str("bench", "timing_backends");
+    j.field_bool("short", short);
+    j.field_u64("models", models.len() as u64);
+    j.key("core_counts");
+    j.begin_arr();
+    for n in CORE_COUNTS {
+        j.num_u64(n as u64);
+    }
+    j.end_arr();
+    j.field_f64("interpreter_s", interp_s);
+    j.field_f64("analytic_s", analytic_s);
+    j.field_f64("speedup", speedup);
+    j.field_bool("cycle_exact", true);
+    j.key("cycles");
+    j.begin_obj();
+    for (model, pts) in &a_points {
+        j.key(model);
+        j.begin_arr();
+        for c in pts {
+            j.num_u64(*c);
+        }
+        j.end_arr();
+    }
+    j.end_obj();
+    j.end_obj();
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_5.json");
+    std::fs::write(path, j.finish() + "\n").expect("write BENCH_5.json");
+    println!("  wrote {path}");
+}

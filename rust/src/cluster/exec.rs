@@ -1,9 +1,12 @@
 //! The cluster execution engine.
 //!
-//! Timing: every shard of a [`ShardPlan`] is lowered and simulated by the
-//! unmodified single-core pipeline (`coordinator::driver::
-//! simulate_layer_with_arch` — compile, trace, scoreboard), then the
-//! per-shard cycle counts are reduced under the cluster model:
+//! Timing: every shard of a [`ShardPlan`] is lowered once
+//! (`coordinator::driver::compile_for` — instruction stream + Plan) and
+//! priced by the configured timing backend (`ClusterSim::timing`:
+//! the Plan-folding analytic model by default, the instruction
+//! interpreter on request — cycle-exact either way), with memory
+//! traffic read straight off the same Plan; then the per-shard cycle
+//! counts are reduced under the cluster model:
 //!
 //! ```text
 //! layer_cycles(plan) = max_i(shard_cycles_i)            # cores run concurrently
@@ -27,10 +30,9 @@
 
 use super::shard::{ShardPlan, ShardStrategy};
 use super::topology::ClusterTopology;
-use crate::arch::{Arch, DIMC_ROWS, DIMC_ROW_BYTES};
+use crate::arch::Arch;
 use crate::compiler::layer::{LayerConfig, LayerKind};
-use crate::compiler::pack::elems_per_tile;
-use crate::coordinator::driver::{run_functional, simulate_layer_with_arch, Engine};
+use crate::coordinator::driver::{compile_for, run_functional, timed_stats, Engine, Timing};
 use crate::dimc::Precision;
 use crate::pipeline::core::SimError;
 use std::collections::{HashMap, HashSet};
@@ -82,32 +84,56 @@ fn sim_key(l: &LayerConfig) -> SimKey {
     (kind, l.ich, l.och, l.kh, l.kw, l.ih, l.iw, l.stride, l.pad)
 }
 
-/// The cluster simulator: an [`Arch`], a precision, and a cache of shard
-/// simulations keyed by geometry. One instance can schedule many layers,
-/// models and topologies; balanced shard plans hit the cache heavily
-/// (each plan has at most two distinct shard shapes).
+/// The cluster simulator: an [`Arch`], a precision, a timing backend
+/// and a cache of shard simulations keyed by geometry. One instance can
+/// schedule many layers, models and topologies; balanced shard plans
+/// hit the cache heavily (each plan has at most two distinct shard
+/// shapes).
 pub struct ClusterSim {
     /// Timing knobs every shard simulation (and the bus model) uses.
     pub arch: Arch,
     /// Operand precision of the DIMC path.
     pub precision: Precision,
+    /// Which timing backend prices each shard (see [`ClusterSim::timing`]).
+    /// Private because the shard cache is not keyed by it: it is fixed at
+    /// construction ([`ClusterSim::with_timing`]) so a cached cycle count
+    /// can never have been priced by a different backend than requested.
+    timing: Timing,
     cache: HashMap<SimKey, (u64, u64)>, // -> (cycles, mem bytes)
 }
 
 impl ClusterSim {
     pub fn new(arch: Arch, precision: Precision) -> Self {
-        ClusterSim { arch, precision, cache: HashMap::new() }
+        Self::with_timing(arch, precision, Timing::default())
+    }
+
+    /// As [`ClusterSim::new`] with an explicit timing backend (default
+    /// [`Timing::Analytic`] — cycle-exact against the interpreter, and
+    /// what makes zoo-wide scaling sweeps fast; see
+    /// [`pipeline::analytic`](crate::pipeline::analytic)).
+    pub fn with_timing(arch: Arch, precision: Precision, timing: Timing) -> Self {
+        ClusterSim { arch, precision, timing, cache: HashMap::new() }
+    }
+
+    /// The timing backend pricing every shard simulation of this
+    /// instance (fixed at construction).
+    pub fn timing(&self) -> Timing {
+        self.timing
     }
 
     /// Simulate one (sub-)layer on a single DIMC core: cycles + memory
-    /// traffic, memoized by geometry.
+    /// traffic, memoized by geometry. One compile serves both numbers —
+    /// the timing backend prices the schedule and the traffic is read
+    /// straight off the layer's [`Plan`](crate::compiler::plan::Plan)
+    /// (no bespoke per-layer traffic formula).
     pub fn shard_sim(&mut self, l: &LayerConfig) -> Result<(u64, u64), SimError> {
         let key = sim_key(l);
         if let Some(&hit) = self.cache.get(&key) {
             return Ok(hit);
         }
-        let r = simulate_layer_with_arch(l, Engine::Dimc, self.precision, self.arch)?;
-        let v = (r.cycles, layer_mem_bytes(l, self.precision));
+        let c = compile_for(l, Engine::Dimc, self.precision);
+        let stats = timed_stats(&c, Engine::Dimc, self.precision, self.arch, self.timing)?;
+        let v = (stats.cycles, c.plan.mem_bytes());
         self.cache.insert(key, v);
         Ok(v)
     }
@@ -165,50 +191,22 @@ impl ClusterSim {
     }
 }
 
-/// Exact external-memory traffic (bytes moved over the VLSU port) of one
-/// DIMC-path layer, mirroring the mapper's emitted loads/stores
-/// (`compiler::mapper`): per-(group, tile) weight row images, the
-/// per-patch activation slice, psum spill/reload for chained tiles, and
-/// the nibble-packed output write-back. `DL.*`/`DC.*` traffic is
-/// VRF-internal and does not touch the bus.
+/// External-memory traffic (bytes moved over the VLSU port) of one
+/// DIMC-path layer, read off its compiled
+/// [`Plan`](crate::compiler::plan::Plan): per-(group, tile) weight row
+/// images, the per-patch activation slice, psum spill/reload for
+/// chained tiles, and the nibble-packed output write-back.
+/// `DL.*`/`DC.*` traffic is VRF-internal and does not touch the bus.
+/// (The closed-form per-layer formula that used to live here is gone —
+/// the Plan *is* the traffic model, derived from the emitted loads and
+/// stores, so it cannot drift from the mapper.)
+///
+/// This shim **compiles the layer on every call** to derive its Plan;
+/// in a loop over already-lowered layers, read
+/// [`Plan::mem_bytes`](crate::compiler::plan::Plan::mem_bytes) off the
+/// `CompiledLayer` instead (what [`ClusterSim::shard_sim`] does).
 pub fn layer_mem_bytes(l: &LayerConfig, p: Precision) -> u64 {
-    let bits = p.bits() as u64;
-    let patches = l.patches();
-    let tiles = l.tiles(p) as u64;
-    let groups = l.groups() as u64;
-    let k_pad = l.k_pad(p) as u64;
-    let ept = elems_per_tile(p) as u64;
-    let rows = DIMC_ROWS as u64;
-
-    // Weight row images: one 128-byte image per (active row, tile).
-    let mut bytes = l.och as u64 * tiles * DIMC_ROW_BYTES as u64;
-
-    for g in 0..groups {
-        let rows_g = (l.och as u64 - g * rows).min(rows);
-        let half_batches = rows_g.div_ceil(16);
-        // Per-patch psum spill / output bytes across the half-batches.
-        let mut psum = 0u64;
-        let mut outb = 0u64;
-        for h in 0..half_batches {
-            let rows_h = (rows_g - h * 16).min(16);
-            // e32/m4 accesses: 32 bytes per register-quad of psums.
-            psum += rows_h.min(8).div_ceil(4) * 32;
-            // final tile stores 16 nibble-packed results = 8 bytes.
-            outb += 8;
-        }
-        for t in 0..tiles {
-            let slice = (k_pad - t * ept).min(ept) * bits / 8;
-            let first = t == 0;
-            let last = t == tiles - 1;
-            let mut per_patch = slice;
-            if !first {
-                per_patch += psum; // reload chained partial sums
-            }
-            per_patch += if last { outb } else { psum }; // write-back
-            bytes += per_patch * patches;
-        }
-    }
-    bytes
+    compile_for(l, Engine::Dimc, p).plan.mem_bytes()
 }
 
 /// Run `l` functionally on the cluster: shard, execute every shard

@@ -12,7 +12,9 @@
 
 use super::layer::LayerConfig;
 use super::pack::{ich_pad8, k_pad8};
+use super::plan::CompiledLayer;
 use super::program::{Emitter, LayerProgram, MemLayout, PhaseKind, PhaseSpec};
+use crate::dimc::Precision;
 use crate::isa::{AluOp, Instr};
 
 /// Requantization shift applied by both paths (layer scale).
@@ -52,6 +54,17 @@ impl Geom {
 /// Compile `l` for the baseline RVV path.
 pub fn compile_baseline(l: &LayerConfig) -> LayerProgram {
     compile_baseline_with_shift(l, BASELINE_SHIFT)
+}
+
+/// Compile `l` for the baseline path and derive its [`Plan`]
+/// (`super::plan`) in one pass — the counterpart of
+/// [`super::mapper::compile_dimc_planned`]. The precision only scales
+/// DIMC MAC lanes, which the baseline has none of, so the Plan is
+/// precision-independent here.
+///
+/// [`Plan`]: super::plan::Plan
+pub fn compile_baseline_planned(l: &LayerConfig, shift: u8) -> CompiledLayer {
+    CompiledLayer::new(compile_baseline_with_shift(l, shift), Precision::Int4)
 }
 
 /// As [`compile_baseline`] with an explicit requantization shift.

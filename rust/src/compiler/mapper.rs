@@ -32,6 +32,7 @@
 
 use super::layer::LayerConfig;
 use super::pack::elems_per_tile;
+use super::plan::CompiledLayer;
 use super::program::{Emitter, LayerProgram, MemLayout, PhaseKind, PhaseSpec};
 use crate::arch::{DIMC_ROWS, DIMC_ROW_BYTES, DIMC_SECTOR_BYTES};
 use crate::dimc::Precision;
@@ -331,6 +332,14 @@ fn gen_patch(g: &Geom, grp: u32, t: u32, pidx: u64, rows_g: u32, width: u8) -> V
 /// same layer is simulated under several engines).
 pub fn compile_dimc_arc(l: &LayerConfig, p: Precision) -> Arc<LayerProgram> {
     Arc::new(compile_dimc(l, p))
+}
+
+/// Compile `l` for the DIMC path and derive its
+/// [`Plan`](super::plan::Plan) in one pass — the instruction stream for
+/// the interpreter plus the execution schedule for the analytic timing
+/// backend and the traffic/energy accounting (see [`super::plan`]).
+pub fn compile_dimc_planned(l: &LayerConfig, p: Precision) -> CompiledLayer {
+    CompiledLayer::new(compile_dimc(l, p), p)
 }
 
 #[cfg(test)]

@@ -10,13 +10,17 @@
 //! int8 stream the paper compares against (baseline min resolution 8 bit,
 //! DIMC max 4 bit — assumption 4). [`pack`] holds the bit-exact tensor
 //! packing shared by the code generators, the functional driver and the
-//! golden-model cross-check.
+//! golden-model cross-check. Lowering also derives a [`plan::Plan`] —
+//! the structured execution schedule the analytic timing backend and the
+//! traffic/energy accountants consume (see [`plan`]).
 
 pub mod baseline;
 pub mod layer;
 pub mod mapper;
 pub mod pack;
+pub mod plan;
 pub mod program;
 
 pub use layer::{LayerConfig, LayerKind};
+pub use plan::{CompiledLayer, Plan, PlanStep};
 pub use program::LayerProgram;

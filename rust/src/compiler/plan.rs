@@ -1,0 +1,313 @@
+//! The Plan IR: one compiled execution schedule shared by every
+//! machine-model consumer.
+//!
+//! Lowering a [`LayerConfig`](super::layer::LayerConfig) produces two
+//! coupled artefacts (see [`CompiledLayer`]): the [`LayerProgram`]
+//! instruction stream the interpreter executes, and a [`Plan`] — a
+//! structured schedule of *tile steps* (weight-tile loads, activation
+//! stream/compute sweeps, setup) derived from that same stream. Each
+//! step is annotated with its per-trip instruction-class counts, the
+//! operand bytes it moves over the VLSU memory port, and its MAC work,
+//! so the three consumers that used to re-derive the machine model
+//! independently now read one source of truth:
+//!
+//! * the **interpreter** ([`pipeline::trace`](crate::pipeline::trace))
+//!   keeps executing the `Instr` stream — the golden reference;
+//! * the **analytic timing backend**
+//!   ([`pipeline::analytic`](crate::pipeline::analytic)) folds the Plan
+//!   through the same scoreboard issue rules in O(steps), cycle-exact;
+//! * **traffic and energy accounting**
+//!   ([`cluster::exec`](crate::cluster::exec),
+//!   [`metrics::energy`](crate::metrics::energy)) read
+//!   [`Plan::mem_bytes`] / [`Plan::class_totals`] directly instead of
+//!   maintaining bespoke closed-form formulas.
+//!
+//! Steps reference deduplicated timing **shapes**: two steps share a
+//! shape when their bodies are identical modulo the `li`-materialized
+//! address constants (which cannot affect timing — scalar ALU latency is
+//! immediate-independent). A kernel with 16 groups x 18 tiles has 576
+//! phases but only a handful of shapes, which is what makes the analytic
+//! backend O(steps): its per-shape schedule solutions are computed once
+//! and replayed.
+
+use super::program::{LayerProgram, PhaseKind};
+use crate::dimc::Precision;
+use crate::isa::Instr;
+use crate::pipeline::core::class_index;
+use std::collections::HashMap;
+
+/// One step of a [`Plan`]: a loop of `trips` identical-shape bodies
+/// (one mapper phase), annotated with everything the analytic backend
+/// and the traffic/energy accountants need.
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    /// Diagnostic name (mirrors the phase name, e.g. `sweep g2 t1`).
+    pub name: String,
+    /// Step role (setup / weight-tile load / activation sweep).
+    pub kind: PhaseKind,
+    /// Loop trip count.
+    pub trips: u64,
+    /// Index into [`Plan::shapes`]: the step's canonical timing body.
+    pub shape: usize,
+    /// Per-trip instruction counts by class (indexed by
+    /// [`class_index`](crate::pipeline::core::class_index)).
+    pub class_counts: [u64; 8],
+    /// Per-trip bytes loaded over the VLSU/LSU memory port.
+    pub loaded_bytes: u64,
+    /// Per-trip bytes stored over the VLSU/LSU memory port.
+    pub stored_bytes: u64,
+    /// Per-trip MAC operations (array MACs for `DC.*`, `vl` lanes per
+    /// `vmacc.vv` on the baseline path).
+    pub macs: u64,
+}
+
+impl PlanStep {
+    /// Total instructions this step contributes.
+    pub fn instrs(&self) -> u64 {
+        self.trips * self.class_counts.iter().sum::<u64>()
+    }
+}
+
+/// The compiled execution schedule of one layer — the mid-level IR the
+/// analytic timing backend folds and the traffic/energy accountants
+/// read. Built alongside the instruction stream by
+/// [`Plan::from_program`]; annotations are *derived from the emitted
+/// instructions* (with the vector configuration tracked through the
+/// stream), so they can never drift from what the interpreter executes.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// The schedule, in execution order.
+    pub steps: Vec<PlanStep>,
+    /// Deduplicated representative timing bodies the steps index into:
+    /// one per *canonical* shape, where canonicalization zeroes the
+    /// `lui`/`addi` address immediates — the only per-trip/per-phase
+    /// variance the mapper emits, and provably timing-inert — so all
+    /// structurally identical phases share one body.
+    pub shapes: Vec<Vec<Instr>>,
+}
+
+/// Canonical timing form of a body: address-materialization immediates
+/// zeroed (they cannot steer timing or dependencies), everything else —
+/// registers, element widths, vector configuration, DIMC fields — kept.
+fn canonical(body: &[Instr]) -> Vec<Instr> {
+    body.iter()
+        .map(|i| match *i {
+            Instr::Lui { rd, .. } => Instr::Lui { rd, imm: 0 },
+            Instr::OpImm { op, rd, rs1, .. } => Instr::OpImm { op, rd, rs1, imm: 0 },
+            other => other,
+        })
+        .collect()
+}
+
+impl Plan {
+    /// Derive the Plan of a lowered program at `precision` (which sets
+    /// the DIMC array's MAC lanes per `DC.*`: 256 at 4-bit, 512 at
+    /// 2-bit, 1024 at 1-bit).
+    ///
+    /// The walk tracks `vsetivli` through the representative bodies in
+    /// program order, so every `vle`/`vse` is charged its true
+    /// `vl * eew / 8` bytes. All trips of a phase share one opcode/
+    /// register schedule (the invariant the trace engine already relies
+    /// on), so the representative body prices every trip.
+    pub fn from_program(prog: &LayerProgram, precision: Precision) -> Plan {
+        let lanes = precision.lanes() as u64;
+        let mut shapes: Vec<Vec<Instr>> = Vec::new();
+        let mut index: HashMap<Vec<Instr>, usize> = HashMap::new();
+        let mut steps = Vec::with_capacity(prog.phases.len());
+        let mut vl = 0u32;
+        for ph in &prog.phases {
+            let body = ph.body(0);
+            let mut class_counts = [0u64; 8];
+            let (mut loaded, mut stored, mut macs) = (0u64, 0u64, 0u64);
+            for i in &body {
+                class_counts[class_index(i.class())] += 1;
+                match *i {
+                    Instr::Vsetivli { uimm, vtype: vt, .. } => {
+                        vl = (uimm as u32).min(vt.vlmax());
+                    }
+                    Instr::Vle { eew, .. } | Instr::Vlse { eew, .. } => {
+                        loaded += vl as u64 * eew as u64 / 8;
+                    }
+                    Instr::Vse { eew, .. } => {
+                        stored += vl as u64 * eew as u64 / 8;
+                    }
+                    Instr::Lw { .. } => loaded += 4,
+                    Instr::Lbu { .. } => loaded += 1,
+                    Instr::Sw { .. } => stored += 4,
+                    Instr::Sb { .. } => stored += 1,
+                    Instr::DcP { .. } | Instr::DcF { .. } => macs += lanes,
+                    Instr::VmaccVV { .. } => macs += vl as u64,
+                    _ => {}
+                }
+            }
+            let canon = canonical(&body);
+            let next = shapes.len();
+            let shape = *index.entry(canon).or_insert(next);
+            if shape == next {
+                shapes.push(body);
+            }
+            steps.push(PlanStep {
+                name: ph.name.clone(),
+                kind: ph.kind,
+                trips: ph.trips,
+                shape,
+                class_counts,
+                loaded_bytes: loaded,
+                stored_bytes: stored,
+                macs,
+            });
+        }
+        Plan { steps, shapes }
+    }
+
+    /// Total external-memory traffic (bytes moved over the VLSU/LSU
+    /// port) of the whole layer — the quantity the cluster's shared-bus
+    /// contention model charges. `DL.*`/`DC.*` traffic is VRF-internal
+    /// and does not touch the bus.
+    pub fn mem_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.trips * (s.loaded_bytes + s.stored_bytes)).sum()
+    }
+
+    /// Total bytes loaded over the memory port.
+    pub fn loaded_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.trips * s.loaded_bytes).sum()
+    }
+
+    /// Total bytes stored over the memory port.
+    pub fn stored_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.trips * s.stored_bytes).sum()
+    }
+
+    /// Total instruction counts by class — what the interpreter's
+    /// [`RunStats::class_counts`](crate::pipeline::core::RunStats)
+    /// reports after executing the stream, computed without executing
+    /// anything (feeds [`metrics::energy`](crate::metrics::energy)).
+    pub fn class_totals(&self) -> [u64; 8] {
+        let mut totals = [0u64; 8];
+        for s in &self.steps {
+            for (t, c) in totals.iter_mut().zip(s.class_counts.iter()) {
+                *t += s.trips * c;
+            }
+        }
+        totals
+    }
+
+    /// Total instruction count (equals
+    /// [`LayerProgram::static_instrs`](super::program::LayerProgram::static_instrs)).
+    pub fn instrs(&self) -> u64 {
+        self.steps.iter().map(|s| s.instrs()).sum()
+    }
+
+    /// Total MAC work: array MACs per `DC.*` (256/512/1024 lanes at
+    /// 4/2/1 bit — *padded* array work, unlike
+    /// [`LayerConfig::macs`](super::layer::LayerConfig::macs) which
+    /// counts useful MACs), plus `vl` per baseline `vmacc.vv`.
+    pub fn macs(&self) -> u64 {
+        self.steps.iter().map(|s| s.trips * s.macs).sum()
+    }
+}
+
+/// A lowered layer: the instruction stream the interpreter runs plus
+/// the [`Plan`] every other consumer reads. Produced by
+/// [`mapper::compile_dimc_planned`](super::mapper::compile_dimc_planned),
+/// [`baseline::compile_baseline_planned`](super::baseline::compile_baseline_planned)
+/// or the engine-dispatching
+/// [`driver::compile_for`](crate::coordinator::driver::compile_for).
+pub struct CompiledLayer {
+    /// The phase-structured instruction stream (interpreter input).
+    pub prog: LayerProgram,
+    /// The derived execution schedule (analytic/traffic/energy input).
+    pub plan: Plan,
+}
+
+impl CompiledLayer {
+    /// Lower `l`'s already-compiled program into the coupled pair.
+    pub fn new(prog: LayerProgram, precision: Precision) -> Self {
+        let plan = Plan::from_program(&prog, precision);
+        CompiledLayer { prog, plan }
+    }
+}
+
+/// Convenience re-check: the Plan's step structure mirrors the program
+/// phase-for-phase (used by debug assertions and tests).
+pub fn plan_mirrors_program(plan: &Plan, prog: &LayerProgram) -> bool {
+    plan.steps.len() == prog.phases.len()
+        && plan
+            .steps
+            .iter()
+            .zip(prog.phases.iter())
+            .all(|(s, p)| s.trips == p.trips && s.name == p.name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::baseline::compile_baseline;
+    use crate::compiler::layer::LayerConfig;
+    use crate::compiler::mapper::compile_dimc;
+
+    fn dimc_plan(l: &LayerConfig) -> Plan {
+        Plan::from_program(&compile_dimc(l, Precision::Int4), Precision::Int4)
+    }
+
+    #[test]
+    fn plan_mirrors_phase_structure_and_instrs() {
+        let l = LayerConfig::conv("p", 80, 48, 2, 2, 9, 9, 1, 0); // 2 tiles, 2 groups
+        let prog = compile_dimc(&l, Precision::Int4);
+        let plan = Plan::from_program(&prog, Precision::Int4);
+        assert!(plan_mirrors_program(&plan, &prog));
+        assert_eq!(plan.instrs(), prog.static_instrs());
+    }
+
+    #[test]
+    fn shapes_deduplicate_across_groups_and_tiles() {
+        // 3 groups x 2 tiles = 12 wt/sweep phases + setup, but the
+        // per-(group, tile) bodies differ only in address constants.
+        let l = LayerConfig::conv("s", 80, 96, 2, 2, 9, 9, 1, 0);
+        let prog = compile_dimc(&l, Precision::Int4);
+        let plan = Plan::from_program(&prog, Precision::Int4);
+        assert_eq!(plan.steps.len(), 1 + 3 * 2 * 2);
+        assert!(
+            plan.shapes.len() < plan.steps.len() / 2,
+            "{} steps produced {} shapes — dedup regressed",
+            plan.steps.len(),
+            plan.shapes.len()
+        );
+    }
+
+    #[test]
+    fn weight_traffic_matches_row_images() {
+        // Weight loads alone: och * tiles * 128 bytes.
+        let l = LayerConfig::conv("w", 64, 256, 3, 3, 14, 14, 1, 1);
+        let plan = dimc_plan(&l);
+        let wt: u64 = plan
+            .steps
+            .iter()
+            .filter(|s| matches!(s.kind, PhaseKind::WeightLoad))
+            .map(|s| s.trips * (s.loaded_bytes + s.stored_bytes))
+            .sum();
+        assert_eq!(wt, 256 * l.tiles(Precision::Int4) as u64 * 128);
+    }
+
+    #[test]
+    fn class_totals_track_dc_work() {
+        let l = LayerConfig::conv("c", 64, 32, 1, 1, 8, 8, 1, 0);
+        let plan = dimc_plan(&l);
+        let totals = plan.class_totals();
+        // 64 patches x 32 rows of DC work, one tile.
+        assert_eq!(totals[6], 64 * 32);
+        assert_eq!(plan.macs(), 64 * 32 * 256);
+    }
+
+    #[test]
+    fn baseline_plans_have_no_dimc_work() {
+        let l = LayerConfig::fc("b", 64, 10);
+        let prog = compile_baseline(&l);
+        let plan = Plan::from_program(&prog, Precision::Int4);
+        let totals = plan.class_totals();
+        assert_eq!(totals[5] + totals[6], 0, "no DIMC instructions on the baseline");
+        // vmacc MACs: 10 outputs x 8 chunks x vl=8.
+        assert_eq!(plan.macs(), 10 * 8 * 8);
+        assert!(plan.mem_bytes() > 0);
+    }
+}

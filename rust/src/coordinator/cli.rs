@@ -19,10 +19,11 @@
 use crate::compiler::layer::LayerConfig;
 use crate::coordinator::driver::LayerResult;
 use crate::coordinator::{figures, verify};
+use crate::dimc::Precision;
 use crate::metrics::report::{render_table, summarize};
 use crate::sim::{
     write_load_point, write_scaling_point, Engine, JsonBuilder, LayerReportRow, RunCheck,
-    RunReport, RunSpec, Session,
+    RunReport, RunSpec, Session, Timing,
 };
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -37,11 +38,14 @@ pub fn usage() -> &'static str {
      fig9      grouping degradation sweep, ICH=32 KH=KW=2 (Fig. 9)\n\
      table1    comparison with prior IMC RISC-V designs (Table I)\n\
      zoo       450-layer model-zoo flexibility sweep (§V-D)\n\
+               [--precision int4|int2|int1] [--timing analytic|interpreter]\n\
      resnet50  end-to-end: golden verify + full-network simulation\n\
      verify    [--seeds N] simulator vs JAX/Pallas golden (PJRT)\n\
      simulate  --ich N --och N [--kh N --kw N --ih N --iw N --stride N\n\
                --pad N --fc] one custom layer on both engines; or\n\
-               --gemm --m N --n N --k N [--bias] [--relu] one dense GEMM\n\
+               --gemm --m N --n N --k N [--bias] [--relu] one dense GEMM;\n\
+               [--precision int4|int2|int1] sets the DIMC operand width,\n\
+               [--timing analytic|interpreter] the timing backend\n\
      transformers  transformer-vs-CNN utilization figure: per-model GOPS,\n\
                fraction of the 256-GOPS Int4 peak, baseline speedup and\n\
                4-core cluster utilization (resnet50, mobilenet, vit-b16,\n\
@@ -50,7 +54,8 @@ pub fn usage() -> &'static str {
      tiles     multi-tile scaling projection (future work §III/§VI)\n\
      cluster   [--cores N] [--batch B] [--model NAME] multi-core DIMC\n\
                scale-out: shard/batch NAME (default resnet50) over 1..N\n\
-               cores (default 8) and report the scaling curve\n\
+               cores (default 8) and report the scaling curve;\n\
+               [--precision int4|int2|int1] [--timing analytic|interpreter]\n\
      serve     [--cores N] [--rps R] [--trace uniform|bursty|ramp]\n\
                [--model NAME | --mix a=0.5,b=0.5] [--requests N]\n\
                [--max-batch B] [--max-wait CYC] [--seed S] [--sweep]\n\
@@ -97,6 +102,30 @@ where
     }
 }
 
+/// `--precision int4|int2|int1` (default Int4).
+fn parse_precision(m: &HashMap<String, String>) -> Result<Precision> {
+    match m.get("precision").map(String::as_str) {
+        None => Ok(Precision::Int4),
+        Some(v) => match v.to_ascii_lowercase().as_str() {
+            "int4" | "4" => Ok(Precision::Int4),
+            "int2" | "2" => Ok(Precision::Int2),
+            "int1" | "1" => Ok(Precision::Int1),
+            other => bail!("bad --precision `{other}`; expected int4, int2 or int1"),
+        },
+    }
+}
+
+/// `--timing analytic|interpreter` (default analytic).
+fn parse_timing(m: &HashMap<String, String>) -> Result<Timing> {
+    match m.get("timing").map(String::as_str) {
+        None => Ok(Timing::default()),
+        Some(v) => match Timing::parse(v) {
+            Some(t) => Ok(t),
+            None => bail!("bad --timing `{v}`; expected analytic or interpreter"),
+        },
+    }
+}
+
 pub fn main_with_args(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         println!("{}", usage());
@@ -111,7 +140,7 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
         "fig8" => fig8(json),
         "fig9" => fig9(json),
         "table1" => table1(json),
-        "zoo" => zoo(json),
+        "zoo" => zoo(&flags, json),
         "resnet50" => resnet50(json),
         "verify" => {
             let n = flag(&flags, "seeds", 3u32)? as u64;
@@ -398,8 +427,10 @@ fn table1(json: bool) -> Result<()> {
     Ok(())
 }
 
-fn zoo(json: bool) -> Result<()> {
-    let reports = figures::zoo_reports()?;
+fn zoo(flags: &HashMap<String, String>, json: bool) -> Result<()> {
+    let precision = parse_precision(flags)?;
+    let timing = parse_timing(flags)?;
+    let reports = figures::zoo_reports_at(precision, timing)?;
     if json {
         print_reports_json(&reports);
         return Ok(());
@@ -527,7 +558,10 @@ fn simulate(flags: &HashMap<String, String>, json: bool) -> Result<()> {
             flag(flags, "pad", 1u32)?,
         )
     };
-    let mut session = Session::builder().build()?;
+    let mut session = Session::builder()
+        .precision(parse_precision(flags)?)
+        .timing(parse_timing(flags)?)
+        .build()?;
     let report = session.run(&RunSpec::Layer(l.clone()))?;
     if json {
         println!("{}", report.to_json());
@@ -603,13 +637,13 @@ fn transformers(json: bool) -> Result<()> {
 }
 
 fn energy(json: bool) -> Result<()> {
+    use crate::coordinator::driver::compile_for;
     use crate::metrics::energy::EnergyModel;
     use crate::workloads::resnet::resnet50;
     let m = EnergyModel::default();
-    let mut dimc = Session::builder().build()?;
-    let mut base = Session::builder().engine(Engine::Baseline).build()?;
     if !json {
         println!("model-based energy estimate (paper future work; see metrics/energy.rs)");
+        println!("instruction counts read off the compiled Plan — no simulation pass");
         println!(
             "{:<14} {:>12} {:>12} {:>14} {:>14}",
             "layer",
@@ -627,10 +661,10 @@ fn energy(json: bool) -> Result<()> {
     j.key("layers");
     j.begin_arr();
     for l in resnet50() {
-        let rd = dimc.run(&RunSpec::Layer(l.clone()))?;
-        let rb = base.run(&RunSpec::Layer(l.clone()))?;
-        let ed = m.estimate(&as_layer_result(&rd.layers[0], Engine::Dimc, rd.clock_hz));
-        let eb = m.estimate(&as_layer_result(&rb.layers[0], Engine::Baseline, rb.clock_hz));
+        let cd = compile_for(&l, Engine::Dimc, Precision::Int4);
+        let cb = compile_for(&l, Engine::Baseline, Precision::Int4);
+        let ed = m.estimate_plan(&cd.plan, l.ops());
+        let eb = m.estimate_plan(&cb.plan, l.ops());
         d_tot += ed.total_uj;
         b_tot += eb.total_uj;
         ops += l.ops();
@@ -767,7 +801,15 @@ fn cluster(flags: &HashMap<String, String>, json: bool) -> Result<()> {
     let model_name = flags.get("model").map(String::as_str).unwrap_or("resnet50");
     let cores = flag(flags, "cores", 8u32)?.max(1);
     let batch = flag(flags, "batch", 1u32)?.max(1);
-    let mut session = Session::builder().model(model_name).cores(cores).batch(batch).build()?;
+    let precision = parse_precision(flags)?;
+    let timing = parse_timing(flags)?;
+    let mut session = Session::builder()
+        .model(model_name)
+        .cores(cores)
+        .batch(batch)
+        .precision(precision)
+        .timing(timing)
+        .build()?;
     let arch = session.config().arch;
 
     // Sweep the powers of two up to the requested core count.
@@ -781,11 +823,13 @@ fn cluster(flags: &HashMap<String, String>, json: bool) -> Result<()> {
 
     if !json {
         println!(
-            "cluster scale-out: {} x {} DIMC-enhanced cores, batch {} \
-             (shared bus {} B/cyc, barrier {} cyc)",
+            "cluster scale-out: {} x {} DIMC-enhanced cores, batch {}, {}-bit DIMC, \
+             {} timing (shared bus {} B/cyc, barrier {} cyc)",
             model_name,
             cores,
             batch,
+            precision.bits(),
+            timing.as_str(),
             arch.cluster_bus_bytes,
             arch.cluster_barrier_cycles
         );

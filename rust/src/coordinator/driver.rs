@@ -16,12 +16,16 @@
 //! re-exported (and green) for one release as thin shims.
 
 use crate::arch::Arch;
-use crate::compiler::baseline::{compile_baseline_with_shift, ref_requant_u8, BASELINE_SHIFT};
+use crate::compiler::baseline::{
+    compile_baseline_planned, compile_baseline_with_shift, ref_requant_u8, BASELINE_SHIFT,
+};
 use crate::compiler::layer::LayerConfig;
-use crate::compiler::mapper::compile_dimc;
+use crate::compiler::mapper::{compile_dimc, compile_dimc_planned};
 use crate::compiler::pack;
+use crate::compiler::plan::CompiledLayer;
 use crate::compiler::program::LayerProgram;
 use crate::dimc::{DimcConfig, Precision};
+use crate::pipeline::analytic::analytic_cycles;
 use crate::pipeline::core::{Core, RunStats, SimError};
 use crate::pipeline::trace::trace_cycles;
 
@@ -29,6 +33,11 @@ use crate::pipeline::trace::trace_cycles;
 /// [`crate::sim::Engine`] (the façade owns engine selection); this
 /// re-export keeps the historical path working.
 pub use crate::sim::Engine;
+
+/// Which timing backend prices the schedule (see [`crate::sim::Timing`];
+/// re-exported here next to [`Engine`] since the driver dispatches on
+/// both).
+pub use crate::sim::Timing;
 
 /// Timing result of one layer on one engine.
 #[derive(Debug, Clone)]
@@ -65,13 +74,26 @@ impl LayerResult {
 
 /// Compile `l` for `engine` at the default precision (Int4 / int8).
 pub fn compile(l: &LayerConfig, engine: Engine) -> LayerProgram {
+    compile_for(l, engine, Precision::Int4).prog
+}
+
+/// Lower `l` for `engine` at `precision` into the coupled
+/// [`CompiledLayer`] pair — the instruction stream plus its
+/// [`Plan`](crate::compiler::plan::Plan). The one engine-dispatching
+/// compile helper; the per-layer drivers here and the cluster's shard
+/// simulator ([`cluster::exec`](crate::cluster::exec)) all route
+/// through it.
+pub fn compile_for(l: &LayerConfig, engine: Engine, precision: Precision) -> CompiledLayer {
     match engine {
-        Engine::Dimc => compile_dimc(l, Precision::Int4),
-        Engine::Baseline => compile_baseline_with_shift(l, BASELINE_SHIFT),
+        Engine::Dimc => compile_dimc_planned(l, precision),
+        Engine::Baseline => compile_baseline_planned(l, BASELINE_SHIFT),
     }
 }
 
-fn fresh_core_with(arch: Arch, engine: Engine, precision: Precision) -> Core {
+/// A fresh core configured for `engine` at `precision` under `arch` —
+/// the one core-construction helper shared by the per-layer drivers and
+/// every interpreter-timed backend.
+pub fn fresh_core(arch: Arch, engine: Engine, precision: Precision) -> Core {
     let mut core = Core::new(arch);
     if engine == Engine::Dimc {
         core.dimc.cfg = DimcConfig {
@@ -84,8 +106,25 @@ fn fresh_core_with(arch: Arch, engine: Engine, precision: Precision) -> Core {
     core
 }
 
-fn fresh_core(engine: Engine, precision: Precision) -> Core {
-    fresh_core_with(Arch::default(), engine, precision)
+/// Price an already-compiled layer under `timing`: interpret the
+/// instruction stream (trace engine over a fresh timing-only core) or
+/// fold the Plan analytically — bit-for-bit the same
+/// [`RunStats`](crate::pipeline::core::RunStats) either way.
+pub fn timed_stats(
+    c: &CompiledLayer,
+    engine: Engine,
+    precision: Precision,
+    arch: Arch,
+    timing: Timing,
+) -> Result<RunStats, SimError> {
+    match timing {
+        Timing::Interpreter => {
+            let mut core = fresh_core(arch, engine, precision);
+            core.timing_only = true; // data payload never steers mapper timing
+            trace_cycles(&mut core, &c.prog.rep_phases())
+        }
+        Timing::Analytic => analytic_cycles(&c.plan, &arch),
+    }
 }
 
 /// Timing simulation (trace engine, data-free).
@@ -107,20 +146,34 @@ pub fn simulate_layer_at(
 
 /// Timing simulation under an explicit architecture configuration —
 /// the entry point of the ablation studies (issue width, memory latency,
-/// DIMC pipeline depth).
+/// DIMC pipeline depth). Always prices on the interpreter; prefer
+/// [`simulate_layer_timed`] (or a [`Session`](crate::sim::Session) with
+/// its `timing` knob) to pick the backend.
 pub fn simulate_layer_with_arch(
     l: &LayerConfig,
     engine: Engine,
     precision: Precision,
     arch: Arch,
 ) -> Result<LayerResult, SimError> {
-    let prog = match engine {
-        Engine::Dimc => compile_dimc(l, precision),
-        Engine::Baseline => compile_baseline_with_shift(l, BASELINE_SHIFT),
-    };
-    let mut core = fresh_core_with(arch, engine, precision);
-    core.timing_only = true; // data payload never steers mapper timing
-    let stats = trace_cycles(&mut core, &prog.rep_phases())?;
+    simulate_layer_timed(l, engine, precision, arch, Timing::Interpreter)
+}
+
+/// Timing simulation with an explicit timing backend: compile once,
+/// price via the interpreter or the Plan-folding analytic model. The
+/// two backends return identical numbers (cycle-exactness is enforced
+/// by `rust/tests/prop_plan.rs` and [`Session::verify`]); `Analytic` is
+/// orders of magnitude faster on sweeps.
+///
+/// [`Session::verify`]: crate::sim::Session::verify
+pub fn simulate_layer_timed(
+    l: &LayerConfig,
+    engine: Engine,
+    precision: Precision,
+    arch: Arch,
+    timing: Timing,
+) -> Result<LayerResult, SimError> {
+    let c = compile_for(l, engine, precision);
+    let stats = timed_stats(&c, engine, precision, arch, timing)?;
     Ok(LayerResult {
         name: l.name.clone(),
         engine,
@@ -128,7 +181,7 @@ pub fn simulate_layer_with_arch(
         instret: stats.instret,
         ops: l.ops(),
         class_counts: stats.class_counts,
-        clock_hz: core.arch.clock_hz,
+        clock_hz: arch.clock_hz,
     })
 }
 
@@ -153,7 +206,7 @@ pub fn run_functional(
     shift: u8,
 ) -> Result<FunctionalRun, SimError> {
     let precision = Precision::Int4;
-    let mut core = fresh_core(engine, precision);
+    let mut core = fresh_core(Arch::default(), engine, precision);
     core.dimc.cfg.requant_shift = shift;
     let prog = match engine {
         Engine::Dimc => compile_dimc(l, precision),
@@ -284,13 +337,30 @@ mod tests {
         for engine in [Engine::Dimc, Engine::Baseline] {
             let traced = simulate_layer(&l, engine).unwrap();
             let prog = compile(&l, engine);
-            let mut core = fresh_core(engine, Precision::Int4);
+            let mut core = fresh_core(Arch::default(), engine, Precision::Int4);
             let flat = prog.flatten();
             let stats = core.run(&flat, u64::MAX).unwrap();
             // flat has one extra Halt instruction
             assert_eq!(traced.instret + 1, stats.instret, "{engine:?}");
             let d = traced.cycles.abs_diff(stats.cycles);
             assert!(d <= 2, "{engine:?}: trace {} vs flat {}", traced.cycles, stats.cycles);
+        }
+    }
+
+    #[test]
+    fn analytic_timing_matches_interpreter() {
+        // The two timing backends must be bit-for-bit interchangeable on
+        // both engines (the deep property test lives in prop_plan.rs).
+        let l = LayerConfig::conv("at", 80, 48, 2, 2, 9, 9, 1, 0);
+        for engine in [Engine::Dimc, Engine::Baseline] {
+            let arch = Arch::default();
+            let a = simulate_layer_timed(&l, engine, Precision::Int4, arch, Timing::Analytic)
+                .unwrap();
+            let i = simulate_layer_timed(&l, engine, Precision::Int4, arch, Timing::Interpreter)
+                .unwrap();
+            assert_eq!(a.cycles, i.cycles, "{engine:?}");
+            assert_eq!(a.instret, i.instret, "{engine:?}");
+            assert_eq!(a.class_counts, i.class_counts, "{engine:?}");
         }
     }
 

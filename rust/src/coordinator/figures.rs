@@ -281,11 +281,28 @@ pub struct ZooSummary {
     pub dimc_wins: usize,
 }
 
-/// One façade network report per zoo model.
+/// One façade network report per zoo model (Int4, analytic timing).
 pub fn zoo_reports() -> Result<Vec<RunReport>, SessionError> {
+    zoo_reports_at(crate::dimc::Precision::Int4, crate::sim::Timing::default())
+}
+
+/// One façade network report per zoo model at an explicit DIMC operand
+/// precision and timing backend — what `repro zoo --precision int2
+/// --timing interpreter` drives.
+pub fn zoo_reports_at(
+    precision: crate::dimc::Precision,
+    timing: crate::sim::Timing,
+) -> Result<Vec<RunReport>, SessionError> {
     zoo::all_models()
         .iter()
-        .map(|m| Session::builder().model(m.name).build()?.run(&RunSpec::Network))
+        .map(|m| {
+            Session::builder()
+                .model(m.name)
+                .precision(precision)
+                .timing(timing)
+                .build()?
+                .run(&RunSpec::Network)
+        })
         .collect()
 }
 

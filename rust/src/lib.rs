@@ -18,11 +18,16 @@
 //! * [`dimc`] — a bit-exact functional + timing model of the DIMC tile.
 //! * [`pipeline`] — the cycle-approximate core simulator: in-order issue,
 //!   scoreboard hazards, per-FU structural conflicts, fixed-latency
-//!   external memory, and a loop-nest trace engine for large layers.
+//!   external memory, a loop-nest trace engine for large layers, and the
+//!   [`pipeline::analytic`] backend that folds a compiled Plan through
+//!   the same scoreboard rules cycle-exactly in O(steps).
 //! * [`compiler`] — the layer-to-instruction-stream mapper (DIMC path with
 //!   tiling and grouping, and the baseline pure-RVV int8 path). Layers are
 //!   conv, FC or dense GEMM (`LayerConfig::gemm`) — the transformer
 //!   primitive, mapped as K-dim weight tiling + N-dim kernel grouping.
+//!   Lowering also emits the [`compiler::plan::Plan`] execution schedule
+//!   (tile steps + traffic/ops annotations) the analytic backend, the
+//!   cluster traffic model and the energy model all read.
 //! * [`workloads`] — layer tables for ResNet-50/18, AlexNet, VGG16,
 //!   Inception-v1, DenseNet-121, EfficientNet-B0 and MobileNet-v1, plus
 //!   the transformer workloads `vit-b16` (ViT-Base/16) and `mobilebert`

@@ -11,6 +11,7 @@
 //! documented estimates — the *relative* DIMC-vs-baseline numbers carry
 //! the architectural content (energy goes where instructions go).
 
+use crate::compiler::plan::Plan;
 use crate::coordinator::driver::LayerResult;
 use crate::pipeline::core::class_index;
 use crate::isa::InstrClass;
@@ -75,6 +76,23 @@ impl EnergyModel {
 
     /// Fold a layer's instruction-class counts into an energy estimate.
     pub fn estimate(&self, r: &LayerResult) -> EnergyReport {
+        self.estimate_counts(&r.class_counts, r.ops)
+    }
+
+    /// Estimate energy straight from a compiled
+    /// [`Plan`](crate::compiler::plan::Plan): the Plan's class totals
+    /// equal what the interpreter would retire, so no simulation pass is
+    /// needed at all (`ops` is the layer's useful operation count, as in
+    /// [`LayerConfig::ops`](crate::compiler::layer::LayerConfig::ops)).
+    pub fn estimate_plan(&self, plan: &Plan, ops: u64) -> EnergyReport {
+        self.estimate_counts(&plan.class_totals(), ops)
+    }
+
+    /// Fold raw per-class instruction counts (indexed by
+    /// [`class_index`](crate::pipeline::core::class_index)) into an
+    /// energy estimate — the primitive behind [`EnergyModel::estimate`]
+    /// and [`EnergyModel::estimate_plan`].
+    pub fn estimate_counts(&self, class_counts: &[u64; 8], ops: u64) -> EnergyReport {
         let classes = [
             InstrClass::Scalar,
             InstrClass::Branch,
@@ -88,7 +106,7 @@ impl EnergyModel {
         let mut total_pj = 0.0;
         let mut compute_pj = 0.0;
         for c in classes {
-            let e = r.class_counts[class_index(c)] as f64 * self.class_pj(c);
+            let e = class_counts[class_index(c)] as f64 * self.class_pj(c);
             total_pj += e;
             if matches!(c, InstrClass::DimcCompute | InstrClass::VectorAlu) {
                 compute_pj += e;
@@ -97,7 +115,7 @@ impl EnergyModel {
         let total_j = total_pj * 1e-12;
         EnergyReport {
             total_uj: total_j * 1e6,
-            tops_per_watt: r.ops as f64 / total_j / 1e12,
+            tops_per_watt: ops as f64 / total_j / 1e12,
             compute_fraction: compute_pj / total_pj.max(1e-12),
         }
     }
@@ -140,6 +158,21 @@ mod tests {
             d.tops_per_watt
         );
         assert!(d.compute_fraction > 0.4);
+    }
+
+    #[test]
+    fn plan_estimate_equals_simulated_estimate() {
+        use crate::coordinator::driver::compile_for;
+        use crate::dimc::Precision;
+        // The Plan's class totals equal the interpreter's retirement
+        // counts, so the no-simulation estimate must match exactly.
+        let m = EnergyModel::default();
+        let l = layer();
+        let sim = m.estimate(&simulate_layer(&l, Engine::Dimc).unwrap());
+        let c = compile_for(&l, Engine::Dimc, Precision::Int4);
+        let plan = m.estimate_plan(&c.plan, l.ops());
+        assert_eq!(sim.total_uj.to_bits(), plan.total_uj.to_bits());
+        assert_eq!(sim.tops_per_watt.to_bits(), plan.tops_per_watt.to_bits());
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! The analytic timing backend: fold a compiled [`Plan`] through the
+//! scoreboard issue/stall model in O(steps) — **cycle-exact**, not
+//! approximate.
+//!
+//! The interpreter prices a layer by executing its instruction stream:
+//! every live trip runs the functional model plus [`Scoreboard::issue`].
+//! But mapper timing is *data-independent* — an instruction's stall
+//! behavior depends only on its fields, the vector configuration (set
+//! exclusively by `vsetivli` in generated code) and the scoreboard — so
+//! the same cycle count can be computed by folding the Plan's step
+//! bodies through the *identical* issue rules with no architectural
+//! state at all, and the fold can be memoized:
+//!
+//! 1. each step's body is walked on a bare [`Scoreboard`] through the
+//!    same steady-state extrapolator the trace engine uses
+//!    ([`trace::run_phase_extrapolated`](super::trace)), so per-step
+//!    cycles match the interpreter by construction (same II detection,
+//!    same rigid fast-forward);
+//! 2. whole steps are memoized as **transfer functions**: the cycle
+//!    delta and outbound scoreboard of a step depend only on its timing
+//!    shape, its trip count, and the *normalized* inbound state (all
+//!    ready/free times expressed relative to the issue front; times at
+//!    or below it can never stall anything and collapse to zero). The
+//!    mapper's `groups x tiles` loop re-enters the same few normalized
+//!    states almost immediately, so a 576-phase layer costs a handful
+//!    of live walks plus 570 hash lookups.
+//!
+//! Exactness rests on two invariants the interpreter already relies on
+//! (property-tested in `rust/tests/prop_timing.rs` and
+//! `rust/tests/prop_plan.rs`): all trips of a phase share one
+//! opcode/register schedule, and scoreboard evolution is translation-
+//! invariant (shifting every absolute time by a constant shifts the
+//! outcome by the same constant — [`Scoreboard::issue`] only ever
+//! compares and adds times).
+
+use crate::arch::{Arch, NUM_VREGS};
+use crate::compiler::plan::{Plan, PlanStep};
+use crate::isa::{Instr, VType};
+use crate::pipeline::core::{RunStats, Scoreboard, SimError};
+use crate::pipeline::latency::{VCtx, NUM_FUS};
+use crate::pipeline::trace::{run_phase_extrapolated, SteadyRunner};
+use std::collections::HashMap;
+
+/// Scoreboard state normalized to the issue front (`last_issue`): every
+/// absolute time is stored as `saturating_sub(last_issue)`. Times at or
+/// below the front are all equivalent (they can never bind an issue
+/// decision — issue never moves backwards), so they collapse to residue
+/// 0 and unrelated histories that will time identically hash
+/// identically.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct NormState {
+    issued_in_cycle: u64,
+    xreg: [u64; 32],
+    vreg: [u64; NUM_VREGS],
+    fu: [u64; NUM_FUS],
+    dimc: u64,
+    vcfg: u64,
+    max_completion: u64,
+    vl: u32,
+    vtype: VType,
+}
+
+/// Cached effect of one step: how far the issue front advanced and the
+/// normalized state it left behind.
+#[derive(Clone)]
+struct StepEffect {
+    d_issue: u64,
+    out: NormState,
+}
+
+/// The analytic machine: a bare scoreboard plus the tracked vector
+/// configuration — no register file, no memory, no DIMC tile.
+struct AnalyticSim<'a> {
+    arch: &'a Arch,
+    sb: Scoreboard,
+    vl: u32,
+    vtype: VType,
+    stats: RunStats,
+    cache: HashMap<(usize, u64, NormState), StepEffect>,
+}
+
+impl<'a> AnalyticSim<'a> {
+    fn new(arch: &'a Arch) -> Self {
+        AnalyticSim {
+            arch,
+            sb: Scoreboard::default(),
+            vl: 0,
+            vtype: VType::new(8, 1),
+            stats: RunStats::default(),
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Advance the machine by one instruction: track `vsetivli` exactly
+    /// as the interpreter's functional step does, then issue on the
+    /// shared scoreboard. Rejects anything whose timing would need
+    /// architectural state (control flow, register-AVL `vsetvli`) —
+    /// generated plan bodies never contain those.
+    fn step(&mut self, i: &Instr) -> Result<(), SimError> {
+        match *i {
+            Instr::Vsetivli { uimm, vtype, .. } => {
+                self.vtype = vtype;
+                self.vl = (uimm as u32).min(vtype.vlmax());
+            }
+            Instr::Vsetvli { .. }
+            | Instr::Branch { .. }
+            | Instr::Jal { .. }
+            | Instr::Jalr { .. }
+            | Instr::Halt => {
+                return Err(SimError::Fault(format!(
+                    "analytic timing cannot fold `{i}`: plan bodies must be \
+                     straight-line with immediate vector configuration"
+                )));
+            }
+            _ => {}
+        }
+        let v = VCtx { vl: self.vl, sew: self.vtype.sew };
+        self.sb.issue(i, self.arch, &v, false);
+        Ok(())
+    }
+
+    /// Normalize the current state to the issue front.
+    fn norm(&self) -> NormState {
+        let b = self.sb.last_issue;
+        let r = |t: u64| t.saturating_sub(b);
+        NormState {
+            issued_in_cycle: self.sb.issued_in_cycle,
+            xreg: self.sb.xreg_ready.map(r),
+            vreg: self.sb.vreg_ready.map(r),
+            fu: self.sb.fu_free.map(r),
+            dimc: r(self.sb.dimc_state_ready),
+            vcfg: r(self.sb.vcfg_ready),
+            max_completion: r(self.sb.max_completion),
+            vl: self.vl,
+            vtype: self.vtype,
+        }
+    }
+
+    /// Replay a cached transfer function from the current state.
+    fn apply(&mut self, e: &StepEffect) {
+        let base = self.sb.last_issue + e.d_issue;
+        self.sb.last_issue = base;
+        self.sb.issued_in_cycle = e.out.issued_in_cycle;
+        for (t, r) in self.sb.xreg_ready.iter_mut().zip(e.out.xreg.iter()) {
+            *t = base + r;
+        }
+        for (t, r) in self.sb.vreg_ready.iter_mut().zip(e.out.vreg.iter()) {
+            *t = base + r;
+        }
+        for (t, r) in self.sb.fu_free.iter_mut().zip(e.out.fu.iter()) {
+            *t = base + r;
+        }
+        self.sb.dimc_state_ready = base + e.out.dimc;
+        self.sb.vcfg_ready = base + e.out.vcfg;
+        self.sb.max_completion = base + e.out.max_completion;
+        self.vl = e.out.vl;
+        self.vtype = e.out.vtype;
+    }
+
+    /// Run (or replay) one plan step.
+    fn run_step(&mut self, step: &PlanStep, body: &[Instr]) -> Result<(), SimError> {
+        // Instruction accounting is per-trip-identical whether the step
+        // is walked live, extrapolated, or replayed from the cache.
+        for (t, c) in self.stats.class_counts.iter_mut().zip(step.class_counts.iter()) {
+            *t += step.trips * c;
+        }
+        self.stats.instret += step.trips * body.len() as u64;
+
+        let key = (step.shape, step.trips, self.norm());
+        if let Some(e) = self.cache.get(&key).cloned() {
+            self.apply(&e);
+            return Ok(());
+        }
+        let start_issue = self.sb.last_issue;
+        run_phase_extrapolated(&mut StepRunner { sim: self, body }, step.trips)?;
+        let d_issue = self.sb.last_issue - start_issue;
+        self.cache.insert(key, StepEffect { d_issue, out: self.norm() });
+        Ok(())
+    }
+
+    fn finish(mut self) -> RunStats {
+        self.stats.cycles = self.sb.max_completion;
+        self.stats
+    }
+}
+
+/// [`SteadyRunner`] over the bare scoreboard: timing-only live trips;
+/// skips shift the scoreboard rigidly (accounting happens at step
+/// granularity in [`AnalyticSim::run_step`]).
+struct StepRunner<'a, 'b> {
+    sim: &'a mut AnalyticSim<'b>,
+    body: &'a [Instr],
+}
+
+impl SteadyRunner for StepRunner<'_, '_> {
+    fn run_body(&mut self) -> Result<(), SimError> {
+        for i in self.body {
+            self.sim.step(i)?;
+        }
+        Ok(())
+    }
+
+    fn last_issue(&self) -> u64 {
+        self.sim.sb.last_issue
+    }
+
+    fn skip(&mut self, _trips: u64, delta: u64) {
+        self.sim.sb.shift(delta);
+    }
+}
+
+/// Fold `plan` through the issue/stall model under `arch` and return
+/// the same [`RunStats`] the interpreter would: identical cycles,
+/// instructions retired and per-class counts (asserted layer-by-layer
+/// across the zoo in `rust/tests/prop_plan.rs`).
+pub fn analytic_cycles(plan: &Plan, arch: &Arch) -> Result<RunStats, SimError> {
+    let mut sim = AnalyticSim::new(arch);
+    for step in &plan.steps {
+        sim.run_step(step, &plan.shapes[step.shape])?;
+    }
+    Ok(sim.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::layer::LayerConfig;
+    use crate::compiler::mapper::compile_dimc_planned;
+    use crate::dimc::{DimcConfig, Precision};
+    use crate::pipeline::core::Core;
+    use crate::pipeline::trace::trace_cycles;
+
+    fn interp(l: &LayerConfig, p: Precision) -> RunStats {
+        let c = compile_dimc_planned(l, p);
+        let mut core = Core::new(Arch::default());
+        core.dimc.cfg = DimcConfig { precision: p, ..core.dimc.cfg };
+        core.timing_only = true;
+        trace_cycles(&mut core, &c.prog.rep_phases()).unwrap()
+    }
+
+    fn check(l: &LayerConfig, p: Precision) {
+        let c = compile_dimc_planned(l, p);
+        let a = analytic_cycles(&c.plan, &Arch::default()).unwrap();
+        let i = interp(l, p);
+        assert_eq!(a.cycles, i.cycles, "{l} @{p:?}: analytic != interpreter cycles");
+        assert_eq!(a.instret, i.instret, "{l} @{p:?}");
+        assert_eq!(a.class_counts, i.class_counts, "{l} @{p:?}");
+    }
+
+    #[test]
+    fn exact_on_the_canonical_shapes() {
+        for l in [
+            LayerConfig::conv("plain", 64, 32, 1, 1, 8, 8, 1, 0),
+            LayerConfig::conv("tiled", 80, 8, 2, 2, 4, 4, 1, 0),
+            LayerConfig::conv("grouped", 16, 96, 2, 2, 6, 6, 1, 0),
+            LayerConfig::conv("strided", 8, 16, 3, 3, 13, 13, 2, 1),
+            LayerConfig::fc("fc", 300, 40),
+            LayerConfig::gemm("gemm", 13, 96, 320),
+        ] {
+            check(&l, Precision::Int4);
+        }
+    }
+
+    #[test]
+    fn exact_at_every_precision() {
+        let l = LayerConfig::conv("p", 80, 48, 2, 2, 9, 9, 1, 0);
+        for p in [Precision::Int4, Precision::Int2, Precision::Int1] {
+            check(&l, p);
+        }
+    }
+
+    #[test]
+    fn step_cache_hits_across_groups() {
+        // 3 groups x 2 tiles: after the first (group, tile) pair the
+        // remaining steps must replay from the transfer-function cache.
+        let l = LayerConfig::conv("c", 80, 96, 2, 2, 9, 9, 1, 0);
+        let c = compile_dimc_planned(&l, Precision::Int4);
+        let arch = Arch::default();
+        let mut sim = AnalyticSim::new(&arch);
+        for step in &c.plan.steps {
+            sim.run_step(step, &c.plan.shapes[step.shape]).unwrap();
+        }
+        assert!(
+            sim.cache.len() < c.plan.steps.len(),
+            "{} cold walks for {} steps — transfer cache never hit",
+            sim.cache.len(),
+            c.plan.steps.len()
+        );
+    }
+
+    #[test]
+    fn rejects_control_flow() {
+        let plan = Plan {
+            steps: vec![PlanStep {
+                name: "bad".into(),
+                kind: crate::compiler::program::PhaseKind::Setup,
+                trips: 1,
+                shape: 0,
+                class_counts: [0; 8],
+                loaded_bytes: 0,
+                stored_bytes: 0,
+                macs: 0,
+            }],
+            shapes: vec![vec![Instr::Jal { rd: 0, off: -4 }]],
+        };
+        assert!(analytic_cycles(&plan, &Arch::default()).is_err());
+    }
+}

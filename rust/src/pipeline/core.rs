@@ -72,6 +72,77 @@ impl Default for Scoreboard {
 }
 
 impl Scoreboard {
+    /// Issue `i` on this scoreboard under `arch` with the vector context
+    /// `v`, returning the issue cycle. This is the *entire* issue/stall
+    /// model — RAW hazards through the register-ready times, structural
+    /// hazards through the FU-busy times, the DIMC state fence, the
+    /// vector-configuration fence and the in-order front end — shared by
+    /// the functional interpreter ([`Core`]) and the Plan-folding
+    /// analytic backend ([`super::analytic`]), so the two can never
+    /// disagree on a stall rule.
+    pub fn issue(&mut self, i: &Instr, arch: &Arch, v: &VCtx, taken_branch: bool) -> u64 {
+        let t = timing(i, arch, v);
+        let (xsrc, vsrc, xdst, vdst, reads_dimc, writes_dimc) = deps(i, v);
+
+        // In-order front end, up to `issue_width` instructions per cycle.
+        let mut at = if self.issued_in_cycle < arch.issue_width {
+            self.last_issue
+        } else {
+            self.last_issue + 1
+        };
+        for r in xsrc.into_iter().flatten() {
+            at = at.max(self.xreg_ready[r as usize]);
+        }
+        for (base, n) in vsrc {
+            for k in 0..n {
+                at = at.max(self.vreg_ready[(base as usize + k as usize) % NUM_VREGS]);
+            }
+        }
+        // Vector instructions wait for a valid vector configuration.
+        if !matches!(
+            i.class(),
+            InstrClass::Scalar | InstrClass::Branch | InstrClass::VConfig
+        ) {
+            at = at.max(self.vcfg_ready);
+        }
+        if reads_dimc {
+            at = at.max(self.dimc_state_ready);
+        }
+        at = at.max(self.fu_free[t.fu.index()]);
+
+        let done = at + t.latency;
+        self.fu_free[t.fu.index()] = at + t.occupy;
+        if let Some(rd) = xdst {
+            if rd != 0 {
+                self.xreg_ready[rd as usize] = self.xreg_ready[rd as usize].max(done);
+            }
+        }
+        if let Some((base, n)) = vdst {
+            for k in 0..n {
+                let r = (base as usize + k as usize) % NUM_VREGS;
+                self.vreg_ready[r] = self.vreg_ready[r].max(done);
+            }
+        }
+        if writes_dimc {
+            self.dimc_state_ready = self.dimc_state_ready.max(done);
+        }
+        if matches!(i.class(), InstrClass::VConfig) {
+            self.vcfg_ready = self.vcfg_ready.max(done);
+        }
+        self.max_completion = self.max_completion.max(done);
+        if taken_branch {
+            // redirect: nothing else issues until the penalty elapses
+            self.last_issue = at + arch.branch_penalty;
+            self.issued_in_cycle = u64::MAX;
+        } else if at == self.last_issue {
+            self.issued_in_cycle += 1;
+        } else {
+            self.last_issue = at;
+            self.issued_in_cycle = 1;
+        }
+        at
+    }
+
     /// Shift every absolute time by `delta` — used by the trace engine to
     /// fast-forward through steady-state loop iterations (all scoreboard
     /// state moves rigidly by the initiation interval per iteration).
@@ -126,6 +197,104 @@ pub fn class_index(c: InstrClass) -> usize {
     }
 }
 
+/// Register dependencies of `i` under the vector context `v`:
+/// (x sources, v source groups, x dest, v dest group, reads DIMC state,
+/// writes DIMC state). Shared by [`Scoreboard::issue`] for both the
+/// interpreter and the analytic timing backend.
+#[allow(clippy::type_complexity)]
+fn deps(
+    i: &Instr,
+    v: &VCtx,
+) -> ([Option<u8>; 2], [(u8, u8); 3], Option<u8>, Option<(u8, u8)>, bool, bool) {
+    use Instr::*;
+    let g = group_regs(v.vl, v.sew) as u8;
+    let none_v: [(u8, u8); 3] = [(0, 0); 3];
+    match *i {
+        Lui { rd, .. } | Auipc { rd, .. } => ([None; 2], none_v, Some(rd), None, false, false),
+        OpImm { rd, rs1, .. } => ([Some(rs1), None], none_v, Some(rd), None, false, false),
+        Op { rd, rs1, rs2, .. } => {
+            ([Some(rs1), Some(rs2)], none_v, Some(rd), None, false, false)
+        }
+        Lw { rd, rs1, .. } | Lbu { rd, rs1, .. } => {
+            ([Some(rs1), None], none_v, Some(rd), None, false, false)
+        }
+        Sw { rs2, rs1, .. } | Sb { rs2, rs1, .. } => {
+            ([Some(rs1), Some(rs2)], none_v, None, None, false, false)
+        }
+        Branch { rs1, rs2, .. } => ([Some(rs1), Some(rs2)], none_v, None, None, false, false),
+        Jal { rd, .. } => ([None; 2], none_v, Some(rd), None, false, false),
+        Jalr { rd, rs1, .. } => ([Some(rs1), None], none_v, Some(rd), None, false, false),
+        Halt => ([None; 2], none_v, None, None, false, false),
+        Vsetvli { rd, rs1, .. } => ([Some(rs1), None], none_v, Some(rd), None, false, false),
+        Vsetivli { rd, .. } => ([None; 2], none_v, Some(rd), None, false, false),
+        Vle { eew, vd, rs1 } => {
+            let regs = group_regs(v.vl, eew as u16) as u8;
+            ([Some(rs1), None], none_v, None, Some((vd, regs)), false, false)
+        }
+        Vse { eew, vs3, rs1 } => {
+            let regs = group_regs(v.vl, eew as u16) as u8;
+            ([Some(rs1), None], [(vs3, regs), (0, 0), (0, 0)], None, None, false, false)
+        }
+        Vlse { eew, vd, rs1, rs2 } => {
+            let regs = group_regs(v.vl, eew as u16) as u8;
+            ([Some(rs1), Some(rs2)], none_v, None, Some((vd, regs)), false, false)
+        }
+        VaddVV { vd, vs1, vs2 }
+        | VsubVV { vd, vs1, vs2 }
+        | VmulVV { vd, vs1, vs2 }
+        | VandVV { vd, vs1, vs2 }
+        | VorVV { vd, vs1, vs2 }
+        | VxorVV { vd, vs1, vs2 } => {
+            ([None; 2], [(vs1, g), (vs2, g), (0, 0)], None, Some((vd, g)), false, false)
+        }
+        VmaccVV { vd, vs1, vs2 } => {
+            ([None; 2], [(vs1, g), (vs2, g), (vd, g)], None, Some((vd, g)), false, false)
+        }
+        VredsumVS { vd, vs1, vs2 } => {
+            ([None; 2], [(vs1, 1), (vs2, g), (0, 0)], None, Some((vd, 1)), false, false)
+        }
+        VaddVX { vd, rs1, vs2 }
+        | VmaxVX { vd, rs1, vs2 }
+        | VminVX { vd, rs1, vs2 } => {
+            ([Some(rs1), None], [(vs2, g), (0, 0), (0, 0)], None, Some((vd, g)), false, false)
+        }
+        VaddVI { vd, vs2, .. }
+        | VsraVI { vd, vs2, .. }
+        | VsllVI { vd, vs2, .. }
+        | VsrlVI { vd, vs2, .. }
+        | VandVI { vd, vs2, .. }
+        | VslidedownVI { vd, vs2, .. }
+        | VslideupVI { vd, vs2, .. } => {
+            ([None; 2], [(vs2, g), (0, 0), (0, 0)], None, Some((vd, g)), false, false)
+        }
+        VmvVI { vd, .. } => ([None; 2], none_v, None, Some((vd, g)), false, false),
+        VmvVX { vd, rs1 } => {
+            ([Some(rs1), None], none_v, None, Some((vd, g)), false, false)
+        }
+        VmvXS { rd, vs2 } => {
+            ([None; 2], [(vs2, 1), (0, 0), (0, 0)], Some(rd), None, false, false)
+        }
+        VsextVf4 { vd, vs2 } => {
+            let src = group_regs(v.vl, v.sew / 4) as u8;
+            ([None; 2], [(vs2, src.max(1)), (0, 0), (0, 0)], None, Some((vd, g)), false, false)
+        }
+        DlI { vs1, nvec, .. } | DlM { vs1, nvec, .. } => {
+            ([None; 2], [(vs1, nvec), (0, 0), (0, 0)], None, None, false, true)
+        }
+        // DC.* read the tile state and the psum half of vs1. They do
+        // NOT stall on vd: half/nibble insertion happens in the DIMC
+        // accumulation pipeline's write-back stage, so back-to-back
+        // DC results destined for the same register merge there (the
+        // paper's "one result per cycle" sequential write-back).
+        DcP { vs1, vd, .. } => {
+            ([None; 2], [(vs1, 1), (0, 0), (0, 0)], None, Some((vd, 1)), true, false)
+        }
+        DcF { vs1, vd, .. } => {
+            ([None; 2], [(vs1, 1), (0, 0), (0, 0)], None, Some((vd, 1)), true, false)
+        }
+    }
+}
+
 /// The modelled core: architectural + timing state.
 #[derive(Clone)]
 pub struct Core {
@@ -169,171 +338,10 @@ impl Core {
         VCtx { vl: self.vl, sew: self.vtype.sew }
     }
 
-    /// Register dependencies of `i`: (x sources, v source groups,
-    /// x dest, v dest group, reads/writes DIMC state).
-    #[allow(clippy::type_complexity)]
-    fn deps(
-        &self,
-        i: &Instr,
-    ) -> ([Option<u8>; 2], [(u8, u8); 3], Option<u8>, Option<(u8, u8)>, bool, bool) {
-        use Instr::*;
-        let g = group_regs(self.vl, self.vtype.sew) as u8;
-        let none_v: [(u8, u8); 3] = [(0, 0); 3];
-        match *i {
-            Lui { rd, .. } | Auipc { rd, .. } => ([None; 2], none_v, Some(rd), None, false, false),
-            OpImm { rd, rs1, .. } => ([Some(rs1), None], none_v, Some(rd), None, false, false),
-            Op { rd, rs1, rs2, .. } => {
-                ([Some(rs1), Some(rs2)], none_v, Some(rd), None, false, false)
-            }
-            Lw { rd, rs1, .. } | Lbu { rd, rs1, .. } => {
-                ([Some(rs1), None], none_v, Some(rd), None, false, false)
-            }
-            Sw { rs2, rs1, .. } | Sb { rs2, rs1, .. } => {
-                ([Some(rs1), Some(rs2)], none_v, None, None, false, false)
-            }
-            Branch { rs1, rs2, .. } => ([Some(rs1), Some(rs2)], none_v, None, None, false, false),
-            Jal { rd, .. } => ([None; 2], none_v, Some(rd), None, false, false),
-            Jalr { rd, rs1, .. } => ([Some(rs1), None], none_v, Some(rd), None, false, false),
-            Halt => ([None; 2], none_v, None, None, false, false),
-            Vsetvli { rd, rs1, .. } => ([Some(rs1), None], none_v, Some(rd), None, false, false),
-            Vsetivli { rd, .. } => ([None; 2], none_v, Some(rd), None, false, false),
-            Vle { eew, vd, rs1 } => {
-                let regs = group_regs(self.vl, eew as u16) as u8;
-                ([Some(rs1), None], none_v, None, Some((vd, regs)), false, false)
-            }
-            Vse { eew, vs3, rs1 } => {
-                let regs = group_regs(self.vl, eew as u16) as u8;
-                ([Some(rs1), None], [(vs3, regs), (0, 0), (0, 0)], None, None, false, false)
-            }
-            Vlse { eew, vd, rs1, rs2 } => {
-                let regs = group_regs(self.vl, eew as u16) as u8;
-                ([Some(rs1), Some(rs2)], none_v, None, Some((vd, regs)), false, false)
-            }
-            VaddVV { vd, vs1, vs2 }
-            | VsubVV { vd, vs1, vs2 }
-            | VmulVV { vd, vs1, vs2 }
-            | VandVV { vd, vs1, vs2 }
-            | VorVV { vd, vs1, vs2 }
-            | VxorVV { vd, vs1, vs2 } => {
-                ([None; 2], [(vs1, g), (vs2, g), (0, 0)], None, Some((vd, g)), false, false)
-            }
-            VmaccVV { vd, vs1, vs2 } => {
-                ([None; 2], [(vs1, g), (vs2, g), (vd, g)], None, Some((vd, g)), false, false)
-            }
-            VredsumVS { vd, vs1, vs2 } => {
-                ([None; 2], [(vs1, 1), (vs2, g), (0, 0)], None, Some((vd, 1)), false, false)
-            }
-            VaddVX { vd, rs1, vs2 }
-            | VmaxVX { vd, rs1, vs2 }
-            | VminVX { vd, rs1, vs2 } => {
-                ([Some(rs1), None], [(vs2, g), (0, 0), (0, 0)], None, Some((vd, g)), false, false)
-            }
-            VaddVI { vd, vs2, .. }
-            | VsraVI { vd, vs2, .. }
-            | VsllVI { vd, vs2, .. }
-            | VsrlVI { vd, vs2, .. }
-            | VandVI { vd, vs2, .. }
-            | VslidedownVI { vd, vs2, .. }
-            | VslideupVI { vd, vs2, .. } => {
-                ([None; 2], [(vs2, g), (0, 0), (0, 0)], None, Some((vd, g)), false, false)
-            }
-            VmvVI { vd, .. } => ([None; 2], none_v, None, Some((vd, g)), false, false),
-            VmvVX { vd, rs1 } => {
-                ([Some(rs1), None], none_v, None, Some((vd, g)), false, false)
-            }
-            VmvXS { rd, vs2 } => {
-                ([None; 2], [(vs2, 1), (0, 0), (0, 0)], Some(rd), None, false, false)
-            }
-            VsextVf4 { vd, vs2 } => {
-                let src_regs = group_regs(self.vl, self.vtype.sew / 4) as u8;
-                (
-                    [None; 2],
-                    [(vs2, src_regs.max(1)), (0, 0), (0, 0)],
-                    None,
-                    Some((vd, g)),
-                    false,
-                    false,
-                )
-            }
-            DlI { vs1, nvec, .. } | DlM { vs1, nvec, .. } => {
-                ([None; 2], [(vs1, nvec), (0, 0), (0, 0)], None, None, false, true)
-            }
-            // DC.* read the tile state and the psum half of vs1. They do
-            // NOT stall on vd: half/nibble insertion happens in the DIMC
-            // accumulation pipeline's write-back stage, so back-to-back
-            // DC results destined for the same register merge there (the
-            // paper's "one result per cycle" sequential write-back).
-            DcP { vs1, vd, .. } => {
-                ([None; 2], [(vs1, 1), (0, 0), (0, 0)], None, Some((vd, 1)), true, false)
-            }
-            DcF { vs1, vd, .. } => {
-                ([None; 2], [(vs1, 1), (0, 0), (0, 0)], None, Some((vd, 1)), true, false)
-            }
-        }
-    }
-
     /// Issue `i` on the scoreboard; returns its issue cycle.
     fn issue(&mut self, i: &Instr, taken_branch: bool) -> u64 {
-        let t = timing(i, &self.arch, &self.vctx());
-        let (xsrc, vsrc, xdst, vdst, reads_dimc, writes_dimc) = self.deps(i);
-
-        // In-order front end, up to `issue_width` instructions per cycle.
-        let mut at = if self.sb.issued_in_cycle < self.arch.issue_width {
-            self.sb.last_issue
-        } else {
-            self.sb.last_issue + 1
-        };
-        for r in xsrc.into_iter().flatten() {
-            at = at.max(self.sb.xreg_ready[r as usize]);
-        }
-        for (base, n) in vsrc {
-            for k in 0..n {
-                at = at.max(self.sb.vreg_ready[(base as usize + k as usize) % NUM_VREGS]);
-            }
-        }
-        // Vector instructions wait for a valid vector configuration.
-        if !matches!(
-            i.class(),
-            InstrClass::Scalar | InstrClass::Branch | InstrClass::VConfig
-        ) {
-            at = at.max(self.sb.vcfg_ready);
-        }
-        if reads_dimc {
-            at = at.max(self.sb.dimc_state_ready);
-        }
-        at = at.max(self.sb.fu_free[t.fu.index()]);
-
-        let done = at + t.latency;
-        self.sb.fu_free[t.fu.index()] = at + t.occupy;
-        if let Some(rd) = xdst {
-            if rd != 0 {
-                self.sb.xreg_ready[rd as usize] = self.sb.xreg_ready[rd as usize].max(done);
-            }
-        }
-        if let Some((base, n)) = vdst {
-            for k in 0..n {
-                let r = (base as usize + k as usize) % NUM_VREGS;
-                self.sb.vreg_ready[r] = self.sb.vreg_ready[r].max(done);
-            }
-        }
-        if writes_dimc {
-            self.sb.dimc_state_ready = self.sb.dimc_state_ready.max(done);
-        }
-        if matches!(i.class(), InstrClass::VConfig) {
-            self.sb.vcfg_ready = self.sb.vcfg_ready.max(done);
-        }
-        self.sb.max_completion = self.sb.max_completion.max(done);
-        if taken_branch {
-            // redirect: nothing else issues until the penalty elapses
-            self.sb.last_issue = at + self.arch.branch_penalty;
-            self.sb.issued_in_cycle = u64::MAX;
-        } else if at == self.sb.last_issue {
-            self.sb.issued_in_cycle += 1;
-        } else {
-            self.sb.last_issue = at;
-            self.sb.issued_in_cycle = 1;
-        }
-        at
+        let v = self.vctx();
+        self.sb.issue(i, &self.arch, &v, taken_branch)
     }
 
     /// Execute `i` functionally. Returns `Some(new_pc_index)` on taken

@@ -21,13 +21,21 @@
 //! and the total is extrapolated — bit-identical to flat execution for the
 //! mapper's periodic bodies (property-tested) at a tiny fraction of the
 //! cost.
+//!
+//! The [`analytic`] backend goes one step further: it folds a compiled
+//! [`Plan`](crate::compiler::plan::Plan) through the *same* scoreboard
+//! issue rules with no architectural state at all, memoizing whole steps
+//! as transfer functions — cycle-exact against the interpreter (shared
+//! [`core::Scoreboard::issue`], shared extrapolator) at O(steps) cost.
 
+pub mod analytic;
 pub mod core;
 pub mod latency;
 pub mod mem;
 pub mod trace;
 pub mod vrf;
 
+pub use self::analytic::analytic_cycles;
 pub use self::core::{Core, RunStats};
 pub use self::mem::Mem;
 pub use self::trace::{trace_cycles, TraceResult};

@@ -61,27 +61,51 @@ pub fn trace_cycles(core: &mut Core, phases: &[Phase]) -> Result<TraceResult, Si
     Ok(core.stats)
 }
 
-fn run_phase(core: &mut Core, ph: &Phase) -> Result<(), SimError> {
-    let mut prev_issue = core.sb.last_issue;
+/// One repeatable loop body the steady-state extrapolator can drive:
+/// the interpreter implements it over a full [`Core`] (functional
+/// execution + scoreboard) and the analytic backend
+/// ([`super::analytic`]) over a bare scoreboard. Sharing the driver
+/// guarantees both engines make *identical* extrapolation decisions, so
+/// their cycle counts can only agree or both be wrong — never drift.
+pub(crate) trait SteadyRunner {
+    /// Run the body once (timing + whatever state the runner keeps).
+    fn run_body(&mut self) -> Result<(), SimError>;
+    /// Current absolute issue cycle of the underlying scoreboard.
+    fn last_issue(&self) -> u64;
+    /// Fast-forward `trips` iterations, advancing the clock by `delta`
+    /// total (and accounting for the skipped instructions, if the runner
+    /// counts per-trip rather than per-phase).
+    fn skip(&mut self, trips: u64, delta: u64);
+}
+
+/// Drive `trips` iterations of a periodic body, extrapolating once the
+/// initiation interval stabilizes (constant or periodic with period
+/// dividing [`PATTERN`]) — the shared engine behind [`trace_cycles`] and
+/// the analytic backend.
+pub(crate) fn run_phase_extrapolated<R: SteadyRunner>(
+    r: &mut R,
+    trips: u64,
+) -> Result<(), SimError> {
+    let mut prev_issue = r.last_issue();
     let mut recent: Vec<u64> = Vec::with_capacity(2 * PATTERN);
     let mut t = 0u64;
-    while t < ph.trips {
-        core.run_block(&ph.body)?;
+    while t < trips {
+        r.run_body()?;
         t += 1;
-        let ii = core.sb.last_issue - prev_issue;
-        prev_issue = core.sb.last_issue;
+        let ii = r.last_issue() - prev_issue;
+        prev_issue = r.last_issue();
         recent.push(ii);
         if recent.len() > 2 * PATTERN {
             recent.remove(0);
         }
-        let remaining = ph.trips - t;
+        let remaining = trips - t;
         if remaining == 0 {
             break;
         }
         // Fast path: constant II.
         let n = recent.len();
         if n >= STEADY_CONFIRM && recent[n - STEADY_CONFIRM..].iter().all(|&x| x == ii) {
-            skip(core, ph, remaining, remaining * ii);
+            r.skip(remaining, remaining * ii);
             return Ok(());
         }
         // Periodic path: the last PATTERN IIs repeat the previous PATTERN
@@ -90,20 +114,45 @@ fn run_phase(core: &mut Core, ph: &Phase) -> Result<(), SimError> {
         if n == 2 * PATTERN && (0..PATTERN).all(|i| recent[i] == recent[i + PATTERN]) {
             let chunk: u64 = recent[PATTERN..].iter().sum();
             let full = remaining / PATTERN as u64;
-            skip(core, ph, full * PATTERN as u64, full * chunk);
+            r.skip(full * PATTERN as u64, full * chunk);
             for _ in 0..(remaining % PATTERN as u64) {
-                core.run_block(&ph.body)?;
+                r.run_body()?;
             }
             return Ok(());
         }
         // Fallback: approximate with the window mean.
         if t >= STEADY_WINDOW {
             let avg = (recent.iter().sum::<u64>() / recent.len() as u64).max(1);
-            skip(core, ph, remaining, remaining * avg);
+            r.skip(remaining, remaining * avg);
             return Ok(());
         }
     }
     Ok(())
+}
+
+/// [`SteadyRunner`] over a full [`Core`]: functional execution of every
+/// live trip, per-trip instruction accounting.
+struct CoreRunner<'a> {
+    core: &'a mut Core,
+    ph: &'a Phase,
+}
+
+impl SteadyRunner for CoreRunner<'_> {
+    fn run_body(&mut self) -> Result<(), SimError> {
+        self.core.run_block(&self.ph.body)
+    }
+
+    fn last_issue(&self) -> u64 {
+        self.core.sb.last_issue
+    }
+
+    fn skip(&mut self, trips: u64, delta: u64) {
+        skip(self.core, self.ph, trips, delta);
+    }
+}
+
+fn run_phase(core: &mut Core, ph: &Phase) -> Result<(), SimError> {
+    run_phase_extrapolated(&mut CoreRunner { core, ph }, ph.trips)
 }
 
 /// Fast-forward `trips` iterations advancing the clock by `delta` total.

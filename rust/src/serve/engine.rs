@@ -67,10 +67,28 @@ pub struct Server {
 
 impl Server {
     /// A server over `cores` DIMC-enhanced cores with `arch`'s cluster
-    /// knobs (shared bus, barrier cost).
+    /// knobs (shared bus, barrier cost). Batch service times are priced
+    /// by the cluster simulator's default timing backend (the
+    /// Plan-folding analytic model); see [`Server::with_timing`].
     pub fn new(arch: Arch, precision: Precision, cores: u32) -> Self {
         Server {
             sim: ClusterSim::new(arch, precision),
+            topo: ClusterTopology::from_arch(cores, &arch),
+            cache: HashMap::new(),
+        }
+    }
+
+    /// As [`Server::new`] with an explicit timing backend for the shard
+    /// simulations behind every batch service time (cycle-exact either
+    /// way; see [`crate::sim::Timing`]).
+    pub fn with_timing(
+        arch: Arch,
+        precision: Precision,
+        cores: u32,
+        timing: crate::sim::Timing,
+    ) -> Self {
+        Server {
+            sim: ClusterSim::with_timing(arch, precision, timing),
             topo: ClusterTopology::from_arch(cores, &arch),
             cache: HashMap::new(),
         }

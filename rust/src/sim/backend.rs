@@ -23,7 +23,7 @@ use crate::cluster::sched::NetworkSchedule;
 use crate::cluster::topology::ClusterTopology;
 use crate::compiler::layer::LayerConfig;
 use crate::compiler::pack::{synth_acts, synth_wts};
-use crate::coordinator::driver::{reference_outputs, run_functional, simulate_layer_with_arch};
+use crate::coordinator::driver::{reference_outputs, run_functional, simulate_layer_timed};
 use crate::dimc::Precision;
 use crate::metrics::area::AreaModel;
 use crate::serve::stats::percentile;
@@ -49,6 +49,7 @@ fn base_report(backend: &'static str, cfg: &SessionConfig, model: String) -> Run
         backend,
         model,
         engine: cfg.engine,
+        timing: cfg.timing,
         precision_bits: cfg.precision.bits(),
         cores: cfg.cores,
         batch: cfg.batch,
@@ -137,9 +138,10 @@ impl SingleCore {
         cfg: &SessionConfig,
         l: &LayerConfig,
     ) -> Result<LayerReportRow, SessionError> {
-        let primary = simulate_layer_with_arch(l, cfg.engine, cfg.precision, cfg.arch)?;
+        let primary = simulate_layer_timed(l, cfg.engine, cfg.precision, cfg.arch, cfg.timing)?;
         let (baseline_cycles, speedup, ans) = if cfg.engine == Engine::Dimc {
-            let b = simulate_layer_with_arch(l, Engine::Baseline, cfg.precision, cfg.arch)?;
+            let b =
+                simulate_layer_timed(l, Engine::Baseline, cfg.precision, cfg.arch, cfg.timing)?;
             let s = b.cycles as f64 / primary.cycles as f64;
             (Some(b.cycles), Some(s), Some(self.area.ans(s)))
         } else {
@@ -261,7 +263,7 @@ pub struct Cluster {
 impl Cluster {
     pub fn new(cfg: &SessionConfig) -> Self {
         Cluster {
-            sim: ClusterSim::new(cfg.arch, cfg.precision),
+            sim: ClusterSim::with_timing(cfg.arch, cfg.precision, cfg.timing),
             topo: ClusterTopology::from_arch(cfg.cores, &cfg.arch),
         }
     }
@@ -402,7 +404,10 @@ pub struct Serving {
 
 impl Serving {
     pub fn new(cfg: &SessionConfig) -> Self {
-        Serving { server: Server::new(cfg.arch, cfg.precision, cfg.cores) }
+        // The serving engine prices batches through the cluster
+        // scheduler; route it through the session's timing backend.
+        let server = Server::with_timing(cfg.arch, cfg.precision, cfg.cores, cfg.timing);
+        Serving { server }
     }
 
     fn run_serve(&mut self, cfg: &SessionConfig) -> Result<RunReport, SessionError> {

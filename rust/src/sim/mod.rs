@@ -82,3 +82,43 @@ impl Engine {
         }
     }
 }
+
+/// Which timing backend prices a layer's instruction schedule. Both are
+/// **cycle-exact against each other** (same scoreboard rules, same
+/// steady-state extrapolation — see
+/// [`pipeline::analytic`](crate::pipeline::analytic)); they differ only
+/// in cost: the interpreter executes the instruction stream, the
+/// analytic backend folds the compiled
+/// [`Plan`](crate::compiler::plan::Plan) in O(steps). The default is
+/// [`Timing::Analytic`]; [`Session::verify`] cross-checks the two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Timing {
+    /// Execute the `Instr` stream on the scoreboarded interpreter
+    /// (trace engine) — the golden reference.
+    Interpreter,
+    /// Fold the Plan through the same issue/stall model with memoized
+    /// step transfer functions — orders of magnitude faster on network
+    /// and cluster sweeps.
+    #[default]
+    Analytic,
+}
+
+impl Timing {
+    /// Canonical lower-case name (`interpreter` / `analytic`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Timing::Interpreter => "interpreter",
+            Timing::Analytic => "analytic",
+        }
+    }
+
+    /// Parse a canonical name (case-insensitive), `None` on anything
+    /// else — frontends surface their own error with the valid names.
+    pub fn parse(s: &str) -> Option<Timing> {
+        match s.to_ascii_lowercase().as_str() {
+            "interpreter" => Some(Timing::Interpreter),
+            "analytic" => Some(Timing::Analytic),
+            _ => None,
+        }
+    }
+}

@@ -5,7 +5,7 @@
 //! `backend` tag says which execution path filled the report in.
 
 use super::json::JsonBuilder;
-use super::Engine;
+use super::{Engine, Timing};
 use crate::cluster::scaling::ScalingPoint;
 use crate::serve::LoadPoint;
 
@@ -174,6 +174,10 @@ pub struct RunReport {
     pub model: String,
     /// Primary engine the run simulated.
     pub engine: Engine,
+    /// Timing backend that priced the run (`analytic` / `interpreter`;
+    /// cycle-exact against each other, so this is provenance, not a
+    /// caveat).
+    pub timing: Timing,
     /// DIMC operand precision in bits.
     pub precision_bits: u32,
     /// Cores the session was configured with.
@@ -222,6 +226,7 @@ impl RunReport {
         j.field_str("backend", self.backend);
         j.field_str("model", &self.model);
         j.field_str("engine", self.engine.as_str());
+        j.field_str("timing", self.timing.as_str());
         j.field_u64("precision_bits", self.precision_bits as u64);
         j.field_u64("cores", self.cores as u64);
         j.field_u64("batch", self.batch as u64);

@@ -10,11 +10,11 @@
 
 use super::backend::{Backend, Cluster, Serving, SingleCore};
 use super::report::{RunCheck, RunReport};
-use super::Engine;
+use super::{Engine, Timing};
 use crate::arch::Arch;
 use crate::cluster::scaling::{scaling_curve_with, ScalingPoint};
 use crate::compiler::layer::LayerConfig;
-use crate::coordinator::driver::simulate_layer_with_arch;
+use crate::coordinator::driver::simulate_layer_timed;
 use crate::dimc::Precision;
 use crate::pipeline::core::SimError;
 use crate::serve::{BatchPolicy, LoadPoint, TraceShape, Workload};
@@ -101,6 +101,10 @@ pub struct SessionConfig {
     pub precision: Precision,
     /// Primary engine (`Dimc` or `Baseline`; clusters are DIMC-only).
     pub engine: Engine,
+    /// Timing backend every simulation prices with (default
+    /// [`Timing::Analytic`]; both backends are cycle-exact against each
+    /// other — [`Session::verify`] cross-checks them).
+    pub timing: Timing,
     /// Cores the session schedules onto (1 = single-core backend).
     pub cores: u32,
     /// Images per batch for network runs.
@@ -148,6 +152,7 @@ pub struct SessionBuilder {
     arch: Arch,
     precision: Precision,
     engine: Engine,
+    timing: Timing,
     cores: u32,
     batch: u32,
     workloads: Vec<WorkloadSpec>,
@@ -165,6 +170,7 @@ impl SessionBuilder {
             arch: Arch::default(),
             precision: Precision::Int4,
             engine: Engine::Dimc,
+            timing: Timing::default(),
             cores: 1,
             batch: 1,
             workloads: Vec::new(),
@@ -192,6 +198,15 @@ impl SessionBuilder {
     /// Primary engine (default: [`Engine::Dimc`]).
     pub fn engine(mut self, e: Engine) -> Self {
         self.engine = e;
+        self
+    }
+
+    /// Timing backend (default: [`Timing::Analytic`]). The interpreter
+    /// and the analytic Plan-folding backend return identical cycle
+    /// counts ([`Session::verify`] cross-checks them); the knob exists
+    /// for golden-reference runs and for measuring the speedup.
+    pub fn timing(mut self, t: Timing) -> Self {
+        self.timing = t;
         self
     }
 
@@ -387,6 +402,7 @@ impl SessionBuilder {
                 arch: self.arch,
                 precision: self.precision,
                 engine: self.engine,
+                timing: self.timing,
                 cores: self.cores,
                 batch: self.batch,
                 workloads,
@@ -449,13 +465,22 @@ impl Session {
         }
     }
 
-    /// Run the functional bit-identity cross-checks on demand: small
-    /// probe layers (tiled, grouped, FC, and a K-tiled + N-grouped GEMM
-    /// covering the transformer layer class) execute functionally on the
-    /// configured engine and must match the pure-Rust conv oracle
-    /// bit-for-bit; on a cluster the sharded outputs must additionally
-    /// equal the single-core driver's, and a 1-core schedule of the
-    /// configured model must reproduce single-core cycle counts exactly.
+    /// Run the built-in cross-checks on demand.
+    ///
+    /// * **Functional bit-identity** (Int4 sessions — the packing path
+    ///   of the functional driver is 4-bit): small probe layers (tiled,
+    ///   grouped, FC, and a K-tiled + N-grouped GEMM covering the
+    ///   transformer layer class) execute functionally on the configured
+    ///   engine and must match the pure-Rust conv oracle bit-for-bit;
+    ///   on a cluster the sharded outputs must additionally equal the
+    ///   single-core driver's.
+    /// * **Timing cross-check** (every precision): the analytic backend
+    ///   and the interpreter must report identical cycles and identical
+    ///   instruction counts on every probe layer — the two halves of the
+    ///   `timing` knob can never drift apart silently.
+    /// * **Cluster anchor** (multi-core sessions): a 1-core schedule of
+    ///   the configured model must reproduce single-core cycle counts
+    ///   exactly.
     pub fn verify(&mut self) -> Result<Vec<RunCheck>, SessionError> {
         let probes = [
             LayerConfig::conv("vprobe_tiled", 80, 8, 2, 2, 4, 4, 1, 0),
@@ -466,9 +491,39 @@ impl Session {
             LayerConfig::gemm("vprobe_gemm", 6, 40, 300),
         ];
         let mut checks = Vec::new();
-        for layer in probes {
-            let rep = self.run(&RunSpec::Functional { layer, seed: 0xD1AC, shift: 4 })?;
-            checks.extend(rep.checks);
+        if self.cfg.precision == Precision::Int4 {
+            for layer in probes.clone() {
+                let rep = self.run(&RunSpec::Functional { layer, seed: 0xD1AC, shift: 4 })?;
+                checks.extend(rep.checks);
+            }
+        }
+
+        for layer in &probes {
+            let a = simulate_layer_timed(
+                layer,
+                self.cfg.engine,
+                self.cfg.precision,
+                self.cfg.arch,
+                Timing::Analytic,
+            )?;
+            let i = simulate_layer_timed(
+                layer,
+                self.cfg.engine,
+                self.cfg.precision,
+                self.cfg.arch,
+                Timing::Interpreter,
+            )?;
+            let ok = a.cycles == i.cycles
+                && a.instret == i.instret
+                && a.class_counts == i.class_counts;
+            checks.push(RunCheck {
+                name: format!("timing:{}", layer.name),
+                ok,
+                detail: format!(
+                    "analytic {} vs interpreter {} cycles on {} ({} instrs)",
+                    a.cycles, i.cycles, layer.name, i.instret
+                ),
+            });
         }
 
         if self.cfg.cores > 1 && !self.cfg.workloads.is_empty() {
@@ -476,11 +531,12 @@ impl Session {
                 let w = &self.cfg.workloads[0];
                 let mut sum = 0u64;
                 for l in &w.layers {
-                    sum += simulate_layer_with_arch(
+                    sum += simulate_layer_timed(
                         l,
                         Engine::Dimc,
                         self.cfg.precision,
                         self.cfg.arch,
+                        self.cfg.timing,
                     )?
                     .cycles;
                 }

@@ -1,0 +1,250 @@
+//! Plan-IR properties: the analytic timing backend and the instruction
+//! interpreter are *bit-for-bit interchangeable*, and the Plan's traffic
+//! annotations equal the traffic of the actual flattened instruction
+//! stream.
+//!
+//! * `analytic == interpreter` (cycles, instret, per-class counts) on
+//!   randomized conv/GEMM geometries, on every distinct layer geometry
+//!   of every zoo model (incl. vit-b16 / mobilebert), and at all three
+//!   DIMC precisions;
+//! * `Plan::mem_bytes()` equals the VLSU traffic measured by walking
+//!   every trip of the flattened program with an independent `vsetivli`
+//!   tracker;
+//! * the `Session` timing knob routes both backends to identical
+//!   reports, and non-Int4 sessions still `verify()` green.
+//!
+//! Deterministic Lcg-driven generation, same style as `prop_mapper.rs`
+//! (proptest is not vendored in this offline image).
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::compiler::layer::LayerConfig;
+use dimc_rvv::compiler::pack::Lcg;
+use dimc_rvv::coordinator::driver::{compile_for, simulate_layer_timed, Engine, Timing};
+use dimc_rvv::dimc::Precision;
+use dimc_rvv::isa::Instr;
+use dimc_rvv::sim::{RunSpec, Session};
+use dimc_rvv::workloads::zoo;
+use std::collections::HashSet;
+
+const PRECISIONS: [Precision; 3] = [Precision::Int4, Precision::Int2, Precision::Int1];
+
+fn random_conv(r: &mut Lcg, tag: u64) -> LayerConfig {
+    let kh = 1 + r.below(3) as u32;
+    let kw = 1 + r.below(3) as u32;
+    let stride = 1 + r.below(2) as u32;
+    let pad = r.below(2) as u32;
+    let ih = (kh + stride + r.below(8) as u32).max(kh + 1);
+    let iw = (kw + stride + r.below(8) as u32).max(kw + 1);
+    // spans the tiling (k_pad > 256 elems @4b) and grouping (och > 32)
+    // thresholds
+    let ich = 1 + r.below(96) as u32;
+    let och = 1 + r.below(80) as u32;
+    LayerConfig::conv(&format!("pp{tag}"), ich, och, kh, kw, ih, iw, stride, pad)
+}
+
+fn random_gemm(r: &mut Lcg, tag: u64) -> LayerConfig {
+    let m = 1 + r.below(12) as u32;
+    let n = 1 + r.below(96) as u32;
+    let k = 1 + r.below(512) as u32;
+    LayerConfig::gemm_fused(
+        &format!("pg{tag}"),
+        m,
+        n,
+        k,
+        r.below(2) == 0,
+        r.below(2) == 0,
+    )
+}
+
+fn assert_backends_agree(l: &LayerConfig, engine: Engine, p: Precision) {
+    let arch = Arch::default();
+    let a = simulate_layer_timed(l, engine, p, arch, Timing::Analytic).unwrap();
+    let i = simulate_layer_timed(l, engine, p, arch, Timing::Interpreter).unwrap();
+    let tag = format!("{l} {engine:?} @{p:?}");
+    assert_eq!(a.cycles, i.cycles, "{tag}: cycles diverged");
+    assert_eq!(a.instret, i.instret, "{tag}: instret diverged");
+    assert_eq!(a.class_counts, i.class_counts, "{tag}: classes diverged");
+}
+
+#[test]
+fn analytic_matches_interpreter_on_random_geometries() {
+    let mut r = Lcg::new(0x91A2);
+    for tag in 0..24u64 {
+        let l = random_conv(&mut r, tag);
+        let p = PRECISIONS[(tag % 3) as usize];
+        assert_backends_agree(&l, Engine::Dimc, p);
+    }
+    for tag in 0..12u64 {
+        let l = random_gemm(&mut r, tag);
+        let p = PRECISIONS[(tag % 3) as usize];
+        assert_backends_agree(&l, Engine::Dimc, p);
+    }
+    // The baseline int8 path folds through the same machinery.
+    let mut r = Lcg::new(0xBA5E);
+    for tag in 0..6u64 {
+        let l = random_conv(&mut r, tag);
+        assert_backends_agree(&l, Engine::Baseline, Precision::Int4);
+    }
+}
+
+/// Independently measure the memory traffic of a program by walking
+/// *every trip* of the flattened stream with its own `vsetivli` tracker
+/// (no shape extrapolation, no shared code with `Plan::from_program`'s
+/// representative-body walk).
+fn measured_traffic(flat: &[Instr]) -> (u64, u64) {
+    let mut vl = 0u32;
+    let (mut loaded, mut stored) = (0u64, 0u64);
+    for i in flat {
+        match *i {
+            Instr::Vsetivli { uimm, vtype: vt, .. } => {
+                vl = (uimm as u32).min(vt.vlmax());
+            }
+            Instr::Vsetvli { .. } => panic!("generated code uses vsetivli only"),
+            Instr::Vle { eew, .. } | Instr::Vlse { eew, .. } => {
+                loaded += vl as u64 * eew as u64 / 8;
+            }
+            Instr::Vse { eew, .. } => stored += vl as u64 * eew as u64 / 8,
+            Instr::Lw { .. } => loaded += 4,
+            Instr::Lbu { .. } => loaded += 1,
+            Instr::Sw { .. } => stored += 4,
+            Instr::Sb { .. } => stored += 1,
+            _ => {}
+        }
+    }
+    (loaded, stored)
+}
+
+#[test]
+fn plan_traffic_matches_the_flattened_stream() {
+    let mut r = Lcg::new(0x7AFF1C);
+    for tag in 0..16u64 {
+        let l = if tag % 3 == 0 {
+            random_gemm(&mut r, tag)
+        } else {
+            random_conv(&mut r, tag)
+        };
+        for p in PRECISIONS {
+            let c = compile_for(&l, Engine::Dimc, p);
+            let flat = c.prog.flatten();
+            let (loaded, stored) = measured_traffic(&flat);
+            assert_eq!(c.plan.loaded_bytes(), loaded, "{l} @{p:?}: loaded bytes");
+            assert_eq!(c.plan.stored_bytes(), stored, "{l} @{p:?}: stored bytes");
+            assert_eq!(c.plan.mem_bytes(), loaded + stored, "{l} @{p:?}");
+            // flatten() appends Halt; everything else is in the Plan.
+            assert_eq!(c.plan.instrs() + 1, flat.len() as u64, "{l} @{p:?}");
+        }
+    }
+    // The baseline stream's scalar stores are accounted too.
+    let l = LayerConfig::fc("bt", 72, 9);
+    let c = compile_for(&l, Engine::Baseline, Precision::Int4);
+    let (loaded, stored) = measured_traffic(&c.prog.flatten());
+    assert_eq!(c.plan.loaded_bytes(), loaded);
+    assert_eq!(c.plan.stored_bytes(), stored);
+}
+
+/// Geometry key: layers that lower identically share one check.
+type Geom = (u8, u32, u32, u32, u32, u32, u32, u32, u32);
+
+fn geom(l: &LayerConfig) -> Geom {
+    let kind = match l.kind {
+        dimc_rvv::compiler::layer::LayerKind::Conv => 0u8,
+        dimc_rvv::compiler::layer::LayerKind::Fc => 1u8,
+        dimc_rvv::compiler::layer::LayerKind::Gemm { .. } => 2u8,
+    };
+    (kind, l.ich, l.och, l.kh, l.kw, l.ih, l.iw, l.stride, l.pad)
+}
+
+#[test]
+fn analytic_matches_interpreter_across_the_zoo_at_all_precisions() {
+    // Every distinct layer geometry of every zoo model — including the
+    // transformer workloads vit-b16 and mobilebert — at all three DIMC
+    // precisions. This is the acceptance gate for the analytic backend.
+    let mut seen: HashSet<(Geom, u32)> = HashSet::new();
+    for m in zoo::all_models() {
+        for l in &m.layers {
+            for p in PRECISIONS {
+                if seen.insert((geom(l), p.bits())) {
+                    assert_backends_agree(l, Engine::Dimc, p);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn session_timing_knob_is_numerically_inert() {
+    // Identical network reports through both timing backends, on the
+    // single-core and the cluster path.
+    let layers = vec![
+        LayerConfig::conv("k1", 16, 64, 3, 3, 8, 8, 1, 1),
+        LayerConfig::gemm("k2", 6, 40, 300),
+        LayerConfig::fc("k3", 8 * 8 * 64, 10),
+    ];
+    for cores in [1u32, 4] {
+        let mut reports = Vec::new();
+        for timing in [Timing::Analytic, Timing::Interpreter] {
+            let mut s = Session::builder()
+                .layers("knob", layers.clone())
+                .cores(cores)
+                .timing(timing)
+                .build()
+                .unwrap();
+            reports.push(s.run(&RunSpec::Network).unwrap());
+        }
+        assert_eq!(reports[0].cycles, reports[1].cycles, "cores={cores}");
+        assert_eq!(reports[0].ops, reports[1].ops, "cores={cores}");
+        for (a, i) in reports[0].layers.iter().zip(reports[1].layers.iter()) {
+            assert_eq!(a.cycles, i.cycles, "cores={cores} layer {}", a.name);
+        }
+    }
+}
+
+#[test]
+fn non_int4_sessions_verify_green() {
+    // The functional probes are Int4-only and must be skipped — but the
+    // timing cross-check and the 1-core cluster anchor still run and
+    // must pass at reduced precisions.
+    for p in [Precision::Int2, Precision::Int1] {
+        let mut s = Session::builder()
+            .layers("lp", vec![LayerConfig::conv("l1", 32, 48, 2, 2, 6, 6, 1, 0)])
+            .cores(2)
+            .precision(p)
+            .build()
+            .unwrap();
+        let checks = s.verify().unwrap();
+        assert!(!checks.is_empty(), "@{p:?}: no checks ran");
+        assert!(
+            checks.iter().all(|c| c.ok),
+            "@{p:?}: {:?}",
+            checks.iter().filter(|c| !c.ok).map(|c| &c.name).collect::<Vec<_>>()
+        );
+        assert!(
+            checks.iter().any(|c| c.name.starts_with("timing:")),
+            "@{p:?}: timing cross-check missing"
+        );
+        assert!(
+            !checks.iter().any(|c| c.name.starts_with("functional:")),
+            "@{p:?}: functional probes must be skipped off Int4"
+        );
+    }
+}
+
+#[test]
+fn plan_step_structure_is_consistent_zoo_wide() {
+    // Cheap structural invariants over every zoo layer: the Plan's
+    // instruction total equals the program's static count, and traffic
+    // is nonzero wherever the layer moves data.
+    let mut seen: HashSet<Geom> = HashSet::new();
+    for m in zoo::all_models() {
+        for l in &m.layers {
+            if !seen.insert(geom(l)) {
+                continue;
+            }
+            let c = compile_for(l, Engine::Dimc, Precision::Int4);
+            assert_eq!(c.plan.instrs(), c.prog.static_instrs(), "{l}");
+            assert!(c.plan.mem_bytes() > 0, "{l}");
+            assert!(c.plan.macs() > 0, "{l}");
+            assert!(c.plan.shapes.len() <= c.plan.steps.len(), "{l}");
+        }
+    }
+}
