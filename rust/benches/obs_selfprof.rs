@@ -1,0 +1,90 @@
+//! Self-profiling wall-clock of the observability layer — the perf
+//! trajectory of the tracing PR.
+//!
+//! For every zoo model, runs the full-network simulation at each trace
+//! level (off / counters / full) with [`SelfProf`]-timed build and run
+//! phases, asserts the reported cycles are **identical at every level**
+//! (tracing must observe, never perturb) and that every conservation
+//! check passes, then records the wall-clock numbers in `BENCH_6.json`
+//! at the repository root so CI can guard against hot-path regressions.
+//!
+//! `--short` (or `DIMC_BENCH_SHORT=1`) sweeps a 3-model subset —
+//! faster, still writes the artifact (tagged `"short": true`).
+
+use dimc_rvv::obs::{SelfProf, TraceLevel};
+use dimc_rvv::sim::{JsonBuilder, RunSpec, Session, Timing};
+use dimc_rvv::workloads::zoo;
+
+const LEVELS: [TraceLevel; 3] = [TraceLevel::Off, TraceLevel::Counters, TraceLevel::Full];
+
+/// One timed network run; returns the reported cycles.
+fn run_at(model: &str, timing: Timing, level: TraceLevel, prof: &mut SelfProf) -> u64 {
+    let tag = format!("{model}/{}/{}", timing.as_str(), level.as_str());
+    let mut session = prof.time(&format!("{tag}/build"), || {
+        Session::builder().model(model).timing(timing).trace_level(level).build().unwrap()
+    });
+    let report = prof.time(&format!("{tag}/run"), || session.run(&RunSpec::Network).unwrap());
+    assert!(report.checks_ok(), "{tag}: conservation checks failed");
+    report.cycles
+}
+
+fn main() {
+    let short = std::env::args().any(|a| a == "--short")
+        || std::env::var("DIMC_BENCH_SHORT").is_ok_and(|v| v != "0");
+    let all = zoo::all_models();
+    let models: Vec<&str> = if short {
+        vec!["resnet18", "mobilenet-25-224", "vit-b16"]
+    } else {
+        all.iter().map(|m| m.name).collect()
+    };
+
+    println!(
+        "obs selfprof: {} models x trace levels off/counters/full{}",
+        models.len(),
+        if short { " (short)" } else { "" }
+    );
+    let mut prof = SelfProf::new();
+    let mut level_ms = [0.0f64; 3];
+    for m in &models {
+        let mut cycles = Vec::new();
+        for (k, lv) in LEVELS.iter().enumerate() {
+            let before = prof.total_secs();
+            cycles.push(run_at(m, Timing::Analytic, *lv, &mut prof));
+            level_ms[k] += (prof.total_secs() - before) * 1e3;
+        }
+        assert!(
+            cycles.windows(2).all(|w| w[0] == w[1]),
+            "{m}: trace level perturbed the reported cycles: {cycles:?}"
+        );
+    }
+    // One cross-backend point: the interpreter attributes through the
+    // same scoreboard rules, so both backends must agree under tracing.
+    let icyc = run_at(models[0], Timing::Interpreter, TraceLevel::Counters, &mut prof);
+    let acyc = run_at(models[0], Timing::Analytic, TraceLevel::Counters, &mut prof);
+    assert_eq!(icyc, acyc, "timing backends disagree under attribution");
+
+    let total_ms = prof.total_secs() * 1e3;
+    println!(
+        "  off {:>9.1} ms | counters {:>9.1} ms | full {:>9.1} ms | total {:>9.1} ms",
+        level_ms[0], level_ms[1], level_ms[2], total_ms
+    );
+    println!("  cycles identical at every trace level; backends agree under attribution");
+
+    let mut j = JsonBuilder::new();
+    j.begin_obj();
+    j.field_str("bench", "obs_selfprof");
+    j.field_bool("short", short);
+    j.field_u64("models", models.len() as u64);
+    j.field_f64("off_ms", level_ms[0]);
+    j.field_f64("counters_ms", level_ms[1]);
+    j.field_f64("full_ms", level_ms[2]);
+    j.field_f64("total_ms", total_ms);
+    j.field_bool("levels_cycle_identical", true);
+    j.key("phases");
+    prof.write_json(&mut j);
+    j.end_obj();
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json");
+    std::fs::write(path, j.finish() + "\n").expect("write BENCH_6.json");
+    println!("  wrote {path}");
+}

@@ -23,13 +23,13 @@ use crate::dimc::Precision;
 use crate::metrics::report::{render_table, summarize};
 use crate::sim::{
     write_load_point, write_scaling_point, Engine, JsonBuilder, LayerReportRow, RunCheck,
-    RunReport, RunSpec, Session, Timing,
+    RunReport, RunSpec, Session, Timing, TraceLevel,
 };
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
 pub fn usage() -> &'static str {
-    "usage: repro <fig5|fig6|fig7|fig8|fig9|table1|zoo|resnet50|verify|simulate|asm> [opts]\n\
+    "usage: repro <fig5|fig6|fig7|fig8|fig9|table1|zoo|resnet50|verify|simulate|timeline|asm> [opts]\n\
      \n\
      fig5      GOPS per ResNet-50 layer (paper Fig. 5)\n\
      fig6      op distribution per ResNet-50 layer (Fig. 6)\n\
@@ -63,11 +63,20 @@ pub fn usage() -> &'static str {
                trace through the dynamic batcher on an N-core cluster and\n\
                report throughput, p50/p95/p99 latency, queue depth and\n\
                tile utilization (--sweep adds the load-vs-latency curve)\n\
+     timeline  [--model NAME] [--cores N] [--batch B] [--rps R]\n\
+               [--requests N] [--out FILE] [--precision ..] [--timing ..]\n\
+               run at full tracing and export a Chrome trace-event /\n\
+               Perfetto timeline (default trace.json; open it at\n\
+               ui.perfetto.dev); a serving timeline when --rps is given,\n\
+               otherwise the network timeline\n\
      asm       <file.s> assemble and run on the DIMC-enhanced core\n\
      trace     <file.s> run with a cycle-annotated pipeline trace\n\
      \n\
      every subcommand accepts --json: emit the unified RunReport (or an\n\
-     array/object of reports) as JSON to stdout instead of the tables"
+     array/object of reports) as JSON to stdout instead of the tables;\n\
+     simulate/cluster/serve accept --trace-level off|counters|full:\n\
+     counters adds cycle-attribution counters plus conservation checks\n\
+     to the report, full also records the span timeline"
 }
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -126,6 +135,17 @@ fn parse_timing(m: &HashMap<String, String>) -> Result<Timing> {
     }
 }
 
+/// `--trace-level off|counters|full` (default off).
+fn parse_trace_level(m: &HashMap<String, String>) -> Result<TraceLevel> {
+    match m.get("trace-level").map(String::as_str) {
+        None => Ok(TraceLevel::Off),
+        Some(v) => match TraceLevel::parse(v) {
+            Some(t) => Ok(t),
+            None => bail!("bad --trace-level `{v}`; expected off, counters or full"),
+        },
+    }
+}
+
 pub fn main_with_args(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         println!("{}", usage());
@@ -162,6 +182,7 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
         "tiles" => tiles(json),
         "cluster" => cluster(&flags, json),
         "serve" => serve(&flags, json),
+        "timeline" => timeline(&flags, json),
         "asm" => asm(args.get(1).map(String::as_str), json),
         "trace" => trace(args.get(1).map(String::as_str), json),
         "help" | "--help" | "-h" => {
@@ -200,6 +221,12 @@ fn as_layer_result(row: &LayerReportRow, engine: Engine, clock_hz: f64) -> Layer
 fn print_checks(checks: &[RunCheck]) {
     for c in checks {
         println!("check: {} {}", c.detail, if c.ok { "OK" } else { "FAIL" });
+    }
+}
+
+fn print_counters(counters: &[(String, u64)]) {
+    for (name, v) in counters {
+        println!("counter: {name} = {v}");
     }
 }
 
@@ -561,6 +588,7 @@ fn simulate(flags: &HashMap<String, String>, json: bool) -> Result<()> {
     let mut session = Session::builder()
         .precision(parse_precision(flags)?)
         .timing(parse_timing(flags)?)
+        .trace_level(parse_trace_level(flags)?)
         .build()?;
     let report = session.run(&RunSpec::Layer(l.clone()))?;
     if json {
@@ -584,6 +612,8 @@ fn simulate(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         st * 100.0
     );
     println!("  instrs:   {} (DIMC path)", row.instret.unwrap_or(0));
+    print_counters(&report.counters);
+    print_checks(&report.checks);
     Ok(())
 }
 
@@ -809,6 +839,7 @@ fn cluster(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         .batch(batch)
         .precision(precision)
         .timing(timing)
+        .trace_level(parse_trace_level(flags)?)
         .build()?;
     let arch = session.config().arch;
 
@@ -868,6 +899,7 @@ fn cluster(flags: &HashMap<String, String>, json: bool) -> Result<()> {
             report.layers.len(),
             report.ms()
         );
+        print_counters(&report.counters);
         print_checks(&report.checks);
     }
     anyhow::ensure!(report.checks_ok(), "cluster cross-checks FAILED");
@@ -908,7 +940,8 @@ fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         .max_batch(max_batch)
         .max_wait_cycles(max_wait)
         .seed(seed)
-        .trace(shape);
+        .trace(shape)
+        .trace_level(parse_trace_level(flags)?);
     if let Some(mix) = flags.get("mix") {
         let mut entries = 0usize;
         for part in mix.split(',').filter(|p| !p.is_empty()) {
@@ -1022,6 +1055,7 @@ fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
             report.utilization.unwrap_or(0.0) * 100.0,
             ss.tile_utilization * 100.0
         );
+        print_counters(&report.counters);
         print_checks(&report.checks);
         if let Some(points) = &sweep_points {
             println!(
@@ -1034,6 +1068,58 @@ fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         }
     }
     anyhow::ensure!(report.checks_ok(), "serving cross-checks FAILED");
+    Ok(())
+}
+
+/// `repro timeline`: run at [`TraceLevel::Full`] and export the recorded
+/// span/counter timeline as a Chrome trace-event JSON file that Perfetto
+/// (<https://ui.perfetto.dev>) and `chrome://tracing` open directly.
+/// With `--rps` the serving timeline is exported (batches, request
+/// lifecycles, queue depth); otherwise the network timeline (per-core
+/// layer spans, Plan steps / bus / barrier).
+fn timeline(flags: &HashMap<String, String>, json: bool) -> Result<()> {
+    let out = flags.get("out").cloned().unwrap_or_else(|| "trace.json".to_string());
+    let model = flags.get("model").map(String::as_str).unwrap_or("resnet50");
+    let cores = flag(flags, "cores", 1u32)?.max(1);
+    let batch = flag(flags, "batch", 1u32)?.max(1);
+    let mut builder = Session::builder()
+        .model(model)
+        .cores(cores)
+        .batch(batch)
+        .precision(parse_precision(flags)?)
+        .timing(parse_timing(flags)?)
+        .trace_level(TraceLevel::Full);
+    let serving = flags.contains_key("rps");
+    if serving {
+        builder = builder
+            .rps(flag(flags, "rps", 1000.0f64)?)
+            .requests(flag(flags, "requests", 256u32)?.max(1) as usize);
+    }
+    let mut session = builder.build()?;
+    let spec = if serving { RunSpec::Serve } else { RunSpec::Network };
+    let report = session.run(&spec)?;
+    let tl = report
+        .timeline
+        .as_ref()
+        .context("the run produced no timeline (full tracing should always record one)")?;
+    std::fs::write(&out, tl.to_chrome_trace())
+        .with_context(|| format!("writing timeline to `{out}`"))?;
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        println!(
+            "wrote {out}: {} tracks, {} events — {} cycles of {} on the {} backend",
+            tl.tracks.len(),
+            tl.events(),
+            report.cycles,
+            report.model,
+            report.backend
+        );
+        println!("open it at https://ui.perfetto.dev or chrome://tracing");
+        print_counters(&report.counters);
+        print_checks(&report.checks);
+    }
+    anyhow::ensure!(report.checks_ok(), "timeline run cross-checks FAILED");
     Ok(())
 }
 

@@ -25,7 +25,9 @@ use crate::compiler::pack;
 use crate::compiler::plan::CompiledLayer;
 use crate::compiler::program::LayerProgram;
 use crate::dimc::{DimcConfig, Precision};
-use crate::pipeline::analytic::analytic_cycles;
+use crate::obs::attr::StallAttr;
+use crate::obs::timeline::Span;
+use crate::pipeline::analytic::{analytic_cycles, analytic_cycles_obs};
 use crate::pipeline::core::{Core, RunStats, SimError};
 use crate::pipeline::trace::trace_cycles;
 
@@ -117,13 +119,66 @@ pub fn timed_stats(
     arch: Arch,
     timing: Timing,
 ) -> Result<RunStats, SimError> {
+    Ok(timed_stats_obs(c, engine, precision, arch, timing, false, false)?.stats)
+}
+
+/// One priced layer with optional observability attached: the plain
+/// [`RunStats`], plus cycle attribution when requested (conservation:
+/// `attr.total() == stats.cycles`, exactly, under either backend) and —
+/// analytic backend only — per-Plan-step issue-front spans.
+#[derive(Debug, Clone)]
+pub struct TimedRun {
+    /// The timing result, identical to what [`timed_stats`] returns.
+    pub stats: RunStats,
+    /// Cycle attribution; `Some` iff `attributing` was requested.
+    pub attr: Option<StallAttr>,
+    /// Per-Plan-step spans; `Some` iff `collect_spans` was requested
+    /// *and* the backend was [`Timing::Analytic`] (the interpreter has
+    /// no Plan steps to delimit).
+    pub steps: Option<Vec<Span>>,
+}
+
+/// [`timed_stats`] with observability. Both flags off reduces exactly
+/// to the plain path — same code, no recording — so reports cannot
+/// change shape when tracing is disabled.
+pub fn timed_stats_obs(
+    c: &CompiledLayer,
+    engine: Engine,
+    precision: Precision,
+    arch: Arch,
+    timing: Timing,
+    attributing: bool,
+    collect_spans: bool,
+) -> Result<TimedRun, SimError> {
     match timing {
         Timing::Interpreter => {
             let mut core = fresh_core(arch, engine, precision);
             core.timing_only = true; // data payload never steers mapper timing
-            trace_cycles(&mut core, &c.prog.rep_phases())
+            core.sb.attributing = attributing;
+            let stats = trace_cycles(&mut core, &c.prog.rep_phases())?;
+            let attr = attributing.then(|| {
+                let mut a = core.sb.attr;
+                a.drain = stats.cycles.saturating_sub(core.sb.last_issue);
+                a
+            });
+            Ok(TimedRun { stats, attr, steps: None })
         }
-        Timing::Analytic => analytic_cycles(&c.plan, &arch),
+        Timing::Analytic => {
+            if !attributing && !collect_spans {
+                return Ok(TimedRun {
+                    stats: analytic_cycles(&c.plan, &arch)?,
+                    attr: None,
+                    steps: None,
+                });
+            }
+            let (stats, attr, spans) =
+                analytic_cycles_obs(&c.plan, &arch, attributing, collect_spans)?;
+            Ok(TimedRun {
+                stats,
+                attr: attributing.then_some(attr),
+                steps: collect_spans.then_some(spans),
+            })
+        }
     }
 }
 

@@ -57,6 +57,14 @@
 //!   accounting and throughput / p50-p95-p99 latency / queue-depth /
 //!   tile-utilization reporting
 //!   (`repro serve --cores 4 --rps 1000 --trace bursty --model resnet50`).
+//! * [`obs`] — the observability layer: per-hazard-class cycle
+//!   attribution derived inside the shared scoreboard issue rules
+//!   (conservation-checked: issue + stall + drain cycles sum exactly to
+//!   reported cycles under both timing backends), per-tier counters and
+//!   a Perfetto-exportable [`obs::Timeline`]
+//!   (`repro timeline --out trace.json`), all gated behind the
+//!   [`obs::TraceLevel`] Session knob — `Off` (default) records nothing
+//!   and is bit-identical to an untraced run.
 //! * [`sim`] — the unified execution façade over all of the above: a
 //!   validated [`sim::Session`] built via [`sim::SessionBuilder`]
 //!   executes typed [`sim::RunSpec`] requests (layer, network,
@@ -105,6 +113,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod cluster;
 pub mod serve;
+pub mod obs;
 pub mod sim;
 
 pub use arch::Arch;

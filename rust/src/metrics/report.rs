@@ -63,6 +63,28 @@ pub fn fig_rows(layers: &[LayerConfig], area: &AreaModel) -> Result<Vec<LayerRow
     layers.iter().map(|l| layer_row(l, area)).collect()
 }
 
+/// Stable observability-counter names for the eight instruction
+/// classes, index-aligned with
+/// [`class_index`](crate::pipeline::core::class_index).
+pub const CLASS_COUNTER_NAMES: [&str; 8] = [
+    "instr.scalar",
+    "instr.branch",
+    "instr.valu",
+    "instr.vload",
+    "instr.vstore",
+    "instr.dimc_load",
+    "instr.dimc_compute",
+    "instr.vconfig",
+];
+
+/// Fold a per-class instruction histogram (a
+/// [`RunStats::class_counts`](crate::pipeline::core::RunStats)) into
+/// named flat counters for
+/// [`RunReport::counters`](crate::sim::RunReport::counters).
+pub fn class_count_counters(counts: &[u64; 8]) -> Vec<(String, u64)> {
+    CLASS_COUNTER_NAMES.iter().zip(counts.iter()).map(|(n, &c)| (n.to_string(), c)).collect()
+}
+
 /// Render rows as an aligned text table with the given columns.
 pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
     let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();

@@ -1,0 +1,160 @@
+//! Per-hazard-class cycle attribution.
+//!
+//! Every cycle the front end spends between reset and the last issue is
+//! charged to exactly one bucket as a side effect of
+//! [`Scoreboard::issue`](crate::pipeline::core::Scoreboard::issue) —
+//! the *same* code path both timing backends execute, so the
+//! interpreter and the Plan-folding analytic backend can never disagree
+//! on a charge:
+//!
+//! * **issue** — cycles the front end advanced because it was issuing
+//!   (one per issue-group under the in-order width limit);
+//! * **one stall class per stalled cycle** — the hazard whose ready
+//!   time the issue cycle actually waited for ([`StallClass`]), with a
+//!   fixed priority order on ties;
+//! * **branch** — taken-branch redirect penalties;
+//! * **drain** — cycles between the last issue and the completion of
+//!   the latest-finishing instruction (pipeline drain at the end of a
+//!   run; filled in by the driver, not by `issue`).
+//!
+//! The charges telescope: `issue + stalls + drain == reported cycles`,
+//! exactly, under both backends and through the steady-state
+//! extrapolator (`rust/tests/prop_obs.rs` pins this on randomized
+//! conv/GEMM geometries).
+
+/// Number of [`StallClass`] buckets.
+pub const NUM_STALL_CLASSES: usize = 6;
+
+/// The hazard a stalled issue cycle is charged to. When several causes
+/// resolve at the same cycle the earliest variant in this declaration
+/// order wins — a fixed, deterministic tie-break shared by both timing
+/// backends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallClass {
+    /// RAW dependency through a scalar (x) register.
+    RawX,
+    /// RAW dependency through a vector register group.
+    RawV,
+    /// Waiting on a pending `vsetvli`/`vsetivli` (vector-config fence).
+    Vcfg,
+    /// Waiting on the DIMC state fence (`DC.*` after `DL.*`).
+    Dimc,
+    /// Structural hazard: the instruction's functional unit is busy.
+    Fu,
+    /// Taken-branch redirect penalty.
+    Branch,
+}
+
+impl StallClass {
+    /// All classes, in charge-priority order.
+    pub const ALL: [StallClass; NUM_STALL_CLASSES] = [
+        StallClass::RawX,
+        StallClass::RawV,
+        StallClass::Vcfg,
+        StallClass::Dimc,
+        StallClass::Fu,
+        StallClass::Branch,
+    ];
+
+    /// Stable index into [`StallAttr::classes`].
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Counter-name suffix (`raw_x`, `raw_v`, `vcfg`, `dimc`, `fu`,
+    /// `branch`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StallClass::RawX => "raw_x",
+            StallClass::RawV => "raw_v",
+            StallClass::Vcfg => "vcfg",
+            StallClass::Dimc => "dimc",
+            StallClass::Fu => "fu",
+            StallClass::Branch => "branch",
+        }
+    }
+}
+
+/// Accumulated cycle attribution of a run (or a delta between two
+/// points of one). All fields are monotone counters in simulated
+/// cycles.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StallAttr {
+    /// Cycles the front end advanced while issuing.
+    pub issue: u64,
+    /// Stalled cycles by [`StallClass`] (indexed by
+    /// [`StallClass::index`]).
+    pub classes: [u64; NUM_STALL_CLASSES],
+    /// End-of-run pipeline-drain cycles (last issue to last
+    /// completion).
+    pub drain: u64,
+}
+
+impl StallAttr {
+    /// Accumulate `other` into `self`, field by field.
+    pub fn add(&mut self, other: &StallAttr) {
+        self.issue += other.issue;
+        for (a, b) in self.classes.iter_mut().zip(other.classes.iter()) {
+            *a += *b;
+        }
+        self.drain += other.drain;
+    }
+
+    /// `self - before`, field by field — the charges accumulated since
+    /// `before` was captured. Callers guarantee `before` is an earlier
+    /// snapshot of the same monotone counters.
+    pub fn delta_since(&self, before: &StallAttr) -> StallAttr {
+        let mut classes = [0u64; NUM_STALL_CLASSES];
+        for (k, c) in classes.iter_mut().enumerate() {
+            *c = self.classes[k] - before.classes[k];
+        }
+        StallAttr { issue: self.issue - before.issue, classes, drain: self.drain - before.drain }
+    }
+
+    /// Every field multiplied by `n` — one steady-state trip's charges
+    /// extrapolated over `n` identical trips.
+    pub fn scaled(&self, n: u64) -> StallAttr {
+        let mut classes = [0u64; NUM_STALL_CLASSES];
+        for (k, c) in classes.iter_mut().enumerate() {
+            *c = self.classes[k] * n;
+        }
+        StallAttr { issue: self.issue * n, classes, drain: self.drain * n }
+    }
+
+    /// Total stalled cycles across every class.
+    pub fn stall_cycles(&self) -> u64 {
+        self.classes.iter().sum()
+    }
+
+    /// `issue + stalls + drain` — must equal the run's reported cycles
+    /// (the conservation invariant).
+    pub fn total(&self) -> u64 {
+        self.issue + self.stall_cycles() + self.drain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_indices_are_stable_and_named() {
+        for (k, c) in StallClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), k);
+            assert!(!c.as_str().is_empty());
+        }
+        assert_eq!(StallClass::Branch.index(), NUM_STALL_CLASSES - 1);
+    }
+
+    #[test]
+    fn attr_arithmetic_is_exact() {
+        let mut a = StallAttr { issue: 10, classes: [1, 2, 3, 4, 5, 6], drain: 7 };
+        assert_eq!(a.stall_cycles(), 21);
+        assert_eq!(a.total(), 38);
+        let b = a.scaled(3);
+        assert_eq!(b.total(), 3 * a.total());
+        assert_eq!(b.delta_since(&a), a.scaled(2));
+        a.add(&b);
+        assert_eq!(a.total(), 4 * 38);
+    }
+}

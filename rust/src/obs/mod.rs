@@ -1,0 +1,101 @@
+//! Structured observability: where did every simulated cycle go?
+//!
+//! The paper's headline numbers (137 GOPS peak, high DIMC-tile
+//! utilization) are *attribution* claims — defending them requires
+//! decomposing a run, not just totalling it. This module is the
+//! instrument layer threaded through all three execution tiers:
+//!
+//! * [`attr`] — per-hazard-class cycle attribution
+//!   ([`StallAttr`]), derived inside the one shared
+//!   [`Scoreboard::issue`](crate::pipeline::core::Scoreboard::issue)
+//!   rule set, so the interpreter and the analytic timing backend
+//!   attribute identically and the totals are *conservation-checked*:
+//!   issue + stall + drain cycles sum exactly to the reported cycles;
+//! * [`timeline`] — a [`Timeline`] of per-track spans and counter
+//!   samples (cores, Plan steps, batches, queue depth), timestamped in
+//!   simulated cycles, exporting Chrome trace-event / Perfetto JSON
+//!   (`repro timeline --out trace.json`);
+//! * [`selfprof`] — wall-clock self-profiling of the simulator itself
+//!   ([`SelfProf`]), feeding the committed `BENCH_6.json` perf
+//!   trajectory.
+//!
+//! Tracing is a [`Session`](crate::sim::Session) knob
+//! ([`TraceLevel`], `.trace_level(...)` / `repro ... --trace-level`).
+//! When [`TraceLevel::Off`] (the default) the recorder is never
+//! consulted: reports are bit-identical to an untraced build and the
+//! hot path pays only one untaken branch per issued instruction.
+
+pub mod attr;
+pub mod selfprof;
+pub mod timeline;
+
+pub use attr::{StallAttr, StallClass, NUM_STALL_CLASSES};
+pub use selfprof::{PhaseRecord, SelfProf};
+pub use timeline::{Span, Timeline, Track};
+
+/// How much observability a run records. A [`Session`](crate::sim::Session)
+/// knob (`.trace_level(...)`), also accepted by the CLI as
+/// `--trace-level off|counters|full`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceLevel {
+    /// Record nothing (the default). Reports are bit-identical to a
+    /// build without the observability layer.
+    #[default]
+    Off,
+    /// Record cycle-attribution and tier counters into
+    /// [`RunReport::counters`](crate::sim::RunReport::counters), with
+    /// the conservation cross-checks appended to the report.
+    Counters,
+    /// Everything `Counters` records, plus a [`Timeline`] of spans and
+    /// counter samples for Perfetto export.
+    Full,
+}
+
+impl TraceLevel {
+    /// Canonical lower-case name (`off` / `counters` / `full`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Counters => "counters",
+            TraceLevel::Full => "full",
+        }
+    }
+
+    /// Parse a level name, case-insensitively. `None` when unknown.
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Some(TraceLevel::Off),
+            "counters" => Some(TraceLevel::Counters),
+            "full" => Some(TraceLevel::Full),
+            _ => None,
+        }
+    }
+
+    /// Whether this level records counters (Counters and Full do).
+    pub fn counters_on(&self) -> bool {
+        !matches!(self, TraceLevel::Off)
+    }
+
+    /// Whether this level records a [`Timeline`] (Full only).
+    pub fn timeline_on(&self) -> bool {
+        matches!(self, TraceLevel::Full)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_level_roundtrips_and_defaults_off() {
+        assert_eq!(TraceLevel::default(), TraceLevel::Off);
+        for lvl in [TraceLevel::Off, TraceLevel::Counters, TraceLevel::Full] {
+            assert_eq!(TraceLevel::parse(lvl.as_str()), Some(lvl));
+            assert_eq!(TraceLevel::parse(&lvl.as_str().to_uppercase()), Some(lvl));
+        }
+        assert_eq!(TraceLevel::parse("verbose"), None);
+        assert!(!TraceLevel::Off.counters_on() && !TraceLevel::Off.timeline_on());
+        assert!(TraceLevel::Counters.counters_on() && !TraceLevel::Counters.timeline_on());
+        assert!(TraceLevel::Full.counters_on() && TraceLevel::Full.timeline_on());
+    }
+}

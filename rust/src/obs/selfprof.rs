@@ -1,0 +1,95 @@
+//! Wall-clock self-profiling of the simulator itself.
+//!
+//! The committed `BENCH_6.json` perf trajectory (see
+//! `cargo bench --bench obs_selfprof`) is produced by timing the
+//! compile and execute phases of zoo runs with this harness; the CI
+//! perf-guard compares a fresh run against the committed baseline with
+//! a generous tolerance, failing only on gross regressions.
+//!
+//! ```
+//! use dimc_rvv::obs::SelfProf;
+//!
+//! let mut prof = SelfProf::new();
+//! let sum: u64 = prof.time("sum", || (0..1000u64).sum());
+//! assert_eq!(sum, 499_500);
+//! assert_eq!(prof.records().len(), 1);
+//! assert!(prof.total_secs() >= 0.0);
+//! ```
+
+use crate::sim::json::JsonBuilder;
+use std::time::Instant;
+
+/// One timed phase: its name and measured wall-clock seconds.
+#[derive(Debug, Clone)]
+pub struct PhaseRecord {
+    /// Phase name (e.g. `resnet18/analytic/compile`).
+    pub name: String,
+    /// Measured wall-clock duration in seconds.
+    pub secs: f64,
+}
+
+/// A wall-clock phase profiler: run closures under [`SelfProf::time`]
+/// and collect one [`PhaseRecord`] per call.
+#[derive(Debug, Clone, Default)]
+pub struct SelfProf {
+    records: Vec<PhaseRecord>,
+}
+
+impl SelfProf {
+    /// An empty profiler.
+    pub fn new() -> Self {
+        SelfProf::default()
+    }
+
+    /// Run `f`, record its wall-clock duration under `name`, and return
+    /// its result.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.records.push(PhaseRecord { name: name.to_string(), secs: t0.elapsed().as_secs_f64() });
+        out
+    }
+
+    /// Every recorded phase, in measurement order.
+    pub fn records(&self) -> &[PhaseRecord] {
+        &self.records
+    }
+
+    /// Sum of all recorded durations in seconds.
+    pub fn total_secs(&self) -> f64 {
+        self.records.iter().map(|r| r.secs).sum()
+    }
+
+    /// Serialize the records as a JSON array of
+    /// `{"phase": name, "ms": millis}` objects into `j`.
+    pub fn write_json(&self, j: &mut JsonBuilder) {
+        j.begin_arr();
+        for r in &self.records {
+            j.begin_obj();
+            j.field_str("phase", &r.name);
+            j.field_f64("ms", r.secs * 1e3);
+            j.end_obj();
+        }
+        j.end_arr();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate_in_order() {
+        let mut p = SelfProf::new();
+        let a = p.time("first", || 41 + 1);
+        let b = p.time("second", || a * 2);
+        assert_eq!((a, b), (42, 84));
+        let names: Vec<&str> = p.records().iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, ["first", "second"]);
+        assert!(p.total_secs() >= p.records()[0].secs);
+        let mut j = JsonBuilder::new();
+        p.write_json(&mut j);
+        let s = j.finish();
+        assert!(s.starts_with('[') && s.contains(r#""phase":"first""#), "{s}");
+    }
+}

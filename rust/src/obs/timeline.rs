@@ -1,0 +1,191 @@
+//! Run timelines: per-track spans and counter samples, timestamped in
+//! *simulated* cycles, exporting the Chrome trace-event JSON that
+//! Perfetto (<https://ui.perfetto.dev>) and `chrome://tracing` open
+//! directly.
+//!
+//! One [`Track`] per core / tile / queue; spans are Chrome `"X"`
+//! (complete) events, counter samples are `"C"` events, and every track
+//! gets a `thread_name` metadata record. Timestamps map one simulated
+//! cycle to one trace microsecond, so a 500 MHz run displays at 500x
+//! slow motion. The exporter emits timed events globally sorted by
+//! timestamp (the CI smoke job checks monotonicity).
+//!
+//! ```
+//! use dimc_rvv::obs::Timeline;
+//!
+//! let mut tl = Timeline::new();
+//! tl.track("core 0").span("conv1", 0, 120);
+//! tl.track("queue depth").sample(40, 3);
+//! let json = tl.to_chrome_trace();
+//! assert!(json.starts_with(r#"{"traceEvents":["#));
+//! assert!(json.contains(r#""ph":"X""#) && json.contains(r#""ph":"C""#));
+//! ```
+
+use crate::sim::json::JsonBuilder;
+
+/// One complete event on a track: `[start, start + dur)` in simulated
+/// cycles.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Display name (layer, Plan step, batch, request, ...).
+    pub name: String,
+    /// Start timestamp in simulated cycles.
+    pub start: u64,
+    /// Duration in simulated cycles.
+    pub dur: u64,
+}
+
+/// One named horizontal lane of the timeline (a core, the bus, a
+/// queue, ...), holding spans and/or counter samples.
+#[derive(Debug, Clone)]
+pub struct Track {
+    /// Track name, shown as the Perfetto thread name.
+    pub name: String,
+    /// Complete events on this track.
+    pub spans: Vec<Span>,
+    /// Counter samples `(cycle, value)`; rendered as a counter lane
+    /// named after the track.
+    pub samples: Vec<(u64, u64)>,
+}
+
+impl Track {
+    /// Append a span.
+    pub fn span(&mut self, name: &str, start: u64, dur: u64) {
+        self.spans.push(Span { name: name.to_string(), start, dur });
+    }
+
+    /// Append a counter sample.
+    pub fn sample(&mut self, ts: u64, value: u64) {
+        self.samples.push((ts, value));
+    }
+}
+
+/// A whole run's timeline: an ordered set of named tracks.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    /// The tracks, in creation order (creation order fixes the
+    /// Perfetto thread id).
+    pub tracks: Vec<Track>,
+}
+
+impl Timeline {
+    /// An empty timeline.
+    pub fn new() -> Self {
+        Timeline::default()
+    }
+
+    /// The track named `name`, created on first use.
+    pub fn track(&mut self, name: &str) -> &mut Track {
+        if let Some(k) = self.tracks.iter().position(|t| t.name == name) {
+            return &mut self.tracks[k];
+        }
+        self.tracks.push(Track { name: name.to_string(), spans: Vec::new(), samples: Vec::new() });
+        self.tracks.last_mut().unwrap()
+    }
+
+    /// Total recorded events (spans + samples) across every track.
+    pub fn events(&self) -> usize {
+        self.tracks.iter().map(|t| t.spans.len() + t.samples.len()).sum()
+    }
+
+    /// Serialize as a Chrome trace-event / Perfetto JSON document:
+    /// metadata records first, then every timed event globally sorted
+    /// by timestamp. One simulated cycle maps to one trace microsecond.
+    pub fn to_chrome_trace(&self) -> String {
+        let mut j = JsonBuilder::new();
+        j.begin_obj();
+        j.key("traceEvents");
+        j.begin_arr();
+        // Metadata: the process plus one named thread per track.
+        j.begin_obj();
+        j.field_str("name", "process_name");
+        j.field_str("ph", "M");
+        j.field_u64("pid", 0);
+        j.key("args");
+        j.begin_obj();
+        j.field_str("name", "dimc_rvv");
+        j.end_obj();
+        j.end_obj();
+        for (tid, t) in self.tracks.iter().enumerate() {
+            j.begin_obj();
+            j.field_str("name", "thread_name");
+            j.field_str("ph", "M");
+            j.field_u64("pid", 0);
+            j.field_u64("tid", tid as u64);
+            j.key("args");
+            j.begin_obj();
+            j.field_str("name", &t.name);
+            j.end_obj();
+            j.end_obj();
+        }
+        // Timed events: (ts, tid, index, is_span) sorts deterministically.
+        let mut evs: Vec<(u64, usize, usize, bool)> = Vec::new();
+        for (tid, t) in self.tracks.iter().enumerate() {
+            for (k, s) in t.spans.iter().enumerate() {
+                evs.push((s.start, tid, k, true));
+            }
+            for (k, (ts, _)) in t.samples.iter().enumerate() {
+                evs.push((*ts, tid, k, false));
+            }
+        }
+        evs.sort();
+        for (ts, tid, k, is_span) in evs {
+            let t = &self.tracks[tid];
+            j.begin_obj();
+            if is_span {
+                let s = &t.spans[k];
+                j.field_str("name", &s.name);
+                j.field_str("ph", "X");
+                j.field_u64("ts", ts);
+                j.field_u64("dur", s.dur);
+                j.field_u64("pid", 0);
+                j.field_u64("tid", tid as u64);
+            } else {
+                let (_, v) = t.samples[k];
+                j.field_str("name", &t.name);
+                j.field_str("ph", "C");
+                j.field_u64("ts", ts);
+                j.field_u64("pid", 0);
+                j.field_u64("tid", tid as u64);
+                j.key("args");
+                j.begin_obj();
+                j.field_u64("value", v);
+                j.end_obj();
+            }
+            j.end_obj();
+        }
+        j.end_arr();
+        j.field_str("displayTimeUnit", "ms");
+        j.end_obj();
+        j.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_are_created_once_and_keep_order() {
+        let mut tl = Timeline::new();
+        tl.track("core 0").span("a", 0, 10);
+        tl.track("core 1").span("b", 5, 10);
+        tl.track("core 0").span("c", 10, 10);
+        assert_eq!(tl.tracks.len(), 2);
+        assert_eq!(tl.tracks[0].spans.len(), 2);
+        assert_eq!(tl.events(), 3);
+    }
+
+    #[test]
+    fn export_sorts_timed_events_by_timestamp() {
+        let mut tl = Timeline::new();
+        tl.track("core 0").span("late", 100, 5);
+        tl.track("core 1").span("early", 2, 5);
+        tl.track("queue").sample(50, 7);
+        let json = tl.to_chrome_trace();
+        let early = json.find(r#""name":"early""#).unwrap();
+        let counter = json.find(r#""ph":"C""#).unwrap();
+        let late = json.find(r#""name":"late""#).unwrap();
+        assert!(early < counter && counter < late, "{json}");
+    }
+}

@@ -36,6 +36,8 @@
 use crate::arch::{Arch, NUM_VREGS};
 use crate::compiler::plan::{Plan, PlanStep};
 use crate::isa::{Instr, VType};
+use crate::obs::attr::StallAttr;
+use crate::obs::timeline::Span;
 use crate::pipeline::core::{RunStats, Scoreboard, SimError};
 use crate::pipeline::latency::{VCtx, NUM_FUS};
 use crate::pipeline::trace::{run_phase_extrapolated, SteadyRunner};
@@ -60,12 +62,16 @@ struct NormState {
     vtype: VType,
 }
 
-/// Cached effect of one step: how far the issue front advanced and the
-/// normalized state it left behind.
+/// Cached effect of one step: how far the issue front advanced, the
+/// normalized state it left behind, and the cycle-attribution charges
+/// accumulated (all-zero when the scoreboard is not attributing; a
+/// fresh [`AnalyticSim`] per entry call keeps attributing and
+/// non-attributing effects from ever sharing a cache).
 #[derive(Clone)]
 struct StepEffect {
     d_issue: u64,
     out: NormState,
+    d_attr: StallAttr,
 }
 
 /// The analytic machine: a bare scoreboard plus the tracked vector
@@ -153,6 +159,7 @@ impl<'a> AnalyticSim<'a> {
         self.sb.dimc_state_ready = base + e.out.dimc;
         self.sb.vcfg_ready = base + e.out.vcfg;
         self.sb.max_completion = base + e.out.max_completion;
+        self.sb.attr.add(&e.d_attr);
         self.vl = e.out.vl;
         self.vtype = e.out.vtype;
     }
@@ -172,9 +179,11 @@ impl<'a> AnalyticSim<'a> {
             return Ok(());
         }
         let start_issue = self.sb.last_issue;
+        let start_attr = self.sb.attr;
         run_phase_extrapolated(&mut StepRunner { sim: self, body }, step.trips)?;
         let d_issue = self.sb.last_issue - start_issue;
-        self.cache.insert(key, StepEffect { d_issue, out: self.norm() });
+        let d_attr = self.sb.attr.delta_since(&start_attr);
+        self.cache.insert(key, StepEffect { d_issue, out: self.norm(), d_attr });
         Ok(())
     }
 
@@ -207,6 +216,18 @@ impl SteadyRunner for StepRunner<'_, '_> {
     fn skip(&mut self, _trips: u64, delta: u64) {
         self.sim.sb.shift(delta);
     }
+
+    fn attr(&self) -> Option<StallAttr> {
+        if self.sim.sb.attributing {
+            Some(self.sim.sb.attr)
+        } else {
+            None
+        }
+    }
+
+    fn add_attr(&mut self, delta: &StallAttr) {
+        self.sim.sb.attr.add(delta);
+    }
 }
 
 /// Fold `plan` through the issue/stall model under `arch` and return
@@ -214,11 +235,39 @@ impl SteadyRunner for StepRunner<'_, '_> {
 /// instructions retired and per-class counts (asserted layer-by-layer
 /// across the zoo in `rust/tests/prop_plan.rs`).
 pub fn analytic_cycles(plan: &Plan, arch: &Arch) -> Result<RunStats, SimError> {
+    analytic_cycles_obs(plan, arch, false, false).map(|(stats, _, _)| stats)
+}
+
+/// [`analytic_cycles`] with observability: when `attributing`, every
+/// front-end cycle is charged to a [`StallAttr`] bucket by the shared
+/// scoreboard rules (conservation: `attr.total() == stats.cycles`,
+/// exactly — drain is filled in here); when `collect_spans`, one
+/// [`Span`] per Plan step records the issue-front interval the step
+/// occupied (span durations telescope to the last issue cycle). Both
+/// flags off is byte-for-byte the plain [`analytic_cycles`] fold.
+pub fn analytic_cycles_obs(
+    plan: &Plan,
+    arch: &Arch,
+    attributing: bool,
+    collect_spans: bool,
+) -> Result<(RunStats, StallAttr, Vec<Span>), SimError> {
     let mut sim = AnalyticSim::new(arch);
+    sim.sb.attributing = attributing;
+    let mut spans = Vec::new();
     for step in &plan.steps {
+        let start = sim.sb.last_issue;
         sim.run_step(step, &plan.shapes[step.shape])?;
+        if collect_spans {
+            spans.push(Span {
+                name: step.name.clone(),
+                start,
+                dur: sim.sb.last_issue - start,
+            });
+        }
     }
-    Ok(sim.finish())
+    let mut attr = sim.sb.attr;
+    attr.drain = sim.sb.max_completion.saturating_sub(sim.sb.last_issue);
+    Ok((sim.finish(), attr, spans))
 }
 
 #[cfg(test)]
@@ -286,6 +335,40 @@ mod tests {
             sim.cache.len(),
             c.plan.steps.len()
         );
+    }
+
+    #[test]
+    fn attribution_and_spans_match_interpreter_and_conserve() {
+        let l = LayerConfig::conv("obs", 80, 48, 2, 2, 9, 9, 1, 0);
+        let p = Precision::Int4;
+        let c = compile_dimc_planned(&l, p);
+        let (stats, attr, spans) =
+            analytic_cycles_obs(&c.plan, &Arch::default(), true, true).unwrap();
+        // Conservation: every reported cycle is charged to exactly one
+        // bucket.
+        assert_eq!(attr.total(), stats.cycles, "issue + stalls + drain != cycles");
+        // One span per Plan step; durations telescope to the last issue
+        // cycle, i.e. cycles minus the end-of-run drain.
+        assert_eq!(spans.len(), c.plan.steps.len());
+        let dur_sum: u64 = spans.iter().map(|s| s.dur).sum();
+        assert_eq!(dur_sum + attr.drain, stats.cycles);
+
+        // The interpreter, attributing over the same program, must
+        // charge identically — same rules, same extrapolator.
+        let mut core = Core::new(Arch::default());
+        core.dimc.cfg = DimcConfig { precision: p, ..core.dimc.cfg };
+        core.timing_only = true;
+        core.sb.attributing = true;
+        let i = trace_cycles(&mut core, &c.prog.rep_phases()).unwrap();
+        assert_eq!(stats.cycles, i.cycles);
+        let mut iattr = core.sb.attr;
+        iattr.drain = i.cycles.saturating_sub(core.sb.last_issue);
+        assert_eq!(attr, iattr, "analytic vs interpreter attribution");
+
+        // Observability off returns the plain fold's numbers.
+        let plain = analytic_cycles(&c.plan, &Arch::default()).unwrap();
+        assert_eq!(plain.cycles, stats.cycles);
+        assert_eq!(plain.instret, stats.instret);
     }
 
     #[test]

@@ -13,6 +13,7 @@ use super::vrf::{
 use crate::arch::{Arch, NUM_VREGS, VLENB};
 use crate::dimc::{DimcTile, Precision};
 use crate::isa::{AluOp, BranchCond, Instr, InstrClass, VType};
+use crate::obs::attr::{StallAttr, StallClass};
 
 /// Simulation failure.
 #[derive(Debug)]
@@ -54,6 +55,16 @@ pub struct Scoreboard {
     pub vcfg_ready: u64,
     /// Completion time of the latest-finishing instruction so far.
     pub max_completion: u64,
+    /// Observability knob: when set, every [`Scoreboard::issue`] call
+    /// classifies its front-end advance into [`Scoreboard::attr`]. Off
+    /// by default — the hot path then pays one untaken branch per
+    /// instruction and the issue arithmetic is unchanged either way.
+    pub attributing: bool,
+    /// Accumulated cycle attribution (meaningful only while
+    /// [`Scoreboard::attributing`] is set). Deliberately *not* shifted
+    /// by [`Scoreboard::shift`]: charges are deltas of `last_issue`,
+    /// which are translation-invariant.
+    pub attr: StallAttr,
 }
 
 impl Default for Scoreboard {
@@ -67,6 +78,8 @@ impl Default for Scoreboard {
             dimc_state_ready: 0,
             vcfg_ready: 0,
             max_completion: 0,
+            attributing: false,
+            attr: StallAttr::default(),
         }
     }
 }
@@ -85,30 +98,54 @@ impl Scoreboard {
         let (xsrc, vsrc, xdst, vdst, reads_dimc, writes_dimc) = deps(i, v);
 
         // In-order front end, up to `issue_width` instructions per cycle.
-        let mut at = if self.issued_in_cycle < arch.issue_width {
+        let base = if self.issued_in_cycle < arch.issue_width {
             self.last_issue
         } else {
             self.last_issue + 1
         };
+        // Per-cause candidate issue times; the issue cycle is their max
+        // (an inapplicable cause contributes 0, always <= base), and the
+        // argmax — in `StallClass` priority order — is the stall class
+        // when attribution is on.
+        let mut raw_x = 0u64;
         for r in xsrc.into_iter().flatten() {
-            at = at.max(self.xreg_ready[r as usize]);
+            raw_x = raw_x.max(self.xreg_ready[r as usize]);
         }
-        for (base, n) in vsrc {
+        let mut raw_v = 0u64;
+        for (vbase, n) in vsrc {
             for k in 0..n {
-                at = at.max(self.vreg_ready[(base as usize + k as usize) % NUM_VREGS]);
+                raw_v = raw_v.max(self.vreg_ready[(vbase as usize + k as usize) % NUM_VREGS]);
             }
         }
         // Vector instructions wait for a valid vector configuration.
-        if !matches!(
+        let vcfg = if !matches!(
             i.class(),
             InstrClass::Scalar | InstrClass::Branch | InstrClass::VConfig
         ) {
-            at = at.max(self.vcfg_ready);
+            self.vcfg_ready
+        } else {
+            0
+        };
+        let dimc = if reads_dimc { self.dimc_state_ready } else { 0 };
+        let fu = self.fu_free[t.fu.index()];
+        let at = base.max(raw_x).max(raw_v).max(vcfg).max(dimc).max(fu);
+
+        if self.attributing {
+            // The charges telescope: (base - last_issue) + (at - base)
+            // [+ branch_penalty] is exactly the front end's advance, so
+            // the accumulated attribution always sums to the final
+            // `last_issue` (the conservation invariant).
+            self.attr.issue += base - self.last_issue;
+            let stall = at - base;
+            if stall > 0 {
+                let cands = [raw_x, raw_v, vcfg, dimc, fu];
+                let cls = cands.iter().position(|&c| c == at).unwrap_or(0);
+                self.attr.classes[cls] += stall;
+            }
+            if taken_branch {
+                self.attr.classes[StallClass::Branch.index()] += arch.branch_penalty;
+            }
         }
-        if reads_dimc {
-            at = at.max(self.dimc_state_ready);
-        }
-        at = at.max(self.fu_free[t.fu.index()]);
 
         let done = at + t.latency;
         self.fu_free[t.fu.index()] = at + t.occupy;

@@ -16,6 +16,7 @@
 
 use super::core::{class_index, Core, RunStats, SimError};
 use crate::isa::Instr;
+use crate::obs::attr::{StallAttr, NUM_STALL_CLASSES};
 
 /// One phase of a layer program: a straight-line body repeated `trips`
 /// times. `body` is the representative body (trip 0); all trips must share
@@ -76,6 +77,15 @@ pub(crate) trait SteadyRunner {
     /// total (and accounting for the skipped instructions, if the runner
     /// counts per-trip rather than per-phase).
     fn skip(&mut self, trips: u64, delta: u64);
+    /// Current accumulated cycle attribution, or `None` when the
+    /// underlying scoreboard is not attributing (the default — keeps
+    /// the off path free of any per-trip bookkeeping).
+    fn attr(&self) -> Option<StallAttr> {
+        None
+    }
+    /// Accumulate extrapolated charges alongside a [`SteadyRunner::skip`]
+    /// (no-op when not attributing).
+    fn add_attr(&mut self, _delta: &StallAttr) {}
 }
 
 /// Drive `trips` iterations of a periodic body, extrapolating once the
@@ -88,6 +98,12 @@ pub(crate) fn run_phase_extrapolated<R: SteadyRunner>(
 ) -> Result<(), SimError> {
     let mut prev_issue = r.last_issue();
     let mut recent: Vec<u64> = Vec::with_capacity(2 * PATTERN);
+    // Per-trip attribution deltas, window-aligned with `recent`. Empty
+    // (and never touched) when the runner is not attributing, so the
+    // default path pays only an is-empty check per extrapolation.
+    let attributing = r.attr().is_some();
+    let mut prev_attr = r.attr().unwrap_or_default();
+    let mut recent_attr: Vec<StallAttr> = Vec::new();
     let mut t = 0u64;
     while t < trips {
         r.run_body()?;
@@ -98,13 +114,26 @@ pub(crate) fn run_phase_extrapolated<R: SteadyRunner>(
         if recent.len() > 2 * PATTERN {
             recent.remove(0);
         }
+        if attributing {
+            let cur = r.attr().unwrap_or_default();
+            recent_attr.push(cur.delta_since(&prev_attr));
+            prev_attr = cur;
+            if recent_attr.len() > 2 * PATTERN {
+                recent_attr.remove(0);
+            }
+        }
         let remaining = trips - t;
         if remaining == 0 {
             break;
         }
-        // Fast path: constant II.
+        // Fast path: constant II. A steady trip's charges equal its II
+        // (they telescope to the `last_issue` delta), so scaling the
+        // last trip's delta is exact, not an estimate.
         let n = recent.len();
         if n >= STEADY_CONFIRM && recent[n - STEADY_CONFIRM..].iter().all(|&x| x == ii) {
+            if let Some(d) = recent_attr.last() {
+                r.add_attr(&d.scaled(remaining));
+            }
             r.skip(remaining, remaining * ii);
             return Ok(());
         }
@@ -114,15 +143,46 @@ pub(crate) fn run_phase_extrapolated<R: SteadyRunner>(
         if n == 2 * PATTERN && (0..PATTERN).all(|i| recent[i] == recent[i + PATTERN]) {
             let chunk: u64 = recent[PATTERN..].iter().sum();
             let full = remaining / PATTERN as u64;
+            if !recent_attr.is_empty() {
+                let mut period = StallAttr::default();
+                for d in &recent_attr[PATTERN..] {
+                    period.add(d);
+                }
+                r.add_attr(&period.scaled(full));
+            }
             r.skip(full * PATTERN as u64, full * chunk);
             for _ in 0..(remaining % PATTERN as u64) {
                 r.run_body()?;
             }
             return Ok(());
         }
-        // Fallback: approximate with the window mean.
+        // Fallback: approximate with the window mean. Charges are split
+        // across classes proportionally to the window (u128 floor
+        // division, deterministic), with the rounding residue charged to
+        // `issue` so the total still equals the skipped cycles exactly.
         if t >= STEADY_WINDOW {
             let avg = (recent.iter().sum::<u64>() / recent.len() as u64).max(1);
+            let target = remaining * avg;
+            if !recent_attr.is_empty() {
+                let mut win = StallAttr::default();
+                for d in &recent_attr {
+                    win.add(d);
+                }
+                let wtot = win.issue + win.stall_cycles();
+                let mut d = StallAttr::default();
+                if wtot > 0 {
+                    let mut charged = 0u64;
+                    for k in 0..NUM_STALL_CLASSES {
+                        let c = ((target as u128 * win.classes[k] as u128) / wtot as u128) as u64;
+                        d.classes[k] = c;
+                        charged += c;
+                    }
+                    d.issue = target - charged;
+                } else {
+                    d.issue = target;
+                }
+                r.add_attr(&d);
+            }
             r.skip(remaining, remaining * avg);
             return Ok(());
         }
@@ -148,6 +208,18 @@ impl SteadyRunner for CoreRunner<'_> {
 
     fn skip(&mut self, trips: u64, delta: u64) {
         skip(self.core, self.ph, trips, delta);
+    }
+
+    fn attr(&self) -> Option<StallAttr> {
+        if self.core.sb.attributing {
+            Some(self.core.sb.attr)
+        } else {
+            None
+        }
+    }
+
+    fn add_attr(&mut self, delta: &StallAttr) {
+        self.core.sb.attr.add(delta);
     }
 }
 
@@ -245,6 +317,38 @@ mod tests {
         let r = trace_cycles(&mut c, &[ph]).unwrap();
         assert_eq!(r.instret, 100_000_000);
         assert!(r.cycles >= 100_000_000);
+    }
+
+    #[test]
+    fn attribution_survives_extrapolation_exactly() {
+        let phases = [
+            Phase::new("setup", 1, body("li x5, 8\nvsetvli x0, x5, e8, m1\nli x10, 4096")),
+            Phase::new(
+                "stream",
+                20_000,
+                body("vle8.v v1, (x10)\nvle8.v v2, (x10)\nvadd.vv v3, v1, v2\nvse8.v v3, (x10)"),
+            ),
+        ];
+        let mut ct = Core::new(Arch::default());
+        ct.sb.attributing = true;
+        let rt = trace_cycles(&mut ct, &phases).unwrap();
+        let mut cf = Core::new(Arch::default());
+        cf.sb.attributing = true;
+        let rf = flat_cycles(&mut cf, &phases).unwrap();
+        assert_eq!(rt.cycles, rf.cycles);
+        assert_eq!(ct.sb.attr, cf.sb.attr, "trace vs flat attribution mismatch");
+        // Charges telescope to the front end's final position.
+        assert_eq!(ct.sb.attr.issue + ct.sb.attr.stall_cycles(), ct.sb.last_issue);
+        assert!(ct.sb.attr.stall_cycles() > 0, "vector stream must stall somewhere");
+    }
+
+    #[test]
+    fn attribution_off_is_untouched_by_tracing() {
+        let ph = Phase::new("huge", 1_000_000, body("addi x5, x5, 1"));
+        let mut c = Core::new(Arch::default());
+        let r = trace_cycles(&mut c, &[ph]).unwrap();
+        assert_eq!(r.instret, 1_000_000);
+        assert_eq!(c.sb.attr, crate::obs::attr::StallAttr::default());
     }
 
     #[test]

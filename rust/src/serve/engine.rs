@@ -61,6 +61,11 @@ pub struct Server {
     pub sim: ClusterSim,
     /// The cluster the server schedules batches onto.
     pub topo: ClusterTopology,
+    /// Record queue-depth samples into
+    /// [`ServeReport::depth_samples`] (one per event-loop time
+    /// advance). Off by default: sampling allocates per run, and the
+    /// aggregate depth statistics are computed either way.
+    pub sample_depth: bool,
     /// `(model index, batch size) -> (service cycles, avg busy cores)`.
     cache: HashMap<(usize, u32), (u64, f64)>,
 }
@@ -74,6 +79,7 @@ impl Server {
         Server {
             sim: ClusterSim::new(arch, precision),
             topo: ClusterTopology::from_arch(cores, &arch),
+            sample_depth: false,
             cache: HashMap::new(),
         }
     }
@@ -90,6 +96,7 @@ impl Server {
         Server {
             sim: ClusterSim::with_timing(arch, precision, timing),
             topo: ClusterTopology::from_arch(cores, &arch),
+            sample_depth: false,
             cache: HashMap::new(),
         }
     }
@@ -212,6 +219,7 @@ impl Server {
         let mut max_depth = 0usize;
         let mut busy_cycles = 0u64;
         let mut tile_core_cycles = 0.0f64;
+        let mut depth_samples: Vec<(u64, u64)> = Vec::new();
 
         while completed.len() < n {
             // 1. Admit every arrival due now.
@@ -280,6 +288,9 @@ impl Server {
             if next == u64::MAX {
                 break; // nothing left to do (all requests drained)
             }
+            if self.sample_depth {
+                depth_samples.push((now, batcher.depth() as u64));
+            }
             depth_area += batcher.depth() as u128 * (next - now) as u128;
             now = next;
         }
@@ -303,6 +314,7 @@ impl Server {
             mean_queue_depth: depth_area as f64 / span_cycles.max(1) as f64,
             max_queue_depth: max_depth,
             offered_rps,
+            depth_samples,
         })
     }
 }

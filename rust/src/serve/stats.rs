@@ -79,6 +79,12 @@ pub struct ServeReport {
     pub max_queue_depth: usize,
     /// Empirical offered load in requests per second (from the arrivals).
     pub offered_rps: f64,
+    /// Queue-depth samples `(cycle, depth)`, one per event-loop time
+    /// advance, strictly increasing in time. Empty unless the server's
+    /// `sample_depth` observability knob was set (see
+    /// [`Server::sample_depth`](super::engine::Server::sample_depth));
+    /// feeds the Perfetto "queue depth" counter track.
+    pub depth_samples: Vec<(u64, u64)>,
 }
 
 /// Nearest-rank percentile of an ascending-sorted slice (`p` in 0..=100).

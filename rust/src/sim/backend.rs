@@ -18,14 +18,19 @@
 use super::report::{LatencyStats, LayerReportRow, RunCheck, RunReport, ServeStats};
 use super::session::{RunSpec, SessionConfig, SessionError};
 use super::Engine;
-use crate::cluster::exec::{run_functional_cluster, ClusterSim};
+use crate::cluster::exec::{run_functional_cluster, ClusterLayerResult, ClusterSim};
 use crate::cluster::sched::NetworkSchedule;
 use crate::cluster::topology::ClusterTopology;
 use crate::compiler::layer::LayerConfig;
 use crate::compiler::pack::{synth_acts, synth_wts};
-use crate::coordinator::driver::{reference_outputs, run_functional, simulate_layer_timed};
+use crate::coordinator::driver::{
+    compile_for, reference_outputs, run_functional, simulate_layer_timed, timed_stats_obs,
+    LayerResult, TimedRun,
+};
 use crate::dimc::Precision;
 use crate::metrics::area::AreaModel;
+use crate::metrics::report::class_count_counters;
+use crate::obs::{StallAttr, StallClass, Timeline};
 use crate::serve::stats::percentile;
 use crate::serve::{Server, TraceConfig};
 use std::collections::HashSet;
@@ -63,6 +68,9 @@ fn base_report(backend: &'static str, cfg: &SessionConfig, model: String) -> Run
         layers: Vec::new(),
         latency: None,
         serve: None,
+        trace_level: cfg.trace_level.as_str(),
+        counters: Vec::new(),
+        timeline: None,
         checks: Vec::new(),
     }
 }
@@ -132,13 +140,35 @@ impl SingleCore {
     }
 
     /// Simulate one layer on the session's engine; on the DIMC engine the
-    /// baseline comparison runs too, filling speedup/ANS.
+    /// baseline comparison runs too, filling speedup/ANS. Returns the
+    /// primary engine's [`TimedRun`] alongside the row so the caller can
+    /// fold attribution and spans into the report when tracing is on
+    /// (both are `None` at [`TraceLevel::Off`](crate::obs::TraceLevel),
+    /// where this path prices exactly like `simulate_layer_timed`).
     fn layer_row(
         &self,
         cfg: &SessionConfig,
         l: &LayerConfig,
-    ) -> Result<LayerReportRow, SessionError> {
-        let primary = simulate_layer_timed(l, cfg.engine, cfg.precision, cfg.arch, cfg.timing)?;
+    ) -> Result<(LayerReportRow, TimedRun), SessionError> {
+        let c = compile_for(l, cfg.engine, cfg.precision);
+        let run = timed_stats_obs(
+            &c,
+            cfg.engine,
+            cfg.precision,
+            cfg.arch,
+            cfg.timing,
+            cfg.trace_level.counters_on(),
+            cfg.trace_level.timeline_on(),
+        )?;
+        let primary = LayerResult {
+            name: l.name.clone(),
+            engine: cfg.engine,
+            cycles: run.stats.cycles,
+            instret: run.stats.instret,
+            ops: l.ops(),
+            class_counts: run.stats.class_counts,
+            clock_hz: cfg.arch.clock_hz,
+        };
         let (baseline_cycles, speedup, ans) = if cfg.engine == Engine::Dimc {
             let b =
                 simulate_layer_timed(l, Engine::Baseline, cfg.precision, cfg.arch, cfg.timing)?;
@@ -147,7 +177,7 @@ impl SingleCore {
         } else {
             (None, None, None)
         };
-        Ok(LayerReportRow {
+        let row = LayerReportRow {
             name: l.name.clone(),
             ops: l.ops(),
             cycles: primary.cycles,
@@ -159,27 +189,30 @@ impl SingleCore {
             cores_used: 1,
             instret: Some(primary.instret),
             class_counts: Some(primary.class_counts),
-        })
+        };
+        Ok((row, run))
     }
 
     fn run_layer(&self, cfg: &SessionConfig, l: &LayerConfig) -> Result<RunReport, SessionError> {
-        let row = self.layer_row(cfg, l)?;
+        let (row, run) = self.layer_row(cfg, l)?;
         let mut rep = base_report(self.name(), cfg, l.name.clone());
         rep.cycles = row.cycles;
         rep.ops = row.ops;
         rep.gops = row.gops;
         rep.speedup = row.speedup;
         rep.layers = vec![row];
+        attach_single_obs(cfg, &mut rep, &[(l.name.clone(), run)]);
         Ok(rep)
     }
 
     fn run_network(&self, cfg: &SessionConfig) -> Result<RunReport, SessionError> {
         let w = cfg.first_workload()?;
         let mut rows = Vec::with_capacity(w.layers.len());
+        let mut runs = Vec::with_capacity(w.layers.len());
         let (mut cycles, mut base_cycles, mut ops) = (0u64, 0u64, 0u64);
         let mut have_baseline = true;
         for l in &w.layers {
-            let row = self.layer_row(cfg, l)?;
+            let (row, run) = self.layer_row(cfg, l)?;
             cycles += row.cycles;
             ops += row.ops;
             match row.baseline_cycles {
@@ -187,6 +220,7 @@ impl SingleCore {
                 None => have_baseline = false,
             }
             rows.push(row);
+            runs.push((l.name.clone(), run));
         }
         let mut rep = base_report(self.name(), cfg, w.name.clone());
         rep.cycles = cycles;
@@ -198,6 +232,7 @@ impl SingleCore {
             None
         };
         rep.layers = rows;
+        attach_single_obs(cfg, &mut rep, &runs);
         Ok(rep)
     }
 
@@ -244,6 +279,73 @@ impl Backend for SingleCore {
                     .to_string(),
             )),
         }
+    }
+}
+
+/// Fold single-core observability — per-hazard-class cycle attribution
+/// counters, the attribution-conservation check, instruction-class
+/// counters and (at `Full`) the per-layer / per-Plan-step timeline —
+/// into `rep`. A no-op below
+/// [`TraceLevel::Counters`](crate::obs::TraceLevel), so `Off` reports
+/// stay bit-identical to the pre-observability path.
+fn attach_single_obs(cfg: &SessionConfig, rep: &mut RunReport, runs: &[(String, TimedRun)]) {
+    if !cfg.trace_level.counters_on() {
+        return;
+    }
+    // Sum attribution across the layer runs; every run must conserve
+    // individually (issue + stalls + drain == that run's cycles), and
+    // the sum must conserve against the report total.
+    let mut total = StallAttr::default();
+    let mut each_ok = true;
+    for (_, r) in runs {
+        match &r.attr {
+            Some(a) => {
+                each_ok &= a.total() == r.stats.cycles;
+                total.add(a);
+            }
+            None => each_ok = false,
+        }
+    }
+    rep.counters.push(("pipeline.issue_cycles".to_string(), total.issue));
+    for c in StallClass::ALL {
+        rep.counters
+            .push((format!("pipeline.stall.{}", c.as_str()), total.classes[c.index()]));
+    }
+    rep.counters.push(("pipeline.drain_cycles".to_string(), total.drain));
+    let mut classes = [0u64; 8];
+    for row in &rep.layers {
+        if let Some(c) = row.class_counts {
+            for (acc, n) in classes.iter_mut().zip(c.iter()) {
+                *acc += n;
+            }
+        }
+    }
+    rep.counters.extend(class_count_counters(&classes));
+    rep.checks.push(RunCheck {
+        name: "obs:attribution-conservation".to_string(),
+        ok: each_ok && total.total() == rep.cycles,
+        detail: format!(
+            "issue {} + stalls {} + drain {} == {} cycles over {} layer run(s)",
+            total.issue,
+            total.stall_cycles(),
+            total.drain,
+            rep.cycles,
+            runs.len()
+        ),
+    });
+    if cfg.trace_level.timeline_on() {
+        let mut t = Timeline::new();
+        let mut off = 0u64;
+        for (name, r) in runs {
+            t.track("core 0").span(name, off, r.stats.cycles);
+            if let Some(steps) = &r.steps {
+                for s in steps {
+                    t.track("plan steps").span(&s.name, off + s.start, s.dur);
+                }
+            }
+            off += r.stats.cycles;
+        }
+        rep.timeline = Some(Box::new(t));
     }
 }
 
@@ -306,6 +408,7 @@ impl Cluster {
             instret: None,
             class_counts: None,
         }];
+        attach_cluster_obs(cfg, &mut rep, std::slice::from_ref(&r));
         Ok(rep)
     }
 
@@ -335,6 +438,7 @@ impl Cluster {
                 class_counts: None,
             })
             .collect();
+        attach_cluster_obs(cfg, &mut rep, &s.layers);
         Ok(rep)
     }
 
@@ -392,6 +496,75 @@ impl Backend for Cluster {
     }
 }
 
+/// Fold cluster observability — shard/contention/barrier cycle
+/// counters over the per-image layer-parallel view, the cluster
+/// conservation check and (at `Full`) the per-core / bus / barrier
+/// timeline — into `rep`. A no-op below
+/// [`TraceLevel::Counters`](crate::obs::TraceLevel).
+fn attach_cluster_obs(cfg: &SessionConfig, rep: &mut RunReport, layers: &[ClusterLayerResult]) {
+    if !cfg.trace_level.counters_on() {
+        return;
+    }
+    let (mut shard, mut cont, mut barr) = (0u64, 0u64, 0u64);
+    let mut per_layer_ok = true;
+    for r in layers {
+        shard += r.max_shard_cycles;
+        cont += r.contention_cycles;
+        barr += r.barrier_cycles;
+        per_layer_ok &=
+            r.cycles == r.max_shard_cycles + r.contention_cycles + r.barrier_cycles;
+    }
+    rep.counters.push(("cluster.shard_cycles".to_string(), shard));
+    rep.counters.push(("cluster.contention_cycles".to_string(), cont));
+    rep.counters.push(("cluster.barrier_cycles".to_string(), barr));
+    // Per-layer conservation always binds. The report total binds too
+    // when the schedule runs layer-parallel (batch x the per-image sum);
+    // image-parallel totals follow the wave formula instead, and the
+    // layer rows are the per-image layer-parallel view.
+    let image_cycles: u64 = layers.iter().map(|r| r.cycles).sum();
+    let total_ok = match rep.mode {
+        Some("layer-parallel") => rep.cycles == image_cycles * rep.batch as u64,
+        Some(_) => true,
+        None => rep.cycles == image_cycles,
+    };
+    rep.checks.push(RunCheck {
+        name: "obs:cluster-conservation".to_string(),
+        ok: per_layer_ok && total_ok,
+        detail: format!(
+            "shard {} + contention {} + barrier {} cycles per layer; per-image sum {} \
+             vs report {} ({}, batch {})",
+            shard,
+            cont,
+            barr,
+            image_cycles,
+            rep.cycles,
+            rep.mode.unwrap_or("single-layer"),
+            rep.batch
+        ),
+    });
+    if cfg.trace_level.timeline_on() {
+        let mut t = Timeline::new();
+        let mut off = 0u64;
+        for r in layers {
+            for k in 0..r.cores_used {
+                t.track(&format!("core {k}")).span(&r.name, off, r.max_shard_cycles);
+            }
+            if r.contention_cycles > 0 {
+                t.track("bus").span(&r.name, off + r.max_shard_cycles, r.contention_cycles);
+            }
+            if r.barrier_cycles > 0 {
+                t.track("barrier").span(
+                    &r.name,
+                    off + r.max_shard_cycles + r.contention_cycles,
+                    r.barrier_cycles,
+                );
+            }
+            off += r.cycles;
+        }
+        rep.timeline = Some(Box::new(t));
+    }
+}
+
 // ---------------------------------------------------------------------
 // serving
 // ---------------------------------------------------------------------
@@ -406,7 +579,10 @@ impl Serving {
     pub fn new(cfg: &SessionConfig) -> Self {
         // The serving engine prices batches through the cluster
         // scheduler; route it through the session's timing backend.
-        let server = Server::with_timing(cfg.arch, cfg.precision, cfg.cores, cfg.timing);
+        let mut server = Server::with_timing(cfg.arch, cfg.precision, cfg.cores, cfg.timing);
+        // Queue-depth sampling feeds the timeline's counter track; keep
+        // it off below Full so the hot event loop allocates nothing.
+        server.sample_depth = cfg.trace_level.timeline_on();
         Serving { server }
     }
 
@@ -448,6 +624,7 @@ impl Serving {
         rep.serve = Some(ServeStats {
             shape: sc.shape.as_str(),
             seed: sc.seed,
+            rps: sc.rps,
             requests: sc.requests,
             offered_rps: report.offered_rps,
             achieved_rps: report.achieved_rps(),
@@ -492,6 +669,53 @@ impl Serving {
             ok: windowed,
             detail: format!("every batch within 1..={}", sc.policy.max_batch),
         });
+
+        if cfg.trace_level.counters_on() {
+            let queue_wait: u64 = report.completed.iter().map(|r| r.queue_wait()).sum();
+            let service: u64 =
+                report.completed.iter().map(|r| r.completed - r.dispatched).sum();
+            let latency: u64 = report.completed.iter().map(|r| r.latency()).sum();
+            rep.counters.push(("serve.span_cycles".to_string(), report.span_cycles));
+            rep.counters.push(("serve.busy_cycles".to_string(), report.busy_cycles));
+            rep.counters.push(("serve.requests".to_string(), report.completed.len() as u64));
+            rep.counters.push(("serve.batches".to_string(), report.batches.len() as u64));
+            rep.counters.push(("serve.queue_wait_cycles".to_string(), queue_wait));
+            rep.counters.push(("serve.service_cycles".to_string(), service));
+            // Per-request span conservation: the queue-wait span plus the
+            // in-batch service span must tile the latency span exactly,
+            // for every request — the timeline's request track tells the
+            // truth iff this holds.
+            rep.checks.push(RunCheck {
+                name: "obs:request-span-conservation".to_string(),
+                ok: queue_wait + service == latency
+                    && report
+                        .completed
+                        .iter()
+                        .all(|r| r.queue_wait() + (r.completed - r.dispatched) == r.latency()),
+                detail: format!(
+                    "queue-wait {queue_wait} + service {service} cycles == latency \
+                     {latency} over {} requests",
+                    report.completed.len()
+                ),
+            });
+        }
+        if cfg.trace_level.timeline_on() {
+            let mut t = Timeline::new();
+            for (k, b) in report.batches.iter().enumerate() {
+                t.track("batches").span(
+                    &format!("batch {k} (x{})", b.size),
+                    b.dispatched,
+                    b.service_cycles,
+                );
+            }
+            for r in &report.completed {
+                t.track("requests").span(&format!("req {}", r.id), r.arrival, r.latency());
+            }
+            for &(ts, depth) in &report.depth_samples {
+                t.track("queue depth").sample(ts, depth);
+            }
+            rep.timeline = Some(Box::new(t));
+        }
         Ok(rep)
     }
 }

@@ -62,6 +62,10 @@ pub use report::{
 };
 pub use session::{RunSpec, ServeConfig, Session, SessionBuilder, SessionConfig, SessionError};
 
+/// Re-exported observability knob (see [`crate::obs`]): frontends set
+/// it with [`SessionBuilder::trace_level`] without importing `obs`.
+pub use crate::obs::TraceLevel;
+
 /// Which core executes a layer. Lives here since the façade owns engine
 /// selection; re-exported at the historical
 /// `coordinator::driver::Engine` path for compatibility.

@@ -7,6 +7,7 @@
 use super::json::JsonBuilder;
 use super::{Engine, Timing};
 use crate::cluster::scaling::ScalingPoint;
+use crate::obs::Timeline;
 use crate::serve::LoadPoint;
 
 /// One per-layer row of a [`RunReport`].
@@ -99,6 +100,11 @@ pub struct ServeStats {
     pub shape: &'static str,
     /// Trace seed (reproduces the run bit-for-bit).
     pub seed: u64,
+    /// The *configured* offered load in requests per second — the
+    /// session's `.rps(...)` knob, echoed so the run is reproducible
+    /// from the report alone (`offered_rps` below is the empirical
+    /// rate of the generated arrivals).
+    pub rps: f64,
     /// Requests in the trace.
     pub requests: usize,
     /// Empirical offered load in requests per second.
@@ -126,6 +132,7 @@ impl ServeStats {
         j.begin_obj();
         j.field_str("shape", self.shape);
         j.field_u64("seed", self.seed);
+        j.field_f64("rps", self.rps);
         j.field_u64("requests", self.requests as u64);
         j.field_f64("offered_rps", self.offered_rps);
         j.field_f64("achieved_rps", self.achieved_rps);
@@ -205,6 +212,21 @@ pub struct RunReport {
     pub latency: Option<LatencyStats>,
     /// Serving aggregates (serving runs).
     pub serve: Option<ServeStats>,
+    /// The [`TraceLevel`](crate::obs::TraceLevel) the run executed
+    /// under (`off` / `counters` / `full`) — provenance, echoed even
+    /// when off.
+    pub trace_level: &'static str,
+    /// Flat observability counters (name, value), in emission order.
+    /// Empty unless the session's trace level records counters; the
+    /// cycle-attribution entries are conservation-checked against
+    /// `cycles` (see the `obs:` entries in `checks`).
+    pub counters: Vec<(String, u64)>,
+    /// The run's [`Timeline`], recorded only at
+    /// [`TraceLevel::Full`](crate::obs::TraceLevel::Full). Consumed by
+    /// `repro timeline` for Perfetto export; deliberately *not* part of
+    /// the JSON report (it has its own exporter,
+    /// [`Timeline::to_chrome_trace`]).
+    pub timeline: Option<Box<Timeline>>,
     /// Built-in correctness cross-checks the backend ran.
     pub checks: Vec<RunCheck>,
 }
@@ -254,6 +276,13 @@ impl RunReport {
             Some(s) => s.write_json(j),
             None => j.null(),
         }
+        j.field_str("trace_level", self.trace_level);
+        j.key("counters");
+        j.begin_obj();
+        for (name, value) in &self.counters {
+            j.field_u64(name, *value);
+        }
+        j.end_obj();
         j.key("checks");
         j.begin_arr();
         for c in &self.checks {

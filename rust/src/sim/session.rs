@@ -16,6 +16,7 @@ use crate::cluster::scaling::{scaling_curve_with, ScalingPoint};
 use crate::compiler::layer::LayerConfig;
 use crate::coordinator::driver::simulate_layer_timed;
 use crate::dimc::Precision;
+use crate::obs::TraceLevel;
 use crate::pipeline::core::SimError;
 use crate::serve::{BatchPolicy, LoadPoint, TraceShape, Workload};
 use crate::workloads::zoo;
@@ -114,6 +115,10 @@ pub struct SessionConfig {
     pub workloads: Vec<Workload>,
     /// Serving parameters, when the session serves traffic.
     pub serve: Option<ServeConfig>,
+    /// Observability level every run records at (default
+    /// [`TraceLevel::Off`] — nothing recorded, reports bit-identical to
+    /// an untraced session).
+    pub trace_level: TraceLevel,
 }
 
 impl SessionConfig {
@@ -162,6 +167,7 @@ pub struct SessionBuilder {
     seed: Option<u64>,
     max_batch: Option<u32>,
     max_wait: Option<u64>,
+    trace_level: TraceLevel,
 }
 
 impl SessionBuilder {
@@ -180,6 +186,7 @@ impl SessionBuilder {
             seed: None,
             max_batch: None,
             max_wait: None,
+            trace_level: TraceLevel::Off,
         }
     }
 
@@ -278,6 +285,16 @@ impl SessionBuilder {
     /// (default: 0 — greedy batching).
     pub fn max_wait_cycles(mut self, cycles: u64) -> Self {
         self.max_wait = Some(cycles);
+        self
+    }
+
+    /// Observability level (default: [`TraceLevel::Off`]).
+    /// `Counters` attaches conservation-checked cycle-attribution and
+    /// tier counters to every report; `Full` additionally records a
+    /// [`Timeline`](crate::obs::Timeline) for Perfetto export
+    /// (`repro timeline`). Off records nothing and changes nothing.
+    pub fn trace_level(mut self, level: TraceLevel) -> Self {
+        self.trace_level = level;
         self
     }
 
@@ -407,6 +424,7 @@ impl SessionBuilder {
                 batch: self.batch,
                 workloads,
                 serve,
+                trace_level: self.trace_level,
             },
             single: SingleCore::new(),
             cluster: None,

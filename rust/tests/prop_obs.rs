@@ -1,0 +1,231 @@
+//! Observability properties: cycle attribution conserves exactly under
+//! both timing backends, Plan-step spans tile the analytic run, serving
+//! spans sum to latencies, and `TraceLevel::Off` is bit-identical to the
+//! pre-observability behaviour.
+//!
+//! Deterministic Lcg-driven generation, same style as `prop_plan.rs`
+//! (proptest is not vendored in this offline image).
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::compiler::layer::LayerConfig;
+use dimc_rvv::compiler::pack::Lcg;
+use dimc_rvv::coordinator::driver::{compile_for, timed_stats_obs, Engine, Timing};
+use dimc_rvv::dimc::Precision;
+use dimc_rvv::sim::{RunSpec, Session, TraceLevel};
+
+const PRECISIONS: [Precision; 3] = [Precision::Int4, Precision::Int2, Precision::Int1];
+
+fn random_conv(r: &mut Lcg, tag: u64) -> LayerConfig {
+    let kh = 1 + r.below(3) as u32;
+    let kw = 1 + r.below(3) as u32;
+    let stride = 1 + r.below(2) as u32;
+    let pad = r.below(2) as u32;
+    let ih = (kh + stride + r.below(8) as u32).max(kh + 1);
+    let iw = (kw + stride + r.below(8) as u32).max(kw + 1);
+    let ich = 1 + r.below(96) as u32;
+    let och = 1 + r.below(80) as u32;
+    LayerConfig::conv(&format!("ob{tag}"), ich, och, kh, kw, ih, iw, stride, pad)
+}
+
+fn random_gemm(r: &mut Lcg, tag: u64) -> LayerConfig {
+    let m = 1 + r.below(12) as u32;
+    let n = 1 + r.below(96) as u32;
+    let k = 1 + r.below(512) as u32;
+    LayerConfig::gemm_fused(&format!("og{tag}"), m, n, k, r.below(2) == 0, r.below(2) == 0)
+}
+
+#[test]
+fn attribution_conserves_and_agrees_across_backends() {
+    // On randomized geometries, under BOTH timing backends:
+    // issue + stalls + drain == cycles exactly, and the two backends
+    // produce identical per-class attributions (they share the
+    // scoreboard's attribution rules and the steady-state extrapolator).
+    let mut r = Lcg::new(0x0B5E);
+    let arch = Arch::default();
+    for tag in 0..14u64 {
+        let l =
+            if tag % 3 == 0 { random_gemm(&mut r, tag) } else { random_conv(&mut r, tag) };
+        let p = PRECISIONS[(tag % 3) as usize];
+        let c = compile_for(&l, Engine::Dimc, p);
+        let a = timed_stats_obs(&c, Engine::Dimc, p, arch, Timing::Analytic, true, false)
+            .unwrap();
+        let i = timed_stats_obs(&c, Engine::Dimc, p, arch, Timing::Interpreter, true, false)
+            .unwrap();
+        let (aa, ia) = (a.attr.unwrap(), i.attr.unwrap());
+        assert_eq!(a.stats.cycles, i.stats.cycles, "{l} @{p:?}: cycles diverged");
+        assert_eq!(aa.total(), a.stats.cycles, "{l} @{p:?}: analytic attribution leaks");
+        assert_eq!(ia.total(), i.stats.cycles, "{l} @{p:?}: interpreter attribution leaks");
+        assert_eq!(aa, ia, "{l} @{p:?}: attributions diverged");
+    }
+    // The baseline engine attributes through the same rules.
+    let l = random_conv(&mut r, 99);
+    let c = compile_for(&l, Engine::Baseline, Precision::Int4);
+    for timing in [Timing::Analytic, Timing::Interpreter] {
+        let t = timed_stats_obs(
+            &c,
+            Engine::Baseline,
+            Precision::Int4,
+            arch,
+            timing,
+            true,
+            false,
+        )
+        .unwrap();
+        assert_eq!(t.attr.unwrap().total(), t.stats.cycles, "{l} baseline {timing:?}");
+    }
+}
+
+#[test]
+fn plan_step_spans_tile_the_analytic_run() {
+    let mut r = Lcg::new(0x5AA5);
+    let arch = Arch::default();
+    for tag in 0..8u64 {
+        let l = random_conv(&mut r, tag);
+        let c = compile_for(&l, Engine::Dimc, Precision::Int4);
+        let t = timed_stats_obs(
+            &c,
+            Engine::Dimc,
+            Precision::Int4,
+            arch,
+            Timing::Analytic,
+            true,
+            true,
+        )
+        .unwrap();
+        let spans = t.steps.unwrap();
+        let attr = t.attr.unwrap();
+        assert_eq!(spans.len(), c.plan.steps.len(), "{l}: one span per Plan step");
+        // Spans abut: each starts where the previous ended, and together
+        // with the drain tail they tile the whole run.
+        let mut front = 0u64;
+        for s in &spans {
+            assert_eq!(s.start, front, "{l}: span `{}` does not abut", s.name);
+            front += s.dur;
+        }
+        assert_eq!(front + attr.drain, t.stats.cycles, "{l}: spans + drain != cycles");
+    }
+}
+
+#[test]
+fn trace_level_off_is_bit_identical_and_costless_in_the_report() {
+    let layers = vec![
+        LayerConfig::conv("o1", 24, 40, 3, 3, 8, 8, 1, 1),
+        LayerConfig::gemm("o2", 6, 40, 300),
+        LayerConfig::fc("o3", 8 * 8 * 40, 10),
+    ];
+    for cores in [1u32, 4] {
+        let mut reports = Vec::new();
+        for level in [TraceLevel::Off, TraceLevel::Counters, TraceLevel::Full] {
+            let mut s = Session::builder()
+                .layers("obknob", layers.clone())
+                .cores(cores)
+                .trace_level(level)
+                .build()
+                .unwrap();
+            reports.push(s.run(&RunSpec::Network).unwrap());
+        }
+        let [off, counters, full] = &reports[..] else { unreachable!() };
+        // Tracing observes; it must never perturb the numbers.
+        assert_eq!(off.cycles, counters.cycles, "cores={cores}");
+        assert_eq!(off.cycles, full.cycles, "cores={cores}");
+        assert_eq!(off.ops, full.ops, "cores={cores}");
+        for (a, b) in off.layers.iter().zip(full.layers.iter()) {
+            assert_eq!(a.cycles, b.cycles, "cores={cores} layer {}", a.name);
+        }
+        // Off records nothing; Counters records counters + a conservation
+        // check; Full additionally records the timeline.
+        assert!(off.counters.is_empty() && off.timeline.is_none(), "cores={cores}");
+        assert!(!counters.counters.is_empty(), "cores={cores}");
+        assert!(counters.timeline.is_none(), "cores={cores}");
+        assert!(full.timeline.as_ref().is_some_and(|t| t.events() > 0), "cores={cores}");
+        for rep in [counters, full] {
+            let check = rep
+                .checks
+                .iter()
+                .find(|c| c.name.starts_with("obs:"))
+                .unwrap_or_else(|| panic!("cores={cores}: conservation check missing"));
+            assert!(check.ok, "cores={cores}: {}", check.detail);
+        }
+        // Off is deterministic run-to-run, including serialization.
+        let mut again = Session::builder()
+            .layers("obknob", layers.clone())
+            .cores(cores)
+            .build()
+            .unwrap();
+        assert_eq!(
+            off.to_json(),
+            again.run(&RunSpec::Network).unwrap().to_json(),
+            "cores={cores}: Off report not bit-identical across runs"
+        );
+    }
+}
+
+#[test]
+fn serve_spans_sum_to_latencies_and_depth_samples_are_monotone() {
+    let mut s = Session::builder()
+        .model("resnet18")
+        .cores(2)
+        .rps(2000.0)
+        .requests(64)
+        .trace_level(TraceLevel::Full)
+        .build()
+        .unwrap();
+    let rep = s.run(&RunSpec::Serve).unwrap();
+    let check = rep
+        .checks
+        .iter()
+        .find(|c| c.name == "obs:request-span-conservation")
+        .expect("request-span conservation check missing");
+    assert!(check.ok, "{}", check.detail);
+    let counter = |name: &str| {
+        rep.counters
+            .iter()
+            .find(|(n, _)| n.as_str() == name)
+            .unwrap_or_else(|| panic!("counter {name} missing"))
+            .1
+    };
+    assert_eq!(counter("serve.requests"), 64);
+    assert!(counter("serve.busy_cycles") > 0);
+    let tl = rep.timeline.as_ref().expect("full tracing records the serving timeline");
+    let queue = tl
+        .tracks
+        .iter()
+        .find(|t| t.name == "queue depth")
+        .expect("queue-depth track missing");
+    assert!(!queue.samples.is_empty(), "no queue-depth samples");
+    assert!(
+        queue.samples.windows(2).all(|w| w[0].0 < w[1].0),
+        "queue-depth timestamps not strictly increasing"
+    );
+    // Request spans carry each request's full latency: their summed
+    // durations must equal the summed queue-wait + service counters.
+    let requests = tl.tracks.iter().find(|t| t.name == "requests").expect("requests track");
+    let span_sum: u64 = requests.spans.iter().map(|sp| sp.dur).sum();
+    assert_eq!(
+        span_sum,
+        counter("serve.queue_wait_cycles") + counter("serve.service_cycles"),
+        "request span durations do not sum to the latency total"
+    );
+}
+
+#[test]
+fn serving_off_is_bit_identical_to_counters_and_full() {
+    let mut cycles = Vec::new();
+    for level in [TraceLevel::Off, TraceLevel::Counters, TraceLevel::Full] {
+        let mut s = Session::builder()
+            .model("resnet18")
+            .cores(2)
+            .rps(1500.0)
+            .requests(48)
+            .trace_level(level)
+            .build()
+            .unwrap();
+        let rep = s.run(&RunSpec::Serve).unwrap();
+        assert!(rep.checks_ok(), "@{level:?}: {:?}", rep.checks);
+        cycles.push((rep.cycles, rep.serve.as_ref().unwrap().batches));
+    }
+    assert!(
+        cycles.windows(2).all(|w| w[0] == w[1]),
+        "trace level perturbed the serving simulation: {cycles:?}"
+    );
+}

@@ -464,6 +464,69 @@ fn run_reports_serialize_to_wellformed_json() {
     assert!(json.contains(r#""checks":[{"#), "{json}");
 }
 
+// ------------------------------------------------------------------
+// provenance echo + round-trip, observability counters in JSON
+// ------------------------------------------------------------------
+
+/// The serve report's JSON must echo every knob needed to reproduce the
+/// run — and rebuilding a session purely from those echoed fields must
+/// reproduce it bit-for-bit.
+#[test]
+fn serve_report_echoes_full_provenance_and_round_trips() {
+    let build = |cores: u32, rps: f64, requests: usize, seed: u64, shape: TraceShape| {
+        Session::builder()
+            .model("resnet18")
+            .cores(cores)
+            .rps(rps)
+            .requests(requests)
+            .seed(seed)
+            .trace(shape)
+            .build()
+            .unwrap()
+    };
+    let mut s = build(3, 1234.5, 60, 0xC0FFEE, TraceShape::Ramp);
+    let rep = s.run(&RunSpec::Serve).unwrap();
+    let json = rep.to_json();
+    for needle in [
+        r#""backend":"serving""#,
+        r#""engine":"dimc""#,
+        r#""timing":"analytic""#,
+        r#""precision_bits":4"#,
+        r#""cores":3"#,
+        r#""trace_level":"off""#,
+        r#""shape":"ramp""#,
+        r#""seed":12648430"#,
+        r#""rps":1234.5"#,
+        r#""requests":60"#,
+    ] {
+        assert!(json.contains(needle), "provenance `{needle}` missing from {json}");
+    }
+    let ss = rep.serve.as_ref().unwrap();
+    let shape = TraceShape::parse(ss.shape).unwrap();
+    let mut again = build(rep.cores, ss.rps, ss.requests, ss.seed, shape);
+    assert_eq!(
+        rep.to_json(),
+        again.run(&RunSpec::Serve).unwrap().to_json(),
+        "session rebuilt from the report's provenance diverged"
+    );
+}
+
+#[test]
+fn observability_counters_serialize_into_the_report_json() {
+    let mut s = Session::builder()
+        .layers("tiny", tiny_net())
+        .trace_level(dimc_rvv::sim::TraceLevel::Counters)
+        .build()
+        .unwrap();
+    let json = s.run(&RunSpec::Network).unwrap().to_json();
+    assert_wellformed_json(&json);
+    assert!(json.contains(r#""trace_level":"counters""#), "{json}");
+    assert!(json.contains(r#""counters":{"pipeline.issue_cycles":"#), "{json}");
+    assert!(json.contains(r#""pipeline.stall.raw_v":"#), "{json}");
+    assert!(json.contains(r#""instr.dimc_compute":"#), "{json}");
+    assert!(json.contains(r#""name":"obs:attribution-conservation""#), "{json}");
+}
+
 #[test]
 fn engine_reexport_keeps_the_historical_path_working() {
     // The enum moved to sim::Engine; the driver path must stay usable
