@@ -1,0 +1,88 @@
+//! Inter-layer overlap perf guard — the figure behind `BENCH_7.json`.
+//!
+//! Simulates every zoo model (Int4, analytic timing, single core) with
+//! inter-layer pipelining off and with next-layer weight loads hoisted
+//! into the current layer's DC.P sweeps, asserts overlap is **never
+//! slower** on any model (every hoist is gated on a strict analytic
+//! win) and that ResNet-50 recovers a measurable fraction, then writes
+//! the per-model savings to `BENCH_7.json` at the repository root so CI
+//! can guard the overlap win.
+//!
+//! `--short` (or `DIMC_BENCH_SHORT=1`) sweeps a 3-model subset —
+//! faster, still writes the artifact (tagged `"short": true`).
+
+use dimc_rvv::coordinator::figures::{self, OverlapPoint};
+use dimc_rvv::sim::{JsonBuilder, Pipelining, RunSpec, Session};
+
+/// Off/overlap network cycles for one zoo model (short mode).
+fn point_for(model: &'static str) -> OverlapPoint {
+    let run = |pipelining: Pipelining| {
+        let mut s = Session::builder().model(model).pipelining(pipelining).build().unwrap();
+        let rep = s.run(&RunSpec::Network).unwrap();
+        assert!(rep.checks_ok(), "{model}: conservation checks failed");
+        rep.cycles
+    };
+    OverlapPoint {
+        model,
+        off_cycles: run(Pipelining::Off),
+        overlap_cycles: run(Pipelining::Overlap),
+    }
+}
+
+fn main() {
+    let short = std::env::args().any(|a| a == "--short")
+        || std::env::var("DIMC_BENCH_SHORT").is_ok_and(|v| v != "0");
+    let points: Vec<OverlapPoint> = if short {
+        ["resnet18", "resnet50", "mobilebert"].into_iter().map(point_for).collect()
+    } else {
+        figures::overlap_points().expect("zoo sweep")
+    };
+
+    println!(
+        "pipeline overlap: {} models, off vs overlap{}",
+        points.len(),
+        if short { " (short)" } else { "" }
+    );
+    let mut resnet50_saving = 0.0f64;
+    for p in &points {
+        assert!(
+            p.overlap_cycles <= p.off_cycles,
+            "{}: overlap {} exceeds off {}",
+            p.model,
+            p.overlap_cycles,
+            p.off_cycles
+        );
+        if p.model == "resnet50" {
+            resnet50_saving = p.saving_frac();
+        }
+        println!(
+            "  {:<20} off {:>12} overlap {:>12} saving {:>6.2}%",
+            p.model,
+            p.off_cycles,
+            p.overlap_cycles,
+            p.saving_frac() * 100.0
+        );
+    }
+    assert!(resnet50_saving > 0.0, "resnet50 must show a measurable overlap win");
+
+    let mut j = JsonBuilder::new();
+    j.begin_obj();
+    j.field_str("bench", "pipeline_overlap");
+    j.field_bool("short", short);
+    j.key("models");
+    j.begin_arr();
+    for p in &points {
+        j.begin_obj();
+        j.field_str("model", p.model);
+        j.field_u64("off_cycles", p.off_cycles);
+        j.field_u64("overlap_cycles", p.overlap_cycles);
+        j.field_f64("saving_pct", p.saving_frac() * 100.0);
+        j.end_obj();
+    }
+    j.end_arr();
+    j.end_obj();
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_7.json");
+    std::fs::write(path, j.finish() + "\n").expect("write BENCH_7.json");
+    println!("  wrote {path}");
+}

@@ -32,6 +32,7 @@ use super::shard::{ShardPlan, ShardStrategy};
 use super::topology::ClusterTopology;
 use crate::arch::Arch;
 use crate::compiler::layer::{LayerConfig, LayerKind};
+use crate::compiler::netplan::{self, Pipelining};
 use crate::coordinator::driver::{compile_for, run_functional, timed_stats, Engine, Timing};
 use crate::dimc::Precision;
 use crate::pipeline::core::SimError;
@@ -79,7 +80,9 @@ fn sim_key(l: &LayerConfig) -> SimKey {
         LayerKind::Fc => 1u8,
         // Fusion flags do not steer the instruction stream, but keep the
         // keys distinct so the cache never has to reason about that.
-        LayerKind::Gemm { bias, relu } => 2u8 | (u8::from(bias) << 2) | (u8::from(relu) << 3),
+        LayerKind::Gemm { bias, relu, residual } => {
+            2u8 | (u8::from(bias) << 2) | (u8::from(relu) << 3) | (u8::from(residual) << 4)
+        }
     };
     (kind, l.ich, l.och, l.kh, l.kw, l.ih, l.iw, l.stride, l.pad)
 }
@@ -99,7 +102,13 @@ pub struct ClusterSim {
     /// construction ([`ClusterSim::with_timing`]) so a cached cycle count
     /// can never have been priced by a different backend than requested.
     timing: Timing,
+    /// Inter-layer pipelining policy the scheduler applies (see
+    /// [`ClusterSim::pipelining`]); fixed at construction like the
+    /// timing backend, for the same cache-coherence reason.
+    pipelining: Pipelining,
     cache: HashMap<SimKey, (u64, u64)>, // -> (cycles, mem bytes)
+    /// Memoized per-boundary overlap savings, keyed by chain geometry.
+    overlap_cache: HashMap<Vec<SimKey>, Vec<u64>>,
 }
 
 impl ClusterSim {
@@ -112,13 +121,57 @@ impl ClusterSim {
     /// what makes zoo-wide scaling sweeps fast; see
     /// [`pipeline::analytic`](crate::pipeline::analytic)).
     pub fn with_timing(arch: Arch, precision: Precision, timing: Timing) -> Self {
-        ClusterSim { arch, precision, timing, cache: HashMap::new() }
+        Self::configured(arch, precision, timing, Pipelining::default())
+    }
+
+    /// As [`ClusterSim::with_timing`] with an explicit inter-layer
+    /// pipelining policy (default [`Pipelining::Off`] — the
+    /// layer-at-a-time schedules every pre-pipelining caller gets).
+    pub fn configured(
+        arch: Arch,
+        precision: Precision,
+        timing: Timing,
+        pipelining: Pipelining,
+    ) -> Self {
+        ClusterSim {
+            arch,
+            precision,
+            timing,
+            pipelining,
+            cache: HashMap::new(),
+            overlap_cache: HashMap::new(),
+        }
     }
 
     /// The timing backend pricing every shard simulation of this
     /// instance (fixed at construction).
     pub fn timing(&self) -> Timing {
         self.timing
+    }
+
+    /// The inter-layer pipelining policy of this instance (fixed at
+    /// construction). At [`Pipelining::Overlap`] the network scheduler
+    /// credits [`netplan::overlap_savings`] wherever consecutive layers
+    /// run back-to-back on one core.
+    pub fn pipelining(&self) -> Pipelining {
+        self.pipelining
+    }
+
+    /// Per-boundary overlap savings of `layers`' DIMC chain under this
+    /// instance's policy — empty at [`Pipelining::Off`] (or for chains
+    /// shorter than two layers), [`netplan::overlap_savings`] memoized
+    /// by chain geometry otherwise.
+    pub fn overlap_savings(&mut self, layers: &[LayerConfig]) -> Vec<u64> {
+        if self.pipelining != Pipelining::Overlap || layers.len() < 2 {
+            return Vec::new();
+        }
+        let key: Vec<SimKey> = layers.iter().map(sim_key).collect();
+        if let Some(hit) = self.overlap_cache.get(&key) {
+            return hit.clone();
+        }
+        let v = netplan::overlap_savings(layers, self.precision, &self.arch);
+        self.overlap_cache.insert(key, v.clone());
+        v
     }
 
     /// Simulate one (sub-)layer on a single DIMC core: cycles + memory

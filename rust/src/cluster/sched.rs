@@ -64,6 +64,12 @@ pub struct NetworkSchedule {
     /// Cores per full image-parallel wave (the `k` the scheduler chose);
     /// 0 when the layer-parallel mode won.
     pub wave: u32,
+    /// Per-image cycles recovered by inter-layer overlap under the
+    /// winning mode (see
+    /// [`Pipelining`](crate::compiler::netplan::Pipelining)); 0 at
+    /// `Off`. `cycles` already has the recovery applied — this field is
+    /// the audit trail the observability conservation check charges.
+    pub overlap_saved: u64,
 }
 
 impl NetworkSchedule {
@@ -124,6 +130,14 @@ impl ClusterSim {
     ) -> Result<NetworkSchedule, SimError> {
         let batch = batch.max(1);
 
+        // Per-boundary inter-layer overlap savings (empty at
+        // Pipelining::Off). Overlap is only creditable where consecutive
+        // layers run back-to-back on one core with no barrier between
+        // them: always true inside an image-parallel stream, true in the
+        // layer-parallel candidate only at boundaries whose two layers
+        // both scheduled onto a single core.
+        let saved = self.overlap_savings(layers);
+
         // --- layer-parallel candidate ---
         let mut per_layer = Vec::with_capacity(layers.len());
         let mut lp_image_cycles = 0u64;
@@ -134,6 +148,13 @@ impl ClusterSim {
             image_ops += r.ops;
             per_layer.push(r);
         }
+        let lp_saved: u64 = saved
+            .iter()
+            .enumerate()
+            .filter(|&(b, _)| per_layer[b].cores_used == 1 && per_layer[b + 1].cores_used == 1)
+            .map(|(_, &s)| s)
+            .sum();
+        let lp_image_cycles = lp_image_cycles.saturating_sub(lp_saved);
         let lp_cycles = lp_image_cycles * batch as u64;
 
         // --- image-parallel candidate: single-core network per image ---
@@ -144,6 +165,8 @@ impl ClusterSim {
             net_cycles += c;
             net_bytes += b;
         }
+        let ip_saved: u64 = saved.iter().sum();
+        let net_cycles = net_cycles.saturating_sub(ip_saved);
         let mut ip_cycles = u64::MAX;
         let mut ip_wave = 1u32;
         for k in 1..=topo.cores.min(batch) {
@@ -164,10 +187,10 @@ impl ClusterSim {
             }
         }
 
-        let (mode, cycles, wave) = if ip_cycles < lp_cycles {
-            (ClusterMode::ImageParallel, ip_cycles, ip_wave)
+        let (mode, cycles, wave, overlap_saved) = if ip_cycles < lp_cycles {
+            (ClusterMode::ImageParallel, ip_cycles, ip_wave, ip_saved)
         } else {
-            (ClusterMode::LayerParallel, lp_cycles, 0)
+            (ClusterMode::LayerParallel, lp_cycles, 0, lp_saved)
         };
         Ok(NetworkSchedule {
             model: model.to_string(),
@@ -179,6 +202,7 @@ impl ClusterSim {
             ops: image_ops * batch as u64,
             clock_hz: self.arch.clock_hz,
             wave,
+            overlap_saved,
         })
     }
 }
@@ -258,6 +282,7 @@ mod tests {
             ops: 1,
             clock_hz: 500e6,
             wave: 4,
+            overlap_saved: 0,
         };
         assert!((s.avg_cores_used() - 2.5).abs() < 1e-12);
         // An empty layer-parallel schedule degrades to one core.

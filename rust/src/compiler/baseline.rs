@@ -75,6 +75,7 @@ pub fn compile_baseline_with_shift(l: &LayerConfig, shift: u8) -> LayerProgram {
         ihp * iwp * ich_pad8(l) as u64,
         l.och as u64 * k_pad8(l) as u64,
         0,
+        0,
     );
     let g = Geom::new(l, shift, layout);
     let outputs = l.patches() * l.och as u64;

@@ -29,6 +29,13 @@ pub enum LayerKind {
         /// DC.F requantization epilogue; tracked for op-accounting /
         /// reporting symmetry (it is free either way).
         relu: bool,
+        /// A fused residual add: the skip-connection tensor joins the
+        /// write-back group by *seeding* the first-tile partial sums from
+        /// a dedicated residual region instead of the zero source `v6`
+        /// (see `compiler::mapper::gen_patch`), so the add rides the
+        /// existing DC accumulation for free — no extra vector-ALU pass.
+        /// Charged in [`LayerConfig::ops`] (one add per output element).
+        residual: bool,
     },
 }
 
@@ -90,9 +97,31 @@ impl LayerConfig {
     /// Dense GEMM with fused bias-add / activation flags (see
     /// [`LayerKind::Gemm`] for how each flag is modelled).
     pub fn gemm_fused(name: &str, m: u32, n: u32, k: u32, bias: bool, relu: bool) -> Self {
+        Self::gemm_epilogue(name, m, n, k, bias, relu, false)
+    }
+
+    /// Dense GEMM with a fused residual add (plus optional bias/ReLU):
+    /// the skip tensor is accumulated in the write-back group by seeding
+    /// the first-tile partial sums from the residual region (see
+    /// [`LayerKind::Gemm`]).
+    pub fn gemm_residual(name: &str, m: u32, n: u32, k: u32, bias: bool, relu: bool) -> Self {
+        Self::gemm_epilogue(name, m, n, k, bias, relu, true)
+    }
+
+    /// Dense GEMM with the full fused-epilogue flag set.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_epilogue(
+        name: &str,
+        m: u32,
+        n: u32,
+        k: u32,
+        bias: bool,
+        relu: bool,
+        residual: bool,
+    ) -> Self {
         LayerConfig {
             name: name.into(),
-            kind: LayerKind::Gemm { bias, relu },
+            kind: LayerKind::Gemm { bias, relu, residual },
             ich: k,
             och: n,
             kh: 1,
@@ -122,6 +151,11 @@ impl LayerConfig {
     /// Whether this layer is a dense GEMM.
     pub fn is_gemm(&self) -> bool {
         matches!(self.kind, LayerKind::Gemm { .. })
+    }
+
+    /// Whether this layer fuses a residual add into its write-back group.
+    pub fn residual_fused(&self) -> bool {
+        matches!(self.kind, LayerKind::Gemm { residual: true, .. })
     }
 
     /// GEMM output rows `M` (the patch sweep). Meaningful for any layer
@@ -166,16 +200,18 @@ impl LayerConfig {
     }
 
     /// Operations = 2 x MACs (multiply + accumulate), as in GOPS
-    /// reporting, plus one add per output element when a GEMM fuses a
-    /// bias. The bias term is linear in both `M` (rows) and `N`
-    /// (columns), so per-shard `ops()` still sums exactly to the
-    /// parent's under both cluster sharding strategies.
+    /// reporting, plus one add per output element for each fused
+    /// elementwise epilogue term (bias, residual). Both terms are linear
+    /// in `M` (rows) and `N` (columns), so per-shard `ops()` still sums
+    /// exactly to the parent's under both cluster sharding strategies.
     pub fn ops(&self) -> u64 {
-        let bias_ops = match self.kind {
-            LayerKind::Gemm { bias: true, .. } => self.patches() * self.och as u64,
+        let epilogue_ops = match self.kind {
+            LayerKind::Gemm { bias, residual, .. } => {
+                (bias as u64 + residual as u64) * self.patches() * self.och as u64
+            }
             _ => 0,
         };
-        2 * self.macs() + bias_ops
+        2 * self.macs() + epilogue_ops
     }
 
     /// Channels padded so one (y, x) run is 64-bit register aligned in the
@@ -236,15 +272,16 @@ impl std::fmt::Display for LayerConfig {
                 self.iw
             ),
             LayerKind::Fc => write!(f, "{}: fc {}->{}", self.name, self.ich, self.och),
-            LayerKind::Gemm { bias, relu } => write!(
+            LayerKind::Gemm { bias, relu, residual } => write!(
                 f,
-                "{}: gemm {}x{}x{}{}{}",
+                "{}: gemm {}x{}x{}{}{}{}",
                 self.name,
                 self.gemm_m(),
                 self.gemm_n(),
                 self.gemm_k(),
                 if bias { " +bias" } else { "" },
-                if relu { " +relu" } else { "" }
+                if relu { " +relu" } else { "" },
+                if residual { " +res" } else { "" }
             ),
         }
     }

@@ -57,6 +57,9 @@ struct Geom {
     och_pad: u32,
     stride: u32,
     ow: u32,
+    /// Fused residual add: seed first-tile psums from the residual
+    /// region instead of the zero source `v6`.
+    res: bool,
     layout: MemLayout,
 }
 
@@ -76,6 +79,7 @@ impl Geom {
             och_pad: l.groups() * DIMC_ROWS as u32,
             stride: l.stride,
             ow: l.ow(),
+            res: l.residual_fused(),
             layout,
         }
     }
@@ -96,6 +100,15 @@ impl Geom {
     #[inline]
     fn psum_addr(&self, p: u64, h: u32) -> u32 {
         self.layout.psum_base + (p as u32 * DIMC_ROWS as u32 + h * 16) * 4
+    }
+
+    /// Byte address of the residual-input slot for (patch, group,
+    /// half-batch): i32 accumulators in psum register order, one slot
+    /// per output element (unlike the psum region, which is reused
+    /// across groups, the residual input is distinct per group).
+    #[inline]
+    fn res_addr(&self, p: u64, g: u32, h: u32) -> u32 {
+        self.layout.res_base + (p as u32 * self.och_pad + g * DIMC_ROWS as u32 + h * 16) * 4
     }
 
     /// Byte address of packed outputs for (patch, group, half-batch).
@@ -132,6 +145,11 @@ pub fn compile_dimc(l: &LayerConfig, p: Precision) -> LayerProgram {
         ihp * iwp * l.ich_pad(p) as u64 * p.bits() as u64 / 8,
         (l.groups() * DIMC_ROWS as u32 * l.tiles(p)) as u64 * DIMC_ROW_BYTES as u64,
         l.patches() * DIMC_ROWS as u64 * 4,
+        if l.residual_fused() {
+            l.patches() * (l.groups() * DIMC_ROWS as u32) as u64 * 4
+        } else {
+            0
+        },
     );
     let g = Geom::new(l, p, layout);
     let mut phases: Vec<PhaseSpec> = Vec::new();
@@ -280,9 +298,16 @@ fn gen_patch(g: &Geom, grp: u32, t: u32, pidx: u64, rows_g: u32, width: u8) -> V
         // psums spread over min(rows_h, 8) registers (2 per register once
         // rows_h > 8); each LMUL=4 access covers 4 registers.
         let loads = rows_h.min(8).div_ceil(4);
-        if !first {
-            // reload chained partial sums
-            e.li(5, g.psum_addr(pidx, h));
+        // First tile of a residual-fused layer seeds the psums from the
+        // residual region — the skip add then rides the DC accumulation.
+        let seed = !first || g.res;
+        if seed {
+            let addr = if first {
+                g.res_addr(pidx, grp, h)
+            } else {
+                g.psum_addr(pidx, h)
+            };
+            e.li(5, addr);
             cfg.want(&mut e, 8, 32, 4);
             e.vle32(24, 5);
             if loads > 1 {
@@ -295,7 +320,7 @@ fn gen_patch(g: &Geom, grp: u32, t: u32, pidx: u64, rows_g: u32, width: u8) -> V
             // psum register interleave: reg = 24 + r%8, half = r/8 — keeps
             // consecutive DC results in distinct registers (no WB stalls).
             let (pv, ph) = (24 + (r % 8) as u8, r / 8 == 1);
-            let (vs1, sh) = if first { (6u8, false) } else { (pv, ph) };
+            let (vs1, sh) = if seed { (pv, ph) } else { (6u8, false) };
             if last {
                 e.push(Instr::DcF {
                     sh,

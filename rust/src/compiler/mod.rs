@@ -17,10 +17,12 @@
 pub mod baseline;
 pub mod layer;
 pub mod mapper;
+pub mod netplan;
 pub mod pack;
 pub mod plan;
 pub mod program;
 
 pub use layer::{LayerConfig, LayerKind};
+pub use netplan::{HoistDecision, NetworkPlan, Pipelining};
 pub use plan::{CompiledLayer, Plan, PlanStep};
 pub use program::LayerProgram;

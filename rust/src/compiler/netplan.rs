@@ -1,0 +1,628 @@
+//! Network-level Plan pipelining: overlap the next layer's weight-tile
+//! loads with the current layer's final DC sweep.
+//!
+//! A layer-at-a-time schedule serializes every layer as
+//! `wt-load -> sweep -> wt-load -> sweep -> ...`. The standalone
+//! weight-load phases are latency-bound: each trip is a chain of
+//! `vle8` loads feeding `DL.M` row stores, so the in-order core eats
+//! the full memory latency per row while the DIMC array sits idle. But
+//! the *final* sweep of layer `n` no longer produces anything layer `n`
+//! still needs after it retires — its trips are exactly the slack into
+//! which layer `n+1`'s first weight tile can be staged.
+//!
+//! [`NetworkPlan::build`] chains the zoo's per-layer [`Plan`]s and, at
+//! [`Pipelining::Overlap`], hoists layer `n+1`'s first weight-tile-load
+//! rows into layer `n`'s final sweep trips whenever the move is
+//! **capacity-legal** (see below) and **strictly profitable** under the
+//! analytic timing model. The transformation is a pure Plan rewrite:
+//!
+//! * the final sweep step of layer `n` is split into an untouched
+//!   *remainder* step and a *merged* step whose body carries, per trip,
+//!   one hoisted weight row (two 32-byte `vle8` staging loads spliced
+//!   into the sweep's DC-fence stall window, the four `DL.M` sector
+//!   stores appended after the write-back);
+//! * layer `n+1`'s first weight-load step loses the hoisted trips.
+//!
+//! **Capacity legality (normative).** An overlap decision is legal iff
+//! all of the following hold — every one is checked structurally, not
+//! assumed:
+//!
+//! 1. *Depth-1 staging:* only the first weight-tile step of the
+//!    immediate successor is hoisted, and only into the producer's
+//!    final sweep — at most one staged kernel set coexists with the
+//!    resident one, and the staged rows number at most
+//!    [`DIMC_ROWS`](crate::arch::DIMC_ROWS).
+//! 2. *Sweep slack:* hoisted rows `R <= min(wt trips, sweep trips)` —
+//!    one row per merged trip, never more trips than the sweep has.
+//! 3. *Dead staging registers:* the two staging VRF quads are chosen
+//!    from register groups the host sweep body provably never touches
+//!    (a full per-instruction liveness walk with the vector
+//!    configuration tracked through the body), and the staging address
+//!    pointer `x29` is untouched by the host body.
+//! 4. *Conservative fence pricing:* the hoisted `DL.M`s go through the
+//!    scoreboard's DIMC state fence unchanged, so every subsequent DC
+//!    op in the merged schedule pays the same ordering cost the
+//!    hardware's staging commit would impose.
+//!
+//! Decisions that are legal but not *strictly* cheaper under
+//! [`analytic_cycles`] are recorded and discarded, which makes the
+//! pipelined network total never slower than layer-at-a-time by
+//! construction. With [`Pipelining::Off`] (the default) the built
+//! NetworkPlan is the identity: per-layer Plans pass through untouched,
+//! bit-for-bit — the differential anchor `rust/tests/prop_pipeline.rs`
+//! pins.
+//!
+//! Functional inertness: the data-carrying execution paths
+//! ([`run_functional`](crate::coordinator::driver::run_functional),
+//! [`Session::verify`](crate::sim::Session::verify)) always execute the
+//! original per-layer programs — the merged bodies exist only in the
+//! timing Plans — so outputs are bit-identical at both settings by
+//! construction, and the property suite re-checks it end to end.
+
+use super::layer::LayerConfig;
+use super::mapper::compile_dimc_planned;
+use super::plan::{Plan, PlanStep};
+use super::program::PhaseKind;
+use crate::arch::{Arch, DIMC_ROWS, VLENB};
+use crate::dimc::Precision;
+use crate::isa::{AluOp, Instr, VType};
+use crate::pipeline::analytic::analytic_cycles;
+use crate::pipeline::core::class_index;
+
+/// Inter-layer scheduling policy of a [`NetworkPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Pipelining {
+    /// Layer-at-a-time: every layer runs its own Plan unmodified — the
+    /// PR 5 behavior, and the differential baseline.
+    #[default]
+    Off,
+    /// Hoist next-layer weight-tile loads into current-layer final
+    /// sweeps where capacity-legal and strictly profitable.
+    Overlap,
+}
+
+impl Pipelining {
+    /// Canonical lower-case name (CLI / report vocabulary).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Pipelining::Off => "off",
+            Pipelining::Overlap => "overlap",
+        }
+    }
+
+    /// Parse the canonical name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Pipelining> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Some(Pipelining::Off),
+            "overlap" => Some(Pipelining::Overlap),
+            _ => None,
+        }
+    }
+}
+
+/// The audited outcome of one layer-boundary overlap decision —
+/// recorded for every boundary, applied or not, so tests and the obs
+/// layer can assert capacity legality instead of trusting it.
+#[derive(Debug, Clone)]
+pub struct HoistDecision {
+    /// Boundary index: between `plans[boundary]` and
+    /// `plans[boundary + 1]`.
+    pub boundary: usize,
+    /// Weight rows hoisted (`R`) — 0 unless `applied`.
+    pub rows: u64,
+    /// Trip count of the producer's final sweep step (`P`).
+    pub sweep_trips: u64,
+    /// Trip count of the successor's first weight-load step before
+    /// hoisting.
+    pub wt_trips: u64,
+    /// The two staging VRF quads (base registers) chosen for the
+    /// hoisted `vle8`s; `None` when no two dead quads exist.
+    pub quads: Option<[u8; 2]>,
+    /// Vector-register live-set of the host sweep body (bit `r` set
+    /// iff `v{r}` is read or written) — what the quads were checked
+    /// against.
+    pub live_vmask: u32,
+    /// Structurally legal (pattern + liveness + capacity) — pricing may
+    /// still reject it.
+    pub legal: bool,
+    /// Legal *and* strictly cheaper under the analytic model, hence
+    /// applied to the plans.
+    pub applied: bool,
+    /// Analytic network cycles recovered by this decision (0 unless
+    /// `applied`).
+    pub saved_cycles: u64,
+}
+
+impl HoistDecision {
+    fn rejected(boundary: usize) -> Self {
+        HoistDecision {
+            boundary,
+            rows: 0,
+            sweep_trips: 0,
+            wt_trips: 0,
+            quads: None,
+            live_vmask: 0,
+            legal: false,
+            applied: false,
+            saved_cycles: 0,
+        }
+    }
+}
+
+/// A compiled *network* schedule: the per-layer [`Plan`]s in execution
+/// order, rewritten for inter-layer overlap when built at
+/// [`Pipelining::Overlap`], plus the audit trail of every boundary
+/// decision. Each plan slot is priced on a fresh scoreboard (layer
+/// boundaries drain the pipeline), so the network total is the sum of
+/// slot totals under either setting — which keeps the observability
+/// conservation identities intact.
+#[derive(Debug, Clone)]
+pub struct NetworkPlan {
+    /// Per-layer Plans, possibly rewritten (merged sweep steps, reduced
+    /// weight-load trips). At [`Pipelining::Off`] these are the input
+    /// Plans, untouched.
+    pub plans: Vec<Plan>,
+    /// One decision per layer boundary (empty at `Off`).
+    pub decisions: Vec<HoistDecision>,
+    /// The policy this NetworkPlan was built under.
+    pub pipelining: Pipelining,
+}
+
+impl NetworkPlan {
+    /// Chain `plans` under `pipelining`. `precision` sets the DIMC MAC
+    /// lanes used to annotate rewritten steps (it must match the
+    /// precision the plans were compiled at); `arch` prices the
+    /// profitability gate.
+    pub fn build(
+        mut plans: Vec<Plan>,
+        precision: Precision,
+        arch: &Arch,
+        pipelining: Pipelining,
+    ) -> NetworkPlan {
+        let mut decisions = Vec::new();
+        if pipelining == Pipelining::Overlap && plans.len() >= 2 {
+            for b in 0..plans.len() - 1 {
+                decisions.push(try_hoist(&mut plans, b, precision, arch));
+            }
+        }
+        NetworkPlan { plans, decisions, pipelining }
+    }
+
+    /// Total weight rows hoisted across all applied decisions.
+    pub fn hoisted_rows(&self) -> u64 {
+        self.decisions.iter().filter(|d| d.applied).map(|d| d.rows).sum()
+    }
+
+    /// Total analytic cycles recovered across all applied decisions.
+    pub fn saved_cycles(&self) -> u64 {
+        self.decisions.iter().filter(|d| d.applied).map(|d| d.saved_cycles).sum()
+    }
+}
+
+/// Per-boundary analytic cycles recovered by [`Pipelining::Overlap`] on
+/// the DIMC compilation of `layers`: entry `b` is the saving at the
+/// boundary between layer `b` and `b + 1` (zero where no hoist
+/// applied), so the chain total equals the layer-at-a-time total minus
+/// the sum of this vector. The cluster scheduler and the
+/// [`Session::verify`](crate::sim::Session::verify) one-core anchor
+/// both price overlap through this one function, so they cannot drift.
+pub fn overlap_savings(layers: &[LayerConfig], precision: Precision, arch: &Arch) -> Vec<u64> {
+    if layers.len() < 2 {
+        return Vec::new();
+    }
+    let plans = layers.iter().map(|l| compile_dimc_planned(l, precision).plan).collect();
+    let np = NetworkPlan::build(plans, precision, arch, Pipelining::Overlap);
+    np.decisions.iter().map(|d| d.saved_cycles).collect()
+}
+
+/// Number of VRF registers a `vl x eew` access covers (LMUL groups).
+fn group_regs(vl: u32, eew: u16) -> u32 {
+    (vl * eew as u32 / 8).div_ceil(VLENB as u32).max(1)
+}
+
+/// What the liveness walk learned about a sweep body.
+struct BodyScan {
+    /// Bit `r` set iff vector register `v{r}` is read or written.
+    vmask: u32,
+    /// Bit `r` set iff scalar register `x{r}` is read or written.
+    xmask: u32,
+    /// Index of the last `DL.I` (the staging-load splice point).
+    last_dli: usize,
+    /// The `vsetivli` active at the splice point (restored after the
+    /// splice so downstream code sees the configuration it was emitted
+    /// under).
+    vcfg_at_splice: Instr,
+}
+
+/// Conservative, exact liveness walk over a generated sweep body.
+/// Returns `None` — overlap illegal — on any instruction variant the
+/// walk does not model precisely.
+fn scan_sweep_body(body: &[Instr]) -> Option<BodyScan> {
+    let mut vmask = 0u32;
+    let mut xmask = 0u32;
+    let mut vl = 0u32;
+    let mut sew = 8u16;
+    let mut last_dli = None;
+    let mut last_vcfg = None;
+    let mut vcfg_at_splice = None;
+
+    fn mark(mask: &mut u32, base: u8, n: u32) {
+        for r in 0..n {
+            *mask |= 1 << ((base as u32 + r) % 32);
+        }
+    }
+
+    for (idx, i) in body.iter().enumerate() {
+        match *i {
+            Instr::Lui { rd, .. } => xmask |= 1 << rd,
+            Instr::OpImm { rd, rs1, .. } => xmask |= (1 << rd) | (1 << rs1),
+            Instr::Op { rd, rs1, rs2, .. } => xmask |= (1 << rd) | (1 << rs1) | (1 << rs2),
+            Instr::Vsetivli { rd, uimm, vtype } => {
+                xmask |= 1 << rd;
+                vl = (uimm as u32).min(vtype.vlmax());
+                sew = vtype.sew;
+                last_vcfg = Some(*i);
+            }
+            Instr::Vle { eew, vd, rs1 } => {
+                xmask |= 1 << rs1;
+                mark(&mut vmask, vd, group_regs(vl, eew as u16));
+            }
+            Instr::Vlse { eew, vd, rs1, rs2 } => {
+                xmask |= (1 << rs1) | (1 << rs2);
+                mark(&mut vmask, vd, group_regs(vl, eew as u16));
+            }
+            Instr::Vse { eew, vs3, rs1 } => {
+                xmask |= 1 << rs1;
+                mark(&mut vmask, vs3, group_regs(vl, eew as u16));
+            }
+            Instr::VmvVI { vd, .. } => mark(&mut vmask, vd, group_regs(vl, sew)),
+            Instr::VmvVX { vd, rs1 } => {
+                xmask |= 1 << rs1;
+                mark(&mut vmask, vd, group_regs(vl, sew));
+            }
+            Instr::DlI { nvec, vs1, .. } => {
+                mark(&mut vmask, vs1, nvec as u32);
+                last_dli = Some(idx);
+                vcfg_at_splice = last_vcfg;
+            }
+            Instr::DlM { nvec, vs1, .. } => mark(&mut vmask, vs1, nvec as u32),
+            Instr::DcP { vs1, vd, .. } => {
+                mark(&mut vmask, vs1, 1);
+                mark(&mut vmask, vd, 1);
+            }
+            Instr::DcF { vs1, vd, .. } => {
+                mark(&mut vmask, vs1, 1);
+                mark(&mut vmask, vd, 1);
+            }
+            // Anything the walk does not model exactly makes the body
+            // ineligible — never guess at liveness.
+            _ => return None,
+        }
+    }
+    Some(BodyScan { vmask, xmask, last_dli: last_dli?, vcfg_at_splice: vcfg_at_splice? })
+}
+
+/// Strict structural match of a mapper weight-row body
+/// (`mapper::gen_wt_row`): `li x5, addr; vsetivli 32,e8,m4; 4x [vle8
+/// v{8,12,16,20}, addi between]; 4x DL.M sec 0..3`. Returns the
+/// `(lui, addi)` address immediates for retargeting onto the staging
+/// pointer. Anything else — hand-written programs, future generator
+/// changes — makes the boundary ineligible rather than mis-spliced.
+fn wt_row_pattern(body: &[Instr]) -> Option<(i32, i32)> {
+    if body.len() != 14 {
+        return None;
+    }
+    let hi = match body[0] {
+        Instr::Lui { rd: 5, imm } => imm,
+        _ => return None,
+    };
+    let lo = match body[1] {
+        Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 5, imm } => imm,
+        _ => return None,
+    };
+    match body[2] {
+        Instr::Vsetivli { uimm: 32, vtype, .. } if vtype == VType::new(8, 4) => {}
+        _ => return None,
+    }
+    for s in 0..4u8 {
+        match body[3 + 2 * s as usize] {
+            Instr::Vle { eew: 8, vd, rs1: 5 } if vd == 8 + 4 * s => {}
+            _ => return None,
+        }
+        if s < 3 {
+            match body[4 + 2 * s as usize] {
+                Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 5, imm: 32 } => {}
+                _ => return None,
+            }
+        }
+    }
+    for s in 0..4u8 {
+        match body[10 + s as usize] {
+            Instr::DlM { nvec: 4, mask: 0xf, vs1, width: 0, sec, m_row: _ }
+                if vs1 == 8 + 4 * s && sec == s => {}
+            _ => return None,
+        }
+    }
+    Some((hi, lo))
+}
+
+/// Per-trip annotations of a self-configuring body (every vector memory
+/// op is preceded by a `vsetivli` in the same body — the mapper sweep
+/// invariant), mirroring [`Plan::from_program`]'s accounting exactly.
+fn annotate_body(body: &[Instr], lanes: u64) -> ([u64; 8], u64, u64, u64) {
+    let mut class_counts = [0u64; 8];
+    let (mut loaded, mut stored, mut macs) = (0u64, 0u64, 0u64);
+    let mut vl = 0u32;
+    for i in body {
+        class_counts[class_index(i.class())] += 1;
+        match *i {
+            Instr::Vsetivli { uimm, vtype, .. } => vl = (uimm as u32).min(vtype.vlmax()),
+            Instr::Vle { eew, .. } | Instr::Vlse { eew, .. } => {
+                loaded += vl as u64 * eew as u64 / 8;
+            }
+            Instr::Vse { eew, .. } => stored += vl as u64 * eew as u64 / 8,
+            Instr::Lw { .. } => loaded += 4,
+            Instr::Lbu { .. } => loaded += 1,
+            Instr::Sw { .. } => stored += 4,
+            Instr::Sb { .. } => stored += 1,
+            Instr::DcP { .. } | Instr::DcF { .. } => macs += lanes,
+            Instr::VmaccVV { .. } => macs += vl as u64,
+            _ => {}
+        }
+    }
+    (class_counts, loaded, stored, macs)
+}
+
+/// Build the merged sweep body: the host sweep body with the staging
+/// loads of one weight row spliced in after the last `DL.I` (inside the
+/// DC-fence stall window) and the four `DL.M` sector stores appended
+/// after the write-back.
+fn merged_body(sweep: &[Instr], scan: &BodyScan, qa: u8, qb: u8, addr: (i32, i32)) -> Vec<Instr> {
+    let m4 = Instr::Vsetivli { rd: 0, uimm: 32, vtype: VType::new(8, 4) };
+    let mut out = Vec::with_capacity(sweep.len() + 16);
+    out.extend_from_slice(&sweep[..=scan.last_dli]);
+    // Splice A: stage sectors 0 and 1 into the dead quads while the
+    // host's own DL.I -> DC fence is draining.
+    out.push(Instr::Lui { rd: 29, imm: addr.0 });
+    out.push(Instr::OpImm { op: AluOp::Add, rd: 29, rs1: 29, imm: addr.1 });
+    out.push(m4);
+    out.push(Instr::Vle { eew: 8, vd: qa, rs1: 29 });
+    out.push(Instr::OpImm { op: AluOp::Add, rd: 29, rs1: 29, imm: 32 });
+    out.push(Instr::Vle { eew: 8, vd: qb, rs1: 29 });
+    out.push(Instr::OpImm { op: AluOp::Add, rd: 29, rs1: 29, imm: 32 });
+    if scan.vcfg_at_splice != m4 {
+        out.push(scan.vcfg_at_splice);
+    }
+    out.extend_from_slice(&sweep[scan.last_dli + 1..]);
+    // Splice B: commit the staged sectors and stage the remaining two.
+    // The DL.M fence prices the staging commit conservatively — every
+    // DC op of the next trip orders after these stores.
+    out.push(m4);
+    out.push(Instr::DlM { nvec: 4, mask: 0xf, vs1: qa, width: 0, sec: 0, m_row: 0 });
+    out.push(Instr::DlM { nvec: 4, mask: 0xf, vs1: qb, width: 0, sec: 1, m_row: 0 });
+    out.push(Instr::Vle { eew: 8, vd: qa, rs1: 29 });
+    out.push(Instr::OpImm { op: AluOp::Add, rd: 29, rs1: 29, imm: 32 });
+    out.push(Instr::Vle { eew: 8, vd: qb, rs1: 29 });
+    out.push(Instr::DlM { nvec: 4, mask: 0xf, vs1: qa, width: 0, sec: 2, m_row: 0 });
+    out.push(Instr::DlM { nvec: 4, mask: 0xf, vs1: qb, width: 0, sec: 3, m_row: 0 });
+    out
+}
+
+/// Analyse boundary `b`, and apply the hoist to `plans[b]` /
+/// `plans[b + 1]` iff it is capacity-legal and strictly profitable.
+fn try_hoist(plans: &mut [Plan], b: usize, precision: Precision, arch: &Arch) -> HoistDecision {
+    let prev = &plans[b];
+    let next = &plans[b + 1];
+
+    // Producer's final step must be a sweep.
+    let sweep = match prev.steps.last() {
+        Some(s) if s.kind == PhaseKind::Sweep && s.trips >= 1 => s.clone(),
+        _ => return HoistDecision::rejected(b),
+    };
+    // Successor's first non-setup step must be a weight load.
+    let wi = match next.steps.iter().position(|s| s.kind != PhaseKind::Setup) {
+        Some(i) if next.steps[i].kind == PhaseKind::WeightLoad => i,
+        _ => return HoistDecision::rejected(b),
+    };
+    let wt = next.steps[wi].clone();
+    let addr = match wt_row_pattern(&next.shapes[wt.shape]) {
+        Some(a) => a,
+        None => return HoistDecision::rejected(b),
+    };
+    let scan = match scan_sweep_body(&prev.shapes[sweep.shape]) {
+        Some(s) => s,
+        None => return HoistDecision::rejected(b),
+    };
+
+    let mut d = HoistDecision {
+        boundary: b,
+        rows: 0,
+        sweep_trips: sweep.trips,
+        wt_trips: wt.trips,
+        quads: None,
+        live_vmask: scan.vmask,
+        legal: false,
+        applied: false,
+        saved_cycles: 0,
+    };
+
+    // Staging pointer x29 must be dead in the host body.
+    if scan.xmask & (1 << 29) != 0 {
+        return d;
+    }
+    // Two dead VRF quads for the staging loads.
+    let free: Vec<u8> = [8u8, 12, 16, 20, 24, 28]
+        .into_iter()
+        .filter(|&q| (scan.vmask >> q) & 0xf == 0)
+        .collect();
+    if free.len() < 2 {
+        return d;
+    }
+    let (qa, qb) = (free[0], free[1]);
+
+    // Capacity: one staged row per merged trip, depth-1 staging.
+    let rows = wt.trips.min(sweep.trips).min(DIMC_ROWS as u64);
+    if rows == 0 {
+        return d;
+    }
+    d.quads = Some([qa, qb]);
+    d.rows = rows;
+    d.legal = true;
+
+    // Candidate rewrite.
+    let lanes = precision.lanes() as u64;
+    let mut prev2 = prev.clone();
+    let mut next2 = next.clone();
+    let body = merged_body(&prev.shapes[sweep.shape], &scan, qa, qb, addr);
+    let (class_counts, loaded, stored, macs) = annotate_body(&body, lanes);
+    let shape = prev2.shapes.len();
+    prev2.shapes.push(body);
+    prev2.steps.pop();
+    if sweep.trips > rows {
+        let mut rem = sweep.clone();
+        rem.trips = sweep.trips - rows;
+        prev2.steps.push(rem);
+    }
+    prev2.steps.push(PlanStep {
+        name: format!("{} +wt", sweep.name),
+        kind: PhaseKind::Sweep,
+        trips: rows,
+        shape,
+        class_counts,
+        loaded_bytes: loaded,
+        stored_bytes: stored,
+        macs,
+    });
+    if wt.trips > rows {
+        next2.steps[wi].trips = wt.trips - rows;
+    } else {
+        next2.steps.remove(wi);
+    }
+
+    // Profitability gate: apply only if the rewritten pair is strictly
+    // cheaper — the network total can never regress.
+    let price = |p: &Plan| analytic_cycles(p, arch).map(|s| s.cycles);
+    let old = match (price(prev), price(next)) {
+        (Ok(a), Ok(c)) => a + c,
+        _ => return d,
+    };
+    let new = match (price(&prev2), price(&next2)) {
+        (Ok(a), Ok(c)) => a + c,
+        _ => return d,
+    };
+    if new < old {
+        d.applied = true;
+        d.saved_cycles = old - new;
+        plans[b] = prev2;
+        plans[b + 1] = next2;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::layer::LayerConfig;
+    use crate::compiler::mapper::compile_dimc_planned;
+
+    fn chain(layers: &[LayerConfig], p: Precision) -> Vec<Plan> {
+        layers.iter().map(|l| compile_dimc_planned(l, p).plan).collect()
+    }
+
+    fn net_cycles(np: &NetworkPlan, arch: &Arch) -> u64 {
+        np.plans.iter().map(|p| analytic_cycles(p, arch).unwrap().cycles).sum()
+    }
+
+    fn two_layer() -> Vec<LayerConfig> {
+        vec![
+            LayerConfig::conv("a", 64, 32, 1, 1, 8, 8, 1, 0),
+            LayerConfig::conv("b", 32, 32, 3, 3, 8, 8, 1, 1),
+        ]
+    }
+
+    #[test]
+    fn off_is_identity() {
+        let arch = Arch::default();
+        let plans = chain(&two_layer(), Precision::Int4);
+        let off: u64 = plans.iter().map(|p| analytic_cycles(p, &arch).unwrap().cycles).sum();
+        let np = NetworkPlan::build(plans.clone(), Precision::Int4, &arch, Pipelining::Off);
+        assert!(np.decisions.is_empty());
+        for (a, b) in np.plans.iter().zip(plans.iter()) {
+            assert_eq!(a.steps.len(), b.steps.len());
+            assert_eq!(a.instrs(), b.instrs());
+        }
+        assert_eq!(net_cycles(&np, &arch), off);
+    }
+
+    #[test]
+    fn overlap_never_slower_and_saves_here() {
+        let arch = Arch::default();
+        let plans = chain(&two_layer(), Precision::Int4);
+        let off: u64 = plans.iter().map(|p| analytic_cycles(p, &arch).unwrap().cycles).sum();
+        let np = NetworkPlan::build(plans, Precision::Int4, &arch, Pipelining::Overlap);
+        let on = net_cycles(&np, &arch);
+        assert!(on <= off, "overlap {on} > off {off}");
+        assert_eq!(off - on, np.saved_cycles(), "audited savings mismatch the repricing");
+        assert!(np.decisions[0].applied, "must overlap here: {:?}", np.decisions[0]);
+        assert!(np.hoisted_rows() > 0);
+    }
+
+    #[test]
+    fn decisions_are_capacity_legal() {
+        let arch = Arch::default();
+        let layers = vec![
+            LayerConfig::conv("a", 64, 32, 1, 1, 8, 8, 1, 0),
+            LayerConfig::conv("b", 32, 48, 3, 3, 8, 8, 1, 1),
+            LayerConfig::gemm("g", 6, 40, 300),
+        ];
+        let plans = chain(&layers, Precision::Int4);
+        let np = NetworkPlan::build(plans, Precision::Int4, &arch, Pipelining::Overlap);
+        for d in &np.decisions {
+            if !d.applied {
+                continue;
+            }
+            assert!(d.rows <= d.wt_trips && d.rows <= d.sweep_trips);
+            assert!(d.rows <= DIMC_ROWS as u64);
+            let [qa, qb] = d.quads.unwrap();
+            for q in [qa, qb] {
+                assert_eq!((d.live_vmask >> q) & 0xf, 0, "staging quad v{q} live in host sweep");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_conserves_memory_traffic() {
+        // The hoist moves weight bytes between steps; it must never
+        // create or destroy traffic.
+        let arch = Arch::default();
+        let plans = chain(&two_layer(), Precision::Int4);
+        let off_loaded: u64 = plans.iter().map(|p| p.loaded_bytes()).sum();
+        let off_stored: u64 = plans.iter().map(|p| p.stored_bytes()).sum();
+        let np = NetworkPlan::build(plans, Precision::Int4, &arch, Pipelining::Overlap);
+        assert!(np.decisions[0].applied);
+        let on_loaded: u64 = np.plans.iter().map(|p| p.loaded_bytes()).sum();
+        let on_stored: u64 = np.plans.iter().map(|p| p.stored_bytes()).sum();
+        assert_eq!(off_loaded, on_loaded);
+        assert_eq!(off_stored, on_stored);
+    }
+
+    #[test]
+    fn pipelining_parse_roundtrip() {
+        for p in [Pipelining::Off, Pipelining::Overlap] {
+            assert_eq!(Pipelining::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Pipelining::parse("OVERLAP"), Some(Pipelining::Overlap));
+        assert_eq!(Pipelining::parse("on"), None);
+        assert_eq!(Pipelining::default(), Pipelining::Off);
+    }
+
+    #[test]
+    fn baseline_plans_are_ineligible() {
+        use crate::compiler::baseline::compile_baseline_planned;
+        let arch = Arch::default();
+        let layers = [LayerConfig::fc("a", 64, 10), LayerConfig::fc("b", 64, 10)];
+        let plans = layers.iter().map(|l| compile_baseline_planned(l, 6).plan).collect();
+        let np = NetworkPlan::build(plans, Precision::Int4, &arch, Pipelining::Overlap);
+        assert!(np.decisions.iter().all(|d| !d.applied), "no weight-load steps to hoist");
+    }
+}

@@ -80,6 +80,15 @@ pub fn elems_per_tile(p: Precision) -> u32 {
     (crate::arch::DIMC_ROW_BITS as u32) / p.bits()
 }
 
+/// Generate a dense i32 residual tensor `[patches][och]` (the fused
+/// skip-connection input, already in the pre-requantization accumulator
+/// domain) for `l`. Values span a small signed range so the requantized
+/// outputs stay distributed across the quantized range.
+pub fn synth_residual(l: &LayerConfig, seed: u64) -> Vec<i32> {
+    let mut r = Lcg::new(seed ^ 0x0DDB_A5E5);
+    (0..(l.patches() * l.och as u64) as usize).map(|_| (r.below(257) as i32) - 128).collect()
+}
+
 // ---------------------------------------------------------------- DIMC --
 
 /// Pack activations for the DIMC path. `x` is dense [ih][iw][ich].
@@ -151,6 +160,42 @@ pub fn unpack_out_dimc(l: &LayerConfig, _p: Precision, bytes: &[u8]) -> Vec<u8> 
 pub fn out_bytes_dimc(l: &LayerConfig) -> usize {
     let och_pad = l.groups() * DIMC_ROWS as u32;
     (l.patches() as usize * och_pad as usize).div_ceil(2)
+}
+
+/// DIMC row index served by memory slot `s` (0..16) of one half-batch's
+/// residual/psum image. The mapper reloads psums with two `LMUL=4`
+/// `vle32` accesses (8 x i32 each) into `v24..v27` / `v28..v31`, and the
+/// DC result interleave puts row `r` at register `24 + r%8`, half `r/8`
+/// — this permutation is where the two meet.
+fn psum_slot_row(s: u32) -> u32 {
+    let (base, e) = if s < 8 { (0, s) } else { (4, s - 8) };
+    base + e / 2 + 8 * (e % 2)
+}
+
+/// Pack a dense `[patches][och]` i32 residual tensor into the DIMC
+/// residual region image: per (patch, group, half-batch), 16 i32 slots
+/// in the psum *register* order the mapper's seeding `vle32`s expect
+/// (see [`psum_slot_row`]); channels beyond `och` are zero.
+pub fn pack_res_dimc(l: &LayerConfig, res: &[i32]) -> Vec<u8> {
+    assert_eq!(res.len(), (l.patches() * l.och as u64) as usize);
+    let och_pad = l.groups() * DIMC_ROWS as u32;
+    let mut out = vec![0u8; (l.patches() * och_pad as u64 * 4) as usize];
+    for pidx in 0..l.patches() as u32 {
+        for g in 0..l.groups() {
+            for h in 0..2u32 {
+                for s in 0..16u32 {
+                    let oc = g * DIMC_ROWS as u32 + h * 16 + psum_slot_row(s);
+                    if oc >= l.och {
+                        continue;
+                    }
+                    let v = res[(pidx * l.och + oc) as usize];
+                    let at = ((pidx * och_pad + g * DIMC_ROWS as u32 + h * 16 + s) * 4) as usize;
+                    out[at..at + 4].copy_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+    out
 }
 
 // ------------------------------------------------------------ baseline --
@@ -246,6 +291,22 @@ pub fn ref_gemm_i32(l: &LayerConfig, x: &[i8], w: &[i8]) -> Vec<i32> {
 /// with ReLU): `clamp(max(acc,0) >> shift, 0, 2^bits - 1)`.
 pub fn ref_requant(acc: i32, shift: u8, bits: u32) -> u8 {
     ((acc.max(0) >> shift).clamp(0, (1 << bits) - 1)) as u8
+}
+
+/// Reference for the fused residual add: the GEMM/conv i32 accumulator
+/// plus the skip-connection tensor, still pre-requantization — exactly
+/// what a residual-fused layer's DC chain accumulates when its
+/// first-tile partial sums are seeded from the residual region. The
+/// unfused two-pass equivalent (matmul, then elementwise add) computes
+/// the same values, which the oracle test in `rust/tests/prop_pipeline.rs`
+/// pins.
+pub fn ref_residual_i32(l: &LayerConfig, x: &[i8], w: &[i8], res: &[i32]) -> Vec<i32> {
+    let mut acc = ref_conv_i32(l, x, w);
+    assert_eq!(acc.len(), res.len(), "{l}: residual tensor shape mismatch");
+    for (a, r) in acc.iter_mut().zip(res.iter()) {
+        *a = a.wrapping_add(*r);
+    }
+    acc
 }
 
 #[cfg(test)]

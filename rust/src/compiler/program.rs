@@ -61,6 +61,9 @@ pub struct MemLayout {
     pub wt_base: u32,
     /// Partial-sum spill area (tiled kernels only).
     pub psum_base: u32,
+    /// Residual-input area (i32 skip-connection accumulators, layers
+    /// with a fused residual add only — zero-sized otherwise).
+    pub res_base: u32,
     /// Packed outputs.
     pub out_base: u32,
 }
@@ -72,6 +75,7 @@ impl Default for MemLayout {
             act_base: 0x0001_0000,
             wt_base: 0x0010_0000,
             psum_base: 0x0020_0000,
+            res_base: 0x0028_0000,
             out_base: 0x0030_0000,
         }
     }
@@ -81,17 +85,21 @@ impl MemLayout {
     /// Compact, per-layer layout: regions packed back-to-back (64-byte
     /// aligned) so the simulated memory footprint tracks the actual
     /// tensor sizes instead of fixed far-apart windows — the simulator's
-    /// backing store stays proportional to the layer.
-    pub fn compact(act_bytes: u64, wt_bytes: u64, psum_bytes: u64) -> Self {
+    /// backing store stays proportional to the layer. `res_bytes` is
+    /// zero for layers without a fused residual add, collapsing the
+    /// residual region to nothing.
+    pub fn compact(act_bytes: u64, wt_bytes: u64, psum_bytes: u64, res_bytes: u64) -> Self {
         let align = |x: u64| ((x + 63) / 64) * 64;
         let act_base = 0x1000u64;
         let wt_base = act_base + align(act_bytes);
         let psum_base = wt_base + align(wt_bytes);
-        let out_base = psum_base + align(psum_bytes);
+        let res_base = psum_base + align(psum_bytes);
+        let out_base = res_base + align(res_bytes);
         MemLayout {
             act_base: act_base as u32,
             wt_base: wt_base as u32,
             psum_base: psum_base as u32,
+            res_base: res_base as u32,
             out_base: out_base as u32,
         }
     }

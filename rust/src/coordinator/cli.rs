@@ -22,8 +22,8 @@ use crate::coordinator::{figures, verify};
 use crate::dimc::Precision;
 use crate::metrics::report::{render_table, summarize};
 use crate::sim::{
-    write_load_point, write_scaling_point, Engine, JsonBuilder, LayerReportRow, RunCheck,
-    RunReport, RunSpec, Session, Timing, TraceLevel,
+    write_load_point, write_scaling_point, Engine, JsonBuilder, LayerReportRow, Pipelining,
+    RunCheck, RunReport, RunSpec, Session, Timing, TraceLevel,
 };
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -76,7 +76,11 @@ pub fn usage() -> &'static str {
      array/object of reports) as JSON to stdout instead of the tables;\n\
      simulate/cluster/serve accept --trace-level off|counters|full:\n\
      counters adds cycle-attribution counters plus conservation checks\n\
-     to the report, full also records the span timeline"
+     to the report, full also records the span timeline;\n\
+     zoo/cluster/serve/timeline accept --pipelining off|overlap: overlap\n\
+     hoists next-layer weight-tile loads into the current layer's DC.P\n\
+     sweeps where VRF staging capacity allows (timing only — the\n\
+     functional referee always runs the unmodified per-layer programs)"
 }
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -142,6 +146,17 @@ fn parse_trace_level(m: &HashMap<String, String>) -> Result<TraceLevel> {
         Some(v) => match TraceLevel::parse(v) {
             Some(t) => Ok(t),
             None => bail!("bad --trace-level `{v}`; expected off, counters or full"),
+        },
+    }
+}
+
+/// `--pipelining off|overlap` (default off).
+fn parse_pipelining(m: &HashMap<String, String>) -> Result<Pipelining> {
+    match m.get("pipelining").map(String::as_str) {
+        None => Ok(Pipelining::default()),
+        Some(v) => match Pipelining::parse(v) {
+            Some(p) => Ok(p),
+            None => bail!("bad --pipelining `{v}`; expected off or overlap"),
         },
     }
 }
@@ -457,7 +472,8 @@ fn table1(json: bool) -> Result<()> {
 fn zoo(flags: &HashMap<String, String>, json: bool) -> Result<()> {
     let precision = parse_precision(flags)?;
     let timing = parse_timing(flags)?;
-    let reports = figures::zoo_reports_at(precision, timing)?;
+    let pipelining = parse_pipelining(flags)?;
+    let reports = figures::zoo_reports_with(precision, timing, pipelining)?;
     if json {
         print_reports_json(&reports);
         return Ok(());
@@ -840,6 +856,7 @@ fn cluster(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         .precision(precision)
         .timing(timing)
         .trace_level(parse_trace_level(flags)?)
+        .pipelining(parse_pipelining(flags)?)
         .build()?;
     let arch = session.config().arch;
 
@@ -941,7 +958,8 @@ fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         .max_wait_cycles(max_wait)
         .seed(seed)
         .trace(shape)
-        .trace_level(parse_trace_level(flags)?);
+        .trace_level(parse_trace_level(flags)?)
+        .pipelining(parse_pipelining(flags)?);
     if let Some(mix) = flags.get("mix") {
         let mut entries = 0usize;
         for part in mix.split(',').filter(|p| !p.is_empty()) {
@@ -1088,7 +1106,8 @@ fn timeline(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         .batch(batch)
         .precision(parse_precision(flags)?)
         .timing(parse_timing(flags)?)
-        .trace_level(TraceLevel::Full);
+        .trace_level(TraceLevel::Full)
+        .pipelining(parse_pipelining(flags)?);
     let serving = flags.contains_key("rps");
     if serving {
         builder = builder

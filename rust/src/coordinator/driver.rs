@@ -22,14 +22,14 @@ use crate::compiler::baseline::{
 use crate::compiler::layer::LayerConfig;
 use crate::compiler::mapper::{compile_dimc, compile_dimc_planned};
 use crate::compiler::pack;
-use crate::compiler::plan::CompiledLayer;
+use crate::compiler::plan::{CompiledLayer, Plan};
 use crate::compiler::program::LayerProgram;
 use crate::dimc::{DimcConfig, Precision};
 use crate::obs::attr::StallAttr;
 use crate::obs::timeline::Span;
 use crate::pipeline::analytic::{analytic_cycles, analytic_cycles_obs};
 use crate::pipeline::core::{Core, RunStats, SimError};
-use crate::pipeline::trace::trace_cycles;
+use crate::pipeline::trace::{trace_cycles, Phase};
 
 /// Which core executes the layer. The enum moved to
 /// [`crate::sim::Engine`] (the façade owns engine selection); this
@@ -182,6 +182,62 @@ pub fn timed_stats_obs(
     }
 }
 
+/// Price a bare [`Plan`] under `timing` — the slot pricer of
+/// [`NetworkPlan`](crate::compiler::netplan::NetworkPlan) execution,
+/// where pipelined schedules redistribute work between per-layer Plans
+/// and each slot is priced on a fresh scoreboard. The interpreter path
+/// synthesizes one trace [`Phase`] per Plan step from the step's shape
+/// body (address immediates differ from the original phases but are
+/// provably timing-inert — the canonicalization invariant of
+/// [`Plan::shapes`]); the analytic path folds the Plan directly. Both
+/// agree bit-for-bit, exactly as [`timed_stats_obs`] does for per-layer
+/// Plans.
+pub fn timed_plan_obs(
+    plan: &Plan,
+    engine: Engine,
+    precision: Precision,
+    arch: Arch,
+    timing: Timing,
+    attributing: bool,
+    collect_spans: bool,
+) -> Result<TimedRun, SimError> {
+    match timing {
+        Timing::Interpreter => {
+            let mut core = fresh_core(arch, engine, precision);
+            core.timing_only = true;
+            core.sb.attributing = attributing;
+            let phases: Vec<Phase> = plan
+                .steps
+                .iter()
+                .map(|s| Phase::new(s.name.clone(), s.trips, plan.shapes[s.shape].clone()))
+                .collect();
+            let stats = trace_cycles(&mut core, &phases)?;
+            let attr = attributing.then(|| {
+                let mut a = core.sb.attr;
+                a.drain = stats.cycles.saturating_sub(core.sb.last_issue);
+                a
+            });
+            Ok(TimedRun { stats, attr, steps: None })
+        }
+        Timing::Analytic => {
+            if !attributing && !collect_spans {
+                return Ok(TimedRun {
+                    stats: analytic_cycles(plan, &arch)?,
+                    attr: None,
+                    steps: None,
+                });
+            }
+            let (stats, attr, spans) =
+                analytic_cycles_obs(plan, &arch, attributing, collect_spans)?;
+            Ok(TimedRun {
+                stats,
+                attr: attributing.then_some(attr),
+                steps: collect_spans.then_some(spans),
+            })
+        }
+    }
+}
+
 /// Timing simulation (trace engine, data-free).
 ///
 /// Deprecated shim: prefer `Session::run(&RunSpec::Layer(..))` on a
@@ -260,6 +316,23 @@ pub fn run_functional(
     wts: &[i8],
     shift: u8,
 ) -> Result<FunctionalRun, SimError> {
+    run_functional_res(l, engine, acts, wts, None, shift)
+}
+
+/// [`run_functional`] with an optional dense i32 residual input (one
+/// accumulator per (patch, output channel)). Layers compiled with a
+/// fused residual add ([`LayerConfig::residual_fused`]) seed their
+/// first-tile partial sums from this tensor instead of zero; the packed
+/// image is placed at the layout's `res_base` window. Only the DIMC
+/// engine fuses residuals — `res` must be `None` on the baseline.
+pub fn run_functional_res(
+    l: &LayerConfig,
+    engine: Engine,
+    acts: &[i8],
+    wts: &[i8],
+    res: Option<&[i32]>,
+    shift: u8,
+) -> Result<FunctionalRun, SimError> {
     let precision = Precision::Int4;
     let mut core = fresh_core(Arch::default(), engine, precision);
     core.dimc.cfg.requant_shift = shift;
@@ -271,8 +344,12 @@ pub fn run_functional(
         Engine::Dimc => {
             core.mem.write_direct(prog.layout.act_base, &pack::pack_acts_dimc(l, precision, acts));
             core.mem.write_direct(prog.layout.wt_base, &pack::pack_wts_dimc(l, precision, wts));
+            if let Some(res) = res {
+                core.mem.write_direct(prog.layout.res_base, &pack::pack_res_dimc(l, res));
+            }
         }
         Engine::Baseline => {
+            assert!(res.is_none(), "the baseline engine has no fused residual path");
             core.mem.write_direct(prog.layout.act_base, &pack::pack_acts_int8(l, acts));
             core.mem.write_direct(prog.layout.wt_base, &pack::pack_wts_int8(l, wts));
         }

@@ -293,6 +293,17 @@ pub fn zoo_reports_at(
     precision: crate::dimc::Precision,
     timing: crate::sim::Timing,
 ) -> Result<Vec<RunReport>, SessionError> {
+    zoo_reports_with(precision, timing, crate::sim::Pipelining::Off)
+}
+
+/// [`zoo_reports_at`] with an explicit inter-layer
+/// [`Pipelining`](crate::sim::Pipelining) mode — what `repro zoo
+/// --pipelining overlap` drives.
+pub fn zoo_reports_with(
+    precision: crate::dimc::Precision,
+    timing: crate::sim::Timing,
+    pipelining: crate::sim::Pipelining,
+) -> Result<Vec<RunReport>, SessionError> {
     zoo::all_models()
         .iter()
         .map(|m| {
@@ -300,10 +311,60 @@ pub fn zoo_reports_at(
                 .model(m.name)
                 .precision(precision)
                 .timing(timing)
+                .pipelining(pipelining)
                 .build()?
                 .run(&RunSpec::Network)
         })
         .collect()
+}
+
+/// One point of the inter-layer overlap figure: a zoo model's network
+/// cycles with [`Pipelining`](crate::sim::Pipelining) off vs overlap.
+#[derive(Debug, Clone)]
+pub struct OverlapPoint {
+    /// Zoo model name.
+    pub model: &'static str,
+    /// Single-core network cycles, layer-at-a-time.
+    pub off_cycles: u64,
+    /// Single-core network cycles with next-layer weight loads hoisted
+    /// into the current layer's sweeps. Never exceeds `off_cycles` (every
+    /// hoist is gated on a strict analytic win).
+    pub overlap_cycles: u64,
+}
+
+impl OverlapPoint {
+    /// Cycles recovered by overlap, as a fraction of the off run.
+    pub fn saving_frac(&self) -> f64 {
+        if self.off_cycles == 0 {
+            return 0.0;
+        }
+        (self.off_cycles - self.overlap_cycles) as f64 / self.off_cycles as f64
+    }
+}
+
+/// Inter-layer overlap figure: every zoo model simulated at both
+/// [`Pipelining`](crate::sim::Pipelining) settings (Int4, analytic
+/// timing). Backs `BENCH_7.json`.
+pub fn overlap_points() -> Result<Vec<OverlapPoint>, SessionError> {
+    let off = zoo_reports_with(
+        crate::dimc::Precision::Int4,
+        crate::sim::Timing::default(),
+        crate::sim::Pipelining::Off,
+    )?;
+    let on = zoo_reports_with(
+        crate::dimc::Precision::Int4,
+        crate::sim::Timing::default(),
+        crate::sim::Pipelining::Overlap,
+    )?;
+    Ok(zoo::all_models()
+        .iter()
+        .zip(off.iter().zip(on.iter()))
+        .map(|(m, (o, v))| OverlapPoint {
+            model: m.name,
+            off_cycles: o.cycles,
+            overlap_cycles: v.cycles,
+        })
+        .collect())
 }
 
 /// Fold per-model network reports (from [`zoo_reports`], in zoo order)

@@ -93,8 +93,25 @@ impl Server {
         cores: u32,
         timing: crate::sim::Timing,
     ) -> Self {
+        Self::configured(arch, precision, cores, timing, crate::sim::Pipelining::default())
+    }
+
+    /// As [`Server::with_timing`] with an explicit inter-layer
+    /// pipelining policy (default
+    /// [`Pipelining::Off`](crate::sim::Pipelining) — the
+    /// layer-at-a-time batch service times every pre-pipelining caller
+    /// gets). At `Overlap` every batch service time inherits the
+    /// cluster scheduler's capacity-legal weight-load overlap, so batch
+    /// service is never slower than at `Off`.
+    pub fn configured(
+        arch: Arch,
+        precision: Precision,
+        cores: u32,
+        timing: crate::sim::Timing,
+        pipelining: crate::sim::Pipelining,
+    ) -> Self {
         Server {
-            sim: ClusterSim::with_timing(arch, precision, timing),
+            sim: ClusterSim::configured(arch, precision, timing, pipelining),
             topo: ClusterTopology::from_arch(cores, &arch),
             sample_depth: false,
             cache: HashMap::new(),

@@ -22,10 +22,12 @@ use crate::cluster::exec::{run_functional_cluster, ClusterLayerResult, ClusterSi
 use crate::cluster::sched::NetworkSchedule;
 use crate::cluster::topology::ClusterTopology;
 use crate::compiler::layer::LayerConfig;
+use crate::compiler::netplan::{NetworkPlan, Pipelining};
 use crate::compiler::pack::{synth_acts, synth_wts};
+use crate::compiler::plan::Plan;
 use crate::coordinator::driver::{
-    compile_for, reference_outputs, run_functional, simulate_layer_timed, timed_stats_obs,
-    LayerResult, TimedRun,
+    compile_for, reference_outputs, run_functional, simulate_layer_timed, timed_plan_obs,
+    timed_stats_obs, LayerResult, TimedRun,
 };
 use crate::dimc::Precision;
 use crate::metrics::area::AreaModel;
@@ -56,6 +58,7 @@ fn base_report(backend: &'static str, cfg: &SessionConfig, model: String) -> Run
         engine: cfg.engine,
         timing: cfg.timing,
         precision_bits: cfg.precision.bits(),
+        pipelining: cfg.pipelining.as_str(),
         cores: cfg.cores,
         batch: cfg.batch,
         clock_hz: cfg.arch.clock_hz,
@@ -160,6 +163,40 @@ impl SingleCore {
             cfg.trace_level.counters_on(),
             cfg.trace_level.timeline_on(),
         )?;
+        self.row_from_run(cfg, l, run)
+    }
+
+    /// As [`SingleCore::layer_row`] but pricing an explicit — possibly
+    /// [`NetworkPlan`]-rewritten — Plan slot instead of the layer's own
+    /// compiled schedule: the [`Pipelining::Overlap`] path of network
+    /// runs. The baseline comparison still prices the original layer
+    /// (the baseline engine has no overlap to recover).
+    fn layer_row_planned(
+        &self,
+        cfg: &SessionConfig,
+        l: &LayerConfig,
+        plan: &Plan,
+    ) -> Result<(LayerReportRow, TimedRun), SessionError> {
+        let run = timed_plan_obs(
+            plan,
+            cfg.engine,
+            cfg.precision,
+            cfg.arch,
+            cfg.timing,
+            cfg.trace_level.counters_on(),
+            cfg.trace_level.timeline_on(),
+        )?;
+        self.row_from_run(cfg, l, run)
+    }
+
+    /// Fold a priced run into the per-layer report row (shared by the
+    /// compiled-schedule and NetworkPlan-slot paths).
+    fn row_from_run(
+        &self,
+        cfg: &SessionConfig,
+        l: &LayerConfig,
+        run: TimedRun,
+    ) -> Result<(LayerReportRow, TimedRun), SessionError> {
         let primary = LayerResult {
             name: l.name.clone(),
             engine: cfg.engine,
@@ -207,12 +244,27 @@ impl SingleCore {
 
     fn run_network(&self, cfg: &SessionConfig) -> Result<RunReport, SessionError> {
         let w = cfg.first_workload()?;
+        // At Pipelining::Overlap on the DIMC engine, chain the per-layer
+        // Plans through the NetworkPlan rewriter first; every slot is
+        // then priced like a layer, on a fresh scoreboard, so the
+        // attribution conservation identities bind unchanged.
+        let np = (cfg.pipelining == Pipelining::Overlap && cfg.engine == Engine::Dimc).then(|| {
+            let plans = w
+                .layers
+                .iter()
+                .map(|l| compile_for(l, Engine::Dimc, cfg.precision).plan)
+                .collect();
+            NetworkPlan::build(plans, cfg.precision, &cfg.arch, Pipelining::Overlap)
+        });
         let mut rows = Vec::with_capacity(w.layers.len());
         let mut runs = Vec::with_capacity(w.layers.len());
         let (mut cycles, mut base_cycles, mut ops) = (0u64, 0u64, 0u64);
         let mut have_baseline = true;
-        for l in &w.layers {
-            let (row, run) = self.layer_row(cfg, l)?;
+        for (i, l) in w.layers.iter().enumerate() {
+            let (row, run) = match &np {
+                Some(np) => self.layer_row_planned(cfg, l, &np.plans[i])?,
+                None => self.layer_row(cfg, l)?,
+            };
             cycles += row.cycles;
             ops += row.ops;
             match row.baseline_cycles {
@@ -233,6 +285,13 @@ impl SingleCore {
         };
         rep.layers = rows;
         attach_single_obs(cfg, &mut rep, &runs);
+        if cfg.trace_level.counters_on() {
+            if let Some(np) = &np {
+                rep.counters
+                    .push(("pipeline.overlap.hoisted_rows".to_string(), np.hoisted_rows()));
+                rep.counters.push(("pipeline.overlap.saved_cycles".to_string(), np.saved_cycles()));
+            }
+        }
         Ok(rep)
     }
 
@@ -365,7 +424,7 @@ pub struct Cluster {
 impl Cluster {
     pub fn new(cfg: &SessionConfig) -> Self {
         Cluster {
-            sim: ClusterSim::with_timing(cfg.arch, cfg.precision, cfg.timing),
+            sim: ClusterSim::configured(cfg.arch, cfg.precision, cfg.timing, cfg.pipelining),
             topo: ClusterTopology::from_arch(cfg.cores, &cfg.arch),
         }
     }
@@ -408,7 +467,7 @@ impl Cluster {
             instret: None,
             class_counts: None,
         }];
-        attach_cluster_obs(cfg, &mut rep, std::slice::from_ref(&r));
+        attach_cluster_obs(cfg, &mut rep, std::slice::from_ref(&r), 0);
         Ok(rep)
     }
 
@@ -438,7 +497,7 @@ impl Cluster {
                 class_counts: None,
             })
             .collect();
-        attach_cluster_obs(cfg, &mut rep, &s.layers);
+        attach_cluster_obs(cfg, &mut rep, &s.layers, s.overlap_saved);
         Ok(rep)
     }
 
@@ -500,8 +559,16 @@ impl Backend for Cluster {
 /// counters over the per-image layer-parallel view, the cluster
 /// conservation check and (at `Full`) the per-core / bus / barrier
 /// timeline — into `rep`. A no-op below
-/// [`TraceLevel::Counters`](crate::obs::TraceLevel).
-fn attach_cluster_obs(cfg: &SessionConfig, rep: &mut RunReport, layers: &[ClusterLayerResult]) {
+/// [`TraceLevel::Counters`](crate::obs::TraceLevel). `overlap_saved`
+/// is the schedule's per-image inter-layer overlap recovery (0 at
+/// [`Pipelining::Off`]); the conservation identity charges it against
+/// the per-image layer sum, and it is surfaced as a counter.
+fn attach_cluster_obs(
+    cfg: &SessionConfig,
+    rep: &mut RunReport,
+    layers: &[ClusterLayerResult],
+    overlap_saved: u64,
+) {
     if !cfg.trace_level.counters_on() {
         return;
     }
@@ -517,13 +584,19 @@ fn attach_cluster_obs(cfg: &SessionConfig, rep: &mut RunReport, layers: &[Cluste
     rep.counters.push(("cluster.shard_cycles".to_string(), shard));
     rep.counters.push(("cluster.contention_cycles".to_string(), cont));
     rep.counters.push(("cluster.barrier_cycles".to_string(), barr));
+    if cfg.pipelining == Pipelining::Overlap {
+        rep.counters.push(("pipeline.overlap.saved_cycles".to_string(), overlap_saved));
+    }
     // Per-layer conservation always binds. The report total binds too
-    // when the schedule runs layer-parallel (batch x the per-image sum);
-    // image-parallel totals follow the wave formula instead, and the
-    // layer rows are the per-image layer-parallel view.
+    // when the schedule runs layer-parallel (batch x the per-image sum
+    // minus the per-image overlap recovery); image-parallel totals
+    // follow the wave formula instead, and the layer rows are the
+    // per-image layer-parallel view.
     let image_cycles: u64 = layers.iter().map(|r| r.cycles).sum();
     let total_ok = match rep.mode {
-        Some("layer-parallel") => rep.cycles == image_cycles * rep.batch as u64,
+        Some("layer-parallel") => {
+            rep.cycles == image_cycles.saturating_sub(overlap_saved) * rep.batch as u64
+        }
         Some(_) => true,
         None => rep.cycles == image_cycles,
     };
@@ -532,11 +605,12 @@ fn attach_cluster_obs(cfg: &SessionConfig, rep: &mut RunReport, layers: &[Cluste
         ok: per_layer_ok && total_ok,
         detail: format!(
             "shard {} + contention {} + barrier {} cycles per layer; per-image sum {} \
-             vs report {} ({}, batch {})",
+             - overlap {} vs report {} ({}, batch {})",
             shard,
             cont,
             barr,
             image_cycles,
+            overlap_saved,
             rep.cycles,
             rep.mode.unwrap_or("single-layer"),
             rep.batch
@@ -578,8 +652,10 @@ pub struct Serving {
 impl Serving {
     pub fn new(cfg: &SessionConfig) -> Self {
         // The serving engine prices batches through the cluster
-        // scheduler; route it through the session's timing backend.
-        let mut server = Server::with_timing(cfg.arch, cfg.precision, cfg.cores, cfg.timing);
+        // scheduler; route it through the session's timing backend and
+        // inter-layer pipelining policy.
+        let mut server =
+            Server::configured(cfg.arch, cfg.precision, cfg.cores, cfg.timing, cfg.pipelining);
         // Queue-depth sampling feeds the timeline's counter track; keep
         // it off below Full so the hot event loop allocates nothing.
         server.sample_depth = cfg.trace_level.timeline_on();

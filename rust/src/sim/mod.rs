@@ -66,6 +66,11 @@ pub use session::{RunSpec, ServeConfig, Session, SessionBuilder, SessionConfig, 
 /// it with [`SessionBuilder::trace_level`] without importing `obs`.
 pub use crate::obs::TraceLevel;
 
+/// Re-exported inter-layer pipelining knob (see
+/// [`crate::compiler::netplan`]): frontends set it with
+/// [`SessionBuilder::pipelining`] without importing `compiler`.
+pub use crate::compiler::netplan::Pipelining;
+
 /// Which core executes a layer. Lives here since the façade owns engine
 /// selection; re-exported at the historical
 /// `coordinator::driver::Engine` path for compatibility.

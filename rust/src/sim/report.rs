@@ -187,6 +187,10 @@ pub struct RunReport {
     pub timing: Timing,
     /// DIMC operand precision in bits.
     pub precision_bits: u32,
+    /// Inter-layer pipelining policy the run scheduled under
+    /// (`off` / `overlap`; see
+    /// [`Pipelining`](crate::compiler::netplan::Pipelining)).
+    pub pipelining: &'static str,
     /// Cores the session was configured with.
     pub cores: u32,
     /// Batch size the session was configured with.
@@ -250,6 +254,7 @@ impl RunReport {
         j.field_str("engine", self.engine.as_str());
         j.field_str("timing", self.timing.as_str());
         j.field_u64("precision_bits", self.precision_bits as u64);
+        j.field_str("pipelining", self.pipelining);
         j.field_u64("cores", self.cores as u64);
         j.field_u64("batch", self.batch as u64);
         j.field_f64("clock_hz", self.clock_hz);

@@ -14,6 +14,7 @@ use super::{Engine, Timing};
 use crate::arch::Arch;
 use crate::cluster::scaling::{scaling_curve_with, ScalingPoint};
 use crate::compiler::layer::LayerConfig;
+use crate::compiler::netplan::{self, Pipelining};
 use crate::coordinator::driver::simulate_layer_timed;
 use crate::dimc::Precision;
 use crate::obs::TraceLevel;
@@ -119,6 +120,10 @@ pub struct SessionConfig {
     /// [`TraceLevel::Off`] — nothing recorded, reports bit-identical to
     /// an untraced session).
     pub trace_level: TraceLevel,
+    /// Inter-layer pipelining policy (default [`Pipelining::Off`] —
+    /// layer-at-a-time, bit-identical to the pre-pipelining schedules;
+    /// see [`crate::compiler::netplan`]).
+    pub pipelining: Pipelining,
 }
 
 impl SessionConfig {
@@ -168,6 +173,7 @@ pub struct SessionBuilder {
     max_batch: Option<u32>,
     max_wait: Option<u64>,
     trace_level: TraceLevel,
+    pipelining: Pipelining,
 }
 
 impl SessionBuilder {
@@ -187,6 +193,7 @@ impl SessionBuilder {
             max_batch: None,
             max_wait: None,
             trace_level: TraceLevel::Off,
+            pipelining: Pipelining::Off,
         }
     }
 
@@ -295,6 +302,18 @@ impl SessionBuilder {
     /// (`repro timeline`). Off records nothing and changes nothing.
     pub fn trace_level(mut self, level: TraceLevel) -> Self {
         self.trace_level = level;
+        self
+    }
+
+    /// Inter-layer pipelining policy (default [`Pipelining::Off`]).
+    /// [`Pipelining::Overlap`] chains the model's per-layer Plans
+    /// through [`NetworkPlan`](crate::compiler::netplan::NetworkPlan),
+    /// hoisting next-layer weight-tile loads into current-layer final
+    /// sweeps where capacity-legal and strictly profitable — network
+    /// timing is never slower than `Off`, and functional outputs are
+    /// bit-identical at both settings.
+    pub fn pipelining(mut self, p: Pipelining) -> Self {
+        self.pipelining = p;
         self
     }
 
@@ -425,6 +444,7 @@ impl SessionBuilder {
                 workloads,
                 serve,
                 trace_level: self.trace_level,
+                pipelining: self.pipelining,
             },
             single: SingleCore::new(),
             cluster: None,
@@ -557,6 +577,16 @@ impl Session {
                         self.cfg.timing,
                     )?
                     .cycles;
+                }
+                // At Pipelining::Overlap the anchor prices the same
+                // NetworkPlan chain the 1-core cluster schedule uses
+                // (every boundary overlaps on one core), through the
+                // same netplan::overlap_savings entry point.
+                if self.cfg.pipelining == Pipelining::Overlap {
+                    let ls = &w.layers;
+                    let pr = self.cfg.precision;
+                    let saved: u64 = netplan::overlap_savings(ls, pr, &self.cfg.arch).iter().sum();
+                    sum -= saved;
                 }
                 sum
             };

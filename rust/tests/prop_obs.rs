@@ -161,6 +161,68 @@ fn trace_level_off_is_bit_identical_and_costless_in_the_report() {
 }
 
 #[test]
+fn attribution_conserves_on_fused_and_pipelined_runs() {
+    use dimc_rvv::compiler::netplan::{NetworkPlan, Pipelining};
+    use dimc_rvv::coordinator::driver::timed_plan_obs;
+
+    let arch = Arch::default();
+    // A residual-fused write-back layer attributes exactly like any
+    // other layer: issue + stalls + drain == cycles on both backends,
+    // and the backends agree.
+    let l = LayerConfig::gemm_residual("obres", 6, 40, 300, true, true);
+    let c = compile_for(&l, Engine::Dimc, Precision::Int4);
+    let run_at = |timing: Timing| {
+        timed_stats_obs(&c, Engine::Dimc, Precision::Int4, arch, timing, true, false).unwrap()
+    };
+    let a = run_at(Timing::Analytic);
+    let i = run_at(Timing::Interpreter);
+    assert_eq!(a.stats.cycles, i.stats.cycles, "{l}: backends diverged");
+    assert_eq!(a.attr.unwrap().total(), a.stats.cycles, "{l}: analytic attribution leaks");
+    assert_eq!(i.attr.unwrap().total(), i.stats.cycles, "{l}: interpreter attribution leaks");
+
+    // A pipelined NetworkPlan redistributes work between Plan slots;
+    // every rewritten slot must still conserve under attribution.
+    let chain = [
+        LayerConfig::conv("obp1", 64, 32, 1, 1, 8, 8, 1, 0),
+        LayerConfig::conv("obp2", 32, 32, 3, 3, 8, 8, 1, 1),
+    ];
+    let mut plans = Vec::new();
+    for l in &chain {
+        plans.push(compile_for(l, Engine::Dimc, Precision::Int4).plan);
+    }
+    let np = NetworkPlan::build(plans, Precision::Int4, &arch, Pipelining::Overlap);
+    assert!(np.saved_cycles() > 0, "the chain must actually overlap");
+    for (p, l) in np.plans.iter().zip(chain.iter()) {
+        let t = timed_plan_obs(p, Engine::Dimc, Precision::Int4, arch, Timing::Analytic, true, true)
+            .unwrap();
+        assert_eq!(
+            t.attr.unwrap().total(),
+            t.stats.cycles,
+            "{l}: pipelined slot attribution leaks"
+        );
+        // The per-step spans still tile the rewritten slot.
+        let spans = t.steps.unwrap();
+        assert_eq!(spans.len(), p.steps.len(), "{l}: one span per rewritten step");
+    }
+
+    // And end to end through the façade: the report-level conservation
+    // check holds on a pipelined network run.
+    let mut s = Session::builder()
+        .layers("obpipe", chain.to_vec())
+        .trace_level(TraceLevel::Counters)
+        .pipelining(Pipelining::Overlap)
+        .build()
+        .unwrap();
+    let rep = s.run(&RunSpec::Network).unwrap();
+    assert!(rep.checks_ok(), "pipelined conservation failed: {:?}", rep.checks);
+    assert!(
+        rep.counters.iter().any(|(n, v)| n == "pipeline.overlap.saved_cycles" && *v > 0),
+        "overlap counter missing or zero: {:?}",
+        rep.counters
+    );
+}
+
+#[test]
 fn serve_spans_sum_to_latencies_and_depth_samples_are_monotone() {
     let mut s = Session::builder()
         .model("resnet18")
