@@ -1,0 +1,586 @@
+//! Instruction-stream rule passes over a compiled layer.
+//!
+//! The passes walk sampled trip bodies of every phase **in program
+//! order**, folding four pieces of static state through the stream:
+//!
+//! * the defined-register sets ([`dataflow::DefState`]) — reads of
+//!   never-written registers (DF001/DF002);
+//! * the vector configuration ([`dataflow::VecCtx`]) — every
+//!   vl-dependent op must sit under a live `vsetivli` with a consistent
+//!   element width (VC001/VC002), and register groups must stay inside
+//!   the VRF and respect LMUL/quad alignment (VR001/VR002);
+//! * the DIMC tile state machine — `DL.I` before any `DC.*` of the same
+//!   sweep body, `DL.M`-loaded rows before any `DC.*` touches them,
+//!   field ranges bounded by [`crate::arch`] (DM001..DM004);
+//! * symbolic scalar values (from the `lui+addi` materialization idiom)
+//!   — every load/store resolved and bounds-checked against the
+//!   layer's packed memory regions (MR001..MR005).
+//!
+//! Sampling is sound here because phase bodies are shape-invariant
+//! across trips (the mapper/trace-engine contract) and the per-trip
+//! address constants are monotone in the trip index — the first and
+//! last trips cover the extreme addresses. Shape invariance itself is
+//! *checked*, not assumed (SH001), and weight-load phases are walked
+//! exhaustively so the loaded-row set is exact.
+
+use super::dataflow::{effects, DefState, MemKind, VecCtx};
+use super::Diag;
+use crate::arch::{DIMC_ROWS, DIMC_ROW_BYTES, DIMC_SECTORS};
+use crate::compiler::layer::LayerConfig;
+use crate::compiler::plan::CompiledLayer;
+use crate::compiler::program::{LayerProgram, MemLayout, PhaseKind};
+use crate::isa::{Instr, NUM_VREGS};
+
+/// One named byte range of the layer's packed memory map, with its
+/// access permissions.
+#[derive(Debug, Clone, Copy)]
+pub struct Region {
+    /// Region name (`act`, `wt`, `psum`, `res`, `out`).
+    pub name: &'static str,
+    /// First byte address.
+    pub lo: u64,
+    /// One past the last byte address.
+    pub hi: u64,
+    /// Loads permitted.
+    pub load: bool,
+    /// Stores permitted.
+    pub store: bool,
+}
+
+/// Recompute the layer's memory regions **independently of the
+/// mapper**: sizes are derived from the layer geometry and precision
+/// (the same arithmetic `pack` uses, restated), only the base addresses
+/// come from the compiled [`MemLayout`].
+///
+/// Permissions encode the dataflow of the lowered loop nest: the DIMC
+/// path reads activations, weights and the residual input, spills and
+/// reloads partial sums, and only ever writes packed outputs.
+pub fn regions_for(l: &LayerConfig, p: crate::dimc::Precision, layout: &MemLayout) -> Vec<Region> {
+    let ihp = (l.ih + 2 * l.pad) as u64;
+    let iwp = (l.iw + 2 * l.pad) as u64;
+    let och_pad = l.groups() as u64 * DIMC_ROWS as u64;
+    let act = ihp * iwp * l.ich_pad(p) as u64 * p.bits() as u64 / 8;
+    let wt = och_pad * l.tiles(p) as u64 * DIMC_ROW_BYTES as u64;
+    let psum = l.patches() * DIMC_ROWS as u64 * 4;
+    let res = if l.residual_fused() { l.patches() * och_pad * 4 } else { 0 };
+    // Outputs are nibble-packed (DC.F packs one 4-bit result nibble per
+    // row regardless of precision): och_pad / 2 bytes per patch.
+    let out = l.patches() * och_pad / 2;
+    let mk = |name, base: u32, size: u64, load, store| Region {
+        name,
+        lo: base as u64,
+        hi: base as u64 + size,
+        load,
+        store,
+    };
+    vec![
+        mk("act", layout.act_base, act, true, false),
+        mk("wt", layout.wt_base, wt, true, false),
+        mk("psum", layout.psum_base, psum, true, true),
+        mk("res", layout.res_base, res, true, false),
+        mk("out", layout.out_base, out, false, true),
+    ]
+}
+
+/// A phase with its sampled trip bodies — the unit the rule passes walk
+/// (and the unit mutation tests corrupt).
+pub struct PhaseView {
+    /// Phase name (diagnostic site prefix).
+    pub name: String,
+    /// Phase role.
+    pub kind: PhaseKind,
+    /// Trip count of the full phase.
+    pub trips: u64,
+    /// Sampled `(trip index, body)` pairs, in trip order.
+    pub bodies: Vec<(u64, Vec<Instr>)>,
+}
+
+/// Weight-load phases are walked exhaustively up to this many trips so
+/// the loaded-row set is exact (real weight phases have at most
+/// [`DIMC_ROWS`] trips; the cap only guards hand-built programs).
+const WEIGHT_TRIP_CAP: u64 = 128;
+
+/// Sample every phase of `prog`: all trips of setup/weight-load phases,
+/// and trips `{0, 1, mid, last}` of sweep phases (shape invariance plus
+/// monotone addressing make those the only distinct cases — and the
+/// invariance itself is checked as SH001).
+pub fn sample_views(prog: &LayerProgram) -> Vec<PhaseView> {
+    prog.phases
+        .iter()
+        .map(|ph| {
+            let trips: Vec<u64> = match ph.kind {
+                PhaseKind::Sweep => {
+                    let mut t = vec![0, 1, ph.trips / 2, ph.trips.saturating_sub(1)];
+                    t.sort_unstable();
+                    t.dedup();
+                    t.retain(|&i| i < ph.trips);
+                    t
+                }
+                _ => (0..ph.trips.min(WEIGHT_TRIP_CAP)).collect(),
+            };
+            PhaseView {
+                name: ph.name.clone(),
+                kind: ph.kind,
+                trips: ph.trips,
+                bodies: trips.into_iter().map(|t| (t, ph.body(t))).collect(),
+            }
+        })
+        .collect()
+}
+
+/// Address-canonical form of a body (the Plan IR's shape equivalence):
+/// `lui`/`addi` immediates zeroed, everything else kept.
+fn canonical(body: &[Instr]) -> Vec<Instr> {
+    body.iter()
+        .map(|i| match *i {
+            Instr::Lui { rd, .. } => Instr::Lui { rd, imm: 0 },
+            Instr::OpImm { op, rd, rs1, .. } => Instr::OpImm { op, rd, rs1, imm: 0 },
+            other => other,
+        })
+        .collect()
+}
+
+/// Symbolic scalar-register values: `lui+addi` constant materialization
+/// tracked exactly (wrapping 32-bit), everything else unknown.
+struct ScalarVals {
+    v: [Option<u32>; 32],
+}
+
+impl ScalarVals {
+    fn new() -> Self {
+        let mut v = [None; 32];
+        v[0] = Some(0);
+        ScalarVals { v }
+    }
+
+    fn step(&mut self, i: &Instr) {
+        use crate::isa::AluOp;
+        match *i {
+            Instr::Lui { rd, imm } => self.v[rd as usize] = Some((imm as u32) << 12),
+            Instr::OpImm { op: AluOp::Add, rd, rs1, imm } => {
+                self.v[rd as usize] =
+                    self.v[rs1 as usize].map(|b| b.wrapping_add(imm as u32));
+            }
+            // Any other write to a scalar register makes it unknown.
+            Instr::OpImm { rd, .. }
+            | Instr::Op { rd, .. }
+            | Instr::Lw { rd, .. }
+            | Instr::Lbu { rd, .. }
+            | Instr::Auipc { rd, .. }
+            | Instr::Jal { rd, .. }
+            | Instr::Jalr { rd, .. }
+            | Instr::VmvXS { rd, .. }
+            | Instr::Vsetvli { rd, .. }
+            | Instr::Vsetivli { rd, .. } => {
+                if rd != 0 {
+                    self.v[rd as usize] = None;
+                }
+            }
+            _ => {}
+        }
+        self.v[0] = Some(0);
+    }
+}
+
+/// Per-program walk state shared by all rule passes.
+struct WalkState {
+    defs: DefState,
+    ctx: VecCtx,
+    vals: ScalarVals,
+    /// Rows loaded by the *current* weight pass (reset when a new
+    /// weight-load phase begins — a new pass overwrites the tile).
+    loaded_rows: u32,
+}
+
+impl WalkState {
+    fn new() -> Self {
+        WalkState {
+            defs: DefState::default(),
+            ctx: VecCtx::unconfigured(),
+            vals: ScalarVals::new(),
+            loaded_rows: 0,
+        }
+    }
+}
+
+/// Run every instruction-stream rule pass over sampled `views` against
+/// `regions`, in program order. Exposed (rather than only
+/// [`check_layer`]) so mutation tests can corrupt a sampled view and
+/// assert the rule that fires.
+pub fn check_phases(views: &[PhaseView], regions: &[Region]) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let mut st = WalkState::new();
+    for view in views {
+        if view.kind == PhaseKind::WeightLoad {
+            st.loaded_rows = 0;
+        }
+        // SH001: sampled trips of one phase must share one canonical shape.
+        if let Some(((t0, first), rest)) = view.bodies.split_first() {
+            let c0 = canonical(first);
+            for (t, b) in rest {
+                if canonical(b) != c0 {
+                    diags.push(Diag::error(
+                        "SH001",
+                        format!("{}[trip {t}]", view.name),
+                        format!("body shape diverges from trip {t0} (trip-invariance broken)"),
+                    ));
+                }
+            }
+        }
+        for (trip, body) in &view.bodies {
+            check_body(&mut st, view, *trip, body, regions, &mut diags);
+        }
+    }
+    diags
+}
+
+/// Walk one trip body, updating `st` and appending diagnostics.
+fn check_body(
+    st: &mut WalkState,
+    view: &PhaseView,
+    trip: u64,
+    body: &[Instr],
+    regions: &[Region],
+    diags: &mut Vec<Diag>,
+) {
+    let site = |idx: usize| format!("{}[trip {trip}]#{idx}", view.name);
+    // DL.I seen in *this* body — the input buffer is refreshed per trip,
+    // so a DC op is only meaningful after the trip's own DL.I (DM003).
+    let mut dli_seen = false;
+    for (idx, i) in body.iter().enumerate() {
+        let e = effects(i, &mut st.ctx);
+
+        // CF001: phase bodies are straight-line by construction.
+        if e.control {
+            diags.push(Diag::error("CF001", site(idx), format!("control flow in body: {i}")));
+            st.vals.step(i);
+            continue;
+        }
+
+        // DF001/DF002: reads of never-written registers.
+        let (ux, uv) = st.defs.step(&e);
+        if ux != 0 {
+            diags.push(Diag::error(
+                "DF002",
+                site(idx),
+                format!("reads undefined scalar register(s) {}: {i}", mask_names('x', ux)),
+            ));
+        }
+        if uv != 0 {
+            diags.push(Diag::error(
+                "DF001",
+                site(idx),
+                format!("reads undefined vector register(s) {}: {i}", mask_names('v', uv)),
+            ));
+        }
+
+        // VC001/VC002: vector-configuration coverage and consistency.
+        if e.needs_vcfg && st.ctx.vl.is_none() {
+            diags.push(Diag::error(
+                "VC001",
+                site(idx),
+                format!("vl-dependent op with no live vsetivli: {i}"),
+            ));
+        }
+        match *i {
+            Instr::Vle { eew, .. } | Instr::Vse { eew, .. } | Instr::Vlse { eew, .. } => {
+                if let Some(vt) = st.ctx.vtype {
+                    if vt.sew != eew as u16 {
+                        diags.push(Diag::error(
+                            "VC002",
+                            site(idx),
+                            format!("eew {eew} under configured sew {}: {i}", vt.sew),
+                        ));
+                    }
+                }
+            }
+            _ => {}
+        }
+
+        // VR001/VR002: VRF bounds and group alignment.
+        for u in &e.vuses {
+            if u.base as u32 + u.regs > NUM_VREGS as u32 {
+                diags.push(Diag::error(
+                    "VR001",
+                    site(idx),
+                    format!("register group v{}..+{} runs past v31: {i}", u.base, u.regs),
+                ));
+            }
+            if u.regs > 1 && u.base as u32 % u.regs.next_power_of_two() != 0 {
+                diags.push(Diag::error(
+                    "VR002",
+                    site(idx),
+                    format!("group base v{} not {}-register aligned: {i}", u.base, u.regs),
+                ));
+            }
+        }
+
+        // DM001..DM004: DIMC tile state machine and field ranges.
+        check_dimc(st, i, &site(idx), &mut dli_seen, diags);
+
+        // MR001..MR005: memory-region bounds.
+        if let Some(m) = e.mem {
+            check_mem(st, &m, i, &site(idx), regions, diags);
+        }
+
+        st.vals.step(i);
+    }
+}
+
+/// DIMC tile state-machine + field-range rules for one instruction.
+fn check_dimc(
+    st: &mut WalkState,
+    i: &Instr,
+    site: &str,
+    dli_seen: &mut bool,
+    diags: &mut Vec<Diag>,
+) {
+    let field = |diags: &mut Vec<Diag>, detail: String| {
+        diags.push(Diag::error("DM004", site.to_string(), detail));
+    };
+    let check_load_fields = |diags: &mut Vec<Diag>, nvec: u8, mask: u8, sec: u8, width: u8| {
+        if nvec == 0 || nvec > 4 {
+            field(diags, format!("nvec {nvec} outside 1..=4: {i}"));
+        }
+        if sec as usize >= DIMC_SECTORS {
+            field(diags, format!("sector {sec} outside 0..{DIMC_SECTORS}: {i}"));
+        }
+        if nvec >= 1 && nvec <= 4 && mask & !(((1u16 << nvec) - 1) as u8) != 0 {
+            field(diags, format!("mask {mask:#06b} has valid bits beyond nvec {nvec}: {i}"));
+        }
+        if width > 2 {
+            field(diags, format!("width field {width} is reserved (0..=2): {i}"));
+        }
+    };
+    match *i {
+        Instr::DlI { nvec, mask, sec, width, .. } => {
+            check_load_fields(diags, nvec, mask, sec, width);
+            *dli_seen = true;
+        }
+        Instr::DlM { nvec, mask, sec, width, m_row, .. } => {
+            check_load_fields(diags, nvec, mask, sec, width);
+            if (m_row as usize) < DIMC_ROWS {
+                st.loaded_rows |= 1 << m_row;
+            } else {
+                diags.push(Diag::error(
+                    "DM001",
+                    site.to_string(),
+                    format!("DL.M row {m_row} outside 0..{DIMC_ROWS}: {i}"),
+                ));
+            }
+        }
+        Instr::DcP { m_row, width, .. } | Instr::DcF { m_row, width, .. } => {
+            if width > 2 {
+                field(diags, format!("width field {width} is reserved (0..=2): {i}"));
+            }
+            if let Instr::DcF { bidx, .. } = *i {
+                if bidx >= 8 {
+                    field(diags, format!("nibble index {bidx} outside 0..8: {i}"));
+                }
+            }
+            if (m_row as usize) >= DIMC_ROWS {
+                diags.push(Diag::error(
+                    "DM001",
+                    site.to_string(),
+                    format!("DC row {m_row} outside 0..{DIMC_ROWS}: {i}"),
+                ));
+            } else if st.loaded_rows & (1 << m_row) == 0 {
+                diags.push(Diag::error(
+                    "DM002",
+                    site.to_string(),
+                    format!("DC op on weight row {m_row} never loaded by this pass: {i}"),
+                ));
+            }
+            if !*dli_seen {
+                diags.push(Diag::error(
+                    "DM003",
+                    site.to_string(),
+                    format!("DC op before any DL.I of this sweep body: {i}"),
+                ));
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Memory-region bounds for one resolved access.
+fn check_mem(
+    st: &WalkState,
+    m: &super::dataflow::MemAccess,
+    i: &Instr,
+    site: &str,
+    regions: &[Region],
+    diags: &mut Vec<Diag>,
+) {
+    let base = match st.vals.v[m.base_reg as usize] {
+        Some(b) => b,
+        None => {
+            diags.push(Diag::error(
+                "MR005",
+                site.to_string(),
+                format!("base address in x{} not statically resolvable: {i}", m.base_reg),
+            ));
+            return;
+        }
+    };
+    let addr = base.wrapping_add(m.offset as u32) as u64;
+    let len = match m.kind {
+        MemKind::Unit { bytes: Some(b) } => b as u64,
+        // Unknown length means no live vsetivli — VC001 already fired.
+        MemKind::Unit { bytes: None } => return,
+        MemKind::Strided { stride_reg, elems, ebytes } => {
+            let (stride, elems) = match (st.vals.v[stride_reg as usize], elems) {
+                (Some(s), Some(e)) => (s as i32 as i64, e as u64),
+                _ => {
+                    diags.push(Diag::error(
+                        "MR005",
+                        site.to_string(),
+                        format!("strided access with unresolved stride/vl: {i}"),
+                    ));
+                    return;
+                }
+            };
+            // Check each element individually (vl is architecturally small).
+            for e in 0..elems {
+                let a = (addr as i64 + e as i64 * stride) as u64;
+                check_range(a, ebytes as u64, m.store, i, site, regions, diags);
+            }
+            return;
+        }
+    };
+    check_range(addr, len, m.store, i, site, regions, diags);
+}
+
+/// Check `[addr, addr+len)` lies wholly inside one region that permits
+/// the access direction.
+fn check_range(
+    addr: u64,
+    len: u64,
+    store: bool,
+    i: &Instr,
+    site: &str,
+    regions: &[Region],
+    diags: &mut Vec<Diag>,
+) {
+    let Some(r) = regions.iter().find(|r| addr >= r.lo && addr < r.hi) else {
+        diags.push(Diag::error(
+            "MR001",
+            site.to_string(),
+            format!("access at {addr:#x}+{len} outside every region: {i}"),
+        ));
+        return;
+    };
+    if addr + len > r.hi {
+        diags.push(Diag::error(
+            "MR001",
+            site.to_string(),
+            format!("access at {addr:#x}+{len} overruns region `{}` (ends {:#x}): {i}", r.name, r.hi),
+        ));
+    }
+    if store && !r.store {
+        diags.push(Diag::error(
+            "MR002",
+            site.to_string(),
+            format!("store into read-only region `{}` at {addr:#x}: {i}", r.name),
+        ));
+    }
+    if !store && !r.load {
+        diags.push(Diag::error(
+            "MR003",
+            site.to_string(),
+            format!("load from write-only region `{}` at {addr:#x}: {i}", r.name),
+        ));
+    }
+}
+
+/// `v5 v6`-style register list from a bitmask.
+fn mask_names(prefix: char, mask: u32) -> String {
+    (0..32)
+        .filter(|r| mask & (1 << r) != 0)
+        .map(|r| format!("{prefix}{r}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// MR004: the layer's regions must be pairwise disjoint (empty regions
+/// are exempt — a zero-sized residual region collapses onto its
+/// neighbour's base by construction).
+pub fn check_region_disjointness(regions: &[Region]) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    for (a, ra) in regions.iter().enumerate() {
+        for rb in regions.iter().skip(a + 1) {
+            if ra.lo < ra.hi && rb.lo < rb.hi && ra.lo < rb.hi && rb.lo < ra.hi {
+                diags.push(Diag::error(
+                    "MR004",
+                    "layout",
+                    format!(
+                        "regions `{}` [{:#x},{:#x}) and `{}` [{:#x},{:#x}) overlap",
+                        ra.name, ra.lo, ra.hi, rb.name, rb.lo, rb.hi
+                    ),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+/// Full instruction-stream lint of one compiled layer: region
+/// disjointness, then every rule pass over the sampled phase views.
+pub fn check_layer(cl: &CompiledLayer, l: &LayerConfig, p: crate::dimc::Precision) -> Vec<Diag> {
+    let regions = regions_for(l, p, &cl.prog.layout);
+    let mut diags = check_region_disjointness(&regions);
+    diags.extend(check_phases(&sample_views(&cl.prog), &regions));
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::mapper::compile_dimc_planned;
+    use crate::dimc::Precision;
+
+    fn lint(l: &LayerConfig, p: Precision) -> Vec<Diag> {
+        let cl = compile_dimc_planned(l, p);
+        check_layer(&cl, l, p)
+    }
+
+    #[test]
+    fn representative_layers_lint_clean() {
+        for l in [
+            LayerConfig::conv("a", 64, 32, 1, 1, 8, 8, 1, 0),
+            LayerConfig::conv("b", 80, 48, 2, 2, 9, 9, 1, 0),
+            LayerConfig::conv("c", 16, 96, 2, 2, 6, 6, 1, 0),
+            LayerConfig::fc("f", 300, 40),
+            LayerConfig::gemm("g", 6, 40, 300),
+            LayerConfig::gemm_residual("r", 5, 64, 128, true, true),
+        ] {
+            for p in [Precision::Int4, Precision::Int2, Precision::Int1] {
+                let diags = lint(&l, p);
+                assert!(diags.is_empty(), "{l} @{}b: {:?}", p.bits(), diags);
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_region_store_is_caught() {
+        let l = LayerConfig::conv("a", 64, 32, 1, 1, 8, 8, 1, 0);
+        let cl = compile_dimc_planned(&l, Precision::Int4);
+        let regions = regions_for(&l, Precision::Int4, &cl.prog.layout);
+        let mut views = sample_views(&cl.prog);
+        // Shift the sweep write-back base way past every region.
+        for v in &mut views {
+            if v.kind != PhaseKind::Sweep {
+                continue;
+            }
+            for (_, body) in &mut v.bodies {
+                for i in body.iter_mut() {
+                    if let Instr::Lui { rd: 6, imm } = i {
+                        *imm += 0x400;
+                    }
+                }
+            }
+        }
+        let diags = check_phases(&views, &regions);
+        assert!(diags.iter().any(|d| d.rule == "MR001"), "{diags:?}");
+    }
+}

@@ -1,0 +1,527 @@
+//! Def-use and liveness analysis over scalar and vector registers.
+//!
+//! One register model for every consumer: each [`Instr`] variant maps to
+//! an [`Effects`] record — the scalar registers it reads/writes, the
+//! vector register *groups* it touches (quad-aware: group extents are
+//! computed from the tracked vector configuration, exactly like the
+//! VRF's LMUL grouping), the memory access it performs, and whether the
+//! variant is modelled precisely enough to splice new code around it.
+//!
+//! Consumers:
+//!
+//! * [`crate::compiler::netplan`] asks [`splice_scan`] for the live
+//!   register masks of a sweep body before hoisting next-layer weight
+//!   loads into it (the walk this module generalizes and replaces);
+//! * [`crate::analysis::checks`] folds [`Effects`] through a
+//!   [`DefState`] to find reads of never-written registers, vector ops
+//!   with no live `vsetivli`, and VRF bound/alignment violations;
+//! * [`crate::analysis::planck`] re-runs [`splice_scan`] on
+//!   reconstructed host bodies to re-prove every applied overlap hoist
+//!   without trusting the scheduler's own record.
+//!
+//! The engine is purely static: it never executes an instruction, it
+//! only interprets register fields against the architectural grouping
+//! rules.
+
+use crate::arch::VLENB;
+use crate::isa::{Instr, VType};
+
+/// Number of VRF registers a `vl x eew` access covers (LMUL groups).
+pub fn group_regs(vl: u32, eew: u16) -> u32 {
+    (vl * eew as u32 / 8).div_ceil(VLENB as u32).max(1)
+}
+
+/// One vector register-group operand of an instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegUse {
+    /// First register of the group.
+    pub base: u8,
+    /// Registers covered (1 for scalar-per-register DIMC operands,
+    /// `group_regs(vl, eew)` for vl-dependent vector ops).
+    pub regs: u32,
+    /// True when the operand is written, false when read. Read-modify-
+    /// write operands appear twice (read entry first).
+    pub write: bool,
+}
+
+/// The kind of memory access an instruction performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemKind {
+    /// Scalar or unit-stride vector access of `bytes` bytes (`None`
+    /// when the vector length is unknown).
+    Unit { bytes: Option<u32> },
+    /// Strided vector access: `elems` elements of `ebytes` bytes, base
+    /// stride in scalar register `stride_reg`.
+    Strided { stride_reg: u8, elems: Option<u32>, ebytes: u32 },
+}
+
+/// A memory access: base scalar register + immediate offset + extent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemAccess {
+    /// Scalar register holding the base address.
+    pub base_reg: u8,
+    /// Immediate byte offset added to the base.
+    pub offset: i32,
+    /// Access extent.
+    pub kind: MemKind,
+    /// True for stores, false for loads.
+    pub store: bool,
+}
+
+/// The register/memory footprint of one instruction.
+#[derive(Debug, Clone, Default)]
+pub struct Effects {
+    /// Bitmask of scalar registers read.
+    pub xr: u32,
+    /// Bitmask of scalar registers written.
+    pub xw: u32,
+    /// Vector register-group operands, reads before writes.
+    pub vuses: Vec<RegUse>,
+    /// The memory access, if any.
+    pub mem: Option<MemAccess>,
+    /// True for control flow (branches, jumps, halt) — bodies analysed
+    /// here are straight-line by construction.
+    pub control: bool,
+    /// True iff the variant is modelled precisely enough for the
+    /// overlap scheduler to splice staging code around it (the exact
+    /// variant set of the original netplan walk — anything else makes a
+    /// sweep body ineligible for hoisting, never guessed at).
+    pub splice_safe: bool,
+    /// True iff the operation's element count depends on a live vector
+    /// configuration (`vsetivli`) — the checks layer diagnoses these
+    /// when no configuration is live.
+    pub needs_vcfg: bool,
+}
+
+/// Tracked vector configuration, folded through a body in program order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VecCtx {
+    /// Active vector length; `None` before any `vsetivli` (or after a
+    /// register-AVL `vsetvli`, whose length is not statically known).
+    pub vl: Option<u32>,
+    /// Active vector type; `None` while unconfigured.
+    pub vtype: Option<VType>,
+}
+
+impl VecCtx {
+    /// Unconfigured state: any vl-dependent op is a diagnostic.
+    pub fn unconfigured() -> Self {
+        VecCtx { vl: None, vtype: None }
+    }
+
+    /// Legacy splice-scan initial state (`vl = 0`, `sew = 8`), kept so
+    /// [`splice_scan`] reproduces the original netplan walk bit-for-bit
+    /// on bodies that touch vector state before configuring it.
+    pub fn zeroed() -> Self {
+        VecCtx { vl: Some(0), vtype: Some(VType::new(8, 1)) }
+    }
+
+    /// Registers covered by a vl-dependent access at element width
+    /// `eew` (1 when the length is unknown — the checks layer reports
+    /// the missing configuration separately).
+    fn regs(&self, eew: u16) -> u32 {
+        match self.vl {
+            Some(vl) => group_regs(vl, eew),
+            None => 1,
+        }
+    }
+
+    /// Active SEW (8 when unconfigured — only reachable together with a
+    /// missing-configuration diagnostic).
+    fn sew(&self) -> u16 {
+        self.vtype.map(|t| t.sew).unwrap_or(8)
+    }
+}
+
+/// Compute the [`Effects`] of `i` under `ctx`, updating `ctx` for
+/// configuration instructions. This models **every** [`Instr`] variant;
+/// `splice_safe` marks the subset the overlap scheduler may splice
+/// around.
+pub fn effects(i: &Instr, ctx: &mut VecCtx) -> Effects {
+    let mut e = Effects::default();
+    let rd_use = |base: u8, regs: u32| RegUse { base, regs, write: false };
+    let wr_use = |base: u8, regs: u32| RegUse { base, regs, write: true };
+    match *i {
+        Instr::Lui { rd, .. } => {
+            e.xw = 1 << rd;
+            e.splice_safe = true;
+        }
+        Instr::Auipc { rd, .. } => e.xw = 1 << rd,
+        Instr::OpImm { rd, rs1, .. } => {
+            e.xw = 1 << rd;
+            e.xr = 1 << rs1;
+            e.splice_safe = true;
+        }
+        Instr::Op { rd, rs1, rs2, .. } => {
+            e.xw = 1 << rd;
+            e.xr = (1 << rs1) | (1 << rs2);
+            e.splice_safe = true;
+        }
+        Instr::Lw { rd, rs1, imm } => {
+            e.xw = 1 << rd;
+            e.xr = 1 << rs1;
+            e.mem = Some(MemAccess {
+                base_reg: rs1,
+                offset: imm,
+                kind: MemKind::Unit { bytes: Some(4) },
+                store: false,
+            });
+        }
+        Instr::Lbu { rd, rs1, imm } => {
+            e.xw = 1 << rd;
+            e.xr = 1 << rs1;
+            e.mem = Some(MemAccess {
+                base_reg: rs1,
+                offset: imm,
+                kind: MemKind::Unit { bytes: Some(1) },
+                store: false,
+            });
+        }
+        Instr::Sw { rs2, rs1, imm } => {
+            e.xr = (1 << rs1) | (1 << rs2);
+            e.mem = Some(MemAccess {
+                base_reg: rs1,
+                offset: imm,
+                kind: MemKind::Unit { bytes: Some(4) },
+                store: true,
+            });
+        }
+        Instr::Sb { rs2, rs1, imm } => {
+            e.xr = (1 << rs1) | (1 << rs2);
+            e.mem = Some(MemAccess {
+                base_reg: rs1,
+                offset: imm,
+                kind: MemKind::Unit { bytes: Some(1) },
+                store: true,
+            });
+        }
+        Instr::Branch { rs1, rs2, .. } => {
+            e.xr = (1 << rs1) | (1 << rs2);
+            e.control = true;
+        }
+        Instr::Jal { rd, .. } => {
+            e.xw = 1 << rd;
+            e.control = true;
+        }
+        Instr::Jalr { rd, rs1, .. } => {
+            e.xw = 1 << rd;
+            e.xr = 1 << rs1;
+            e.control = true;
+        }
+        Instr::Halt => e.control = true,
+        Instr::Vsetvli { rd, rs1, vtype } => {
+            // Register AVL: the resulting vl is not statically known.
+            e.xw = 1 << rd;
+            e.xr = 1 << rs1;
+            ctx.vl = None;
+            ctx.vtype = Some(vtype);
+        }
+        Instr::Vsetivli { rd, uimm, vtype } => {
+            e.xw = 1 << rd;
+            e.splice_safe = true;
+            ctx.vl = Some((uimm as u32).min(vtype.vlmax()));
+            ctx.vtype = Some(vtype);
+        }
+        Instr::Vle { eew, vd, rs1 } => {
+            e.xr = 1 << rs1;
+            e.vuses.push(wr_use(vd, ctx.regs(eew as u16)));
+            e.mem = Some(MemAccess {
+                base_reg: rs1,
+                offset: 0,
+                kind: MemKind::Unit { bytes: ctx.vl.map(|vl| vl * eew as u32 / 8) },
+                store: false,
+            });
+            e.splice_safe = true;
+            e.needs_vcfg = true;
+        }
+        Instr::Vse { eew, vs3, rs1 } => {
+            e.xr = 1 << rs1;
+            e.vuses.push(rd_use(vs3, ctx.regs(eew as u16)));
+            e.mem = Some(MemAccess {
+                base_reg: rs1,
+                offset: 0,
+                kind: MemKind::Unit { bytes: ctx.vl.map(|vl| vl * eew as u32 / 8) },
+                store: true,
+            });
+            e.splice_safe = true;
+            e.needs_vcfg = true;
+        }
+        Instr::Vlse { eew, vd, rs1, rs2 } => {
+            e.xr = (1 << rs1) | (1 << rs2);
+            e.vuses.push(wr_use(vd, ctx.regs(eew as u16)));
+            e.mem = Some(MemAccess {
+                base_reg: rs1,
+                offset: 0,
+                kind: MemKind::Strided {
+                    stride_reg: rs2,
+                    elems: ctx.vl,
+                    ebytes: eew as u32 / 8,
+                },
+                store: false,
+            });
+            e.splice_safe = true;
+            e.needs_vcfg = true;
+        }
+        Instr::VaddVV { vd, vs1, vs2 }
+        | Instr::VsubVV { vd, vs1, vs2 }
+        | Instr::VmulVV { vd, vs1, vs2 }
+        | Instr::VandVV { vd, vs1, vs2 }
+        | Instr::VorVV { vd, vs1, vs2 }
+        | Instr::VxorVV { vd, vs1, vs2 } => {
+            let n = ctx.regs(ctx.sew());
+            e.vuses.push(rd_use(vs1, n));
+            e.vuses.push(rd_use(vs2, n));
+            e.vuses.push(wr_use(vd, n));
+            e.needs_vcfg = true;
+        }
+        Instr::VmaccVV { vd, vs1, vs2 } => {
+            let n = ctx.regs(ctx.sew());
+            e.vuses.push(rd_use(vs1, n));
+            e.vuses.push(rd_use(vs2, n));
+            e.vuses.push(rd_use(vd, n)); // accumulator read...
+            e.vuses.push(wr_use(vd, n)); // ...then written
+            e.needs_vcfg = true;
+        }
+        Instr::VredsumVS { vd, vs1, vs2 } => {
+            e.vuses.push(rd_use(vs1, 1));
+            e.vuses.push(rd_use(vs2, ctx.regs(ctx.sew())));
+            e.vuses.push(wr_use(vd, 1));
+            e.needs_vcfg = true;
+        }
+        Instr::VaddVX { vd, rs1, vs2 }
+        | Instr::VmaxVX { vd, rs1, vs2 }
+        | Instr::VminVX { vd, rs1, vs2 } => {
+            let n = ctx.regs(ctx.sew());
+            e.xr = 1 << rs1;
+            e.vuses.push(rd_use(vs2, n));
+            e.vuses.push(wr_use(vd, n));
+            e.needs_vcfg = true;
+        }
+        Instr::VaddVI { vd, vs2, .. }
+        | Instr::VandVI { vd, vs2, .. }
+        | Instr::VsraVI { vd, vs2, .. }
+        | Instr::VsllVI { vd, vs2, .. }
+        | Instr::VsrlVI { vd, vs2, .. }
+        | Instr::VslidedownVI { vd, vs2, .. }
+        | Instr::VslideupVI { vd, vs2, .. } => {
+            let n = ctx.regs(ctx.sew());
+            e.vuses.push(rd_use(vs2, n));
+            e.vuses.push(wr_use(vd, n));
+            e.needs_vcfg = true;
+        }
+        Instr::VmvVI { vd, .. } => {
+            e.vuses.push(wr_use(vd, ctx.regs(ctx.sew())));
+            e.splice_safe = true;
+            e.needs_vcfg = true;
+        }
+        Instr::VmvVX { vd, rs1 } => {
+            e.xr = 1 << rs1;
+            e.vuses.push(wr_use(vd, ctx.regs(ctx.sew())));
+            e.splice_safe = true;
+            e.needs_vcfg = true;
+        }
+        Instr::VmvXS { rd, vs2 } => {
+            e.xw = 1 << rd;
+            e.vuses.push(rd_use(vs2, 1));
+        }
+        Instr::VsextVf4 { vd, vs2 } => {
+            let sew = ctx.sew();
+            e.vuses.push(rd_use(vs2, ctx.regs((sew / 4).max(2))));
+            e.vuses.push(wr_use(vd, ctx.regs(sew)));
+            e.needs_vcfg = true;
+        }
+        Instr::DlI { nvec, vs1, .. } => {
+            e.vuses.push(rd_use(vs1, nvec as u32));
+            e.splice_safe = true;
+        }
+        Instr::DlM { nvec, vs1, .. } => {
+            e.vuses.push(rd_use(vs1, nvec as u32));
+            e.splice_safe = true;
+        }
+        Instr::DcP { vs1, vd, .. } => {
+            e.vuses.push(rd_use(vs1, 1));
+            e.vuses.push(wr_use(vd, 1));
+            e.splice_safe = true;
+        }
+        Instr::DcF { vs1, vd, .. } => {
+            e.vuses.push(rd_use(vs1, 1));
+            e.vuses.push(wr_use(vd, 1));
+            e.splice_safe = true;
+        }
+    }
+    e
+}
+
+/// Defined-register state carried across bodies in program order: the
+/// checks layer folds [`Effects`] through this to find reads of
+/// never-written registers (DF001/DF002).
+#[derive(Debug, Clone, Copy)]
+pub struct DefState {
+    /// Bitmask of scalar registers holding a defined value (`x0` is
+    /// always defined).
+    pub x: u32,
+    /// Bitmask of vector registers holding a defined value.
+    pub v: u32,
+}
+
+impl Default for DefState {
+    fn default() -> Self {
+        DefState { x: 1, v: 0 }
+    }
+}
+
+impl DefState {
+    /// Apply one instruction's effects: returns the masks of scalar and
+    /// vector registers it *read while undefined*, then marks its
+    /// writes defined. Vector groups that run past `v31` wrap for mask
+    /// purposes only (the bound itself is a separate VR001 diagnostic).
+    pub fn step(&mut self, e: &Effects) -> (u32, u32) {
+        let undef_x = e.xr & !self.x & !1;
+        let mut undef_v = 0u32;
+        for u in &e.vuses {
+            let m = group_mask(u.base, u.regs);
+            if u.write {
+                continue;
+            }
+            undef_v |= m & !self.v;
+        }
+        self.x |= e.xw;
+        for u in &e.vuses {
+            if u.write {
+                self.v |= group_mask(u.base, u.regs);
+            }
+        }
+        (undef_x, undef_v)
+    }
+}
+
+/// Bitmask of the `n` registers starting at `base`, wrapping modulo 32
+/// (mask semantics only — out-of-range groups are diagnosed separately).
+pub fn group_mask(base: u8, n: u32) -> u32 {
+    let mut m = 0u32;
+    for r in 0..n {
+        m |= 1 << ((base as u32 + r) % 32);
+    }
+    m
+}
+
+/// What a splice-eligibility scan learned about a sweep body (the
+/// overlap scheduler's view — see
+/// [`crate::compiler::netplan::try_hoist`]).
+#[derive(Debug, Clone)]
+pub struct SpliceScan {
+    /// Bit `r` set iff vector register `v{r}` is read or written.
+    pub vmask: u32,
+    /// Bit `r` set iff scalar register `x{r}` is read or written.
+    pub xmask: u32,
+    /// Index of the last `DL.I` (the staging-load splice point).
+    pub last_dli: usize,
+    /// The `vsetivli` active at the splice point (restored after the
+    /// splice so downstream code sees the configuration it was emitted
+    /// under).
+    pub vcfg_at_splice: Instr,
+}
+
+/// Conservative, exact liveness walk over a generated sweep body for
+/// the overlap scheduler. Returns `None` — overlap illegal — when the
+/// body contains any instruction variant the splice model does not
+/// cover precisely, has no `DL.I`, or reaches its last `DL.I` without a
+/// live `vsetivli`. Never guesses at liveness.
+pub fn splice_scan(body: &[Instr]) -> Option<SpliceScan> {
+    let mut ctx = VecCtx::zeroed();
+    let mut vmask = 0u32;
+    let mut xmask = 0u32;
+    let mut last_dli = None;
+    let mut last_vcfg = None;
+    let mut vcfg_at_splice = None;
+    for (idx, i) in body.iter().enumerate() {
+        let e = effects(i, &mut ctx);
+        if !e.splice_safe {
+            return None;
+        }
+        xmask |= e.xr | e.xw;
+        for u in &e.vuses {
+            vmask |= group_mask(u.base, u.regs);
+        }
+        match i {
+            Instr::Vsetivli { .. } => last_vcfg = Some(*i),
+            Instr::DlI { .. } => {
+                last_dli = Some(idx);
+                vcfg_at_splice = last_vcfg;
+            }
+            _ => {}
+        }
+    }
+    Some(SpliceScan { vmask, xmask, last_dli: last_dli?, vcfg_at_splice: vcfg_at_splice? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::AluOp;
+
+    #[test]
+    fn group_regs_matches_lmul_grouping() {
+        assert_eq!(group_regs(32, 8), 4); // 32B under m4
+        assert_eq!(group_regs(8, 8), 1); // 8B under m1
+        assert_eq!(group_regs(8, 32), 4); // 32B of i32 psums
+        assert_eq!(group_regs(0, 8), 1); // degenerate floor
+    }
+
+    #[test]
+    fn defstate_flags_undefined_reads() {
+        let mut ctx = VecCtx::zeroed();
+        let mut d = DefState::default();
+        // addi x5, x5, 1 reads undefined x5.
+        let e = effects(&Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 5, imm: 1 }, &mut ctx);
+        let (ux, _) = d.step(&e);
+        assert_eq!(ux, 1 << 5);
+        // Second time x5 is defined.
+        let e = effects(&Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 5, imm: 1 }, &mut ctx);
+        let (ux, _) = d.step(&e);
+        assert_eq!(ux, 0);
+        // x0 never counts as undefined.
+        let e = effects(&Instr::OpImm { op: AluOp::Add, rd: 6, rs1: 0, imm: 1 }, &mut ctx);
+        let (ux, _) = d.step(&e);
+        assert_eq!(ux, 0);
+    }
+
+    #[test]
+    fn vector_groups_track_the_configuration() {
+        let mut ctx = VecCtx::unconfigured();
+        let mut d = DefState::default();
+        let cfg = Instr::Vsetivli { rd: 0, uimm: 32, vtype: VType::new(8, 4) };
+        d.step(&effects(&cfg, &mut ctx));
+        assert_eq!(ctx.vl, Some(32));
+        // vle8 v8 under m4 defines v8..v11.
+        let e = effects(&Instr::Vle { eew: 8, vd: 8, rs1: 5 }, &mut ctx);
+        d.step(&e);
+        assert_eq!(d.v, 0xf << 8);
+        // DL.M nvec=4 reads exactly those; no undefined bits.
+        let e = effects(
+            &Instr::DlM { nvec: 4, mask: 0xf, vs1: 8, width: 0, sec: 0, m_row: 0 },
+            &mut ctx,
+        );
+        let (_, uv) = d.step(&e);
+        assert_eq!(uv, 0);
+        // ...but reading v12..v15 is undefined.
+        let e = effects(
+            &Instr::DlM { nvec: 4, mask: 0xf, vs1: 12, width: 0, sec: 1, m_row: 0 },
+            &mut ctx,
+        );
+        let (_, uv) = d.step(&e);
+        assert_eq!(uv, 0xf << 12);
+    }
+
+    #[test]
+    fn splice_scan_rejects_unmodelled_variants() {
+        let body = vec![
+            Instr::Vsetivli { rd: 0, uimm: 8, vtype: VType::new(8, 1) },
+            Instr::DlI { nvec: 1, mask: 1, vs1: 8, width: 0, sec: 0 },
+            Instr::VmaccVV { vd: 1, vs1: 2, vs2: 3 },
+        ];
+        assert!(splice_scan(&body).is_none(), "vmacc is not splice-safe");
+        assert!(splice_scan(&body[..2]).is_some());
+        assert!(splice_scan(&body[1..2]).is_none(), "no vsetivli before the DL.I");
+    }
+}

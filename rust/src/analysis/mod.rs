@@ -1,0 +1,148 @@
+//! Static verifier and lint framework over DIMC instruction streams,
+//! the Plan IR, and cluster shard plans.
+//!
+//! The paper's four custom instructions impose a strict tile state
+//! machine and register/vtype discipline that the mapper enforces *by
+//! construction* — and that the overlap scheduler's Plan rewrites must
+//! preserve. This module is the independent referee: a pass library
+//! that re-derives every one of those obligations from first principles
+//! and checks the compiled artefacts against them **without running
+//! anything** — no [`pipeline::Core`](crate::pipeline), no analytic
+//! simulation, only structural walks over instruction streams, Plans
+//! and shard plans.
+//!
+//! Passes (one module each):
+//!
+//! * [`dataflow`] — def-use/liveness engine over scalar + vector
+//!   registers (quad-aware VRF grouping). Shared with the overlap
+//!   scheduler: [`crate::compiler::netplan`] consumes
+//!   [`dataflow::splice_scan`] for hoist legality, and [`planck`]
+//!   re-runs the same engine to cross-check every applied hoist.
+//! * [`checks`] — instruction-stream rule passes on a
+//!   [`CompiledLayer`](crate::compiler::plan::CompiledLayer): DIMC tile
+//!   state-machine legality, `vsetivli` coverage, VRF bounds and
+//!   alignment, reads of never-written registers, and memory-region
+//!   bounds against the layer's packed layout.
+//! * [`planck`] — Plan/NetworkPlan well-formedness: every step's
+//!   class counts and traffic annotations re-counted independently from
+//!   its shape body, and every applied overlap hoist re-proved legal.
+//! * [`races`] — static shard-race detection: per-shard output
+//!   write-sets disjoint and covering, input read-sets in-bounds, ops
+//!   conserved, for layer- and image-parallel cluster schedules.
+//!
+//! Every pass emits [`Diag`]s carrying a stable rule id (catalogued in
+//! `docs/ARCHITECTURE.md` §Static analysis). A clean artefact lints to
+//! an empty diagnostic list; [`Session::verify`](crate::sim::Session)
+//! denies by default on any diagnostic, and `repro lint` exposes the
+//! same passes on the command line.
+
+pub mod checks;
+pub mod dataflow;
+pub mod planck;
+pub mod races;
+
+use crate::arch::Arch;
+use crate::cluster::shard::ShardPlan;
+use crate::compiler::layer::LayerConfig;
+use crate::compiler::mapper::compile_dimc_planned;
+use crate::compiler::netplan::{NetworkPlan, Pipelining};
+use crate::compiler::plan::CompiledLayer;
+use crate::dimc::Precision;
+use std::fmt;
+
+/// Diagnostic severity. Every current rule is an [`Error`]; the split
+/// exists so future advisory rules can ride the same machinery.
+///
+/// [`Error`]: Severity::Error
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// The artefact violates a normative contract; consumers must
+    /// reject it.
+    Error,
+    /// Advisory only; consumers may proceed.
+    Warning,
+}
+
+impl Severity {
+    /// Canonical lower-case name (CLI / JSON vocabulary).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One diagnostic from a static-analysis pass.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    /// Stable rule id (e.g. `DM002`) — the catalogue lives in
+    /// `docs/ARCHITECTURE.md`.
+    pub rule: &'static str,
+    /// How bad it is.
+    pub severity: Severity,
+    /// Where it is: a phase/step/shard site such as
+    /// `sweep g0 t1[trip 3]#12` (body index 12 of trip 3) or
+    /// `plan[2] step 4`.
+    pub site: String,
+    /// Human-readable description of the violation.
+    pub detail: String,
+}
+
+impl Diag {
+    /// Construct an [`Severity::Error`] diagnostic.
+    pub fn error(rule: &'static str, site: impl Into<String>, detail: impl Into<String>) -> Self {
+        Diag { rule, severity: Severity::Error, site: site.into(), detail: detail.into() }
+    }
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} [{}] {}: {}", self.severity.as_str(), self.rule, self.site, self.detail)
+    }
+}
+
+/// Lint one compiled layer: instruction-stream rule passes
+/// ([`checks`]) plus Plan recount ([`planck::check_plan`]).
+pub fn lint_layer(cl: &CompiledLayer, l: &LayerConfig, precision: Precision) -> Vec<Diag> {
+    let mut diags = checks::check_layer(cl, l, precision);
+    diags.extend(planck::check_plan(&cl.plan, precision, "plan"));
+    diags
+}
+
+/// Lint a whole network at one precision/pipelining setting: every
+/// layer's stream and Plan, then the built [`NetworkPlan`] with every
+/// applied overlap hoist re-proved against the original per-layer
+/// Plans.
+pub fn lint_network(
+    layers: &[LayerConfig],
+    precision: Precision,
+    arch: &Arch,
+    pipelining: Pipelining,
+) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let mut originals = Vec::with_capacity(layers.len());
+    for l in layers {
+        let cl = compile_dimc_planned(l, precision);
+        for mut d in lint_layer(&cl, l, precision) {
+            d.site = format!("{}/{}", l.name, d.site);
+            diags.push(d);
+        }
+        originals.push(cl.plan);
+    }
+    let np = NetworkPlan::build(originals.clone(), precision, arch, pipelining);
+    diags.extend(planck::check_network(&np, &originals, precision));
+    diags
+}
+
+/// Lint the cluster sharding of `layers`: every shard plan derivable at
+/// 1..=`cores` cores must have disjoint, covering output write-sets and
+/// in-bounds input read-sets.
+pub fn lint_cluster(layers: &[LayerConfig], cores: u32) -> Vec<Diag> {
+    races::check_layers(layers, cores)
+}
+
+/// Lint one explicit shard plan (see [`races::check_shard_plan`]).
+pub fn lint_shard_plan(plan: &ShardPlan) -> Vec<Diag> {
+    races::check_shard_plan(plan)
+}

@@ -1,0 +1,390 @@
+//! Plan IR well-formedness checks ("plan check" — planck).
+//!
+//! Two obligations, both discharged **without pricing or simulating
+//! anything**:
+//!
+//! 1. *Annotation honesty* ([`check_plan`]): every [`PlanStep`]'s
+//!    per-trip class counts, operand-traffic bytes and MAC work must
+//!    equal an independent recount from its shape body, with the vector
+//!    configuration folded through the steps in execution order exactly
+//!    as [`Plan::from_program`] defines (PL001..PL004). The analytic
+//!    timing backend and the traffic/energy accountants trust these
+//!    numbers blindly — this pass is what earns that trust.
+//! 2. *Hoist re-proof* ([`check_network`]): every applied overlap
+//!    decision of a [`NetworkPlan`] is re-proved from the merged body
+//!    alone — the splice structure is pattern-matched, the host body is
+//!    reconstructed by deleting the splices, and the staging registers
+//!    are re-checked dead with the independent
+//!    [`dataflow::splice_scan`](super::dataflow::splice_scan) engine
+//!    rather than trusting the scheduler's own record (NP001..NP005).
+
+use super::dataflow::splice_scan;
+use super::Diag;
+use crate::arch::DIMC_ROWS;
+use crate::compiler::netplan::NetworkPlan;
+use crate::compiler::plan::{Plan, PlanStep};
+use crate::dimc::Precision;
+use crate::isa::{AluOp, Instr, VType};
+use crate::pipeline::core::class_index;
+
+/// Recount one body's per-trip annotations under entry vector length
+/// `vl`, mirroring [`Plan::from_program`] exactly; returns the exit
+/// `vl` alongside `(class_counts, loaded, stored, macs)`.
+fn recount(body: &[Instr], lanes: u64, vl: &mut u32) -> ([u64; 8], u64, u64, u64) {
+    let mut class_counts = [0u64; 8];
+    let (mut loaded, mut stored, mut macs) = (0u64, 0u64, 0u64);
+    for i in body {
+        class_counts[class_index(i.class())] += 1;
+        match *i {
+            Instr::Vsetivli { uimm, vtype, .. } => *vl = (uimm as u32).min(vtype.vlmax()),
+            Instr::Vle { eew, .. } | Instr::Vlse { eew, .. } => {
+                loaded += *vl as u64 * eew as u64 / 8;
+            }
+            Instr::Vse { eew, .. } => stored += *vl as u64 * eew as u64 / 8,
+            Instr::Lw { .. } => loaded += 4,
+            Instr::Lbu { .. } => loaded += 1,
+            Instr::Sw { .. } => stored += 4,
+            Instr::Sb { .. } => stored += 1,
+            Instr::DcP { .. } | Instr::DcF { .. } => macs += lanes,
+            Instr::VmaccVV { .. } => macs += *vl as u64,
+            _ => {}
+        }
+    }
+    (class_counts, loaded, stored, macs)
+}
+
+/// PL001..PL004: re-derive every step's annotations from its shape body
+/// and compare against the recorded values. `site` prefixes diagnostic
+/// locations (e.g. `plan` or `plan[3]`).
+pub fn check_plan(plan: &Plan, precision: Precision, site: &str) -> Vec<Diag> {
+    let lanes = precision.lanes() as u64;
+    let mut diags = Vec::new();
+    let mut vl = 0u32;
+    for (si, s) in plan.steps.iter().enumerate() {
+        let loc = format!("{site} step {si} `{}`", s.name);
+        let Some(body) = plan.shapes.get(s.shape) else {
+            diags.push(Diag::error(
+                "PL004",
+                loc,
+                format!("shape index {} out of range ({} shapes)", s.shape, plan.shapes.len()),
+            ));
+            continue;
+        };
+        let (cc, loaded, stored, macs) = recount(body, lanes, &mut vl);
+        if cc != s.class_counts {
+            diags.push(Diag::error(
+                "PL001",
+                loc.clone(),
+                format!("class counts {:?} recount to {:?}", s.class_counts, cc),
+            ));
+        }
+        if (loaded, stored) != (s.loaded_bytes, s.stored_bytes) {
+            diags.push(Diag::error(
+                "PL002",
+                loc.clone(),
+                format!(
+                    "traffic ({}, {}) bytes/trip recounts to ({loaded}, {stored})",
+                    s.loaded_bytes, s.stored_bytes
+                ),
+            ));
+        }
+        if macs != s.macs {
+            diags.push(Diag::error(
+                "PL003",
+                loc,
+                format!("{} MACs/trip recounts to {macs}", s.macs),
+            ));
+        }
+    }
+    diags
+}
+
+/// The `vsetivli 32, e8, m4` the staging splices are emitted under.
+fn m4() -> Instr {
+    Instr::Vsetivli { rd: 0, uimm: 32, vtype: VType::new(8, 4) }
+}
+
+/// Instructions appended after the host body by a hoist splice (splice
+/// B: commit sectors 0/1, stage sectors 2/3).
+const TAIL_LEN: usize = 8;
+
+/// Match the splice-B tail of a merged body; returns the staging quads
+/// `(qa, qb)` it commits.
+fn match_tail(tail: &[Instr]) -> Option<(u8, u8)> {
+    let (qa, qb) = match (tail[1], tail[2]) {
+        (
+            Instr::DlM { nvec: 4, mask: 0xf, vs1: qa, width: 0, sec: 0, m_row: 0 },
+            Instr::DlM { nvec: 4, mask: 0xf, vs1: qb, width: 0, sec: 1, m_row: 0 },
+        ) => (qa, qb),
+        _ => return None,
+    };
+    let want = [
+        m4(),
+        Instr::DlM { nvec: 4, mask: 0xf, vs1: qa, width: 0, sec: 0, m_row: 0 },
+        Instr::DlM { nvec: 4, mask: 0xf, vs1: qb, width: 0, sec: 1, m_row: 0 },
+        Instr::Vle { eew: 8, vd: qa, rs1: 29 },
+        Instr::OpImm { op: AluOp::Add, rd: 29, rs1: 29, imm: 32 },
+        Instr::Vle { eew: 8, vd: qb, rs1: 29 },
+        Instr::DlM { nvec: 4, mask: 0xf, vs1: qa, width: 0, sec: 2, m_row: 0 },
+        Instr::DlM { nvec: 4, mask: 0xf, vs1: qb, width: 0, sec: 3, m_row: 0 },
+    ];
+    (tail == want).then_some((qa, qb))
+}
+
+/// Match the splice-A block right after the host's last `DL.I`; returns
+/// `(qa, qb, block length)` — length 8 when a configuration restore
+/// follows the staging loads.
+fn match_splice_a(m: &[Instr], d: usize) -> Option<(u8, u8, usize)> {
+    if m.len() < d + 8 {
+        return None;
+    }
+    let (qa, qb) = match (m[d + 4], m[d + 6]) {
+        (Instr::Vle { eew: 8, vd: qa, rs1: 29 }, Instr::Vle { eew: 8, vd: qb, rs1: 29 }) => {
+            (qa, qb)
+        }
+        _ => return None,
+    };
+    let ok = matches!(m[d + 1], Instr::Lui { rd: 29, .. })
+        && matches!(m[d + 2], Instr::OpImm { op: AluOp::Add, rd: 29, rs1: 29, .. })
+        && m[d + 3] == m4()
+        && m[d + 5] == Instr::OpImm { op: AluOp::Add, rd: 29, rs1: 29, imm: 32 }
+        && m[d + 7] == Instr::OpImm { op: AluOp::Add, rd: 29, rs1: 29, imm: 32 };
+    if !ok {
+        return None;
+    }
+    // A host body never *starts* its post-DL.I tail with a vsetivli
+    // (the mapper's next emission is an address `lui` or a DC op), so a
+    // vsetivli here is the splice's configuration restore.
+    let la = if matches!(m.get(d + 8), Some(Instr::Vsetivli { .. })) { 8 } else { 7 };
+    Some((qa, qb, la))
+}
+
+/// NP001..NP005: re-prove every applied hoist of `np` from its merged
+/// bodies, and check the rewrite conserved total memory traffic against
+/// the original (pre-build) per-layer plans.
+pub fn check_network(np: &NetworkPlan, originals: &[Plan], precision: Precision) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    for (li, plan) in np.plans.iter().enumerate() {
+        diags.extend(check_plan(plan, precision, &format!("plan[{li}]")));
+    }
+
+    // NP005: a hoist moves traffic between steps, never creates or
+    // destroys it.
+    if np.plans.len() == originals.len() {
+        let sum = |ps: &[Plan]| {
+            (
+                ps.iter().map(|p| p.loaded_bytes()).sum::<u64>(),
+                ps.iter().map(|p| p.stored_bytes()).sum::<u64>(),
+            )
+        };
+        let (ol, os) = sum(originals);
+        let (nl, ns) = sum(&np.plans);
+        if (ol, os) != (nl, ns) {
+            diags.push(Diag::error(
+                "NP005",
+                "network",
+                format!("rewrite changed traffic: loaded {ol}->{nl}, stored {os}->{ns} bytes"),
+            ));
+        }
+    }
+
+    for d in np.decisions.iter().filter(|d| d.applied) {
+        check_decision(np, d, &mut diags);
+    }
+    diags
+}
+
+/// Re-prove one applied [`HoistDecision`](crate::compiler::netplan::HoistDecision).
+fn check_decision(
+    np: &NetworkPlan,
+    d: &crate::compiler::netplan::HoistDecision,
+    diags: &mut Vec<Diag>,
+) {
+    let site = format!("boundary {}", d.boundary);
+    let err = |diags: &mut Vec<Diag>, rule: &'static str, detail: String| {
+        diags.push(Diag::error(rule, site.clone(), detail));
+    };
+
+    // NP004: capacity bounds first — they do not need the body.
+    if d.rows == 0 || d.rows > d.sweep_trips.min(d.wt_trips).min(DIMC_ROWS as u64) {
+        err(
+            diags,
+            "NP004",
+            format!(
+                "{} hoisted rows exceed min(sweep {}, wt {}, {DIMC_ROWS})",
+                d.rows, d.sweep_trips, d.wt_trips
+            ),
+        );
+    }
+
+    // Locate the merged step: the producer's last step.
+    let Some(prev) = np.plans.get(d.boundary) else {
+        err(diags, "NP001", "boundary index out of range".into());
+        return;
+    };
+    let merged = match prev.steps.last() {
+        Some(s) if s.name.ends_with(" +wt") => s,
+        _ => {
+            err(diags, "NP001", "producer's last step is not a merged `+wt` sweep".into());
+            return;
+        }
+    };
+    if merged.trips != d.rows {
+        err(
+            diags,
+            "NP001",
+            format!("merged step runs {} trips, decision hoisted {} rows", merged.trips, d.rows),
+        );
+    }
+    let Some(m) = prev.shapes.get(merged.shape) else {
+        return; // PL004 already reported by check_plan
+    };
+
+    // Splice structure: locate the host's last DL.I, match both splices.
+    let Some(dli) = m.iter().rposition(|i| matches!(i, Instr::DlI { .. })) else {
+        err(diags, "NP001", "merged body has no DL.I splice point".into());
+        return;
+    };
+    let Some((qa, qb, la)) = match_splice_a(m, dli) else {
+        err(diags, "NP001", "staging-load splice after the last DL.I unrecognized".into());
+        return;
+    };
+    if m.len() < dli + 1 + la + TAIL_LEN {
+        err(diags, "NP001", "merged body too short for a commit tail".into());
+        return;
+    }
+    let Some((ta, tb)) = match_tail(&m[m.len() - TAIL_LEN..]) else {
+        err(diags, "NP001", "DL.M commit tail unrecognized".into());
+        return;
+    };
+    if (ta, tb) != (qa, qb) {
+        err(
+            diags,
+            "NP001",
+            format!("tail commits v{ta}/v{tb} but splice staged v{qa}/v{qb}"),
+        );
+        return;
+    }
+    if d.quads != Some([qa, qb]) {
+        err(
+            diags,
+            "NP001",
+            format!("decision records quads {:?}, body uses [v{qa}, v{qb}]", d.quads),
+        );
+    }
+
+    // Reconstruct the host body by deleting the splices, and re-prove
+    // the staging resources dead with the independent dataflow engine.
+    let mut host: Vec<Instr> = Vec::with_capacity(m.len());
+    host.extend_from_slice(&m[..=dli]);
+    host.extend_from_slice(&m[dli + 1 + la..m.len() - TAIL_LEN]);
+    let Some(scan) = splice_scan(&host) else {
+        err(diags, "NP001", "reconstructed host body is not splice-eligible".into());
+        return;
+    };
+    if la == 8 && m[dli + 8] != scan.vcfg_at_splice {
+        err(
+            diags,
+            "NP001",
+            "splice restores a configuration that was not live at the splice point".into(),
+        );
+    }
+    if la == 7 && scan.vcfg_at_splice != m4() {
+        err(diags, "NP001", "splice omits the configuration restore it needed".into());
+    }
+    for q in [qa, qb] {
+        if (scan.vmask >> q) & 0xf != 0 {
+            err(diags, "NP002", format!("staging quad v{q} is live in the host sweep body"));
+        }
+    }
+    if scan.xmask & (1 << 29) != 0 {
+        err(diags, "NP003", "staging pointer x29 is live in the host sweep body".into());
+    }
+
+    // Remainder step: the untouched prefix of the original sweep.
+    if d.sweep_trips > d.rows {
+        let rem_ok = prev.steps.len() >= 2
+            && check_remainder(&prev.steps[prev.steps.len() - 2], merged, d, prev, &host);
+        if !rem_ok {
+            err(
+                diags,
+                "NP001",
+                format!(
+                    "no remainder sweep of {} trips with the original body before the merged step",
+                    d.sweep_trips - d.rows
+                ),
+            );
+        }
+    }
+}
+
+/// The remainder step must be the original sweep: same name (minus the
+/// ` +wt` tag), the leftover trips, and a body identical to the
+/// reconstructed host.
+fn check_remainder(
+    rem: &PlanStep,
+    merged: &PlanStep,
+    d: &crate::compiler::netplan::HoistDecision,
+    plan: &Plan,
+    host: &[Instr],
+) -> bool {
+    merged.name.strip_suffix(" +wt") == Some(rem.name.as_str())
+        && rem.trips == d.sweep_trips - d.rows
+        && plan.shapes.get(rem.shape).is_some_and(|b| b == host)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+    use crate::compiler::layer::LayerConfig;
+    use crate::compiler::mapper::compile_dimc_planned;
+    use crate::compiler::netplan::Pipelining;
+
+    fn two_layer_plans() -> Vec<Plan> {
+        [
+            LayerConfig::conv("a", 64, 32, 1, 1, 8, 8, 1, 0),
+            LayerConfig::conv("b", 32, 32, 3, 3, 8, 8, 1, 1),
+        ]
+        .iter()
+        .map(|l| compile_dimc_planned(l, Precision::Int4).plan)
+        .collect()
+    }
+
+    #[test]
+    fn honest_plans_recount_clean() {
+        for p in two_layer_plans() {
+            assert!(check_plan(&p, Precision::Int4, "plan").is_empty());
+        }
+    }
+
+    #[test]
+    fn tampered_annotation_is_caught() {
+        let mut p = two_layer_plans().remove(0);
+        p.steps[1].loaded_bytes += 1;
+        let diags = check_plan(&p, Precision::Int4, "plan");
+        assert!(diags.iter().any(|d| d.rule == "PL002"), "{diags:?}");
+    }
+
+    #[test]
+    fn applied_hoists_reprove_clean() {
+        let arch = Arch::default();
+        let originals = two_layer_plans();
+        let np =
+            NetworkPlan::build(originals.clone(), Precision::Int4, &arch, Pipelining::Overlap);
+        assert!(np.decisions[0].applied, "fixture must actually hoist");
+        let diags = check_network(&np, &originals, Precision::Int4);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn corrupted_hoist_record_is_caught() {
+        let arch = Arch::default();
+        let originals = two_layer_plans();
+        let mut np =
+            NetworkPlan::build(originals.clone(), Precision::Int4, &arch, Pipelining::Overlap);
+        np.decisions[0].quads = Some([4, 8]); // lie about the staging quads
+        let diags = check_network(&np, &originals, Precision::Int4);
+        assert!(diags.iter().any(|d| d.rule == "NP001"), "{diags:?}");
+    }
+}

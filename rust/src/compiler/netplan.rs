@@ -36,9 +36,13 @@
 //!    one row per merged trip, never more trips than the sweep has.
 //! 3. *Dead staging registers:* the two staging VRF quads are chosen
 //!    from register groups the host sweep body provably never touches
-//!    (a full per-instruction liveness walk with the vector
-//!    configuration tracked through the body), and the staging address
-//!    pointer `x29` is untouched by the host body.
+//!    ([`crate::analysis::dataflow::splice_scan`] — a full
+//!    per-instruction liveness walk with the vector configuration
+//!    tracked through the body), and the staging address pointer `x29`
+//!    is untouched by the host body. The static verifier
+//!    ([`crate::analysis::planck`]) re-runs the same walk on every
+//!    applied decision's reconstructed host body, so the scheduler's
+//!    record is re-proved rather than trusted.
 //! 4. *Conservative fence pricing:* the hoisted `DL.M`s go through the
 //!    scoreboard's DIMC state fence unchanged, so every subsequent DC
 //!    op in the merged schedule pays the same ordering cost the
@@ -63,7 +67,8 @@ use super::layer::LayerConfig;
 use super::mapper::compile_dimc_planned;
 use super::plan::{Plan, PlanStep};
 use super::program::PhaseKind;
-use crate::arch::{Arch, DIMC_ROWS, VLENB};
+use crate::analysis::dataflow::{splice_scan, SpliceScan};
+use crate::arch::{Arch, DIMC_ROWS};
 use crate::dimc::Precision;
 use crate::isa::{AluOp, Instr, VType};
 use crate::pipeline::analytic::analytic_cycles;
@@ -215,93 +220,6 @@ pub fn overlap_savings(layers: &[LayerConfig], precision: Precision, arch: &Arch
     np.decisions.iter().map(|d| d.saved_cycles).collect()
 }
 
-/// Number of VRF registers a `vl x eew` access covers (LMUL groups).
-fn group_regs(vl: u32, eew: u16) -> u32 {
-    (vl * eew as u32 / 8).div_ceil(VLENB as u32).max(1)
-}
-
-/// What the liveness walk learned about a sweep body.
-struct BodyScan {
-    /// Bit `r` set iff vector register `v{r}` is read or written.
-    vmask: u32,
-    /// Bit `r` set iff scalar register `x{r}` is read or written.
-    xmask: u32,
-    /// Index of the last `DL.I` (the staging-load splice point).
-    last_dli: usize,
-    /// The `vsetivli` active at the splice point (restored after the
-    /// splice so downstream code sees the configuration it was emitted
-    /// under).
-    vcfg_at_splice: Instr,
-}
-
-/// Conservative, exact liveness walk over a generated sweep body.
-/// Returns `None` — overlap illegal — on any instruction variant the
-/// walk does not model precisely.
-fn scan_sweep_body(body: &[Instr]) -> Option<BodyScan> {
-    let mut vmask = 0u32;
-    let mut xmask = 0u32;
-    let mut vl = 0u32;
-    let mut sew = 8u16;
-    let mut last_dli = None;
-    let mut last_vcfg = None;
-    let mut vcfg_at_splice = None;
-
-    fn mark(mask: &mut u32, base: u8, n: u32) {
-        for r in 0..n {
-            *mask |= 1 << ((base as u32 + r) % 32);
-        }
-    }
-
-    for (idx, i) in body.iter().enumerate() {
-        match *i {
-            Instr::Lui { rd, .. } => xmask |= 1 << rd,
-            Instr::OpImm { rd, rs1, .. } => xmask |= (1 << rd) | (1 << rs1),
-            Instr::Op { rd, rs1, rs2, .. } => xmask |= (1 << rd) | (1 << rs1) | (1 << rs2),
-            Instr::Vsetivli { rd, uimm, vtype } => {
-                xmask |= 1 << rd;
-                vl = (uimm as u32).min(vtype.vlmax());
-                sew = vtype.sew;
-                last_vcfg = Some(*i);
-            }
-            Instr::Vle { eew, vd, rs1 } => {
-                xmask |= 1 << rs1;
-                mark(&mut vmask, vd, group_regs(vl, eew as u16));
-            }
-            Instr::Vlse { eew, vd, rs1, rs2 } => {
-                xmask |= (1 << rs1) | (1 << rs2);
-                mark(&mut vmask, vd, group_regs(vl, eew as u16));
-            }
-            Instr::Vse { eew, vs3, rs1 } => {
-                xmask |= 1 << rs1;
-                mark(&mut vmask, vs3, group_regs(vl, eew as u16));
-            }
-            Instr::VmvVI { vd, .. } => mark(&mut vmask, vd, group_regs(vl, sew)),
-            Instr::VmvVX { vd, rs1 } => {
-                xmask |= 1 << rs1;
-                mark(&mut vmask, vd, group_regs(vl, sew));
-            }
-            Instr::DlI { nvec, vs1, .. } => {
-                mark(&mut vmask, vs1, nvec as u32);
-                last_dli = Some(idx);
-                vcfg_at_splice = last_vcfg;
-            }
-            Instr::DlM { nvec, vs1, .. } => mark(&mut vmask, vs1, nvec as u32),
-            Instr::DcP { vs1, vd, .. } => {
-                mark(&mut vmask, vs1, 1);
-                mark(&mut vmask, vd, 1);
-            }
-            Instr::DcF { vs1, vd, .. } => {
-                mark(&mut vmask, vs1, 1);
-                mark(&mut vmask, vd, 1);
-            }
-            // Anything the walk does not model exactly makes the body
-            // ineligible — never guess at liveness.
-            _ => return None,
-        }
-    }
-    Some(BodyScan { vmask, xmask, last_dli: last_dli?, vcfg_at_splice: vcfg_at_splice? })
-}
-
 /// Strict structural match of a mapper weight-row body
 /// (`mapper::gen_wt_row`): `li x5, addr; vsetivli 32,e8,m4; 4x [vle8
 /// v{8,12,16,20}, addi between]; 4x DL.M sec 0..3`. Returns the
@@ -377,7 +295,7 @@ fn annotate_body(body: &[Instr], lanes: u64) -> ([u64; 8], u64, u64, u64) {
 /// loads of one weight row spliced in after the last `DL.I` (inside the
 /// DC-fence stall window) and the four `DL.M` sector stores appended
 /// after the write-back.
-fn merged_body(sweep: &[Instr], scan: &BodyScan, qa: u8, qb: u8, addr: (i32, i32)) -> Vec<Instr> {
+fn merged_body(sweep: &[Instr], scan: &SpliceScan, qa: u8, qb: u8, addr: (i32, i32)) -> Vec<Instr> {
     let m4 = Instr::Vsetivli { rd: 0, uimm: 32, vtype: VType::new(8, 4) };
     let mut out = Vec::with_capacity(sweep.len() + 16);
     out.extend_from_slice(&sweep[..=scan.last_dli]);
@@ -429,7 +347,7 @@ fn try_hoist(plans: &mut [Plan], b: usize, precision: Precision, arch: &Arch) ->
         Some(a) => a,
         None => return HoistDecision::rejected(b),
     };
-    let scan = match scan_sweep_body(&prev.shapes[sweep.shape]) {
+    let scan = match splice_scan(&prev.shapes[sweep.shape]) {
         Some(s) => s,
         None => return HoistDecision::rejected(b),
     };

@@ -29,7 +29,7 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
 pub fn usage() -> &'static str {
-    "usage: repro <fig5|fig6|fig7|fig8|fig9|table1|zoo|resnet50|verify|simulate|timeline|asm> [opts]\n\
+    "usage: repro <fig5|fig6|fig7|fig8|fig9|table1|zoo|resnet50|verify|simulate|lint|timeline|asm> [opts]\n\
      \n\
      fig5      GOPS per ResNet-50 layer (paper Fig. 5)\n\
      fig6      op distribution per ResNet-50 layer (Fig. 6)\n\
@@ -69,6 +69,13 @@ pub fn usage() -> &'static str {
                Perfetto timeline (default trace.json; open it at\n\
                ui.perfetto.dev); a serving timeline when --rps is given,\n\
                otherwise the network timeline\n\
+     lint      [--model NAME | --all] [--precision int4|int2|int1]\n\
+               [--pipelining off|overlap] [--cores N] static verifier:\n\
+               run the analysis pass library (DIMC tile state machine,\n\
+               vsetivli coverage, VRF bounds, memory regions, Plan\n\
+               recounts, overlap-hoist re-proof, shard races) over every\n\
+               compiled artefact of NAME (default: the whole zoo) without\n\
+               simulating anything; exits non-zero on any diagnostic\n\
      asm       <file.s> assemble and run on the DIMC-enhanced core\n\
      trace     <file.s> run with a cycle-annotated pipeline trace\n\
      \n\
@@ -197,6 +204,7 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
         "tiles" => tiles(json),
         "cluster" => cluster(&flags, json),
         "serve" => serve(&flags, json),
+        "lint" => lint(&flags, json),
         "timeline" => timeline(&flags, json),
         "asm" => asm(args.get(1).map(String::as_str), json),
         "trace" => trace(args.get(1).map(String::as_str), json),
@@ -502,6 +510,77 @@ fn zoo(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         )
     );
     println!("total layer configurations: {total} (paper: >450)");
+    Ok(())
+}
+
+/// `repro lint`: run the static analysis pass library over the zoo (or
+/// one `--model`) at one precision/pipelining setting, printing every
+/// diagnostic and failing the process on any. No simulation runs.
+fn lint(flags: &HashMap<String, String>, json: bool) -> Result<()> {
+    let precision = parse_precision(flags)?;
+    let pipelining = parse_pipelining(flags)?;
+    let cores = flag(flags, "cores", 8u32)?;
+    let arch = crate::arch::Arch::default();
+    let models = match flags.get("model") {
+        Some(name) => vec![crate::workloads::zoo::lookup(name)?],
+        None => crate::workloads::zoo::all_models(),
+    };
+    let mut results = Vec::new();
+    let mut total = 0usize;
+    for m in &models {
+        let mut diags = crate::analysis::lint_network(&m.layers, precision, &arch, pipelining);
+        diags.extend(crate::analysis::lint_cluster(&m.layers, cores));
+        total += diags.len();
+        results.push((m.name, m.layers.len(), diags));
+    }
+    if json {
+        let mut j = JsonBuilder::new();
+        j.begin_obj();
+        j.field_u64("precision_bits", precision.bits() as u64);
+        j.field_str("pipelining", pipelining.as_str());
+        j.field_u64("cores", cores as u64);
+        j.key("models");
+        j.begin_arr();
+        for (name, layers, diags) in &results {
+            j.begin_obj();
+            j.field_str("model", name);
+            j.field_u64("layers", *layers as u64);
+            j.key("diags");
+            j.begin_arr();
+            for d in diags {
+                j.begin_obj();
+                j.field_str("rule", d.rule);
+                j.field_str("severity", d.severity.as_str());
+                j.field_str("site", &d.site);
+                j.field_str("detail", &d.detail);
+                j.end_obj();
+            }
+            j.end_arr();
+            j.end_obj();
+        }
+        j.end_arr();
+        j.field_u64("total_diags", total as u64);
+        j.end_obj();
+        println!("{}", j.finish());
+    } else {
+        for (name, layers, diags) in &results {
+            println!(
+                "lint {name}: {layers} layers, {} diagnostic{}",
+                diags.len(),
+                if diags.len() == 1 { "" } else { "s" }
+            );
+            for d in diags {
+                println!("  {d}");
+            }
+        }
+        println!(
+            "total: {total} diagnostics across {} models (int{}, pipelining {}, {cores} cores)",
+            results.len(),
+            precision.bits(),
+            pipelining.as_str()
+        );
+    }
+    anyhow::ensure!(total == 0, "static lint FAILED: {total} diagnostics");
     Ok(())
 }
 

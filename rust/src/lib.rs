@@ -107,6 +107,7 @@ pub mod isa;
 pub mod dimc;
 pub mod pipeline;
 pub mod compiler;
+pub mod analysis;
 pub mod workloads;
 pub mod metrics;
 pub mod runtime;

@@ -11,9 +11,11 @@
 use super::backend::{Backend, Cluster, Serving, SingleCore};
 use super::report::{RunCheck, RunReport};
 use super::{Engine, Timing};
+use crate::analysis;
 use crate::arch::Arch;
 use crate::cluster::scaling::{scaling_curve_with, ScalingPoint};
 use crate::compiler::layer::LayerConfig;
+use crate::compiler::mapper::compile_dimc_planned;
 use crate::compiler::netplan::{self, Pipelining};
 use crate::coordinator::driver::simulate_layer_timed;
 use crate::dimc::Precision;
@@ -519,6 +521,11 @@ impl Session {
     /// * **Cluster anchor** (multi-core sessions): a 1-core schedule of
     ///   the configured model must reproduce single-core cycle counts
     ///   exactly.
+    /// * **Static lint** (every session, deny-by-default): the probe
+    ///   layers and every configured workload are run through the
+    ///   [`analysis`](crate::analysis) pass library — instruction-stream
+    ///   rules, Plan recounts, hoist re-proof, shard-race detection —
+    ///   and the check fails on *any* diagnostic.
     pub fn verify(&mut self) -> Result<Vec<RunCheck>, SessionError> {
         let probes = [
             LayerConfig::conv("vprobe_tiled", 80, 8, 2, 2, 4, 4, 1, 0),
@@ -603,6 +610,40 @@ impl Session {
                 ),
             });
         }
+
+        // Static lint, deny-by-default: any diagnostic from the
+        // analysis pass library fails the check.
+        let mut diags = Vec::new();
+        for layer in &probes {
+            let cl = compile_dimc_planned(layer, self.cfg.precision);
+            for mut d in analysis::lint_layer(&cl, layer, self.cfg.precision) {
+                d.site = format!("{}/{}", layer.name, d.site);
+                diags.push(d);
+            }
+        }
+        for w in &self.cfg.workloads {
+            for mut d in analysis::lint_network(
+                &w.layers,
+                self.cfg.precision,
+                &self.cfg.arch,
+                self.cfg.pipelining,
+            ) {
+                d.site = format!("{}/{}", w.name, d.site);
+                diags.push(d);
+            }
+            if self.cfg.cores > 1 {
+                diags.extend(analysis::lint_cluster(&w.layers, self.cfg.cores));
+            }
+        }
+        checks.push(RunCheck {
+            name: "lint:static".to_string(),
+            ok: diags.is_empty(),
+            detail: if diags.is_empty() {
+                "0 diagnostics across probe layers and configured workloads".to_string()
+            } else {
+                format!("{} diagnostics, first: {}", diags.len(), diags[0])
+            },
+        });
         Ok(checks)
     }
 

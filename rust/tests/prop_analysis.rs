@@ -1,0 +1,198 @@
+//! End-to-end coverage of the static analysis pass library.
+//!
+//! Two halves:
+//!
+//! * **Cleanliness** — every model in the workload zoo must lint to zero
+//!   diagnostics at every DIMC precision and both pipelining settings,
+//!   and every derivable shard plan must be race-free. The analysis
+//!   layer re-derives the mapper's obligations independently, so this is
+//!   a genuine cross-check of two implementations, not a tautology.
+//! * **Mutation kill rate** — seeded corruptions of compiled artefacts
+//!   (a dropped `vsetivli`, a weight load reordered past its consumers,
+//!   a clobbered zero-source register, a base address shifted out of its
+//!   region, overlapping shard write-sets, a tampered hoist record) must
+//!   each be caught by the *specific* rule that owns the obligation.
+
+use dimc_rvv::analysis::checks::{check_phases, regions_for, sample_views, PhaseView};
+use dimc_rvv::analysis::{lint_cluster, lint_network, lint_shard_plan, planck, Diag};
+use dimc_rvv::arch::Arch;
+use dimc_rvv::cluster::shard::ShardPlan;
+use dimc_rvv::compiler::layer::LayerConfig;
+use dimc_rvv::compiler::mapper::compile_dimc_planned;
+use dimc_rvv::compiler::netplan::{NetworkPlan, Pipelining};
+use dimc_rvv::compiler::plan::Plan;
+use dimc_rvv::compiler::program::PhaseKind;
+use dimc_rvv::dimc::Precision;
+use dimc_rvv::isa::Instr;
+use dimc_rvv::sim::Session;
+use dimc_rvv::workloads::zoo;
+
+// ---------------------------------------------------------------- clean
+
+fn zoo_lints_clean_at(p: Precision) {
+    let arch = Arch::default();
+    for m in zoo::all_models() {
+        for pl in [Pipelining::Off, Pipelining::Overlap] {
+            let diags = lint_network(&m.layers, p, &arch, pl);
+            assert!(
+                diags.is_empty(),
+                "{} @int{} pipelining {}: {} diagnostics, first: {}",
+                m.name,
+                p.bits(),
+                pl.as_str(),
+                diags.len(),
+                diags[0]
+            );
+        }
+    }
+}
+
+#[test]
+fn zoo_lints_clean_int4() {
+    zoo_lints_clean_at(Precision::Int4);
+}
+
+#[test]
+fn zoo_lints_clean_int2() {
+    zoo_lints_clean_at(Precision::Int2);
+}
+
+#[test]
+fn zoo_lints_clean_int1() {
+    zoo_lints_clean_at(Precision::Int1);
+}
+
+#[test]
+fn zoo_shard_plans_are_race_free_up_to_8_cores() {
+    for m in zoo::all_models() {
+        let diags = lint_cluster(&m.layers, 8);
+        assert!(diags.is_empty(), "{}: {:?}", m.name, diags.first());
+    }
+}
+
+#[test]
+fn session_verify_includes_clean_static_lint() {
+    let mut s = Session::builder().model("alexnet").build().unwrap();
+    let checks = s.verify().unwrap();
+    let lint = checks.iter().find(|c| c.name == "lint:static").expect("lint:static check missing");
+    assert!(lint.ok, "{}", lint.detail);
+}
+
+// ------------------------------------------------------------ mutations
+
+/// Tiled probe: 2 K-tiles, 1 group — the first tile's `DC.P` ops read
+/// the zero source `v6`, which the register-clobber mutation targets.
+fn probe() -> LayerConfig {
+    LayerConfig::conv("mprobe", 80, 8, 2, 2, 4, 4, 1, 0)
+}
+
+/// Compile the probe, apply `mutate` to its sampled phase views, and
+/// return the diagnostics of the full rule-pass walk.
+fn mutated_diags(mutate: impl FnOnce(&mut Vec<PhaseView>)) -> Vec<Diag> {
+    let l = probe();
+    let cl = compile_dimc_planned(&l, Precision::Int4);
+    let regions = regions_for(&l, Precision::Int4, &cl.prog.layout);
+    let mut views = sample_views(&cl.prog);
+    mutate(&mut views);
+    check_phases(&views, &regions)
+}
+
+#[test]
+fn unmutated_probe_is_clean() {
+    let diags = mutated_diags(|_| {});
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn mutation_dropped_vsetivli_is_caught() {
+    let diags = mutated_diags(|views| {
+        assert_eq!(views[0].kind, PhaseKind::Setup);
+        for (_, body) in &mut views[0].bodies {
+            let before = body.len();
+            body.retain(|i| !matches!(i, Instr::Vsetivli { .. }));
+            assert!(body.len() < before, "setup had no vsetivli to drop");
+        }
+    });
+    assert!(!diags.is_empty() && diags.iter().all(|d| d.rule == "VC001"), "{diags:?}");
+}
+
+#[test]
+fn mutation_weight_load_reordered_past_compute_is_caught() {
+    // Move the first weight-load phase after everything else: the first
+    // sweep's DC ops now touch rows no DL.M of the current pass loaded.
+    let diags = mutated_diags(|views| {
+        let wi = views.iter().position(|v| v.kind == PhaseKind::WeightLoad).unwrap();
+        let wt = views.remove(wi);
+        views.push(wt);
+    });
+    assert!(!diags.is_empty() && diags.iter().all(|d| d.rule == "DM002"), "{diags:?}");
+}
+
+#[test]
+fn mutation_clobbered_zero_source_is_caught() {
+    // Retarget the setup's `vmv.v.i v6, 0` onto v7: the first tile's
+    // DC.P ops then read a never-written v6.
+    let diags = mutated_diags(|views| {
+        let mut hit = false;
+        for (_, body) in &mut views[0].bodies {
+            for i in body.iter_mut() {
+                if let Instr::VmvVI { vd, .. } = i {
+                    if *vd == 6 {
+                        *vd = 7;
+                        hit = true;
+                    }
+                }
+            }
+        }
+        assert!(hit, "setup did not materialize the zero source");
+    });
+    assert!(!diags.is_empty() && diags.iter().all(|d| d.rule == "DF001"), "{diags:?}");
+}
+
+#[test]
+fn mutation_base_address_out_of_region_is_caught() {
+    // Shift the weight-pointer materialization 4 MiB upward — every
+    // weight-row load now misses the packed memory map entirely.
+    let diags = mutated_diags(|views| {
+        for v in views.iter_mut().filter(|v| v.kind == PhaseKind::WeightLoad) {
+            for (_, body) in &mut v.bodies {
+                for i in body.iter_mut() {
+                    if let Instr::Lui { rd: 5, imm } = i {
+                        *imm += 0x400;
+                    }
+                }
+            }
+        }
+    });
+    assert!(diags.iter().any(|d| d.rule == "MR001"), "{diags:?}");
+}
+
+#[test]
+fn mutation_overlapping_shard_outputs_are_caught() {
+    let l = LayerConfig::conv("t", 64, 256, 3, 3, 14, 14, 1, 1);
+    let mut p = ShardPlan::plan(&l, 4);
+    p.shards[1].och_range.0 -= 32; // now overlaps shard 0's channels
+    let diags = lint_shard_plan(&p);
+    assert!(diags.iter().any(|d| d.rule == "RC001"), "{diags:?}");
+}
+
+#[test]
+fn mutation_tampered_hoist_record_is_caught() {
+    let arch = Arch::default();
+    let layers = [
+        LayerConfig::conv("a", 64, 32, 1, 1, 8, 8, 1, 0),
+        LayerConfig::conv("b", 32, 32, 3, 3, 8, 8, 1, 1),
+    ];
+    let originals: Vec<Plan> =
+        layers.iter().map(|l| compile_dimc_planned(l, Precision::Int4).plan).collect();
+    let mut np =
+        NetworkPlan::build(originals.clone(), Precision::Int4, &arch, Pipelining::Overlap);
+    assert!(np.decisions[0].applied, "fixture must overlap: {:?}", np.decisions[0]);
+    assert!(
+        planck::check_network(&np, &originals, Precision::Int4).is_empty(),
+        "honest NetworkPlan must re-prove clean"
+    );
+    np.decisions[0].rows += 1; // claim one more hoisted row than rewritten
+    let diags = planck::check_network(&np, &originals, Precision::Int4);
+    assert!(diags.iter().any(|d| d.rule.starts_with("NP")), "{diags:?}");
+}

@@ -178,6 +178,59 @@ fn custom_instrs_use_custom0_exclusively() {
 }
 
 #[test]
+fn custom_formats_roundtrip_exhaustively() {
+    // The four custom-0 formats (docs/ARCHITECTURE.md, Fig. 4 of the
+    // paper) are small enough to sweep completely: every constructible
+    // field combination must encode into custom-0, decode back to
+    // itself, and encode injectively — no two distinct custom
+    // instructions may share a word.
+    let check = |i: Instr, words: &mut Vec<u32>| {
+        let w = encode(&i);
+        assert_eq!(w & 0x7f, OPC_CUSTOM0, "{i}");
+        assert_eq!(decode(w), Ok(i), "{w:#010x}");
+        words.push(w);
+    };
+    let mut words: Vec<u32> = Vec::new();
+    for nvec in 1..=4u8 {
+        for mask in 0..16u8 {
+            for vs1 in 0..32u8 {
+                for width in 0..4u8 {
+                    for sec in 0..4u8 {
+                        check(Instr::DlI { nvec, mask, vs1, width, sec }, &mut words);
+                        for m_row in 0..32u8 {
+                            check(Instr::DlM { nvec, mask, vs1, width, sec, m_row }, &mut words);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for sh in [false, true] {
+        for dh in [false, true] {
+            for m_row in 0..32u8 {
+                for vs1 in 0..32u8 {
+                    for width in 0..4u8 {
+                        for vd in 0..32u8 {
+                            check(Instr::DcP { sh, dh, m_row, vs1, width, vd }, &mut words);
+                            for bidx in 0..8u8 {
+                                check(
+                                    Instr::DcF { sh, dh, m_row, vs1, width, bidx, vd },
+                                    &mut words,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let total = words.len();
+    words.sort_unstable();
+    words.dedup();
+    assert_eq!(words.len(), total, "two distinct custom instructions share an encoding");
+}
+
+#[test]
 fn display_roundtrips_through_assembler_for_asm_subset() {
     // The assembler must reproduce what it can parse of Display output.
     use dimc_rvv::isa::asm::assemble;
