@@ -10,7 +10,7 @@
 
 use dimc_rvv::arch::Arch;
 use dimc_rvv::compiler::layer::LayerConfig;
-use dimc_rvv::coordinator::driver::{simulate_layer_at, Engine};
+use dimc_rvv::coordinator::driver::{simulate_layer_timed, Engine, Timing};
 use dimc_rvv::dimc::Precision;
 
 fn main() {
@@ -22,7 +22,8 @@ fn main() {
     );
     let arch = Arch::default();
     for p in [Precision::Int4, Precision::Int2, Precision::Int1] {
-        let r = simulate_layer_at(&layer, Engine::Dimc, p).expect("sim");
+        let r = simulate_layer_timed(&layer, Engine::Dimc, p, arch, Timing::Interpreter)
+            .expect("sim");
         let peak = arch.dimc_peak_gops(p.bits());
         println!(
             "INT{:<3} {:>6} {:>7} {:>12} {:>9.1} {:>10.0} {:>10.1}%",

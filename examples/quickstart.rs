@@ -5,10 +5,11 @@
 //! cargo run --release --example quickstart
 //! ```
 
+use dimc_rvv::arch::Arch;
 use dimc_rvv::compiler::layer::LayerConfig;
 use dimc_rvv::compiler::pack::{synth_acts, synth_wts};
 use dimc_rvv::coordinator::driver::{
-    reference_outputs, run_functional, simulate_layer, Engine,
+    reference_outputs, run_functional, simulate_layer_timed, Engine, Timing,
 };
 use dimc_rvv::dimc::Precision;
 use dimc_rvv::metrics::area::AreaModel;
@@ -20,8 +21,11 @@ fn main() {
     println!("  {} MACs, {} output positions", layer.macs(), layer.patches());
 
     // --- timing on both engines ---
-    let dimc = simulate_layer(&layer, Engine::Dimc).expect("dimc sim");
-    let base = simulate_layer(&layer, Engine::Baseline).expect("baseline sim");
+    let sim = |engine| {
+        simulate_layer_timed(&layer, engine, Precision::Int4, Arch::default(), Timing::Interpreter)
+    };
+    let dimc = sim(Engine::Dimc).expect("dimc sim");
+    let base = sim(Engine::Baseline).expect("baseline sim");
     let speedup = base.cycles as f64 / dimc.cycles as f64;
     let area = AreaModel::default();
     println!("\ntiming @500 MHz:");

@@ -14,7 +14,7 @@ mod harness;
 
 use dimc_rvv::arch::Arch;
 use dimc_rvv::compiler::layer::LayerConfig;
-use dimc_rvv::coordinator::driver::{simulate_layer_with_arch, Engine};
+use dimc_rvv::coordinator::driver::{simulate_layer_timed, Engine, Timing};
 use dimc_rvv::dimc::Precision;
 
 fn layers() -> Vec<LayerConfig> {
@@ -26,7 +26,11 @@ fn layers() -> Vec<LayerConfig> {
 }
 
 fn gops(l: &LayerConfig, engine: Engine, arch: Arch) -> f64 {
-    simulate_layer_with_arch(l, engine, Precision::Int4, arch).unwrap().gops()
+    simulate_layer_timed(l, engine, Precision::Int4, arch, Timing::Interpreter).unwrap().gops()
+}
+
+fn cycles(l: &LayerConfig, engine: Engine, arch: Arch) -> u64 {
+    simulate_layer_timed(l, engine, Precision::Int4, arch, Timing::Interpreter).unwrap().cycles
 }
 
 fn main() {
@@ -55,12 +59,8 @@ fn main() {
             for lat in lats {
                 let a = Arch { mem_load_latency: lat, ..Default::default() };
                 let d = gops(&l, Engine::Dimc, a);
-                let b = simulate_layer_with_arch(&l, Engine::Baseline, Precision::Int4, a)
-                    .unwrap()
-                    .cycles;
-                let dd = simulate_layer_with_arch(&l, Engine::Dimc, Precision::Int4, a)
-                    .unwrap()
-                    .cycles;
+                let b = cycles(&l, Engine::Baseline, a);
+                let dd = cycles(&l, Engine::Dimc, a);
                 print!(" {:>7.1}/{:>5.0}x", d, b as f64 / dd as f64);
                 assert!(d <= prev * 1.001, "GOPS must not rise with slower memory");
                 prev = d;

@@ -1,0 +1,192 @@
+//! Decode-phase serving perf guard — the figure behind `BENCH_9.json`.
+//!
+//! Runs both decode-capable transformer workloads (`vit-b16`,
+//! `mobilebert`) through the continuous token-level batcher on a 2-core
+//! cluster, with inter-layer pipelining off and overlapped, across an
+//! rps ladder anchored to each model's batch roofline. Asserts the
+//! machine-independent invariants — zero-load TTFT equals the unbatched
+//! prefill latency *exactly*, overlapped prefill is never slower than
+//! off (the netplan by-construction guarantee; serving spans carry no
+//! such inequality because batch formation reshuffles work), percentile
+//! tails are ordered and grow with offered load, KV traffic is non-zero
+//! — and writes the TTFT / ITL percentile curves to `BENCH_9.json` at
+//! the repository root so CI can guard the serving surface.
+//!
+//! `--short` (or `DIMC_BENCH_SHORT=1`) sweeps two rungs with fewer
+//! requests — faster, still writes the artifact (tagged `"short": true`).
+
+use dimc_rvv::arch::Arch;
+use dimc_rvv::dimc::Precision;
+use dimc_rvv::serve::{Request, ServePhase, Server, TrafficSpec, Workload};
+use dimc_rvv::sim::{JsonBuilder, Pipelining, Timing};
+use dimc_rvv::workloads::zoo;
+
+const MODELS: [&str; 2] = ["vit-b16", "mobilebert"];
+const CORES: u32 = 2;
+const MAX_BATCH: u32 = 4;
+const DECODE_TOKENS: u32 = 8;
+
+/// One point on the rps ladder.
+struct Rung {
+    frac: f64,
+    rps: f64,
+    ttft_p50_ms: f64,
+    ttft_p99_ms: f64,
+    itl_p50_ms: f64,
+    itl_p99_ms: f64,
+    tokens_per_s: f64,
+    kv_read_bytes: u64,
+    kv_peak_bytes: u64,
+    span_cycles: u64,
+}
+
+/// One (model, pipelining) sweep: the prefill primitive plus its ladder.
+struct Entry {
+    model: &'static str,
+    pipelining: Pipelining,
+    prefill_cycles: u64,
+    rungs: Vec<Rung>,
+}
+
+fn run_entry(model: &'static str, pipelining: Pipelining, short: bool) -> Entry {
+    let mut srv =
+        Server::configured(Arch::default(), Precision::Int4, CORES, Timing::default(), pipelining);
+    let wl = vec![Workload::new(model, zoo::lookup(model).expect("zoo model").layers)];
+    let prefill = srv.unbatched_latency(&wl, 0).expect("prefill latency");
+
+    // Zero-load exactness: requests spaced far beyond a full
+    // prefill+decode completion must see TTFT == unbatched prefill.
+    let gap = prefill.saturating_mul(64).max(1);
+    let lone: Vec<Request> =
+        (0..3u64).map(|i| Request { id: i, model: 0, arrival: 50 + i * gap }).collect();
+    let zero_spec = TrafficSpec::at(1.0)
+        .requests(lone.len())
+        .max_batch(MAX_BATCH)
+        .phase(ServePhase::Decode)
+        .decode_tokens(DECODE_TOKENS);
+    let zero = srv.serve_decode_arrivals(&wl, &zero_spec, &lone).expect("zero-load decode");
+    for r in &zero.completed {
+        assert_eq!(
+            r.ttft(),
+            prefill,
+            "{model}/{}: zero-load TTFT must equal the unbatched prefill latency",
+            pipelining.as_str()
+        );
+        assert_eq!(r.queue_wait(), 0, "{model}: zero-load request queued");
+    }
+
+    let roof = srv.batch_roofline(&wl, 0, MAX_BATCH).expect("batch roofline");
+    let fracs: &[f64] = if short { &[0.05, 0.9] } else { &[0.05, 0.25, 0.5, 0.9, 1.25] };
+    let requests = if short { 12 } else { 48 };
+
+    let mut rungs = Vec::new();
+    for &frac in fracs {
+        let spec = TrafficSpec::at(roof * frac)
+            .requests(requests)
+            .seed(0x9D9)
+            .max_batch(MAX_BATCH)
+            .phase(ServePhase::Decode)
+            .decode_tokens(DECODE_TOKENS);
+        let rep = srv.serve_decode_trace(&wl, &spec).expect("decode serve");
+        assert_eq!(rep.completed.len(), requests, "{model}: dropped requests");
+        assert_eq!(
+            rep.itl_samples.len(),
+            requests * DECODE_TOKENS as usize,
+            "{model}: one ITL sample per generated token expected"
+        );
+        let rung = Rung {
+            frac,
+            rps: roof * frac,
+            ttft_p50_ms: rep.ttft_ms(0.50),
+            ttft_p99_ms: rep.ttft_ms(0.99),
+            itl_p50_ms: rep.itl_ms(0.50),
+            itl_p99_ms: rep.itl_ms(0.99),
+            tokens_per_s: rep.tokens_per_s(),
+            kv_read_bytes: rep.kv_read_bytes,
+            kv_peak_bytes: rep.kv_peak_bytes,
+            span_cycles: rep.span_cycles,
+        };
+        assert!(rung.ttft_p50_ms > 0.0 && rung.ttft_p99_ms >= rung.ttft_p50_ms, "{model}: ttft");
+        assert!(rung.itl_p50_ms > 0.0 && rung.itl_p99_ms >= rung.itl_p50_ms, "{model}: itl");
+        assert!(rung.kv_read_bytes > 0, "{model}: decode must stream KV bytes");
+        rungs.push(rung);
+    }
+    // Tails must not shrink as offered load climbs the ladder.
+    let (calm, slammed) = (&rungs[0], &rungs[rungs.len() - 1]);
+    assert!(slammed.ttft_p99_ms >= calm.ttft_p99_ms, "{model}: TTFT tail shrank under load");
+    assert!(slammed.itl_p99_ms >= calm.itl_p99_ms, "{model}: ITL tail shrank under load");
+
+    println!("  {:<12} {:<8} prefill {:>12} cycles", model, pipelining.as_str(), prefill);
+    for r in &rungs {
+        println!(
+            "    {:>5.2}x roof  ttft p50/p99 {:>8.2}/{:>8.2} ms  itl {:>7.2}/{:>7.2} ms",
+            r.frac,
+            r.ttft_p50_ms,
+            r.ttft_p99_ms,
+            r.itl_p50_ms,
+            r.itl_p99_ms
+        );
+    }
+    Entry { model, pipelining, prefill_cycles: prefill, rungs }
+}
+
+fn main() {
+    let short = std::env::args().any(|a| a == "--short")
+        || std::env::var("DIMC_BENCH_SHORT").is_ok_and(|v| v != "0");
+    let tag = if short { " (short)" } else { "" };
+    println!("decode serving: {} models, off vs overlap{tag}", MODELS.len());
+
+    let mut entries: Vec<Entry> = Vec::new();
+    for model in MODELS {
+        let off = run_entry(model, Pipelining::Off, short);
+        let overlap = run_entry(model, Pipelining::Overlap, short);
+        assert!(
+            overlap.prefill_cycles <= off.prefill_cycles,
+            "{model}: overlapped prefill {} exceeds off {}",
+            overlap.prefill_cycles,
+            off.prefill_cycles
+        );
+        entries.push(off);
+        entries.push(overlap);
+    }
+
+    let mut j = JsonBuilder::new();
+    j.begin_obj();
+    j.field_str("bench", "serve_decode");
+    j.field_bool("short", short);
+    j.field_u64("cores", CORES as u64);
+    j.field_u64("max_batch", MAX_BATCH as u64);
+    j.field_u64("decode_tokens", DECODE_TOKENS as u64);
+    j.key("entries");
+    j.begin_arr();
+    for e in &entries {
+        j.begin_obj();
+        j.field_str("model", e.model);
+        j.field_str("pipelining", e.pipelining.as_str());
+        j.field_u64("prefill_cycles", e.prefill_cycles);
+        j.key("rungs");
+        j.begin_arr();
+        for r in &e.rungs {
+            j.begin_obj();
+            j.field_f64("frac", r.frac);
+            j.field_f64("rps", r.rps);
+            j.field_f64("ttft_p50_ms", r.ttft_p50_ms);
+            j.field_f64("ttft_p99_ms", r.ttft_p99_ms);
+            j.field_f64("itl_p50_ms", r.itl_p50_ms);
+            j.field_f64("itl_p99_ms", r.itl_p99_ms);
+            j.field_f64("tokens_per_s", r.tokens_per_s);
+            j.field_u64("kv_read_bytes", r.kv_read_bytes);
+            j.field_u64("kv_peak_bytes", r.kv_peak_bytes);
+            j.field_u64("span_cycles", r.span_cycles);
+            j.end_obj();
+        }
+        j.end_arr();
+        j.end_obj();
+    }
+    j.end_arr();
+    j.end_obj();
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_9.json");
+    std::fs::write(path, j.finish() + "\n").expect("write BENCH_9.json");
+    println!("  wrote {path}");
+}

@@ -16,7 +16,7 @@
 mod harness;
 
 use dimc_rvv::serve::sweep::render;
-use dimc_rvv::serve::rps_ladder;
+use dimc_rvv::serve::{rps_ladder, TrafficSpec};
 use dimc_rvv::sim::Session;
 
 fn main() {
@@ -24,10 +24,8 @@ fn main() {
         let mut session = Session::builder()
             .model("resnet50")
             .cores(4)
-            .rps(1000.0) // placeholder rate; the ladder sets each rung's rate
-            .requests(256)
-            .max_batch(8)
-            .seed(0xD1AC)
+            // placeholder rate; the ladder sets each rung's rate
+            .traffic(TrafficSpec::at(1000.0).requests(256).max_batch(8).seed(0xD1AC))
             .build()
             .unwrap();
         let roofline = session.batch_roofline(0).unwrap();

@@ -14,11 +14,16 @@ use dimc_rvv::arch::Arch;
 use dimc_rvv::compiler::layer::LayerConfig;
 use dimc_rvv::compiler::mapper::compile_dimc;
 use dimc_rvv::compiler::pack::{synth_acts, synth_wts};
-use dimc_rvv::coordinator::driver::{run_functional, simulate_layer, Engine};
+use dimc_rvv::coordinator::driver::{run_functional, simulate_layer_timed, Engine, Timing};
 use dimc_rvv::dimc::Precision;
 use dimc_rvv::pipeline::core::Core;
 use dimc_rvv::pipeline::trace::trace_cycles;
 use std::time::Instant;
+
+fn trace_dimc(l: &LayerConfig) -> dimc_rvv::coordinator::driver::LayerResult {
+    simulate_layer_timed(l, Engine::Dimc, Precision::Int4, Arch::default(), Timing::Interpreter)
+        .unwrap()
+}
 
 fn main() {
     let short = std::env::args().any(|a| a == "--short")
@@ -43,7 +48,7 @@ fn main() {
     // --- trace-engine effective rate (extrapolated instructions/s) ---
     let big = LayerConfig::conv("big", 256, 256, 3, 3, 14, 14, 1, 1);
     let t0 = Instant::now();
-    let r = simulate_layer(&big, Engine::Dimc).unwrap();
+    let r = trace_dimc(&big);
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "trace engine:    {} instrs accounted in {:.1} ms = {:.0} M effective instr/s",
@@ -55,7 +60,7 @@ fn main() {
     // --- trace-engine rate on the transformer hot path (K-tiled GEMM) ---
     let gemm = LayerConfig::gemm_fused("ffn1", 197, 3072, 768, true, true);
     let t0 = Instant::now();
-    let r = simulate_layer(&gemm, Engine::Dimc).unwrap();
+    let r = trace_dimc(&gemm);
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "trace gemm:      {} instrs accounted in {:.1} ms = {:.0} M effective instr/s",

@@ -83,6 +83,10 @@ fn sim_key(l: &LayerConfig) -> SimKey {
         LayerKind::Gemm { bias, relu, residual } => {
             2u8 | (u8::from(bias) << 2) | (u8::from(relu) << 3) | (u8::from(residual) << 4)
         }
+        // The active aggregate is priced like the equivalent dense GEMM,
+        // and expert/active counts are already folded into the och/ich
+        // geometry — only the bias flag needs its own key bit.
+        LayerKind::MoeGemm { bias, .. } => 3u8 | (u8::from(bias) << 2),
     };
     (kind, l.ich, l.och, l.kh, l.kw, l.ih, l.iw, l.stride, l.pad)
 }
@@ -349,10 +353,15 @@ fn stitch_row_shards(
 mod tests {
     use super::*;
     use crate::compiler::pack::{synth_acts, synth_wts};
-    use crate::coordinator::driver::simulate_layer;
+    use crate::coordinator::driver::{simulate_layer_timed, LayerResult};
 
     fn topo(cores: u32) -> ClusterTopology {
         ClusterTopology::from_arch(cores, &Arch::default())
+    }
+
+    fn single_core(l: &LayerConfig) -> LayerResult {
+        simulate_layer_timed(l, Engine::Dimc, Precision::Int4, Arch::default(), Timing::Interpreter)
+            .unwrap()
     }
 
     #[test]
@@ -364,7 +373,7 @@ mod tests {
         ];
         let mut sim = ClusterSim::new(Arch::default(), Precision::Int4);
         for l in &layers {
-            let single = simulate_layer(l, Engine::Dimc).unwrap();
+            let single = single_core(l);
             let clustered = sim.simulate_layer_cluster(l, &topo(1)).unwrap();
             assert_eq!(clustered.cycles, single.cycles, "{}", l.name);
             assert_eq!(clustered.cores_used, 1);
@@ -439,7 +448,7 @@ mod tests {
         let t = ClusterTopology::from_arch(8, &narrow);
         let r = sim_n.simulate_layer_cluster(&l, &t).unwrap();
         // even starved, never worse than single-core (k = 1 candidate)
-        let single = simulate_layer(&l, Engine::Dimc).unwrap();
+        let single = single_core(&l);
         assert!(r.cycles <= single.cycles);
     }
 }

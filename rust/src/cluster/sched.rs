@@ -211,8 +211,14 @@ impl ClusterSim {
 mod tests {
     use super::*;
     use crate::arch::Arch;
-    use crate::coordinator::driver::{simulate_layer, Engine};
+    use crate::coordinator::driver::{simulate_layer_timed, Engine, Timing};
     use crate::dimc::Precision;
+
+    fn dimc_cycles(l: &LayerConfig) -> u64 {
+        simulate_layer_timed(l, Engine::Dimc, Precision::Int4, Arch::default(), Timing::Interpreter)
+            .unwrap()
+            .cycles
+    }
 
     fn tiny_net() -> Vec<LayerConfig> {
         vec![
@@ -229,8 +235,7 @@ mod tests {
     #[test]
     fn one_core_schedule_is_the_sum_of_single_core_layers() {
         let net = tiny_net();
-        let want: u64 =
-            net.iter().map(|l| simulate_layer(l, Engine::Dimc).unwrap().cycles).sum();
+        let want: u64 = net.iter().map(dimc_cycles).sum();
         let mut sim = ClusterSim::new(Arch::default(), Precision::Int4);
         let s = sim.schedule("tiny", &net, &topo(1), 1).unwrap();
         assert_eq!(s.cycles, want);

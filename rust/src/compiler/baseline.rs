@@ -64,7 +64,7 @@ pub fn compile_baseline(l: &LayerConfig) -> LayerProgram {
 ///
 /// [`Plan`]: super::plan::Plan
 pub fn compile_baseline_planned(l: &LayerConfig, shift: u8) -> CompiledLayer {
-    CompiledLayer::new(compile_baseline_with_shift(l, shift), Precision::Int4)
+    CompiledLayer::for_layer(compile_baseline_with_shift(l, shift), Precision::Int4, l)
 }
 
 /// As [`compile_baseline`] with an explicit requantization shift.

@@ -37,6 +37,25 @@ pub enum LayerKind {
         /// Charged in [`LayerConfig::ops`] (one add per output element).
         residual: bool,
     },
+    /// Routed-expert (MoE-style) GEMM: a bank of `experts` same-shape
+    /// expert GEMMs of which only a seeded-sampled subset of `active`
+    /// executes per token. The layer geometry holds the *active
+    /// aggregate* — `och` (or `ich` for a down-projection) is the sum
+    /// over the active experts — so everything below the layer level
+    /// (mapper, tiling, grouping, sharding, the analytic backend) prices
+    /// it exactly like `active` separate expert GEMMs back to back with
+    /// no special casing. Which expert ids were drawn is a workload-level
+    /// concern (see `workloads::decode`): it is recorded in the layer
+    /// name for determinism but cannot change the cost, because experts
+    /// share one shape.
+    MoeGemm {
+        /// Experts in the routed bank.
+        experts: u32,
+        /// Experts the router activates per token (`<= experts`).
+        active: u32,
+        /// Fused bias add, charged as in [`LayerKind::Gemm`].
+        bias: bool,
+    },
 }
 
 /// One conv/FC/GEMM layer.
@@ -56,6 +75,14 @@ pub struct LayerConfig {
     pub iw: u32,
     pub stride: u32,
     pub pad: u32,
+    /// KV-cache traffic marker: the layer's weight operand *is* a
+    /// KV-cache read (the K or V matrix of an attention score/context
+    /// matmul in decode). Purely a traffic classification — the compiled
+    /// program, timing and `mem_bytes()` are unchanged; the derived
+    /// [`Plan`](super::plan::Plan) additionally reports those
+    /// weight-load bytes as `kv_bytes` so serving-tier KV accounting
+    /// stays unified with the traffic/energy model.
+    pub kv: bool,
 }
 
 impl LayerConfig {
@@ -82,6 +109,7 @@ impl LayerConfig {
             iw,
             stride,
             pad,
+            kv: false,
         }
     }
 
@@ -130,6 +158,60 @@ impl LayerConfig {
             iw: 1,
             stride: 1,
             pad: 0,
+            kv: false,
+        }
+    }
+
+    /// Dense GEMM whose weight operand is a KV-cache read (an attention
+    /// score or context matmul in decode: the "weights" loaded into the
+    /// DIMC rows are the cached K or V matrix). Identical to
+    /// [`LayerConfig::gemm`] in geometry, code and timing; the derived
+    /// [`Plan`](super::plan::Plan) classifies its weight-load bytes as
+    /// `kv_bytes`.
+    pub fn gemm_kv(name: &str, m: u32, n: u32, k: u32) -> Self {
+        let mut l = Self::gemm(name, m, n, k);
+        l.kv = true;
+        l
+    }
+
+    /// Routed-expert (MoE-style) GEMM: `active` of `experts` same-shape
+    /// expert GEMMs execute per token. `n_per_expert`/`k_per_expert` are
+    /// the per-expert output/reduction dims; exactly one of them is
+    /// aggregated across the active experts (`n` for an up-projection
+    /// fanning out into expert hidden states, `k` for a down-projection
+    /// reducing them back), selected by `aggregate_n`. The stored
+    /// geometry is the active aggregate, so the mapper, tiling/grouping
+    /// and the analytic backend price it as `active` dense expert GEMMs
+    /// with nothing below the layer level changing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn moe_gemm(
+        name: &str,
+        m: u32,
+        n_per_expert: u32,
+        k_per_expert: u32,
+        experts: u32,
+        active: u32,
+        bias: bool,
+        aggregate_n: bool,
+    ) -> Self {
+        let active = active.clamp(1, experts.max(1));
+        let (n, k) = if aggregate_n {
+            (n_per_expert * active, k_per_expert)
+        } else {
+            (n_per_expert, k_per_expert * active)
+        };
+        LayerConfig {
+            name: name.into(),
+            kind: LayerKind::MoeGemm { experts, active, bias },
+            ich: k,
+            och: n,
+            kh: 1,
+            kw: 1,
+            ih: m,
+            iw: 1,
+            stride: 1,
+            pad: 0,
+            kv: false,
         }
     }
 
@@ -145,12 +227,14 @@ impl LayerConfig {
             iw: 1,
             stride: 1,
             pad: 0,
+            kv: false,
         }
     }
 
-    /// Whether this layer is a dense GEMM.
+    /// Whether this layer is a dense GEMM (routed-expert GEMMs included —
+    /// their active aggregate lowers through the same GEMM mapping).
     pub fn is_gemm(&self) -> bool {
-        matches!(self.kind, LayerKind::Gemm { .. })
+        matches!(self.kind, LayerKind::Gemm { .. } | LayerKind::MoeGemm { .. })
     }
 
     /// Whether this layer fuses a residual add into its write-back group.
@@ -208,6 +292,9 @@ impl LayerConfig {
         let epilogue_ops = match self.kind {
             LayerKind::Gemm { bias, residual, .. } => {
                 (bias as u64 + residual as u64) * self.patches() * self.och as u64
+            }
+            LayerKind::MoeGemm { bias, .. } => {
+                bias as u64 * self.patches() * self.och as u64
             }
             _ => 0,
         };
@@ -282,6 +369,15 @@ impl std::fmt::Display for LayerConfig {
                 if bias { " +bias" } else { "" },
                 if relu { " +relu" } else { "" },
                 if residual { " +res" } else { "" }
+            ),
+            LayerKind::MoeGemm { experts, active, bias } => write!(
+                f,
+                "{}: moe-gemm {}x{}x{} ({active}/{experts} experts){}",
+                self.name,
+                self.gemm_m(),
+                self.gemm_n(),
+                self.gemm_k(),
+                if bias { " +bias" } else { "" }
             ),
         }
     }
@@ -367,6 +463,38 @@ mod tests {
         assert_eq!(l.to_string(), "g: gemm 4x64x197");
         let f = LayerConfig::gemm_fused("g", 4, 64, 197, true, true);
         assert_eq!(f.to_string(), "g: gemm 4x64x197 +bias +relu");
+    }
+
+    #[test]
+    fn moe_gemm_prices_the_active_aggregate() {
+        // 8 experts of [768 -> 512], 2 active, batch-1 token: the active
+        // aggregate is a 1 x 1024 x 768 GEMM — identical macs/tiling to
+        // two separate 1x512x768 expert GEMMs.
+        let up = LayerConfig::moe_gemm("up", 1, 512, 768, 8, 2, true, true);
+        assert!(up.is_gemm());
+        assert_eq!((up.gemm_m(), up.gemm_n(), up.gemm_k()), (1, 1024, 768));
+        let one = LayerConfig::gemm("e", 1, 512, 768);
+        assert_eq!(up.macs(), 2 * one.macs());
+        assert_eq!(up.groups(), 2 * one.groups());
+        assert_eq!(up.tiles(Precision::Int4), one.tiles(Precision::Int4));
+        // bias charges one add per *active-aggregate* output element
+        assert_eq!(up.ops(), 2 * up.macs() + 1024);
+        // down-projection aggregates the reduction dim instead
+        let down = LayerConfig::moe_gemm("down", 1, 768, 512, 8, 2, false, false);
+        assert_eq!((down.gemm_n(), down.gemm_k()), (768, 1024));
+        assert_eq!(down.macs(), up.macs());
+        assert_eq!(up.to_string(), "up: moe-gemm 1x1024x768 (2/8 experts) +bias");
+    }
+
+    #[test]
+    fn kv_marker_changes_nothing_but_the_flag() {
+        let plain = LayerConfig::gemm("score", 1, 197, 64);
+        let kv = LayerConfig::gemm_kv("score", 1, 197, 64);
+        assert!(kv.kv && !plain.kv);
+        assert_eq!(kv.kind, plain.kind);
+        assert_eq!(kv.macs(), plain.macs());
+        assert_eq!(kv.ops(), plain.ops());
+        assert_eq!(kv.to_string(), plain.to_string());
     }
 
     #[test]

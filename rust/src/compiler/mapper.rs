@@ -364,7 +364,7 @@ pub fn compile_dimc_arc(l: &LayerConfig, p: Precision) -> Arc<LayerProgram> {
 /// the interpreter plus the execution schedule for the analytic timing
 /// backend and the traffic/energy accounting (see [`super::plan`]).
 pub fn compile_dimc_planned(l: &LayerConfig, p: Precision) -> CompiledLayer {
-    CompiledLayer::new(compile_dimc(l, p), p)
+    CompiledLayer::for_layer(compile_dimc(l, p), p, l)
 }
 
 #[cfg(test)]

@@ -84,6 +84,16 @@ pub struct Plan {
     /// variance the mapper emits, and provably timing-inert — so all
     /// structurally identical phases share one body.
     pub shapes: Vec<Vec<Instr>>,
+    /// KV-cache read traffic: the subset of this layer's weight-load
+    /// bytes that are KV-cache reads. Zero for every layer except the
+    /// decode-phase attention score/context matmuls, whose "weights"
+    /// loaded into the DIMC rows are the cached K/V matrices
+    /// ([`LayerConfig::kv`](super::layer::LayerConfig::kv)). These bytes
+    /// are *already counted* in [`Plan::loaded_bytes`] /
+    /// [`Plan::mem_bytes`] — this field classifies them, it does not add
+    /// traffic — so serving-tier KV accounting, bus contention and the
+    /// energy model all stay on one source of truth.
+    pub kv_bytes: u64,
 }
 
 /// Canonical timing form of a body: address-materialization immediates
@@ -157,7 +167,19 @@ impl Plan {
                 macs,
             });
         }
-        Plan { steps, shapes }
+        Plan { steps, shapes, kv_bytes: 0 }
+    }
+
+    /// Total weight-load traffic (bytes of [`PhaseKind::WeightLoad`]
+    /// steps). For a KV-marked layer this is exactly the KV-cache read
+    /// volume: the row images streamed into the DIMC array *are* the
+    /// cached K/V matrix.
+    pub fn weight_load_bytes(&self) -> u64 {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s.kind, PhaseKind::WeightLoad))
+            .map(|s| s.trips * (s.loaded_bytes + s.stored_bytes))
+            .sum()
     }
 
     /// Total external-memory traffic (bytes moved over the VLSU/LSU
@@ -226,6 +248,22 @@ impl CompiledLayer {
         let plan = Plan::from_program(&prog, precision);
         CompiledLayer { prog, plan }
     }
+
+    /// [`CompiledLayer::new`] plus the layer-level traffic
+    /// classification: a KV-marked layer
+    /// ([`LayerConfig::kv`](super::layer::LayerConfig::kv)) reports its
+    /// weight-load bytes as the Plan's `kv_bytes`.
+    pub fn for_layer(
+        prog: LayerProgram,
+        precision: Precision,
+        l: &crate::compiler::layer::LayerConfig,
+    ) -> Self {
+        let mut c = Self::new(prog, precision);
+        if l.kv {
+            c.plan.kv_bytes = c.plan.weight_load_bytes();
+        }
+        c
+    }
 }
 
 /// Convenience re-check: the Plan's step structure mirrors the program
@@ -287,6 +325,30 @@ mod tests {
             .map(|s| s.trips * (s.loaded_bytes + s.stored_bytes))
             .sum();
         assert_eq!(wt, 256 * l.tiles(Precision::Int4) as u64 * 128);
+    }
+
+    #[test]
+    fn kv_bytes_classify_weight_loads_without_adding_traffic() {
+        // A decode-step score matmul at position 197: the K matrix rides
+        // the weight port. kv_bytes must equal the weight-load bytes and
+        // mem_bytes must not change versus the unmarked twin.
+        let plain = LayerConfig::gemm("score", 1, 197, 64);
+        let kv = LayerConfig::gemm_kv("score", 1, 197, 64);
+        let p = CompiledLayer::for_layer(
+            compile_dimc(&plain, Precision::Int4),
+            Precision::Int4,
+            &plain,
+        );
+        let k =
+            CompiledLayer::for_layer(compile_dimc(&kv, Precision::Int4), Precision::Int4, &kv);
+        assert_eq!(p.plan.kv_bytes, 0);
+        assert_eq!(k.plan.kv_bytes, k.plan.weight_load_bytes());
+        assert_eq!(
+            k.plan.kv_bytes,
+            197 * kv.tiles(Precision::Int4) as u64 * 128,
+            "kv reads = och row images x tiles x 128 B"
+        );
+        assert_eq!(k.plan.mem_bytes(), p.plan.mem_bytes(), "classification adds no traffic");
     }
 
     #[test]

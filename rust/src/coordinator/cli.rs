@@ -59,12 +59,18 @@ pub fn usage() -> &'static str {
      serve     [--cores N] [--rps R] [--trace uniform|bursty|ramp]\n\
                [--model NAME | --mix a=0.5,b=0.5] [--requests N]\n\
                [--max-batch B] [--max-wait CYC] [--seed S] [--sweep]\n\
+               [--phase batch|decode] [--decode-tokens N] [--moe ExA]\n\
                request-driven batched serving: drain a seeded arrival\n\
                trace through the dynamic batcher on an N-core cluster and\n\
                report throughput, p50/p95/p99 latency, queue depth and\n\
-               tile utilization (--sweep adds the load-vs-latency curve)\n\
+               tile utilization (--sweep adds the load-vs-latency curve);\n\
+               --phase decode serves autoregressive traffic with\n\
+               continuous token-level batching and reports TTFT/ITL\n\
+               percentiles and KV-cache bytes (--moe 8x2 routes 2 of 8\n\
+               experts per FFN token)\n\
      timeline  [--model NAME] [--cores N] [--batch B] [--rps R]\n\
-               [--requests N] [--out FILE] [--precision ..] [--timing ..]\n\
+               [--requests N] [--phase batch|decode] [--decode-tokens N]\n\
+               [--out FILE] [--precision ..] [--timing ..]\n\
                run at full tracing and export a Chrome trace-event /\n\
                Perfetto timeline (default trace.json; open it at\n\
                ui.perfetto.dev); a serving timeline when --rps is given,\n\
@@ -1004,7 +1010,7 @@ fn cluster(flags: &HashMap<String, String>, json: bool) -> Result<()> {
 
 fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
     use crate::serve::sweep::{render as render_sweep, rps_ladder};
-    use crate::serve::TraceShape;
+    use crate::serve::{ServePhase, TraceShape, TrafficSpec};
 
     let cores = flag(flags, "cores", 4u32)?.max(1);
     let rps = flag(flags, "rps", 1000.0f64)?;
@@ -1027,16 +1033,35 @@ fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
     let Some(shape) = TraceShape::parse(trace_name) else {
         bail!("unknown trace `{trace_name}`; expected uniform, bursty or ramp");
     };
+    let phase_name = flags.get("phase").map(String::as_str).unwrap_or("batch");
+    let Some(phase) = ServePhase::parse(phase_name) else {
+        bail!("unknown phase `{phase_name}`; expected batch or decode");
+    };
+
+    // Every serving knob rides on one typed TrafficSpec; the session
+    // validates the combination as a unit at build time.
+    let mut traffic = TrafficSpec::at(rps)
+        .requests(requests)
+        .shape(shape)
+        .seed(seed)
+        .max_batch(max_batch)
+        .max_wait_cycles(max_wait)
+        .phase(phase)
+        .decode_tokens(flag(flags, "decode-tokens", 32u32)?.max(1));
+    if let Some(moe) = flags.get("moe") {
+        let parsed = moe
+            .split_once('x')
+            .and_then(|(e, a)| Some((e.parse::<u32>().ok()?, a.parse::<u32>().ok()?)));
+        let Some((experts, active)) = parsed else {
+            bail!("bad --moe value `{moe}`; expected EXPERTSxACTIVE, e.g. 8x2");
+        };
+        traffic = traffic.moe(experts, active);
+    }
 
     // The served model set: --mix name=weight,... or a single --model.
     let mut builder = Session::builder()
         .cores(cores)
-        .rps(rps)
-        .requests(requests)
-        .max_batch(max_batch)
-        .max_wait_cycles(max_wait)
-        .seed(seed)
-        .trace(shape)
+        .traffic(traffic)
         .trace_level(parse_trace_level(flags)?)
         .pipelining(parse_pipelining(flags)?);
     if let Some(mix) = flags.get("mix") {
@@ -1061,10 +1086,11 @@ fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
 
     if !json {
         println!(
-            "serving: {} on {} DIMC-enhanced cores | trace {} @ {:.0} req/s, {} requests \
-             | batch window: max {} / wait {} cyc | seed 0x{seed:X}",
+            "serving: {} on {} DIMC-enhanced cores | phase {} | trace {} @ {:.0} req/s, \
+             {} requests | batch window: max {} / wait {} cyc | seed 0x{seed:X}",
             models.join("+"),
             cores,
+            phase.as_str(),
             shape.as_str(),
             rps,
             requests,
@@ -1084,7 +1110,7 @@ fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         }
     }
 
-    let report = session.run(&RunSpec::Serve)?;
+    let report = session.run(&RunSpec::Serve(None))?;
     let sweep_points = if flags.contains_key("sweep") {
         // Anchor the ladder to the traffic-weighted roofline of the whole
         // mix, not any single model's.
@@ -1152,6 +1178,28 @@ fn serve(flags: &HashMap<String, String>, json: bool) -> Result<()> {
             report.utilization.unwrap_or(0.0) * 100.0,
             ss.tile_utilization * 100.0
         );
+        if let (Some(ttft), Some(itl)) = (&ss.ttft, &ss.itl) {
+            let moe = match (ss.moe_experts, ss.moe_active) {
+                (Some(e), Some(a)) => format!(" | moe {a}/{e}"),
+                _ => String::new(),
+            };
+            println!(
+                "decode:  {} tok/req{} | {:.0} tok/s | ttft p50 {:.3} / p99 {:.3} ms | \
+                 itl p50 {:.3} / p99 {:.3} ms",
+                1 + ss.decode_tokens,
+                moe,
+                ss.tokens_per_s,
+                ttft.p50_ms,
+                ttft.p99_ms,
+                itl.p50_ms,
+                itl.p99_ms
+            );
+            println!(
+                "kv:      read {:.1} MiB | peak resident {:.1} MiB",
+                ss.kv_read_bytes as f64 / (1 << 20) as f64,
+                ss.kv_peak_bytes as f64 / (1 << 20) as f64
+            );
+        }
         print_counters(&report.counters);
         print_checks(&report.checks);
         if let Some(points) = &sweep_points {
@@ -1189,12 +1237,19 @@ fn timeline(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         .pipelining(parse_pipelining(flags)?);
     let serving = flags.contains_key("rps");
     if serving {
-        builder = builder
-            .rps(flag(flags, "rps", 1000.0f64)?)
+        use crate::serve::{ServePhase, TrafficSpec};
+        let mut t = TrafficSpec::at(flag(flags, "rps", 1000.0f64)?)
             .requests(flag(flags, "requests", 256u32)?.max(1) as usize);
+        if let Some(p) = flags.get("phase") {
+            let Some(phase) = ServePhase::parse(p) else {
+                bail!("unknown phase `{p}`; expected batch or decode");
+            };
+            t = t.phase(phase).decode_tokens(flag(flags, "decode-tokens", 32u32)?.max(1));
+        }
+        builder = builder.traffic(t);
     }
     let mut session = builder.build()?;
-    let spec = if serving { RunSpec::Serve } else { RunSpec::Network };
+    let spec = if serving { RunSpec::Serve(None) } else { RunSpec::Network };
     let report = session.run(&spec)?;
     let tl = report
         .timeline

@@ -2,18 +2,20 @@
 //!
 //! Two modes, mirroring the two jobs of the paper's simulator:
 //!
-//! * [`simulate_layer`] — timing: lower the layer, run the trace engine,
-//!   report cycles / GOPS / instruction-class distribution (Figs. 5–9);
+//! * [`simulate_layer_timed`] — timing: lower the layer, price it on the
+//!   interpreter or the analytic backend, report cycles / GOPS /
+//!   instruction-class distribution (Figs. 5–9);
 //! * [`run_functional`] — numerics: place real packed tensors in simulated
 //!   memory, flat-execute every instruction, and return the layer's
 //!   outputs for cross-checking against the JAX/Pallas golden model.
 //!
-//! **Deprecated as a public entry point.** These free functions are the
-//! implementation the [`sim::SingleCore`](crate::sim::SingleCore)
-//! backend wraps; frontends should build a
-//! [`sim::Session`](crate::sim::Session) instead and execute typed
-//! [`RunSpec`](crate::sim::RunSpec) requests. The functions stay
-//! re-exported (and green) for one release as thin shims.
+//! These free functions are the implementation the
+//! [`sim::SingleCore`](crate::sim::SingleCore) backend wraps; frontends
+//! should build a [`sim::Session`](crate::sim::Session) and execute typed
+//! [`RunSpec`](crate::sim::RunSpec) requests. The old zero-argument
+//! convenience shims (`simulate_layer`, `simulate_layer_at`,
+//! `simulate_layer_with_arch`) have been retired — call
+//! [`simulate_layer_timed`] with explicit precision, arch and timing.
 
 use crate::arch::Arch;
 use crate::compiler::baseline::{
@@ -238,37 +240,6 @@ pub fn timed_plan_obs(
     }
 }
 
-/// Timing simulation (trace engine, data-free).
-///
-/// Deprecated shim: prefer `Session::run(&RunSpec::Layer(..))` on a
-/// [`sim::Session`](crate::sim::Session).
-pub fn simulate_layer(l: &LayerConfig, engine: Engine) -> Result<LayerResult, SimError> {
-    simulate_layer_at(l, engine, Precision::Int4)
-}
-
-/// Timing simulation at an explicit DIMC precision (2-/1-bit modes).
-pub fn simulate_layer_at(
-    l: &LayerConfig,
-    engine: Engine,
-    precision: Precision,
-) -> Result<LayerResult, SimError> {
-    simulate_layer_with_arch(l, engine, precision, Arch::default())
-}
-
-/// Timing simulation under an explicit architecture configuration —
-/// the entry point of the ablation studies (issue width, memory latency,
-/// DIMC pipeline depth). Always prices on the interpreter; prefer
-/// [`simulate_layer_timed`] (or a [`Session`](crate::sim::Session) with
-/// its `timing` knob) to pick the backend.
-pub fn simulate_layer_with_arch(
-    l: &LayerConfig,
-    engine: Engine,
-    precision: Precision,
-    arch: Arch,
-) -> Result<LayerResult, SimError> {
-    simulate_layer_timed(l, engine, precision, arch, Timing::Interpreter)
-}
-
 /// Timing simulation with an explicit timing backend: compile once,
 /// price via the interpreter or the Plan-folding analytic model. The
 /// two backends return identical numbers (cycle-exactness is enforced
@@ -307,8 +278,10 @@ pub struct FunctionalRun {
 /// (values already in the engine's numeric range). Returns the quantized
 /// outputs in dense [oh][ow][och] order.
 ///
-/// Deprecated shim: prefer `Session::run(&RunSpec::Functional { .. })`
-/// or [`Session::verify`](crate::sim::Session::verify).
+/// This is the implementation behind
+/// `Session::run(&RunSpec::Functional { .. })` and
+/// [`Session::verify`](crate::sim::Session::verify); prefer those typed
+/// entry points in new code.
 pub fn run_functional(
     l: &LayerConfig,
     engine: Engine,
@@ -467,7 +440,14 @@ mod tests {
         // The trace engine's cycle count must equal flat execution.
         let l = LayerConfig::conv("tt", 32, 32, 2, 2, 6, 6, 1, 0);
         for engine in [Engine::Dimc, Engine::Baseline] {
-            let traced = simulate_layer(&l, engine).unwrap();
+            let traced = simulate_layer_timed(
+                &l,
+                engine,
+                Precision::Int4,
+                Arch::default(),
+                Timing::Interpreter,
+            )
+            .unwrap();
             let prog = compile(&l, engine);
             let mut core = fresh_core(Arch::default(), engine, Precision::Int4);
             let flat = prog.flatten();
@@ -499,8 +479,11 @@ mod tests {
     #[test]
     fn dimc_beats_baseline() {
         let l = LayerConfig::conv("sp", 64, 64, 3, 3, 14, 14, 1, 1);
-        let d = simulate_layer(&l, Engine::Dimc).unwrap();
-        let b = simulate_layer(&l, Engine::Baseline).unwrap();
+        let sim = |engine| {
+            simulate_layer_timed(&l, engine, Precision::Int4, Arch::default(), Timing::Interpreter)
+                .unwrap()
+        };
+        let (d, b) = (sim(Engine::Dimc), sim(Engine::Baseline));
         let speedup = b.cycles as f64 / d.cycles as f64;
         assert!(speedup > 20.0, "speedup only {speedup:.1}x");
         assert!(d.gops() > 10.0, "gops only {:.1}", d.gops());

@@ -10,7 +10,7 @@
 use crate::cluster::scaling::ScalingPoint;
 use crate::compiler::layer::LayerConfig;
 use crate::metrics::report::LayerRow;
-use crate::serve::{rps_ladder, LoadPoint};
+use crate::serve::{rps_ladder, LoadPoint, TrafficSpec};
 use crate::sim::{LayerReportRow, RunReport, RunSpec, Session, SessionError};
 use crate::workloads::zoo;
 
@@ -208,10 +208,8 @@ pub fn serve_latency_points() -> Result<Vec<LoadPoint>, SessionError> {
     let mut session = Session::builder()
         .model("resnet50")
         .cores(4)
-        .rps(1000.0) // placeholder rate; the ladder sets each rung's rate
-        .requests(256)
-        .max_batch(8)
-        .seed(0xD1AC)
+        // placeholder rate; the ladder sets each rung's rate
+        .traffic(TrafficSpec::at(1000.0).requests(256).max_batch(8).seed(0xD1AC))
         .build()?;
     let roofline = session.batch_roofline(0)?;
     session.load_sweep(&rps_ladder(roofline))

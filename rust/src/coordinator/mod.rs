@@ -8,4 +8,4 @@ pub mod figures;
 pub mod driver;
 pub mod verify;
 
-pub use driver::{simulate_layer, Engine, LayerResult};
+pub use driver::{simulate_layer_timed, Engine, LayerResult};

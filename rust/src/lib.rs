@@ -98,9 +98,11 @@
 //! assert!(Session::builder().cores(0).build().is_err());
 //! ```
 //!
-//! The legacy entry points (`coordinator::driver::simulate_layer`,
-//! `cluster::exec::ClusterSim`, `serve::engine::Server`) remain public
-//! as deprecated shims for one release; see their module docs.
+//! The lower-tier entry points (`coordinator::driver::simulate_layer_timed`,
+//! `cluster::exec::ClusterSim`, `serve::engine::Server`) remain public —
+//! the session backends wrap them; see their module docs. Serving is
+//! configured through one typed [`serve::TrafficSpec`] handed to
+//! [`sim::SessionBuilder::traffic`].
 
 pub mod arch;
 pub mod isa;

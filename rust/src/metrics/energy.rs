@@ -124,18 +124,25 @@ impl EnergyModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::Arch;
     use crate::compiler::layer::LayerConfig;
-    use crate::coordinator::driver::{simulate_layer, Engine};
+    use crate::coordinator::driver::{simulate_layer_timed, Engine, Timing};
+    use crate::dimc::Precision;
 
     fn layer() -> LayerConfig {
         LayerConfig::conv("e", 128, 64, 3, 3, 14, 14, 1, 1)
     }
 
+    fn sim(l: &LayerConfig, engine: Engine) -> LayerResult {
+        simulate_layer_timed(l, engine, Precision::Int4, Arch::default(), Timing::Interpreter)
+            .unwrap()
+    }
+
     #[test]
     fn dimc_is_order_of_magnitude_more_efficient() {
         let m = EnergyModel::default();
-        let d = m.estimate(&simulate_layer(&layer(), Engine::Dimc).unwrap());
-        let b = m.estimate(&simulate_layer(&layer(), Engine::Baseline).unwrap());
+        let d = m.estimate(&sim(&layer(), Engine::Dimc));
+        let b = m.estimate(&sim(&layer(), Engine::Baseline));
         assert!(
             d.tops_per_watt > 10.0 * b.tops_per_watt,
             "DIMC {} vs baseline {} TOPS/W",
@@ -151,7 +158,7 @@ mod tests {
         // system (core + tile) must land below the bare macro but within
         // an order of magnitude.
         let m = EnergyModel::default();
-        let d = m.estimate(&simulate_layer(&layer(), Engine::Dimc).unwrap());
+        let d = m.estimate(&sim(&layer(), Engine::Dimc));
         assert!(
             (10.0..310.0).contains(&d.tops_per_watt),
             "system efficiency {} TOPS/W outside the plausible band",
@@ -163,16 +170,15 @@ mod tests {
     #[test]
     fn plan_estimate_equals_simulated_estimate() {
         use crate::coordinator::driver::compile_for;
-        use crate::dimc::Precision;
         // The Plan's class totals equal the interpreter's retirement
         // counts, so the no-simulation estimate must match exactly.
         let m = EnergyModel::default();
         let l = layer();
-        let sim = m.estimate(&simulate_layer(&l, Engine::Dimc).unwrap());
+        let simulated = m.estimate(&sim(&l, Engine::Dimc));
         let c = compile_for(&l, Engine::Dimc, Precision::Int4);
         let plan = m.estimate_plan(&c.plan, l.ops());
-        assert_eq!(sim.total_uj.to_bits(), plan.total_uj.to_bits());
-        assert_eq!(sim.tops_per_watt.to_bits(), plan.tops_per_watt.to_bits());
+        assert_eq!(simulated.total_uj.to_bits(), plan.total_uj.to_bits());
+        assert_eq!(simulated.tops_per_watt.to_bits(), plan.tops_per_watt.to_bits());
     }
 
     #[test]
@@ -180,8 +186,8 @@ mod tests {
         let m = EnergyModel::default();
         let small = LayerConfig::conv("s", 64, 32, 1, 1, 7, 7, 1, 0);
         let big = LayerConfig::conv("b", 64, 32, 3, 3, 28, 28, 1, 1);
-        let es = m.estimate(&simulate_layer(&small, Engine::Dimc).unwrap());
-        let eb = m.estimate(&simulate_layer(&big, Engine::Dimc).unwrap());
+        let es = m.estimate(&sim(&small, Engine::Dimc));
+        let eb = m.estimate(&sim(&big, Engine::Dimc));
         assert!(eb.total_uj > es.total_uj * 10.0);
     }
 }

@@ -5,8 +5,10 @@
 //! with the same grouping the paper plots.
 
 use super::area::AreaModel;
+use crate::arch::Arch;
 use crate::compiler::layer::LayerConfig;
-use crate::coordinator::driver::{simulate_layer, Engine, LayerResult};
+use crate::coordinator::driver::{simulate_layer_timed, Engine, LayerResult, Timing};
+use crate::dimc::Precision;
 use crate::pipeline::core::SimError;
 
 /// One per-layer evaluation row (the union of Figs. 5, 6 and 7).
@@ -30,10 +32,14 @@ pub struct LayerRow {
     pub ans: f64,
 }
 
-/// Simulate `layer` on both engines and fold into a row.
+/// Simulate `layer` on both engines (Int4, default arch, interpreter
+/// timing — the paper's configuration) and fold into a row.
 pub fn layer_row(layer: &LayerConfig, area: &AreaModel) -> Result<LayerRow, SimError> {
-    let d = simulate_layer(layer, Engine::Dimc)?;
-    let b = simulate_layer(layer, Engine::Baseline)?;
+    let sim = |engine| {
+        simulate_layer_timed(layer, engine, Precision::Int4, Arch::default(), Timing::Interpreter)
+    };
+    let d = sim(Engine::Dimc)?;
+    let b = sim(Engine::Baseline)?;
     Ok(fold_row(layer, &d, &b, area))
 }
 

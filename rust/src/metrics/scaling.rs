@@ -91,10 +91,13 @@ pub fn project(l: &LayerConfig, r: &LayerResult, tiles: u32) -> TileProjection {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::driver::{simulate_layer, Engine};
+    use crate::arch::Arch;
+    use crate::coordinator::driver::{simulate_layer_timed, Engine, Timing};
+    use crate::dimc::Precision;
 
     fn result(l: &LayerConfig) -> LayerResult {
-        simulate_layer(l, Engine::Dimc).unwrap()
+        simulate_layer_timed(l, Engine::Dimc, Precision::Int4, Arch::default(), Timing::Interpreter)
+            .unwrap()
     }
 
     #[test]

@@ -385,6 +385,7 @@ mod tests {
                 macs: 0,
             }],
             shapes: vec![vec![Instr::Jal { rd: 0, off: -4 }]],
+            kv_bytes: 0,
         };
         assert!(analytic_cycles(&plan, &Arch::default()).is_err());
     }

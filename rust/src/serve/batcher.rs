@@ -109,8 +109,16 @@ impl Batcher {
 
     /// Remove and return up to `max_batch` oldest requests of `model`.
     pub fn take_batch(&mut self, model: usize) -> Vec<Request> {
+        self.take_up_to(model, self.policy.max_batch)
+    }
+
+    /// Remove and return up to `cap` oldest requests of `model`, still
+    /// capped by the window's `max_batch`. The continuous batcher's
+    /// slot-limited admission: `cap` is however many in-flight slots the
+    /// model has free.
+    pub fn take_up_to(&mut self, model: usize, cap: u32) -> Vec<Request> {
         let q = &mut self.queues[model];
-        let n = (q.len() as u32).min(self.policy.max_batch) as usize;
+        let n = (q.len() as u32).min(self.policy.max_batch).min(cap) as usize;
         q.drain(..n).collect()
     }
 }
@@ -171,5 +179,18 @@ mod tests {
         }
         assert_eq!(b.take_batch(0).len(), 3);
         assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn take_up_to_respects_both_caps() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait_cycles: 0 }, 1);
+        for i in 0..5 {
+            b.enqueue(req(i, 0, i));
+        }
+        let got = b.take_up_to(0, 2);
+        assert_eq!(got.len(), 2, "slot cap below max_batch wins");
+        assert_eq!(got[0].id, 0, "FIFO order");
+        assert_eq!(b.take_up_to(0, 8).len(), 3, "max_batch still caps a large slot count");
+        assert_eq!(b.depth(), 0);
     }
 }

@@ -23,6 +23,7 @@
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::request::{self, Request, TraceConfig, TraceShape};
+use super::spec::ServePhase;
 use super::stats::{BatchRecord, CompletedRequest, ServeReport};
 use crate::arch::Arch;
 use crate::cluster::exec::ClusterSim;
@@ -68,6 +69,14 @@ pub struct Server {
     pub sample_depth: bool,
     /// `(model index, batch size) -> (service cycles, avg busy cores)`.
     cache: HashMap<(usize, u32), (u64, f64)>,
+    /// Decode-iteration service memo:
+    /// `(model, position bucket, batch, (experts, active)) ->
+    /// (service cycles, avg busy cores)`. See
+    /// [`serve::token`](super::token).
+    pub(crate) decode_cache: HashMap<(usize, u32, u32, Option<(u32, u32)>), (u64, f64)>,
+    /// `(model, position bucket) -> KV bytes one decode step streams`
+    /// (the per-token KV read volume at that sequence position).
+    pub(crate) kv_cache: HashMap<(usize, u32), u64>,
 }
 
 impl Server {
@@ -81,6 +90,8 @@ impl Server {
             topo: ClusterTopology::from_arch(cores, &arch),
             sample_depth: false,
             cache: HashMap::new(),
+            decode_cache: HashMap::new(),
+            kv_cache: HashMap::new(),
         }
     }
 
@@ -115,6 +126,8 @@ impl Server {
             topo: ClusterTopology::from_arch(cores, &arch),
             sample_depth: false,
             cache: HashMap::new(),
+            decode_cache: HashMap::new(),
+            kv_cache: HashMap::new(),
         }
     }
 
@@ -219,12 +232,7 @@ impl Server {
         let model_names: Vec<String> = workloads.iter().map(|w| w.name.clone()).collect();
         let cores = self.topo.cores;
 
-        let offered_rps = if n >= 2 {
-            let span = (arrivals[n - 1].arrival - arrivals[0].arrival).max(1);
-            (n - 1) as f64 * clock_hz / span as f64
-        } else {
-            0.0
-        };
+        let offered_rps = request::empirical_rps(arrivals, clock_hz).unwrap_or(0.0);
 
         let mut batcher = Batcher::new(policy, workloads.len());
         let mut completed: Vec<CompletedRequest> = Vec::with_capacity(n);
@@ -276,7 +284,9 @@ impl Server {
                             model,
                             arrival: r.arrival,
                             dispatched: now,
+                            first_token: done,
                             completed: done,
+                            tokens: 1,
                         });
                     }
                     batches.push(BatchRecord {
@@ -285,6 +295,8 @@ impl Server {
                         dispatched: now,
                         service_cycles: service,
                         cores_used,
+                        phase: ServePhase::Batch,
+                        tokens: size as u64,
                     });
                     continue; // re-evaluate at the same cycle
                 }
@@ -331,6 +343,12 @@ impl Server {
             mean_queue_depth: depth_area as f64 / span_cycles.max(1) as f64,
             max_queue_depth: max_depth,
             offered_rps,
+            phase: ServePhase::Batch,
+            decode_tokens: 0,
+            moe: None,
+            kv_read_bytes: 0,
+            kv_peak_bytes: 0,
+            itl_samples: Vec::new(),
             depth_samples,
         })
     }

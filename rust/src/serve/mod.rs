@@ -13,19 +13,28 @@
 //!   every run is reproducible;
 //! * [`batcher`] — the dynamic batcher: per-model FIFO queues dispatching
 //!   on batch-full or window-expiry (`max_batch`, `max_wait_cycles`);
-//! * [`engine`] — the event loop: an N-core cluster drains batches
-//!   (service times come from the cluster scheduler and are memoized per
-//!   `(model, batch)`), with exact per-request cycle accounting;
-//! * [`stats`] — the metrics sink: throughput, p50/p95/p99 latency, queue
-//!   depth and DIMC-tile utilization;
+//! * [`spec`] — the typed [`TrafficSpec`]: every serving knob (arrival
+//!   process, batch window, phase, decode/MoE parameters) in one value,
+//!   validated as a unit by the [`Session`](crate::sim::Session) façade;
+//! * [`engine`] — the single-shot event loop: an N-core cluster drains
+//!   whole-request batches (service times come from the cluster
+//!   scheduler and are memoized per `(model, batch)`), with exact
+//!   per-request cycle accounting;
+//! * [`token`] — the continuous (token-level) batcher for autoregressive
+//!   serving: prefill passes feed per-model in-flight sets that advance
+//!   one token per decode iteration, with KV-cache byte accounting and
+//!   TTFT / inter-token latency percentiles;
+//! * [`stats`] — the metrics sink: throughput, p50/p95/p99 latency,
+//!   TTFT/ITL tails, queue depth and DIMC-tile utilization;
 //! * [`sweep`] — the load-vs-latency curve (`repro serve` /
 //!   `cargo bench --bench serve_latency`).
 //!
 //! Invariants (property-tested in `rust/tests/prop_serve.rs`): every
 //! admitted request completes exactly once; with a zero wait window an
-//! uncontended request's latency equals the unbatched cluster latency;
-//! under overload, achieved throughput saturates at the cluster's
-//! batch-mode roofline and never exceeds it.
+//! uncontended request's latency equals the unbatched cluster latency
+//! (and in decode serving its TTFT equals the unbatched prefill
+//! latency); under overload, achieved throughput saturates at the
+//! cluster's batch-mode roofline and never exceeds it.
 //!
 //! ```
 //! use dimc_rvv::arch::Arch;
@@ -49,12 +58,15 @@
 
 pub mod request;
 pub mod batcher;
+pub mod spec;
 pub mod engine;
+pub mod token;
 pub mod stats;
 pub mod sweep;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{Server, Workload};
 pub use request::{Request, TraceConfig, TraceShape};
+pub use spec::{DecodeSpec, MoeSpec, ServePhase, TrafficSpec};
 pub use stats::{BatchRecord, CompletedRequest, ServeReport};
 pub use sweep::{load_sweep, rps_ladder, LoadPoint};

@@ -102,6 +102,20 @@ fn pick_model(r: &mut Lcg, weights: &[f64]) -> usize {
     weights.len() - 1
 }
 
+/// Empirical offered load of a time-ordered arrival list, in requests
+/// per second. `None` when the rate is undefined: a zero- or one-request
+/// trace has no inter-arrival gap (indexing the tail of such a trace is
+/// exactly the panic this helper replaces), and a degenerate trace whose
+/// requests all share one arrival cycle has no measurable span.
+pub fn empirical_rps(arrivals: &[Request], clock_hz: f64) -> Option<f64> {
+    let (first, last) = (arrivals.first()?, arrivals.last()?);
+    if last.arrival <= first.arrival {
+        return None;
+    }
+    let span = (last.arrival - first.arrival) as f64;
+    Some((arrivals.len() - 1) as f64 * clock_hz / span)
+}
+
 /// Generate a time-ordered trace of `cfg.requests` requests whose model is
 /// drawn per-request from `weights` (one non-negative weight per served
 /// model; they need not sum to 1). `clock_hz` converts the configured
@@ -169,8 +183,7 @@ mod tests {
         for shape in [TraceShape::Uniform, TraceShape::Bursty] {
             let c = cfg(shape);
             let t = generate(&c, &[1.0], CLOCK_HZ);
-            let span = (t.last().unwrap().arrival - t[0].arrival) as f64 / CLOCK_HZ;
-            let rate = (t.len() - 1) as f64 / span;
+            let rate = empirical_rps(&t, CLOCK_HZ).unwrap();
             assert!(
                 (rate / c.rps - 1.0).abs() < 0.25,
                 "{}: empirical {rate:.0} vs configured {:.0}",
@@ -198,9 +211,27 @@ mod tests {
     fn ramp_accelerates() {
         let t = generate(&cfg(TraceShape::Ramp), &[1.0], CLOCK_HZ);
         let half = t.len() / 2;
-        let first = t[half].arrival - t[0].arrival;
-        let second = t.last().unwrap().arrival - t[half].arrival;
-        assert!(second < first, "ramp second half {second} not faster than first {first}");
+        // The second half carries the same request count over a shorter
+        // span, so its empirical rate must be higher.
+        let slow = empirical_rps(&t[..half], CLOCK_HZ).unwrap();
+        let fast = empirical_rps(&t[half..], CLOCK_HZ).unwrap();
+        assert!(fast > slow, "ramp second half {fast:.0} r/s not faster than first {slow:.0}");
+    }
+
+    #[test]
+    fn empirical_rate_of_degenerate_traces_is_none() {
+        // Regression: the old inline computation indexed the trace tail
+        // and panicked on zero- and one-request traces.
+        assert_eq!(empirical_rps(&[], CLOCK_HZ), None);
+        let one = vec![Request { id: 0, model: 0, arrival: 42 }];
+        assert_eq!(empirical_rps(&one, CLOCK_HZ), None);
+        let flat = vec![
+            Request { id: 0, model: 0, arrival: 42 },
+            Request { id: 1, model: 0, arrival: 42 },
+        ];
+        assert_eq!(empirical_rps(&flat, CLOCK_HZ), None, "zero span has no rate");
+        let t = generate(&cfg(TraceShape::Uniform), &[1.0], CLOCK_HZ);
+        assert!(empirical_rps(&t, CLOCK_HZ).is_some());
     }
 
     #[test]

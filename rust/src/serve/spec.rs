@@ -1,0 +1,242 @@
+//! The typed serving-traffic specification: every knob of one serving
+//! run — arrival process, batching window, phase and decode parameters —
+//! consolidated into a single value the rest of the stack passes around.
+//!
+//! [`TrafficSpec`] is the one non-deprecated way to configure serving:
+//! the [`SessionBuilder`](crate::sim::SessionBuilder) accepts it via
+//! `.traffic(spec)` and validates it as a unit at `build()`, and
+//! [`RunSpec::Serve`](crate::sim::RunSpec) can carry a per-run override.
+//! The legacy per-knob setters (`.rps(..)`, `.requests(..)`, …) survive
+//! as deprecated shims that fold into the same spec, so old callers keep
+//! producing bit-identical reports.
+//!
+//! Two phases exist:
+//!
+//! * [`ServePhase::Batch`] — single-shot inference: each request is one
+//!   full forward pass, served batch-per-request (the pre-decode engine);
+//! * [`ServePhase::Decode`] — autoregressive serving: each request runs
+//!   a prefill pass over its prompt and then generates
+//!   [`DecodeSpec::decode_tokens`] tokens one at a time through the
+//!   continuous (token-level) batcher, optionally routing each FFN stack
+//!   through a seeded-sampled MoE expert subset ([`DecodeSpec::moe`]).
+
+use super::batcher::BatchPolicy;
+use super::request::{TraceConfig, TraceShape};
+pub use crate::workloads::decode::MoeSpec;
+
+/// Which serving phase the traffic exercises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServePhase {
+    /// Single-shot inference: one full forward pass per request. In
+    /// decode-phase serving this same tag marks the *prefill* batches —
+    /// a prefill is a full-network pass over the prompt.
+    Batch,
+    /// Autoregressive token generation: prefill plus per-token decode
+    /// iterations through the continuous batcher.
+    Decode,
+}
+
+impl ServePhase {
+    /// Parse a CLI phase name (`batch` / `decode`).
+    pub fn parse(s: &str) -> Option<ServePhase> {
+        match s {
+            "batch" => Some(ServePhase::Batch),
+            "decode" => Some(ServePhase::Decode),
+            _ => None,
+        }
+    }
+
+    /// The canonical CLI name of the phase.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ServePhase::Batch => "batch",
+            ServePhase::Decode => "decode",
+        }
+    }
+}
+
+impl Default for ServePhase {
+    /// Single-shot serving — what every pre-decode caller gets.
+    fn default() -> Self {
+        ServePhase::Batch
+    }
+}
+
+/// The decode-phase knobs: how many tokens each request generates and
+/// whether the FFN stacks route through a mixture of experts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeSpec {
+    /// Tokens generated per request after prefill (>= 1). The request's
+    /// first token is produced by the prefill pass itself, so a request
+    /// emits `1 + decode_tokens` tokens in total.
+    pub decode_tokens: u32,
+    /// Route every FFN stack through a seeded-sampled subset of experts
+    /// instead of a dense FFN. `None` serves the dense model.
+    pub moe: Option<MoeSpec>,
+}
+
+impl Default for DecodeSpec {
+    /// 32 generated tokens, dense FFN.
+    fn default() -> Self {
+        DecodeSpec { decode_tokens: 32, moe: None }
+    }
+}
+
+/// Every knob of one serving run, as a single validated-as-a-unit value.
+///
+/// Construct with [`TrafficSpec::at`] and chain the setters:
+///
+/// ```
+/// use dimc_rvv::serve::{ServePhase, TraceShape, TrafficSpec};
+///
+/// let spec = TrafficSpec::at(1500.0)
+///     .requests(256)
+///     .shape(TraceShape::Bursty)
+///     .phase(ServePhase::Decode)
+///     .decode_tokens(16)
+///     .moe(8, 2);
+/// assert_eq!(spec.policy().max_batch, 8);
+/// assert_eq!(spec.decode.moe.unwrap().active, 2);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrafficSpec {
+    /// Mean offered load in requests per second.
+    pub rps: f64,
+    /// Number of requests in the generated trace.
+    pub requests: usize,
+    /// Arrival pattern.
+    pub shape: TraceShape,
+    /// Trace seed; the same spec always reproduces the same run.
+    pub seed: u64,
+    /// Largest dispatched batch (and the continuous batcher's in-flight
+    /// slot count per model).
+    pub max_batch: u32,
+    /// Longest a request may head its queue before dispatch is forced.
+    pub max_wait_cycles: u64,
+    /// Single-shot or autoregressive serving.
+    pub phase: ServePhase,
+    /// Decode-phase parameters (ignored in [`ServePhase::Batch`]).
+    pub decode: DecodeSpec,
+}
+
+impl TrafficSpec {
+    /// A spec at `rps` requests per second with the historical serving
+    /// defaults: 512 uniform requests, seed `0xD1AC`, batch window
+    /// `max_batch 8 / max_wait 0`, single-shot phase.
+    pub fn at(rps: f64) -> Self {
+        TrafficSpec {
+            rps,
+            requests: 512,
+            shape: TraceShape::Uniform,
+            seed: 0xD1AC,
+            max_batch: 8,
+            max_wait_cycles: 0,
+            phase: ServePhase::default(),
+            decode: DecodeSpec::default(),
+        }
+    }
+
+    /// Set the trace length.
+    pub fn requests(mut self, requests: usize) -> Self {
+        self.requests = requests;
+        self
+    }
+
+    /// Set the arrival-trace shape.
+    pub fn shape(mut self, shape: TraceShape) -> Self {
+        self.shape = shape;
+        self
+    }
+
+    /// Set the trace seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the largest dispatched batch.
+    pub fn max_batch(mut self, max_batch: u32) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Set the dispatch-window hold time.
+    pub fn max_wait_cycles(mut self, cycles: u64) -> Self {
+        self.max_wait_cycles = cycles;
+        self
+    }
+
+    /// Set the serving phase.
+    pub fn phase(mut self, phase: ServePhase) -> Self {
+        self.phase = phase;
+        self
+    }
+
+    /// Set the number of generated tokens per request (decode phase).
+    pub fn decode_tokens(mut self, tokens: u32) -> Self {
+        self.decode.decode_tokens = tokens;
+        self
+    }
+
+    /// Route FFN stacks through `active` of `experts` experts per token
+    /// (decode phase).
+    pub fn moe(mut self, experts: u32, active: u32) -> Self {
+        self.decode.moe = Some(MoeSpec::new(experts, active));
+        self
+    }
+
+    /// The batching-window policy embedded in the spec.
+    pub fn policy(&self) -> BatchPolicy {
+        BatchPolicy { max_batch: self.max_batch, max_wait_cycles: self.max_wait_cycles }
+    }
+
+    /// The arrival-trace parameters embedded in the spec.
+    pub fn trace(&self) -> TraceConfig {
+        TraceConfig { rps: self.rps, requests: self.requests, shape: self.shape, seed: self.seed }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_the_legacy_setter_defaults() {
+        let s = TrafficSpec::at(1000.0);
+        assert_eq!(s.requests, 512);
+        assert_eq!(s.shape, TraceShape::Uniform);
+        assert_eq!(s.seed, 0xD1AC);
+        assert_eq!(s.policy(), BatchPolicy { max_batch: 8, max_wait_cycles: 0 });
+        assert_eq!(s.phase, ServePhase::Batch);
+        assert_eq!(s.decode, DecodeSpec { decode_tokens: 32, moe: None });
+    }
+
+    #[test]
+    fn chained_setters_land_in_the_right_fields() {
+        let s = TrafficSpec::at(42.0)
+            .requests(7)
+            .shape(TraceShape::Ramp)
+            .seed(9)
+            .max_batch(3)
+            .max_wait_cycles(11)
+            .phase(ServePhase::Decode)
+            .decode_tokens(5)
+            .moe(16, 4);
+        assert_eq!(s.rps, 42.0);
+        assert_eq!(s.requests, 7);
+        assert_eq!(s.trace().shape, TraceShape::Ramp);
+        assert_eq!(s.trace().seed, 9);
+        assert_eq!(s.policy(), BatchPolicy { max_batch: 3, max_wait_cycles: 11 });
+        assert_eq!(s.phase, ServePhase::Decode);
+        assert_eq!(s.decode.decode_tokens, 5);
+        assert_eq!(s.decode.moe, Some(MoeSpec::new(16, 4)));
+    }
+
+    #[test]
+    fn phase_round_trips_through_parse() {
+        for p in [ServePhase::Batch, ServePhase::Decode] {
+            assert_eq!(ServePhase::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(ServePhase::parse("prefill"), None);
+    }
+}

@@ -4,6 +4,7 @@
 
 use super::batcher::BatchPolicy;
 use super::request::TraceShape;
+use super::spec::{MoeSpec, ServePhase};
 
 /// One request's full lifecycle, recorded at dispatch time.
 #[derive(Debug, Clone)]
@@ -14,10 +15,18 @@ pub struct CompletedRequest {
     pub model: usize,
     /// Arrival cycle.
     pub arrival: u64,
-    /// Cycle the batch containing this request started executing.
+    /// Cycle the batch containing this request started executing (the
+    /// prefill dispatch, in decode serving).
     pub dispatched: u64,
-    /// Cycle the batch (and therefore this request) finished.
+    /// Cycle the request's first token was produced: the end of its
+    /// prefill pass. In single-shot serving this equals `completed`.
+    pub first_token: u64,
+    /// Cycle the request's last token (and therefore the request)
+    /// finished.
     pub completed: u64,
+    /// Tokens the request produced: 1 in single-shot serving,
+    /// `1 + decode_tokens` in decode serving.
+    pub tokens: u32,
 }
 
 impl CompletedRequest {
@@ -30,9 +39,16 @@ impl CompletedRequest {
     pub fn queue_wait(&self) -> u64 {
         self.dispatched - self.arrival
     }
+
+    /// Time to first token in cycles (arrival to end of prefill).
+    pub fn ttft(&self) -> u64 {
+        self.first_token - self.arrival
+    }
 }
 
-/// One dispatched batch.
+/// One dispatched batch: a single-shot/prefill pass
+/// ([`ServePhase::Batch`]) or one decode iteration
+/// ([`ServePhase::Decode`]).
 #[derive(Debug, Clone)]
 pub struct BatchRecord {
     /// Served model index.
@@ -45,6 +61,13 @@ pub struct BatchRecord {
     pub service_cycles: u64,
     /// Average DIMC cores the batch kept busy while executing.
     pub cores_used: f64,
+    /// Full-network pass ([`ServePhase::Batch`] — also the prefill
+    /// batches of a decode run) or one token-level decode iteration.
+    pub phase: ServePhase,
+    /// Tokens the batch produced (one per member in both phases; summing
+    /// this over all batches gives `requests x (1 + decode_tokens)` in
+    /// decode serving, `requests` in single-shot serving).
+    pub tokens: u64,
 }
 
 /// Everything one serving simulation produced.
@@ -79,6 +102,26 @@ pub struct ServeReport {
     pub max_queue_depth: usize,
     /// Empirical offered load in requests per second (from the arrivals).
     pub offered_rps: f64,
+    /// Which serving phase produced the report.
+    pub phase: ServePhase,
+    /// Tokens generated per request after prefill (0 in single-shot
+    /// serving).
+    pub decode_tokens: u32,
+    /// The MoE routing in force, if any (decode phase only).
+    pub moe: Option<MoeSpec>,
+    /// Total KV-cache bytes streamed by the decode iterations (the
+    /// score/context GEMV weight loads classified by
+    /// [`Plan::kv_bytes`](crate::compiler::plan::Plan::kv_bytes)).
+    /// 0 in single-shot serving.
+    pub kv_read_bytes: u64,
+    /// Peak resident KV-cache footprint across the run: the largest
+    /// per-iteration sum, over every in-flight request, of the KV bytes
+    /// one decode step streams at that request's sequence position.
+    pub kv_peak_bytes: u64,
+    /// Every inter-token latency sample in cycles (one per in-flight
+    /// request per decode iteration: the gap between its consecutive
+    /// tokens). Empty in single-shot serving.
+    pub itl_samples: Vec<u64>,
     /// Queue-depth samples `(cycle, depth)`, one per event-loop time
     /// advance, strictly increasing in time. Empty unless the server's
     /// `sample_depth` observability knob was set (see
@@ -138,6 +181,39 @@ impl ServeReport {
         self.tile_core_cycles / (self.cores.max(1) as f64 * self.span_cycles.max(1) as f64)
     }
 
+    /// All time-to-first-token samples in cycles, ascending. In
+    /// single-shot serving a request's only token is its completion, so
+    /// this equals [`ServeReport::latencies_sorted`].
+    pub fn ttfts_sorted(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.completed.iter().map(|r| r.ttft()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// All inter-token latency samples in cycles, ascending. Empty in
+    /// single-shot serving.
+    pub fn itls_sorted(&self) -> Vec<u64> {
+        let mut v = self.itl_samples.clone();
+        v.sort_unstable();
+        v
+    }
+
+    /// The `p`-th time-to-first-token percentile in milliseconds.
+    pub fn ttft_ms(&self, p: f64) -> f64 {
+        self.ms(percentile(&self.ttfts_sorted(), p))
+    }
+
+    /// The `p`-th inter-token latency percentile in milliseconds.
+    pub fn itl_ms(&self, p: f64) -> f64 {
+        self.ms(percentile(&self.itls_sorted(), p))
+    }
+
+    /// Generated-token throughput over the span, in tokens per second.
+    pub fn tokens_per_s(&self) -> f64 {
+        let tokens: u64 = self.completed.iter().map(|r| r.tokens as u64).sum();
+        tokens as f64 / (self.span_cycles.max(1) as f64 / self.clock_hz)
+    }
+
     /// Mean dispatched batch size.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches.is_empty() {
@@ -150,7 +226,7 @@ impl ServeReport {
     /// Render the operator summary block.
     pub fn render(&self) -> String {
         let lat = self.latencies_sorted();
-        format!(
+        let mut s = format!(
             "== serving report ==\n\
              models: {} | trace {} seed 0x{:X} | {} cores | max batch {} | max wait {} cyc\n\
              requests: {} | offered {:.1} req/s | achieved {:.1} req/s\n\
@@ -177,7 +253,27 @@ impl ServeReport {
             self.mean_batch_size(),
             self.utilization() * 100.0,
             self.tile_utilization() * 100.0,
-        )
+        );
+        if self.phase == ServePhase::Decode {
+            let moe = match self.moe {
+                Some(m) => format!(" | moe {}/{}", m.active, m.experts),
+                None => String::new(),
+            };
+            s.push_str(&format!(
+                "\ndecode:  {} tok/req{} | {:.0} tok/s | ttft p50 {:.3} / p99 {:.3} ms | \
+                 itl p50 {:.3} / p99 {:.3} ms | kv read {:.1} MiB (peak {:.1} MiB)",
+                1 + self.decode_tokens,
+                moe,
+                self.tokens_per_s(),
+                self.ttft_ms(50.0),
+                self.ttft_ms(99.0),
+                self.itl_ms(50.0),
+                self.itl_ms(99.0),
+                self.kv_read_bytes as f64 / (1 << 20) as f64,
+                self.kv_peak_bytes as f64 / (1 << 20) as f64,
+            ));
+        }
+        s
     }
 }
 
@@ -198,9 +294,18 @@ mod tests {
 
     #[test]
     fn request_accounting_identities() {
-        let r = CompletedRequest { id: 0, model: 0, arrival: 10, dispatched: 25, completed: 40 };
+        let r = CompletedRequest {
+            id: 0,
+            model: 0,
+            arrival: 10,
+            dispatched: 25,
+            first_token: 32,
+            completed: 40,
+            tokens: 3,
+        };
         assert_eq!(r.latency(), 30);
         assert_eq!(r.queue_wait(), 15);
+        assert_eq!(r.ttft(), 22);
         assert_eq!(r.latency(), r.queue_wait() + 15);
     }
 }

@@ -2,17 +2,17 @@
 //! scaling curve. Offered load climbs a ladder of fractions of the
 //! batch-mode roofline; each rung is one full serving simulation, and the
 //! folded points show the classic saturation picture — flat latency at
-//! low load, a knee near the roofline, and queueing blow-up past it.
+//! low load, a knee near the roofline, and queueing blow-up past it. In
+//! decode-phase serving each rung additionally folds the token-level
+//! tails: time-to-first-token and inter-token latency percentiles.
 
-use super::batcher::BatchPolicy;
 use super::engine::{Server, Workload};
-use super::request::{TraceConfig, TraceShape};
+use super::spec::{ServePhase, TrafficSpec};
 use super::stats::percentile;
 use crate::metrics::report::render_table;
 use crate::pipeline::core::SimError;
 
-/// One rung of the load ladder, folded from a full [`Server::serve_trace`]
-/// run.
+/// One rung of the load ladder, folded from a full serving run.
 #[derive(Debug, Clone, Copy)]
 pub struct LoadPoint {
     /// Configured offered load for this rung, in requests per second.
@@ -35,6 +35,16 @@ pub struct LoadPoint {
     pub mean_queue_depth: f64,
     /// Mean dispatched batch size.
     pub mean_batch: f64,
+    /// Median time-to-first-token in milliseconds (equals `p50_ms` in
+    /// single-shot serving, where the only token is the completion).
+    pub ttft_p50_ms: f64,
+    /// 99th-percentile time-to-first-token in milliseconds.
+    pub ttft_p99_ms: f64,
+    /// Median inter-token latency in milliseconds (0 outside the decode
+    /// phase — single-shot serving has no inter-token gaps).
+    pub itl_p50_ms: f64,
+    /// 99th-percentile inter-token latency in milliseconds.
+    pub itl_p99_ms: f64,
 }
 
 /// The default ladder: fractions of the roofline spanning comfortable
@@ -43,23 +53,24 @@ pub fn rps_ladder(roofline_rps: f64) -> Vec<f64> {
     [0.1, 0.25, 0.5, 0.75, 0.9, 1.05, 1.25].iter().map(|f| f * roofline_rps).collect()
 }
 
-/// Run one serving simulation per rung of `ladder` (same trace shape,
-/// seed, request count and batching policy throughout) and fold each into
-/// a [`LoadPoint`]. The server's service-time caches stay warm across
-/// rungs, so the sweep costs little more than its slowest rung.
+/// Run one serving simulation per rung of `ladder` — `spec` with its
+/// `rps` overridden per rung, dispatched to the phase the spec names —
+/// and fold each into a [`LoadPoint`]. The server's service-time caches
+/// stay warm across rungs, so the sweep costs little more than its
+/// slowest rung.
 pub fn load_sweep(
     server: &mut Server,
     workloads: &[Workload],
-    policy: BatchPolicy,
-    shape: TraceShape,
-    seed: u64,
-    requests: usize,
+    spec: &TrafficSpec,
     ladder: &[f64],
 ) -> Result<Vec<LoadPoint>, SimError> {
     let mut points = Vec::with_capacity(ladder.len());
     for &rps in ladder {
-        let trace = TraceConfig { rps, requests, shape, seed };
-        let rep = server.serve_trace(workloads, policy, &trace)?;
+        let rung = TrafficSpec { rps, ..*spec };
+        let rep = match rung.phase {
+            ServePhase::Batch => server.serve_trace(workloads, rung.policy(), &rung.trace())?,
+            ServePhase::Decode => server.serve_decode_trace(workloads, &rung)?,
+        };
         let lat = rep.latencies_sorted(); // sort once, read three ranks
         points.push(LoadPoint {
             offered_rps: rps,
@@ -72,6 +83,10 @@ pub fn load_sweep(
             tile_utilization: rep.tile_utilization(),
             mean_queue_depth: rep.mean_queue_depth,
             mean_batch: rep.mean_batch_size(),
+            ttft_p50_ms: rep.ttft_ms(50.0),
+            ttft_p99_ms: rep.ttft_ms(99.0),
+            itl_p50_ms: rep.itl_ms(50.0),
+            itl_p99_ms: rep.itl_ms(99.0),
         });
     }
     Ok(points)
@@ -88,6 +103,10 @@ pub fn render(title: &str, points: &[LoadPoint]) -> String {
                 format!("{:.3}", p.p50_ms),
                 format!("{:.3}", p.p95_ms),
                 format!("{:.3}", p.p99_ms),
+                format!("{:.3}", p.ttft_p50_ms),
+                format!("{:.3}", p.ttft_p99_ms),
+                format!("{:.3}", p.itl_p50_ms),
+                format!("{:.3}", p.itl_p99_ms),
                 format!("{:.2}", p.mean_queue_depth),
                 format!("{:.2}", p.mean_batch),
                 format!("{:.0}%", p.utilization * 100.0),
@@ -103,6 +122,10 @@ pub fn render(title: &str, points: &[LoadPoint]) -> String {
             "p50 ms",
             "p95 ms",
             "p99 ms",
+            "ttft p50",
+            "ttft p99",
+            "itl p50",
+            "itl p99",
             "depth",
             "batch",
             "busy",
@@ -118,6 +141,7 @@ mod tests {
     use crate::arch::Arch;
     use crate::compiler::layer::LayerConfig;
     use crate::dimc::Precision;
+    use crate::serve::TraceShape;
 
     fn tiny() -> Vec<Workload> {
         vec![Workload::new(
@@ -130,21 +154,16 @@ mod tests {
     fn sweep_shows_saturation() {
         let zoo = tiny();
         let mut srv = Server::new(Arch::default(), Precision::Int4, 4);
-        let policy = BatchPolicy { max_batch: 4, max_wait_cycles: 0 };
-        let roof = srv.batch_roofline(&zoo, 0, policy.max_batch).unwrap();
-        let pts = load_sweep(
-            &mut srv,
-            &zoo,
-            policy,
-            TraceShape::Uniform,
-            0xA11CE,
-            300,
-            &rps_ladder(roof),
-        )
-        .unwrap();
+        let spec = TrafficSpec::at(0.0).requests(300).seed(0xA11CE).max_batch(4);
+        let roof = srv.batch_roofline(&zoo, 0, spec.max_batch).unwrap();
+        let pts = load_sweep(&mut srv, &zoo, &spec, &rps_ladder(roof)).unwrap();
         assert_eq!(pts.len(), 7);
         // Low load: negligible queueing, latency near the service floor.
         assert!(pts[0].mean_queue_depth < 0.5, "idle rung queued {:.2}", pts[0].mean_queue_depth);
+        // In single-shot serving a request's only token is its
+        // completion, so the TTFT columns equal the latency columns.
+        assert_eq!(pts[0].ttft_p50_ms, pts[0].p50_ms);
+        assert_eq!(pts[0].itl_p50_ms, 0.0, "no inter-token gaps outside decode");
         // Past the roofline the system saturates: achieved < offered and
         // the tail inflates well beyond the low-load tail.
         let last = pts.last().unwrap();
@@ -155,19 +174,30 @@ mod tests {
     }
 
     #[test]
+    fn decode_sweep_reports_token_tails() {
+        let zoo = vec![Workload::new("mobilebert", crate::workloads::bert::mobilebert())];
+        let mut srv = Server::new(Arch::default(), Precision::Int4, 2);
+        let spec = TrafficSpec::at(0.0)
+            .requests(4)
+            .max_batch(2)
+            .phase(ServePhase::Decode)
+            .decode_tokens(2);
+        let pts = load_sweep(&mut srv, &zoo, &spec, &[200.0, 2000.0]).unwrap();
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!(p.ttft_p50_ms > 0.0);
+            assert!(p.itl_p50_ms > 0.0, "decode rungs must fold ITL samples");
+            assert!(p.ttft_p99_ms >= p.ttft_p50_ms);
+            assert!(p.itl_p99_ms >= p.itl_p50_ms);
+        }
+    }
+
+    #[test]
     fn render_has_all_rungs() {
         let zoo = tiny();
         let mut srv = Server::new(Arch::default(), Precision::Int4, 2);
-        let pts = load_sweep(
-            &mut srv,
-            &zoo,
-            BatchPolicy::default(),
-            TraceShape::Bursty,
-            7,
-            80,
-            &[500.0, 5000.0],
-        )
-        .unwrap();
+        let spec = TrafficSpec::at(0.0).requests(80).shape(TraceShape::Bursty).seed(7);
+        let pts = load_sweep(&mut srv, &zoo, &spec, &[500.0, 5000.0]).unwrap();
         let t = render("demo serve", &pts);
         assert!(t.contains("== demo serve =="));
         assert!(t.lines().count() >= 4);

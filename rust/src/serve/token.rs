@@ -1,0 +1,493 @@
+//! Continuous (token-level) batching: the autoregressive serving engine.
+//!
+//! Single-shot serving ([`Server::serve_arrivals`]) dispatches whole
+//! requests; an autoregressive transformer instead runs one *prefill*
+//! pass over its prompt and then generates tokens one at a time, each
+//! decode step a batch-1 GEMV sweep whose attention matmuls grow with
+//! the sequence position (see [`workloads::decode`](crate::workloads::decode)).
+//! Batch-per-request scheduling wastes the cluster on such traffic: a
+//! request that finished its prompt would hold its batch until every
+//! peer generated all of its tokens. The continuous batcher instead
+//! keeps a per-model *in-flight set* of at most `max_batch` requests and
+//! re-forms the working batch every iteration — requests join the moment
+//! a prefill slot frees up and leave the moment their last token is out,
+//! exactly the vLLM-style iteration-level scheduling production LLM
+//! servers use.
+//!
+//! The event loop extends the single-shot one with a second work source:
+//!
+//! 1. admit every due arrival into the prefill queues (the ordinary
+//!    [`Batcher`] window policy governs prefill dispatch);
+//! 2. when the cluster idles, *prefill has priority*: an eligible queue
+//!    with free flight slots dispatches a prefill batch (the full
+//!    forward network at that batch size — so at zero load a request's
+//!    TTFT is exactly the unbatched cluster latency);
+//! 3. otherwise one *decode iteration* runs for the most starved model:
+//!    all of its in-flight requests advance one token at the service
+//!    time of the position-bucketed decode step;
+//! 4. otherwise time advances to the next event.
+//!
+//! KV-cache accounting rides on the compiler: the decode step's
+//! score/context weight loads *are* the KV reads, classified by
+//! [`Plan::kv_bytes`](crate::compiler::plan::Plan::kv_bytes), so
+//! [`ServeReport::kv_read_bytes`] counts exactly the bytes the priced
+//! Plans already stream and [`ServeReport::kv_peak_bytes`] tracks the
+//! peak resident footprint across in-flight requests.
+
+use super::batcher::Batcher;
+use super::engine::{Server, Workload};
+use super::request::{self, Request};
+use super::spec::{ServePhase, TrafficSpec};
+use super::stats::{BatchRecord, CompletedRequest, ServeReport};
+use crate::compiler::mapper::compile_dimc_planned;
+use crate::pipeline::core::SimError;
+use crate::workloads::decode::{self, DecodeCfg, MoeSpec};
+
+/// Positions are rounded up to the next multiple of 16 so each bucket's
+/// decode step is compiled and priced once (a conservative over-estimate
+/// of at most 15 positions).
+const POS_BUCKET: u32 = 16;
+
+fn bucket(pos: u32) -> u32 {
+    pos.max(1).div_ceil(POS_BUCKET) * POS_BUCKET
+}
+
+/// Resolve a served workload to its decode table, or fault with the
+/// decode-capable names.
+fn decode_cfg_of(name: &str) -> Result<DecodeCfg, SimError> {
+    decode::lookup(name).ok_or_else(|| {
+        let valid: Vec<&str> = decode::decode_models().iter().map(|c| c.name).collect();
+        SimError::Fault(format!(
+            "workload `{name}` has no decode table; decode-phase serving supports: {}",
+            valid.join(", ")
+        ))
+    })
+}
+
+/// One in-flight request of the continuous batcher.
+struct Flight {
+    req: Request,
+    /// Prefill dispatch cycle.
+    dispatched: u64,
+    /// End of prefill — the request's first token.
+    first_token: u64,
+    /// Cycle of the most recent token.
+    last_token: u64,
+    /// Sequence position: tokens currently in the request's KV cache.
+    pos: u32,
+    /// Decode tokens generated so far.
+    generated: u32,
+}
+
+impl Server {
+    /// Generate a trace from `spec` over the workloads' mix weights and
+    /// drain it autoregressively (see [`Server::serve_decode_arrivals`]).
+    pub fn serve_decode_trace(
+        &mut self,
+        workloads: &[Workload],
+        spec: &TrafficSpec,
+    ) -> Result<ServeReport, SimError> {
+        let weights: Vec<f64> = workloads.iter().map(|w| w.weight).collect();
+        let arrivals = request::generate(&spec.trace(), &weights, self.sim.arch.clock_hz);
+        self.serve_decode_arrivals(workloads, spec, &arrivals)
+    }
+
+    /// Drain an explicit, time-ordered arrival list through prefill and
+    /// continuous token-level decode, with exact per-token cycle
+    /// accounting. Every workload must resolve to a decode table
+    /// ([`workloads::decode::lookup`](crate::workloads::decode::lookup));
+    /// otherwise the run faults before simulating anything.
+    ///
+    /// Invariants (property-tested in `rust/tests/prop_serve.rs`): every
+    /// request completes exactly once with `1 + decode_tokens` tokens;
+    /// prefill batch sizes sum to the request count and decode iteration
+    /// sizes to `requests x decode_tokens`; at zero load a request's
+    /// TTFT equals the unbatched cluster latency; identical spec and
+    /// arrivals reproduce the report bit-for-bit.
+    pub fn serve_decode_arrivals(
+        &mut self,
+        workloads: &[Workload],
+        spec: &TrafficSpec,
+        arrivals: &[Request],
+    ) -> Result<ServeReport, SimError> {
+        debug_assert!(arrivals.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let n = arrivals.len();
+        let clock_hz = self.sim.arch.clock_hz;
+        let model_names: Vec<String> = workloads.iter().map(|w| w.name.clone()).collect();
+        let cores = self.topo.cores;
+        let policy = spec.policy();
+        let decode_tokens = spec.decode.decode_tokens.max(1);
+        let moe = spec.decode.moe;
+        let cfgs: Vec<DecodeCfg> =
+            workloads.iter().map(|w| decode_cfg_of(&w.name)).collect::<Result<_, _>>()?;
+
+        let offered_rps = request::empirical_rps(arrivals, clock_hz).unwrap_or(0.0);
+
+        let mut batcher = Batcher::new(policy, workloads.len());
+        let mut flights: Vec<Vec<Flight>> = (0..workloads.len()).map(|_| Vec::new()).collect();
+        let mut completed: Vec<CompletedRequest> = Vec::with_capacity(n);
+        let mut batches: Vec<BatchRecord> = Vec::new();
+        let mut itl_samples: Vec<u64> = Vec::new();
+        let mut kv_read_bytes = 0u64;
+        let mut kv_peak_bytes = 0u64;
+        let mut next_arrival = 0usize;
+        let mut busy_until: Option<u64> = None;
+        let mut now = arrivals.first().map(|r| r.arrival).unwrap_or(0);
+        let mut depth_area = 0u128;
+        let mut max_depth = 0usize;
+        let mut busy_cycles = 0u64;
+        let mut tile_core_cycles = 0.0f64;
+        let mut depth_samples: Vec<(u64, u64)> = Vec::new();
+
+        while completed.len() < n {
+            // 1. Admit every arrival due now into the prefill queues.
+            while next_arrival < n && arrivals[next_arrival].arrival <= now {
+                batcher.enqueue(arrivals[next_arrival].clone());
+                next_arrival += 1;
+            }
+            max_depth = max_depth.max(batcher.depth());
+
+            // 2. Free the cluster if its pass just finished.
+            if busy_until.is_some_and(|t| now >= t) {
+                busy_until = None;
+            }
+
+            if busy_until.is_none() {
+                // 3a. Prefill first: the eligible queue with the oldest
+                // head, provided its flight has a free slot. As in the
+                // single-shot engine, a stalled queue (no arrivals left,
+                // unreachable window) is flushed for conservation.
+                let stalled = next_arrival >= n
+                    && batcher.ready_at().is_some_and(|t| t == u64::MAX);
+                let prefill = batcher
+                    .ready(now)
+                    .or_else(|| if stalled { batcher.oldest_head() } else { None })
+                    .filter(|&m| flights[m].len() < policy.max_batch as usize);
+                if let Some(model) = prefill {
+                    let free = policy.max_batch - flights[model].len() as u32;
+                    let reqs = batcher.take_up_to(model, free);
+                    let size = reqs.len() as u32;
+                    let (service, cores_used) = self.service_time(workloads, model, size)?;
+                    let done = now + service;
+                    busy_until = Some(done);
+                    busy_cycles += service;
+                    tile_core_cycles += service as f64 * cores_used;
+                    for r in reqs {
+                        flights[model].push(Flight {
+                            req: r,
+                            dispatched: now,
+                            first_token: done,
+                            last_token: done,
+                            pos: cfgs[model].prompt_tokens.max(1),
+                            generated: 0,
+                        });
+                    }
+                    batches.push(BatchRecord {
+                        model,
+                        size,
+                        dispatched: now,
+                        service_cycles: service,
+                        cores_used,
+                        phase: ServePhase::Batch,
+                        tokens: size as u64,
+                    });
+                    continue; // re-evaluate at the same cycle
+                }
+
+                // 3b. One decode iteration for the most starved model:
+                // the one whose longest-waiting request has gone longest
+                // without a token (ties break toward the lower index).
+                let target = (0..flights.len())
+                    .filter(|&m| !flights[m].is_empty())
+                    .min_by_key(|&m| {
+                        flights[m].iter().map(|f| f.last_token).min().unwrap_or(u64::MAX)
+                    });
+                if let Some(model) = target {
+                    let b = flights[model].len() as u32;
+                    let pos = flights[model].iter().map(|f| f.pos).max().unwrap_or(1);
+                    let pb = bucket(pos);
+                    let (service, cores_used) =
+                        self.decode_service(workloads, model, &cfgs[model], pb, b, moe, spec.seed)?;
+                    let done = now + service;
+                    busy_until = Some(done);
+                    busy_cycles += service;
+                    tile_core_cycles += service as f64 * cores_used;
+
+                    // KV accounting: the iteration streams each member's
+                    // cache once; the resident footprint peaks before
+                    // members retire.
+                    let mut resident = 0u64;
+                    for (m, fl) in flights.iter().enumerate() {
+                        for f in fl {
+                            resident += self.kv_step_bytes(m, &cfgs[m], bucket(f.pos));
+                        }
+                    }
+                    kv_peak_bytes = kv_peak_bytes.max(resident);
+                    kv_read_bytes += b as u64 * self.kv_step_bytes(model, &cfgs[model], pb);
+
+                    // Advance every member one token; retire the done.
+                    for f in flights[model].iter_mut() {
+                        f.generated += 1;
+                        itl_samples.push(done - f.last_token);
+                        f.last_token = done;
+                        f.pos += 1;
+                    }
+                    flights[model].retain(|f| {
+                        if f.generated >= decode_tokens {
+                            completed.push(CompletedRequest {
+                                id: f.req.id,
+                                model,
+                                arrival: f.req.arrival,
+                                dispatched: f.dispatched,
+                                first_token: f.first_token,
+                                completed: done,
+                                tokens: 1 + decode_tokens,
+                            });
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    batches.push(BatchRecord {
+                        model,
+                        size: b,
+                        dispatched: now,
+                        service_cycles: service,
+                        cores_used,
+                        phase: ServePhase::Decode,
+                        tokens: b as u64,
+                    });
+                    continue; // re-evaluate at the same cycle
+                }
+            }
+
+            // 4. Advance to the earliest pending event.
+            let mut next = u64::MAX;
+            if next_arrival < n {
+                next = next.min(arrivals[next_arrival].arrival);
+            }
+            if let Some(t) = busy_until {
+                next = next.min(t);
+            } else if let Some(t) = batcher.ready_at() {
+                next = next.min(t.max(now + 1));
+            }
+            if next == u64::MAX {
+                break; // nothing left to do (all requests drained)
+            }
+            if self.sample_depth {
+                depth_samples.push((now, batcher.depth() as u64));
+            }
+            depth_area += batcher.depth() as u128 * (next - now) as u128;
+            now = next;
+        }
+
+        let first_arrival = arrivals.first().map(|r| r.arrival).unwrap_or(0);
+        let last_completion =
+            completed.iter().map(|r| r.completed).max().unwrap_or(first_arrival);
+        let span_cycles = last_completion - first_arrival;
+        Ok(ServeReport {
+            model_names,
+            cores,
+            policy,
+            shape: spec.shape,
+            seed: spec.seed,
+            clock_hz,
+            completed,
+            batches,
+            span_cycles,
+            busy_cycles,
+            tile_core_cycles,
+            mean_queue_depth: depth_area as f64 / span_cycles.max(1) as f64,
+            max_queue_depth: max_depth,
+            offered_rps,
+            phase: ServePhase::Decode,
+            decode_tokens,
+            moe,
+            kv_read_bytes,
+            kv_peak_bytes,
+            itl_samples,
+            depth_samples,
+        })
+    }
+
+    /// Cluster service time of one decode iteration: the
+    /// position-bucketed per-token layer stack of `workloads[model]` at
+    /// batch `b`. Memoized per `(model, bucket, batch, moe)`.
+    fn decode_service(
+        &mut self,
+        workloads: &[Workload],
+        model: usize,
+        cfg: &DecodeCfg,
+        pos_bucket: u32,
+        batch: u32,
+        moe: Option<MoeSpec>,
+        seed: u64,
+    ) -> Result<(u64, f64), SimError> {
+        let key = (model, pos_bucket, batch, moe.map(|m| (m.experts, m.active)));
+        if let Some(&hit) = self.decode_cache.get(&key) {
+            return Ok(hit);
+        }
+        let layers = decode::decode_step(cfg, pos_bucket, moe, seed);
+        let tag = match moe {
+            Some(m) => format!("@moe{}of{}", m.active, m.experts),
+            None => String::new(),
+        };
+        let name = format!("{}@decode-p{pos_bucket}{tag}", workloads[model].name);
+        let s = self.sim.schedule(&name, &layers, &self.topo, batch)?;
+        let v = (s.cycles, s.avg_cores_used());
+        self.decode_cache.insert(key, v);
+        Ok(v)
+    }
+
+    /// KV bytes one decode step of `workloads[model]` streams at the
+    /// given position bucket: the sum of [`Plan::kv_bytes`] over the
+    /// step's compiled layers (only the score/context matmuls marked
+    /// `kv` contribute). Memoized per `(model, bucket)` — MoE routing
+    /// never touches the attention layers, so the key needs no moe tag.
+    ///
+    /// [`Plan::kv_bytes`]: crate::compiler::plan::Plan::kv_bytes
+    fn kv_step_bytes(&mut self, model: usize, cfg: &DecodeCfg, pos_bucket: u32) -> u64 {
+        let key = (model, pos_bucket);
+        if let Some(&hit) = self.kv_cache.get(&key) {
+            return hit;
+        }
+        let precision = self.sim.precision;
+        let v = decode::decode_step(cfg, pos_bucket, None, 0)
+            .iter()
+            .filter(|l| l.kv)
+            .map(|l| compile_dimc_planned(l, precision).plan.kv_bytes)
+            .sum();
+        self.kv_cache.insert(key, v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+    use crate::dimc::Precision;
+    use crate::serve::TraceShape;
+
+    fn bert_zoo() -> Vec<Workload> {
+        vec![Workload::new("mobilebert", crate::workloads::bert::mobilebert())]
+    }
+
+    fn spec(rps: f64, requests: usize, tokens: u32) -> TrafficSpec {
+        TrafficSpec::at(rps)
+            .requests(requests)
+            .seed(0xBEEF)
+            .max_batch(4)
+            .phase(ServePhase::Decode)
+            .decode_tokens(tokens)
+    }
+
+    #[test]
+    fn position_buckets_round_up_to_sixteen() {
+        assert_eq!(bucket(0), 16);
+        assert_eq!(bucket(1), 16);
+        assert_eq!(bucket(16), 16);
+        assert_eq!(bucket(17), 32);
+        assert_eq!(bucket(128), 128);
+        assert_eq!(bucket(129), 144);
+    }
+
+    #[test]
+    fn decode_conserves_requests_and_tokens() {
+        let zoo = bert_zoo();
+        let mut srv = Server::new(Arch::default(), Precision::Int4, 2);
+        let s = spec(2000.0, 6, 3);
+        let rep = srv.serve_decode_trace(&zoo, &s).unwrap();
+        assert_eq!(rep.completed.len(), 6, "conservation");
+        assert!(rep.completed.iter().all(|r| r.tokens == 4), "1 prefill + 3 decode tokens");
+        let prefill: u64 = rep
+            .batches
+            .iter()
+            .filter(|b| b.phase == ServePhase::Batch)
+            .map(|b| b.size as u64)
+            .sum();
+        let decode: u64 = rep
+            .batches
+            .iter()
+            .filter(|b| b.phase == ServePhase::Decode)
+            .map(|b| b.size as u64)
+            .sum();
+        assert_eq!(prefill, 6, "prefill sizes sum to the request count");
+        assert_eq!(decode, 18, "decode iteration sizes sum to requests x decode_tokens");
+        assert_eq!(rep.itl_samples.len(), 18, "one ITL sample per decoded token");
+        for r in &rep.completed {
+            assert!(r.arrival <= r.dispatched, "{}", r.id);
+            assert!(r.dispatched <= r.first_token, "{}", r.id);
+            assert!(r.first_token < r.completed, "decode must follow prefill");
+        }
+        assert!(rep.kv_read_bytes > 0, "decode streamed no KV bytes");
+        assert!(rep.kv_peak_bytes > 0);
+        assert_eq!(rep.phase, ServePhase::Decode);
+        assert_eq!(rep.decode_tokens, 3);
+    }
+
+    #[test]
+    fn zero_load_ttft_is_the_unbatched_prefill_latency() {
+        let zoo = bert_zoo();
+        let mut srv = Server::new(Arch::default(), Precision::Int4, 2);
+        let prefill = srv.unbatched_latency(&zoo, 0).unwrap();
+        let s = spec(1.0, 1, 2);
+        let arrivals = vec![Request { id: 0, model: 0, arrival: 77 }];
+        let rep = srv.serve_decode_arrivals(&zoo, &s, &arrivals).unwrap();
+        assert_eq!(rep.completed.len(), 1);
+        assert_eq!(rep.completed[0].ttft(), prefill, "TTFT must be exactly the prefill pass");
+        assert_eq!(rep.completed[0].queue_wait(), 0);
+    }
+
+    #[test]
+    fn decode_runs_bit_identically_per_seed() {
+        let zoo = bert_zoo();
+        let s = spec(3000.0, 5, 2).shape(TraceShape::Bursty);
+        let run = |s: &TrafficSpec| {
+            let mut srv = Server::new(Arch::default(), Precision::Int4, 2);
+            srv.serve_decode_trace(&zoo, s).unwrap()
+        };
+        let (a, b) = (run(&s), run(&s));
+        assert_eq!(a.span_cycles, b.span_cycles);
+        assert_eq!(a.kv_read_bytes, b.kv_read_bytes);
+        assert_eq!(a.itl_samples, b.itl_samples);
+        let pairs = a.completed.iter().zip(&b.completed);
+        for (x, y) in pairs {
+            assert_eq!((x.id, x.first_token, x.completed), (y.id, y.first_token, y.completed));
+        }
+    }
+
+    #[test]
+    fn moe_routing_is_deterministic_and_prices_the_active_aggregate() {
+        let zoo = bert_zoo();
+        let mut srv = Server::new(Arch::default(), Precision::Int4, 2);
+        let dense = spec(2000.0, 3, 2);
+        let routed = dense.moe(4, 2);
+        let d = srv.serve_decode_trace(&zoo, &dense).unwrap();
+        let m1 = srv.serve_decode_trace(&zoo, &routed).unwrap();
+        let m2 = srv.serve_decode_trace(&zoo, &routed).unwrap();
+        assert_eq!(m1.span_cycles, m2.span_cycles, "expert sampling must be seeded");
+        assert_eq!(m1.moe, Some(MoeSpec::new(4, 2)));
+        // Two active experts double the FFN volume of every decode step,
+        // so the routed run can never finish faster than the dense one.
+        assert!(
+            m1.span_cycles > d.span_cycles,
+            "moe 2-of-4 span {} not above dense span {}",
+            m1.span_cycles,
+            d.span_cycles
+        );
+        // The attention path is untouched: identical KV traffic.
+        assert_eq!(m1.kv_read_bytes, d.kv_read_bytes);
+    }
+
+    #[test]
+    fn non_transformer_workloads_fault_with_the_valid_names() {
+        let zoo = vec![Workload::new("resnet18", crate::workloads::resnet::resnet18())];
+        let mut srv = Server::new(Arch::default(), Precision::Int4, 2);
+        let s = spec(1000.0, 2, 2);
+        let err = srv.serve_decode_trace(&zoo, &s).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("resnet18"), "{msg}");
+        assert!(msg.contains("vit-b16") && msg.contains("mobilebert"), "{msg}");
+    }
+}

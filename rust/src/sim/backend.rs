@@ -16,7 +16,7 @@
 //! [`Session`](crate::sim::Session)'s dispatch — frontends never change.
 
 use super::report::{LatencyStats, LayerReportRow, RunCheck, RunReport, ServeStats};
-use super::session::{RunSpec, SessionConfig, SessionError};
+use super::session::{validate_traffic, RunSpec, ServeConfig, SessionConfig, SessionError};
 use super::Engine;
 use crate::cluster::exec::{run_functional_cluster, ClusterLayerResult, ClusterSim};
 use crate::cluster::sched::NetworkSchedule;
@@ -34,7 +34,7 @@ use crate::metrics::area::AreaModel;
 use crate::metrics::report::class_count_counters;
 use crate::obs::{StallAttr, StallClass, Timeline};
 use crate::serve::stats::percentile;
-use crate::serve::{Server, TraceConfig};
+use crate::serve::{ServePhase, ServeReport, Server, TraceConfig};
 use std::collections::HashSet;
 
 /// An execution engine the [`Session`](crate::sim::Session) façade can
@@ -332,9 +332,10 @@ impl Backend for SingleCore {
             RunSpec::Functional { layer, seed, shift } => {
                 self.run_functional_spec(cfg, layer, *seed, *shift)
             }
-            RunSpec::Serve => Err(SessionError::Unsupported(
+            RunSpec::Serve(_) => Err(SessionError::Unsupported(
                 "the single-core backend does not serve request traces; configure \
-                 .rps(...) so the session routes RunSpec::Serve to the serving backend"
+                 .traffic(...) so the session routes RunSpec::Serve to the serving \
+                 backend"
                     .to_string(),
             )),
         }
@@ -546,9 +547,10 @@ impl Backend for Cluster {
             RunSpec::Functional { layer, seed, shift } => {
                 self.run_functional_spec(cfg, layer, *seed, *shift)
             }
-            RunSpec::Serve => Err(SessionError::Unsupported(
+            RunSpec::Serve(_) => Err(SessionError::Unsupported(
                 "the cluster backend does not serve request traces; configure \
-                 .rps(...) so the session routes RunSpec::Serve to the serving backend"
+                 .traffic(...) so the session routes RunSpec::Serve to the serving \
+                 backend"
                     .to_string(),
             )),
         }
@@ -662,20 +664,43 @@ impl Serving {
         Serving { server }
     }
 
-    fn run_serve(&mut self, cfg: &SessionConfig) -> Result<RunReport, SessionError> {
-        let sc = cfg.serve.ok_or_else(|| {
-            SessionError::Unsupported(
-                "RunSpec::Serve needs a serving configuration; set .rps(...) on the \
-                 builder"
-                    .to_string(),
-            )
-        })?;
-        let trace =
-            TraceConfig { rps: sc.rps, requests: sc.requests, shape: sc.shape, seed: sc.seed };
-        let report = self.server.serve_trace(&cfg.workloads, sc.policy, &trace)?;
+    fn run_serve(
+        &mut self,
+        cfg: &SessionConfig,
+        over: Option<&crate::serve::TrafficSpec>,
+    ) -> Result<RunReport, SessionError> {
+        // A per-run TrafficSpec override goes through the same validation
+        // rulebook the builder uses; otherwise serve the session's
+        // configured traffic.
+        let sc: ServeConfig = match over {
+            Some(t) => validate_traffic(t, &cfg.workloads)?,
+            None => cfg.serve.ok_or_else(|| {
+                SessionError::Unsupported(
+                    "RunSpec::Serve needs a serving configuration; set \
+                     .traffic(TrafficSpec::at(..)) on the builder or pass \
+                     RunSpec::Serve(Some(spec))"
+                        .to_string(),
+                )
+            })?,
+        };
+        let report = match sc.phase {
+            ServePhase::Batch => {
+                let trace = TraceConfig {
+                    rps: sc.rps,
+                    requests: sc.requests,
+                    shape: sc.shape,
+                    seed: sc.seed,
+                };
+                self.server.serve_trace(&cfg.workloads, sc.policy, &trace)?
+            }
+            ServePhase::Decode => {
+                self.server.serve_decode_trace(&cfg.workloads, &sc.traffic())?
+            }
+        };
 
         // Per-request ops: each completion accounts its model's full
-        // network, so GOPS is true useful throughput over the span.
+        // network (the prefill pass), so GOPS is useful throughput over
+        // the span; decode-token work rides in the token metrics.
         let per_model_ops: Vec<u64> = cfg
             .workloads
             .iter()
@@ -697,6 +722,18 @@ impl Serving {
             mean_ms: report.mean_latency_ms(),
             max_ms: report.ms(lat.last().copied().unwrap_or(0)),
         });
+        let lat_stats = |sorted: &[u64]| LatencyStats {
+            p50_ms: report.ms(percentile(sorted, 50.0)),
+            p95_ms: report.ms(percentile(sorted, 95.0)),
+            p99_ms: report.ms(percentile(sorted, 99.0)),
+            mean_ms: if sorted.is_empty() {
+                0.0
+            } else {
+                report.ms(sorted.iter().sum::<u64>()) / sorted.len() as f64
+            },
+            max_ms: report.ms(sorted.last().copied().unwrap_or(0)),
+        };
+        let decoding = report.phase == ServePhase::Decode;
         rep.serve = Some(ServeStats {
             shape: sc.shape.as_str(),
             seed: sc.seed,
@@ -711,6 +748,15 @@ impl Serving {
             max_batch: sc.policy.max_batch,
             max_wait_cycles: sc.policy.max_wait_cycles,
             tile_utilization: report.tile_utilization(),
+            phase: report.phase.as_str(),
+            decode_tokens: report.decode_tokens,
+            moe_experts: report.moe.map(|m| m.experts),
+            moe_active: report.moe.map(|m| m.active),
+            tokens_per_s: report.tokens_per_s(),
+            kv_read_bytes: report.kv_read_bytes,
+            kv_peak_bytes: report.kv_peak_bytes,
+            ttft: decoding.then(|| lat_stats(&report.ttfts_sorted())),
+            itl: decoding.then(|| lat_stats(&report.itls_sorted())),
         });
 
         // Built-in cross-checks: conservation, causality, batch window.
@@ -727,14 +773,15 @@ impl Serving {
                 sc.requests
             ),
         });
-        let causal = report
-            .completed
-            .iter()
-            .all(|r| r.arrival <= r.dispatched && r.dispatched < r.completed);
+        let causal = report.completed.iter().all(|r| {
+            r.arrival <= r.dispatched
+                && r.dispatched < r.first_token
+                && r.first_token <= r.completed
+        });
         rep.checks.push(RunCheck {
             name: "serve:causality".to_string(),
             ok: causal,
-            detail: "per-request arrival <= dispatch < completion".to_string(),
+            detail: "per-request arrival <= dispatch < first token <= completion".to_string(),
         });
         let windowed = report
             .batches
@@ -745,6 +792,9 @@ impl Serving {
             ok: windowed,
             detail: format!("every batch within 1..={}", sc.policy.max_batch),
         });
+        if decoding {
+            rep.checks.push(phase_conservation_check(&report, &sc));
+        }
 
         if cfg.trace_level.counters_on() {
             let queue_wait: u64 = report.completed.iter().map(|r| r.queue_wait()).sum();
@@ -757,6 +807,20 @@ impl Serving {
             rep.counters.push(("serve.batches".to_string(), report.batches.len() as u64));
             rep.counters.push(("serve.queue_wait_cycles".to_string(), queue_wait));
             rep.counters.push(("serve.service_cycles".to_string(), service));
+            if decoding {
+                let prefill = report
+                    .batches
+                    .iter()
+                    .filter(|b| b.phase == ServePhase::Batch)
+                    .count() as u64;
+                let decode_iters = report.batches.len() as u64 - prefill;
+                let tokens: u64 = report.completed.iter().map(|r| r.tokens as u64).sum();
+                rep.counters.push(("serve.prefill_batches".to_string(), prefill));
+                rep.counters.push(("serve.decode_iterations".to_string(), decode_iters));
+                rep.counters.push(("serve.tokens".to_string(), tokens));
+                rep.counters.push(("serve.kv_read_bytes".to_string(), report.kv_read_bytes));
+                rep.counters.push(("serve.kv_peak_bytes".to_string(), report.kv_peak_bytes));
+            }
             // Per-request span conservation: the queue-wait span plus the
             // in-batch service span must tile the latency span exactly,
             // for every request — the timeline's request track tells the
@@ -803,10 +867,46 @@ impl Backend for Serving {
 
     fn run(&mut self, cfg: &SessionConfig, spec: &RunSpec) -> Result<RunReport, SessionError> {
         match spec {
-            RunSpec::Serve => self.run_serve(cfg),
+            RunSpec::Serve(over) => self.run_serve(cfg, over.as_ref()),
             other => Err(SessionError::Unsupported(format!(
                 "the serving backend only executes RunSpec::Serve (got {other:?})"
             ))),
         }
+    }
+}
+
+/// The decode-serving conservation identity: every request prefills
+/// exactly once, every decode iteration advances each of its members by
+/// exactly one token, and every request ends with `1 + decode_tokens`
+/// tokens. Ties the continuous batcher's per-iteration bookkeeping to
+/// the configured traffic, so a dropped or double-seated request cannot
+/// go unnoticed.
+fn phase_conservation_check(report: &ServeReport, sc: &ServeConfig) -> RunCheck {
+    let prefill_seats: u64 = report
+        .batches
+        .iter()
+        .filter(|b| b.phase == ServePhase::Batch)
+        .map(|b| b.size as u64)
+        .sum();
+    let decode_seats: u64 = report
+        .batches
+        .iter()
+        .filter(|b| b.phase == ServePhase::Decode)
+        .map(|b| b.size as u64)
+        .sum();
+    let want_tokens = 1 + sc.decode.decode_tokens;
+    let per_request_ok = report.completed.iter().all(|r| r.tokens == want_tokens);
+    let requests = sc.requests as u64;
+    let ok = prefill_seats == requests
+        && decode_seats == requests * sc.decode.decode_tokens as u64
+        && per_request_ok;
+    RunCheck {
+        name: "serve:phase-conservation".to_string(),
+        ok,
+        detail: format!(
+            "{prefill_seats} prefill seats for {requests} requests; {decode_seats} \
+             decode seats for {requests} x {} tokens; every request emitted {} tokens",
+            sc.decode.decode_tokens, want_tokens
+        ),
     }
 }

@@ -17,13 +17,17 @@
 //! | request | `cores = 1, batch = 1` | `cores > 1 or batch > 1` |
 //! |---|---|---|
 //! | [`RunSpec::Layer`] / [`RunSpec::Network`] / [`RunSpec::Functional`] | [`SingleCore`] | [`Cluster`] |
-//! | [`RunSpec::Serve`] (needs `.rps(...)`) | [`Serving`] | [`Serving`] |
+//! | [`RunSpec::Serve`] (needs `.traffic(...)`) | [`Serving`] | [`Serving`] |
 //!
-//! The legacy free functions (`coordinator::driver::simulate_layer*`,
-//! `cluster::exec::ClusterSim`, `serve::engine::Server`) remain public as
-//! thin deprecated shims — the backends wrap them — but new code should
-//! come through the façade, and a future backend (e.g. an NMC or
-//! analog-IMC tile model) only has to implement [`Backend`].
+//! Serving is configured through one typed
+//! [`TrafficSpec`](crate::serve::TrafficSpec) handed to
+//! [`SessionBuilder::traffic`]; the old per-knob setters (`.rps(..)`,
+//! `.max_batch(..)`, …) survive as deprecated shims that fold into the
+//! same spec. The lower tiers (`coordinator::driver::simulate_layer_timed`,
+//! `cluster::exec::ClusterSim`, `serve::engine::Server`) remain public —
+//! the backends wrap them — but new code should come through the façade,
+//! and a future backend (e.g. an NMC or analog-IMC tile model) only has
+//! to implement [`Backend`].
 //!
 //! Build a session, run a network, print the unified report:
 //!

@@ -101,9 +101,9 @@ pub struct ServeStats {
     /// Trace seed (reproduces the run bit-for-bit).
     pub seed: u64,
     /// The *configured* offered load in requests per second — the
-    /// session's `.rps(...)` knob, echoed so the run is reproducible
-    /// from the report alone (`offered_rps` below is the empirical
-    /// rate of the generated arrivals).
+    /// session's [`TrafficSpec`](crate::serve::TrafficSpec) rate, echoed
+    /// so the run is reproducible from the report alone (`offered_rps`
+    /// below is the empirical rate of the generated arrivals).
     pub rps: f64,
     /// Requests in the trace.
     pub requests: usize,
@@ -125,6 +125,24 @@ pub struct ServeStats {
     pub max_wait_cycles: u64,
     /// Fraction of aggregate DIMC-tile capacity that did work.
     pub tile_utilization: f64,
+    /// Serving phase the run executed (`batch` / `decode`).
+    pub phase: &'static str,
+    /// Decode tokens generated per request (0 in batch-phase serving).
+    pub decode_tokens: u32,
+    /// Routed experts per MoE layer, when MoE routing was on.
+    pub moe_experts: Option<u32>,
+    /// Active (executed) experts per token, when MoE routing was on.
+    pub moe_active: Option<u32>,
+    /// Emitted-token throughput over the span (0 outside decode).
+    pub tokens_per_s: f64,
+    /// KV-cache bytes streamed through the score/context GEMMs.
+    pub kv_read_bytes: u64,
+    /// Peak resident KV-cache footprint across in-flight requests.
+    pub kv_peak_bytes: u64,
+    /// Time-to-first-token percentiles (decode-phase runs).
+    pub ttft: Option<LatencyStats>,
+    /// Inter-token latency percentiles (decode-phase runs).
+    pub itl: Option<LatencyStats>,
 }
 
 impl ServeStats {
@@ -143,6 +161,23 @@ impl ServeStats {
         j.field_u64("max_batch", self.max_batch as u64);
         j.field_u64("max_wait_cycles", self.max_wait_cycles);
         j.field_f64("tile_utilization", self.tile_utilization);
+        j.field_str("phase", self.phase);
+        j.field_u64("decode_tokens", self.decode_tokens as u64);
+        j.field_opt_u64("moe_experts", self.moe_experts.map(u64::from));
+        j.field_opt_u64("moe_active", self.moe_active.map(u64::from));
+        j.field_f64("tokens_per_s", self.tokens_per_s);
+        j.field_u64("kv_read_bytes", self.kv_read_bytes);
+        j.field_u64("kv_peak_bytes", self.kv_peak_bytes);
+        j.key("ttft");
+        match &self.ttft {
+            Some(l) => l.write_json(j),
+            None => j.null(),
+        }
+        j.key("itl");
+        match &self.itl {
+            Some(l) => l.write_json(j),
+            None => j.null(),
+        }
         j.end_obj();
     }
 }
@@ -332,5 +367,9 @@ pub fn write_load_point(j: &mut JsonBuilder, p: &LoadPoint) {
     j.field_f64("tile_utilization", p.tile_utilization);
     j.field_f64("mean_queue_depth", p.mean_queue_depth);
     j.field_f64("mean_batch", p.mean_batch);
+    j.field_f64("ttft_p50_ms", p.ttft_p50_ms);
+    j.field_f64("ttft_p99_ms", p.ttft_p99_ms);
+    j.field_f64("itl_p50_ms", p.itl_p50_ms);
+    j.field_f64("itl_p99_ms", p.itl_p99_ms);
     j.end_obj();
 }

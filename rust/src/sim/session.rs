@@ -21,8 +21,8 @@ use crate::coordinator::driver::simulate_layer_timed;
 use crate::dimc::Precision;
 use crate::obs::TraceLevel;
 use crate::pipeline::core::SimError;
-use crate::serve::{BatchPolicy, LoadPoint, TraceShape, Workload};
-use crate::workloads::zoo;
+use crate::serve::{BatchPolicy, LoadPoint, ServePhase, TraceShape, TrafficSpec, Workload};
+use crate::workloads::{decode, zoo};
 
 /// Everything that can go wrong building or driving a [`Session`].
 #[derive(Debug)]
@@ -74,13 +74,17 @@ pub enum RunSpec {
         /// Requantization shift applied to the accumulators.
         shift: u8,
     },
-    /// Drain the configured request trace through the serving tier
-    /// (needs `.rps(...)` on the builder).
-    Serve,
+    /// Drain a request trace through the serving tier. `None` serves the
+    /// session's configured traffic (set `.traffic(...)` on the builder);
+    /// `Some` overrides it for this run, validated against the same rules
+    /// at run time.
+    Serve(Option<TrafficSpec>),
 }
 
 /// The serving slice of a session's configuration (present iff
-/// `.rps(...)` was set on the builder).
+/// `.traffic(...)` — or a deprecated per-knob setter — was used on the
+/// builder). Produced only by validation; [`ServeConfig::traffic`]
+/// round-trips it back to the [`TrafficSpec`] it came from.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
     /// Mean offered load in requests per second.
@@ -93,6 +97,105 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Dynamic-batching window.
     pub policy: BatchPolicy,
+    /// Serving phase: single-shot batch serving or autoregressive
+    /// prefill + decode with continuous batching.
+    pub phase: ServePhase,
+    /// Decode-phase parameters (tokens per request, optional MoE routing);
+    /// ignored in batch-phase serving.
+    pub decode: crate::serve::DecodeSpec,
+}
+
+impl ServeConfig {
+    /// Reconstruct the [`TrafficSpec`] this config was validated from.
+    pub fn traffic(&self) -> TrafficSpec {
+        TrafficSpec {
+            rps: self.rps,
+            requests: self.requests,
+            shape: self.shape,
+            seed: self.seed,
+            max_batch: self.policy.max_batch,
+            max_wait_cycles: self.policy.max_wait_cycles,
+            phase: self.phase,
+            decode: self.decode,
+        }
+    }
+}
+
+/// Validate a [`TrafficSpec`] against a resolved workload set — the one
+/// rulebook both the builder (at `build()`) and per-run overrides (at
+/// `run(RunSpec::Serve(Some(..)))`) go through.
+pub(crate) fn validate_traffic(
+    spec: &TrafficSpec,
+    workloads: &[Workload],
+) -> Result<ServeConfig, SessionError> {
+    let rps_ok = spec.rps.is_finite() && spec.rps > 0.0;
+    if !rps_ok {
+        return Err(SessionError::Invalid(format!(
+            "rps must be positive and finite (got {})",
+            spec.rps
+        )));
+    }
+    if spec.requests == 0 {
+        return Err(SessionError::Invalid("requests must be >= 1 (got 0)".to_string()));
+    }
+    if spec.max_batch == 0 {
+        return Err(SessionError::Invalid("max_batch must be >= 1 (got 0)".to_string()));
+    }
+    if workloads.is_empty() {
+        return Err(SessionError::Invalid(
+            "serving needs at least one model: set .model(\"...\") or \
+             .workload(...)"
+                .to_string(),
+        ));
+    }
+    match spec.phase {
+        ServePhase::Batch => {
+            if spec.decode.moe.is_some() {
+                return Err(SessionError::Invalid(
+                    "MoE expert routing is a decode-phase knob; set \
+                     .phase(ServePhase::Decode) on the TrafficSpec"
+                        .to_string(),
+                ));
+            }
+        }
+        ServePhase::Decode => {
+            if spec.decode.decode_tokens == 0 {
+                return Err(SessionError::Invalid(
+                    "decode_tokens must be >= 1 (got 0)".to_string(),
+                ));
+            }
+            if let Some(m) = spec.decode.moe {
+                let moe_ok = m.active >= 1 && m.experts >= m.active;
+                if !moe_ok {
+                    return Err(SessionError::Invalid(format!(
+                        "moe routing needs 1 <= active <= experts (got {}/{})",
+                        m.active, m.experts
+                    )));
+                }
+            }
+            for w in workloads {
+                if decode::lookup(&w.name).is_none() {
+                    let names: Vec<&str> =
+                        decode::decode_models().iter().map(|c| c.name).collect();
+                    return Err(SessionError::Invalid(format!(
+                        "workload `{}` has no decode table; decode-phase serving \
+                         supports: {}",
+                        w.name,
+                        names.join(", ")
+                    )));
+                }
+            }
+        }
+    }
+    Ok(ServeConfig {
+        rps: spec.rps,
+        requests: spec.requests,
+        shape: spec.shape,
+        seed: spec.seed,
+        policy: spec.policy(),
+        phase: spec.phase,
+        decode: spec.decode,
+    })
 }
 
 /// A validated session configuration (what [`SessionBuilder::build`]
@@ -168,6 +271,7 @@ pub struct SessionBuilder {
     cores: u32,
     batch: u32,
     workloads: Vec<WorkloadSpec>,
+    traffic: Option<TrafficSpec>,
     rps: Option<f64>,
     requests: Option<usize>,
     shape: Option<TraceShape>,
@@ -188,6 +292,7 @@ impl SessionBuilder {
             cores: 1,
             batch: 1,
             workloads: Vec::new(),
+            traffic: None,
             rps: None,
             requests: None,
             shape: None,
@@ -260,31 +365,60 @@ impl SessionBuilder {
         self.workload(Workload::new(name, layers))
     }
 
-    /// Serve traffic at this mean request rate (enables [`RunSpec::Serve`]).
+    /// Configure serving from one typed [`TrafficSpec`] (enables
+    /// [`RunSpec::Serve`]). This is the single serving entry point: every
+    /// arrival, batching, phase, decode and MoE knob rides on the spec
+    /// and the combination is validated as a unit at [`build`].
+    ///
+    /// [`build`]: SessionBuilder::build
+    ///
+    /// ```
+    /// use dimc_rvv::serve::{ServePhase, TrafficSpec};
+    /// use dimc_rvv::sim::Session;
+    ///
+    /// let s = Session::builder()
+    ///     .cores(2)
+    ///     .model("mobilebert")
+    ///     .traffic(TrafficSpec::at(500.0).phase(ServePhase::Decode).decode_tokens(16))
+    ///     .build()
+    ///     .unwrap();
+    /// assert_eq!(s.config().serve.unwrap().decode.decode_tokens, 16);
+    /// ```
+    pub fn traffic(mut self, spec: TrafficSpec) -> Self {
+        self.traffic = Some(spec);
+        self
+    }
+
+    /// Serve traffic at this mean request rate.
+    #[deprecated(note = "configure serving through .traffic(TrafficSpec::at(rps)...)")]
     pub fn rps(mut self, rps: f64) -> Self {
         self.rps = Some(rps);
         self
     }
 
     /// Requests in the generated serving trace (default: 512).
+    #[deprecated(note = "configure serving through .traffic(TrafficSpec::at(rps).requests(n))")]
     pub fn requests(mut self, n: usize) -> Self {
         self.requests = Some(n);
         self
     }
 
     /// Arrival-trace shape (default: uniform Poisson).
+    #[deprecated(note = "configure serving through .traffic(TrafficSpec::at(rps).shape(shape))")]
     pub fn trace(mut self, shape: TraceShape) -> Self {
         self.shape = Some(shape);
         self
     }
 
     /// Serving trace seed (default: `0xD1AC`).
+    #[deprecated(note = "configure serving through .traffic(TrafficSpec::at(rps).seed(seed))")]
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = Some(seed);
         self
     }
 
     /// Largest batch the dynamic batcher dispatches (default: 8).
+    #[deprecated(note = "configure serving through .traffic(TrafficSpec::at(rps).max_batch(n))")]
     pub fn max_batch(mut self, n: u32) -> Self {
         self.max_batch = Some(n);
         self
@@ -292,6 +426,9 @@ impl SessionBuilder {
 
     /// Longest a request may head its queue before forced dispatch
     /// (default: 0 — greedy batching).
+    #[deprecated(
+        note = "configure serving through .traffic(TrafficSpec::at(rps).max_wait_cycles(c))"
+    )]
     pub fn max_wait_cycles(mut self, cycles: u64) -> Self {
         self.max_wait = Some(cycles);
         self
@@ -329,12 +466,20 @@ impl SessionBuilder {
             return Err(SessionError::Invalid("batch must be >= 1 (got 0)".to_string()));
         }
 
-        let serve_intent = self.rps.is_some()
+        let legacy_intent = self.rps.is_some()
             || self.requests.is_some()
             || self.shape.is_some()
             || self.seed.is_some()
             || self.max_batch.is_some()
             || self.max_wait.is_some();
+        if self.traffic.is_some() && legacy_intent {
+            return Err(SessionError::Invalid(
+                "both .traffic(...) and a deprecated per-knob serving setter were \
+                 used; configure serving through .traffic(TrafficSpec) alone"
+                    .to_string(),
+            ));
+        }
+        let serve_intent = legacy_intent || self.traffic.is_some();
 
         if self.engine == Engine::Baseline && (self.cores > 1 || self.batch > 1) {
             return Err(SessionError::Invalid(
@@ -392,47 +537,43 @@ impl SessionBuilder {
             }
         }
 
-        let serve = if serve_intent {
+        // Both entry points — the typed spec and the deprecated per-knob
+        // setters — funnel into the same TrafficSpec and the same
+        // validation, so the legacy path stays bit-identical by
+        // construction: the spec's defaults ARE the old setter defaults.
+        let spec = if let Some(t) = self.traffic {
+            Some(t)
+        } else if legacy_intent {
             let Some(rps) = self.rps else {
                 return Err(SessionError::Invalid(
-                    "serving parameters were set without a request rate; call \
-                     .rps(...) to configure serving"
+                    "serving parameters were set without a request rate; \
+                     configure serving through .traffic(TrafficSpec::at(rps))"
                         .to_string(),
                 ));
             };
-            let rps_ok = rps.is_finite() && rps > 0.0;
-            if !rps_ok {
-                return Err(SessionError::Invalid(format!(
-                    "rps must be positive and finite (got {rps})"
-                )));
+            let mut t = TrafficSpec::at(rps);
+            if let Some(n) = self.requests {
+                t.requests = n;
             }
-            let requests = self.requests.unwrap_or(512);
-            if requests == 0 {
-                return Err(SessionError::Invalid("requests must be >= 1 (got 0)".to_string()));
+            if let Some(s) = self.shape {
+                t.shape = s;
             }
-            let max_batch = self.max_batch.unwrap_or(8);
-            if max_batch == 0 {
-                return Err(SessionError::Invalid("max_batch must be >= 1 (got 0)".to_string()));
+            if let Some(s) = self.seed {
+                t.seed = s;
             }
-            if workloads.is_empty() {
-                return Err(SessionError::Invalid(
-                    "serving needs at least one model: set .model(\"...\") or \
-                     .workload(...)"
-                        .to_string(),
-                ));
+            if let Some(b) = self.max_batch {
+                t.max_batch = b;
             }
-            Some(ServeConfig {
-                rps,
-                requests,
-                shape: self.shape.unwrap_or(TraceShape::Uniform),
-                seed: self.seed.unwrap_or(0xD1AC),
-                policy: BatchPolicy {
-                    max_batch,
-                    max_wait_cycles: self.max_wait.unwrap_or(0),
-                },
-            })
+            if let Some(w) = self.max_wait {
+                t.max_wait_cycles = w;
+            }
+            Some(t)
         } else {
             None
+        };
+        let serve = match &spec {
+            Some(t) => Some(validate_traffic(t, &workloads)?),
+            None => None,
         };
 
         Ok(Session {
@@ -488,11 +629,19 @@ impl Session {
     pub fn run(&mut self, spec: &RunSpec) -> Result<RunReport, SessionError> {
         let Session { cfg, single, cluster, serving } = self;
         match spec {
-            RunSpec::Serve => {
-                if cfg.serve.is_none() {
+            RunSpec::Serve(over) => {
+                if cfg.engine == Engine::Baseline {
                     return Err(SessionError::Unsupported(
-                        "RunSpec::Serve needs a serving configuration; set .rps(...) \
-                         on the builder"
+                        "the serving tier runs on the DIMC cluster; baseline sessions \
+                         cannot serve traffic"
+                            .to_string(),
+                    ));
+                }
+                if cfg.serve.is_none() && over.is_none() {
+                    return Err(SessionError::Unsupported(
+                        "RunSpec::Serve needs a serving configuration; set \
+                         .traffic(TrafficSpec::at(..)) on the builder or pass \
+                         RunSpec::Serve(Some(spec))"
                             .to_string(),
                     ));
                 }
@@ -688,22 +837,14 @@ impl Session {
         let Session { cfg, serving, .. } = self;
         let sc = Self::serve_config(cfg)?;
         let b = serving.get_or_insert_with(|| Serving::new(cfg));
-        Ok(crate::serve::sweep::load_sweep(
-            &mut b.server,
-            &cfg.workloads,
-            sc.policy,
-            sc.shape,
-            sc.seed,
-            sc.requests,
-            ladder,
-        )?)
+        Ok(crate::serve::sweep::load_sweep(&mut b.server, &cfg.workloads, &sc.traffic(), ladder)?)
     }
 
     fn serve_config(cfg: &SessionConfig) -> Result<ServeConfig, SessionError> {
         cfg.serve.ok_or_else(|| {
             SessionError::Unsupported(
-                "this request needs a serving configuration; set .rps(...) on the \
-                 builder"
+                "this request needs a serving configuration; set \
+                 .traffic(TrafficSpec::at(..)) on the builder"
                     .to_string(),
             )
         })
@@ -743,6 +884,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // the deprecated per-knob path must keep working
     fn serve_defaults_fill_in_when_rps_is_set() {
         let s = Session::builder()
             .layers("t", vec![LayerConfig::fc("f", 64, 10)])
@@ -754,6 +896,60 @@ mod tests {
         assert_eq!(sc.policy.max_batch, 8);
         assert_eq!(sc.policy.max_wait_cycles, 0);
         assert_eq!(sc.shape, TraceShape::Uniform);
+        assert_eq!(sc.phase, ServePhase::Batch);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_setters_and_traffic_produce_the_same_serve_config() {
+        let legacy = Session::builder()
+            .layers("t", vec![LayerConfig::fc("f", 64, 10)])
+            .rps(250.0)
+            .requests(64)
+            .seed(7)
+            .max_batch(4)
+            .build()
+            .unwrap();
+        let typed = Session::builder()
+            .layers("t", vec![LayerConfig::fc("f", 64, 10)])
+            .traffic(TrafficSpec::at(250.0).requests(64).seed(7).max_batch(4))
+            .build()
+            .unwrap();
+        let (l, t) = (legacy.config().serve.unwrap(), typed.config().serve.unwrap());
+        assert_eq!(l.traffic(), t.traffic(), "the two entry points must agree exactly");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn mixing_traffic_with_legacy_setters_is_rejected() {
+        let e = Session::builder()
+            .layers("t", vec![LayerConfig::fc("f", 64, 10)])
+            .traffic(TrafficSpec::at(100.0))
+            .max_batch(4)
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, SessionError::Invalid(_)), "{e}");
+        assert!(format!("{e}").contains(".traffic"), "{e}");
+    }
+
+    #[test]
+    fn decode_traffic_validates_the_workload_set_and_moe_knobs() {
+        let decode = |spec: TrafficSpec, model: &str| {
+            Session::builder().cores(2).model(model).traffic(spec).build()
+        };
+        let dec = TrafficSpec::at(100.0).phase(ServePhase::Decode);
+        assert!(decode(dec, "mobilebert").is_ok());
+        // Decode needs a per-position layer table; resnet18 has none.
+        let e = decode(dec, "resnet18").unwrap_err();
+        assert!(format!("{e}").contains("decode"), "{e}");
+        assert!(format!("{e}").contains("mobilebert"), "names the valid set: {e}");
+        // MoE routing is decode-only, and active may not exceed experts.
+        let e = decode(TrafficSpec::at(100.0).moe(8, 2), "mobilebert").unwrap_err();
+        assert!(format!("{e}").contains("decode-phase"), "{e}");
+        let e = decode(dec.moe(2, 4), "mobilebert").unwrap_err();
+        assert!(format!("{e}").contains("active <= experts"), "{e}");
+        let e = decode(dec.decode_tokens(0), "mobilebert").unwrap_err();
+        assert!(format!("{e}").contains("decode_tokens"), "{e}");
     }
 
     #[test]

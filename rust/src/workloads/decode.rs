@@ -1,0 +1,335 @@
+//! Decode-phase (autoregressive) workload generator for the zoo's
+//! transformer models.
+//!
+//! Prefill runs the model's ordinary layer table (the [`super::vit`] /
+//! [`super::bert`] tables, sequence-length `M`); after that every
+//! generated token is one *decode step*: the same per-block GEMMs at
+//! batch 1 (`M = 1`), except that the attention score/context matmuls
+//! shrink to GEMV shape and grow with the sequence position — at
+//! position `p` the score matmul is `1 x p x head_dim` against the
+//! cached `K` matrix and the context matmul is `1 x head_dim x p`
+//! against the cached `V` matrix. Those two layers are emitted with
+//! [`LayerConfig::gemm_kv`], so the derived
+//! [`Plan`](crate::compiler::plan::Plan) classifies their weight-load
+//! bytes as KV-cache reads and serving-tier KV accounting stays unified
+//! with the traffic/energy model.
+//!
+//! The optional routed-expert (MoE) variant replaces each dense FFN
+//! pair with a [`LayerConfig::moe_gemm`] pair in which only a
+//! seeded-sampled subset of the expert bank executes per token (see
+//! [`sample_experts`]); the drawn expert ids are recorded in the layer
+//! names for reproducibility but cannot affect cost, because experts
+//! share one shape.
+//!
+//! Softmax/layernorm/residuals still run on the vector core (paper
+//! assumption 6), and the classification/LM head is a prefill-table
+//! concern, so a decode step is the bare per-token encoder stack.
+
+use crate::compiler::layer::LayerConfig;
+use crate::compiler::pack::Lcg;
+
+/// Routed-expert (MoE) configuration for the decode FFN: `active` of
+/// `experts` same-shape expert FFNs execute per token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoeSpec {
+    /// Experts in the routed bank.
+    pub experts: u32,
+    /// Experts the router activates per token (clamped to `1..=experts`).
+    pub active: u32,
+}
+
+impl MoeSpec {
+    pub fn new(experts: u32, active: u32) -> Self {
+        MoeSpec { experts, active }
+    }
+}
+
+/// Per-block decode geometry of a transformer model: everything needed
+/// to emit one decode step at an arbitrary sequence position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeCfg {
+    /// Canonical zoo model name this decode table belongs to.
+    pub name: &'static str,
+    /// Encoder blocks.
+    pub blocks: u32,
+    /// Residual-stream width entering each block.
+    pub body: u32,
+    /// Attention width (the bottleneck width for MobileBERT-class
+    /// models; equals `body` for un-bottlenecked models).
+    pub model_dim: u32,
+    pub heads: u32,
+    pub head_dim: u32,
+    /// FFN hidden width (per expert under MoE).
+    pub ffn_hidden: u32,
+    /// Stacked FFN pairs per block (MobileBERT stacks four).
+    pub ffn_stack: u32,
+    /// Whether each block projects `body -> model_dim` in and back out.
+    pub bottlenecked: bool,
+    /// Prefill sequence length of the zoo table (decode positions start
+    /// at `prompt_tokens + 1`).
+    pub prompt_tokens: u32,
+}
+
+/// Decode tables for the zoo's transformer models. Geometry mirrors the
+/// prefill tables in [`super::vit`] / [`super::bert`] exactly (the
+/// cross-check tests below pin them together).
+pub fn decode_models() -> Vec<DecodeCfg> {
+    vec![
+        DecodeCfg {
+            name: "vit-b16",
+            blocks: 12,
+            body: 768,
+            model_dim: 768,
+            heads: 12,
+            head_dim: 64,
+            ffn_hidden: 3072,
+            ffn_stack: 1,
+            bottlenecked: false,
+            prompt_tokens: 197,
+        },
+        DecodeCfg {
+            name: "mobilebert",
+            blocks: 24,
+            body: 512,
+            model_dim: 128,
+            heads: 4,
+            head_dim: 32,
+            ffn_hidden: 512,
+            ffn_stack: 4,
+            bottlenecked: true,
+            prompt_tokens: 128,
+        },
+    ]
+}
+
+/// Look a decode table up by model name (case-insensitively, `-`/`_`
+/// interchangeable, like [`super::lookup`]). `None` means the model has
+/// no decode phase (the CNN zoo).
+pub fn lookup(name: &str) -> Option<DecodeCfg> {
+    let want = super::zoo::canon(name);
+    decode_models().into_iter().find(|c| c.name == want)
+}
+
+/// Deterministically draw the `active` distinct expert ids for one
+/// (seed, block, position) routing decision: a partial Fisher–Yates
+/// shuffle over `0..experts` on the repo's seeded generator, returned
+/// sorted. Pure function of its arguments — re-running a trace with the
+/// same seed reproduces every routing decision bit-identically.
+pub fn sample_experts(seed: u64, block: u32, pos: u32, experts: u32, active: u32) -> Vec<u32> {
+    let experts = experts.max(1);
+    let active = active.clamp(1, experts);
+    let mut r = Lcg::new(seed ^ 0xE09E_0000_0000_0000 ^ ((block as u64) << 32) ^ pos as u64);
+    let mut ids: Vec<u32> = (0..experts).collect();
+    for i in 0..active as usize {
+        let j = i + r.below((experts as usize - i) as u64) as usize;
+        ids.swap(i, j);
+    }
+    ids.truncate(active as usize);
+    ids.sort_unstable();
+    ids
+}
+
+/// Label fragment naming a drawn expert set, e.g. `e3+e7`.
+fn expert_label(ids: &[u32]) -> String {
+    ids.iter().map(|e| format!("e{e}")).collect::<Vec<_>>().join("+")
+}
+
+/// One decode step: the per-token layer sequence of the whole encoder
+/// stack at sequence position `pos` (the number of tokens in context,
+/// including the one being generated; `pos >= 1`). Score/context
+/// matmuls are KV-marked GEMVs growing with `pos`; with `moe` set, each
+/// dense FFN pair becomes a routed-expert pair whose expert ids are
+/// drawn by [`sample_experts`] from `seed` and recorded in the layer
+/// names.
+pub fn decode_step(cfg: &DecodeCfg, pos: u32, moe: Option<MoeSpec>, seed: u64) -> Vec<LayerConfig> {
+    let pos = pos.max(1);
+    let per_block = 2 * cfg.heads as usize + 2 + 2 * cfg.ffn_stack as usize + 2;
+    let mut v = Vec::with_capacity(cfg.blocks as usize * per_block);
+    for b in 0..cfg.blocks {
+        if cfg.bottlenecked {
+            v.push(LayerConfig::gemm_fused(
+                &format!("b{b}.bneck_in"),
+                1,
+                cfg.model_dim,
+                cfg.body,
+                true,
+                false,
+            ));
+        }
+        v.push(LayerConfig::gemm_fused(
+            &format!("b{b}.qkv"),
+            1,
+            3 * cfg.heads * cfg.head_dim,
+            cfg.model_dim,
+            true,
+            false,
+        ));
+        for h in 0..cfg.heads {
+            // s = q K^T: [1 x head_dim] x [head_dim x pos] — K is the cache.
+            v.push(LayerConfig::gemm_kv(&format!("b{b}.h{h}.score"), 1, pos, cfg.head_dim));
+            // c = softmax(s) V: [1 x pos] x [pos x head_dim] — V is the cache.
+            v.push(LayerConfig::gemm_kv(&format!("b{b}.h{h}.ctx"), 1, cfg.head_dim, pos));
+        }
+        v.push(LayerConfig::gemm_fused(
+            &format!("b{b}.proj"),
+            1,
+            cfg.model_dim,
+            cfg.heads * cfg.head_dim,
+            true,
+            false,
+        ));
+        for j in 0..cfg.ffn_stack {
+            match moe {
+                Some(m) => {
+                    let ids = sample_experts(seed, b, pos, m.experts, m.active);
+                    let tag = expert_label(&ids);
+                    v.push(LayerConfig::moe_gemm(
+                        &format!("b{b}.moe{j}[{tag}].up"),
+                        1,
+                        cfg.ffn_hidden,
+                        cfg.model_dim,
+                        m.experts,
+                        m.active,
+                        true,
+                        true,
+                    ));
+                    v.push(LayerConfig::moe_gemm(
+                        &format!("b{b}.moe{j}[{tag}].down"),
+                        1,
+                        cfg.model_dim,
+                        cfg.ffn_hidden,
+                        m.experts,
+                        m.active,
+                        true,
+                        false,
+                    ));
+                }
+                None => {
+                    v.push(LayerConfig::gemm_fused(
+                        &format!("b{b}.ffn{j}a"),
+                        1,
+                        cfg.ffn_hidden,
+                        cfg.model_dim,
+                        true,
+                        true,
+                    ));
+                    v.push(LayerConfig::gemm_fused(
+                        &format!("b{b}.ffn{j}b"),
+                        1,
+                        cfg.model_dim,
+                        cfg.ffn_hidden,
+                        true,
+                        false,
+                    ));
+                }
+            }
+        }
+        if cfg.bottlenecked {
+            v.push(LayerConfig::gemm_fused(
+                &format!("b{b}.bneck_out"),
+                1,
+                cfg.body,
+                cfg.model_dim,
+                true,
+                false,
+            ));
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(name: &str) -> DecodeCfg {
+        lookup(name).unwrap()
+    }
+
+    #[test]
+    fn decode_tables_cover_the_transformers_and_nothing_else() {
+        assert_eq!(lookup("vit-b16").unwrap().name, "vit-b16");
+        assert_eq!(lookup("ViT_B16").unwrap().name, "vit-b16");
+        assert_eq!(lookup("MobileBERT").unwrap().name, "mobilebert");
+        assert!(lookup("resnet50").is_none());
+    }
+
+    #[test]
+    fn vit_decode_step_is_gemv_shaped_and_grows_with_position() {
+        let c = cfg("vit-b16");
+        let step = decode_step(&c, 198, None, 7);
+        // 12 blocks x (qkv + 24 head matmuls + proj + ffn pair)
+        assert_eq!(step.len(), 12 * 28);
+        assert!(step.iter().all(|l| l.is_gemm() && l.gemm_m() == 1), "decode is batch-1");
+        let score = step.iter().find(|l| l.name == "b0.h0.score").unwrap();
+        assert!(score.kv);
+        assert_eq!((score.gemm_n(), score.gemm_k()), (198, 64));
+        let ctx = step.iter().find(|l| l.name == "b0.h0.ctx").unwrap();
+        assert!(ctx.kv);
+        assert_eq!((ctx.gemm_n(), ctx.gemm_k()), (64, 198));
+        // KV-marked layers are exactly the per-head score/context pairs.
+        assert_eq!(step.iter().filter(|l| l.kv).count(), 12 * 24);
+        // The position-independent layers match the prefill table widths.
+        let qkv = step.iter().find(|l| l.name == "b0.qkv").unwrap();
+        let prefill = super::super::vit::vit_b16();
+        let pre_qkv = prefill.iter().find(|l| l.name == "b0.qkv").unwrap();
+        assert_eq!((qkv.gemm_n(), qkv.gemm_k()), (pre_qkv.gemm_n(), pre_qkv.gemm_k()));
+    }
+
+    #[test]
+    fn mobilebert_decode_step_keeps_the_bottleneck() {
+        let c = cfg("mobilebert");
+        let step = decode_step(&c, 129, None, 7);
+        // 24 blocks x (bneck_in + qkv + 8 head matmuls + proj + 4 ffn pairs + bneck_out)
+        assert_eq!(step.len(), 24 * 20);
+        let bneck = step.iter().find(|l| l.name == "b0.bneck_in").unwrap();
+        assert_eq!((bneck.gemm_n(), bneck.gemm_k()), (128, 512));
+        let prefill = super::super::bert::mobilebert();
+        let pre = prefill.iter().find(|l| l.name == "b0.ffn0a").unwrap();
+        let ffn = step.iter().find(|l| l.name == "b0.ffn0a").unwrap();
+        assert_eq!((ffn.gemm_n(), ffn.gemm_k()), (pre.gemm_n(), pre.gemm_k()));
+    }
+
+    #[test]
+    fn expert_sampling_is_deterministic_distinct_and_in_range() {
+        let a = sample_experts(0xD1AC, 3, 200, 8, 2);
+        let b = sample_experts(0xD1AC, 3, 200, 8, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+        assert!(a[0] < a[1] && a[1] < 8, "{a:?}");
+        // Distinct (seed, block, pos) tuples decorrelate the draw: over
+        // many positions every expert id must appear at least once.
+        let mut seen = [false; 8];
+        for pos in 1..200 {
+            for e in sample_experts(0xD1AC, 0, pos, 8, 2) {
+                seen[e as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+        // Degenerate requests clamp instead of panicking.
+        assert_eq!(sample_experts(1, 0, 1, 4, 9), vec![0, 1, 2, 3]);
+        assert_eq!(sample_experts(1, 0, 1, 1, 1), vec![0]);
+    }
+
+    #[test]
+    fn moe_step_records_ids_in_names_but_prices_independently_of_them() {
+        let c = cfg("vit-b16");
+        let moe = Some(MoeSpec::new(8, 2));
+        let a = decode_step(&c, 50, moe, 1);
+        let b = decode_step(&c, 50, moe, 2);
+        let up_a = a.iter().find(|l| l.name.contains(".moe0[") && l.name.ends_with(".up"));
+        let up_a = up_a.unwrap();
+        // Active aggregate: n = 2 x 3072 against the 768-wide stream.
+        assert_eq!((up_a.gemm_n(), up_a.gemm_k()), (2 * 3072, 768));
+        // Different seeds draw different experts (names differ) but the
+        // step prices identically — expert ids cannot change cost.
+        assert_ne!(
+            a.iter().map(|l| l.name.clone()).collect::<Vec<_>>(),
+            b.iter().map(|l| l.name.clone()).collect::<Vec<_>>()
+        );
+        let macs = |s: &[LayerConfig]| s.iter().map(|l| l.macs()).sum::<u64>();
+        let ops = |s: &[LayerConfig]| s.iter().map(|l| l.ops()).sum::<u64>();
+        assert_eq!(macs(&a), macs(&b));
+        assert_eq!(ops(&a), ops(&b));
+    }
+}

@@ -12,6 +12,7 @@
 
 pub mod alexnet;
 pub mod bert;
+pub mod decode;
 pub mod densenet;
 pub mod efficientnet;
 pub mod inception;
@@ -21,4 +22,4 @@ pub mod vgg;
 pub mod vit;
 pub mod zoo;
 
-pub use zoo::{all_models, lookup, model_by_name, Model, UnknownModel};
+pub use zoo::{all_models, lookup, Model, UnknownModel};

@@ -63,7 +63,7 @@ impl std::error::Error for UnknownModel {}
 
 /// Canonical comparison form of a model name: ASCII-lowercased with `_`
 /// folded into `-`, so `ViT_B16` resolves to `vit-b16`.
-fn canon(name: &str) -> String {
+pub(crate) fn canon(name: &str) -> String {
     name.chars()
         .map(|c| if c == '_' { '-' } else { c.to_ascii_lowercase() })
         .collect()
@@ -83,14 +83,6 @@ pub fn lookup(name: &str) -> Result<Model, UnknownModel> {
             valid: models.iter().map(|m| m.name).collect(),
         }),
     }
-}
-
-/// Look a model up by exact name.
-///
-/// Deprecated shim: prefer [`lookup`], which matches case-insensitively
-/// and reports the valid names on failure.
-pub fn model_by_name(name: &str) -> Option<Model> {
-    all_models().into_iter().find(|m| m.name == name)
 }
 
 /// All zoo layers flattened (the paper's "over 450 convolutional layers").
@@ -125,9 +117,9 @@ mod tests {
 
     #[test]
     fn lookup_by_name() {
-        assert!(model_by_name("resnet50").is_some());
-        assert!(model_by_name("mobilenet-50-192").is_some());
-        assert!(model_by_name("nope").is_none());
+        assert!(lookup("resnet50").is_ok());
+        assert!(lookup("mobilenet-50-192").is_ok());
+        assert!(lookup("nope").is_err());
     }
 
     #[test]

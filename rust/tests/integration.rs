@@ -2,16 +2,21 @@
 //! the functional simulator, the figure sweeps' shapes, zoo spot checks,
 //! and the CLI surface.
 
+use dimc_rvv::arch::Arch;
 use dimc_rvv::compiler::layer::LayerConfig;
 use dimc_rvv::compiler::pack::{synth_wts, Lcg};
 use dimc_rvv::coordinator::driver::{
-    reference_outputs, run_functional, simulate_layer, Engine,
+    reference_outputs, run_functional, simulate_layer_timed, Engine, LayerResult, Timing,
 };
 use dimc_rvv::coordinator::figures;
 use dimc_rvv::dimc::Precision;
 use dimc_rvv::metrics::area::AreaModel;
 use dimc_rvv::metrics::report::layer_row;
 use dimc_rvv::workloads::resnet;
+
+fn sim_at(l: &LayerConfig, engine: Engine, p: Precision) -> LayerResult {
+    simulate_layer_timed(l, engine, p, Arch::default(), Timing::Interpreter).unwrap()
+}
 
 /// Chain a small CNN end-to-end through the DIMC engine: each layer's
 /// quantized outputs (already 4-bit post-ReLU) feed the next layer's
@@ -86,8 +91,8 @@ fn zoo_spot_checks_dimc_always_wins() {
     // one representative layer per model family (full sweep is the bench)
     for m in all_models().iter().take(8) {
         let l = &m.layers[m.layers.len() / 2];
-        let d = simulate_layer(l, Engine::Dimc).unwrap();
-        let b = simulate_layer(l, Engine::Baseline).unwrap();
+        let d = sim_at(l, Engine::Dimc, Precision::Int4);
+        let b = sim_at(l, Engine::Baseline, Precision::Int4);
         assert!(
             b.cycles > d.cycles,
             "{}: DIMC must outperform baseline on {}",
@@ -99,11 +104,10 @@ fn zoo_spot_checks_dimc_always_wins() {
 
 #[test]
 fn precision_modes_trade_tiles_for_lanes() {
-    use dimc_rvv::coordinator::driver::simulate_layer_at;
     let l = LayerConfig::conv("p", 128, 32, 3, 3, 14, 14, 1, 1);
-    let r4 = simulate_layer_at(&l, Engine::Dimc, Precision::Int4).unwrap();
-    let r2 = simulate_layer_at(&l, Engine::Dimc, Precision::Int2).unwrap();
-    let r1 = simulate_layer_at(&l, Engine::Dimc, Precision::Int1).unwrap();
+    let r4 = sim_at(&l, Engine::Dimc, Precision::Int4);
+    let r2 = sim_at(&l, Engine::Dimc, Precision::Int2);
+    let r1 = sim_at(&l, Engine::Dimc, Precision::Int1);
     // halving precision halves the tile count -> fewer cycles
     assert!(r2.cycles < r4.cycles);
     assert!(r1.cycles < r2.cycles);
@@ -123,7 +127,6 @@ fn cli_simulate_smoke() {
 
 #[test]
 fn traced_run_matches_plain_run() {
-    use dimc_rvv::arch::Arch;
     use dimc_rvv::isa::asm::assemble;
     use dimc_rvv::pipeline::core::Core;
     let prog = assemble(
@@ -207,7 +210,7 @@ fn baseline_never_emits_custom_instructions() {
 fn dimc_stream_is_dominated_by_dc_ops_on_big_kernels() {
     // Fig. 6's thesis: compute dominates when kernels fill the tile.
     let l = LayerConfig::conv("dom", 256, 32, 3, 3, 14, 14, 1, 1);
-    let d = simulate_layer(&l, Engine::Dimc).unwrap();
+    let d = sim_at(&l, Engine::Dimc, Precision::Int4);
     let (compute, load, store) = d.distribution();
     assert!(compute > 0.5, "compute fraction only {compute:.2}");
     assert!(compute > load && compute > store);

@@ -18,8 +18,15 @@ use dimc_rvv::cluster::shard::{ShardPlan, ShardStrategy};
 use dimc_rvv::cluster::topology::ClusterTopology;
 use dimc_rvv::compiler::layer::LayerConfig;
 use dimc_rvv::compiler::pack::{synth_acts, synth_wts, Lcg};
-use dimc_rvv::coordinator::driver::{run_functional, simulate_layer, Engine};
+use dimc_rvv::coordinator::driver::{
+    run_functional, simulate_layer_timed, Engine, LayerResult, Timing,
+};
 use dimc_rvv::dimc::Precision;
+
+fn single_core(l: &LayerConfig) -> LayerResult {
+    simulate_layer_timed(l, Engine::Dimc, Precision::Int4, Arch::default(), Timing::Interpreter)
+        .unwrap()
+}
 
 fn random_layer(r: &mut Lcg, tag: u64) -> LayerConfig {
     let kh = 1 + r.below(3) as u32;
@@ -149,7 +156,7 @@ fn one_core_cluster_cycles_match_single_core() {
     let topo = ClusterTopology::from_arch(1, &Arch::default());
     for tag in 0..8u64 {
         let l = random_layer(&mut r, tag);
-        let single = simulate_layer(&l, Engine::Dimc).unwrap();
+        let single = single_core(&l);
         let clustered = sim.simulate_layer_cluster(&l, &topo).unwrap();
         assert_eq!(clustered.cycles, single.cycles, "{l}");
         assert_eq!(clustered.cores_used, 1, "{l}");
@@ -210,7 +217,7 @@ fn cluster_never_slower_than_single_core() {
     for tag in 0..8u64 {
         let l = random_layer(&mut r, tag);
         let cores = 2 + r.below(7) as u32;
-        let single = simulate_layer(&l, Engine::Dimc).unwrap();
+        let single = single_core(&l);
         let clustered =
             sim.simulate_layer_cluster(&l, &ClusterTopology::from_arch(cores, &arch)).unwrap();
         assert!(

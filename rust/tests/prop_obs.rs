@@ -11,6 +11,7 @@ use dimc_rvv::compiler::layer::LayerConfig;
 use dimc_rvv::compiler::pack::Lcg;
 use dimc_rvv::coordinator::driver::{compile_for, timed_stats_obs, Engine, Timing};
 use dimc_rvv::dimc::Precision;
+use dimc_rvv::serve::TrafficSpec;
 use dimc_rvv::sim::{RunSpec, Session, TraceLevel};
 
 const PRECISIONS: [Precision; 3] = [Precision::Int4, Precision::Int2, Precision::Int1];
@@ -227,12 +228,11 @@ fn serve_spans_sum_to_latencies_and_depth_samples_are_monotone() {
     let mut s = Session::builder()
         .model("resnet18")
         .cores(2)
-        .rps(2000.0)
-        .requests(64)
+        .traffic(TrafficSpec::at(2000.0).requests(64))
         .trace_level(TraceLevel::Full)
         .build()
         .unwrap();
-    let rep = s.run(&RunSpec::Serve).unwrap();
+    let rep = s.run(&RunSpec::Serve(None)).unwrap();
     let check = rep
         .checks
         .iter()
@@ -277,12 +277,11 @@ fn serving_off_is_bit_identical_to_counters_and_full() {
         let mut s = Session::builder()
             .model("resnet18")
             .cores(2)
-            .rps(1500.0)
-            .requests(48)
+            .traffic(TrafficSpec::at(1500.0).requests(48))
             .trace_level(level)
             .build()
             .unwrap();
-        let rep = s.run(&RunSpec::Serve).unwrap();
+        let rep = s.run(&RunSpec::Serve(None)).unwrap();
         assert!(rep.checks_ok(), "@{level:?}: {:?}", rep.checks);
         cycles.push((rep.cycles, rep.serve.as_ref().unwrap().batches));
     }

@@ -150,6 +150,7 @@ fn geom(l: &LayerConfig) -> Geom {
         dimc_rvv::compiler::layer::LayerKind::Conv => 0u8,
         dimc_rvv::compiler::layer::LayerKind::Fc => 1u8,
         dimc_rvv::compiler::layer::LayerKind::Gemm { .. } => 2u8,
+        dimc_rvv::compiler::layer::LayerKind::MoeGemm { .. } => 3u8,
     };
     (kind, l.ich, l.och, l.kh, l.kw, l.ih, l.iw, l.stride, l.pad)
 }

@@ -8,7 +8,11 @@
 //! * **saturation** — under overload the achieved throughput converges to
 //!   the cluster's batch-mode roofline and never exceeds it;
 //! * **determinism** — identical config and seed reproduce the identical
-//!   report.
+//!   report;
+//! * **decode phase** — the continuous token-level batcher conserves
+//!   prefill and decode seats per phase, a zero-load request's TTFT is
+//!   *exactly* the unbatched prefill latency, ITL tails grow with load,
+//!   runs are bit-identical per seed, and MoE expert sampling is seeded.
 //!
 //! Deterministic Lcg-driven generation, same style as `prop_cluster.rs`
 //! (proptest is not vendored in this offline image).
@@ -18,7 +22,7 @@ use dimc_rvv::compiler::layer::LayerConfig;
 use dimc_rvv::dimc::Precision;
 use dimc_rvv::serve::request::generate;
 use dimc_rvv::serve::{
-    BatchPolicy, Request, Server, TraceConfig, TraceShape, Workload,
+    BatchPolicy, Request, ServePhase, Server, TraceConfig, TraceShape, TrafficSpec, Workload,
 };
 use std::collections::HashSet;
 
@@ -248,4 +252,144 @@ fn tail_latency_grows_with_offered_load() {
         slammed > calm,
         "p99 at 1.3x roofline ({slammed:.3} ms) not above p99 at 0.05x ({calm:.3} ms)"
     );
+}
+
+// ------------------------------------------------------------------
+// decode phase: continuous token-level batching
+// ------------------------------------------------------------------
+
+fn decode_zoo() -> Vec<Workload> {
+    vec![Workload::new("mobilebert", dimc_rvv::workloads::bert::mobilebert())]
+}
+
+fn decode_spec(rps: f64, requests: usize, tokens: u32) -> TrafficSpec {
+    TrafficSpec::at(rps)
+        .requests(requests)
+        .seed(0x9E0)
+        .max_batch(4)
+        .phase(ServePhase::Decode)
+        .decode_tokens(tokens)
+}
+
+#[test]
+fn decode_conserves_requests_and_tokens_for_every_shape() {
+    let zoo = decode_zoo();
+    for shape in [TraceShape::Uniform, TraceShape::Bursty, TraceShape::Ramp] {
+        let mut srv = server(2);
+        let spec = decode_spec(2500.0, 12, 3).shape(shape);
+        let rep = srv.serve_decode_trace(&zoo, &spec).unwrap();
+        assert_eq!(rep.completed.len(), 12, "{}: conservation", shape.as_str());
+        assert!(
+            rep.completed.iter().all(|r| r.tokens == 4),
+            "{}: every request emits 1 prefill + 3 decode tokens",
+            shape.as_str()
+        );
+        let seats = |phase: ServePhase| -> u64 {
+            rep.batches.iter().filter(|b| b.phase == phase).map(|b| b.size as u64).sum()
+        };
+        assert_eq!(seats(ServePhase::Batch), 12, "{}: prefill seats", shape.as_str());
+        assert_eq!(seats(ServePhase::Decode), 36, "{}: decode seats", shape.as_str());
+        assert_eq!(rep.itl_samples.len(), 36, "{}: one ITL sample per token", shape.as_str());
+        for r in &rep.completed {
+            assert!(
+                r.arrival <= r.dispatched
+                    && r.dispatched <= r.first_token
+                    && r.first_token < r.completed,
+                "{}: request {} violates phase causality",
+                shape.as_str(),
+                r.id
+            );
+        }
+    }
+}
+
+#[test]
+fn decode_zero_load_ttft_equals_the_unbatched_prefill_latency() {
+    let zoo = decode_zoo();
+    for cores in [1u32, 2, 4] {
+        let mut srv = server(cores);
+        let prefill = srv.unbatched_latency(&zoo, 0).unwrap();
+        let spec = decode_spec(1.0, 3, 2);
+        // Requests spaced 1000 prefill times apart never share the cluster.
+        let arrivals: Vec<Request> = (0..3)
+            .map(|i| Request { id: i, model: 0, arrival: 50 + i * 1_000 * prefill })
+            .collect();
+        let rep = srv.serve_decode_arrivals(&zoo, &spec, &arrivals).unwrap();
+        assert_eq!(rep.completed.len(), 3, "cores={cores}");
+        for r in &rep.completed {
+            assert_eq!(
+                r.ttft(),
+                prefill,
+                "cores={cores}: zero-load TTFT must equal the unbatched prefill latency"
+            );
+            assert_eq!(r.queue_wait(), 0, "cores={cores}");
+        }
+    }
+}
+
+#[test]
+fn decode_itl_tails_grow_with_offered_load() {
+    let zoo = decode_zoo();
+    let mut srv = server(2);
+    let roof = srv.batch_roofline(&zoo, 0, 4).unwrap();
+    let itl_at = |srv: &mut Server, rps: f64| {
+        let spec = decode_spec(rps, 16, 4);
+        srv.serve_decode_trace(&zoo, &spec).unwrap().itl_ms(99.0)
+    };
+    let calm = itl_at(&mut srv, roof * 0.02);
+    let slammed = itl_at(&mut srv, roof * 1.5);
+    assert!(
+        slammed > calm,
+        "p99 ITL at 1.5x prefill roofline ({slammed:.4} ms) not above 0.02x ({calm:.4} ms)"
+    );
+}
+
+#[test]
+fn decode_identical_seed_reproduces_bit_identically() {
+    let zoo = decode_zoo();
+    let spec = decode_spec(4000.0, 10, 3).shape(TraceShape::Bursty);
+    // Two independent servers (cold caches) must agree bit-for-bit.
+    let run = || {
+        let mut srv = server(2);
+        srv.serve_decode_trace(&zoo, &spec).unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.span_cycles, b.span_cycles);
+    assert_eq!(a.kv_read_bytes, b.kv_read_bytes);
+    assert_eq!(a.kv_peak_bytes, b.kv_peak_bytes);
+    assert_eq!(a.itl_samples, b.itl_samples);
+    assert_eq!(a.completed.len(), b.completed.len());
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!(
+            (x.id, x.arrival, x.dispatched, x.first_token, x.completed),
+            (y.id, y.arrival, y.dispatched, y.first_token, y.completed)
+        );
+    }
+    // A different seed produces a different trace.
+    let other = decode_spec(4000.0, 10, 3).shape(TraceShape::Bursty).seed(0xF00);
+    let c = server(2).serve_decode_trace(&zoo, &other).unwrap();
+    assert!(
+        a.completed.iter().zip(&c.completed).any(|(x, y)| x.arrival != y.arrival),
+        "different seeds produced identical arrivals"
+    );
+}
+
+#[test]
+fn moe_expert_sampling_is_seeded_and_costs_ride_the_active_count() {
+    let zoo = decode_zoo();
+    let mut srv = server(2);
+    let dense = decode_spec(2500.0, 6, 2);
+    let routed = dense.moe(4, 2);
+    let d = srv.serve_decode_trace(&zoo, &dense).unwrap();
+    let m1 = srv.serve_decode_trace(&zoo, &routed).unwrap();
+    let m2 = srv.serve_decode_trace(&zoo, &routed).unwrap();
+    assert_eq!(m1.span_cycles, m2.span_cycles, "expert sampling must be seeded");
+    assert_eq!(m1.itl_samples, m2.itl_samples, "expert sampling must be seeded");
+    assert!(
+        m1.span_cycles > d.span_cycles,
+        "moe 2-of-4 span {} not above the dense span {}",
+        m1.span_cycles,
+        d.span_cycles
+    );
+    assert_eq!(m1.kv_read_bytes, d.kv_read_bytes, "MoE must not touch the attention KV path");
 }

@@ -4,8 +4,9 @@
 //!   unknown model, serving knobs without a rate, non-positive rates,
 //!   baseline clusters) fails at build time with a typed error;
 //! * **equivalence** — on a fixed spec matrix the façade reports
-//!   bit/cycle-identical numbers to the legacy entry points it wraps
-//!   (`simulate_layer` / `ClusterSim::schedule` / `Server::serve_trace`);
+//!   bit/cycle-identical numbers to the lower-tier entry points it wraps
+//!   (`simulate_layer_timed` / `ClusterSim::schedule` /
+//!   `Server::serve_trace`);
 //! * **checks** — the functional cross-checks and the `verify()` anchors
 //!   all hold, and the JSON serialization is structurally well-formed.
 
@@ -14,10 +15,17 @@ use dimc_rvv::cluster::exec::ClusterSim;
 use dimc_rvv::cluster::scaling::scaling_curve;
 use dimc_rvv::cluster::topology::ClusterTopology;
 use dimc_rvv::compiler::layer::LayerConfig;
-use dimc_rvv::coordinator::driver::simulate_layer;
+use dimc_rvv::coordinator::driver::{simulate_layer_timed, LayerResult, Timing};
 use dimc_rvv::dimc::Precision;
-use dimc_rvv::serve::{BatchPolicy, Server, TraceConfig, TraceShape, Workload};
+use dimc_rvv::serve::{
+    BatchPolicy, ServePhase, Server, TraceConfig, TraceShape, TrafficSpec, Workload,
+};
 use dimc_rvv::sim::{Engine, RunSpec, Session, SessionError};
+
+fn sim(l: &LayerConfig, engine: Engine) -> LayerResult {
+    simulate_layer_timed(l, engine, Precision::Int4, Arch::default(), Timing::Interpreter)
+        .unwrap()
+}
 
 /// The fixed spec matrix the equivalence tests run over: plain,
 /// tiled, grouped, strided/padded and FC layers.
@@ -74,6 +82,7 @@ fn builder_accepts_case_insensitive_model_names() {
 }
 
 #[test]
+#[allow(deprecated)] // exercises the legacy per-knob setters on purpose
 fn builder_rejects_serve_knobs_without_rps() {
     let e = Session::builder()
         .model("resnet18")
@@ -90,7 +99,11 @@ fn builder_rejects_serve_knobs_without_rps() {
 #[test]
 fn builder_rejects_bad_rates_and_weights() {
     for rps in [0.0, -5.0, f64::NAN, f64::INFINITY] {
-        let e = Session::builder().model("resnet18").rps(rps).build().unwrap_err();
+        let e = Session::builder()
+            .model("resnet18")
+            .traffic(TrafficSpec::at(rps))
+            .build()
+            .unwrap_err();
         assert!(matches!(e, SessionError::Invalid(_)), "rps {rps}: {e}");
     }
     let e = Session::builder().model_weighted("resnet18", 0.0).build().unwrap_err();
@@ -104,7 +117,7 @@ fn builder_rejects_baseline_clusters_and_baseline_serving() {
     let e = Session::builder()
         .engine(Engine::Baseline)
         .model("resnet18")
-        .rps(100.0)
+        .traffic(TrafficSpec::at(100.0))
         .build()
         .unwrap_err();
     assert!(matches!(e, SessionError::Invalid(_)), "{e}");
@@ -113,7 +126,7 @@ fn builder_rejects_baseline_clusters_and_baseline_serving() {
 #[test]
 fn serve_spec_without_serving_config_is_unsupported_at_run() {
     let mut s = Session::builder().layers("t", tiny_net()).build().unwrap();
-    let e = s.run(&RunSpec::Serve).unwrap_err();
+    let e = s.run(&RunSpec::Serve(None)).unwrap_err();
     assert!(matches!(e, SessionError::Unsupported(_)), "{e}");
 }
 
@@ -132,8 +145,8 @@ fn network_without_a_model_is_unsupported_at_run() {
 fn layer_reports_match_legacy_single_core_exactly() {
     let mut session = Session::builder().build().unwrap();
     for l in spec_matrix() {
-        let legacy_d = simulate_layer(&l, Engine::Dimc).unwrap();
-        let legacy_b = simulate_layer(&l, Engine::Baseline).unwrap();
+        let legacy_d = sim(&l, Engine::Dimc);
+        let legacy_b = sim(&l, Engine::Baseline);
         let rep = session.run(&RunSpec::Layer(l.clone())).unwrap();
         assert_eq!(rep.backend, "single-core");
         assert_eq!(rep.cycles, legacy_d.cycles, "{l}");
@@ -151,10 +164,8 @@ fn layer_reports_match_legacy_single_core_exactly() {
 #[test]
 fn network_report_is_the_sum_of_legacy_layer_simulations() {
     let net = tiny_net();
-    let want_d: u64 =
-        net.iter().map(|l| simulate_layer(l, Engine::Dimc).unwrap().cycles).sum();
-    let want_b: u64 =
-        net.iter().map(|l| simulate_layer(l, Engine::Baseline).unwrap().cycles).sum();
+    let want_d: u64 = net.iter().map(|l| sim(l, Engine::Dimc).cycles).sum();
+    let want_b: u64 = net.iter().map(|l| sim(l, Engine::Baseline).cycles).sum();
     let mut session = Session::builder().layers("tiny", net.clone()).build().unwrap();
     let rep = session.run(&RunSpec::Network).unwrap();
     assert_eq!(rep.backend, "single-core");
@@ -168,7 +179,7 @@ fn network_report_is_the_sum_of_legacy_layer_simulations() {
 #[test]
 fn baseline_engine_sessions_report_baseline_numbers() {
     let l = LayerConfig::conv("b", 16, 8, 2, 2, 6, 6, 1, 0);
-    let legacy = simulate_layer(&l, Engine::Baseline).unwrap();
+    let legacy = sim(&l, Engine::Baseline);
     let mut session = Session::builder().engine(Engine::Baseline).build().unwrap();
     let rep = session.run(&RunSpec::Layer(l)).unwrap();
     assert_eq!(rep.cycles, legacy.cycles);
@@ -229,8 +240,7 @@ fn one_core_cluster_session_reproduces_single_core_cycles() {
     // cores=1 with batch>1 still routes through the cluster backend;
     // a batch of B at one core costs exactly B single-core networks.
     let net = tiny_net();
-    let single: u64 =
-        net.iter().map(|l| simulate_layer(l, Engine::Dimc).unwrap().cycles).sum();
+    let single: u64 = net.iter().map(|l| sim(l, Engine::Dimc).cycles).sum();
     let mut session =
         Session::builder().layers("tiny", net).batch(3).build().unwrap();
     let rep = session.run(&RunSpec::Network).unwrap();
@@ -243,6 +253,7 @@ fn one_core_cluster_session_reproduces_single_core_cycles() {
 // ------------------------------------------------------------------
 
 #[test]
+#[allow(deprecated)] // acceptance: legacy setters must still compile and match .traffic()
 fn serve_report_matches_the_legacy_server_exactly() {
     let zoo = vec![
         Workload::new("tiny-a", tiny_net()),
@@ -266,7 +277,25 @@ fn serve_report_matches_the_legacy_server_exactly() {
         .max_wait_cycles(policy.max_wait_cycles)
         .build()
         .unwrap();
-    let rep = session.run(&RunSpec::Serve).unwrap();
+    let rep = session.run(&RunSpec::Serve(None)).unwrap();
+
+    // the consolidated TrafficSpec path must reproduce the deprecated
+    // per-knob path bit-for-bit
+    let spec = TrafficSpec::at(rps)
+        .requests(requests)
+        .shape(TraceShape::Bursty)
+        .seed(seed)
+        .max_batch(policy.max_batch)
+        .max_wait_cycles(policy.max_wait_cycles);
+    let mut via_traffic = Session::builder()
+        .workload(zoo[0].clone())
+        .workload(zoo[1].clone())
+        .cores(cores)
+        .traffic(spec)
+        .build()
+        .unwrap();
+    let rep2 = via_traffic.run(&RunSpec::Serve(None)).unwrap();
+    assert_eq!(rep.to_json(), rep2.to_json(), "legacy setters diverged from .traffic()");
 
     assert_eq!(rep.backend, "serving");
     assert_eq!(rep.cycles, want.span_cycles);
@@ -290,14 +319,12 @@ fn serve_reports_are_deterministic_per_seed() {
         Session::builder()
             .layers("tiny", tiny_net())
             .cores(2)
-            .rps(30_000.0)
-            .requests(80)
-            .seed(7)
+            .traffic(TrafficSpec::at(30_000.0).requests(80).seed(7))
             .build()
             .unwrap()
     };
-    let a = build().run(&RunSpec::Serve).unwrap();
-    let b = build().run(&RunSpec::Serve).unwrap();
+    let a = build().run(&RunSpec::Serve(None)).unwrap();
+    let b = build().run(&RunSpec::Serve(None)).unwrap();
     assert_eq!(a.cycles, b.cycles);
     assert_eq!(a.to_json(), b.to_json(), "identical seeds must reproduce bit-identically");
 }
@@ -395,12 +422,10 @@ fn transformers_run_end_to_end_on_the_serving_backend() {
         let mut s = Session::builder()
             .model(name)
             .cores(2)
-            .rps(500.0)
-            .requests(24)
-            .seed(0x7F0)
+            .traffic(TrafficSpec::at(500.0).requests(24).seed(0x7F0))
             .build()
             .unwrap();
-        let rep = s.run(&RunSpec::Serve).unwrap();
+        let rep = s.run(&RunSpec::Serve(None)).unwrap();
         assert_eq!(rep.backend, "serving", "{name}");
         assert!(rep.checks_ok(), "{name}: {:?}", rep.checks);
         assert_eq!(rep.serve.as_ref().unwrap().requests, 24, "{name}");
@@ -453,11 +478,10 @@ fn run_reports_serialize_to_wellformed_json() {
     let mut serve = Session::builder()
         .layers("tiny", tiny_net())
         .cores(2)
-        .rps(10_000.0)
-        .requests(40)
+        .traffic(TrafficSpec::at(10_000.0).requests(40))
         .build()
         .unwrap();
-    let json = serve.run(&RunSpec::Serve).unwrap().to_json();
+    let json = serve.run(&RunSpec::Serve(None)).unwrap().to_json();
     assert_wellformed_json(&json);
     assert!(json.contains(r#""backend":"serving""#), "{json}");
     assert!(json.contains(r#""latency":{"#), "{json}");
@@ -477,15 +501,12 @@ fn serve_report_echoes_full_provenance_and_round_trips() {
         Session::builder()
             .model("resnet18")
             .cores(cores)
-            .rps(rps)
-            .requests(requests)
-            .seed(seed)
-            .trace(shape)
+            .traffic(TrafficSpec::at(rps).requests(requests).seed(seed).shape(shape))
             .build()
             .unwrap()
     };
     let mut s = build(3, 1234.5, 60, 0xC0FFEE, TraceShape::Ramp);
-    let rep = s.run(&RunSpec::Serve).unwrap();
+    let rep = s.run(&RunSpec::Serve(None)).unwrap();
     let json = rep.to_json();
     for needle in [
         r#""backend":"serving""#,
@@ -506,9 +527,64 @@ fn serve_report_echoes_full_provenance_and_round_trips() {
     let mut again = build(rep.cores, ss.rps, ss.requests, ss.seed, shape);
     assert_eq!(
         rep.to_json(),
-        again.run(&RunSpec::Serve).unwrap().to_json(),
+        again.run(&RunSpec::Serve(None)).unwrap().to_json(),
         "session rebuilt from the report's provenance diverged"
     );
+}
+
+/// Decode-phase runs echo the phase, decode-token and MoE knobs in
+/// their JSON, pass the phase-conservation check, and reproduce
+/// bit-identically from the same [`TrafficSpec`].
+#[test]
+fn decode_serve_report_echoes_phase_provenance_and_round_trips() {
+    let spec = TrafficSpec::at(800.0)
+        .requests(24)
+        .seed(0xD0DE)
+        .phase(ServePhase::Decode)
+        .decode_tokens(6)
+        .moe(4, 2);
+    let build = || {
+        Session::builder().model("mobilebert").cores(2).traffic(spec).build().unwrap()
+    };
+    let rep = build().run(&RunSpec::Serve(None)).unwrap();
+    let json = rep.to_json();
+    for needle in [
+        r#""phase":"decode""#,
+        r#""decode_tokens":6"#,
+        r#""moe_experts":4"#,
+        r#""moe_active":2"#,
+        r#""ttft":{"#,
+        r#""itl":{"#,
+        r#""kv_read_bytes":"#,
+    ] {
+        assert!(json.contains(needle), "decode provenance `{needle}` missing from {json}");
+    }
+    assert!(
+        rep.checks.iter().any(|c| c.name == "serve:phase-conservation"),
+        "missing phase-conservation check: {:?}",
+        rep.checks
+    );
+    assert!(rep.checks_ok(), "{:?}", rep.checks);
+    let again = build().run(&RunSpec::Serve(None)).unwrap();
+    assert_eq!(json, again.to_json(), "same TrafficSpec must reproduce bit-identically");
+}
+
+/// `RunSpec::Serve(Some(spec))` overrides per run: a session built with
+/// no serving configuration can still serve, and the override is
+/// validated at run time with the same rules as the builder.
+#[test]
+fn run_spec_serve_override_serves_and_validates_at_run_time() {
+    let mut s = Session::builder().model("resnet18").cores(2).build().unwrap();
+    let spec = TrafficSpec::at(2_000.0).requests(16).seed(3);
+    let rep = s.run(&RunSpec::Serve(Some(spec))).unwrap();
+    assert_eq!(rep.backend, "serving");
+    assert_eq!(rep.serve.as_ref().unwrap().requests, 16);
+
+    // resnet18 has no decode table: a decode override must fail typed
+    let bad = spec.phase(ServePhase::Decode);
+    let e = s.run(&RunSpec::Serve(Some(bad))).unwrap_err();
+    assert!(matches!(e, SessionError::Invalid(_)), "{e}");
+    assert!(e.to_string().contains("decode"), "{e}");
 }
 
 #[test]
