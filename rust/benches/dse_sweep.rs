@@ -1,0 +1,138 @@
+//! Parallel DSE sweep perf guard — the figure behind `BENCH_10.json`.
+//!
+//! Two gates, one artifact:
+//!
+//! 1. **Determinism** (both modes): a reduced design space is swept at
+//!    1, 2, 3 and 4 threads and every priced point — and therefore the
+//!    Pareto frontier — must be bit-identical across thread counts.
+//!    This is the machine-independent guarantee the DSE engine makes.
+//! 2. **Scaling** (wall-clock): the full-zoo default space is swept at
+//!    1, 2 and 4 threads and the wall times are recorded. The committed
+//!    `BENCH_10.json` carries the measured `speedup_4t >= 2` claim; CI
+//!    re-derives the weaker `wall(4) <= wall(1)` invariant from a fresh
+//!    run (shared runners are too noisy for an exact ratio).
+//!
+//! `--short` (or `DIMC_BENCH_SHORT=1`) uses the reduced space for the
+//! scaling ladder too — faster, still writes the artifact (tagged
+//! `"short": true`).
+
+use dimc_rvv::dse::{self, DseResult, DseSpace};
+use dimc_rvv::sim::JsonBuilder;
+
+/// A two-model slice of the default space: enough structure to exercise
+/// every axis, small enough to sweep repeatedly.
+fn reduced_space() -> DseSpace {
+    DseSpace::default_for(vec!["resnet18".to_string(), "mobilenet-100-224".to_string()])
+}
+
+/// Sweep `space` on `threads` workers, panicking on any pricing error.
+fn sweep(space: &DseSpace, threads: usize) -> DseResult {
+    dse::sweep(space, threads).expect("dse sweep")
+}
+
+fn main() {
+    let short = std::env::args().any(|a| a == "--short")
+        || std::env::var("DIMC_BENCH_SHORT").is_ok_and(|v| v != "0");
+
+    // Gate 1: bit-identical points and frontier at every thread count.
+    let space = reduced_space();
+    let reference = sweep(&space, 1);
+    assert!(!reference.frontier.is_empty(), "reduced space must have a non-empty frontier");
+    for threads in 2..=4 {
+        let run = sweep(&space, threads);
+        assert_eq!(
+            reference.points, run.points,
+            "points differ between 1 and {threads} threads"
+        );
+        assert_eq!(
+            reference.frontier, run.frontier,
+            "frontier differs between 1 and {threads} threads"
+        );
+    }
+    println!(
+        "determinism: {} points, {} frontier entries, bit-identical at 1..=4 threads",
+        reference.points.len(),
+        reference.frontier.len()
+    );
+
+    // Gate 2: wall-clock ladder over the scaling space.
+    let ladder_space = if short { reduced_space() } else { DseSpace::full_zoo() };
+    let ladder: Vec<DseResult> = [1usize, 2, 4].iter().map(|&t| sweep(&ladder_space, t)).collect();
+    let wall_1 = ladder[0].wall_ms;
+    let wall_2 = ladder[1].wall_ms;
+    let wall_4 = ladder[2].wall_ms;
+    for (a, b) in ladder.iter().zip(ladder.iter().skip(1)) {
+        assert_eq!(a.points, b.points, "ladder runs must price identically");
+        assert_eq!(a.frontier, b.frontier, "ladder runs must agree on the frontier");
+    }
+    let full = &ladder[0];
+    println!(
+        "scaling{}: {} points over {} models",
+        if short { " (short)" } else { "" },
+        full.points.len(),
+        full.space.models.len()
+    );
+    println!(
+        "  wall 1t {wall_1:>9.1} ms  2t {wall_2:>9.1} ms  4t {wall_4:>9.1} ms  \
+         (4t speedup {:.2}x, cache hit rate {:.1}%)",
+        wall_1 / wall_4,
+        full.cache.hit_rate() * 100.0
+    );
+    for p in full.frontier_points() {
+        println!(
+            "  frontier {:<20} bus {:>2} issue {} cbus {:>2} int{} x{} {:<8} \
+             {:>8.1} GOPS {:>8.1} GOPS/W {:>6.2} ANS",
+            p.point.model,
+            p.point.mem_bus_bytes,
+            p.point.issue_width,
+            p.point.cluster_bus_bytes,
+            p.point.precision.bits(),
+            p.point.cores,
+            p.point.pipelining.as_str(),
+            p.gops,
+            p.gops_per_watt,
+            p.ans
+        );
+    }
+
+    let mut j = JsonBuilder::new();
+    j.begin_obj();
+    j.field_str("bench", "dse_sweep");
+    j.field_bool("short", short);
+    j.field_u64("models", full.space.models.len() as u64);
+    j.field_u64("points", full.points.len() as u64);
+    j.key("wall_ms");
+    j.begin_obj();
+    j.field_f64("t1", wall_1);
+    j.field_f64("t2", wall_2);
+    j.field_f64("t4", wall_4);
+    j.end_obj();
+    j.field_f64("speedup_2t", wall_1 / wall_2);
+    j.field_f64("speedup_4t", wall_1 / wall_4);
+    j.field_f64("cache_hit_rate", full.cache.hit_rate());
+    j.key("frontier");
+    j.begin_arr();
+    for p in full.frontier_points() {
+        j.begin_obj();
+        j.field_u64("index", p.point.index as u64);
+        j.field_str("model", &p.point.model);
+        j.field_u64("mem_bus_bytes", p.point.mem_bus_bytes);
+        j.field_u64("issue_width", p.point.issue_width);
+        j.field_u64("dimc_compute_latency", p.point.dimc_compute_latency);
+        j.field_u64("cluster_bus_bytes", p.point.cluster_bus_bytes);
+        j.field_u64("precision_bits", p.point.precision.bits() as u64);
+        j.field_u64("cores", p.point.cores as u64);
+        j.field_str("pipelining", p.point.pipelining.as_str());
+        j.field_u64("cycles", p.cycles);
+        j.field_f64("gops", p.gops);
+        j.field_f64("gops_per_watt", p.gops_per_watt);
+        j.field_f64("ans", p.ans);
+        j.end_obj();
+    }
+    j.end_arr();
+    j.end_obj();
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_10.json");
+    std::fs::write(path, j.finish() + "\n").expect("write BENCH_10.json");
+    println!("  wrote {path}");
+}

@@ -31,12 +31,14 @@
 use super::shard::{ShardPlan, ShardStrategy};
 use super::topology::ClusterTopology;
 use crate::arch::Arch;
-use crate::compiler::layer::{LayerConfig, LayerKind};
-use crate::compiler::netplan::{self, Pipelining};
-use crate::coordinator::driver::{compile_for, run_functional, timed_stats, Engine, Timing};
+use crate::compiler::layer::LayerConfig;
+use crate::compiler::netplan::Pipelining;
+use crate::coordinator::driver::{compile_for, run_functional, Engine, Timing};
 use crate::dimc::Precision;
 use crate::pipeline::core::SimError;
-use std::collections::{HashMap, HashSet};
+use crate::sim::cache::SimCache;
+use std::collections::HashSet;
+use std::sync::Arc;
 
 /// Cluster-level timing result for one layer.
 #[derive(Debug, Clone)]
@@ -66,53 +68,36 @@ pub struct ClusterLayerResult {
 impl ClusterLayerResult {
     /// Achieved cluster throughput in GOPS.
     pub fn gops(&self) -> f64 {
-        self.ops as f64 / (self.cycles as f64 / self.clock_hz) / 1e9
+        crate::metrics::score::gops(self.ops, self.cycles, self.clock_hz)
     }
 }
 
-/// Geometry key for the shard-simulation cache (name-insensitive: two
-/// shards with identical shapes share one simulation).
-type SimKey = (u8, u32, u32, u32, u32, u32, u32, u32, u32);
-
-fn sim_key(l: &LayerConfig) -> SimKey {
-    let kind = match l.kind {
-        LayerKind::Conv => 0u8,
-        LayerKind::Fc => 1u8,
-        // Fusion flags do not steer the instruction stream, but keep the
-        // keys distinct so the cache never has to reason about that.
-        LayerKind::Gemm { bias, relu, residual } => {
-            2u8 | (u8::from(bias) << 2) | (u8::from(relu) << 3) | (u8::from(residual) << 4)
-        }
-        // The active aggregate is priced like the equivalent dense GEMM,
-        // and expert/active counts are already folded into the och/ich
-        // geometry — only the bias flag needs its own key bit.
-        LayerKind::MoeGemm { bias, .. } => 3u8 | (u8::from(bias) << 2),
-    };
-    (kind, l.ich, l.och, l.kh, l.kw, l.ih, l.iw, l.stride, l.pad)
-}
-
 /// The cluster simulator: an [`Arch`], a precision, a timing backend
-/// and a cache of shard simulations keyed by geometry. One instance can
-/// schedule many layers, models and topologies; balanced shard plans
-/// hit the cache heavily (each plan has at most two distinct shard
-/// shapes).
+/// and a handle on the shared geometry-keyed compile/price cache
+/// ([`sim::cache::SimCache`](crate::sim::cache::SimCache)). One
+/// instance can schedule many layers, models and topologies; balanced
+/// shard plans hit the cache heavily (each plan has at most two
+/// distinct shard shapes), and instances built over one shared cache
+/// ([`ClusterSim::shared`]) reuse each other's work — the Serving
+/// engine and the DSE sweep workers do exactly that.
 pub struct ClusterSim {
     /// Timing knobs every shard simulation (and the bus model) uses.
     pub arch: Arch,
     /// Operand precision of the DIMC path.
     pub precision: Precision,
     /// Which timing backend prices each shard (see [`ClusterSim::timing`]).
-    /// Private because the shard cache is not keyed by it: it is fixed at
-    /// construction ([`ClusterSim::with_timing`]) so a cached cycle count
-    /// can never have been priced by a different backend than requested.
+    /// Fixed at construction ([`ClusterSim::with_timing`]); the shared
+    /// cache keys every price by (arch, precision, timing), so entries
+    /// from differently-configured instances never alias.
     timing: Timing,
     /// Inter-layer pipelining policy the scheduler applies (see
     /// [`ClusterSim::pipelining`]); fixed at construction like the
-    /// timing backend, for the same cache-coherence reason.
+    /// timing backend.
     pipelining: Pipelining,
-    cache: HashMap<SimKey, (u64, u64)>, // -> (cycles, mem bytes)
-    /// Memoized per-boundary overlap savings, keyed by chain geometry.
-    overlap_cache: HashMap<Vec<SimKey>, Vec<u64>>,
+    /// The compile/price memo. Private so every lookup goes through
+    /// the keyed accessors below; share it across instances via
+    /// [`ClusterSim::shared`].
+    cache: Arc<SimCache>,
 }
 
 impl ClusterSim {
@@ -131,20 +116,36 @@ impl ClusterSim {
     /// As [`ClusterSim::with_timing`] with an explicit inter-layer
     /// pipelining policy (default [`Pipelining::Off`] — the
     /// layer-at-a-time schedules every pre-pipelining caller gets).
+    /// Owns a fresh private cache; use [`ClusterSim::shared`] to reuse
+    /// an existing one.
     pub fn configured(
         arch: Arch,
         precision: Precision,
         timing: Timing,
         pipelining: Pipelining,
     ) -> Self {
-        ClusterSim {
-            arch,
-            precision,
-            timing,
-            pipelining,
-            cache: HashMap::new(),
-            overlap_cache: HashMap::new(),
-        }
+        Self::shared(arch, precision, timing, pipelining, Arc::new(SimCache::new()))
+    }
+
+    /// As [`ClusterSim::configured`] over an existing shared cache.
+    /// Because the cache keys carry the full (geometry, arch,
+    /// precision, engine, timing) tuple, any number of
+    /// differently-configured instances can share one cache with
+    /// bit-identical results — this is the constructor the Serving
+    /// engine and the parallel DSE workers use.
+    pub fn shared(
+        arch: Arch,
+        precision: Precision,
+        timing: Timing,
+        pipelining: Pipelining,
+        cache: Arc<SimCache>,
+    ) -> Self {
+        ClusterSim { arch, precision, timing, pipelining, cache }
+    }
+
+    /// The shared compile/price cache this instance reads and feeds.
+    pub fn cache(&self) -> &Arc<SimCache> {
+        &self.cache
     }
 
     /// The timing backend pricing every shard simulation of this
@@ -155,44 +156,34 @@ impl ClusterSim {
 
     /// The inter-layer pipelining policy of this instance (fixed at
     /// construction). At [`Pipelining::Overlap`] the network scheduler
-    /// credits [`netplan::overlap_savings`] wherever consecutive layers
-    /// run back-to-back on one core.
+    /// credits
+    /// [`netplan::overlap_savings`](crate::compiler::netplan::overlap_savings)
+    /// wherever consecutive layers run back-to-back on one core.
     pub fn pipelining(&self) -> Pipelining {
         self.pipelining
     }
 
     /// Per-boundary overlap savings of `layers`' DIMC chain under this
     /// instance's policy — empty at [`Pipelining::Off`] (or for chains
-    /// shorter than two layers), [`netplan::overlap_savings`] memoized
-    /// by chain geometry otherwise.
+    /// shorter than two layers),
+    /// [`netplan::overlap_savings`](crate::compiler::netplan::overlap_savings)
+    /// memoized by chain geometry in the shared cache otherwise.
     pub fn overlap_savings(&mut self, layers: &[LayerConfig]) -> Vec<u64> {
         if self.pipelining != Pipelining::Overlap || layers.len() < 2 {
             return Vec::new();
         }
-        let key: Vec<SimKey> = layers.iter().map(sim_key).collect();
-        if let Some(hit) = self.overlap_cache.get(&key) {
-            return hit.clone();
-        }
-        let v = netplan::overlap_savings(layers, self.precision, &self.arch);
-        self.overlap_cache.insert(key, v.clone());
-        v
+        self.cache.overlap_savings(layers, self.precision, &self.arch)
     }
 
     /// Simulate one (sub-)layer on a single DIMC core: cycles + memory
-    /// traffic, memoized by geometry. One compile serves both numbers —
-    /// the timing backend prices the schedule and the traffic is read
-    /// straight off the layer's [`Plan`](crate::compiler::plan::Plan)
-    /// (no bespoke per-layer traffic formula).
+    /// traffic, memoized by geometry in the shared cache. One compile
+    /// serves both numbers — the timing backend prices the schedule and
+    /// the traffic is read straight off the layer's
+    /// [`Plan`](crate::compiler::plan::Plan) (no bespoke per-layer
+    /// traffic formula).
     pub fn shard_sim(&mut self, l: &LayerConfig) -> Result<(u64, u64), SimError> {
-        let key = sim_key(l);
-        if let Some(&hit) = self.cache.get(&key) {
-            return Ok(hit);
-        }
-        let c = compile_for(l, Engine::Dimc, self.precision);
-        let stats = timed_stats(&c, Engine::Dimc, self.precision, self.arch, self.timing)?;
-        let v = (stats.cycles, c.plan.mem_bytes());
-        self.cache.insert(key, v);
-        Ok(v)
+        let p = self.cache.price(l, Engine::Dimc, self.precision, &self.arch, self.timing)?;
+        Ok((p.cycles, p.mem_bytes))
     }
 
     /// Evaluate one concrete plan under `topo`.
@@ -437,6 +428,31 @@ mod tests {
         assert!(bb > 100 * bs, "big layer traffic {bb} vs small {bs}");
         // weight images alone: och * tiles * 128 bytes is a lower bound
         assert!(bb >= 256 * big.tiles(Precision::Int4) as u64 * 128);
+    }
+
+    #[test]
+    fn shared_cache_instances_agree_with_private_ones() {
+        let l = LayerConfig::conv("sc", 64, 96, 3, 3, 14, 14, 1, 1);
+        let cache = Arc::new(SimCache::new());
+        let shared = |c: &Arc<SimCache>| {
+            ClusterSim::shared(
+                Arch::default(),
+                Precision::Int4,
+                Timing::default(),
+                Pipelining::default(),
+                Arc::clone(c),
+            )
+        };
+        let (mut a, mut b) = (shared(&cache), shared(&cache));
+        let ra = a.shard_sim(&l).unwrap();
+        let before = cache.stats();
+        let rb = b.shard_sim(&l).unwrap(); // must be a pure cache hit
+        assert_eq!(ra, rb);
+        assert_eq!(cache.stats().misses, before.misses);
+        assert!(cache.stats().hits > before.hits);
+        // A private-cache instance recomputes the same numbers.
+        let mut fresh = ClusterSim::new(Arch::default(), Precision::Int4);
+        assert_eq!(fresh.shard_sim(&l).unwrap(), ra);
     }
 
     #[test]

@@ -75,7 +75,7 @@ pub struct NetworkSchedule {
 impl NetworkSchedule {
     /// Batch throughput in GOPS.
     pub fn gops(&self) -> f64 {
-        self.ops as f64 / (self.cycles as f64 / self.clock_hz) / 1e9
+        crate::metrics::score::gops(self.ops, self.cycles, self.clock_hz)
     }
 
     /// Batch latency in milliseconds.

@@ -29,7 +29,7 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
 pub fn usage() -> &'static str {
-    "usage: repro <fig5|fig6|fig7|fig8|fig9|table1|zoo|resnet50|verify|simulate|lint|timeline|asm> [opts]\n\
+    "usage: repro <fig5|fig6|fig7|fig8|fig9|table1|zoo|resnet50|verify|simulate|dse|lint|timeline|asm> [opts]\n\
      \n\
      fig5      GOPS per ResNet-50 layer (paper Fig. 5)\n\
      fig6      op distribution per ResNet-50 layer (Fig. 6)\n\
@@ -75,6 +75,16 @@ pub fn usage() -> &'static str {
                Perfetto timeline (default trace.json; open it at\n\
                ui.perfetto.dev); a serving timeline when --rps is given,\n\
                otherwise the network timeline\n\
+     dse       [--model NAME | --all] [--threads N] parallel design-space\n\
+               exploration: sweep the runtime Arch knobs (memory bus,\n\
+               issue width, DIMC latencies, cluster bus/barrier) x\n\
+               precision x cores x pipelining over NAME (default\n\
+               resnet18; --all sweeps the whole zoo), price every point\n\
+               with the analytic backend + energy/area models on N\n\
+               worker threads (default 1) through a shared memoized\n\
+               compile/price cache, and report the Pareto frontier over\n\
+               GOPS / GOPS-per-watt / area-normalized speedup; the\n\
+               frontier is bit-identical at any --threads value\n\
      lint      [--model NAME | --all] [--precision int4|int2|int1]\n\
                [--pipelining off|overlap] [--cores N] static verifier:\n\
                run the analysis pass library (DIMC tile state machine,\n\
@@ -210,6 +220,7 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
         "tiles" => tiles(json),
         "cluster" => cluster(&flags, json),
         "serve" => serve(&flags, json),
+        "dse" => dse(&flags, json),
         "lint" => lint(&flags, json),
         "timeline" => timeline(&flags, json),
         "asm" => asm(args.get(1).map(String::as_str), json),
@@ -516,6 +527,127 @@ fn zoo(flags: &HashMap<String, String>, json: bool) -> Result<()> {
         )
     );
     println!("total layer configurations: {total} (paper: >450)");
+    Ok(())
+}
+
+/// Serialize one priced DSE point (knobs + raw counts + objectives).
+fn write_dse_point(j: &mut JsonBuilder, p: &crate::dse::PricedPoint) {
+    j.begin_obj();
+    j.field_u64("index", p.point.index as u64);
+    j.field_str("model", &p.point.model);
+    j.field_u64("mem_bus_bytes", p.point.mem_bus_bytes);
+    j.field_u64("issue_width", p.point.issue_width);
+    j.field_u64("dimc_compute_latency", p.point.dimc_compute_latency);
+    j.field_u64("dimc_load_latency", p.point.dimc_load_latency);
+    j.field_u64("cluster_bus_bytes", p.point.cluster_bus_bytes);
+    j.field_u64("cluster_barrier_cycles", p.point.cluster_barrier_cycles);
+    j.field_u64("precision_bits", p.point.precision.bits() as u64);
+    j.field_u64("cores", p.point.cores as u64);
+    j.field_str("pipelining", p.point.pipelining.as_str());
+    j.field_u64("cycles", p.cycles);
+    j.field_u64("baseline_cycles", p.baseline_cycles);
+    j.field_u64("ops", p.ops);
+    j.field_str("mode", p.mode);
+    j.field_f64("gops", p.gops);
+    j.field_f64("gops_per_watt", p.gops_per_watt);
+    j.field_f64("speedup", p.speedup);
+    j.field_f64("ans", p.ans);
+    j.end_obj();
+}
+
+/// `repro dse`: sweep the default design space around the paper's
+/// design point over one `--model` (default resnet18) or the whole zoo
+/// (`--all`) on `--threads` workers, and report the Pareto frontier
+/// over (GOPS, GOPS/W, area-normalized speedup). The point list and
+/// the frontier are bit-identical at every thread count.
+fn dse(flags: &HashMap<String, String>, json: bool) -> Result<()> {
+    let threads = flag(flags, "threads", 1usize)?.max(1);
+    let result = if flags.contains_key("all") {
+        figures::dse_frontier_full_zoo(threads)?
+    } else {
+        let model = flags.get("model").map(String::as_str).unwrap_or("resnet18");
+        figures::dse_frontier(&[model], threads)?
+    };
+
+    if json {
+        let mut j = JsonBuilder::new();
+        j.begin_obj();
+        j.key("models");
+        j.begin_arr();
+        for m in &result.space.models {
+            j.str_val(m);
+        }
+        j.end_arr();
+        j.field_u64("threads", result.threads as u64);
+        j.field_u64("points_total", result.points.len() as u64);
+        j.field_f64("wall_ms", result.wall_ms);
+        j.field_u64("cache_hits", result.cache.hits);
+        j.field_u64("cache_misses", result.cache.misses);
+        j.field_f64("cache_hit_rate", result.cache.hit_rate());
+        j.key("points");
+        j.begin_arr();
+        for p in &result.points {
+            write_dse_point(&mut j, p);
+        }
+        j.end_arr();
+        j.key("frontier");
+        j.begin_arr();
+        for p in result.frontier_points() {
+            write_dse_point(&mut j, p);
+        }
+        j.end_arr();
+        j.end_obj();
+        println!("{}", j.finish());
+        return Ok(());
+    }
+
+    println!(
+        "design-space sweep: {} points over {} model{} on {} thread{} \
+         ({:.0} ms wall, cache {:.0}% hit over {} lookups)",
+        result.points.len(),
+        result.space.models.len(),
+        if result.space.models.len() == 1 { "" } else { "s" },
+        result.threads,
+        if result.threads == 1 { "" } else { "s" },
+        result.wall_ms,
+        result.cache.hit_rate() * 100.0,
+        result.cache.hits + result.cache.misses
+    );
+    let table: Vec<Vec<String>> = result
+        .frontier_points()
+        .iter()
+        .map(|p| {
+            vec![
+                p.point.model.clone(),
+                format!("{}", p.point.mem_bus_bytes),
+                format!("{}", p.point.issue_width),
+                format!("{}", p.point.cluster_bus_bytes),
+                format!("int{}", p.point.precision.bits()),
+                format!("{}", p.point.cores),
+                p.point.pipelining.as_str().to_string(),
+                format!("{:.1}", p.gops),
+                format!("{:.1}", p.gops_per_watt),
+                format!("{:.1}x", p.ans),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "Pareto frontier — GOPS / GOPS-per-watt / area-normalized speedup",
+            &[
+                "model", "bus B", "issue", "cbus B", "prec", "cores", "pipelining", "GOPS",
+                "GOPS/W", "ANS",
+            ],
+            &table,
+        )
+    );
+    println!(
+        "{} of {} points are non-dominated; every row reproduces through a plain \
+         sim::Session with the same knobs",
+        result.frontier.len(),
+        result.points.len()
+    );
     Ok(())
 }
 

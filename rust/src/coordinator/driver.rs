@@ -58,7 +58,7 @@ pub struct LayerResult {
 impl LayerResult {
     /// Achieved throughput in GOPS (ops counted un-padded, as the paper).
     pub fn gops(&self) -> f64 {
-        self.ops as f64 / (self.cycles as f64 / self.clock_hz) / 1e9
+        crate::metrics::score::gops(self.ops, self.cycles, self.clock_hz)
     }
 
     /// Fraction of instructions in the classes (compute, load, store) —

@@ -374,11 +374,10 @@ pub fn zoo_summaries(reports: &[RunReport]) -> Vec<ZooSummary> {
         .map(|(m, report)| {
             let speedups: Vec<f64> =
                 report.layers.iter().map(|r| r.speedup.unwrap_or(1.0)).collect();
-            let n = speedups.len().max(1) as f64;
             ZooSummary {
                 model: m.name,
                 layers: report.layers.len(),
-                geomean_speedup: (speedups.iter().map(|s| s.ln()).sum::<f64>() / n).exp(),
+                geomean_speedup: crate::metrics::score::geomean(&speedups),
                 min_speedup: speedups.iter().copied().fold(f64::INFINITY, f64::min),
                 peak_gops: report.layers.iter().map(|r| r.gops).fold(0.0, f64::max),
                 dimc_wins: speedups.iter().filter(|&&s| s > 1.0).count(),
@@ -389,6 +388,30 @@ pub fn zoo_summaries(reports: &[RunReport]) -> Vec<ZooSummary> {
 
 pub fn zoo_sweep() -> Result<Vec<ZooSummary>, SessionError> {
     Ok(zoo_summaries(&zoo_reports()?))
+}
+
+/// Design-space Pareto-frontier figure: sweep the default
+/// [`DseSpace`](crate::dse::DseSpace) around the paper's design point
+/// over `models` on `threads` workers and return the full
+/// [`DseResult`](crate::dse::DseResult) (all priced points + the
+/// non-dominated set over GOPS / GOPS-per-watt / area-normalized
+/// speedup). The frontier is bit-identical at any thread count; backs
+/// `repro dse` and `BENCH_10.json`.
+pub fn dse_frontier(
+    models: &[&str],
+    threads: usize,
+) -> Result<crate::dse::DseResult, crate::dse::DseError> {
+    let space =
+        crate::dse::DseSpace::default_for(models.iter().map(|m| m.to_string()).collect());
+    crate::dse::sweep(&space, threads)
+}
+
+/// [`dse_frontier`] over the whole model zoo — the full sweep behind
+/// `repro dse --all` and the committed `BENCH_10.json` baseline.
+pub fn dse_frontier_full_zoo(
+    threads: usize,
+) -> Result<crate::dse::DseResult, crate::dse::DseError> {
+    crate::dse::sweep(&crate::dse::DseSpace::full_zoo(), threads)
 }
 
 #[cfg(test)]

@@ -1,0 +1,195 @@
+//! Parallel design-space exploration over the analytic machine model —
+//! ROADMAP open item 3.
+//!
+//! The paper's headline results (137 GOP/s peak, 50x area-normalized
+//! speedup) are single design points; this module sweeps the runtime
+//! [`Arch`](crate::arch::Arch) knobs × precision × cores × pipelining ×
+//! model cross product, prices every point with the Plan-analytic
+//! backend (the *cycle-exact* closed form — see
+//! [`pipeline::analytic`](crate::pipeline::analytic)) plus the energy
+//! and area models, and extracts Pareto frontiers over
+//! (GOPS, GOPS/W, area-normalized speedup).
+//!
+//! The perf core is twofold:
+//!
+//! * [`pool::run_indexed`] — a work-stealing `std::thread` pool that
+//!   scales sweep wall-clock near-linearly with cores;
+//! * [`SimCache`] — the shared sharded compile/price memo (hoisted out
+//!   of `cluster/exec.rs`), so points sharing sub-problems never
+//!   recompile: within the default space only the
+//!   (bus, issue, precision) combinations ever reach the compiler, and
+//!   every cluster-knob variation reprices from the table.
+//!
+//! **Determinism rule.** Points are enumerated in fixed mixed-radix
+//! order ([`DseSpace::point`] is a pure function of the index), workers
+//! write into index-addressed slots, and pricing is pure — so the point
+//! list and the frontier are bit-identical at 1 and N threads, and
+//! every point reproduces through a plain
+//! [`sim::Session`](crate::sim::Session) with the same knobs (see
+//! `tests/prop_dse.rs`).
+
+pub mod pareto;
+pub mod pool;
+pub mod price;
+pub mod space;
+
+pub use pareto::{dominates, frontier_indices};
+pub use price::{price_point, PricedPoint};
+pub use space::{DsePoint, DseSpace, InvalidSpace};
+
+use crate::pipeline::core::SimError;
+use crate::sim::cache::{CacheStats, SimCache};
+use crate::workloads::zoo;
+use std::sync::Arc;
+
+/// Why a sweep could not run (or finish).
+#[derive(Debug)]
+pub enum DseError {
+    /// The space definition is malformed (empty axis, zero knob).
+    Invalid(InvalidSpace),
+    /// A model name did not resolve in the zoo.
+    UnknownModel(zoo::UnknownModel),
+    /// A point failed to simulate.
+    Sim(SimError),
+}
+
+impl std::fmt::Display for DseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DseError::Invalid(e) => write!(f, "{e}"),
+            DseError::UnknownModel(e) => write!(f, "{e}"),
+            DseError::Sim(e) => write!(f, "simulation failed: {e:?}"),
+        }
+    }
+}
+
+impl std::error::Error for DseError {}
+
+impl From<InvalidSpace> for DseError {
+    fn from(e: InvalidSpace) -> Self {
+        DseError::Invalid(e)
+    }
+}
+
+impl From<zoo::UnknownModel> for DseError {
+    fn from(e: zoo::UnknownModel) -> Self {
+        DseError::UnknownModel(e)
+    }
+}
+
+impl From<SimError> for DseError {
+    fn from(e: SimError) -> Self {
+        DseError::Sim(e)
+    }
+}
+
+/// A completed sweep: every priced point (ascending enumeration index)
+/// plus the Pareto frontier over (GOPS, GOPS/W, ANS).
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    /// The space that was swept.
+    pub space: DseSpace,
+    /// Worker threads the sweep ran on (pricing is thread-invariant;
+    /// only `wall_ms` depends on this).
+    pub threads: usize,
+    /// All priced points, index `i` == `space.point(i)`.
+    pub points: Vec<PricedPoint>,
+    /// Indices into `points` of the non-dominated set, ascending.
+    pub frontier: Vec<usize>,
+    /// Sweep wall-clock in milliseconds.
+    pub wall_ms: f64,
+    /// Shared-cache hit/miss counters after the sweep.
+    pub cache: CacheStats,
+}
+
+impl DseResult {
+    /// The frontier rows themselves, in ascending enumeration order.
+    pub fn frontier_points(&self) -> Vec<&PricedPoint> {
+        self.frontier.iter().map(|&i| &self.points[i]).collect()
+    }
+
+    /// The objective vector of point `i` — the exact scores the
+    /// frontier was extracted over.
+    pub fn objectives(&self, i: usize) -> [f64; 3] {
+        let p = &self.points[i];
+        [p.gops, p.gops_per_watt, p.ans]
+    }
+}
+
+/// Sweep `space` on `threads` workers. Models are resolved once via
+/// [`zoo::lookup`]; all workers share one [`SimCache`]. The first
+/// simulation error aborts the sweep (deterministically: errors are
+/// inspected in enumeration order, not completion order).
+pub fn sweep(space: &DseSpace, threads: usize) -> Result<DseResult, DseError> {
+    space.validate()?;
+    let models: Vec<zoo::Model> =
+        space.models.iter().map(|m| zoo::lookup(m)).collect::<Result<_, _>>()?;
+    let cache = Arc::new(SimCache::new());
+    let n = space.len();
+    let t0 = std::time::Instant::now();
+    let priced = pool::run_indexed(n, threads, |i| {
+        let p = space.point(i);
+        price_point(&p, &models[p.model_index].layers, &cache)
+    });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut points = Vec::with_capacity(n);
+    for r in priced {
+        points.push(r?);
+    }
+    let scores: Vec<[f64; 3]> =
+        points.iter().map(|p| [p.gops, p.gops_per_watt, p.ans]).collect();
+    let frontier = frontier_indices(&scores);
+    Ok(DseResult {
+        space: space.clone(),
+        threads,
+        points,
+        frontier,
+        wall_ms,
+        cache: cache.stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_space() -> DseSpace {
+        let mut s = DseSpace::default_for(vec!["alexnet".into()]);
+        // 2 x 2 x 2 = 8 points: enough structure, fast to price.
+        s.issue_width = vec![1];
+        s.dimc_compute_latency = vec![3];
+        s.cluster_bus_bytes = vec![32];
+        s.precisions = vec![crate::dimc::Precision::Int4];
+        s
+    }
+
+    #[test]
+    fn sweep_prices_every_point_and_finds_a_frontier() {
+        let s = tiny_space();
+        let r = sweep(&s, 2).unwrap();
+        assert_eq!(r.points.len(), s.len());
+        assert!(!r.frontier.is_empty());
+        // Frontier indices are ascending and in range.
+        assert!(r.frontier.windows(2).all(|w| w[0] < w[1]));
+        assert!(r.frontier.iter().all(|&i| i < r.points.len()));
+        // No frontier point is dominated by any point.
+        for &i in &r.frontier {
+            for j in 0..r.points.len() {
+                assert!(
+                    i == j || !dominates(&r.objectives(j), &r.objectives(i)),
+                    "frontier point {i} dominated by {j}"
+                );
+            }
+        }
+        assert!(r.cache.hits > 0, "sweep never hit the shared cache");
+    }
+
+    #[test]
+    fn unknown_model_and_invalid_space_are_typed_errors() {
+        let s = DseSpace::default_for(vec!["nope".into()]);
+        assert!(matches!(sweep(&s, 1), Err(DseError::UnknownModel(_))));
+        let mut s = tiny_space();
+        s.cores = vec![];
+        assert!(matches!(sweep(&s, 1), Err(DseError::Invalid(_))));
+    }
+}

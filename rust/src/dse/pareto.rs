@@ -1,0 +1,61 @@
+//! Pareto-dominance extraction over maximizing objective vectors.
+
+/// True iff `a` dominates `b`: no worse on every objective (all
+/// objectives maximize) and strictly better on at least one. Identical
+/// vectors do not dominate each other, so exact ties all survive to
+/// the frontier. Scores must be finite (the pricing pipeline never
+/// produces NaN; a NaN here would compare false and silently survive).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b.iter()) {
+        if x < y {
+            return false;
+        }
+        if x > y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Indices of the non-dominated points of `scores`, in ascending index
+/// order. O(n²) pairwise scan — exact, allocation-light, and
+/// deterministic (the order is a function of the input order alone,
+/// never of evaluation timing).
+pub fn frontier_indices(scores: &[[f64; 3]]) -> Vec<usize> {
+    (0..scores.len())
+        .filter(|&i| {
+            !scores.iter().enumerate().any(|(j, s)| j != i && dominates(s, &scores[i]))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_requires_a_strict_win() {
+        assert!(dominates(&[2.0, 1.0, 1.0], &[1.0, 1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]));
+        assert!(!dominates(&[2.0, 0.5, 1.0], &[1.0, 1.0, 1.0]));
+    }
+
+    #[test]
+    fn frontier_excludes_dominated_and_keeps_ties() {
+        let scores = [
+            [1.0, 1.0, 1.0], // dominated by 1 and 3
+            [2.0, 2.0, 2.0],
+            [3.0, 0.5, 0.5], // trades off: on the frontier
+            [2.0, 2.0, 2.0], // exact tie with 1: both survive
+        ];
+        assert_eq!(frontier_indices(&scores), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn frontier_of_empty_and_singleton() {
+        assert!(frontier_indices(&[]).is_empty());
+        assert_eq!(frontier_indices(&[[1.0, 2.0, 3.0]]), vec![0]);
+    }
+}

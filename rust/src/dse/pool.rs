@@ -1,0 +1,106 @@
+//! A minimal work-stealing worker pool over `std::thread` — no
+//! registry dependencies, in the same vendored-free spirit as the
+//! in-repo Lcg/harness.
+//!
+//! Work items are plain indices `0..n`. Each worker owns a deque
+//! seeded with a contiguous chunk (sequential own-queue drain keeps
+//! per-model cache locality); a worker whose deque runs dry steals
+//! from the *back* of a victim's deque. Results land in
+//! index-addressed slots, so the returned vector is in enumeration
+//! order regardless of which worker computed what — determinism costs
+//! nothing as long as `f` itself is pure.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Apply `f` to every index in `0..n` on `threads` workers and return
+/// the results in index order. `threads` is clamped to `[1, n]`;
+/// `threads == 1` runs inline with no pool at all (the baseline the
+/// determinism tests compare against).
+pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let queues: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+        .map(|w| Mutex::new((w * n / threads..(w + 1) * n / threads).collect()))
+        .collect();
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let queues = &queues;
+            let results = &results;
+            let f = &f;
+            scope.spawn(move || loop {
+                // Own queue first (front — sequential order), then steal
+                // from the back of the first non-empty victim.
+                let mut next = queues[w].lock().unwrap().pop_front();
+                if next.is_none() {
+                    for v in (0..queues.len()).filter(|&v| v != w) {
+                        next = queues[v].lock().unwrap().pop_back();
+                        if next.is_some() {
+                            break;
+                        }
+                    }
+                }
+                // Queues only drain (nothing is ever re-enqueued), so
+                // all-empty means all work is claimed and we can exit.
+                let Some(i) = next else { break };
+                let r = f(i);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker pool computed every index"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn computes_every_index_exactly_once_in_order() {
+        let calls = AtomicUsize::new(0);
+        for threads in [1usize, 2, 3, 8] {
+            calls.store(0, Ordering::SeqCst);
+            let out = run_indexed(37, threads, |i| {
+                calls.fetch_add(1, Ordering::SeqCst);
+                i * i
+            });
+            assert_eq!(calls.load(Ordering::SeqCst), 37, "threads={threads}");
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let expect = run_indexed(101, 1, |i| (i as u64).wrapping_mul(0x9E3779B9) >> 3);
+        for threads in 2..=8 {
+            assert_eq!(run_indexed(101, threads, |i| (i as u64).wrapping_mul(0x9E3779B9) >> 3), expect);
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert!(run_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(run_indexed(1, 4, |i| i + 1), vec![1]);
+        // more threads than work: clamped, still correct
+        assert_eq!(run_indexed(3, 64, |i| i), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,135 @@
+//! Point pricing: one [`DsePoint`] -> one scored [`PricedPoint`],
+//! through the exact same machinery a [`Session`](crate::sim::Session)
+//! run uses — the cluster scheduler over the Plan-analytic backend —
+//! so every point is reproducible outside the DSE.
+
+use super::space::DsePoint;
+use crate::cluster::exec::ClusterSim;
+use crate::cluster::topology::ClusterTopology;
+use crate::compiler::layer::LayerConfig;
+use crate::metrics::{score, AreaModel, EnergyModel};
+use crate::pipeline::core::SimError;
+use crate::sim::cache::SimCache;
+use crate::sim::{Engine, Timing};
+use std::sync::Arc;
+
+/// One priced sweep point: the point itself plus its raw counts and
+/// the three maximizing objectives the Pareto frontier is taken over
+/// (GOPS, GOPS/W, area-normalized speedup).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PricedPoint {
+    /// The knob assignment this row prices.
+    pub point: DsePoint,
+    /// Network cycles of one image on the point's cluster (batch 1).
+    pub cycles: u64,
+    /// Single-core baseline (pure-RVV) cycles for the same network.
+    pub baseline_cycles: u64,
+    /// Operation count of one image (2 x MACs).
+    pub ops: u64,
+    /// The cluster mode the scheduler picked
+    /// (`layer-parallel` / `image-parallel`).
+    pub mode: &'static str,
+    /// Objective 1: achieved throughput in GOPS.
+    pub gops: f64,
+    /// Objective 2: efficiency in GOPS/W (energy model over the DIMC
+    /// instruction stream; time-independent, so cluster packing does
+    /// not distort it).
+    pub gops_per_watt: f64,
+    /// Baseline cycles / point cycles.
+    pub speedup: f64,
+    /// Objective 3: area-normalized speedup — the paper's 50x metric,
+    /// charged for all `cores` DIMC-RVV cores against one baseline
+    /// core ([`AreaModel::ans`] / cores).
+    pub ans: f64,
+}
+
+/// Price `point` over `layers` (the resolved model) through `cache`.
+///
+/// Always the analytic timing backend — the whole premise of the DSE
+/// is spending its speed (cycle-exact against the interpreter by the
+/// PR 5 differential tests). Pure: two calls with the same inputs
+/// return bit-identical rows, cached or not, on any thread.
+pub fn price_point(
+    point: &DsePoint,
+    layers: &[LayerConfig],
+    cache: &Arc<SimCache>,
+) -> Result<PricedPoint, SimError> {
+    let arch = point.arch();
+    let mut sim = ClusterSim::shared(
+        arch,
+        point.precision,
+        Timing::Analytic,
+        point.pipelining,
+        Arc::clone(cache),
+    );
+    let topo = ClusterTopology::from_arch(point.cores, &arch);
+    let sched = sim.schedule(&point.model, layers, &topo, 1)?;
+
+    let mut baseline_cycles = 0u64;
+    let mut counts = [0u64; 8];
+    for l in layers {
+        baseline_cycles +=
+            cache.price(l, Engine::Baseline, point.precision, &arch, Timing::Analytic)?.cycles;
+        let d = cache.price(l, Engine::Dimc, point.precision, &arch, Timing::Analytic)?;
+        for (acc, c) in counts.iter_mut().zip(d.class_counts.iter()) {
+            *acc += c;
+        }
+    }
+
+    let energy = EnergyModel::default().estimate_counts(&counts, sched.ops);
+    let speedup = score::speedup(baseline_cycles, sched.cycles).unwrap_or(0.0);
+    Ok(PricedPoint {
+        cycles: sched.cycles,
+        baseline_cycles,
+        ops: sched.ops,
+        mode: sched.mode.as_str(),
+        gops: score::gops(sched.ops, sched.cycles, arch.clock_hz),
+        gops_per_watt: energy.tops_per_watt * 1e3,
+        speedup,
+        ans: AreaModel::default().ans(speedup) / point.cores.max(1) as f64,
+        point: point.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::space::DseSpace;
+
+    #[test]
+    fn pricing_is_pure_and_speedup_is_real() {
+        let space = DseSpace::default_for(vec!["resnet18".into()]);
+        let layers = crate::workloads::zoo::lookup("resnet18").unwrap().layers;
+        let cache = Arc::new(SimCache::new());
+        let p = space.point(0);
+        let a = price_point(&p, &layers, &cache).unwrap();
+        let b = price_point(&p, &layers, &cache).unwrap();
+        assert_eq!(a, b);
+        assert!(a.speedup > 1.0, "DIMC point no faster than baseline: {}", a.speedup);
+        assert!(a.gops > 0.0 && a.gops_per_watt > 0.0 && a.ans > 0.0);
+        assert_eq!(a.point.cores, 1);
+    }
+
+    #[test]
+    fn more_cores_never_slow_a_point_down() {
+        let space = DseSpace::default_for(vec!["resnet18".into()]);
+        let layers = crate::workloads::zoo::lookup("resnet18").unwrap().layers;
+        let cache = Arc::new(SimCache::new());
+        // cores axis is [1, 4]; find two points differing only in cores.
+        let one = space.point(0);
+        let mut idx4 = None;
+        for i in 0..space.len() {
+            let p = space.point(i);
+            if p.cores == 4
+                && (DsePoint { cores: 1, index: one.index, ..p.clone() }) == one
+            {
+                idx4 = Some(i);
+                break;
+            }
+        }
+        let four = space.point(idx4.expect("4-core twin of point 0"));
+        let r1 = price_point(&one, &layers, &cache).unwrap();
+        let r4 = price_point(&four, &layers, &cache).unwrap();
+        assert!(r4.cycles <= r1.cycles, "{} > {}", r4.cycles, r1.cycles);
+    }
+}

@@ -1,0 +1,274 @@
+//! The typed sweep space and its deterministic point enumeration.
+
+use crate::arch::Arch;
+use crate::compiler::netplan::Pipelining;
+use crate::dimc::Precision;
+use crate::workloads::zoo;
+
+/// A design-space definition: one axis per runtime [`Arch`] knob the
+/// DSE varies, plus precision, core count, pipelining policy and the
+/// zoo models to sweep. The space is the cross product of all axes;
+/// points are enumerated in a fixed lexicographic (mixed-radix) order —
+/// [`DseSpace::point`] is a pure function of the index, which is what
+/// makes multi-threaded sweeps bit-deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DseSpace {
+    /// Zoo model names (the outermost axis; resolved via
+    /// [`zoo::lookup`] once per sweep).
+    pub models: Vec<String>,
+    /// VLSU memory-port width axis (`Arch::mem_bus_bytes`).
+    pub mem_bus_bytes: Vec<u64>,
+    /// Front-end issue-width axis (`Arch::issue_width`).
+    pub issue_width: Vec<u64>,
+    /// DIMC compute-latency axis (`Arch::dimc_compute_latency`).
+    pub dimc_compute_latency: Vec<u64>,
+    /// DIMC load-latency axis (`Arch::dimc_load_latency`).
+    pub dimc_load_latency: Vec<u64>,
+    /// Shared cluster-bus width axis (`Arch::cluster_bus_bytes`).
+    pub cluster_bus_bytes: Vec<u64>,
+    /// Cluster barrier-cost axis (`Arch::cluster_barrier_cycles`).
+    pub cluster_barrier_cycles: Vec<u64>,
+    /// DIMC operand-precision axis.
+    pub precisions: Vec<Precision>,
+    /// Cluster core-count axis.
+    pub cores: Vec<u32>,
+    /// Inter-layer pipelining axis.
+    pub pipelining: Vec<Pipelining>,
+}
+
+/// One enumerated point of a [`DseSpace`]: a concrete knob assignment.
+/// [`DsePoint::arch`] folds the knobs into a runnable [`Arch`], so any
+/// point is reproducible through a plain
+/// [`sim::Session`](crate::sim::Session) with the same settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DsePoint {
+    /// Enumeration index within the space (stable across thread counts).
+    pub index: usize,
+    /// Position of `model` on the space's model axis.
+    pub model_index: usize,
+    /// The zoo model this point prices.
+    pub model: String,
+    /// `Arch::mem_bus_bytes` at this point.
+    pub mem_bus_bytes: u64,
+    /// `Arch::issue_width` at this point.
+    pub issue_width: u64,
+    /// `Arch::dimc_compute_latency` at this point.
+    pub dimc_compute_latency: u64,
+    /// `Arch::dimc_load_latency` at this point.
+    pub dimc_load_latency: u64,
+    /// `Arch::cluster_bus_bytes` at this point.
+    pub cluster_bus_bytes: u64,
+    /// `Arch::cluster_barrier_cycles` at this point.
+    pub cluster_barrier_cycles: u64,
+    /// DIMC operand precision at this point.
+    pub precision: Precision,
+    /// Cluster cores at this point.
+    pub cores: u32,
+    /// Inter-layer pipelining policy at this point.
+    pub pipelining: Pipelining,
+}
+
+impl DsePoint {
+    /// The [`Arch`] this point runs at: the swept knobs applied over
+    /// the defaults (clock and the remaining latencies untouched).
+    pub fn arch(&self) -> Arch {
+        Arch {
+            mem_bus_bytes: self.mem_bus_bytes,
+            issue_width: self.issue_width,
+            dimc_compute_latency: self.dimc_compute_latency,
+            dimc_load_latency: self.dimc_load_latency,
+            cluster_bus_bytes: self.cluster_bus_bytes,
+            cluster_barrier_cycles: self.cluster_barrier_cycles,
+            ..Arch::default()
+        }
+    }
+}
+
+/// A malformed [`DseSpace`] (empty axis or a zero-valued knob that the
+/// timing model requires to be positive).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InvalidSpace(pub String);
+
+impl std::fmt::Display for InvalidSpace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid DSE space: {}", self.0)
+    }
+}
+
+impl std::error::Error for InvalidSpace {}
+
+fn pick<T: Copy>(axis: &[T], i: &mut usize) -> T {
+    let k = *i % axis.len();
+    *i /= axis.len();
+    axis[k]
+}
+
+impl DseSpace {
+    /// The default sweep around the paper's design point for the given
+    /// models: bus width and issue width doubled or not, the published
+    /// 3-cycle DC.P macro against a hypothetical 2-cycle one, two
+    /// cluster bus widths, Int4/Int2, 1 or 4 cores, both pipelining
+    /// settings — 128 points per model.
+    pub fn default_for(models: Vec<String>) -> DseSpace {
+        DseSpace {
+            models,
+            mem_bus_bytes: vec![8, 16],
+            issue_width: vec![1, 2],
+            dimc_compute_latency: vec![3, 2],
+            dimc_load_latency: vec![1],
+            cluster_bus_bytes: vec![32, 64],
+            cluster_barrier_cycles: vec![32],
+            precisions: vec![Precision::Int4, Precision::Int2],
+            cores: vec![1, 4],
+            pipelining: vec![Pipelining::Off, Pipelining::Overlap],
+        }
+    }
+
+    /// The default sweep over the whole model zoo.
+    pub fn full_zoo() -> DseSpace {
+        Self::default_for(zoo::all_models().iter().map(|m| m.name.to_string()).collect())
+    }
+
+    /// Points per model (the product of every non-model axis).
+    pub fn points_per_model(&self) -> usize {
+        self.mem_bus_bytes.len()
+            * self.issue_width.len()
+            * self.dimc_compute_latency.len()
+            * self.dimc_load_latency.len()
+            * self.cluster_bus_bytes.len()
+            * self.cluster_barrier_cycles.len()
+            * self.precisions.len()
+            * self.cores.len()
+            * self.pipelining.len()
+    }
+
+    /// Total number of points in the space.
+    pub fn len(&self) -> usize {
+        self.points_per_model() * self.models.len()
+    }
+
+    /// True iff the space enumerates no points.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Check every axis is non-empty and every knob value is legal for
+    /// the timing model.
+    pub fn validate(&self) -> Result<(), InvalidSpace> {
+        let axes: [(&str, usize); 10] = [
+            ("models", self.models.len()),
+            ("mem_bus_bytes", self.mem_bus_bytes.len()),
+            ("issue_width", self.issue_width.len()),
+            ("dimc_compute_latency", self.dimc_compute_latency.len()),
+            ("dimc_load_latency", self.dimc_load_latency.len()),
+            ("cluster_bus_bytes", self.cluster_bus_bytes.len()),
+            ("cluster_barrier_cycles", self.cluster_barrier_cycles.len()),
+            ("precisions", self.precisions.len()),
+            ("cores", self.cores.len()),
+            ("pipelining", self.pipelining.len()),
+        ];
+        for (name, len) in axes {
+            if len == 0 {
+                return Err(InvalidSpace(format!("axis `{name}` is empty")));
+            }
+        }
+        for (name, axis) in [
+            ("mem_bus_bytes", &self.mem_bus_bytes),
+            ("issue_width", &self.issue_width),
+            ("dimc_compute_latency", &self.dimc_compute_latency),
+            ("dimc_load_latency", &self.dimc_load_latency),
+            ("cluster_bus_bytes", &self.cluster_bus_bytes),
+        ] {
+            if axis.iter().any(|&v| v == 0) {
+                return Err(InvalidSpace(format!("axis `{name}` contains 0")));
+            }
+        }
+        if self.cores.iter().any(|&c| c == 0) {
+            return Err(InvalidSpace("axis `cores` contains 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Decode point `index` (mixed-radix, innermost axis =
+    /// `pipelining`, outermost = model). Panics if `index >= len()`.
+    pub fn point(&self, index: usize) -> DsePoint {
+        assert!(index < self.len(), "point index {index} out of range {}", self.len());
+        let mut i = index;
+        let pipelining = pick(&self.pipelining, &mut i);
+        let cores = pick(&self.cores, &mut i);
+        let precision = pick(&self.precisions, &mut i);
+        let cluster_barrier_cycles = pick(&self.cluster_barrier_cycles, &mut i);
+        let cluster_bus_bytes = pick(&self.cluster_bus_bytes, &mut i);
+        let dimc_load_latency = pick(&self.dimc_load_latency, &mut i);
+        let dimc_compute_latency = pick(&self.dimc_compute_latency, &mut i);
+        let issue_width = pick(&self.issue_width, &mut i);
+        let mem_bus_bytes = pick(&self.mem_bus_bytes, &mut i);
+        let model_index = i % self.models.len();
+        DsePoint {
+            index,
+            model_index,
+            model: self.models[model_index].clone(),
+            mem_bus_bytes,
+            issue_width,
+            dimc_compute_latency,
+            dimc_load_latency,
+            cluster_bus_bytes,
+            cluster_barrier_cycles,
+            precision,
+            cores,
+            pipelining,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_space_size_and_decode_are_stable() {
+        let s = DseSpace::default_for(vec!["resnet18".into(), "alexnet".into()]);
+        assert_eq!(s.points_per_model(), 128);
+        assert_eq!(s.len(), 256);
+        assert!(s.validate().is_ok());
+        // Index 0 is the first value on every axis.
+        let p0 = s.point(0);
+        assert_eq!(p0.model, "resnet18");
+        assert_eq!(p0.mem_bus_bytes, 8);
+        assert_eq!(p0.pipelining, Pipelining::Off);
+        // The innermost axis toggles first.
+        assert_eq!(s.point(1).pipelining, Pipelining::Overlap);
+        assert_eq!(s.point(1).model, "resnet18");
+        // The model axis is outermost.
+        assert_eq!(s.point(128).model, "alexnet");
+        // Decode covers every combination exactly once.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..s.len() {
+            let p = s.point(i);
+            assert_eq!(p.index, i);
+            assert!(seen.insert(format!("{p:?}").replace(&format!("index: {i}"), "")));
+        }
+    }
+
+    #[test]
+    fn validation_rejects_empty_and_zero_axes() {
+        let mut s = DseSpace::default_for(vec!["resnet18".into()]);
+        s.cores = vec![];
+        assert!(s.validate().is_err());
+        let mut s = DseSpace::default_for(vec!["resnet18".into()]);
+        s.mem_bus_bytes = vec![0];
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn point_arch_applies_knobs_over_defaults() {
+        let s = DseSpace::default_for(vec!["resnet18".into()]);
+        let p = s.point(s.len() - 1);
+        let a = p.arch();
+        assert_eq!(a.mem_bus_bytes, 16);
+        assert_eq!(a.issue_width, 2);
+        assert_eq!(a.cluster_bus_bytes, 64);
+        assert_eq!(a.clock_hz, Arch::default().clock_hz);
+        assert_eq!(a.mem_load_latency, Arch::default().mem_load_latency);
+    }
+}

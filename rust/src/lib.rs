@@ -65,6 +65,14 @@
 //!   (`repro timeline --out trace.json`), all gated behind the
 //!   [`obs::TraceLevel`] Session knob — `Off` (default) records nothing
 //!   and is bit-identical to an untraced run.
+//! * [`dse`] — parallel design-space exploration: enumerate a typed
+//!   [`dse::DseSpace`] (runtime [`Arch`] knobs × precision × cores ×
+//!   pipelining × zoo model), price every point through the analytic
+//!   backend plus the energy/area models on a work-stealing
+//!   `std::thread` pool over the shared [`sim::SimCache`], and extract
+//!   Pareto frontiers over (GOPS, GOPS/W, area-normalized speedup) —
+//!   bit-deterministic at any thread count
+//!   (`repro dse --all --threads 4 --json`).
 //! * [`sim`] — the unified execution façade over all of the above: a
 //!   validated [`sim::Session`] built via [`sim::SessionBuilder`]
 //!   executes typed [`sim::RunSpec`] requests (layer, network,
@@ -118,5 +126,6 @@ pub mod cluster;
 pub mod serve;
 pub mod obs;
 pub mod sim;
+pub mod dse;
 
 pub use arch::Arch;

@@ -6,6 +6,7 @@ pub mod area;
 pub mod energy;
 pub mod report;
 pub mod scaling;
+pub mod score;
 
 pub use area::AreaModel;
 pub use energy::EnergyModel;

@@ -141,11 +141,12 @@ pub struct Summary {
 /// Fold rows into the headline summary statistics.
 pub fn summarize(rows: &[LayerRow]) -> Summary {
     let n = rows.len().max(1) as f64;
+    let speedups: Vec<f64> = rows.iter().map(|r| r.speedup).collect();
     Summary {
         peak_gops: rows.iter().map(|r| r.gops).fold(0.0, f64::max),
         mean_gops: rows.iter().map(|r| r.gops).sum::<f64>() / n,
         peak_speedup: rows.iter().map(|r| r.speedup).fold(0.0, f64::max),
-        geomean_speedup: (rows.iter().map(|r| r.speedup.ln()).sum::<f64>() / n).exp(),
+        geomean_speedup: super::score::geomean(&speedups),
         min_ans: rows.iter().map(|r| r.ans).fold(f64::INFINITY, f64::min),
         peak_ans: rows.iter().map(|r| r.ans).fold(0.0, f64::max),
     }

@@ -84,7 +84,7 @@ pub fn project(l: &LayerConfig, r: &LayerResult, tiles: u32) -> TileProjection {
     } else {
         Bound::Memory
     };
-    let gops = r.ops as f64 / (cycles as f64 / r.clock_hz) / 1e9;
+    let gops = super::score::gops(r.ops, cycles, r.clock_hz);
     TileProjection { tiles, cycles, gops, bound }
 }
 

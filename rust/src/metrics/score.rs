@@ -1,0 +1,62 @@
+//! Shared scoring arithmetic — the one place GOPS, speedup and
+//! geometric means are computed.
+//!
+//! Every per-layer/per-network result type used to carry its own copy
+//! of `ops / (cycles / clock) / 1e9`; the DSE engine scores thousands
+//! of points with the same formulas, so they live here and everything
+//! (driver, cluster, serving, figures, DSE) delegates.
+
+/// Achieved throughput in GOPS: `ops` retired over `cycles` at
+/// `clock_hz`. Returns 0 for an empty run (`cycles == 0`) so callers
+/// never divide by zero.
+pub fn gops(ops: u64, cycles: u64, clock_hz: f64) -> f64 {
+    if cycles == 0 {
+        0.0
+    } else {
+        ops as f64 / (cycles as f64 / clock_hz) / 1e9
+    }
+}
+
+/// Baseline-over-candidate speedup; `None` when the candidate count is
+/// zero (nothing ran, no meaningful ratio).
+pub fn speedup(baseline_cycles: u64, cycles: u64) -> Option<f64> {
+    if cycles == 0 {
+        None
+    } else {
+        Some(baseline_cycles as f64 / cycles as f64)
+    }
+}
+
+/// Geometric mean of `xs` (1.0 for an empty slice — the multiplicative
+/// identity, matching the additive-mean convention of returning 0).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gops_formula_and_zero_guard() {
+        // 1e9 ops in 5e8 cycles at 500 MHz = 1 second = 1 GOPS.
+        assert!((gops(1_000_000_000, 500_000_000, 500e6) - 1.0).abs() < 1e-12);
+        assert_eq!(gops(123, 0, 500e6), 0.0);
+    }
+
+    #[test]
+    fn speedup_ratio_and_zero_guard() {
+        assert_eq!(speedup(200, 100), Some(2.0));
+        assert_eq!(speedup(200, 0), None);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert_eq!(geomean(&[]), 1.0);
+        assert!((geomean(&[4.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+}

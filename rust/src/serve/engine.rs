@@ -131,6 +131,31 @@ impl Server {
         }
     }
 
+    /// As [`Server::configured`] but pricing every shard simulation
+    /// through an externally shared compile/price cache
+    /// ([`SimCache`](crate::sim::cache::SimCache)) instead of a private
+    /// one. Service times are bit-identical either way — every cached
+    /// value is a pure function of its key — so this is purely a cost
+    /// knob for sessions/sweeps that run many configurations over the
+    /// same model set.
+    pub fn shared(
+        arch: Arch,
+        precision: Precision,
+        cores: u32,
+        timing: crate::sim::Timing,
+        pipelining: crate::sim::Pipelining,
+        cache: std::sync::Arc<crate::sim::cache::SimCache>,
+    ) -> Self {
+        Server {
+            sim: ClusterSim::shared(arch, precision, timing, pipelining, cache),
+            topo: ClusterTopology::from_arch(cores, &arch),
+            sample_depth: false,
+            cache: HashMap::new(),
+            decode_cache: HashMap::new(),
+            kv_cache: HashMap::new(),
+        }
+    }
+
     /// Cluster service time for a batch of `batch` images of
     /// `workloads[model]`, plus the average number of cores the batch
     /// keeps busy. Memoized per `(model, batch)`.

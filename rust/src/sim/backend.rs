@@ -36,6 +36,7 @@ use crate::obs::{StallAttr, StallClass, Timeline};
 use crate::serve::stats::percentile;
 use crate::serve::{ServePhase, ServeReport, Server, TraceConfig};
 use std::collections::HashSet;
+use std::sync::Arc;
 
 /// An execution engine the [`Session`](crate::sim::Session) façade can
 /// dispatch typed requests to. Implementations own whatever simulator
@@ -66,6 +67,7 @@ fn base_report(backend: &'static str, cfg: &SessionConfig, model: String) -> Run
         ops: 0,
         gops: 0.0,
         speedup: None,
+        ans: None,
         mode: None,
         utilization: None,
         layers: Vec::new(),
@@ -79,10 +81,7 @@ fn base_report(backend: &'static str, cfg: &SessionConfig, model: String) -> Run
 }
 
 fn gops_of(ops: u64, cycles: u64, clock_hz: f64) -> f64 {
-    if cycles == 0 {
-        return 0.0;
-    }
-    ops as f64 / (cycles as f64 / clock_hz) / 1e9
+    crate::metrics::score::gops(ops, cycles, clock_hz)
 }
 
 /// Functional execution is pinned to Int4 (the legacy driver's packing
@@ -237,6 +236,7 @@ impl SingleCore {
         rep.ops = row.ops;
         rep.gops = row.gops;
         rep.speedup = row.speedup;
+        rep.ans = row.ans;
         rep.layers = vec![row];
         attach_single_obs(cfg, &mut rep, &[(l.name.clone(), run)]);
         Ok(rep)
@@ -283,6 +283,7 @@ impl SingleCore {
         } else {
             None
         };
+        rep.ans = rep.speedup.map(|s| self.area.ans(s));
         rep.layers = rows;
         attach_single_obs(cfg, &mut rep, &runs);
         if cfg.trace_level.counters_on() {
@@ -424,10 +425,20 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(cfg: &SessionConfig) -> Self {
-        Cluster {
-            sim: ClusterSim::configured(cfg.arch, cfg.precision, cfg.timing, cfg.pipelining),
-            topo: ClusterTopology::from_arch(cfg.cores, &cfg.arch),
-        }
+        // When the session carries a shared SimCache, every schedule
+        // prices through it (bit-identical to a private cache — the
+        // cached values are pure functions of their keys).
+        let sim = match &cfg.sim_cache {
+            Some(c) => ClusterSim::shared(
+                cfg.arch,
+                cfg.precision,
+                cfg.timing,
+                cfg.pipelining,
+                Arc::clone(c),
+            ),
+            None => ClusterSim::configured(cfg.arch, cfg.precision, cfg.timing, cfg.pipelining),
+        };
+        Cluster { sim, topo: ClusterTopology::from_arch(cfg.cores, &cfg.arch) }
     }
 
     /// Schedule the session's model at an explicit core count and batch —
@@ -655,9 +666,21 @@ impl Serving {
     pub fn new(cfg: &SessionConfig) -> Self {
         // The serving engine prices batches through the cluster
         // scheduler; route it through the session's timing backend and
-        // inter-layer pipelining policy.
-        let mut server =
-            Server::configured(cfg.arch, cfg.precision, cfg.cores, cfg.timing, cfg.pipelining);
+        // inter-layer pipelining policy (and its shared compile/price
+        // cache, when the session carries one).
+        let mut server = match &cfg.sim_cache {
+            Some(c) => Server::shared(
+                cfg.arch,
+                cfg.precision,
+                cfg.cores,
+                cfg.timing,
+                cfg.pipelining,
+                Arc::clone(c),
+            ),
+            None => {
+                Server::configured(cfg.arch, cfg.precision, cfg.cores, cfg.timing, cfg.pipelining)
+            }
+        };
         // Queue-depth sampling feeds the timeline's counter track; keep
         // it off below Full so the hot event loop allocates nothing.
         server.sample_depth = cfg.trace_level.timeline_on();

@@ -1,0 +1,407 @@
+//! Shared, thread-safe compile/price memo — the geometry-keyed shard
+//! cache that used to live inside each [`ClusterSim`], hoisted out so
+//! the Cluster backend, the Serving engine and the parallel DSE workers
+//! all reuse one table.
+//!
+//! [`ClusterSim`]: crate::cluster::exec::ClusterSim
+//!
+//! Three tiers, all memoizing pure functions of their keys:
+//!
+//! 1. **Plans** — `(geometry, precision bits, engine) ->
+//!    Arc<CompiledLayer>`: the lowered instruction stream + Plan IR.
+//!    Compilation does not depend on [`Arch`] at all, so one compile
+//!    serves every architecture point of a sweep.
+//! 2. **Prices** — `(geometry, [`ArchKey`], bits, engine, timing) ->
+//!    [`PricedLayer`]`: cycles / instret / class counts from
+//!    [`timed_stats`] plus traffic read off the Plan.
+//! 3. **Chains** — `(geometry chain, [`ArchKey`], bits) -> per-boundary
+//!    overlap savings`: the [`netplan::overlap_savings`] vector, rebuilt
+//!    from cached Plans (cloned, never recompiled).
+//!
+//! [`netplan::overlap_savings`]: crate::compiler::netplan::overlap_savings
+//!
+//! The table is sharded (16 mutex-guarded segments selected by hashing
+//! the geometry key) so concurrent DSE workers rarely collide on a
+//! lock. Misses compile/price *outside* the lock: the underlying
+//! functions are pure, so a racing duplicate is bit-identical and the
+//! `entry` insert keeps exactly one. Keys deliberately exclude
+//! `clock_hz` (cycle counts are clock-independent) and the
+//! `cluster_*` knobs (they enter only through
+//! [`ClusterTopology`](crate::cluster::topology::ClusterTopology),
+//! outside the cache) — the main cache win of a DSE sweep, since points
+//! differing only in cluster knobs share every compile and price.
+
+use crate::arch::Arch;
+use crate::compiler::layer::{LayerConfig, LayerKind};
+use crate::compiler::netplan::{NetworkPlan, Pipelining};
+use crate::compiler::plan::{CompiledLayer, Plan};
+use crate::coordinator::driver::{compile_for, timed_stats};
+use crate::dimc::Precision;
+use crate::pipeline::core::SimError;
+use crate::sim::{Engine, Timing};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Geometry key of one layer (name-insensitive: two layers with
+/// identical shapes share every cache entry).
+pub type GeomKey = (u8, u32, u32, u32, u32, u32, u32, u32, u32);
+
+/// The cache key of `l`: layer kind (with timing-relevant fusion flags)
+/// plus the full shape tuple.
+pub fn geom_key(l: &LayerConfig) -> GeomKey {
+    let kind = match l.kind {
+        LayerKind::Conv => 0u8,
+        LayerKind::Fc => 1u8,
+        // Fusion flags do not steer the instruction stream, but keep the
+        // keys distinct so the cache never has to reason about that.
+        LayerKind::Gemm { bias, relu, residual } => {
+            2u8 | (u8::from(bias) << 2) | (u8::from(relu) << 3) | (u8::from(residual) << 4)
+        }
+        // The active aggregate is priced like the equivalent dense GEMM,
+        // and expert/active counts are already folded into the och/ich
+        // geometry — only the bias flag needs its own key bit.
+        LayerKind::MoeGemm { bias, .. } => 3u8 | (u8::from(bias) << 2),
+    };
+    (kind, l.ich, l.och, l.kh, l.kw, l.ih, l.iw, l.stride, l.pad)
+}
+
+/// The [`Arch`] knobs that can steer a single-core compile or price:
+/// the ten integer timing parameters. `clock_hz` is excluded (cycle
+/// counts are clock-independent; GOPS conversion happens outside the
+/// cache) and so are the `cluster_*` knobs (inert below the topology
+/// layer — see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArchKey {
+    knobs: [u64; 10],
+}
+
+impl ArchKey {
+    /// Project `arch` onto its cache-relevant knobs.
+    pub fn of(arch: &Arch) -> ArchKey {
+        ArchKey {
+            knobs: [
+                arch.mem_load_latency,
+                arch.mem_store_latency,
+                arch.mem_bus_bytes,
+                arch.alu_latency,
+                arch.mul_latency,
+                arch.valu_latency,
+                arch.branch_penalty,
+                arch.dimc_compute_latency,
+                arch.dimc_load_latency,
+                arch.issue_width,
+            ],
+        }
+    }
+}
+
+/// One memoized single-core layer price: everything
+/// [`timed_stats`] reports plus the Plan's external-memory traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PricedLayer {
+    /// Simulated cycles under the keyed timing backend.
+    pub cycles: u64,
+    /// Retired instructions.
+    pub instret: u64,
+    /// External-memory traffic in bytes
+    /// ([`Plan::mem_bytes`](crate::compiler::plan::Plan::mem_bytes)).
+    pub mem_bytes: u64,
+    /// Per-class instruction histogram (index-aligned with
+    /// [`class_index`](crate::pipeline::core::class_index)).
+    pub class_counts: [u64; 8],
+}
+
+/// Aggregate hit/miss counters over all three cache tiers.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the table.
+    pub hits: u64,
+    /// Lookups that had to compile or price.
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the table (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+type PlanKey = (GeomKey, u8, u8); // geometry, precision bits, engine
+type PriceKey = (GeomKey, ArchKey, u8, u8, u8); // + timing backend
+type ChainKey = (Vec<GeomKey>, ArchKey, u8);
+
+#[derive(Default)]
+struct Segment {
+    plans: HashMap<PlanKey, Arc<CompiledLayer>>,
+    prices: HashMap<PriceKey, PricedLayer>,
+    chains: HashMap<ChainKey, Arc<Vec<u64>>>,
+}
+
+const SEGMENTS: usize = 16;
+
+/// The shared compile/price cache. Cheap to clone behind an
+/// [`Arc`]; see the module docs for the key design and the sharding /
+/// lock discipline.
+pub struct SimCache {
+    segments: Vec<Mutex<Segment>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for SimCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for SimCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimCache").field("stats", &self.stats()).finish_non_exhaustive()
+    }
+}
+
+impl SimCache {
+    /// An empty cache.
+    pub fn new() -> SimCache {
+        SimCache {
+            segments: (0..SEGMENTS).map(|_| Mutex::new(Segment::default())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn segment(&self, g: &GeomKey) -> &Mutex<Segment> {
+        let mut h = DefaultHasher::new();
+        g.hash(&mut h);
+        &self.segments[(h.finish() as usize) % SEGMENTS]
+    }
+
+    /// Precision bits for a cache key. The baseline compiler ignores
+    /// DIMC precision entirely ([`compile_for`] routes it to
+    /// `compile_baseline_planned` at the fixed int8 path), so baseline
+    /// keys normalize to 8 bits and all precisions share one entry.
+    fn key_bits(engine: Engine, precision: Precision) -> u8 {
+        match engine {
+            Engine::Baseline => 8,
+            Engine::Dimc => precision.bits() as u8,
+        }
+    }
+
+    fn engine_byte(engine: Engine) -> u8 {
+        match engine {
+            Engine::Baseline => 0,
+            Engine::Dimc => 1,
+        }
+    }
+
+    fn timing_byte(timing: Timing) -> u8 {
+        match timing {
+            Timing::Interpreter => 0,
+            Timing::Analytic => 1,
+        }
+    }
+
+    /// The compiled form of `l` (instruction stream + Plan), memoized by
+    /// geometry. Arch-independent: one compile serves every sweep point.
+    pub fn compiled(
+        &self,
+        l: &LayerConfig,
+        engine: Engine,
+        precision: Precision,
+    ) -> Arc<CompiledLayer> {
+        let key = (geom_key(l), Self::key_bits(engine, precision), Self::engine_byte(engine));
+        let seg = self.segment(&key.0);
+        if let Some(hit) = seg.lock().unwrap().plans.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = Arc::new(compile_for(l, engine, precision));
+        Arc::clone(seg.lock().unwrap().plans.entry(key).or_insert(fresh))
+    }
+
+    /// Price `l` under `(arch, timing)`: cycles, instret, class counts
+    /// and Plan traffic, memoized by `(geometry, ArchKey, bits, engine,
+    /// timing)`. A miss reuses the compiled tier, so at most one
+    /// compile ever happens per geometry.
+    pub fn price(
+        &self,
+        l: &LayerConfig,
+        engine: Engine,
+        precision: Precision,
+        arch: &Arch,
+        timing: Timing,
+    ) -> Result<PricedLayer, SimError> {
+        let key = (
+            geom_key(l),
+            ArchKey::of(arch),
+            Self::key_bits(engine, precision),
+            Self::engine_byte(engine),
+            Self::timing_byte(timing),
+        );
+        if let Some(&hit) = self.segment(&key.0).lock().unwrap().prices.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let c = self.compiled(l, engine, precision);
+        let stats = timed_stats(&c, engine, precision, *arch, timing)?;
+        let v = PricedLayer {
+            cycles: stats.cycles,
+            instret: stats.instret,
+            mem_bytes: c.plan.mem_bytes(),
+            class_counts: stats.class_counts,
+        };
+        self.segment(&key.0).lock().unwrap().prices.insert(key, v);
+        Ok(v)
+    }
+
+    /// Per-boundary [`Pipelining::Overlap`] savings of `layers`' DIMC
+    /// chain under `arch` — bit-identical to
+    /// [`netplan::overlap_savings`](crate::compiler::netplan::overlap_savings)
+    /// but built from cached Plans (cloned, never recompiled) and
+    /// memoized by the whole chain's geometry.
+    pub fn overlap_savings(
+        &self,
+        layers: &[LayerConfig],
+        precision: Precision,
+        arch: &Arch,
+    ) -> Vec<u64> {
+        if layers.len() < 2 {
+            return Vec::new();
+        }
+        let geoms: Vec<GeomKey> = layers.iter().map(geom_key).collect();
+        let first = geoms[0];
+        let key = (geoms, ArchKey::of(arch), precision.bits() as u8);
+        if let Some(hit) = self.segment(&first).lock().unwrap().chains.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.as_ref().clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plans: Vec<Plan> = layers
+            .iter()
+            .map(|l| self.compiled(l, Engine::Dimc, precision).plan.clone())
+            .collect();
+        let np = NetworkPlan::build(plans, precision, arch, Pipelining::Overlap);
+        let v: Vec<u64> = np.decisions.iter().map(|d| d.saved_cycles).collect();
+        let out = v.clone();
+        self.segment(&first).lock().unwrap().chains.entry(key).or_insert_with(|| Arc::new(v));
+        out
+    }
+
+    /// Aggregate hit/miss counters (all three tiers; a price miss that
+    /// hits the compiled tier counts one miss and one hit).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::netplan;
+
+    fn layer() -> LayerConfig {
+        LayerConfig::conv("t", 64, 96, 3, 3, 14, 14, 1, 1)
+    }
+
+    #[test]
+    fn cache_hit_equals_fresh_compile_bit_for_bit() {
+        let cache = SimCache::new();
+        let l = layer();
+        let arch = Arch::default();
+        for (engine, precision) in [
+            (Engine::Dimc, Precision::Int4),
+            (Engine::Dimc, Precision::Int2),
+            (Engine::Baseline, Precision::Int4),
+        ] {
+            let miss = cache.price(&l, engine, precision, &arch, Timing::Analytic).unwrap();
+            let hit = cache.price(&l, engine, precision, &arch, Timing::Analytic).unwrap();
+            assert_eq!(miss, hit);
+            let c = compile_for(&l, engine, precision);
+            let stats = timed_stats(&c, engine, precision, arch, Timing::Analytic).unwrap();
+            assert_eq!(miss.cycles, stats.cycles);
+            assert_eq!(miss.instret, stats.instret);
+            assert_eq!(miss.class_counts, stats.class_counts);
+            assert_eq!(miss.mem_bytes, c.plan.mem_bytes());
+        }
+        let s = cache.stats();
+        assert!(s.hits >= 3 && s.misses >= 3, "{s:?}");
+        assert!(s.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn baseline_prices_share_one_entry_across_precisions() {
+        let cache = SimCache::new();
+        let l = layer();
+        let arch = Arch::default();
+        let a = cache.price(&l, Engine::Baseline, Precision::Int4, &arch, Timing::Analytic);
+        let before = cache.stats();
+        let b = cache.price(&l, Engine::Baseline, Precision::Int1, &arch, Timing::Analytic);
+        let after = cache.stats();
+        assert_eq!(a.unwrap(), b.unwrap());
+        assert_eq!(after.misses, before.misses, "int1 baseline should hit the int4 entry");
+    }
+
+    #[test]
+    fn distinct_arch_points_get_distinct_prices() {
+        let cache = SimCache::new();
+        let l = layer();
+        let slow = Arch { mem_bus_bytes: 1, ..Arch::default() };
+        let base =
+            cache.price(&l, Engine::Dimc, Precision::Int4, &Arch::default(), Timing::Analytic);
+        let starved = cache.price(&l, Engine::Dimc, Precision::Int4, &slow, Timing::Analytic);
+        assert!(starved.unwrap().cycles > base.unwrap().cycles);
+    }
+
+    #[test]
+    fn chain_savings_match_netplan_exactly() {
+        let cache = SimCache::new();
+        let layers = [
+            LayerConfig::conv("a", 64, 64, 3, 3, 14, 14, 1, 1),
+            LayerConfig::conv("b", 64, 64, 3, 3, 14, 14, 1, 1),
+            LayerConfig::conv("c", 64, 128, 1, 1, 14, 14, 1, 0),
+        ];
+        let arch = Arch::default();
+        let miss = cache.overlap_savings(&layers, Precision::Int4, &arch);
+        let hit = cache.overlap_savings(&layers, Precision::Int4, &arch);
+        assert_eq!(miss, hit);
+        assert_eq!(miss, netplan::overlap_savings(&layers, Precision::Int4, &arch));
+        assert!(cache.overlap_savings(&layers[..1], Precision::Int4, &arch).is_empty());
+    }
+
+    #[test]
+    fn concurrent_workers_see_identical_prices() {
+        let cache = Arc::new(SimCache::new());
+        let l = layer();
+        let arch = Arch::default();
+        let expect = cache.price(&l, Engine::Dimc, Precision::Int4, &arch, Timing::Analytic);
+        let expect = expect.unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let cache = Arc::clone(&cache);
+                let l = l.clone();
+                s.spawn(move || {
+                    for _ in 0..8 {
+                        let p = cache
+                            .price(&l, Engine::Dimc, Precision::Int4, &arch, Timing::Analytic)
+                            .unwrap();
+                        assert_eq!(p, expect);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -54,11 +54,13 @@
 //! ```
 
 pub mod backend;
+pub mod cache;
 pub mod json;
 pub mod report;
 pub mod session;
 
 pub use backend::{Backend, Cluster, Serving, SingleCore};
+pub use cache::SimCache;
 pub use json::JsonBuilder;
 pub use report::{
     write_load_point, write_scaling_point, LatencyStats, LayerReportRow, RunCheck, RunReport,

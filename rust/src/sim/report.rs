@@ -240,6 +240,10 @@ pub struct RunReport {
     pub gops: f64,
     /// Whole-run baseline/primary speedup, when the comparison ran.
     pub speedup: Option<f64>,
+    /// Whole-run area-normalized speedup
+    /// ([`AreaModel::ans`](crate::metrics::area::AreaModel::ans) of
+    /// `speedup`), when the baseline comparison ran.
+    pub ans: Option<f64>,
     /// Cluster execution mode (`layer-parallel` / `image-parallel`).
     pub mode: Option<&'static str>,
     /// Utilization: busy-core fraction (cluster) or busy-span fraction
@@ -298,6 +302,7 @@ impl RunReport {
         j.field_u64("ops", self.ops);
         j.field_f64("gops", self.gops);
         j.field_opt_f64("speedup", self.speedup);
+        j.field_opt_f64("ans", self.ans);
         j.field_opt_str("mode", self.mode);
         j.field_opt_f64("utilization", self.utilization);
         j.key("layers");

@@ -9,6 +9,7 @@
 //! backend keeps its simulation caches warm across requests.
 
 use super::backend::{Backend, Cluster, Serving, SingleCore};
+use super::cache::SimCache;
 use super::report::{RunCheck, RunReport};
 use super::{Engine, Timing};
 use crate::analysis;
@@ -23,6 +24,7 @@ use crate::obs::TraceLevel;
 use crate::pipeline::core::SimError;
 use crate::serve::{BatchPolicy, LoadPoint, ServePhase, TraceShape, TrafficSpec, Workload};
 use crate::workloads::{decode, zoo};
+use std::sync::Arc;
 
 /// Everything that can go wrong building or driving a [`Session`].
 #[derive(Debug)]
@@ -229,6 +231,11 @@ pub struct SessionConfig {
     /// layer-at-a-time, bit-identical to the pre-pipelining schedules;
     /// see [`crate::compiler::netplan`]).
     pub pipelining: Pipelining,
+    /// Compile/price cache shared with other sessions or sweep workers
+    /// (default `None` — the cluster/serving backends build a private
+    /// one). Sharing never changes results: every cached value is a
+    /// pure function of its key (see [`SimCache`]).
+    pub sim_cache: Option<Arc<SimCache>>,
 }
 
 impl SessionConfig {
@@ -280,6 +287,7 @@ pub struct SessionBuilder {
     max_wait: Option<u64>,
     trace_level: TraceLevel,
     pipelining: Pipelining,
+    sim_cache: Option<Arc<SimCache>>,
 }
 
 impl SessionBuilder {
@@ -301,6 +309,7 @@ impl SessionBuilder {
             max_wait: None,
             trace_level: TraceLevel::Off,
             pipelining: Pipelining::Off,
+            sim_cache: None,
         }
     }
 
@@ -456,6 +465,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Share a compile/price [`SimCache`] with other sessions or sweep
+    /// workers (default: each backend owns a private cache). Results
+    /// are bit-identical either way — every cached value is a pure
+    /// function of its key — so this is purely a cost knob: the DSE
+    /// engine hands every worker the same cache, and a frontier point
+    /// re-run through a fresh `Session` can reuse the sweep's table.
+    pub fn sim_cache(mut self, cache: Arc<SimCache>) -> Self {
+        self.sim_cache = Some(cache);
+        self
+    }
+
     /// Validate the configuration and produce a [`Session`]. Every
     /// invalid combination fails here, not at run time.
     pub fn build(self) -> Result<Session, SessionError> {
@@ -588,6 +608,7 @@ impl SessionBuilder {
                 serve,
                 trace_level: self.trace_level,
                 pipelining: self.pipelining,
+                sim_cache: self.sim_cache,
             },
             single: SingleCore::new(),
             cluster: None,

@@ -1,0 +1,143 @@
+//! Property tests for the design-space exploration engine:
+//!
+//! * the sweep is **bit-deterministic**: points and frontier are
+//!   identical at every thread count;
+//! * [`frontier_indices`] returns exactly the non-dominated subset of
+//!   randomized score sets, and [`dominates`] is a strict partial
+//!   order;
+//! * every frontier point **reproduces through a plain
+//!   [`Session`]** configured with the same knobs — the DSE invents no
+//!   timing of its own;
+//! * a [`SimCache`] shared across sessions changes nothing but the hit
+//!   counters, and `RunReport` now carries the area-normalized speedup.
+//!
+//! Deterministic Lcg-driven generation, same style as `prop_mapper.rs`
+//! (proptest is not vendored in this offline image).
+
+use dimc_rvv::compiler::pack::Lcg;
+use dimc_rvv::dse::{self, dominates, frontier_indices, DseSpace};
+use dimc_rvv::sim::{RunSpec, Session, SimCache, Timing};
+use std::sync::Arc;
+
+fn small_space() -> DseSpace {
+    DseSpace::default_for(vec!["resnet18".to_string()])
+}
+
+#[test]
+fn sweep_is_bit_deterministic_across_thread_counts() {
+    let space = small_space();
+    let reference = dse::sweep(&space, 1).unwrap();
+    assert_eq!(reference.points.len(), space.len());
+    assert!(!reference.frontier.is_empty());
+    for threads in 2..=8 {
+        let run = dse::sweep(&space, threads).unwrap();
+        assert_eq!(reference.points, run.points, "thread count {threads} changed the points");
+        assert_eq!(reference.frontier, run.frontier, "thread count {threads} changed the frontier");
+        assert_eq!(run.threads, threads);
+    }
+}
+
+#[test]
+fn frontier_is_exactly_the_nondominated_subset_of_random_scores() {
+    let mut r = Lcg::new(0xD5E);
+    for _ in 0..200 {
+        let n = 1 + (r.next_u64() % 40) as usize;
+        let scores: Vec<[f64; 3]> = (0..n)
+            .map(|_| {
+                [
+                    (r.next_u64() % 16) as f64,
+                    (r.next_u64() % 16) as f64,
+                    (r.next_u64() % 16) as f64,
+                ]
+            })
+            .collect();
+        let frontier = frontier_indices(&scores);
+        assert!(!frontier.is_empty(), "a non-empty score set has a non-empty frontier");
+        assert!(frontier.windows(2).all(|w| w[0] < w[1]), "frontier must be sorted ascending");
+        for (i, s) in scores.iter().enumerate() {
+            let dominated = scores.iter().any(|o| dominates(o, s));
+            assert_eq!(
+                !dominated,
+                frontier.contains(&i),
+                "point {i} ({s:?}) mis-classified in {scores:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dominates_is_a_strict_partial_order() {
+    let mut r = Lcg::new(0xACE5);
+    let rand_score =
+        |r: &mut Lcg| [(r.next_u64() % 8) as f64, (r.next_u64() % 8) as f64, (r.next_u64() % 8) as f64];
+    for _ in 0..500 {
+        let a = rand_score(&mut r);
+        let b = rand_score(&mut r);
+        let c = rand_score(&mut r);
+        assert!(!dominates(&a, &a), "irreflexive: {a:?}");
+        if dominates(&a, &b) {
+            assert!(!dominates(&b, &a), "asymmetric: {a:?} {b:?}");
+        }
+        if dominates(&a, &b) && dominates(&b, &c) {
+            assert!(dominates(&a, &c), "transitive: {a:?} {b:?} {c:?}");
+        }
+    }
+}
+
+#[test]
+fn frontier_points_reproduce_through_a_plain_session() {
+    let space = small_space();
+    let result = dse::sweep(&space, 2).unwrap();
+    assert!(!result.frontier.is_empty());
+    for p in result.frontier_points() {
+        let mut s = Session::builder()
+            .model(&p.point.model)
+            .arch(p.point.arch())
+            .precision(p.point.precision)
+            .cores(p.point.cores)
+            .pipelining(p.point.pipelining)
+            .timing(Timing::Analytic)
+            .build()
+            .unwrap();
+        let rep = s.run(&RunSpec::Network).unwrap();
+        assert_eq!(
+            rep.cycles, p.cycles,
+            "point {} ({} cores, {:?}) does not reproduce",
+            p.point.index, p.point.cores, p.point.precision
+        );
+        assert_eq!(rep.ops, p.ops, "point {}", p.point.index);
+    }
+}
+
+#[test]
+fn shared_sim_cache_changes_nothing_but_the_hit_counters() {
+    let cache = Arc::new(SimCache::new());
+    let run = |shared: Option<Arc<SimCache>>| {
+        let mut b = Session::builder().model("resnet18").cores(4).timing(Timing::Analytic);
+        if let Some(c) = shared {
+            b = b.sim_cache(c);
+        }
+        let mut s = b.build().unwrap();
+        s.run(&RunSpec::Network).unwrap()
+    };
+    let private = run(None);
+    let first = run(Some(Arc::clone(&cache)));
+    let misses_after_first = cache.stats().misses;
+    let second = run(Some(Arc::clone(&cache)));
+    assert_eq!(private.cycles, first.cycles);
+    assert_eq!(private.cycles, second.cycles);
+    assert_eq!(private.ops, second.ops);
+    let stats = cache.stats();
+    assert!(stats.hits > 0, "second shared session must hit the cache");
+    assert_eq!(stats.misses, misses_after_first, "second session must add no misses");
+}
+
+#[test]
+fn run_report_exposes_area_normalized_speedup() {
+    let mut s = Session::builder().model("resnet18").timing(Timing::Analytic).build().unwrap();
+    let rep = s.run(&RunSpec::Network).unwrap();
+    let speedup = rep.speedup.expect("single-core DIMC network fills the baseline comparison");
+    let ans = rep.ans.expect("ans rides along with speedup");
+    assert!(ans > 0.0 && ans < speedup, "ans {ans} must be area-discounted from {speedup}");
+    assert!(rep.to_json().contains("\"ans\":"), "ans must serialize");
+}
